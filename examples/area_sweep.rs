@@ -1,0 +1,42 @@
+//! Area study: how peripheral sharing trades area against contention, and
+//! how the crossbar-area ratio moves the optimal group size (§IV-B's
+//! generalisation to ISAAC-like peripheral-heavy designs).
+//!
+//! ```bash
+//! cargo run --release --example area_sweep
+//! ```
+
+use moepim::config::{HardwareConfig, MoeModelConfig};
+use moepim::eval::sweep;
+use moepim::hw::AreaModel;
+use moepim::moe::LayerLayout;
+
+fn main() {
+    let model = MoeModelConfig::llama_moe_4_16();
+
+    println!("static area model (1536 crossbars, 2-D layout):");
+    for ratio in [0.40, 0.05] {
+        let mut hw = HardwareConfig::paper();
+        hw.xbar_area_ratio = ratio;
+        let layout = LayerLayout::new(&model, &hw);
+        let area = AreaModel::new(&hw);
+        println!("  crossbar ratio {:.0}%:", ratio * 100.0);
+        for g in [1usize, 2, 4, 8] {
+            println!(
+                "    g={g}: {:>7.1} mm²  ({:.2}x saving)",
+                area.moe_area_mm2(&layout, g),
+                area.saving_vs_baseline(&layout, g)
+            );
+        }
+    }
+
+    println!("\ndynamic sweep (workload-driven GOPS/mm², S-grouping + O):");
+    print!("{}", sweep::render());
+
+    let p = sweep::isaac_point();
+    println!(
+        "\nISAAC-like operating point (ratio 5%, g=4): {:.1} GOPS/mm² \
+         (paper quotes 82.7)",
+        p.gops_per_mm2
+    );
+}

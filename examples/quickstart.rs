@@ -1,0 +1,42 @@
+//! Quickstart: simulate one MoE inference on the paper's hardware and
+//! print the latency/energy/area report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use moepim::config::SimConfig;
+use moepim::sim::Simulator;
+use moepim::util::fmt_thousands;
+
+fn main() {
+    // The paper's best configuration: sorted grouping of 2 experts per
+    // peripheral set, Algorithm-1 reschedule, KV + GO caches.
+    let cfg = SimConfig::s2o_kvgo();
+    println!("simulating Llama-MoE-4/16 on HERMES cores: {}", cfg.label());
+
+    let report = Simulator::paper(cfg).run();
+    let total = report.total();
+
+    println!("\n  prefill : {:>12} ns",
+             fmt_thousands(report.prefill.latency_ns.round() as u64));
+    println!("  decode  : {:>12} ns ({} tokens)",
+             fmt_thousands(report.decode_total().latency_ns.round() as u64),
+             report.decode_steps.len());
+    println!("  total   : {:>12} ns / {} nJ",
+             fmt_thousands(total.latency_ns.round() as u64),
+             fmt_thousands(total.energy_nj.round() as u64));
+    println!("  MoE area: {:.1} mm² (2-D layout, linear cores only)",
+             report.moe_area_mm2);
+    println!("  density : {:.1} GOPS/W/mm²", report.density());
+
+    // Compare against the 3DCIM-style baseline (no sharing, no schedule,
+    // no caches).
+    let base = Simulator::paper(SimConfig::baseline()).run();
+    let bt = base.total();
+    println!("\nvs baseline (no cache, no schedule):");
+    println!("  latency {:.2}x, energy {:.2}x, area {:.2}x",
+             bt.latency_ns / total.latency_ns,
+             bt.energy_nj / total.energy_nj,
+             base.moe_area_mm2 / report.moe_area_mm2);
+}

@@ -1,0 +1,155 @@
+"""AOT compile path: lower every exported L2 computation to HLO *text*.
+
+Interchange format is HLO text, NOT `lowered.compiler_ir("hlo").serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the rust
+side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py and
+aot_recipe.md).
+
+Outputs (per ModelConfig, all weights baked in as constants):
+
+  artifacts/
+    manifest.json           dims + artifact table (read by rust config)
+    embed_prefill.hlo.txt   ids[S]i32                  -> x[S,D]
+    embed_one.hlo.txt       ids[1]i32                  -> x[1,D]
+    attn_prefill.hlo.txt    x[S,D], len[1]i32          -> h[S,D], k[S,H,Dh], v[S,H,Dh]
+    attn_decode.hlo.txt     x[1,D], k[S,H,Dh], v[S,H,Dh], pos[1]i32
+                                                       -> h[1,D], k1[1,H,Dh], v1[1,H,Dh]
+    gate_full.hlo.txt       h[S,D]                     -> scores[S,E]
+    gate_one.hlo.txt        h[1,D]                     -> scores[1,E]
+    moe_full.hlo.txt        h[S,D], gates[S,E]         -> y[S,D]
+    moe_one.hlo.txt         h[1,D], gates[1,E]         -> y[1,D]
+    moe_one_sparse.hlo.txt  h[1,D], idx[K]i32, gate[K]  -> y[1,D]  (K=capacity)
+    logits_one.hlo.txt      h[1,D]                     -> logits[1,V]
+
+`make artifacts` is a no-op when inputs are unchanged (manifest.json is the
+stamp).  Python never runs on the request path after this.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import DEFAULT, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the rust
+    side unwraps with to_tuple{1,3}())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weights must survive the text
+    # round-trip (the default printer elides them as '{...}', which parses
+    # back as garbage).  f32 prints at 9 significant digits == exact.
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries(cfg: ModelConfig):
+    """(name, fn, example_args) for every exported executable."""
+    params = model.init_params(cfg)
+    s, d, e, v = cfg.max_seq, cfg.d_model, cfg.n_experts, cfg.vocab
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def take1(fn):
+        """Adapt a scalar-index arg to a [1]-i32 tensor (the rust Literal
+        API is simplest with rank-1 inputs)."""
+        return fn
+
+    def embed(ids):
+        return model.embed_tokens(params, cfg, ids)
+
+    def attn_prefill(x, valid_len):
+        return model.attn_prefill(params, cfg, x, valid_len[0])
+
+    def attn_decode(x1, kc, vc, pos):
+        return model.attn_decode(params, cfg, x1, kc, vc, pos[0])
+
+    def gate(hh):
+        return model.gate_scores(params, cfg, hh)
+
+    def moe(hh, gates):
+        return model.moe_apply(params, cfg, hh, gates)
+
+    def moe_sparse(hh, idx, gates):
+        return model.moe_apply_sparse(params, cfg, hh, idx, gates)
+
+    def logits(hh):
+        return model.logits(params, cfg, hh)
+
+    i32 = jnp.int32
+    return [
+        ("embed_prefill", embed, (_spec((s,), i32),)),
+        ("embed_one", embed, (_spec((1,), i32),)),
+        ("attn_prefill", attn_prefill, (_spec((s, d)), _spec((1,), i32))),
+        ("attn_decode", attn_decode,
+         (_spec((1, d)), _spec((s, h, dh)), _spec((s, h, dh)),
+          _spec((1,), i32))),
+        ("gate_full", gate, (_spec((s, d)),)),
+        ("gate_one", gate, (_spec((1, d)),)),
+        ("moe_full", moe, (_spec((s, d)), _spec((s, e)))),
+        ("moe_one", moe, (_spec((1, d)), _spec((1, e)))),
+        ("moe_one_sparse", moe_sparse,
+         (_spec((1, d)), _spec((cfg.expert_capacity,), i32),
+          _spec((cfg.expert_capacity,)))),
+        ("logits_one", logits, (_spec((1, d)),)),
+    ]
+
+
+def lower_all(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+    for name, fn, specs in build_entries(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(sp.shape), "dtype": str(sp.dtype)}
+                for sp in specs
+            ],
+            "hlo_chars": len(text),
+        }
+        print(f"  lowered {name}: {len(text)} chars")
+    return artifacts
+
+
+def write_manifest(cfg: ModelConfig, artifacts: dict, out_dir: str) -> None:
+    manifest = {
+        "model": cfg.manifest_dict(),
+        "artifacts": artifacts,
+        "format": "hlo-text/return-tuple",
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for .hlo.txt + manifest.json")
+    args = ap.parse_args()
+    cfg = DEFAULT
+    print(f"AOT-lowering functional model {cfg}")
+    artifacts = lower_all(cfg, args.out)
+    write_manifest(cfg, artifacts, args.out)
+
+
+if __name__ == "__main__":
+    main()

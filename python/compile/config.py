@@ -1,0 +1,61 @@
+"""Model configuration for the functional (small-dims) MoE transformer block.
+
+The paper's target model is Llama-MoE-4/16 (d_model=4096, 16 experts of
+d_ff=688 each, top-4 expert-choice routing).  The operator-level simulator in
+rust works analytically at those full dims; the *functional* path — the model
+that is AOT-lowered to HLO and actually executed by the rust runtime — uses
+the scaled-down dims below so that CPU-PJRT execution stays fast while the
+dataflow (gate -> expert-choice -> grouping -> KV/GO caches) is exercised
+end-to-end with real numerics.
+
+Everything here is baked into the artifacts at `make artifacts` time and
+recorded in artifacts/manifest.json, which the rust side reads.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dims of the functional MoE transformer block."""
+
+    d_model: int = 256        # hidden size (paper: 4096)
+    n_experts: int = 16       # number of experts (paper: 16)
+    top_k: int = 4            # experts activated per token (paper: 4)
+    d_ff: int = 128           # per-expert FFN width (paper: 688 = 11008/16)
+    n_heads: int = 4          # attention heads (paper: 32)
+    d_head: int = 64          # head dim (paper: 128)
+    vocab: int = 512          # toy vocabulary
+    prompt_len: int = 32      # paper's prompt length
+    max_seq: int = 96         # prompt + longest generation (paper: 32+64)
+    seed: int = 20260710      # weight RNG seed
+
+    # Crossbar-tiling parameters for the Pallas kernels.  The paper's chip is
+    # a 256x256 HERMES crossbar with 8-bit I/O; at d_model=256 we tile with
+    # 128x128 blocks (two row-tiles per matrix) so the kernel exercises the
+    # same multi-tile accumulate + per-slice ADC path that full dims would.
+    xbar_rows: int = 128
+    xbar_cols: int = 128
+    adc_bits: int = 8         # ADC resolution (per-slice partial-sum readout)
+    dac_bits: int = 8         # DAC input resolution
+    # Per-column ADC ranging factor (HERMES calibrates its CCO ADCs to the
+    # observed signal distribution; see kernels.ref.adc_step).
+    adc_range_factor: float = 16.0
+
+    @property
+    def expert_capacity(self) -> int:
+        """Tokens each expert selects during prefill (expert-choice routing).
+
+        capacity = prompt_len * top_k / n_experts, the load-balanced value
+        from Zhou et al. [12]; the paper keeps it fixed during generation so
+        the GO output cache stays at a static k x E x d size.
+        """
+        return self.prompt_len * self.top_k // self.n_experts
+
+    def manifest_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["expert_capacity"] = self.expert_capacity
+        return d
+
+
+DEFAULT = ModelConfig()

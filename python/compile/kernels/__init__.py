@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot-spot.
+
+- crossbar: emulated analog crossbar MVM (DAC -> slice MVM -> ADC), tiled
+  weight-stationary in VMEM; the PIM hot path.
+- ffn: per-expert up/SiLU/down pipeline built from crossbar MVMs.
+- gate: full-precision digital matmul (gate network and other digital ops).
+- ref: pure-jnp oracles; pytest asserts kernel == oracle bit-exactly.
+"""
+
+from . import crossbar, ffn, gate, ref  # noqa: F401

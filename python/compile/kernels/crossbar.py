@@ -1,0 +1,104 @@
+"""Pallas crossbar-MVM kernel — the PIM compute hot-spot (L1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+substrate is a 256x256 analog crossbar with weight-stationary cells, 8-bit
+DAC inputs and 8-bit ADC readout.  On a TPU-shaped machine the same insight
+maps to a BlockSpec-tiled matmul:
+
+  * the weight block for one (k-slice, n-tile) is pinned in VMEM across the
+    grid's M dimension — the VMEM-resident block *is* the programmed
+    crossbar;
+  * activations stream HBM->VMEM one M-tile at a time, like DAC streaming;
+  * each K-slice's partial sum is snapped to the ADC grid before the digital
+    f32 accumulation, mirroring per-bit-line readout resolution.
+
+The kernel runs under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); tiling is still chosen MXU-shaped (multiples of 128) so the
+same code lowers sensibly on real hardware.  Correctness oracle:
+ref.crossbar_matmul_ref (bit-exact, see ref.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest tile <= pref that divides dim (dims here are powers of two)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _xbar_kernel(qx_ref, qw_ref, o_ref, *, step: float, levels: float):
+    """One (m-tile, n-tile, k-slice) grid cell.
+
+    Grid order is (m, n, k) with k innermost; o_ref accumulates across the
+    k dimension.  qx/qw hold integer-valued f32 (already DAC/cell quantised);
+    the matmul partial sum is exact in f32, then snapped to the ranged-ADC
+    grid and clipped at the resolved range (ref.adc_readout).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(qx_ref[...], qw_ref[...],
+                   preferred_element_type=jnp.float32)
+    # ADC readout: snap the slice's analog partial sum to the ADC grid.
+    o_ref[...] += jnp.clip(jnp.round(part / step), -levels, levels) * step
+
+
+@functools.partial(jax.jit, static_argnames=("xbar_rows", "dac_bits",
+                                             "adc_bits", "range_factor",
+                                             "tile_m", "tile_n", "interpret"))
+def crossbar_matmul(x: jnp.ndarray, w: jnp.ndarray, *, xbar_rows: int,
+                    dac_bits: int = 8, adc_bits: int = 8,
+                    range_factor: float = 16.0, tile_m: int = 32,
+                    tile_n: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Emulated analog MVM: y ~= x @ w through the DAC/crossbar/ADC path.
+
+    x: [M, K] f32, w: [K, N] f32; K % xbar_rows == 0.  Quantisation happens
+    outside the kernel: weights per-tensor (cell conductances programmed at
+    deploy), activations per-row (each token sets its own DAC range, which
+    keeps the pipeline row-local — see ref.sym_quant).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and k % xbar_rows == 0, (x.shape, w.shape, xbar_rows)
+
+    qx, sx = ref.sym_quant(x, dac_bits, axis=-1)  # per-row DAC ranging
+    qw, sw = ref.sym_quant(w, dac_bits)           # per-tensor programming
+
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    n_slices = k // xbar_rows
+
+    levels = float(2 ** (adc_bits - 1) - 1)
+    step = ref.adc_step(xbar_rows, dac_bits, adc_bits, range_factor)
+
+    grid = (m // tm, n // tn, n_slices)
+    out = pl.pallas_call(
+        functools.partial(_xbar_kernel, step=step, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, xbar_rows), lambda i, j, s: (i, s)),
+            pl.BlockSpec((xbar_rows, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(qx, qw)
+    return out * (sx * sw)
+
+
+def vmem_bytes(tile_m: int, tile_n: int, xbar_rows: int) -> int:
+    """Static VMEM footprint of one grid cell (f32), for the §Perf estimate:
+    activation block + weight block + output accumulator block."""
+    return 4 * (tile_m * xbar_rows + xbar_rows * tile_n + tile_m * tile_n)

@@ -1,0 +1,52 @@
+"""Pallas expert-FFN: the per-expert PIM pipeline up-MVM -> SiLU -> down-MVM.
+
+Two crossbar_matmul calls with the digital SiLU between readouts — exactly
+the per-expert structure the paper maps to 96 crossbars (48 up-tiles +
+48 down-tiles at full dims, DESIGN.md §7).  Oracle: ref.expert_ffn_ref.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar import crossbar_matmul
+
+
+def expert_ffn(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray, *,
+               xbar_rows: int, dac_bits: int = 8, adc_bits: int = 8,
+               range_factor: float = 16.0,
+               interpret: bool = True) -> jnp.ndarray:
+    """silu(x @ Wup) @ Wdown through the emulated analog pipeline.
+
+    x: [M, D]; w_up: [D, F]; w_down: [F, D]; D and F multiples of xbar_rows.
+    """
+    h = crossbar_matmul(x, w_up, xbar_rows=xbar_rows, dac_bits=dac_bits,
+                        adc_bits=adc_bits, range_factor=range_factor,
+                        interpret=interpret)
+    h = h * jax.nn.sigmoid(h)  # SiLU on the digital units after ADC readout
+    return crossbar_matmul(h, w_down, xbar_rows=xbar_rows, dac_bits=dac_bits,
+                           adc_bits=adc_bits, range_factor=range_factor,
+                           interpret=interpret)
+
+
+def moe_apply(x: jnp.ndarray, gates: jnp.ndarray, w_up: jnp.ndarray,
+              w_down: jnp.ndarray, *, xbar_rows: int, dac_bits: int = 8,
+              adc_bits: int = 8, range_factor: float = 16.0,
+              interpret: bool = True) -> jnp.ndarray:
+    """Dense-masked MoE over all experts: y = sum_e gates[:, e] * FFN_e(x).
+
+    w_up: [E, D, F]; w_down: [E, F, D]; gates: [T, E] (zero where the expert
+    did not select the token).  The loop unrolls at trace time into E
+    independent pipelines in one HLO module — the chip analogy is all expert
+    crossbars physically present, with the gate mask standing in for "not
+    activated" (the energy/latency consequence of which is the L3
+    simulator's job).
+    """
+    t, d = x.shape
+    e = gates.shape[1]
+    y = jnp.zeros((t, d), dtype=jnp.float32)
+    for i in range(e):
+        yi = expert_ffn(x, w_up[i], w_down[i], xbar_rows=xbar_rows,
+                        dac_bits=dac_bits, adc_bits=adc_bits,
+                        range_factor=range_factor, interpret=interpret)
+        y = y + gates[:, i:i + 1] * yi
+    return y

@@ -1,0 +1,58 @@
+"""Pallas digital matmul kernel — gate network and other full-precision ops.
+
+The paper computes the gate on the digital units (it is tiny: one D x E MVM
+per token), so unlike kernels.crossbar there is no DAC/ADC quantisation:
+plain f32 tiled matmul with MXU-shaped blocks.  Oracle: ref.matmul_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .crossbar import _pick_tile
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k",
+                                             "interpret"))
+def digital_matmul(x: jnp.ndarray, w: jnp.ndarray, *, tile_m: int = 32,
+                   tile_n: int = 128, tile_k: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """f32 tiled matmul: x [M, K] @ w [K, N] -> [M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    tk = _pick_tile(k, tile_k)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def gate_scores(x: jnp.ndarray, w_g: jnp.ndarray, *,
+                interpret: bool = True) -> jnp.ndarray:
+    """Gate scores [T, E] = x @ Wg on the digital path."""
+    return digital_matmul(x, w_g, tile_n=min(128, w_g.shape[1]),
+                          interpret=interpret)

@@ -1,0 +1,240 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here using the
+*same arithmetic* (quantise -> per-crossbar-slice integer MVM -> ADC readout
+quantisation -> dequantise) expressed as plain jnp ops.  The pytest suite
+asserts allclose between kernel and oracle across shape/seed sweeps
+(hypothesis-driven); because every intermediate is an exactly-representable
+integer in f32 (|partial| <= 128*127*127 < 2^24) the match is bit-exact.
+
+The quantisation chain models the analog signal path of a HERMES-style PIM
+core (DESIGN.md §Hardware-Adaptation):
+
+  DAC (8-bit input)      -> symmetric int8 quantisation of activations
+  crossbar (weights)     -> symmetric int8 quantisation of weights,
+                            K split into xbar_rows-row slices (one slice ==
+                            one physical crossbar's worth of bit-lines)
+  ADC (8-bit readout)    -> each slice's partial sum snapped to a uniform
+                            grid with 2^(adc_bits-1)-1 positive levels over
+                            the slice's analog full-scale range
+  digital accumulation   -> dequantised slice results summed in f32
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Quantisation primitives
+# ---------------------------------------------------------------------------
+
+def sym_quant(x: jnp.ndarray, bits: int, axis=None):
+    """Symmetric quantisation; per-tensor (axis=None) or per-row (axis=-1).
+
+    Returns (q, scale) with q an integer-valued f32 tensor in
+    [-(2^(bits-1)-1), 2^(bits-1)-1] and x ~= q * scale.
+
+    Weights are quantised per-tensor (cell conductances programmed once at
+    deploy).  Activations are quantised per-row: each token's vector drives
+    the DACs with its own range register, which also keeps the pipeline
+    row-local — a single-token call produces bit-identical results to the
+    same row inside a batch (the property the GO-cache decode path relies
+    on; see test_model.test_moe_apply_row_local).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x)) if axis is None else         jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    # Avoid a zero scale for all-zero tensors; the quantised tensor is then
+    # all zeros regardless of scale.
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q, scale
+
+
+def adc_step(slice_rows: int, in_bits: int, adc_bits: int,
+             range_factor: float) -> float:
+    """ADC grid step for one crossbar slice.
+
+    The theoretical analog full-scale of a slice is slice_rows * qmax_in *
+    qmax_w (every cell at max conductance, every input at max voltage), but
+    real HERMES silicon ranges its linearized CCO ADCs per column to the
+    *observed* signal distribution [17-19]; `range_factor` models that
+    calibration (the resolved range is full_scale / range_factor, clipped
+    beyond).  The step is exact-integer f32 arithmetic so kernel and oracle
+    agree bit-for-bit.
+    """
+    qmax_in = float(2 ** (in_bits - 1) - 1)
+    levels = float(2 ** (adc_bits - 1) - 1)
+    full_scale = slice_rows * qmax_in * qmax_in
+    return max(full_scale / range_factor / levels, 1.0)
+
+
+def adc_readout(partial: jnp.ndarray, slice_rows: int, in_bits: int,
+                adc_bits: int, range_factor: float = 16.0,
+                noise_std: float = 0.0, noise_key=None) -> jnp.ndarray:
+    """Emulate the ranged-ADC quantisation of one slice's partial sums:
+    snap to the calibrated grid and clip at the resolved range.
+
+    `noise_std` (in ADC steps) adds Gaussian analog read noise *before*
+    quantisation — the PCM read-noise model mirrored by the rust
+    `hw::noise` module (paper future work).  Requires a `noise_key`.
+    """
+    levels = float(2 ** (adc_bits - 1) - 1)
+    step = adc_step(slice_rows, in_bits, adc_bits, range_factor)
+    if noise_std > 0.0:
+        assert noise_key is not None, "noisy readout needs a PRNG key"
+        partial = partial + jax.random.normal(
+            noise_key, partial.shape) * (noise_std * step)
+    return jnp.clip(jnp.round(partial / step), -levels, levels) * step
+
+
+# ---------------------------------------------------------------------------
+# Reference kernels
+# ---------------------------------------------------------------------------
+
+def crossbar_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *, xbar_rows: int,
+                        dac_bits: int = 8, adc_bits: int = 8,
+                        range_factor: float = 16.0) -> jnp.ndarray:
+    """Reference for kernels.crossbar.crossbar_matmul.
+
+    x: [M, K] activations, w: [K, N] weights; K must be a multiple of
+    xbar_rows.  Returns the dequantised [M, N] product of the emulated
+    analog pipeline.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert k % xbar_rows == 0, f"K={k} not a multiple of xbar_rows={xbar_rows}"
+    qx, sx = sym_quant(x, dac_bits, axis=-1)   # per-row DAC ranging
+    qw, sw = sym_quant(w, dac_bits)            # per-tensor cell programming
+    n_slices = k // xbar_rows
+    acc = jnp.zeros((m, n), dtype=jnp.float32)
+    for s in range(n_slices):
+        lo = s * xbar_rows
+        part = qx[:, lo:lo + xbar_rows] @ qw[lo:lo + xbar_rows, :]
+        acc = acc + adc_readout(part, xbar_rows, dac_bits, adc_bits,
+                                 range_factor)
+    return acc * (sx * sw)
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.gate.digital_matmul (full-precision, digital)."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def expert_ffn_ref(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray, *,
+                   xbar_rows: int, dac_bits: int = 8, adc_bits: int = 8,
+                   range_factor: float = 16.0) -> jnp.ndarray:
+    """Reference for the 2-matrix PIM expert FFN: silu(x@Wup) @ Wdown.
+
+    Matches the paper's 96-crossbars-per-expert accounting (48 up + 48 down
+    tiles at full dims, DESIGN.md §7).  SiLU runs digitally after readout.
+    """
+    h = crossbar_matmul_ref(x, w_up, xbar_rows=xbar_rows, dac_bits=dac_bits,
+                            adc_bits=adc_bits, range_factor=range_factor)
+    h = h * jax.nn.sigmoid(h)
+    return crossbar_matmul_ref(h, w_down, xbar_rows=xbar_rows,
+                               dac_bits=dac_bits, adc_bits=adc_bits,
+                               range_factor=range_factor)
+
+
+def gate_scores_ref(x: jnp.ndarray, w_g: jnp.ndarray) -> jnp.ndarray:
+    """Gate scores [T, E]; the gate runs on the digital units (full f32)."""
+    return matmul_ref(x, w_g)
+
+
+def expert_choice_gates_ref(scores: jnp.ndarray, capacity: int,
+                            valid_len=None) -> jnp.ndarray:
+    """Expert-choice routing (Zhou et al. [12]) as dense gate weights.
+
+    probs = softmax over experts per token; each expert selects its top
+    `capacity` tokens by prob; gates[t, e] = probs[t, e] if selected else 0.
+    `valid_len` masks padded tokens (they are never selected and receive no
+    experts).  Deterministic tie-break: earlier token wins, matching the
+    rust GoCache implementation (cache::go).
+    """
+    t, e = scores.shape
+    probs = jax.nn.softmax(scores, axis=-1)
+    if valid_len is not None:
+        tok = jnp.arange(t)[:, None]
+        probs = jnp.where(tok < valid_len, probs, -1.0)
+    # top-`capacity` per expert column; stable argsort of the negated probs
+    # implements the earlier-token-wins tie-break.
+    order = jnp.argsort(-probs, axis=0, stable=True)  # [T, E]
+    rank = jnp.argsort(order, axis=0, stable=True)    # rank of each token
+    sel = rank < capacity
+    if valid_len is not None:
+        sel = sel & (jnp.arange(t)[:, None] < valid_len)
+    return jnp.where(sel, jnp.maximum(probs, 0.0), 0.0)
+
+
+def moe_apply_ref(x: jnp.ndarray, gates: jnp.ndarray, w_up: jnp.ndarray,
+                  w_down: jnp.ndarray, *, xbar_rows: int, dac_bits: int = 8,
+                  adc_bits: int = 8,
+                  range_factor: float = 16.0) -> jnp.ndarray:
+    """Dense-masked MoE: y = sum_e gates[:, e] * FFN_e(x).
+
+    w_up: [E, D, F], w_down: [E, F, D].  The functional path computes every
+    expert and masks; the sparsity savings are what the L3 *simulator*
+    models (the real chip simply never activates unselected crossbars).
+    """
+    t, d = x.shape
+    e = gates.shape[1]
+    y = jnp.zeros((t, d), dtype=jnp.float32)
+    for i in range(e):
+        yi = expert_ffn_ref(x, w_up[i], w_down[i], xbar_rows=xbar_rows,
+                            dac_bits=dac_bits, adc_bits=adc_bits,
+                            range_factor=range_factor)
+        y = y + gates[:, i:i + 1] * yi
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Attention / norm oracles (digital units in the paper's chip)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def attention_prefill_ref(x, wq, wk, wv, wo, n_heads, d_head,
+                          valid_len=None):
+    """Causal MHA over a (possibly padded) [T, D] sequence, f32 digital.
+
+    Returns (out [T, D], k [T, H, Dh], v [T, H, Dh]) so the caller can seed
+    the KV cache.
+    """
+    t, d = x.shape
+    q = (x @ wq).reshape(t, n_heads, d_head)
+    k = (x @ wk).reshape(t, n_heads, d_head)
+    v = (x @ wv).reshape(t, n_heads, d_head)
+    logits = jnp.einsum("thd,shd->hts", q, k) / jnp.sqrt(float(d_head))
+    pos = jnp.arange(t)
+    mask = pos[None, :] <= pos[:, None]  # causal [t, s]
+    if valid_len is not None:
+        mask = mask & (pos[None, :] < valid_len)
+    logits = jnp.where(mask[None, :, :], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hts,shd->thd", attn, v).reshape(t, d)
+    return out @ wo, k, v
+
+
+def attention_decode_ref(x1, k_cache, v_cache, pos, wq, wk, wv, wo,
+                         n_heads, d_head):
+    """One cached decode step: x1 [1, D], caches [S, H, Dh], pos scalar.
+
+    Attends over cache rows [0, pos] after writing the new K/V at `pos`.
+    Returns (out [1, D], k_new [1, H, Dh], v_new [1, H, Dh]).
+    """
+    s = k_cache.shape[0]
+    q = (x1 @ wq).reshape(n_heads, d_head)
+    k_new = (x1 @ wk).reshape(1, n_heads, d_head)
+    v_new = (x1 @ wv).reshape(1, n_heads, d_head)
+    k_all = jax.lax.dynamic_update_slice(k_cache, k_new, (pos, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(v_cache, v_new, (pos, 0, 0))
+    logits = jnp.einsum("hd,shd->hs", q, k_all) / jnp.sqrt(float(d_head))
+    mask = jnp.arange(s) <= pos
+    logits = jnp.where(mask[None, :], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hs,shd->hd", attn, v_all).reshape(1, n_heads * d_head)
+    return out @ wo, k_new, v_new

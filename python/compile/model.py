@@ -1,0 +1,170 @@
+"""L2: the functional MoE transformer block (JAX, build-time only).
+
+One Llama-style block — RMSNorm -> MHA (+residual) -> RMSNorm -> MoE
+(+residual) — plus a toy embedding and an untied logits head, at the scaled-down
+dims of config.ModelConfig.  The MoE expert FFNs and the gate MVM run through
+the L1 Pallas kernels; attention/norms are plain jnp (digital units on the
+paper's chip).
+
+The block is exported as several *separately lowered* HLO executables
+(aot.py) rather than one monolith, because the rust coordinator needs to
+interleave its own logic between them: expert-choice routing, the GO cache's
+TopKUpdate, KV-cache management and the PIM-simulator bookkeeping all live in
+rust between `gate_*` and `moe_*` calls.
+
+All weights are baked into the HLO as constants (seeded, reproducible); the
+rust side passes activations only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ffn as kffn
+from .kernels import gate as kgate
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig) -> dict:
+    """Seeded model weights.  Scales follow 1/sqrt(fan_in) so activations
+    stay O(1) through the quantised pipeline."""
+    ks = jax.random.split(jax.random.PRNGKey(cfg.seed), 10)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def init(key, shape, fan_in):
+        return (jax.random.normal(key, shape, dtype=jnp.float32)
+                / jnp.sqrt(float(fan_in)))
+
+    return {
+        "embed": init(ks[0], (cfg.vocab, d), 1.0) * 0.5,
+        "wq": init(ks[1], (d, d), d),
+        "wk": init(ks[2], (d, d), d),
+        "wv": init(ks[3], (d, d), d),
+        "wo": init(ks[4], (d, d), d),
+        "w_gate": init(ks[5], (d, e), d),
+        "w_up": init(ks[6], (e, d, f), d),
+        "w_down": init(ks[7], (e, f, d), f),
+        "w_out": init(ks[8], (d, cfg.vocab), d),
+        "norm_attn": jnp.ones((d,), dtype=jnp.float32),
+        "norm_moe": jnp.ones((d,), dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Exported computations (each becomes one artifacts/<name>.hlo.txt)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, ids: jnp.ndarray):
+    """ids [T] i32 -> x [T, D]."""
+    return (jnp.take(params["embed"], ids, axis=0),)
+
+
+def attn_prefill(params, cfg: ModelConfig, x: jnp.ndarray,
+                 valid_len: jnp.ndarray):
+    """Padded prefill attention.
+
+    x [S, D], valid_len scalar i32 -> (h [S, D], k [S, H, Dh], v [S, H, Dh]).
+    h includes the residual; rows >= valid_len are meaningless padding.
+    """
+    xn = kref.rmsnorm_ref(x, params["norm_attn"])
+    out, k, v = kref.attention_prefill_ref(
+        xn, params["wq"], params["wk"], params["wv"], params["wo"],
+        cfg.n_heads, cfg.d_head, valid_len=valid_len)
+    return x + out, k, v
+
+
+def attn_decode(params, cfg: ModelConfig, x1: jnp.ndarray,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One KV-cached decode step.
+
+    x1 [1, D]; caches [S, H, Dh]; pos scalar i32 (index of the new token).
+    Returns (h [1, D] with residual, k_new [1, H, Dh], v_new [1, H, Dh]).
+    The rust coordinator owns the cache buffers and writes k_new/v_new back
+    at `pos` (mirroring the DRAM-resident KV cache of the paper).
+    """
+    xn = kref.rmsnorm_ref(x1, params["norm_attn"])
+    out, k_new, v_new = kref.attention_decode_ref(
+        xn, k_cache, v_cache, pos, params["wq"], params["wk"], params["wv"],
+        params["wo"], cfg.n_heads, cfg.d_head)
+    return x1 + out, k_new, v_new
+
+
+def gate_scores(params, cfg: ModelConfig, h: jnp.ndarray):
+    """h [T, D] (post-attention hidden) -> raw gate scores [T, E].
+
+    Runs the L1 digital-matmul Pallas kernel on the *normed* hidden state;
+    routing (softmax + expert-choice top-k / TopKUpdate) happens in rust.
+    """
+    hn = kref.rmsnorm_ref(h, params["norm_moe"])
+    return (kgate.gate_scores(hn, params["w_gate"]),)
+
+
+def moe_apply(params, cfg: ModelConfig, h: jnp.ndarray, gates: jnp.ndarray):
+    """h [T, D], gates [T, E] (dense mask from rust routing) -> y [T, D].
+
+    y includes the residual: y = h + sum_e gates[:,e] * FFN_e(norm(h)).
+    Every expert runs through the L1 crossbar kernels (dense-masked; the
+    sparsity win is modelled by the L3 simulator).
+    """
+    hn = kref.rmsnorm_ref(h, params["norm_moe"])
+    y = kffn.moe_apply(hn, gates, params["w_up"], params["w_down"],
+                       xbar_rows=cfg.xbar_rows, dac_bits=cfg.dac_bits,
+                       adc_bits=cfg.adc_bits,
+                       range_factor=cfg.adc_range_factor)
+    return (h + y,)
+
+
+def moe_apply_sparse(params, cfg: ModelConfig, h: jnp.ndarray,
+                     expert_idx: jnp.ndarray, gates: jnp.ndarray):
+    """Sparse decode-path MoE (§Perf L2-1): h [1, D], expert_idx [K] i32,
+    gates [K] f32 -> y [1, D] with y = h + sum_i gates[i] * FFN_{idx[i]}(h).
+
+    The dense `moe_apply` computes *all* E experts and masks — fine for
+    prefill batches, wasteful for one token that at most K experts
+    selected.  This variant gathers the K selected experts' weights
+    (jnp.take on the stacked tensors, the HLO analogue of addressing only
+    the activated crossbars) and runs K pipelines instead of E.  Padding
+    convention: unused slots carry gate 0.0 (their FFN output is computed
+    but contributes exactly +0.0, keeping summation bit-compatible with
+    the dense path's zero-gate terms).
+    """
+    hn = kref.rmsnorm_ref(h, params["norm_moe"])
+    w_up = jnp.take(params["w_up"], expert_idx, axis=0)      # [K, D, F]
+    w_down = jnp.take(params["w_down"], expert_idx, axis=0)  # [K, F, D]
+    y = jnp.zeros_like(h)
+    k = expert_idx.shape[0]
+    for i in range(k):
+        yi = kffn.expert_ffn(hn, w_up[i], w_down[i],
+                             xbar_rows=cfg.xbar_rows, dac_bits=cfg.dac_bits,
+                             adc_bits=cfg.adc_bits,
+                             range_factor=cfg.adc_range_factor)
+        y = y + gates[i] * yi
+    return (h + y,)
+
+
+def logits(params, cfg: ModelConfig, h: jnp.ndarray):
+    """h [1, D] -> logits [1, V] (untied head — a tied head makes the toy
+    block parrot its input token, since the residual stream keeps the
+    embedding; digital matmul)."""
+    return (kgate.digital_matmul(h, params["w_out"]),)
+
+
+# ---------------------------------------------------------------------------
+# Whole-block reference (used by pytest, not exported)
+# ---------------------------------------------------------------------------
+
+def block_prefill_ref(params, cfg: ModelConfig, ids):
+    """Full prefill at true length (no padding) for equivalence tests."""
+    x = jnp.take(params["embed"], ids, axis=0)
+    t = x.shape[0]
+    h, k, v = attn_prefill(params, cfg, x, jnp.int32(t))
+    scores = gate_scores(params, cfg, h)[0]
+    gates = kref.expert_choice_gates_ref(scores, cfg.expert_capacity,
+                                         valid_len=t)
+    y = moe_apply(params, cfg, h, gates)[0]
+    return y, scores, k, v

@@ -1,0 +1,29 @@
+"""Shared pytest fixtures for the kernel/model suites."""
+
+import pytest
+
+from compile.config import ModelConfig
+from compile import model
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    return ModelConfig()
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """A smaller block for the expensive whole-model equivalence tests."""
+    return ModelConfig(d_model=128, n_experts=8, top_k=2, d_ff=128,
+                       n_heads=2, d_head=64, vocab=64, prompt_len=8,
+                       max_seq=16)
+
+
+@pytest.fixture(scope="session")
+def params(cfg):
+    return model.init_params(cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return model.init_params(tiny_cfg)

@@ -1,0 +1,32 @@
+"""Tolerance helper for kernel-vs-oracle comparisons.
+
+The kernel and oracle perform identical arithmetic, but they live in
+*separately jitted* XLA modules: scalar constants (quant scales, their
+products) may be fused/reassociated differently, giving 1-ulp input
+differences.  Near a .5 boundary a 1-ulp difference flips a round(), which
+moves the result by exactly one quantisation step.  The honest contract is
+therefore "equal within one LSB of each quantisation stage", computed here
+in output units.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def crossbar_lsb(x, w, *, xbar_rows, dac_bits=8, adc_bits=8,
+                 range_factor=16.0) -> float:
+    """One worst-case LSB of crossbar_matmul's output units: a flipped DAC
+    round (±1 input level -> ±qmax_w per slice partial, then possibly one
+    ADC step per slice) or a flipped ADC round (one step)."""
+    step = ref.adc_step(xbar_rows, dac_bits, adc_bits, range_factor)
+    _, sx = ref.sym_quant(x, dac_bits, axis=-1)
+    _, sw = ref.sym_quant(w, dac_bits)
+    n_slices = x.shape[-1] // xbar_rows
+    return float(step * jnp.max(sx) * sw) * n_slices
+
+
+def assert_close_quant(got, want, lsb: float, rtol: float = 1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=1.01 * lsb)

@@ -1,0 +1,81 @@
+"""AOT path tests: lowering produces parseable, constant-complete HLO text
+and a manifest the rust config layer can consume."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile.config import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def lowered_dir():
+    """Lower a tiny config once for all tests in this module."""
+    cfg = ModelConfig(d_model=128, n_experts=4, top_k=2, d_ff=128,
+                      n_heads=2, d_head=64, vocab=64, prompt_len=8,
+                      max_seq=16)
+    with tempfile.TemporaryDirectory() as d:
+        artifacts = aot.lower_all(cfg, d)
+        aot.write_manifest(cfg, artifacts, d)
+        yield cfg, d, artifacts
+
+
+def test_all_entries_lowered(lowered_dir):
+    cfg, d, artifacts = lowered_dir
+    names = {name for name, _, _ in aot.build_entries(cfg)}
+    assert set(artifacts) == names
+    for meta in artifacts.values():
+        assert os.path.exists(os.path.join(d, meta["file"]))
+
+
+def test_no_elided_constants(lowered_dir):
+    """'{...}' in HLO text means a weight constant was elided — it would
+    parse back as garbage on the rust side."""
+    cfg, d, artifacts = lowered_dir
+    for meta in artifacts.values():
+        text = open(os.path.join(d, meta["file"])).read()
+        assert "{...}" not in text, f"{meta['file']} has elided constants"
+
+
+def test_hlo_text_is_module(lowered_dir):
+    cfg, d, artifacts = lowered_dir
+    for meta in artifacts.values():
+        text = open(os.path.join(d, meta["file"])).read()
+        assert text.startswith("HloModule"), meta["file"]
+        assert "ROOT" in text
+
+
+def test_entry_layout_matches_manifest(lowered_dir):
+    """The manifest's input table must agree with the HLO entry layout —
+    the rust runtime trusts it when staging literals."""
+    cfg, d, artifacts = lowered_dir
+    for name, meta in artifacts.items():
+        text = open(os.path.join(d, meta["file"])).read()
+        header = text.splitlines()[0]
+        assert "entry_computation_layout" in header
+        for inp in meta["inputs"]:
+            dims = ",".join(str(x) for x in inp["shape"])
+            ty = "s32" if inp["dtype"] == "int32" else "f32"
+            assert f"{ty}[{dims}]" in header, (name, inp, header)
+
+
+def test_manifest_contents(lowered_dir):
+    cfg, d, artifacts = lowered_dir
+    m = json.load(open(os.path.join(d, "manifest.json")))
+    assert m["format"] == "hlo-text/return-tuple"
+    assert m["model"]["d_model"] == cfg.d_model
+    assert m["model"]["expert_capacity"] == cfg.expert_capacity
+    assert set(m["artifacts"]) == set(artifacts)
+
+
+def test_outputs_are_tuples(lowered_dir):
+    """return_tuple=True: every ROOT is a tuple so the rust side can always
+    unwrap with to_tupleN."""
+    cfg, d, artifacts = lowered_dir
+    for meta in artifacts.values():
+        header = open(os.path.join(d, meta["file"])).read().splitlines()[0]
+        # entry layout prints ->(...) for tuple returns
+        assert "->(" in header.replace(" ", ""), meta["file"]

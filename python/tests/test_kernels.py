@@ -1,0 +1,228 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The crossbar kernel and its oracle share every arithmetic step with exact
+integer partial sums (representable in f32), so accumulations match
+bit-for-bit; only the final dequant scaling may differ by 1 ulp (XLA
+reassociates the scalar multiply between modules), hence tight-allclose
+rather than array_equal.  Hypothesis sweeps shapes/seeds/bit-widths.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import crossbar, ffn, gate, ref
+from quant_tol import assert_close_quant, crossbar_lsb
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# crossbar_matmul vs oracle
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.sampled_from([1, 2, 8, 32, 96]),
+    k_tiles=st.integers(1, 4),
+    n=st.sampled_from([16, 128, 256]),
+    xbar_rows=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_crossbar_matches_oracle(m, k_tiles, n, xbar_rows, seed):
+    k = k_tiles * xbar_rows
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    got = crossbar.crossbar_matmul(x, w, xbar_rows=xbar_rows)
+    want = ref.crossbar_matmul_ref(x, w, xbar_rows=xbar_rows)
+    # equal within one quantisation LSB (see quant_tol docstring)
+    assert_close_quant(got, want, crossbar_lsb(x, w, xbar_rows=xbar_rows))
+
+
+@hypothesis.given(
+    dac_bits=st.sampled_from([4, 6, 8]),
+    adc_bits=st.sampled_from([4, 6, 8, 10]),
+    range_factor=st.sampled_from([1.0, 8.0, 32.0, 128.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_crossbar_bitwidth_sweep(dac_bits, adc_bits, range_factor, seed):
+    x = rand(seed, (8, 256))
+    w = rand(seed + 7, (256, 128))
+    got = crossbar.crossbar_matmul(x, w, xbar_rows=128, dac_bits=dac_bits,
+                                   adc_bits=adc_bits,
+                                   range_factor=range_factor)
+    want = ref.crossbar_matmul_ref(x, w, xbar_rows=128, dac_bits=dac_bits,
+                                   adc_bits=adc_bits,
+                                   range_factor=range_factor)
+    assert_close_quant(got, want,
+                       crossbar_lsb(x, w, xbar_rows=128, dac_bits=dac_bits,
+                                    adc_bits=adc_bits,
+                                    range_factor=range_factor))
+
+
+def test_crossbar_accuracy_vs_exact():
+    """The emulated analog pipeline must stay within a few percent of the
+    exact product at the paper's 8-bit I/O spec (ranged ADC)."""
+    x = rand(3, (32, 256))
+    w = rand(4, (256, 128))
+    got = crossbar.crossbar_matmul(x, w, xbar_rows=128)
+    exact = x @ w
+    rel = float(jnp.max(jnp.abs(got - exact)) / jnp.max(jnp.abs(exact)))
+    assert rel < 0.05, f"quantisation error too large: {rel}"
+
+
+def test_crossbar_zero_input():
+    x = jnp.zeros((4, 256))
+    w = rand(5, (256, 128))
+    got = crossbar.crossbar_matmul(x, w, xbar_rows=128)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 128)))
+
+
+def test_crossbar_rejects_bad_k():
+    with pytest.raises(AssertionError):
+        crossbar.crossbar_matmul(rand(0, (4, 100)), rand(1, (100, 16)),
+                                 xbar_rows=128)
+
+
+def test_adc_step_monotone_in_bits():
+    """More ADC bits -> finer grid."""
+    steps = [ref.adc_step(128, 8, b, 32.0) for b in (4, 6, 8, 10)]
+    assert all(a > b for a, b in zip(steps, steps[1:]))
+
+
+def test_sym_quant_roundtrip_bound():
+    x = rand(11, (64, 64), scale=3.0)
+    q, s = ref.sym_quant(x, 8)
+    assert float(jnp.max(jnp.abs(q))) <= 127.0
+    err = float(jnp.max(jnp.abs(q * s - x)))
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+def test_sym_quant_all_zero():
+    q, s = ref.sym_quant(jnp.zeros((4, 4)), 8)
+    np.testing.assert_array_equal(np.asarray(q), np.zeros((4, 4)))
+    assert float(s) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# digital matmul vs oracle
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.sampled_from([1, 3, 32, 96]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([16, 128, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_digital_matmul_matches_oracle(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 3, (k, n))
+    got = gate.digital_matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_pick_tile():
+    assert crossbar._pick_tile(96, 32) == 32
+    assert crossbar._pick_tile(1, 32) == 1
+    assert crossbar._pick_tile(16, 128) == 16
+    assert crossbar._pick_tile(256, 128) == 128
+    # non power-of-two dim falls back to a divisor
+    assert 96 % crossbar._pick_tile(96, 64) == 0
+
+
+# ---------------------------------------------------------------------------
+# expert FFN and MoE apply vs oracle
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_expert_ffn_matches_oracle(m, seed):
+    x = rand(seed, (m, 256))
+    w_up = rand(seed + 1, (256, 128), scale=1 / 16)
+    w_down = rand(seed + 2, (128, 256), scale=1 / 11)
+    got = ffn.expert_ffn(x, w_up, w_down, xbar_rows=128)
+    want = ref.expert_ffn_ref(x, w_up, w_down, xbar_rows=128)
+    # two quantisation stages; tolerance from the second stage's LSB
+    h = ref.expert_ffn_ref(x, w_up, w_down, xbar_rows=128)  # for ranging
+    assert_close_quant(got, want, crossbar_lsb(h, w_down, xbar_rows=128))
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_moe_apply_matches_oracle(seed):
+    e, d, f, t = 4, 256, 128, 8
+    x = rand(seed, (t, d))
+    w_up = rand(seed + 1, (e, d, f), scale=1 / 16)
+    w_down = rand(seed + 2, (e, f, d), scale=1 / 11)
+    gates = jax.nn.softmax(rand(seed + 3, (t, e)))
+    got = ffn.moe_apply(x, gates, w_up, w_down, xbar_rows=128)
+    want = ref.moe_apply_ref(x, gates, w_up, w_down, xbar_rows=128)
+    lsb = sum(crossbar_lsb(x, w_down[i], xbar_rows=128) for i in range(e))
+    assert_close_quant(got, want, lsb)
+
+
+def test_moe_apply_zero_gates_is_zero():
+    e, d, f, t = 4, 256, 128, 4
+    x = rand(0, (t, d))
+    w_up = rand(1, (e, d, f))
+    w_down = rand(2, (e, f, d))
+    got = ffn.moe_apply(x, jnp.zeros((t, e)), w_up, w_down, xbar_rows=128)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((t, d)))
+
+
+def test_moe_apply_single_expert_equals_ffn():
+    d, f, t = 256, 128, 4
+    x = rand(3, (t, d))
+    w_up = rand(4, (1, d, f))
+    w_down = rand(5, (1, f, d))
+    gates = jnp.ones((t, 1))
+    got = ffn.moe_apply(x, gates, w_up, w_down, xbar_rows=128)
+    want = ffn.expert_ffn(x, w_up[0], w_down[0], xbar_rows=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_noisy_readout_statistics():
+    """Analog read noise (paper future-work axis): zero noise is exact;
+    higher noise raises output error monotonically."""
+    x = rand(21, (16, 256))
+    w = rand(22, (256, 128))
+    key = jax.random.PRNGKey(0)
+    clean = ref.crossbar_matmul_ref(x, w, xbar_rows=128)
+
+    def noisy(std):
+        qx, sx = ref.sym_quant(x, 8, axis=-1)
+        qw, sw = ref.sym_quant(w, 8)
+        acc = jnp.zeros((16, 128))
+        for s_ in range(2):
+            part = qx[:, s_ * 128:(s_ + 1) * 128] @ qw[s_ * 128:(s_ + 1) * 128]
+            acc = acc + ref.adc_readout(part, 128, 8, 8, noise_std=std,
+                                        noise_key=jax.random.fold_in(key, s_))
+        return acc * (sx * sw)
+
+    e0 = float(jnp.max(jnp.abs(noisy(0.0) - clean)))
+    e1 = float(jnp.mean(jnp.abs(noisy(0.5) - clean)))
+    e2 = float(jnp.mean(jnp.abs(noisy(2.0) - clean)))
+    assert e0 == 0.0
+    assert e2 > e1 > 0.0
+
+
+def test_vmem_budget():
+    """The full-dims tiling (256x256 blocks) must fit comfortably in a
+    16 MiB VMEM with double buffering — the §Perf structural check."""
+    per_cell = crossbar.vmem_bytes(tile_m=32, tile_n=256, xbar_rows=256)
+    assert 2 * per_cell < 16 * 1024 * 1024

@@ -1,0 +1,158 @@
+"""Expert-choice routing and GO-cache (TopKUpdate) math-level oracles.
+
+These pin the *semantics* the rust coordinator re-implements: the rust
+proptest suites in rust/tests/ check the same invariants against the rust
+code; here we check them against the jnp oracle so the two sides agree on a
+single definition (earlier-token-wins tie-break, fixed capacity, streaming
+top-k == batch top-k).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+hypothesis.settings.register_profile("routing", max_examples=50,
+                                     deadline=None)
+hypothesis.settings.load_profile("routing")
+
+
+def scores_for(seed, t, e):
+    return jax.random.normal(jax.random.PRNGKey(seed), (t, e),
+                             dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# expert_choice_gates_ref invariants
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    t=st.integers(4, 64),
+    e=st.sampled_from([4, 8, 16]),
+    cap=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_each_expert_selects_exactly_capacity(t, e, cap, seed):
+    cap = min(cap, t)
+    gates = ref.expert_choice_gates_ref(scores_for(seed, t, e), cap)
+    per_expert = np.asarray((gates > 0).sum(axis=0))
+    np.testing.assert_array_equal(per_expert, np.full(e, cap))
+
+
+@hypothesis.given(
+    t=st.integers(8, 64),
+    valid=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_padded_tokens_never_selected(t, valid, seed):
+    e, cap = 8, 1
+    valid = min(valid, t)
+    gates = ref.expert_choice_gates_ref(scores_for(seed, t, e), cap,
+                                        valid_len=valid)
+    sel = np.asarray(gates > 0)
+    assert not sel[valid:].any(), "padding rows must receive no experts"
+    assert sel[:valid].sum() == e * cap
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+def test_gate_values_are_softmax_probs(seed):
+    t, e, cap = 16, 8, 4
+    s = scores_for(seed, t, e)
+    gates = ref.expert_choice_gates_ref(s, cap)
+    probs = np.asarray(jax.nn.softmax(s, axis=-1))
+    g = np.asarray(gates)
+    sel = g > 0
+    np.testing.assert_allclose(g[sel], probs[sel], rtol=1e-6)
+
+
+def test_capacity_equals_token_count_selects_all():
+    t, e = 8, 4
+    gates = ref.expert_choice_gates_ref(scores_for(0, t, e), t)
+    assert bool((np.asarray(gates) > 0).all())
+
+
+# ---------------------------------------------------------------------------
+# Streaming TopKUpdate == batch top-k  (Eq. 4-5)
+# ---------------------------------------------------------------------------
+
+def batch_topk_sets(scores: np.ndarray, cap: int):
+    """Selected-token sets per expert from a full batch top-k over the
+    softmax probs (Zhou et al. rank S = softmax(X Wg) per expert column;
+    stable: earlier token wins ties)."""
+    scores = np.asarray(jax.nn.softmax(jnp.asarray(scores), axis=-1))
+    t, e = scores.shape
+    sets = []
+    for j in range(e):
+        order = np.argsort(-scores[:, j], kind="stable")
+        sets.append(set(order[:cap].tolist()))
+    return sets
+
+
+def streaming_topk_sets(scores: np.ndarray, cap: int, prefix: int):
+    """Seed with the first `prefix` tokens (batch), then TopKUpdate one
+    token at a time — the GO-cache procedure during generation."""
+    t, e = scores.shape
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(scores), axis=-1))
+    sets = batch_topk_sets(scores[:prefix], cap)
+    scores = probs  # the cache stores/compares softmaxed scores
+    # per-expert min-score threshold tracking, as the GO cache does
+    for tok in range(prefix, t):
+        for j in range(e):
+            cached = sorted(sets[j], key=lambda i: (-scores[i, j], i))
+            worst = cached[-1]
+            s_new, s_worst = scores[tok, j], scores[worst, j]
+            # Eq. 5: replace iff s_new >= min(S_prev); tie keeps the earlier
+            # token (strict > on equal scores keeps `worst`, which is
+            # earlier than `tok`).
+            if s_new > s_worst:
+                sets[j] = (sets[j] - {worst}) | {tok}
+    return sets
+
+
+@hypothesis.given(
+    t=st.integers(6, 48),
+    e=st.sampled_from([4, 8, 16]),
+    cap=st.integers(1, 6),
+    prefix=st.integers(4, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_streaming_equals_batch(t, e, cap, prefix, seed):
+    prefix = min(prefix, t)
+    cap = min(cap, prefix)
+    scores = np.asarray(scores_for(seed, t, e))
+    assert streaming_topk_sets(scores, cap, prefix) == \
+        batch_topk_sets(scores, cap)
+
+
+def test_streaming_equals_batch_with_ties():
+    scores = np.zeros((10, 3), dtype=np.float32)  # all ties
+    assert streaming_topk_sets(scores, 4, 5) == batch_topk_sets(scores, 4)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+def test_at_most_one_change_per_expert_per_step(seed):
+    """Paper §III-C: 'each generation step will result in at most one change
+    per expert' — the property that bounds GO output-cache DRAM traffic."""
+    t, e, cap, prefix = 20, 8, 4, 8
+    scores = np.asarray(scores_for(seed, t, e))
+    sets = batch_topk_sets(scores[:prefix], cap)
+    for tok in range(prefix, t):
+        nxt = streaming_topk_sets(scores[:tok + 1], cap, prefix)
+        for j in range(e):
+            assert len(sets[j] - nxt[j]) <= 1
+            assert len(nxt[j] - sets[j]) <= 1
+        sets = nxt
+
+
+def test_gates_match_streaming_selection():
+    """Dense-mask routing and the streaming set view agree."""
+    t, e, cap = 12, 4, 3
+    s = scores_for(9, t, e)
+    gates = np.asarray(ref.expert_choice_gates_ref(s, cap))
+    sets = batch_topk_sets(np.asarray(s), cap)
+    for j in range(e):
+        sel = set(np.nonzero(gates[:, j])[0].tolist())
+        assert sel == sets[j]

@@ -1,0 +1,38 @@
+//! Bench for Fig. 4 (generation-stage cache study): regenerates every bar
+//! and series of the figure, printing both the *simulated* chip numbers
+//! (the paper's data) and the host cost of producing them.
+//!
+//! `cargo bench --bench fig4_cache`
+
+use moepim::config::SimConfig;
+use moepim::eval::fig4;
+use moepim::sim::Simulator;
+use moepim::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig4");
+
+    // ---- the figure itself (simulated metrics) -------------------------
+    println!("\n{}", fig4::render_fig4a(8));
+    println!("{}", fig4::render_fig4b());
+
+    let imp8 = fig4::improvement(8);
+    let imp64 = fig4::improvement(64);
+    b.metric("kvgo_latency_x_8tok", imp8.latency_x, "x (paper 4.2)");
+    b.metric("kvgo_energy_x_8tok", imp8.energy_x, "x (paper 10.1)");
+    b.metric("kvgo_latency_x_64tok", imp64.latency_x, "x (paper 6.7)");
+    b.metric("kvgo_energy_x_64tok", imp64.energy_x, "x (paper 14.1)");
+
+    // ---- host cost of the simulator on each cache regime ---------------
+    for cache in fig4::CACHE_VARIANTS {
+        let mut cfg = SimConfig::baseline();
+        cfg.cache = cache;
+        let label = cache.label().replace(' ', "_");
+        b.run(&format!("simulate_8tok/{label}"), || {
+            Simulator::paper(cfg.clone()).run().total().latency_ns
+        });
+    }
+
+    // full-figure regeneration cost (what `moepim eval fig4a` pays)
+    b.run("fig4a_rows", || fig4::fig4a(8).len());
+}

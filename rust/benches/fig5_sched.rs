@@ -1,0 +1,47 @@
+//! Bench for Fig. 5 (grouping × scheduling study): regenerates all nine
+//! bars (simulated MoE-part latency/energy/area-efficiency) and measures
+//! the host cost of the three schedule builders — the L3 hot path.
+//!
+//! `cargo bench --bench fig5_sched`
+
+use moepim::config::SchedulePolicy;
+use moepim::eval::fig5;
+use moepim::grouping::Grouping;
+use moepim::moe::TraceGenerator;
+use moepim::sched;
+use moepim::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig5");
+
+    // ---- the figure itself ----------------------------------------------
+    println!("\n{}", fig5::render());
+    let rows = fig5::fig5();
+    let (best_label, best_x) = fig5::best_improvement(&rows);
+    b.metric(&format!("best_area_eff_{best_label}"), best_x,
+             "x vs base (paper 2.2)");
+
+    // ---- schedule-builder host cost (prefill-scale and larger) -----------
+    for tokens in [32usize, 256, 1024] {
+        let mut gen = TraceGenerator::new(16, 7);
+        let choices = gen.token_choice_zipf(tokens, 4, 0.35);
+        let grouping = Grouping::uniform(16, 2, 7);
+        for (name, policy) in [
+            ("tokenwise", SchedulePolicy::TokenWise),
+            ("compact", SchedulePolicy::Compact),
+            ("reschedule", SchedulePolicy::Reschedule),
+        ] {
+            b.run(&format!("build/{name}/{tokens}tok"), || {
+                sched::build(&choices, &grouping, policy).makespan_slots()
+            });
+        }
+    }
+
+    // transfer counting on a large schedule
+    let mut gen = TraceGenerator::new(16, 9);
+    let choices = gen.token_choice_zipf(1024, 4, 0.35);
+    let grouping = Grouping::uniform(16, 2, 9);
+    let schedule = sched::build(&choices, &grouping,
+                                SchedulePolicy::Reschedule);
+    b.run("transfers/1024tok", || schedule.transfers());
+}

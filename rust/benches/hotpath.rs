@@ -1,0 +1,104 @@
+//! L3 hot-path micro-benchmarks: the pieces that run per request / per
+//! token in the coordinator and simulator — scheduler builders, GO-cache
+//! TopKUpdate, routing, trace generation, and (when artifacts exist) the
+//! PJRT decode step itself.
+//!
+//! `cargo bench --bench hotpath`
+
+use moepim::cache::GoCache;
+use moepim::config::SchedulePolicy;
+use moepim::grouping::Grouping;
+use moepim::moe::gate::{expert_choice_route, softmax_rows};
+use moepim::moe::TraceGenerator;
+use moepim::sched;
+use moepim::util::bench::Bench;
+use moepim::util::rng::Pcg32;
+
+fn scores(t: usize, e: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..t * e).map(|_| rng.gen_normal() as f32).collect()
+}
+
+fn main() {
+    let b = Bench::new("hotpath");
+
+    // ---- routing ---------------------------------------------------------
+    let s32 = scores(32, 16, 1);
+    b.run("route/expert_choice/32x16", || {
+        expert_choice_route(&s32, 32, 16, 8, None).choices.total_work()
+    });
+    let s1k = scores(1024, 64, 2);
+    b.run("route/expert_choice/1024x64", || {
+        expert_choice_route(&s1k, 1024, 64, 64, None)
+            .choices
+            .total_work()
+    });
+    b.run("route/softmax/1024x64", || {
+        softmax_rows(&s1k, 1024, 64).len()
+    });
+
+    // ---- GO cache --------------------------------------------------------
+    let row: Vec<f32> = scores(1, 16, 3);
+    b.run("go_cache/topk_update/16exp", || {
+        let mut cache = GoCache::new(16, 8, 0);
+        for t in 0..64 {
+            cache.update_scores(t, &row);
+        }
+        cache.selected_tokens(0).len()
+    });
+
+    // ---- scheduler (the per-prefill path) ----------------------------------
+    let mut gen = TraceGenerator::new(16, 5);
+    let choices = gen.token_choice_zipf(32, 4, 0.35);
+    let grouping = Grouping::uniform(16, 2, 5);
+    b.run("sched/reschedule/32tok", || {
+        sched::build(&choices, &grouping, SchedulePolicy::Reschedule)
+            .transfers()
+    });
+
+    // ---- trace generation --------------------------------------------------
+    b.run("trace/expert_choice/32tok", || {
+        TraceGenerator::new(16, 11).expert_choice(32, 8, 1.0).total_work()
+    });
+
+    // ---- PJRT decode step (needs `make artifacts`) -------------------------
+    let dir = std::env::var("MOEPIM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    match moepim::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            let engine = moepim::coordinator::ModelEngine::new(rt);
+            let prompt: Vec<i32> = (0..32).collect();
+            let (mut session, mut next) = engine.prefill(&prompt).unwrap();
+            b.run("pjrt/decode_cached_step/dense", || {
+                if session.pos + 1 >= engine.model.max_seq {
+                    let (s2, n2) = engine.prefill(&prompt).unwrap();
+                    session = s2;
+                    next = n2;
+                }
+                next = engine.decode_cached(&mut session, next).unwrap();
+                next
+            });
+            // §Perf L2-1: sparse-gather MoE on the decode path
+            let engine = engine.with_sparse_moe(true);
+            let (mut session, mut next) = engine.prefill(&prompt).unwrap();
+            b.run("pjrt/decode_cached_step/sparse", || {
+                if session.pos + 1 >= engine.model.max_seq {
+                    let (s2, n2) = engine.prefill(&prompt).unwrap();
+                    session = s2;
+                    next = n2;
+                }
+                next = engine.decode_cached(&mut session, next).unwrap();
+                next
+            });
+            b.run("pjrt/prefill_32tok", || {
+                engine.prefill(&prompt).unwrap().1
+            });
+        }
+        Err(e) => {
+            println!("(skipping PJRT benches: {e})");
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench for Table I (total latency/energy/density): regenerates the three
+//! columns end-to-end and measures the whole-inference simulation cost per
+//! configuration, plus the area-ratio sweep of §IV-B.
+//!
+//! `cargo bench --bench table1_total`
+
+use moepim::eval::{calibration, sweep, table1};
+use moepim::sim::Simulator;
+use moepim::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("table1");
+
+    // ---- the table itself -------------------------------------------------
+    println!("\n{}", table1::render());
+    let rows = table1::table1();
+    b.metric("baseline_latency_ns", rows[0].latency_ns,
+             "ns (paper 2,297,724)");
+    b.metric("baseline_energy_nj", rows[0].energy_nj,
+             "nJ (paper 5,393,776)");
+    b.metric("s4o_density", rows[2].density, "GOPS/W/mm2 (paper 15.6)");
+
+    // ---- §IV-B ratio sweep -------------------------------------------------
+    println!("{}", sweep::render());
+    b.metric("isaac_point", sweep::isaac_point().gops_per_mm2,
+             "GOPS/mm2 (paper 82.7)");
+
+    // ---- calibration table (paper vs measured, all targets) ---------------
+    println!("{}", calibration::render());
+    let worst = calibration::targets()
+        .into_iter()
+        .map(|t| (t.ratio() - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    b.metric("worst_target_deviation", worst, "rel (lower is better)");
+
+    // ---- host cost per Table-I column --------------------------------------
+    for (label, cfg) in table1::configs() {
+        let tag = label.replace([' ', ','], "_");
+        b.run(&format!("simulate/{tag}"), || {
+            Simulator::paper(cfg.clone()).run().total().latency_ns
+        });
+    }
+}

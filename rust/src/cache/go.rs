@@ -1,0 +1,309 @@
+//! The gate-output (GO) cache (§III-C, Eq. 4-5) — the paper's answer to
+//! expert-choice routing's generation inefficiency.
+//!
+//! **Score cache**: per expert, the top-`capacity` (token, prob) entries
+//! seen so far.  A new token's gate runs on *one* token; `TopKUpdate`
+//! (Eq. 5) compares its prob against each expert's cached minimum: if it
+//! displaces the minimum, the expert selects the token (and, in
+//! retain-all-tokens mode, rewrites exactly one output-cache entry —
+//! "each generation step will result in at most one change per expert").
+//!
+//! **Output cache**: the k cached `G(x) E(x)` contribution vectors per
+//! expert (static `k x E x d` bytes — 512 KB at the paper's dims), used
+//! when past tokens' MoE outputs must stay retrievable (constrained
+//! decoding [15]).
+//!
+//! Equivalence contract (pinned by `rust/tests/props_cache.rs` and
+//! mirrored in python's test_routing.py): seeding with a batch
+//! expert-choice routing and streaming updates thereafter selects exactly
+//! the sets a full batch top-k over all tokens would select, with the
+//! earlier-token-wins tie-break.
+
+use crate::moe::gate::{softmax_rows, Routing};
+
+/// One expert's cached selection entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub token: usize,
+    pub prob: f32,
+}
+
+/// Result of one TopKUpdate step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoUpdate {
+    /// experts that selected the new token (sorted ascending)
+    pub selected: Vec<usize>,
+    /// for each selected expert, the token its new entry evicted
+    pub evicted: Vec<usize>,
+    /// gate weight (softmax prob) per selected expert
+    pub gates: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoCache {
+    n_experts: usize,
+    capacity: usize,
+    /// per expert: entries kept sorted by (prob desc, token asc); the last
+    /// element is the eviction candidate (minimum under the tie-break)
+    entries: Vec<Vec<Entry>>,
+    /// optional output cache: per expert, per slot, a d-dim contribution
+    out_dim: usize,
+    outputs: Vec<Vec<Vec<f32>>>,
+}
+
+impl GoCache {
+    pub fn new(n_experts: usize, capacity: usize, out_dim: usize) -> Self {
+        GoCache {
+            n_experts,
+            capacity,
+            entries: vec![Vec::with_capacity(capacity); n_experts],
+            out_dim,
+            outputs: vec![vec![vec![0.0; out_dim]; capacity]; n_experts],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Seed from a batch prefill routing (scores of the prompt tokens).
+    pub fn seed_from_routing(&mut self, routing: &Routing) {
+        let e = self.n_experts;
+        assert_eq!(routing.choices.experts(), e);
+        for expert in 0..e {
+            let mut es: Vec<Entry> = routing
+                .choices
+                .tokens_of(expert)
+                .into_iter()
+                .map(|t| Entry { token: t, prob: routing.gate(t, expert) })
+                .collect();
+            assert!(
+                es.len() <= self.capacity,
+                "prefill selected more than capacity"
+            );
+            sort_entries(&mut es);
+            self.entries[expert] = es;
+        }
+    }
+
+    /// Current selection threshold of `expert` (the cached minimum prob),
+    /// or `None` while the cache is underfull (every token is selected).
+    pub fn threshold(&self, expert: usize) -> Option<Entry> {
+        let es = &self.entries[expert];
+        if es.len() < self.capacity {
+            None
+        } else {
+            es.last().copied()
+        }
+    }
+
+    /// TopKUpdate (Eq. 5) for a new token with raw gate scores `scores[E]`.
+    /// Softmaxes internally (the cache stores softmaxed scores, matching
+    /// the batch router's ranking space).
+    pub fn update_scores(&mut self, token: usize, scores: &[f32]) -> GoUpdate {
+        assert_eq!(scores.len(), self.n_experts);
+        let probs = softmax_rows(scores, 1, self.n_experts);
+        self.update_probs(token, &probs)
+    }
+
+    /// TopKUpdate with already-softmaxed probs.
+    pub fn update_probs(&mut self, token: usize, probs: &[f32]) -> GoUpdate {
+        assert_eq!(probs.len(), self.n_experts);
+        let mut upd =
+            GoUpdate { selected: vec![], evicted: vec![], gates: vec![] };
+        for expert in 0..self.n_experts {
+            let p = probs[expert];
+            let es = &mut self.entries[expert];
+            let accept = if es.len() < self.capacity {
+                true
+            } else {
+                // strict >: on a tie the incumbent (earlier token) stays
+                p > es.last().unwrap().prob
+            };
+            if !accept {
+                continue;
+            }
+            let mut evicted_token = usize::MAX;
+            if es.len() == self.capacity {
+                evicted_token = es.pop().unwrap().token;
+            }
+            es.push(Entry { token, prob: p });
+            sort_entries(es);
+            upd.selected.push(expert);
+            upd.evicted.push(evicted_token);
+            upd.gates.push(p);
+        }
+        upd
+    }
+
+    /// Selected-token set of `expert`, sorted ascending.
+    pub fn selected_tokens(&self, expert: usize) -> Vec<usize> {
+        let mut ts: Vec<usize> =
+            self.entries[expert].iter().map(|e| e.token).collect();
+        ts.sort_unstable();
+        ts
+    }
+
+    /// Store a contribution vector in the output cache (retain-all mode).
+    /// `slot` addresses the expert's k-entry ring; the paper rewrites the
+    /// evicted entry's slot.
+    pub fn store_output(&mut self, expert: usize, slot: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.out_dim);
+        self.outputs[expert][slot].copy_from_slice(v);
+    }
+
+    pub fn load_output(&self, expert: usize, slot: usize) -> &[f32] {
+        &self.outputs[expert][slot]
+    }
+
+    /// Slot index of `token` in `expert`'s entry list (for output-cache
+    /// addressing), if selected.
+    pub fn slot_of(&self, expert: usize, token: usize) -> Option<usize> {
+        self.entries[expert].iter().position(|e| e.token == token)
+    }
+
+    // ----- DRAM traffic accounting (simulator side) ------------------------
+
+    /// Score-cache bytes appended per generated token: E scores at fp16
+    /// (paper: "each newly generated token only adds 32 B of score data"
+    /// with E = 16).
+    pub fn score_bytes_per_token(n_experts: usize) -> u64 {
+        2 * n_experts as u64
+    }
+
+    /// Static output-cache size: k x E x d at 8-bit precision (paper:
+    /// "fixed at 512 KB" for k=8, E=16, d=4096).
+    pub fn output_cache_bytes(capacity: usize, n_experts: usize,
+                              d_model: usize) -> u64 {
+        (capacity * n_experts * d_model) as u64
+    }
+
+    /// Worst-case output-cache bytes rewritten per step: one d-dim entry
+    /// per expert that changed its selection.
+    pub fn output_write_bytes(changed_experts: usize, d_model: usize) -> u64 {
+        (changed_experts * d_model) as u64
+    }
+}
+
+fn sort_entries(es: &mut [Entry]) {
+    es.sort_by(|a, b| {
+        b.prob
+            .partial_cmp(&a.prob)
+            .unwrap()
+            .then(a.token.cmp(&b.token))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::gate::expert_choice_route;
+    use crate::util::rng::Pcg32;
+
+    fn scores(t: usize, e: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..t * e).map(|_| rng.gen_normal() as f32).collect()
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let (t_total, e, cap, prefix) = (24, 8, 4, 12);
+        let s = scores(t_total, e, 42);
+        // seed with batch routing over the prefix
+        let pre = expert_choice_route(&s[..prefix * e], prefix, e, cap, None);
+        let mut cache = GoCache::new(e, cap, 1);
+        cache.seed_from_routing(&pre);
+        // stream the rest
+        for t in prefix..t_total {
+            cache.update_scores(t, &s[t * e..(t + 1) * e]);
+        }
+        // compare with full batch routing over everything
+        let full = expert_choice_route(&s, t_total, e, cap, None);
+        for expert in 0..e {
+            assert_eq!(
+                cache.selected_tokens(expert),
+                full.choices.tokens_of(expert),
+                "expert {expert}"
+            );
+        }
+    }
+
+    #[test]
+    fn tie_keeps_earlier_token() {
+        let e = 2;
+        let mut cache = GoCache::new(e, 1, 1);
+        cache.update_probs(0, &[0.5, 0.5]);
+        let upd = cache.update_probs(1, &[0.5, 0.6]);
+        // expert 0: tie -> incumbent token 0 stays; expert 1: displaced
+        assert_eq!(cache.selected_tokens(0), vec![0]);
+        assert_eq!(cache.selected_tokens(1), vec![1]);
+        assert_eq!(upd.selected, vec![1]);
+        assert_eq!(upd.evicted, vec![0]);
+    }
+
+    #[test]
+    fn underfull_cache_accepts_everything() {
+        let mut cache = GoCache::new(3, 2, 1);
+        let u0 = cache.update_probs(0, &[0.1, 0.1, 0.1]);
+        assert_eq!(u0.selected, vec![0, 1, 2]);
+        assert_eq!(u0.evicted, vec![usize::MAX; 3]); // nothing evicted
+        let u1 = cache.update_probs(1, &[0.05, 0.05, 0.05]);
+        assert_eq!(u1.selected, vec![0, 1, 2]); // still filling
+        let u2 = cache.update_probs(2, &[0.01, 0.01, 0.2]);
+        assert_eq!(u2.selected, vec![2]); // now only a displacement counts
+    }
+
+    #[test]
+    fn at_most_one_change_per_expert_per_step() {
+        let e = 8;
+        let mut cache = GoCache::new(e, 4, 1);
+        let s = scores(30, e, 7);
+        for t in 0..30 {
+            let before: Vec<Vec<usize>> =
+                (0..e).map(|x| cache.selected_tokens(x)).collect();
+            cache.update_scores(t, &s[t * e..(t + 1) * e]);
+            for x in 0..e {
+                let after = cache.selected_tokens(x);
+                let removed = before[x]
+                    .iter()
+                    .filter(|tk| !after.contains(tk))
+                    .count();
+                assert!(removed <= 1, "expert {x} changed {removed} entries");
+            }
+        }
+    }
+
+    #[test]
+    fn output_cache_store_load() {
+        let mut cache = GoCache::new(2, 2, 4);
+        cache.update_probs(0, &[0.9, 0.1]);
+        let slot = cache.slot_of(0, 0).unwrap();
+        cache.store_output(0, slot, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(cache.load_output(0, slot), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(cache.slot_of(0, 99), None);
+    }
+
+    #[test]
+    fn paper_traffic_numbers() {
+        // §IV-A: 32 B of score data per token (E=16), 512 KB output cache
+        assert_eq!(GoCache::score_bytes_per_token(16), 32);
+        assert_eq!(GoCache::output_cache_bytes(8, 16, 4096), 512 * 1024);
+        assert_eq!(GoCache::output_write_bytes(3, 4096), 3 * 4096);
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        let mut cache = GoCache::new(1, 2, 1);
+        assert!(cache.threshold(0).is_none());
+        cache.update_probs(0, &[0.3]);
+        assert!(cache.threshold(0).is_none()); // still underfull
+        cache.update_probs(1, &[0.5]);
+        let th = cache.threshold(0).unwrap();
+        assert_eq!(th.token, 0);
+        assert_eq!(th.prob, 0.3);
+    }
+}

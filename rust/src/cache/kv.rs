@@ -1,0 +1,140 @@
+//! KV cache: per-sequence key/value buffers for attention decode.
+//!
+//! The coordinator owns one [`KvCache`] per live sequence; the
+//! `attn_decode` executable receives the full (padded) buffers plus the
+//! write position and returns the new token's K/V rows, which the
+//! coordinator writes back — mirroring the DRAM-resident cache of the
+//! paper's chip, where the PIM die streams K/V in per step.
+
+/// Functional KV buffer of one sequence, padded to `max_seq`.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    max_seq: usize,
+    n_heads: usize,
+    d_head: usize,
+    len: usize,
+    /// [max_seq, n_heads, d_head] row-major
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(max_seq: usize, n_heads: usize, d_head: usize) -> Self {
+        let n = max_seq * n_heads * d_head;
+        KvCache {
+            max_seq,
+            n_heads,
+            d_head,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// Full padded buffers (what `attn_decode` takes as inputs).
+    pub fn k_buf(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_buf(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Seed from a prefill's K/V outputs (padded [max_seq, H, Dh] buffers,
+    /// `valid` rows meaningful).
+    pub fn seed(&mut self, k: &[f32], v: &[f32], valid: usize) {
+        assert_eq!(k.len(), self.k.len(), "k buffer shape mismatch");
+        assert_eq!(v.len(), self.v.len(), "v buffer shape mismatch");
+        assert!(valid <= self.max_seq);
+        self.k.copy_from_slice(k);
+        self.v.copy_from_slice(v);
+        self.len = valid;
+    }
+
+    /// Append one decode step's K/V rows ([1, H, Dh] each).
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let r = self.row_elems();
+        assert_eq!(k_row.len(), r, "k row shape mismatch");
+        assert_eq!(v_row.len(), r, "v row shape mismatch");
+        assert!(self.len < self.max_seq, "KV cache full");
+        let off = self.len * r;
+        self.k[off..off + r].copy_from_slice(k_row);
+        self.v[off..off + r].copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    pub fn row_k(&self, pos: usize) -> &[f32] {
+        let r = self.row_elems();
+        &self.k[pos * r..(pos + 1) * r]
+    }
+
+    /// Bytes written per generated token on the paper's chip (K + V rows at
+    /// 8-bit I/O precision).
+    pub fn bytes_per_token_write(n_heads: usize, d_head: usize) -> u64 {
+        2 * (n_heads * d_head) as u64
+    }
+
+    /// Bytes read per decode step at context length `l` (stream all cached
+    /// K and V rows).
+    pub fn bytes_read_at(n_heads: usize, d_head: usize, l: usize) -> u64 {
+        2 * (n_heads * d_head) as u64 * l as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_and_append() {
+        let mut c = KvCache::new(4, 2, 3);
+        let mut k = vec![0.0; 4 * 6];
+        let v = vec![0.5; 4 * 6];
+        k[0] = 1.0; // token 0, head 0, dim 0
+        c.seed(&k, &v, 2);
+        assert_eq!(c.len(), 2);
+        c.append(&[9.0; 6], &[8.0; 6]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.row_k(2), &[9.0; 6]);
+        assert_eq!(c.row_k(0)[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 1, 1);
+        c.append(&[1.0], &[1.0]);
+        c.append(&[2.0], &[2.0]);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        // Llama-MoE dims: 32 heads x 128 = 4096 per row, K+V = 8192 B/token
+        assert_eq!(KvCache::bytes_per_token_write(32, 128), 8192);
+        assert_eq!(KvCache::bytes_read_at(32, 128, 40), 8192 * 40);
+        assert_eq!(KvCache::bytes_read_at(32, 128, 0), 0);
+    }
+
+    #[test]
+    fn buffers_padded_to_max() {
+        let c = KvCache::new(96, 4, 64);
+        assert_eq!(c.k_buf().len(), 96 * 4 * 64);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! Generation-stage caches (§III-C): the KV cache for attention and the
+//! gate-output (GO) cache for expert-choice MoE, both resident in off-chip
+//! DRAM on the paper's chip.
+//!
+//! Each cache plays two roles here:
+//! * **functional state** for the serving coordinator (real buffers the
+//!   runtime reads/writes between HLO calls);
+//! * **traffic accounting** for the simulator (bytes moved per step, which
+//!   the DRAM model prices).
+
+pub mod go;
+pub mod kv;
+
+pub use go::{GoCache, GoUpdate};
+pub use kv::KvCache;

@@ -1,0 +1,229 @@
+//! JSON config files: load/save a full experiment configuration
+//! (simulation knobs + hardware overrides) so runs are reproducible from a
+//! single artifact instead of a flag soup.
+//!
+//! ```json
+//! {
+//!   "sim": {"group_size": 2, "grouping": "S", "schedule": "O",
+//!            "kv": true, "go": true, "prompt_len": 32, "gen_len": 8,
+//!            "routing": "expert", "skew": 1.0, "seed": 2026},
+//!   "hardware": {"xbar_area_ratio": 0.05, "dram_bytes_per_ns": 12.8}
+//! }
+//! ```
+//!
+//! Unknown keys are rejected (typos should fail, not silently default).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::hardware::HardwareConfig;
+use super::sim::{CachePolicy, GroupingPolicy, RoutingMode, SchedulePolicy,
+                 SimConfig};
+
+/// A fully resolved experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Experiment {
+    pub sim: SimConfig,
+    pub hw: HardwareConfig,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment { sim: SimConfig::baseline(), hw: HardwareConfig::paper() }
+    }
+}
+
+impl Experiment {
+    pub fn load(path: &Path) -> Result<Experiment> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Experiment> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let obj = v.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        let mut exp = Experiment::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "sim" => apply_sim(&mut exp.sim, val)?,
+                "hardware" => apply_hw(&mut exp.hw, val)?,
+                other => return Err(anyhow!("unknown top-level key '{other}'")),
+            }
+        }
+        Ok(exp)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let s = &self.sim;
+        Json::obj(vec![
+            ("sim", Json::obj(vec![
+                ("group_size", Json::num(s.group_size as f64)),
+                ("grouping", Json::str(&s.grouping.to_string())),
+                ("schedule", Json::str(match s.schedule {
+                    SchedulePolicy::TokenWise => "T",
+                    SchedulePolicy::Compact => "C",
+                    SchedulePolicy::Reschedule => "O",
+                })),
+                ("kv", Json::Bool(s.cache.kv)),
+                ("go", Json::Bool(s.cache.go)),
+                ("prompt_len", Json::num(s.prompt_len as f64)),
+                ("gen_len", Json::num(s.gen_len as f64)),
+                ("routing", Json::str(match s.routing {
+                    RoutingMode::TokenChoice => "token",
+                    RoutingMode::ExpertChoice => "expert",
+                })),
+                ("skew", Json::num(s.skew)),
+                ("seed", Json::num(s.seed as f64)),
+            ])),
+            ("hardware", Json::obj(vec![
+                ("xbar_area_ratio", Json::num(self.hw.xbar_area_ratio)),
+                ("core_latency_ns", Json::num(self.hw.core_latency_ns)),
+                ("core_power_w", Json::num(self.hw.core_power_w)),
+                ("core_area_mm2", Json::num(self.hw.core_area_mm2)),
+                ("dram_bytes_per_ns", Json::num(self.hw.dram.bytes_per_ns)),
+                ("dram_nj_per_byte",
+                 Json::num(self.hw.dram.energy_nj_per_byte)),
+            ])),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow!("'{key}' must be a non-negative int"))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("'{key}' must be a number"))
+}
+
+fn req_bool(v: &Json, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("'{key}' must be a bool"))
+}
+
+fn apply_sim(sim: &mut SimConfig, v: &Json) -> Result<()> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("'sim' must be an object"))?;
+    for (key, val) in obj {
+        match key.as_str() {
+            "group_size" => sim.group_size = req_usize(val, key)?,
+            "grouping" => {
+                sim.grouping = match val.as_str() {
+                    Some("U") | Some("uniform") => GroupingPolicy::Uniform,
+                    Some("S") | Some("sorted") => GroupingPolicy::Sorted,
+                    Some("none") => GroupingPolicy::None,
+                    _ => return Err(anyhow!("bad grouping (U|S|none)")),
+                }
+            }
+            "schedule" => {
+                sim.schedule = match val.as_str() {
+                    Some("T") | Some("tokenwise") => SchedulePolicy::TokenWise,
+                    Some("C") | Some("compact") => SchedulePolicy::Compact,
+                    Some("O") | Some("resched") => SchedulePolicy::Reschedule,
+                    _ => return Err(anyhow!("bad schedule (T|C|O)")),
+                }
+            }
+            "kv" => sim.cache.kv = req_bool(val, key)?,
+            "go" => sim.cache.go = req_bool(val, key)?,
+            "prompt_len" => sim.prompt_len = req_usize(val, key)?,
+            "gen_len" => sim.gen_len = req_usize(val, key)?,
+            "routing" => {
+                sim.routing = match val.as_str() {
+                    Some("token") => RoutingMode::TokenChoice,
+                    Some("expert") => RoutingMode::ExpertChoice,
+                    _ => return Err(anyhow!("bad routing (token|expert)")),
+                }
+            }
+            "skew" => sim.skew = req_f64(val, key)?,
+            "seed" => sim.seed = req_usize(val, key)? as u64,
+            other => return Err(anyhow!("unknown sim key '{other}'")),
+        }
+    }
+    let _ = CachePolicy::NONE; // (type participates in the schema above)
+    Ok(())
+}
+
+fn apply_hw(hw: &mut HardwareConfig, v: &Json) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("'hardware' must be an object"))?;
+    for (key, val) in obj {
+        match key.as_str() {
+            "xbar_area_ratio" => hw.xbar_area_ratio = req_f64(val, key)?,
+            "core_latency_ns" => hw.core_latency_ns = req_f64(val, key)?,
+            "core_power_w" => hw.core_power_w = req_f64(val, key)?,
+            "core_area_mm2" => hw.core_area_mm2 = req_f64(val, key)?,
+            "xbar_rows" => hw.xbar_rows = req_usize(val, key)?,
+            "xbar_cols" => hw.xbar_cols = req_usize(val, key)?,
+            "dram_bytes_per_ns" => {
+                hw.dram.bytes_per_ns = req_f64(val, key)?
+            }
+            "dram_nj_per_byte" => {
+                hw.dram.energy_nj_per_byte = req_f64(val, key)?
+            }
+            other => return Err(anyhow!("unknown hardware key '{other}'")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_default() {
+        let exp = Experiment::default();
+        let text = exp.to_json().to_string_pretty();
+        let back = Experiment::parse(&text).unwrap();
+        assert_eq!(back.sim, exp.sim);
+        assert_eq!(back.hw.xbar_area_ratio, exp.hw.xbar_area_ratio);
+    }
+
+    #[test]
+    fn parses_partial_override() {
+        let exp = Experiment::parse(
+            r#"{"sim": {"group_size": 4, "grouping": "S", "schedule": "O"},
+                "hardware": {"xbar_area_ratio": 0.05}}"#,
+        )
+        .unwrap();
+        assert_eq!(exp.sim.group_size, 4);
+        assert_eq!(exp.sim.grouping, GroupingPolicy::Sorted);
+        assert_eq!(exp.sim.prompt_len, 32); // default preserved
+        assert_eq!(exp.hw.xbar_area_ratio, 0.05);
+        assert_eq!(exp.hw.core_latency_ns, 130.0);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Experiment::parse(r#"{"sim": {"group_sice": 2}}"#).is_err());
+        assert!(Experiment::parse(r#"{"simm": {}}"#).is_err());
+        assert!(Experiment::parse(r#"{"hardware": {"adc": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Experiment::parse(r#"{"sim": {"grouping": "X"}}"#).is_err());
+        assert!(Experiment::parse(r#"{"sim": {"kv": "yes"}}"#).is_err());
+        assert!(Experiment::parse(r#"{"sim": {"gen_len": -3}}"#).is_err());
+    }
+
+    #[test]
+    fn save_and_load() {
+        let dir = std::env::temp_dir().join("moepim_cfg_test.json");
+        let mut exp = Experiment::default();
+        exp.sim = SimConfig::s4o_kvgo();
+        exp.hw.xbar_area_ratio = 0.05;
+        exp.save(&dir).unwrap();
+        let back = Experiment::load(&dir).unwrap();
+        assert_eq!(back.sim, exp.sim);
+        let _ = std::fs::remove_file(&dir);
+    }
+}

@@ -1,0 +1,206 @@
+//! Hardware constants: the HERMES PIM core spec, DRAM, and the digital
+//! (non-PIM) units.
+//!
+//! The paper's §IV-A setup: HERMES cores [17-19] (256x256 crossbar, 8-bit
+//! I/O), 130 ns / 0.096 W per core activation, 0.635 mm² core area, with the
+//! crossbar itself accounting for 40 % of the core (peripherals — dominated
+//! by ADCs [8] — take the rest).  All other components (attention digital
+//! units, DRAM for the KV/GO caches) follow 3DCIM [7] assumptions; since
+//! that simulator is closed, we use the polynomial fits documented in
+//! DESIGN.md §8 with constants calibrated against Table I's baseline column
+//! (see `eval::calibration`).
+
+/// DRAM model for the off-chip KV + GO caches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramConfig {
+    /// sustained bandwidth, bytes per ns (e.g. 12.8 GB/s ~= 12.8 B/ns)
+    pub bytes_per_ns: f64,
+    /// access energy per byte, nJ (DDR4-ish ~20 pJ/bit -> 0.16 nJ/B)
+    pub energy_nj_per_byte: f64,
+    /// fixed per-burst latency, ns
+    pub burst_latency_ns: f64,
+}
+
+impl DramConfig {
+    pub fn paper() -> Self {
+        DramConfig {
+            bytes_per_ns: 5.94,
+            energy_nj_per_byte: 0.155,
+            burst_latency_ns: 30.0,
+        }
+    }
+
+    /// (latency_ns, energy_nj) of moving `bytes` to/from DRAM.
+    pub fn transfer(&self, bytes: u64) -> (f64, f64) {
+        if bytes == 0 {
+            return (0.0, 0.0);
+        }
+        (
+            self.burst_latency_ns + bytes as f64 / self.bytes_per_ns,
+            bytes as f64 * self.energy_nj_per_byte,
+        )
+    }
+}
+
+/// Digital units: attention (MHA stays off-PIM, as in 3DCIM [7]) and the
+/// gate MVM.  Costs are polynomial fits in the token/context length
+/// (DESIGN.md §8); `*_ns`/`*_nj` name the fitted coefficients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DigitalConfig {
+    /// attention cost, linear term: per token per unit context, ns
+    pub attn_ns_per_token_ctx: f64,
+    /// attention cost, fixed per-token term (projections etc.), ns
+    pub attn_ns_per_token: f64,
+    /// attention energy analogues, nJ
+    pub attn_nj_per_token_ctx: f64,
+    pub attn_nj_per_token: f64,
+    /// fraction of the per-token constant paid when *re-processing* a past
+    /// token with its K/V already cached (0 = projections fully reused,
+    /// only the attend term remains) — the no-GO decode recompute path
+    pub kv_reuse_factor: f64,
+    /// gate MVM (D x E) per token fed, ns / nJ
+    pub gate_ns_per_token: f64,
+    pub gate_nj_per_token: f64,
+    /// digital top-k / softmax / TopKUpdate per routing decision, ns / nJ
+    pub route_ns_per_token: f64,
+    pub route_nj_per_token: f64,
+}
+
+impl DigitalConfig {
+    pub fn paper() -> Self {
+        DigitalConfig {
+            // Calibrated against Table I baseline (see eval::calibration):
+            // attention throughput of the digital units is the decode-stage
+            // bottleneck without KV cache.
+            attn_ns_per_token_ctx: 51.0,
+            attn_ns_per_token: 4951.0,
+            attn_nj_per_token_ctx: 255.0,
+            attn_nj_per_token: 1797.0,
+            kv_reuse_factor: 0.0,
+            gate_ns_per_token: 95.0,
+            gate_nj_per_token: 170.0,
+            route_ns_per_token: 12.0,
+            route_nj_per_token: 6.0,
+        }
+    }
+}
+
+/// One HERMES-style PIM core (crossbar + its peripheral set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    /// crossbar rows (cells per bit-line)
+    pub xbar_rows: usize,
+    /// crossbar columns
+    pub xbar_cols: usize,
+    /// I/O resolution, bits (DAC in / ADC out)
+    pub io_bits: u32,
+    /// latency of activating one core for one MVM, ns
+    pub core_latency_ns: f64,
+    /// power while a core is active, W (paper prints "0.096 nW", a typo —
+    /// nanowatts would make a whole-chip MVM cheaper than a single DRAM
+    /// bit; HERMES-class cores dissipate ~0.1 W)
+    pub core_power_w: f64,
+    /// full core area (crossbar + exclusive peripherals), mm²
+    pub core_area_mm2: f64,
+    /// fraction of core area that is the crossbar itself (HERMES: 40 %;
+    /// ISAAC-style designs: 5 % — §IV-B's generalisation)
+    pub xbar_area_ratio: f64,
+    /// energy for latching/broadcasting one token's activation vector into
+    /// a group's DAC inputs, per byte, nJ (on-chip, cheaper than DRAM)
+    pub input_nj_per_byte: f64,
+    /// latency of an input broadcast that is NOT hidden by the pipeline
+    /// (the paper hides scheduler + aligned transfers; only group-local
+    /// refetches stall), ns
+    pub input_stall_ns: f64,
+    pub dram: DramConfig,
+    pub digital: DigitalConfig,
+}
+
+impl HardwareConfig {
+    /// The paper's experimental setup (§IV-A).
+    pub fn paper() -> Self {
+        HardwareConfig {
+            xbar_rows: 256,
+            xbar_cols: 256,
+            io_bits: 8,
+            core_latency_ns: 130.0,
+            core_power_w: 0.096,
+            core_area_mm2: 0.635,
+            xbar_area_ratio: 0.40,
+            input_nj_per_byte: 0.02,
+            input_stall_ns: 8.0,
+            dram: DramConfig::paper(),
+            digital: DigitalConfig::paper(),
+        }
+    }
+
+    /// ISAAC-like peripheral-heavy variant (crossbar only 5 % of core area,
+    /// §IV-B's "generalised" case [20]).
+    pub fn isaac_ratio() -> Self {
+        HardwareConfig { xbar_area_ratio: 0.05, ..Self::paper() }
+    }
+
+    /// Energy of one core activation (one MVM round), nJ.
+    pub fn core_energy_nj(&self) -> f64 {
+        self.core_latency_ns * self.core_power_w
+    }
+
+    /// Crossbar-only area of one core, mm².
+    pub fn xbar_area_mm2(&self) -> f64 {
+        self.core_area_mm2 * self.xbar_area_ratio
+    }
+
+    /// Peripheral-only area of one core (ADCs etc.), mm².
+    pub fn periph_area_mm2(&self) -> f64 {
+        self.core_area_mm2 * (1.0 - self.xbar_area_ratio)
+    }
+
+    /// MACs one core performs per activation.
+    pub fn macs_per_activation(&self) -> u64 {
+        (self.xbar_rows * self.xbar_cols) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let hw = HardwareConfig::paper();
+        assert_eq!(hw.xbar_rows, 256);
+        assert_eq!(hw.io_bits, 8);
+        assert!((hw.core_energy_nj() - 12.48).abs() < 1e-9); // 130ns * 0.096W
+        assert!((hw.xbar_area_mm2() - 0.254).abs() < 1e-9);
+        assert!((hw.periph_area_mm2() - 0.381).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_partition_sums() {
+        for hw in [HardwareConfig::paper(), HardwareConfig::isaac_ratio()] {
+            assert!(
+                (hw.xbar_area_mm2() + hw.periph_area_mm2() - hw.core_area_mm2)
+                    .abs()
+                    < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn dram_transfer_scales() {
+        let d = DramConfig::paper();
+        let (l1, e1) = d.transfer(1024);
+        let (l2, e2) = d.transfer(2048);
+        assert!(l2 > l1 && e2 > e1);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9); // energy linear in bytes
+        assert_eq!(d.transfer(0), (0.0, 0.0)); // no burst cost for nothing
+    }
+
+    #[test]
+    fn isaac_has_smaller_xbar_share() {
+        assert!(
+            HardwareConfig::isaac_ratio().xbar_area_mm2()
+                < HardwareConfig::paper().xbar_area_mm2()
+        );
+    }
+}

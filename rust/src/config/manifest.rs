@@ -1,0 +1,241 @@
+//! Reader for `artifacts/manifest.json`, the contract between the python
+//! AOT path and the rust runtime: functional-model dims plus the artifact
+//! table (file names and input specs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Input spec of one HLO executable parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// Functional model dims as lowered (mirror of python's ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionalModel {
+    pub d_model: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub expert_capacity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: FunctionalModel,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default location: `$MOEPIM_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("MOEPIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            });
+        Self::load(&dir)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+        if format != "hlo-text/return-tuple" {
+            return Err(anyhow!("unsupported artifact format '{format}'"));
+        }
+
+        let m = v.get("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+        let field = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest model missing '{k}'"))
+        };
+        let model = FunctionalModel {
+            d_model: field("d_model")?,
+            n_experts: field("n_experts")?,
+            top_k: field("top_k")?,
+            d_ff: field("d_ff")?,
+            n_heads: field("n_heads")?,
+            d_head: field("d_head")?,
+            vocab: field("vocab")?,
+            prompt_len: field("prompt_len")?,
+            max_seq: field("max_seq")?,
+            expert_capacity: field("expert_capacity")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing 'artifacts'"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing 'file'"))?;
+            let mut inputs = Vec::new();
+            for inp in entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing 'inputs'"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} bad shape"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize()
+                            .ok_or_else(|| anyhow!("bad dim in {name}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(InputSpec { shape, dtype });
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                },
+            );
+        }
+
+        let got: Vec<&str> =
+            artifacts.keys().map(String::as_str).collect();
+        for required in REQUIRED_ARTIFACTS {
+            if !got.contains(required) {
+                return Err(anyhow!(
+                    "manifest missing required artifact '{required}' \
+                     (have: {got:?}) — re-run `make artifacts`"
+                ));
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), model, artifacts })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))
+    }
+}
+
+/// Executables the coordinator requires (aot.py writes exactly these).
+pub const REQUIRED_ARTIFACTS: &[&str] = &[
+    "embed_prefill",
+    "embed_one",
+    "attn_prefill",
+    "attn_decode",
+    "gate_full",
+    "gate_one",
+    "moe_full",
+    "moe_one",
+    "moe_one_sparse",
+    "logits_one",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(format: &str) -> String {
+        format!(
+            r#"{{
+  "format": "{format}",
+  "model": {{"d_model": 256, "n_experts": 16, "top_k": 4, "d_ff": 128,
+             "n_heads": 4, "d_head": 64, "vocab": 512, "prompt_len": 32,
+             "max_seq": 96, "expert_capacity": 8, "seed": 1,
+             "xbar_rows": 128, "xbar_cols": 128, "adc_bits": 8,
+             "dac_bits": 8, "adc_range_factor": 16.0}},
+  "artifacts": {{
+    "embed_prefill": {{"file": "embed_prefill.hlo.txt",
+                       "inputs": [{{"shape": [96], "dtype": "int32"}}]}},
+    "embed_one": {{"file": "embed_one.hlo.txt",
+                   "inputs": [{{"shape": [1], "dtype": "int32"}}]}},
+    "attn_prefill": {{"file": "a.hlo.txt", "inputs": [
+        {{"shape": [96, 256], "dtype": "float32"}},
+        {{"shape": [1], "dtype": "int32"}}]}},
+    "attn_decode": {{"file": "b.hlo.txt", "inputs": []}},
+    "gate_full": {{"file": "c.hlo.txt", "inputs": []}},
+    "gate_one": {{"file": "d.hlo.txt", "inputs": []}},
+    "moe_full": {{"file": "e.hlo.txt", "inputs": []}},
+    "moe_one": {{"file": "f.hlo.txt", "inputs": []}},
+    "moe_one_sparse": {{"file": "fs.hlo.txt", "inputs": []}},
+    "logits_one": {{"file": "g.hlo.txt", "inputs": []}}
+  }}
+}}"#
+        )
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m =
+            Manifest::parse(Path::new("/tmp/a"), &sample("hlo-text/return-tuple"))
+                .unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.model.expert_capacity, 8);
+        let e = m.entry("attn_prefill").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![96, 256]);
+        assert_eq!(e.inputs[1].dtype, "int32");
+        assert!(e.file.ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(Path::new("/tmp"), &sample("protobuf")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let text = sample("hlo-text/return-tuple").replace("moe_one", "moe_uno");
+        let err = Manifest::parse(Path::new("/tmp"), &text).unwrap_err();
+        assert!(err.to_string().contains("moe_one"), "{err}");
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        if let Ok(m) = Manifest::load_default() {
+            assert_eq!(m.model.n_experts, 16);
+            assert!(m.entry("moe_full").unwrap().file.exists());
+        }
+    }
+}

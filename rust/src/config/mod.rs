@@ -1,0 +1,18 @@
+//! Configuration system: model dims, hardware constants, simulation knobs,
+//! and the functional-artifact manifest.
+//!
+//! Everything is plain data with paper-faithful defaults; the CLI and
+//! examples override via flags, and the manifest variant is read from
+//! `artifacts/manifest.json` (written by `python -m compile.aot`).
+
+pub mod file;
+pub mod hardware;
+pub mod manifest;
+pub mod model;
+pub mod sim;
+
+pub use file::Experiment;
+pub use hardware::{DigitalConfig, DramConfig, HardwareConfig};
+pub use manifest::Manifest;
+pub use model::MoeModelConfig;
+pub use sim::{CachePolicy, GroupingPolicy, RoutingMode, SchedulePolicy, SimConfig};

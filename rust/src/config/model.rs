@@ -1,0 +1,97 @@
+//! MoE transformer model shapes.
+//!
+//! Two instantiations matter:
+//! * [`MoeModelConfig::llama_moe_4_16`] — the paper's target (Llama-MoE-4/16,
+//!   an MoE variant of Llama2-7B), used *analytically* by the simulator.
+//! * the functional small-dims model from `artifacts/manifest.json`, used by
+//!   the coordinator for real execution ([`crate::config::Manifest`]).
+
+/// Shape of one MoE transformer block (all blocks are identical; the paper
+/// simulates a single layer, §IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeModelConfig {
+    pub d_model: usize,
+    pub n_experts: usize,
+    /// experts activated per token (token-choice k / expert-choice average)
+    pub top_k: usize,
+    /// per-expert FFN width
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+}
+
+impl MoeModelConfig {
+    /// Llama-MoE-4/16 [4]: d=4096, 16 experts of d_ff = 11008/16 = 688,
+    /// top-4 routing, 32 blocks.
+    pub fn llama_moe_4_16() -> Self {
+        MoeModelConfig {
+            d_model: 4096,
+            n_experts: 16,
+            top_k: 4,
+            d_ff: 688,
+            n_heads: 32,
+            d_head: 128,
+            n_layers: 32,
+            vocab: 32000,
+        }
+    }
+
+    /// Expert-choice capacity for a `tokens`-token batch: each expert
+    /// selects `tokens * top_k / n_experts` tokens (Zhou et al. [12]).
+    /// The paper fixes this at the prefill value during generation so the
+    /// GO output cache stays at its static `k x E x d` size.
+    pub fn expert_capacity(&self, tokens: usize) -> usize {
+        (tokens * self.top_k).div_ceil(self.n_experts).max(1)
+    }
+
+    /// MAC count of one expert's FFN on one token (up D x F + down F x D).
+    pub fn macs_per_expert_token(&self) -> u64 {
+        2 * (self.d_model as u64) * (self.d_ff as u64)
+    }
+
+    /// MAC count of the gate MVM for one token (D x E, digital units).
+    pub fn gate_macs_per_token(&self) -> u64 {
+        (self.d_model as u64) * (self.n_experts as u64)
+    }
+
+    /// MACs of one attention step at context length `l` (QKV + scores +
+    /// values + output projection), per token processed.
+    pub fn attn_macs_per_token(&self, l: usize) -> u64 {
+        let d = self.d_model as u64;
+        let proj = 4 * d * d; // Q, K, V, O projections
+        let attend = 2 * (l as u64) * d; // QK^T + AV across heads
+        proj + attend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dims() {
+        let m = MoeModelConfig::llama_moe_4_16();
+        assert_eq!(m.d_model, 4096);
+        assert_eq!(m.n_experts, 16);
+        assert_eq!(m.d_ff * m.n_experts, 11008); // Llama2-7B FFN split 16-way
+    }
+
+    #[test]
+    fn capacity_paper_value() {
+        let m = MoeModelConfig::llama_moe_4_16();
+        // 32 prompt tokens * 4 / 16 experts = 8 tokens per expert
+        assert_eq!(m.expert_capacity(32), 8);
+        assert_eq!(m.expert_capacity(1), 1); // never zero
+        assert_eq!(m.expert_capacity(33), 9); // ceil
+    }
+
+    #[test]
+    fn mac_counts() {
+        let m = MoeModelConfig::llama_moe_4_16();
+        assert_eq!(m.macs_per_expert_token(), 2 * 4096 * 688);
+        assert_eq!(m.gate_macs_per_token(), 4096 * 16);
+        assert!(m.attn_macs_per_token(64) > m.attn_macs_per_token(32));
+    }
+}

@@ -1,0 +1,192 @@
+//! Simulation knobs: grouping policy, schedule policy, cache configuration,
+//! workload lengths — the axes of every figure/table in the paper.
+
+use std::fmt;
+
+/// How experts are assigned to peripheral-sharing groups (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupingPolicy {
+    /// group size 1 — every crossbar keeps exclusive peripherals (baseline)
+    None,
+    /// uniform/random assignment ("U" in Fig. 5)
+    Uniform,
+    /// workload-sorted: pair lowest-load with highest-load ("S" in Fig. 5)
+    Sorted,
+}
+
+impl fmt::Display for GroupingPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GroupingPolicy::None => write!(f, "none"),
+            GroupingPolicy::Uniform => write!(f, "U"),
+            GroupingPolicy::Sorted => write!(f, "S"),
+        }
+    }
+}
+
+/// Prefill token schedule (§III-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// tokens strictly one by one (baseline)
+    TokenWise,
+    /// groups drain their queues independently ("C")
+    Compact,
+    /// compact + Algorithm 1 idle insertion for data reuse ("O")
+    Reschedule,
+}
+
+impl fmt::Display for SchedulePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedulePolicy::TokenWise => write!(f, "tokenwise"),
+            SchedulePolicy::Compact => write!(f, "C"),
+            SchedulePolicy::Reschedule => write!(f, "O"),
+        }
+    }
+}
+
+/// Which generation-stage caches are enabled (§III-C, Fig. 3/4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CachePolicy {
+    pub kv: bool,
+    pub go: bool,
+}
+
+impl CachePolicy {
+    pub const NONE: CachePolicy = CachePolicy { kv: false, go: false };
+    pub const KV: CachePolicy = CachePolicy { kv: true, go: false };
+    pub const GO: CachePolicy = CachePolicy { kv: false, go: true };
+    pub const KVGO: CachePolicy = CachePolicy { kv: true, go: true };
+
+    pub fn label(&self) -> &'static str {
+        match (self.kv, self.go) {
+            (false, false) => "no cache",
+            (true, false) => "KV cache",
+            (false, true) => "GO cache",
+            (true, true) => "KVGO cache",
+        }
+    }
+}
+
+/// Which router drives the *prefill* trace (§II-A).  The paper's model is
+/// expert-choice (its decode caches require it); token-choice is the
+/// load-imbalanced regime that exercises the grouping study — Llama-MoE's
+/// native router is top-k token-choice, and the paper keeps the model
+/// structure unchanged, so both are faithful workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingMode {
+    TokenChoice,
+    ExpertChoice,
+}
+
+/// One simulated inference configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// experts per peripheral-sharing group (1, 2 or 4 in the paper)
+    pub group_size: usize,
+    pub grouping: GroupingPolicy,
+    pub schedule: SchedulePolicy,
+    pub cache: CachePolicy,
+    /// prompt tokens (paper: 32)
+    pub prompt_len: usize,
+    /// generated tokens (paper: 8 to 64)
+    pub gen_len: usize,
+    /// prefill routing regime
+    pub routing: RoutingMode,
+    /// expert-popularity skew of the synthetic C4-substitute trace
+    /// (0 = uniform; ~1 matches the imbalance the paper motivates with)
+    pub skew: f64,
+    /// RNG seed for trace generation / uniform grouping
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Paper baseline: direct 3DCIM-style deployment — no sharing, no
+    /// grouping, no scheduling, token-by-token, no caches.
+    pub fn baseline() -> Self {
+        SimConfig {
+            group_size: 1,
+            grouping: GroupingPolicy::None,
+            schedule: SchedulePolicy::TokenWise,
+            cache: CachePolicy::NONE,
+            prompt_len: 32,
+            gen_len: 8,
+            routing: RoutingMode::ExpertChoice,
+            skew: 1.0,
+            seed: 2026,
+        }
+    }
+
+    /// Named configuration like "S2O" / "U4C" (Fig. 5 labels).
+    pub fn named(grouping: GroupingPolicy, group_size: usize,
+                 schedule: SchedulePolicy) -> Self {
+        SimConfig {
+            group_size,
+            grouping,
+            schedule,
+            ..Self::baseline()
+        }
+    }
+
+    /// Paper's best-performance configuration (Table I middle column).
+    pub fn s2o_kvgo() -> Self {
+        SimConfig {
+            cache: CachePolicy::KVGO,
+            ..Self::named(GroupingPolicy::Sorted, 2, SchedulePolicy::Reschedule)
+        }
+    }
+
+    /// Paper's best-density configuration (Table I right column).
+    pub fn s4o_kvgo() -> Self {
+        SimConfig {
+            cache: CachePolicy::KVGO,
+            ..Self::named(GroupingPolicy::Sorted, 4, SchedulePolicy::Reschedule)
+        }
+    }
+
+    /// Fig. 5 style label, e.g. "S2O", "U4C", "base".
+    pub fn label(&self) -> String {
+        if self.group_size <= 1 {
+            return "base".to_string();
+        }
+        let s = match self.schedule {
+            SchedulePolicy::TokenWise => "T",
+            SchedulePolicy::Compact => "C",
+            SchedulePolicy::Reschedule => "O",
+        };
+        format!("{}{}{}", self.grouping, self.group_size, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(SimConfig::baseline().label(), "base");
+        assert_eq!(SimConfig::s2o_kvgo().label(), "S2O");
+        assert_eq!(SimConfig::s4o_kvgo().label(), "S4O");
+        assert_eq!(
+            SimConfig::named(GroupingPolicy::Uniform, 4,
+                             SchedulePolicy::Compact)
+            .label(),
+            "U4C"
+        );
+    }
+
+    #[test]
+    fn cache_labels() {
+        assert_eq!(CachePolicy::NONE.label(), "no cache");
+        assert_eq!(CachePolicy::KVGO.label(), "KVGO cache");
+    }
+
+    #[test]
+    fn baseline_is_paper_shape() {
+        let b = SimConfig::baseline();
+        assert_eq!(b.prompt_len, 32);
+        assert_eq!(b.gen_len, 8);
+        assert_eq!(b.group_size, 1);
+        assert!(!b.cache.kv && !b.cache.go);
+    }
+}

@@ -1,0 +1,279 @@
+//! Functional model engine: drives the AOT-compiled transformer block
+//! end-to-end (embed → attention → gate → route → MoE → logits) with the
+//! KV + GO caches owned on the rust side.
+//!
+//! Two decode paths exist on purpose:
+//! * [`DecodeMode::Cached`] — the paper's path: KV-cached attention plus
+//!   GO-cached routing (`TopKUpdate` on one token);
+//! * [`DecodeMode::Recompute`] — the expert-choice reference: re-prefill
+//!   everything each step and re-route the whole batch at the same fixed
+//!   capacity.
+//!
+//! The integration test `rust/tests/functional_equivalence.rs` pins that
+//! both paths generate the same token stream — the end-to-end correctness
+//! statement for the GO cache (streaming top-k == batch top-k holds all
+//! the way through real HLO numerics, not just in the abstract).
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{GoCache, KvCache};
+use crate::config::manifest::FunctionalModel;
+use crate::moe::gate::{expert_choice_route, softmax_rows};
+use crate::runtime::executor::{Runtime, TensorView};
+
+/// How `decode_step` computes the next hidden state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    Cached,
+    Recompute,
+}
+
+/// One live generation session.
+pub struct Session {
+    pub ids: Vec<i32>,
+    kv: KvCache,
+    go: GoCache,
+    /// position of the next token to be written (== ids.len())
+    pub pos: usize,
+}
+
+/// Output of one generation run.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub tokens: Vec<i32>,
+    /// wall-clock spent inside HLO executions, per stage
+    pub prefill_us: f64,
+    pub decode_us: f64,
+}
+
+pub struct ModelEngine {
+    rt: Runtime,
+    pub model: FunctionalModel,
+    /// §Perf L2-1: use the sparse-gather MoE executable on the decode path
+    /// (computes only up to `expert_capacity` selected experts instead of
+    /// all E masked ones).  Off by default so the strict cached-vs-
+    /// recompute equivalence compares identical HLO modules; the serving
+    /// loop turns it on.
+    sparse_moe: bool,
+}
+
+impl ModelEngine {
+    pub fn new(rt: Runtime) -> Self {
+        let model = rt.manifest.model.clone();
+        ModelEngine { rt, model, sparse_moe: false }
+    }
+
+    pub fn with_sparse_moe(mut self, on: bool) -> Self {
+        self.sparse_moe = on;
+        self
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn pad_ids(&self, ids: &[i32]) -> Vec<i32> {
+        let mut padded = ids.to_vec();
+        padded.resize(self.model.max_seq, 0);
+        padded
+    }
+
+    /// Run the padded prefill pipeline over `ids`, returning
+    /// (moe output y [S, D], scores [S, E], k, v buffers).
+    fn prefill_pipeline(&self, ids: &[i32])
+        -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = &self.model;
+        let t = ids.len();
+        if t > m.max_seq {
+            return Err(anyhow!("prompt longer than max_seq"));
+        }
+        let padded = self.pad_ids(ids);
+        let x = self
+            .rt
+            .get("embed_prefill")?
+            .run(&[TensorView::I32(padded)])?
+            .remove(0)
+            .into_f32()?;
+        let mut attn = self.rt.get("attn_prefill")?.run(&[
+            TensorView::F32(x),
+            TensorView::I32(vec![t as i32]),
+        ])?;
+        let h = attn.remove(0).into_f32()?;
+        let k = attn.remove(0).into_f32()?;
+        let v = attn.remove(0).into_f32()?;
+        let scores = self
+            .rt
+            .get("gate_full")?
+            .run(&[TensorView::F32(h.clone())])?
+            .remove(0)
+            .into_f32()?;
+        // expert-choice routing over the valid prefix, fixed capacity
+        let routing = expert_choice_route(
+            &scores, m.max_seq, m.n_experts, m.expert_capacity, Some(t));
+        let y = self
+            .rt
+            .get("moe_full")?
+            .run(&[TensorView::F32(h), TensorView::F32(routing.gates.clone())])?
+            .remove(0)
+            .into_f32()?;
+        Ok((y, scores, k, v))
+    }
+
+    /// Prefill a prompt into a fresh session (seeds both caches).
+    pub fn prefill(&self, ids: &[i32]) -> Result<(Session, i32)> {
+        let m = &self.model;
+        let t = ids.len();
+        let (y, scores, k, v) = self.prefill_pipeline(ids)?;
+        let routing = expert_choice_route(
+            &scores, m.max_seq, m.n_experts, m.expert_capacity, Some(t));
+
+        let mut kv = KvCache::new(m.max_seq, m.n_heads, m.d_head);
+        kv.seed(&k, &v, t);
+        let mut go = GoCache::new(m.n_experts, m.expert_capacity, 0);
+        go.seed_from_routing(&routing);
+
+        let next =
+            self.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)?;
+        Ok((Session { ids: ids.to_vec(), kv, go, pos: t }, next))
+    }
+
+    /// One cached decode step: append `token`, return the next token.
+    pub fn decode_cached(&self, s: &mut Session, token: i32) -> Result<i32> {
+        let m = &self.model;
+        if s.pos >= m.max_seq {
+            return Err(anyhow!("session at max_seq"));
+        }
+        let x1 = self
+            .rt
+            .get("embed_one")?
+            .run(&[TensorView::I32(vec![token])])?
+            .remove(0)
+            .into_f32()?;
+        let mut attn = self.rt.get("attn_decode")?.run(&[
+            TensorView::F32(x1),
+            TensorView::F32(s.kv.k_buf().to_vec()),
+            TensorView::F32(s.kv.v_buf().to_vec()),
+            TensorView::I32(vec![s.pos as i32]),
+        ])?;
+        let h1 = attn.remove(0).into_f32()?;
+        let k1 = attn.remove(0).into_f32()?;
+        let v1 = attn.remove(0).into_f32()?;
+        s.kv.append(&k1, &v1);
+
+        let scores1 = self
+            .rt
+            .get("gate_one")?
+            .run(&[TensorView::F32(h1.clone())])?
+            .remove(0)
+            .into_f32()?;
+        // TopKUpdate: experts that admit this token compute it; gate
+        // weights are the softmax probs, zero elsewhere
+        let upd = s.go.update_scores(s.pos, &scores1);
+        let probs = softmax_rows(&scores1, 1, m.n_experts);
+        let y1 = if self.sparse_moe
+            && upd.selected.len() <= m.expert_capacity
+        {
+            // gather only the selected experts (pad with gate 0.0 slots)
+            let mut idx = vec![0i32; m.expert_capacity];
+            let mut g = vec![0f32; m.expert_capacity];
+            for (i, &e) in upd.selected.iter().enumerate() {
+                idx[i] = e as i32;
+                g[i] = probs[e];
+            }
+            self.rt
+                .get("moe_one_sparse")?
+                .run(&[
+                    TensorView::F32(h1),
+                    TensorView::I32(idx),
+                    TensorView::F32(g),
+                ])?
+                .remove(0)
+                .into_f32()?
+        } else {
+            let mut gates = vec![0f32; m.n_experts];
+            for &e in &upd.selected {
+                gates[e] = probs[e];
+            }
+            self.rt
+                .get("moe_one")?
+                .run(&[TensorView::F32(h1), TensorView::F32(gates)])?
+                .remove(0)
+                .into_f32()?
+        };
+
+        s.ids.push(token);
+        s.pos += 1;
+        self.sample(&y1, s.pos)
+    }
+
+    /// One reference decode step: re-prefill everything (no caches), route
+    /// the whole batch at fixed capacity, return the next token.
+    pub fn decode_recompute(&self, s: &mut Session, token: i32)
+        -> Result<i32> {
+        let m = &self.model;
+        if s.pos >= m.max_seq {
+            return Err(anyhow!("session at max_seq"));
+        }
+        s.ids.push(token);
+        s.pos += 1;
+        let t = s.ids.len();
+        let (y, _, _, _) = self.prefill_pipeline(&s.ids)?;
+        self.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)
+    }
+
+    /// Generate `gen_len` tokens greedily from `prompt`.
+    pub fn generate(&self, prompt: &[i32], gen_len: usize, mode: DecodeMode)
+        -> Result<GenerationResult> {
+        let t0 = std::time::Instant::now();
+        let (mut session, mut next) = self.prefill(prompt)?;
+        let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let t1 = std::time::Instant::now();
+        let mut tokens = Vec::with_capacity(gen_len);
+        for _ in 0..gen_len {
+            tokens.push(next);
+            if session.pos >= self.model.max_seq {
+                break;
+            }
+            next = match mode {
+                DecodeMode::Cached => self.decode_cached(&mut session, next)?,
+                DecodeMode::Recompute => {
+                    self.decode_recompute(&mut session, next)?
+                }
+            };
+        }
+        Ok(GenerationResult {
+            tokens,
+            prefill_us,
+            decode_us: t1.elapsed().as_secs_f64() * 1e6,
+        })
+    }
+
+    /// Deterministic Gumbel-max sampling: `argmax(logits/T + g(pos, i))`
+    /// with the noise seeded by the *position*, so the cached and the
+    /// recompute decode paths draw identical noise and the equivalence
+    /// test compares real streams rather than a collapsed greedy fixpoint.
+    fn sample(&self, h_row: &[f32], pos: usize) -> Result<i32> {
+        let logits = self
+            .rt
+            .get("logits_one")?
+            .run(&[TensorView::F32(h_row.to_vec())])?
+            .remove(0)
+            .into_f32()?;
+        let mut rng =
+            crate::util::rng::Pcg32::new(0x6_0D1_CE ^ (pos as u64) << 8);
+        let temp = 1.0f64;
+        let mut best = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            let u = rng.gen_f64().max(1e-12);
+            let gumbel = -(-u.ln()).ln();
+            let score = v as f64 / temp + gumbel;
+            if score > best_v {
+                best_v = score;
+                best = i;
+            }
+        }
+        Ok(best as i32)
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving coordinator (L3 runtime path): the functional model engine with
+//! KV + GO cache state, and a threaded round-robin batching server.
+
+pub mod engine;
+pub mod server;
+
+pub use engine::{DecodeMode, GenerationResult, ModelEngine, Session};
+pub use server::{Request, Response, Server};

@@ -1,0 +1,194 @@
+//! Threaded serving loop: a router thread owns the [`ModelEngine`] (the
+//! PJRT client is single-owner) and interleaves live sessions round-robin,
+//! one decode step per session per cycle — continuous batching in the
+//! vLLM-router sense, sized for the single-chip simulator testbed.
+//!
+//! (The image ships no tokio; the event loop is a plain mpsc channel +
+//! worker thread, which for a single-device engine is the same topology a
+//! tokio `spawn_blocking` worker would have.)
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{DecodeMode, ModelEngine, Session};
+use crate::runtime::Runtime;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// time from submit to completion
+    pub latency_us: f64,
+    /// time from submit to first generated token
+    pub ttft_us: f64,
+}
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+struct Live {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    session: Session,
+    next: i32,
+    tokens: Vec<i32>,
+    submitted: Instant,
+    first_token: Option<Instant>,
+}
+
+/// Handle to the router thread.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the router thread; the engine (and its PJRT client, which is
+    /// not `Send`) is constructed *inside* the thread from the artifacts
+    /// directory.  Blocks until compilation finished or failed.
+    pub fn spawn(artifacts_dir: PathBuf) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let handle = std::thread::spawn(move || {
+            let engine = match Runtime::load(&artifacts_dir) {
+                Ok(rt) => {
+                    let platform = rt.platform();
+                    // serving always decodes through the sparse-gather MoE
+                    // (§Perf L2-1)
+                    let engine = ModelEngine::new(rt).with_sparse_moe(true);
+                    let _ = ready_tx.send(Ok(platform));
+                    engine
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            run_loop(engine, rx);
+        });
+        match ready_rx.recv() {
+            Ok(Ok(_platform)) => Ok(Server { tx, handle: Some(handle) }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(anyhow!("router thread died during startup")),
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .expect("router thread alive");
+        rx
+    }
+
+    /// Submit-and-wait convenience.
+    pub fn generate(&self, id: u64, prompt: Vec<i32>, gen_len: usize)
+        -> Result<Response> {
+        let rx = self.submit(Request { id, prompt, gen_len });
+        Ok(rx.recv()?)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(engine: ModelEngine, rx: mpsc::Receiver<Msg>) {
+    let mut live: VecDeque<Live> = VecDeque::new();
+    loop {
+        // Admit all pending requests; block only when idle.
+        loop {
+            let msg = if live.is_empty() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            };
+            match msg {
+                Msg::Shutdown => return,
+                Msg::Submit(req, reply) => {
+                    let submitted = Instant::now();
+                    match engine.prefill(&req.prompt) {
+                        Ok((session, next)) => live.push_back(Live {
+                            req,
+                            reply,
+                            session,
+                            next,
+                            tokens: Vec::new(),
+                            submitted,
+                            first_token: None,
+                        }),
+                        Err(e) => {
+                            eprintln!("prefill failed for {}: {e}", req.id);
+                        }
+                    }
+                }
+            }
+        }
+
+        // One decode step per live session (round-robin batching).
+        let mut still_live = VecDeque::new();
+        while let Some(mut l) = live.pop_front() {
+            l.tokens.push(l.next);
+            l.first_token.get_or_insert_with(Instant::now);
+            let done = l.tokens.len() >= l.req.gen_len
+                || l.session.pos >= engine.model.max_seq;
+            if done {
+                let now = Instant::now();
+                let resp = Response {
+                    id: l.req.id,
+                    tokens: std::mem::take(&mut l.tokens),
+                    latency_us: now
+                        .duration_since(l.submitted)
+                        .as_secs_f64()
+                        * 1e6,
+                    ttft_us: l
+                        .first_token
+                        .unwrap()
+                        .duration_since(l.submitted)
+                        .as_secs_f64()
+                        * 1e6,
+                };
+                let _ = l.reply.send(resp);
+                continue;
+            }
+            match engine.decode_cached(&mut l.session, l.next) {
+                Ok(next) => {
+                    l.next = next;
+                    still_live.push_back(l);
+                }
+                Err(e) => eprintln!("decode failed for {}: {e}", l.req.id),
+            }
+        }
+        live = still_live;
+        let _ = DecodeMode::Cached; // the serving path is always cached
+    }
+}

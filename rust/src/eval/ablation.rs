@@ -1,0 +1,321 @@
+//! Ablation studies for the design choices DESIGN.md calls out — beyond
+//! the paper's own figures:
+//!
+//! * **GO-capacity sweep** — shrink the score cache below the prefill
+//!   capacity and measure routing agreement with the full router plus the
+//!   DRAM traffic saved (the accuracy/storage knob of §III-C);
+//! * **broadcast-bus ablation** — recount Algorithm 1's transfers with the
+//!   shared bus disabled, isolating how much of the reschedule win is
+//!   alignment vs local latching;
+//! * **DRAM-bandwidth sensitivity** — how Fig. 4's headline ratios move
+//!   with the cache-stream bandwidth;
+//! * **adversarial grouping** — the worst-case pairing as a lower bound,
+//!   showing what the sorted heuristic protects against;
+//! * **noise sweep** — routing-decision flip rate vs analog noise level
+//!   (the paper's future-work axis, `hw::noise`).
+
+use crate::cache::GoCache;
+use crate::config::{
+    GroupingPolicy, HardwareConfig, MoeModelConfig, RoutingMode,
+    SchedulePolicy, SimConfig,
+};
+use crate::grouping::Grouping;
+use crate::hw::noise::NoiseModel;
+use crate::moe::gate::expert_choice_route;
+use crate::moe::TraceGenerator;
+use crate::sched;
+use crate::sim::Simulator;
+use crate::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// GO capacity sweep
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct CapacityRow {
+    pub capacity: usize,
+    /// fraction of the full-capacity routing's total gate mass still
+    /// served at this capacity (a shrunken top-k' keeps the *heaviest*
+    /// selections, so mass coverage decays much slower than k'/k — the
+    /// curve that justifies shrinking the 512 KB output cache)
+    pub gate_mass_coverage: f64,
+    /// static output-cache bytes at this capacity
+    pub cache_bytes: u64,
+}
+
+pub fn go_capacity_sweep(full_cap: usize, tokens: usize, seed: u64)
+    -> Vec<CapacityRow> {
+    let e = 16;
+    let d = 4096;
+    let mut rng = Pcg32::new(seed);
+    let scores: Vec<f32> =
+        (0..tokens * e).map(|_| rng.gen_normal() as f32).collect();
+    let reference = expert_choice_route(&scores, tokens, e, full_cap, None);
+
+    (1..=full_cap)
+        .map(|cap| {
+            // stream through a cache of this capacity
+            let prefix = cap.max(1);
+            let pre =
+                expert_choice_route(&scores[..prefix * e], prefix, e, cap,
+                                    None);
+            let mut cache = GoCache::new(e, cap, 0);
+            cache.seed_from_routing(&pre);
+            for t in prefix..tokens {
+                cache.update_scores(t, &scores[t * e..(t + 1) * e]);
+            }
+            // gate-mass coverage against the full-capacity reference
+            let mut kept = 0f64;
+            let mut total = 0f64;
+            for x in 0..e {
+                let got = cache.selected_tokens(x);
+                for t in reference.choices.tokens_of(x) {
+                    let w = reference.gate(t, x) as f64;
+                    total += w;
+                    if got.contains(&t) {
+                        kept += w;
+                    }
+                }
+            }
+            CapacityRow {
+                capacity: cap,
+                gate_mass_coverage: kept / total,
+                cache_bytes: GoCache::output_cache_bytes(cap, e, d),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Broadcast-bus ablation
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct BusRow {
+    pub policy: &'static str,
+    pub transfers_bus: usize,
+    pub transfers_no_bus: usize,
+}
+
+pub fn bus_ablation(tokens: usize, seed: u64) -> Vec<BusRow> {
+    let mut gen = TraceGenerator::new(16, seed);
+    let choices = gen.token_choice_zipf(tokens, 4, 0.35);
+    let grouping = Grouping::uniform(16, 2, seed);
+    [("tokenwise", SchedulePolicy::TokenWise),
+     ("compact", SchedulePolicy::Compact),
+     ("reschedule", SchedulePolicy::Reschedule)]
+        .into_iter()
+        .map(|(name, p)| {
+            let s = sched::build(&choices, &grouping, p);
+            BusRow {
+                policy: name,
+                transfers_bus: s.transfers(),
+                transfers_no_bus: s.transfers_local_only(),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// DRAM-bandwidth sensitivity of the Fig. 4 headline
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct BwRow {
+    pub bytes_per_ns: f64,
+    pub kvgo_latency_x: f64,
+}
+
+pub fn dram_bw_sensitivity(gen_len: usize) -> Vec<BwRow> {
+    [2.0, 5.94, 12.8, 25.6, 102.4]
+        .into_iter()
+        .map(|bw| {
+            let run = |kv: bool, go: bool| {
+                let mut hw = HardwareConfig::paper();
+                hw.dram.bytes_per_ns = bw;
+                let mut cfg = SimConfig::baseline();
+                cfg.cache.kv = kv;
+                cfg.cache.go = go;
+                cfg.gen_len = gen_len;
+                Simulator::new(MoeModelConfig::llama_moe_4_16(), hw, cfg)
+                    .run()
+                    .decode_total()
+                    .latency_ns
+            };
+            BwRow {
+                bytes_per_ns: bw,
+                kvgo_latency_x: run(false, false) / run(true, true),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial grouping
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct GroupingRow {
+    pub policy: String,
+    pub prefill_moe_ns: f64,
+}
+
+pub fn grouping_ablation(seed: u64) -> Vec<GroupingRow> {
+    let run = |label: &str, grouping: Grouping| {
+        let mut cfg = SimConfig::named(GroupingPolicy::Uniform, 2,
+                                       SchedulePolicy::Reschedule);
+        cfg.routing = RoutingMode::TokenChoice;
+        cfg.skew = 0.8;
+        cfg.gen_len = 0;
+        cfg.seed = seed;
+        let sim = Simulator::paper(cfg);
+        let scores = sim.workload_scores();
+        let routing = sim.route_batch(&scores, 32);
+        let m = sim.prefill(&routing, &grouping);
+        GroupingRow {
+            policy: label.to_string(),
+            prefill_moe_ns: m.breakdown.moe_ns,
+        }
+    };
+
+    // derive loads once (same calibration stream the simulator uses)
+    let mut gen = TraceGenerator::new(16, seed ^ 0xCA11B5A7E);
+    let loads = gen.calibration_loads(8, 64, 4, 0.8);
+    let mut order: Vec<usize> = (0..16).collect();
+    order.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+    // adversarial: heaviest with heaviest
+    let adversarial: Vec<Vec<usize>> =
+        order.chunks(2).map(|c| c.to_vec()).collect();
+
+    vec![
+        run("sorted", Grouping::sorted(&loads, 2)),
+        run("uniform", Grouping::uniform(16, 2, seed)),
+        run("adversarial", Grouping::custom(adversarial)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Noise sweep (future-work extension)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct NoiseRow {
+    pub sigma_adc_steps: f64,
+    pub snr_db: f64,
+    pub flip_rate: f64,
+}
+
+pub fn noise_sweep() -> Vec<NoiseRow> {
+    [0.0, 0.2, 0.4, 1.0, 2.0]
+        .into_iter()
+        .map(|sigma| {
+            let n = NoiseModel {
+                sigma0_adc_steps: sigma,
+                drift_rate: 0.0,
+                t_hours: 0.0,
+            };
+            NoiseRow {
+                sigma_adc_steps: sigma,
+                snr_db: n.expected_snr_db(42.0),
+                flip_rate: n.routing_flip_rate(32, 16, 8, 0.05, 6, 11),
+            }
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut out = String::from("Ablations (extensions beyond the paper)\n");
+
+    out += "\nGO capacity sweep (gate-mass coverage vs full capacity):\n";
+    for r in go_capacity_sweep(8, 96, 3) {
+        out += &format!("  k={:<2} coverage {:>6.1}%  cache {:>7} B\n",
+                        r.capacity, r.gate_mass_coverage * 100.0,
+                        r.cache_bytes);
+    }
+
+    out += "\nbroadcast-bus ablation (transfers, 32-token prefill):\n";
+    for r in bus_ablation(32, 5) {
+        out += &format!("  {:<10} with bus {:>4}   without {:>4}\n",
+                        r.policy, r.transfers_bus, r.transfers_no_bus);
+    }
+
+    out += "\nDRAM bandwidth sensitivity (KVGO latency win @8 tokens):\n";
+    for r in dram_bw_sensitivity(8) {
+        out += &format!("  {:>6.1} B/ns -> {:.2}x\n", r.bytes_per_ns,
+                        r.kvgo_latency_x);
+    }
+
+    out += "\ngrouping ablation (prefill MoE ns):\n";
+    for r in grouping_ablation(7) {
+        out += &format!("  {:<12} {:>8.0} ns\n", r.policy, r.prefill_moe_ns);
+    }
+
+    out += "\nanalog-noise sweep (routing flips, paper future work):\n";
+    for r in noise_sweep() {
+        out += &format!("  sigma {:>4.1} steps  snr {:>6.1} dB  flips \
+                         {:>6.2}%\n",
+                        r.sigma_adc_steps, r.snr_db, r.flip_rate * 100.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_sweep_concave_coverage() {
+        let rows = go_capacity_sweep(8, 64, 1);
+        assert_eq!(rows.len(), 8);
+        assert!(rows.last().unwrap().gate_mass_coverage > 0.999,
+                "full capacity agrees exactly");
+        for w in rows.windows(2) {
+            assert!(w[0].gate_mass_coverage <= w[1].gate_mass_coverage);
+        }
+        // heaviest-first: half the capacity keeps well over half the mass
+        assert!(rows[3].gate_mass_coverage > 0.5);
+        assert!(rows[0].cache_bytes < rows[7].cache_bytes);
+    }
+
+    #[test]
+    fn bus_matters_most_for_reschedule() {
+        let rows = bus_ablation(32, 2);
+        let by = |p: &str| rows.iter().find(|r| r.policy == p).unwrap();
+        // without the bus, aligned broadcasts degrade to per-lane fetches
+        assert!(by("reschedule").transfers_no_bus
+                >= by("reschedule").transfers_bus);
+        // tokenwise relies on the bus the most (every token shared)
+        assert!(by("tokenwise").transfers_no_bus
+                > by("tokenwise").transfers_bus);
+    }
+
+    #[test]
+    fn faster_dram_grows_the_win() {
+        let rows = dram_bw_sensitivity(8);
+        assert!(rows.last().unwrap().kvgo_latency_x
+                > rows.first().unwrap().kvgo_latency_x);
+    }
+
+    #[test]
+    fn sorted_beats_adversarial() {
+        let rows = grouping_ablation(3);
+        let by = |p: &str| {
+            rows.iter().find(|r| r.policy == p).unwrap().prefill_moe_ns
+        };
+        assert!(by("sorted") <= by("adversarial"));
+    }
+
+    #[test]
+    fn noise_sweep_shapes() {
+        let rows = noise_sweep();
+        assert_eq!(rows[0].flip_rate, 0.0);
+        assert!(rows.last().unwrap().flip_rate > rows[1].flip_rate);
+    }
+
+    #[test]
+    fn renders() {
+        let s = render();
+        assert!(s.contains("GO capacity"));
+        assert!(s.contains("noise"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Fig. 4 regenerators — the generation-stage cache study.
+//!
+//! * **Fig. 4(a)**: latency (and energy) of generating 8 tokens under
+//!   {no cache, KV, GO, KVGO}, split into attention vs linear (gate+MoE)
+//!   parts.  Headline claims: KVGO improves latency 4.2x and energy 10.1x
+//!   over no-cache; 2.7x / 10.1x over KV-only.
+//! * **Fig. 4(b)**: generate-stage latency vs generated length (8..64) per
+//!   cache variant; the KVGO curve grows linearly while the baseline
+//!   explodes (6.7x / 14.1x at 64 tokens).
+
+use crate::config::{CachePolicy, SimConfig};
+use crate::sim::Simulator;
+
+pub const CACHE_VARIANTS: [CachePolicy; 4] = [
+    CachePolicy::NONE,
+    CachePolicy::KV,
+    CachePolicy::GO,
+    CachePolicy::KVGO,
+];
+
+/// One bar of Fig. 4(a): decode-stage totals for a cache variant.
+#[derive(Debug, Clone)]
+pub struct Fig4aRow {
+    pub cache: &'static str,
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub attn_ns: f64,
+    pub linear_ns: f64,
+    pub dram_ns: f64,
+}
+
+pub fn fig4a(gen_len: usize) -> Vec<Fig4aRow> {
+    CACHE_VARIANTS
+        .iter()
+        .map(|&cache| {
+            let mut cfg = SimConfig::baseline();
+            cfg.cache = cache;
+            cfg.gen_len = gen_len;
+            let r = Simulator::paper(cfg).run();
+            let d = r.decode_total();
+            Fig4aRow {
+                cache: cache.label(),
+                latency_ns: d.latency_ns,
+                energy_nj: d.energy_nj,
+                attn_ns: d.breakdown.attn_ns,
+                linear_ns: d.breakdown.gate_ns + d.breakdown.moe_ns,
+                dram_ns: d.breakdown.dram_ns,
+            }
+        })
+        .collect()
+}
+
+/// One series of Fig. 4(b): decode latency at each generated length.
+#[derive(Debug, Clone)]
+pub struct Fig4bSeries {
+    pub cache: &'static str,
+    pub lengths: Vec<usize>,
+    pub latency_ns: Vec<f64>,
+}
+
+pub fn fig4b(lengths: &[usize]) -> Vec<Fig4bSeries> {
+    CACHE_VARIANTS
+        .iter()
+        .map(|&cache| {
+            let latency = lengths
+                .iter()
+                .map(|&n| {
+                    let mut cfg = SimConfig::baseline();
+                    cfg.cache = cache;
+                    cfg.gen_len = n;
+                    Simulator::paper(cfg).run().decode_total().latency_ns
+                })
+                .collect();
+            Fig4bSeries {
+                cache: cache.label(),
+                lengths: lengths.to_vec(),
+                latency_ns: latency,
+            }
+        })
+        .collect()
+}
+
+/// The paper's headline improvement ratios (no-cache vs KVGO).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheImprovement {
+    pub latency_x: f64,
+    pub energy_x: f64,
+    /// vs KV-only
+    pub latency_vs_kv_x: f64,
+    pub energy_vs_kv_x: f64,
+}
+
+pub fn improvement(gen_len: usize) -> CacheImprovement {
+    let rows = fig4a(gen_len);
+    let by = |label: &str| {
+        rows.iter().find(|r| r.cache == label).expect("variant missing")
+    };
+    let none = by("no cache");
+    let kv = by("KV cache");
+    let kvgo = by("KVGO cache");
+    CacheImprovement {
+        latency_x: none.latency_ns / kvgo.latency_ns,
+        energy_x: none.energy_nj / kvgo.energy_nj,
+        latency_vs_kv_x: kv.latency_ns / kvgo.latency_ns,
+        energy_vs_kv_x: kv.energy_nj / kvgo.energy_nj,
+    }
+}
+
+/// Render Fig. 4(a) as a text table (CLI + EXPERIMENTS.md).
+pub fn render_fig4a(gen_len: usize) -> String {
+    let rows = fig4a(gen_len);
+    let mut out = format!(
+        "Fig 4(a) — generate {gen_len} tokens (paper: KVGO 4.2x latency, \
+         10.1x energy vs no cache at 8)\n\
+         {:<12} {:>14} {:>14} {:>12} {:>12} {:>10}\n",
+        "cache", "latency(ns)", "energy(nJ)", "attn(ns)", "linear(ns)",
+        "dram(ns)"
+    );
+    for r in &rows {
+        out += &format!(
+            "{:<12} {:>14.0} {:>14.0} {:>12.0} {:>12.0} {:>10.0}\n",
+            r.cache, r.latency_ns, r.energy_nj, r.attn_ns, r.linear_ns,
+            r.dram_ns
+        );
+    }
+    let imp = improvement(gen_len);
+    out += &format!(
+        "KVGO vs none: {:.1}x latency, {:.1}x energy;  vs KV: {:.1}x / {:.1}x\n",
+        imp.latency_x, imp.energy_x, imp.latency_vs_kv_x, imp.energy_vs_kv_x
+    );
+    out
+}
+
+/// Render Fig. 4(b).
+pub fn render_fig4b() -> String {
+    let lengths = [8usize, 16, 24, 32, 40, 48, 56, 64];
+    let series = fig4b(&lengths);
+    let mut out = String::from(
+        "Fig 4(b) — decode latency (ns) vs generated length\n",
+    );
+    out += &format!("{:<12}", "cache");
+    for l in lengths {
+        out += &format!(" {l:>12}");
+    }
+    out.push('\n');
+    for s in &series {
+        out += &format!("{:<12}", s.cache);
+        for v in &s.latency_ns {
+            out += &format!(" {v:>12.0}");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4a_has_all_variants() {
+        let rows = fig4a(8);
+        assert_eq!(rows.len(), 4);
+        let labels: Vec<&str> = rows.iter().map(|r| r.cache).collect();
+        assert!(labels.contains(&"no cache") && labels.contains(&"KVGO cache"));
+    }
+
+    #[test]
+    fn improvement_grows_with_length() {
+        let i8 = improvement(8);
+        let i64 = improvement(64);
+        assert!(i8.latency_x > 1.0 && i8.energy_x > 1.0);
+        assert!(i64.latency_x > i8.latency_x);
+        assert!(i64.energy_x > i8.energy_x);
+    }
+
+    #[test]
+    fn fig4b_series_monotone_in_length() {
+        for s in fig4b(&[8, 32, 64]) {
+            assert!(s.latency_ns[0] < s.latency_ns[1]);
+            assert!(s.latency_ns[1] < s.latency_ns[2]);
+        }
+    }
+
+    #[test]
+    fn kv_reduces_attention_not_energy_much() {
+        // paper: "KV cache reduces attention latency but does not benefit
+        // from energy because DRAM costs extra energy"
+        let rows = fig4a(8);
+        let none = rows.iter().find(|r| r.cache == "no cache").unwrap();
+        let kv = rows.iter().find(|r| r.cache == "KV cache").unwrap();
+        assert!(kv.attn_ns < none.attn_ns);
+        let energy_gain = none.energy_nj / kv.energy_nj;
+        assert!(energy_gain < 2.0,
+                "KV alone must not win much energy: {energy_gain}");
+    }
+
+    #[test]
+    fn renders() {
+        assert!(render_fig4a(8).contains("KVGO"));
+        assert!(render_fig4b().contains("no cache"));
+    }
+}

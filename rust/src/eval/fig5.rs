@@ -1,0 +1,229 @@
+//! Fig. 5 regenerator — the grouping × scheduling study over the prefill
+//! stage: {baseline; U/S × group 2/4 × C/O} with latency, energy and area
+//! efficiency (GOPS/mm²).  Headline claim: S2O improves area efficiency by
+//! up to 2.2x over the baseline; larger groups cut area but add contention
+//! (g=2 wins at HERMES\'s 40 % crossbar-area ratio).
+//!
+//! Scope note: the figure reports the **MoE linear part** of prefill —
+//! the quantity the grouping/scheduling methods act on (the digital-MHA
+//! time is identical across all nine bars and would mask the effect; the
+//! paper\'s §IV-A area scope is likewise "only the MoE linear cores").
+//! Table I keeps whole-inference totals.
+//!
+//! Workload note (DESIGN.md §5/E3): the grouping study needs load variance
+//! to differentiate U from S, so it runs the model\'s native token-choice
+//! router over the skewed C4-substitute trace; the cache study (Fig. 4)
+//! runs expert-choice, whose caches are the paper\'s §III-C contribution.
+
+use crate::config::{
+    GroupingPolicy, RoutingMode, SchedulePolicy, SimConfig,
+};
+use crate::sim::Simulator;
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub label: String,
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub transfers: u64,
+    pub area_mm2: f64,
+    pub gops_per_mm2: f64,
+}
+
+/// The Fig. 5 sweep configurations, in the paper's bar order.
+pub fn configs() -> Vec<SimConfig> {
+    let mut out = vec![fig5_cfg(SimConfig::baseline())];
+    for group_size in [2usize, 4] {
+        for grouping in [GroupingPolicy::Uniform, GroupingPolicy::Sorted] {
+            for schedule in
+                [SchedulePolicy::Compact, SchedulePolicy::Reschedule]
+            {
+                out.push(fig5_cfg(SimConfig::named(
+                    grouping, group_size, schedule,
+                )));
+            }
+        }
+    }
+    out
+}
+
+fn fig5_cfg(mut cfg: SimConfig) -> SimConfig {
+    cfg.routing = RoutingMode::TokenChoice;
+    cfg.skew = 0.35;
+    cfg.gen_len = 0; // prefill-stage study
+    cfg
+}
+
+pub fn fig5() -> Vec<Fig5Row> {
+    fig5_with(|c| c)
+}
+
+/// Workload seeds averaged per bar (single-trace makespans are noisy; the
+/// paper likewise samples several C4 batches).
+pub const FIG5_SEEDS: u64 = 8;
+
+/// Sweep with a config hook (the ratio-sweep reuses this with ISAAC-style
+/// hardware).  Each bar averages `FIG5_SEEDS` workload seeds.
+pub fn fig5_with<F: Fn(SimConfig) -> SimConfig>(hook: F) -> Vec<Fig5Row> {
+    configs()
+        .into_iter()
+        .map(|cfg| {
+            let cfg = hook(cfg);
+            let mut acc: Option<Fig5Row> = None;
+            for s in 0..FIG5_SEEDS {
+                let mut c = cfg.clone();
+                c.seed = cfg.seed.wrapping_add(s * 7919);
+                let row = row_for(&Simulator::paper(c));
+                acc = Some(match acc {
+                    None => row,
+                    Some(mut a) => {
+                        a.latency_ns += row.latency_ns;
+                        a.energy_nj += row.energy_nj;
+                        a.transfers += row.transfers;
+                        a.gops_per_mm2 += row.gops_per_mm2;
+                        a
+                    }
+                });
+            }
+            let mut r = acc.unwrap();
+            let n = FIG5_SEEDS as f64;
+            r.latency_ns /= n;
+            r.energy_nj /= n;
+            r.transfers = (r.transfers as f64 / n).round() as u64;
+            r.gops_per_mm2 /= n;
+            r
+        })
+        .collect()
+}
+
+pub fn row_for(sim: &Simulator) -> Fig5Row {
+    let r = sim.run();
+    let t = r.total();
+    // MoE-part ops: PIM activations x crossbar MACs x 2
+    let moe_ops = 2.0
+        * (t.activations * sim.hw.macs_per_activation()) as f64;
+    // linear-part energy includes the activation-broadcast cost
+    let moe_nj = t.breakdown.moe_nj;
+    Fig5Row {
+        label: r.label.clone(),
+        latency_ns: t.breakdown.moe_ns,
+        energy_nj: moe_nj,
+        transfers: t.transfers,
+        area_mm2: r.moe_area_mm2,
+        gops_per_mm2: moe_ops / t.breakdown.moe_ns / r.moe_area_mm2,
+    }
+}
+
+/// Area-efficiency improvement of the best configuration over baseline
+/// (paper: up to 2.2x, achieved by S2O).
+pub fn best_improvement(rows: &[Fig5Row]) -> (String, f64) {
+    let base = rows
+        .iter()
+        .find(|r| r.label == "base")
+        .expect("baseline row present");
+    rows.iter()
+        .map(|r| (r.label.clone(), r.gops_per_mm2 / base.gops_per_mm2))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+pub fn render() -> String {
+    let rows = fig5();
+    let mut out = format!(
+        "Fig 5 — grouping x scheduling, 32-token prefill, MoE linear part \
+         (paper: S2O up to 2.2x area efficiency)\n\
+         {:<6} {:>12} {:>12} {:>10} {:>10} {:>12} {:>8}\n",
+        "cfg", "latency(ns)", "energy(nJ)", "transfers", "area(mm2)",
+        "GOPS/mm2", "vs base"
+    );
+    let base_eff = rows[0].gops_per_mm2;
+    for r in &rows {
+        out += &format!(
+            "{:<6} {:>12.0} {:>12.0} {:>10} {:>10.1} {:>12.3} {:>7.2}x\n",
+            r.label, r.latency_ns, r.energy_nj, r.transfers, r.area_mm2,
+            r.gops_per_mm2, r.gops_per_mm2 / base_eff
+        );
+    }
+    let (label, x) = best_improvement(&rows);
+    out += &format!("best: {label} at {x:.2}x baseline area efficiency\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by<'a>(rows: &'a [Fig5Row], label: &str) -> &'a Fig5Row {
+        rows.iter().find(|r| r.label == label).expect(label)
+    }
+
+    #[test]
+    fn has_all_nine_bars() {
+        let rows = fig5();
+        assert_eq!(rows.len(), 9);
+        for l in ["base", "U2C", "U2O", "S2C", "S2O", "U4C", "U4O", "S4C",
+                  "S4O"] {
+            assert!(rows.iter().any(|r| r.label == l), "missing {l}");
+        }
+    }
+
+    #[test]
+    fn sharing_reduces_area() {
+        let rows = fig5();
+        assert!(by(&rows, "S2O").area_mm2 < by(&rows, "base").area_mm2);
+        assert!(by(&rows, "S4O").area_mm2 < by(&rows, "S2O").area_mm2);
+    }
+
+    #[test]
+    fn reschedule_never_worse_than_compact() {
+        let rows = fig5();
+        for (c, o) in [("U2C", "U2O"), ("S2C", "S2O"), ("U4C", "U4O"),
+                       ("S4C", "S4O")] {
+            assert!(by(&rows, o).transfers <= by(&rows, c).transfers);
+            assert!(by(&rows, o).energy_nj <= by(&rows, c).energy_nj);
+            assert!(
+                (by(&rows, o).latency_ns - by(&rows, c).latency_ns).abs()
+                    < 1e-6,
+                "O keeps C latency"
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_not_worse_than_uniform() {
+        let rows = fig5();
+        for (u, s) in [("U2O", "S2O"), ("U4O", "S4O")] {
+            assert!(
+                by(&rows, s).latency_ns <= by(&rows, u).latency_ns * 1.001,
+                "{s} vs {u}"
+            );
+        }
+    }
+
+    #[test]
+    fn best_config_improves_area_efficiency() {
+        // paper: "up to 2.2x"; our calibrated reproduction lands ~2x
+        let rows = fig5();
+        let (label, x) = best_improvement(&rows);
+        assert!(x > 1.8, "sharing must pay off in GOPS/mm2, got {x:.2}");
+        assert!(label.starts_with("S2"), "g=2 sorted wins at 40% ratio: {label}");
+    }
+
+    #[test]
+    fn group2_beats_group4_at_hermes_ratio() {
+        // §IV-B: "a group of two experts gained the best area efficiency
+        // ... the crossbar area accounts for 40% of the total area"
+        let rows = fig5();
+        assert!(by(&rows, "S2O").gops_per_mm2 > by(&rows, "S4O").gops_per_mm2);
+    }
+
+    #[test]
+    fn compact_reduces_latency_vs_tokenwise_baseline() {
+        // §IV-B: "the compact schedule reduces the latency"
+        let rows = fig5();
+        for l in ["U2C", "S2C"] {
+            assert!(by(&rows, l).latency_ns < by(&rows, "base").latency_ns
+                    * 1.01, "{l}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: one regenerator per paper artefact (Fig. 4a/4b,
+//! Fig. 5, Table I, the crossbar-area-ratio sweep).  Each module exposes
+//! structured rows (consumed by benches/tests) and a `render` function
+//! (consumed by the CLI and EXPERIMENTS.md).
+
+pub mod ablation;
+pub mod calibration;
+pub mod fig4;
+pub mod fig5;
+pub mod sweep;
+pub mod table1;

@@ -1,0 +1,208 @@
+//! Expert grouping for peripheral sharing (§III-B).
+//!
+//! A [`Grouping`] partitions the E experts into E/g groups of g; every
+//! crossbar of every expert in a group shares that group's peripheral set
+//! (ADC column).  Two deployment-time heuristics from the paper:
+//!
+//! * **uniform** ("U"): random assignment;
+//! * **workload-sorted** ("S"): experts sorted by traced load, then paired
+//!   lowest-with-highest (snake/zigzag fill for g > 2) so every group's
+//!   expected total load is near the mean.
+
+pub mod stats;
+
+use crate::util::rng::Pcg32;
+
+/// A partition of experts into equal-size peripheral-sharing groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grouping {
+    /// groups[i] = expert ids in group i (sorted ascending)
+    pub groups: Vec<Vec<usize>>,
+    /// group_of[e] = index of e's group
+    pub group_of: Vec<usize>,
+}
+
+impl Grouping {
+    fn from_groups(mut groups: Vec<Vec<usize>>, n_experts: usize) -> Self {
+        for g in groups.iter_mut() {
+            g.sort_unstable();
+        }
+        let mut group_of = vec![usize::MAX; n_experts];
+        for (i, g) in groups.iter().enumerate() {
+            for &e in g {
+                group_of[e] = i;
+            }
+        }
+        assert!(
+            group_of.iter().all(|&g| g != usize::MAX),
+            "every expert must be grouped"
+        );
+        Grouping { groups, group_of }
+    }
+
+    /// Explicit grouping from given expert sets (must partition 0..E).
+    pub fn custom(groups: Vec<Vec<usize>>) -> Self {
+        let n: usize = groups.iter().map(Vec::len).sum();
+        Self::from_groups(groups, n)
+    }
+
+    /// Identity grouping: each expert alone (exclusive peripherals — the
+    /// paper's baseline).
+    pub fn singleton(n_experts: usize) -> Self {
+        Self::from_groups((0..n_experts).map(|e| vec![e]).collect(), n_experts)
+    }
+
+    /// Uniform/random grouping ("U").
+    pub fn uniform(n_experts: usize, group_size: usize, seed: u64) -> Self {
+        assert!(group_size >= 1 && n_experts % group_size == 0,
+                "E={n_experts} not divisible by g={group_size}");
+        let mut order: Vec<usize> = (0..n_experts).collect();
+        Pcg32::new(seed).shuffle(&mut order);
+        let groups = order
+            .chunks(group_size)
+            .map(|c| c.to_vec())
+            .collect();
+        Self::from_groups(groups, n_experts)
+    }
+
+    /// Workload-sorted grouping ("S"): sort experts by traced load, then
+    /// fill groups by repeatedly taking one from the light end and one from
+    /// the heavy end (g=2 == the paper's lowest-with-highest pairing; for
+    /// g=4 each group takes two light + two heavy).
+    pub fn sorted(loads: &[f64], group_size: usize) -> Self {
+        let n = loads.len();
+        assert!(group_size >= 1 && n % group_size == 0,
+                "E={n} not divisible by g={group_size}");
+        let mut order: Vec<usize> = (0..n).collect();
+        // stable sort by load ascending, ties by expert id
+        order.sort_by(|&a, &b| {
+            loads[a].partial_cmp(&loads[b]).unwrap().then(a.cmp(&b))
+        });
+        let n_groups = n / group_size;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        let (mut lo, mut hi) = (0usize, n - 1);
+        let mut take_lo = true;
+        // deal alternately from both ends, round-robin over groups so each
+        // group receives matched light/heavy pairs
+        'outer: loop {
+            for g in groups.iter_mut() {
+                if lo > hi {
+                    break 'outer;
+                }
+                if take_lo {
+                    g.push(order[lo]);
+                    lo += 1;
+                } else {
+                    g.push(order[hi]);
+                    hi = hi.wrapping_sub(1);
+                    if hi == usize::MAX {
+                        break 'outer;
+                    }
+                }
+            }
+            take_lo = !take_lo;
+        }
+        Self::from_groups(groups, n)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.groups.first().map_or(1, Vec::len)
+    }
+
+    /// Expected per-group total load under `loads`.
+    pub fn group_loads(&self, loads: &[f64]) -> Vec<f64> {
+        self.groups
+            .iter()
+            .map(|g| g.iter().map(|&e| loads[e]).sum())
+            .collect()
+    }
+
+    /// Max/mean group-load ratio — the imbalance metric the sorted policy
+    /// minimises (1.0 == perfectly balanced).
+    pub fn imbalance(&self, loads: &[f64]) -> f64 {
+        let gl = self.group_loads(loads);
+        let max = gl.iter().copied().fold(f64::MIN, f64::max);
+        let mean = gl.iter().sum::<f64>() / gl.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_shapes() {
+        let g = Grouping::singleton(4);
+        assert_eq!(g.n_groups(), 4);
+        assert_eq!(g.group_size(), 1);
+        assert_eq!(g.group_of, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn uniform_is_partition() {
+        let g = Grouping::uniform(16, 4, 3);
+        assert_eq!(g.n_groups(), 4);
+        let mut all: Vec<usize> = g.groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+        for (e, &gi) in g.group_of.iter().enumerate() {
+            assert!(g.groups[gi].contains(&e));
+        }
+    }
+
+    #[test]
+    fn uniform_seed_determinism() {
+        assert_eq!(Grouping::uniform(16, 2, 5), Grouping::uniform(16, 2, 5));
+        assert_ne!(Grouping::uniform(16, 2, 5), Grouping::uniform(16, 2, 6));
+    }
+
+    #[test]
+    fn sorted_pairs_light_with_heavy() {
+        // loads 0..7 ascending: expect pairs (0,7), (1,6), (2,5), (3,4)
+        let loads: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let g = Grouping::sorted(&loads, 2);
+        let mut pair_sums: Vec<f64> = g.group_loads(&loads);
+        pair_sums.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(pair_sums, vec![7.0; 4]);
+        assert!((g.imbalance(&loads) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sorted_beats_worst_case_grouping() {
+        // strongly skewed loads; sorted grouping must beat the adversarial
+        // "heavy-with-heavy" grouping on imbalance
+        let loads = vec![1.0, 1.0, 1.0, 1.0, 10.0, 10.0, 10.0, 10.0];
+        let sorted = Grouping::sorted(&loads, 2);
+        let adversarial = Grouping::custom(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+        );
+        assert!(sorted.imbalance(&loads) < adversarial.imbalance(&loads));
+    }
+
+    #[test]
+    fn sorted_group4_partition_valid() {
+        let loads: Vec<f64> = (0..16).map(|i| (i * i) as f64).collect();
+        let g = Grouping::sorted(&loads, 4);
+        assert_eq!(g.n_groups(), 4);
+        let mut all: Vec<usize> = g.groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+        // balanced within 2x of mean even for quadratic skew
+        assert!(g.imbalance(&loads) < 1.6, "{}", g.imbalance(&loads));
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_group_size_panics() {
+        Grouping::uniform(10, 4, 0);
+    }
+}

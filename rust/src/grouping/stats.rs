@@ -1,0 +1,60 @@
+//! Deployment-time load estimation (the "workload is traced from small
+//! samples of datasets" step of §III-B) and summary statistics shared by
+//! the grouping policies and the eval harness.
+
+use crate::moe::ChoiceMatrix;
+
+/// Per-expert loads of a single trace, as f64 (grouping works on averaged
+/// fractional loads).
+pub fn loads_of(m: &ChoiceMatrix) -> Vec<f64> {
+    m.expert_loads().into_iter().map(|l| l as f64).collect()
+}
+
+/// Average per-expert loads over several traces.
+pub fn mean_loads(traces: &[ChoiceMatrix]) -> Vec<f64> {
+    assert!(!traces.is_empty());
+    let e = traces[0].experts();
+    let mut acc = vec![0f64; e];
+    for t in traces {
+        assert_eq!(t.experts(), e, "traces must share expert count");
+        for (j, l) in t.expert_loads().into_iter().enumerate() {
+            acc[j] += l as f64;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= traces.len() as f64;
+    }
+    acc
+}
+
+/// Coefficient of variation of a load vector (0 == perfectly balanced).
+pub fn load_cv(loads: &[f64]) -> f64 {
+    let n = loads.len() as f64;
+    let mean = loads.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = loads.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ChoiceMatrix;
+
+    #[test]
+    fn loads_and_mean() {
+        let a = ChoiceMatrix::from_rows(&[vec![0], vec![0], vec![1]], 2);
+        let b = ChoiceMatrix::from_rows(&[vec![0], vec![1], vec![1]], 2);
+        assert_eq!(loads_of(&a), vec![2.0, 1.0]);
+        assert_eq!(mean_loads(&[a, b]), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn cv_zero_when_balanced() {
+        assert_eq!(load_cv(&[3.0, 3.0, 3.0]), 0.0);
+        assert!(load_cv(&[1.0, 5.0]) > 0.5);
+        assert_eq!(load_cv(&[0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Chip-area model under crossbar-level multiplexing (§III-A).
+//!
+//! Without sharing, every crossbar carries its own peripheral set (ADC
+//! column etc.): `area = N * (xbar + periph)`.  With groups of `g` experts
+//! sharing peripherals, each group of `g` corresponding crossbars keeps one
+//! peripheral set: `area = N * xbar + (N / g) * periph` — the area win that
+//! motivates the whole design, bought with the structural contention the
+//! scheduler manages.
+//!
+//! Reported area covers the MoE linear cores only, 2-D layout, matching the
+//! paper's evaluation scope (§IV-A: "we report only the MoE linear cores,
+//! excluding off-chip DRAM and the digital part").
+
+use crate::config::HardwareConfig;
+use crate::moe::LayerLayout;
+
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    hw: HardwareConfig,
+}
+
+impl AreaModel {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        AreaModel { hw: hw.clone() }
+    }
+
+    /// MoE-linear-cores area for one layer with `group_size` experts per
+    /// peripheral group, mm².
+    pub fn moe_area_mm2(&self, layout: &LayerLayout, group_size: usize)
+        -> f64 {
+        assert!(group_size >= 1);
+        assert_eq!(
+            layout.n_experts % group_size,
+            0,
+            "expert count must divide by group size"
+        );
+        let n = layout.total_xbars() as f64;
+        n * self.hw.xbar_area_mm2()
+            + (n / group_size as f64) * self.hw.periph_area_mm2()
+    }
+
+    /// Area saving factor vs the unshared baseline (>= 1).
+    pub fn saving_vs_baseline(&self, layout: &LayerLayout, group_size: usize)
+        -> f64 {
+        self.moe_area_mm2(layout, 1) / self.moe_area_mm2(layout, group_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MoeModelConfig;
+
+    fn paper_layout() -> (AreaModel, LayerLayout) {
+        let hw = HardwareConfig::paper();
+        let layout =
+            LayerLayout::new(&MoeModelConfig::llama_moe_4_16(), &hw);
+        (AreaModel::new(&hw), layout)
+    }
+
+    #[test]
+    fn baseline_area_is_full_cores() {
+        let (a, l) = paper_layout();
+        // 1536 crossbars * 0.635 mm² = 975.36 mm²
+        assert!((a.moe_area_mm2(&l, 1) - 1536.0 * 0.635).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sharing_shrinks_area_monotonically() {
+        let (a, l) = paper_layout();
+        let a1 = a.moe_area_mm2(&l, 1);
+        let a2 = a.moe_area_mm2(&l, 2);
+        let a4 = a.moe_area_mm2(&l, 4);
+        assert!(a1 > a2 && a2 > a4);
+        // g=2 removes half the peripherals: expected 1536*(0.254+0.381/2)
+        assert!((a2 - 1536.0 * (0.254 + 0.381 / 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saving_bounded_by_periph_share() {
+        let (a, l) = paper_layout();
+        // as g -> inf the saving tends to 1/xbar_ratio = 2.5x; g=4 must be
+        // below that and above g=2's saving
+        let s2 = a.saving_vs_baseline(&l, 2);
+        let s4 = a.saving_vs_baseline(&l, 4);
+        assert!(s2 > 1.0 && s4 > s2 && s4 < 2.5);
+    }
+
+    #[test]
+    fn isaac_ratio_amplifies_saving() {
+        let hw = HardwareConfig::isaac_ratio();
+        let layout = LayerLayout::new(&MoeModelConfig::llama_moe_4_16(), &hw);
+        let a = AreaModel::new(&hw);
+        // with 5% crossbar share, g=4 saving approaches 4x-ish
+        let s4 = a.saving_vs_baseline(&layout, 4);
+        assert!(s4 > 2.5, "saving {s4}");
+        assert!(s4 < 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_group_panics() {
+        let (a, l) = paper_layout();
+        a.moe_area_mm2(&l, 5);
+    }
+}

@@ -1,0 +1,117 @@
+//! Energy price list used by the simulator: PIM core activations, on-chip
+//! activation broadcasts, DRAM cache traffic, and digital-unit work — all
+//! in nanojoules, all derived from [`crate::config::HardwareConfig`].
+
+use crate::config::HardwareConfig;
+
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    hw: HardwareConfig,
+}
+
+impl EnergyModel {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        EnergyModel { hw: hw.clone() }
+    }
+
+    /// Energy of `n` core activations (MVM rounds), nJ.
+    pub fn activations_nj(&self, n: u64) -> f64 {
+        n as f64 * self.hw.core_energy_nj()
+    }
+
+    /// Energy of `n` activation-vector broadcasts of `d_model` 8-bit
+    /// elements into group DACs, nJ.
+    pub fn transfers_nj(&self, n: u64, d_model: usize) -> f64 {
+        n as f64 * d_model as f64 * self.hw.input_nj_per_byte
+    }
+
+    /// DRAM traffic energy, nJ.
+    pub fn dram_nj(&self, bytes: u64) -> f64 {
+        self.hw.dram.transfer(bytes).1
+    }
+
+    /// DRAM traffic latency, ns.
+    pub fn dram_ns(&self, bytes: u64) -> f64 {
+        self.hw.dram.transfer(bytes).0
+    }
+
+    /// Attention on the digital units: (ns, nJ) for processing `tokens`
+    /// tokens at context length `ctx` (3DCIM polynomial fit, DESIGN.md §8).
+    pub fn attention(&self, tokens: usize, ctx: usize) -> (f64, f64) {
+        let d = &self.hw.digital;
+        let t = tokens as f64;
+        let c = ctx as f64;
+        (
+            t * (d.attn_ns_per_token + d.attn_ns_per_token_ctx * c),
+            t * (d.attn_nj_per_token + d.attn_nj_per_token_ctx * c),
+        )
+    }
+
+    /// Re-processing `tokens` *past* tokens whose K/V is already cached
+    /// (the no-GO decode path must rebuild every retained token's hidden
+    /// state for the gate): the per-token constant shrinks by
+    /// `kv_reuse_factor` (projections reused), the attend term remains.
+    pub fn attention_cached_recompute(&self, tokens: usize, ctx: usize)
+        -> (f64, f64) {
+        let d = &self.hw.digital;
+        let t = tokens as f64;
+        let c = ctx as f64;
+        (
+            t * (d.kv_reuse_factor * d.attn_ns_per_token
+                + d.attn_ns_per_token_ctx * c),
+            t * (d.kv_reuse_factor * d.attn_nj_per_token
+                + d.attn_nj_per_token_ctx * c),
+        )
+    }
+
+    /// Gate MVM + routing decision for `tokens` tokens: (ns, nJ).
+    pub fn gate(&self, tokens: usize) -> (f64, f64) {
+        let d = &self.hw.digital;
+        let t = tokens as f64;
+        (
+            t * (d.gate_ns_per_token + d.route_ns_per_token),
+            t * (d.gate_nj_per_token + d.route_nj_per_token),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> EnergyModel {
+        EnergyModel::new(&HardwareConfig::paper())
+    }
+
+    #[test]
+    fn activation_energy_paper_value() {
+        assert!((m().activations_nj(1) - 12.48).abs() < 1e-9);
+        assert!((m().activations_nj(96) - 96.0 * 12.48).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attention_scales_with_context() {
+        let (l1, e1) = m().attention(1, 32);
+        let (l2, e2) = m().attention(1, 64);
+        assert!(l2 > l1 && e2 > e1);
+        let (l3, e3) = m().attention(2, 32);
+        assert!((l3 - 2.0 * l1).abs() < 1e-9);
+        assert!((e3 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        assert_eq!(m().activations_nj(0), 0.0);
+        assert_eq!(m().transfers_nj(0, 4096), 0.0);
+        assert_eq!(m().dram_nj(0), 0.0);
+        let (l, e) = m().attention(0, 100);
+        assert_eq!((l, e), (0.0, 0.0));
+    }
+
+    #[test]
+    fn transfer_energy_linear_in_width() {
+        let e1 = m().transfers_nj(10, 2048);
+        let e2 = m().transfers_nj(10, 4096);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+}

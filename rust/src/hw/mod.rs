@@ -1,0 +1,11 @@
+//! Hardware cost models derived from the HERMES/3DCIM constants in
+//! [`crate::config::HardwareConfig`]: chip area under peripheral sharing,
+//! and the energy price list the simulator consults.
+
+pub mod area;
+pub mod energy;
+pub mod noise;
+
+pub use area::AreaModel;
+pub use energy::EnergyModel;
+pub use noise::NoiseModel;

@@ -1,0 +1,173 @@
+//! Analog noise model — the paper's stated future work ("Future works
+//! focus on hardware-aware software design and noise analysis"), built
+//! here as an extension.
+//!
+//! PCM crossbars suffer programming noise, conductance drift and read
+//! noise.  Following the HERMES characterisation [17-19] we model the
+//! *effective* per-MVM output perturbation as zero-mean Gaussian whose
+//! stddev is a fraction of the per-slice analog full-scale, growing with
+//! time since programming (drift):
+//!
+//! `sigma(t) = sigma0 * (1 + drift_rate * log10(1 + t_hours))`
+//!
+//! Two consumers:
+//! * the L1 kernel mirror (`python/compile/kernels/crossbar.py` accepts a
+//!   `noise_std` for noisy-inference studies; the seeds differ so only the
+//!   *statistics* are comparable);
+//! * [`NoiseModel::expected_snr_db`] and the accuracy-proxy sweep in
+//!   `eval::ablation`, which report how much routing decisions move under
+//!   noise — the metric that matters for MoE, since a flipped gate
+//!   decision changes *which experts run*, not just output quality.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    /// read-noise stddev as a fraction of the ADC step at t=0
+    pub sigma0_adc_steps: f64,
+    /// drift growth per decade of hours
+    pub drift_rate: f64,
+    /// hours since cell programming
+    pub t_hours: f64,
+}
+
+impl NoiseModel {
+    /// HERMES-class defaults: ~0.4 ADC steps of read noise, mild drift.
+    pub fn hermes() -> Self {
+        NoiseModel { sigma0_adc_steps: 0.4, drift_rate: 0.3, t_hours: 0.0 }
+    }
+
+    pub fn noiseless() -> Self {
+        NoiseModel { sigma0_adc_steps: 0.0, drift_rate: 0.0, t_hours: 0.0 }
+    }
+
+    /// Effective noise stddev in ADC steps at the configured drift time.
+    pub fn sigma_adc_steps(&self) -> f64 {
+        self.sigma0_adc_steps
+            * (1.0 + self.drift_rate * (1.0 + self.t_hours).log10())
+    }
+
+    /// Expected output SNR of one crossbar MVM, dB, given the typical
+    /// signal magnitude in ADC steps (per-column ranged readout keeps the
+    /// signal at ~1/3 of the clip range, i.e. ~42 steps for 8-bit).
+    pub fn expected_snr_db(&self, signal_adc_steps: f64) -> f64 {
+        let sigma = self.sigma_adc_steps();
+        if sigma == 0.0 {
+            f64::INFINITY
+        } else {
+            20.0 * (signal_adc_steps / sigma).log10()
+        }
+    }
+
+    /// Perturb a gate-score row in place (scores are post-MVM digital
+    /// values; `score_scale` converts one ADC step into score units).
+    /// Deterministic per (seed, token).
+    pub fn perturb_scores(&self, scores: &mut [f32], score_scale: f64,
+                          seed: u64, token: usize) {
+        let sigma = self.sigma_adc_steps() * score_scale;
+        if sigma == 0.0 {
+            return;
+        }
+        let mut rng = Pcg32::new(seed ^ ((token as u64) << 20));
+        for s in scores.iter_mut() {
+            *s += (rng.gen_normal() * sigma) as f32;
+        }
+    }
+
+    /// Fraction of expert-choice routing decisions that flip under noise,
+    /// estimated over `trials` random score matrices — the MoE-specific
+    /// noise metric (a flipped decision redirects a token to a different
+    /// expert).
+    pub fn routing_flip_rate(&self, tokens: usize, experts: usize,
+                             capacity: usize, score_scale: f64,
+                             trials: usize, seed: u64) -> f64 {
+        use crate::moe::gate::expert_choice_route;
+        let mut rng = Pcg32::new(seed);
+        let mut flips = 0usize;
+        let mut total = 0usize;
+        for trial in 0..trials {
+            let clean: Vec<f32> = (0..tokens * experts)
+                .map(|_| rng.gen_normal() as f32)
+                .collect();
+            let mut noisy = clean.clone();
+            for t in 0..tokens {
+                self.perturb_scores(
+                    &mut noisy[t * experts..(t + 1) * experts],
+                    score_scale,
+                    seed ^ (trial as u64),
+                    t,
+                );
+            }
+            let a = expert_choice_route(&clean, tokens, experts, capacity,
+                                        None);
+            let b = expert_choice_route(&noisy, tokens, experts, capacity,
+                                        None);
+            for t in 0..tokens {
+                for e in 0..experts {
+                    total += 1;
+                    if a.choices.get(t, e) != b.choices.get(t, e) {
+                        flips += 1;
+                    }
+                }
+            }
+        }
+        flips as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_is_identity() {
+        let n = NoiseModel::noiseless();
+        let mut s = vec![1.0f32, -2.0, 3.0];
+        n.perturb_scores(&mut s, 1.0, 7, 0);
+        assert_eq!(s, vec![1.0, -2.0, 3.0]);
+        assert_eq!(n.expected_snr_db(42.0), f64::INFINITY);
+        assert_eq!(n.routing_flip_rate(8, 4, 2, 0.1, 3, 1), 0.0);
+    }
+
+    #[test]
+    fn drift_grows_sigma() {
+        let mut n = NoiseModel::hermes();
+        let s0 = n.sigma_adc_steps();
+        n.t_hours = 1000.0;
+        assert!(n.sigma_adc_steps() > s0);
+    }
+
+    #[test]
+    fn snr_decreases_with_noise() {
+        let quiet = NoiseModel { sigma0_adc_steps: 0.1, ..NoiseModel::hermes() };
+        let loud = NoiseModel { sigma0_adc_steps: 2.0, ..NoiseModel::hermes() };
+        assert!(quiet.expected_snr_db(42.0) > loud.expected_snr_db(42.0));
+    }
+
+    #[test]
+    fn flip_rate_monotone_in_noise() {
+        let mk = |sigma| NoiseModel {
+            sigma0_adc_steps: sigma,
+            drift_rate: 0.0,
+            t_hours: 0.0,
+        };
+        let low = mk(0.05).routing_flip_rate(16, 8, 4, 0.05, 8, 3);
+        let high = mk(3.0).routing_flip_rate(16, 8, 4, 0.05, 8, 3);
+        assert!(high > low, "{low} !< {high}");
+        assert!(low < 0.25);
+        assert!(high <= 1.0);
+    }
+
+    #[test]
+    fn perturb_deterministic_per_token() {
+        let n = NoiseModel::hermes();
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        n.perturb_scores(&mut a, 1.0, 5, 3);
+        n.perturb_scores(&mut b, 1.0, 5, 3);
+        assert_eq!(a, b);
+        let mut c = vec![0.0f32; 8];
+        n.perturb_scores(&mut c, 1.0, 5, 4);
+        assert_ne!(a, c);
+    }
+}

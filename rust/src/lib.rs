@@ -1,0 +1,33 @@
+//! # moepim — Area-Efficient In-Memory Computing for MoE
+//!
+//! Reproduction of *"Area-Efficient In-Memory Computing for
+//! Mixture-of-Experts via Multiplexing and Caching"* (Gao & Yang, 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: crossbar-level
+//!   peripheral multiplexing ([`hw`]), load-aware expert grouping
+//!   ([`grouping`]), dynamic prefill scheduling ([`sched`]), the KV + GO
+//!   caches ([`cache`]), the operator-level PIM simulator ([`sim`]), the
+//!   evaluation harness regenerating every paper figure/table ([`eval`]),
+//!   and a serving coordinator driving the real AOT-compiled model
+//!   ([`coordinator`]) through the PJRT runtime ([`runtime`]).
+//! * **L2 (python/compile/model.py)** — the functional MoE transformer
+//!   block, AOT-lowered to `artifacts/*.hlo.txt` at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas crossbar/FFN/gate kernels.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod grouping;
+pub mod hw;
+pub mod moe;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,283 @@
+//! `moepim` launcher — CLI over the simulator, the evaluation harness and
+//! the serving coordinator.
+//!
+//! ```text
+//! moepim eval <fig4a|fig4b|fig5|table1|ratio-sweep|all> [--gen N]
+//! moepim simulate [--group-size N] [--grouping U|S] [--sched T|C|O]
+//!                 [--kv] [--go] [--prompt N] [--gen N] [--seed N]
+//!                 [--routing token|expert] [--skew X]
+//! moepim trace    [--tokens N] [--skew X] [--seed N] [--routing ...]
+//! moepim serve    [--prompts N] [--gen N] [--artifacts DIR]
+//! moepim generate [--prompt-len N] [--gen N] [--artifacts DIR] [--check]
+//! ```
+
+use moepim::config::{
+    CachePolicy, GroupingPolicy, RoutingMode, SchedulePolicy, SimConfig,
+};
+use moepim::sim::Simulator;
+use moepim::util::cli::Args;
+use moepim::util::fmt_thousands;
+use moepim::{eval, moe};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match args.subcommand.as_deref() {
+        Some("eval") => cmd_eval(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            2
+        }
+        None => {
+            println!("{USAGE}");
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+moepim — area-efficient PIM for MoE (paper reproduction)
+
+subcommands:
+  eval <fig4a|fig4b|fig5|table1|ratio-sweep|calibration|ablation|all>  regenerate paper artefacts
+  simulate [flags]                                 one simulator run
+  trace [flags]                                    inspect a workload trace
+  serve [flags]                                    threaded serving demo (real model)
+  generate [flags]                                 single-sequence generation (real model)
+
+common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
+              --prompt N --gen N --seed N --routing token|expert --skew X
+              --config file.json (simulate; overrides flags)";
+
+fn cmd_eval(args: &Args) -> i32 {
+    let what = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let gen = args.usize_flag("gen", 8);
+    match what {
+        "fig4a" => print!("{}", eval::fig4::render_fig4a(gen)),
+        "fig4b" => print!("{}", eval::fig4::render_fig4b()),
+        "fig5" => print!("{}", eval::fig5::render()),
+        "table1" => print!("{}", eval::table1::render()),
+        "ratio-sweep" => print!("{}", eval::sweep::render()),
+        "calibration" => print!("{}", eval::calibration::render()),
+        "ablation" => print!("{}", eval::ablation::render()),
+        "all" => {
+            print!("{}", eval::fig4::render_fig4a(gen));
+            println!();
+            print!("{}", eval::fig4::render_fig4b());
+            println!();
+            print!("{}", eval::fig5::render());
+            println!();
+            print!("{}", eval::table1::render());
+            println!();
+            print!("{}", eval::sweep::render());
+            println!();
+            print!("{}", eval::calibration::render());
+            println!();
+            print!("{}", eval::ablation::render());
+        }
+        other => {
+            eprintln!("unknown eval target '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn sim_config_from(args: &Args) -> SimConfig {
+    let mut cfg = SimConfig::baseline();
+    cfg.group_size = args.usize_flag("group-size", 1);
+    cfg.grouping = match args.str_flag("grouping", "S").as_str() {
+        "U" | "u" | "uniform" => GroupingPolicy::Uniform,
+        "S" | "s" | "sorted" => GroupingPolicy::Sorted,
+        _ => GroupingPolicy::None,
+    };
+    cfg.schedule = match args.str_flag("sched", "T").as_str() {
+        "C" | "c" | "compact" => SchedulePolicy::Compact,
+        "O" | "o" | "resched" => SchedulePolicy::Reschedule,
+        _ => SchedulePolicy::TokenWise,
+    };
+    cfg.cache = CachePolicy {
+        kv: args.bool_flag("kv"),
+        go: args.bool_flag("go"),
+    };
+    cfg.prompt_len = args.usize_flag("prompt", 32);
+    cfg.gen_len = args.usize_flag("gen", 8);
+    cfg.seed = args.usize_flag("seed", 2026) as u64;
+    cfg.routing = match args.str_flag("routing", "expert").as_str() {
+        "token" => RoutingMode::TokenChoice,
+        _ => RoutingMode::ExpertChoice,
+    };
+    cfg.skew = args.f64_flag("skew", 1.0);
+    cfg
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    // --config file.json overrides flags wholesale (reproducible runs)
+    let config_path = args.str_flag("config", "");
+    let sim = if config_path.is_empty() {
+        Simulator::paper(sim_config_from(args))
+    } else {
+        match moepim::config::Experiment::load(std::path::Path::new(
+            &config_path,
+        )) {
+            Ok(exp) => Simulator::new(
+                moepim::config::MoeModelConfig::llama_moe_4_16(),
+                exp.hw,
+                exp.sim,
+            ),
+            Err(e) => {
+                eprintln!("bad config: {e:#}");
+                return 2;
+            }
+        }
+    };
+    let r = sim.run();
+    let t = r.total();
+    println!("config {} / {}", r.label, r.cache_label);
+    println!("prefill : {:>12} ns  {:>12} nJ",
+             fmt_thousands(r.prefill.latency_ns.round() as u64),
+             fmt_thousands(r.prefill.energy_nj.round() as u64));
+    let d = r.decode_total();
+    println!("decode  : {:>12} ns  {:>12} nJ  ({} steps)",
+             fmt_thousands(d.latency_ns.round() as u64),
+             fmt_thousands(d.energy_nj.round() as u64),
+             r.decode_steps.len());
+    println!("total   : {:>12} ns  {:>12} nJ",
+             fmt_thousands(t.latency_ns.round() as u64),
+             fmt_thousands(t.energy_nj.round() as u64));
+    println!("breakdown (ns): attn {:.0} gate {:.0} moe {:.0} dram {:.0}",
+             t.breakdown.attn_ns, t.breakdown.gate_ns, t.breakdown.moe_ns,
+             t.breakdown.dram_ns);
+    println!("breakdown (nJ): attn {:.0} gate {:.0} moe {:.0} dram {:.0}",
+             t.breakdown.attn_nj, t.breakdown.gate_nj, t.breakdown.moe_nj,
+             t.breakdown.dram_nj);
+    println!("area {:.1} mm² | {:.2} GOPS | {:.2} GOPS/mm² | {:.2} GOPS/W/mm²",
+             r.moe_area_mm2, t.gops(), r.gops_per_mm2(), r.density());
+    println!("activations {} transfers {}", t.activations, t.transfers);
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let cfg = sim_config_from(args);
+    let tokens = args.usize_flag("tokens", cfg.prompt_len);
+    let e = 16;
+    let mut gen = moe::TraceGenerator::new(e, cfg.seed);
+    let m = match cfg.routing {
+        RoutingMode::ExpertChoice => {
+            gen.expert_choice(tokens, (tokens * 4).div_ceil(e), cfg.skew)
+        }
+        RoutingMode::TokenChoice => {
+            gen.token_choice_zipf(tokens, 4, cfg.skew)
+        }
+    };
+    println!("trace: {} tokens x {} experts, total work {}", tokens, e,
+             m.total_work());
+    println!("expert loads: {:?}", m.expert_loads());
+    0
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    let flag = args.str_flag("artifacts", "");
+    if !flag.is_empty() {
+        return flag.into();
+    }
+    std::env::var("MOEPIM_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+fn toy_prompt(len: usize, seed: u64, vocab: usize) -> Vec<i32> {
+    let mut rng = moepim::util::rng::Pcg32::new(seed);
+    (0..len).map(|_| rng.gen_range(vocab) as i32).collect()
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use moepim::coordinator::Server;
+    let n = args.usize_flag("prompts", 4);
+    let gen = args.usize_flag("gen", 8);
+    let server = match Server::spawn(artifacts_dir(args)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to start server: {e:#}");
+            return 1;
+        }
+    };
+    println!("server up; submitting {n} requests (gen {gen})");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(moepim::coordinator::Request {
+                id: i as u64,
+                prompt: toy_prompt(32, 1000 + i as u64, 512),
+                gen_len: gen,
+            })
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        total_tokens += resp.tokens.len();
+        println!(
+            "req {}: {} tokens, ttft {:.1} ms, latency {:.1} ms, {:?}",
+            resp.id,
+            resp.tokens.len(),
+            resp.ttft_us / 1e3,
+            resp.latency_us / 1e3,
+            &resp.tokens[..resp.tokens.len().min(8)]
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests / {total_tokens} tokens in {wall:.2}s          ({:.1} tok/s)",
+        total_tokens as f64 / wall
+    );
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    use moepim::coordinator::{DecodeMode, ModelEngine};
+    use moepim::runtime::Runtime;
+    let gen = args.usize_flag("gen", 8);
+    let plen = args.usize_flag("prompt-len", 32);
+    let rt = match Runtime::load(&artifacts_dir(args)) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            return 1;
+        }
+    };
+    println!("platform {}, {} executables", rt.platform(),
+             rt.n_executables());
+    let engine = ModelEngine::new(rt);
+    let prompt = toy_prompt(plen, args.usize_flag("seed", 7) as u64,
+                            engine.model.vocab);
+    let r = engine
+        .generate(&prompt, gen, DecodeMode::Cached)
+        .expect("cached generation");
+    println!("cached   : {:?}  (prefill {:.1} ms, decode {:.1} ms)",
+             r.tokens, r.prefill_us / 1e3, r.decode_us / 1e3);
+    if args.bool_flag("check") {
+        let r2 = engine
+            .generate(&prompt, gen, DecodeMode::Recompute)
+            .expect("recompute generation");
+        println!("recompute: {:?}  (decode {:.1} ms)", r2.tokens,
+                 r2.decode_us / 1e3);
+        if r.tokens == r2.tokens {
+            println!("MATCH: GO-cached decode == full recompute");
+        } else {
+            println!("MISMATCH");
+            return 1;
+        }
+    }
+    0
+}

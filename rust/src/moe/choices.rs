@@ -1,0 +1,101 @@
+//! The token→expert choice matrix `choices[T, E]` — the single input to
+//! grouping, scheduling, and the PIM simulator (Algorithm 1's `Require`).
+
+/// Dense boolean T x E matrix; T is tokens, E is experts.  Kept dense (a
+/// `Vec<bool>`): T ≤ a few hundred and E ≤ 64 in every workload here, and
+/// dense scans are what the schedule builders iterate over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChoiceMatrix {
+    t: usize,
+    e: usize,
+    bits: Vec<bool>,
+}
+
+impl ChoiceMatrix {
+    pub fn new(t: usize, e: usize) -> Self {
+        ChoiceMatrix { t, e, bits: vec![false; t * e] }
+    }
+
+    pub fn from_rows(rows: &[Vec<usize>], e: usize) -> Self {
+        let mut m = ChoiceMatrix::new(rows.len(), e);
+        for (t, experts) in rows.iter().enumerate() {
+            for &x in experts {
+                m.set(t, x, true);
+            }
+        }
+        m
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.t
+    }
+
+    pub fn experts(&self) -> usize {
+        self.e
+    }
+
+    #[inline]
+    pub fn get(&self, token: usize, expert: usize) -> bool {
+        self.bits[token * self.e + expert]
+    }
+
+    #[inline]
+    pub fn set(&mut self, token: usize, expert: usize, v: bool) {
+        self.bits[token * self.e + expert] = v;
+    }
+
+    /// Tokens selected by `expert`, in token order.
+    pub fn tokens_of(&self, expert: usize) -> Vec<usize> {
+        (0..self.t).filter(|&t| self.get(t, expert)).collect()
+    }
+
+    /// Experts selected for `token`, in expert order.
+    pub fn experts_of(&self, token: usize) -> Vec<usize> {
+        (0..self.e).filter(|&e| self.get(token, e)).collect()
+    }
+
+    /// Per-expert load (number of selected tokens).
+    pub fn expert_loads(&self) -> Vec<usize> {
+        (0..self.e).map(|e| self.tokens_of(e).len()).collect()
+    }
+
+    /// Total active (token, expert) pairs.
+    pub fn total_work(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Per-token number of active experts.
+    pub fn token_fanout(&self, token: usize) -> usize {
+        (0..self.e).filter(|&e| self.get(token, e)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = ChoiceMatrix::new(4, 3);
+        m.set(2, 1, true);
+        assert!(m.get(2, 1));
+        assert!(!m.get(1, 2));
+        assert_eq!(m.total_work(), 1);
+    }
+
+    #[test]
+    fn from_rows() {
+        let m = ChoiceMatrix::from_rows(&[vec![0, 2], vec![1], vec![]], 3);
+        assert_eq!(m.tokens(), 3);
+        assert_eq!(m.experts_of(0), vec![0, 2]);
+        assert_eq!(m.tokens_of(1), vec![1]);
+        assert_eq!(m.expert_loads(), vec![1, 1, 1]);
+        assert_eq!(m.token_fanout(2), 0);
+    }
+
+    #[test]
+    fn loads_sum_to_work() {
+        let m = ChoiceMatrix::from_rows(&[vec![0, 1], vec![0], vec![0, 1]], 2);
+        assert_eq!(m.expert_loads().iter().sum::<usize>(), m.total_work());
+    }
+}

@@ -1,0 +1,100 @@
+//! Expert → crossbar mapping: how many physical crossbars one layer's MoE
+//! occupies, and how many serial MVM rounds one token-expert execution
+//! takes — the bridge between model dims and the hardware model.
+
+use crate::config::{HardwareConfig, MoeModelConfig};
+
+/// Physical layout of one MoE layer's experts on PIM crossbars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerLayout {
+    /// crossbar tiles holding the up-projection (D x F) per expert
+    pub up_tiles: usize,
+    /// crossbar tiles holding the down-projection (F x D) per expert
+    pub down_tiles: usize,
+    /// serial MVM rounds for one token through one expert (up then down —
+    /// the down MVM consumes the up MVM's output, so they cannot overlap
+    /// for the same token)
+    pub rounds_per_token: usize,
+    pub n_experts: usize,
+}
+
+impl LayerLayout {
+    pub fn new(model: &MoeModelConfig, hw: &HardwareConfig) -> Self {
+        let tiles = |rows: usize, cols: usize| {
+            rows.div_ceil(hw.xbar_rows) * cols.div_ceil(hw.xbar_cols)
+        };
+        LayerLayout {
+            up_tiles: tiles(model.d_model, model.d_ff),
+            down_tiles: tiles(model.d_ff, model.d_model),
+            rounds_per_token: 2,
+            n_experts: model.n_experts,
+        }
+    }
+
+    /// Crossbars per expert (up + down tiles).
+    pub fn xbars_per_expert(&self) -> usize {
+        self.up_tiles + self.down_tiles
+    }
+
+    /// Total crossbars for the layer's MoE part.
+    pub fn total_xbars(&self) -> usize {
+        self.xbars_per_expert() * self.n_experts
+    }
+
+    /// Core activations consumed by one token-expert execution: every tile
+    /// of the up matrix fires in the first round, every down tile in the
+    /// second.
+    pub fn activations_per_token_expert(&self) -> u64 {
+        (self.up_tiles + self.down_tiles) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_crossbar_count() {
+        // §IV-A: "Our model requires 1536 crossbars for 16 experts for one
+        // layer" => 96/expert => 48 up + 48 down (DESIGN.md §7).
+        let layout = LayerLayout::new(
+            &MoeModelConfig::llama_moe_4_16(),
+            &HardwareConfig::paper(),
+        );
+        assert_eq!(layout.up_tiles, 48); // ceil(4096/256)*ceil(688/256)=16*3
+        assert_eq!(layout.down_tiles, 48);
+        assert_eq!(layout.xbars_per_expert(), 96);
+        assert_eq!(layout.total_xbars(), 1536);
+        assert_eq!(layout.rounds_per_token, 2);
+    }
+
+    #[test]
+    fn functional_dims_layout() {
+        let m = MoeModelConfig {
+            d_model: 256,
+            n_experts: 16,
+            top_k: 4,
+            d_ff: 128,
+            n_heads: 4,
+            d_head: 64,
+            n_layers: 1,
+            vocab: 512,
+        };
+        let mut hw = HardwareConfig::paper();
+        hw.xbar_rows = 128;
+        hw.xbar_cols = 128;
+        let layout = LayerLayout::new(&m, &hw);
+        assert_eq!(layout.up_tiles, 2); // 2x1
+        assert_eq!(layout.down_tiles, 2); // 1x2
+        assert_eq!(layout.total_xbars(), 64);
+    }
+
+    #[test]
+    fn activations_match_tiles() {
+        let layout = LayerLayout::new(
+            &MoeModelConfig::llama_moe_4_16(),
+            &HardwareConfig::paper(),
+        );
+        assert_eq!(layout.activations_per_token_expert(), 96);
+    }
+}

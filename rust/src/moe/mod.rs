@@ -1,0 +1,13 @@
+//! MoE domain model: token↔expert choice matrices, routing (token-choice
+//! and expert-choice), the expert→crossbar mapping, and workload-trace
+//! generation.
+
+pub mod choices;
+pub mod gate;
+pub mod layout;
+pub mod trace;
+
+pub use choices::ChoiceMatrix;
+pub use gate::{expert_choice_route, softmax_rows, token_choice_route, Routing};
+pub use layout::LayerLayout;
+pub use trace::TraceGenerator;

@@ -1,0 +1,135 @@
+//! Workload-trace generation (substitution for the paper's RedPajama-C4
+//! samples, DESIGN.md §2).
+//!
+//! The paper uses dataset traces for two things: (a) estimating per-expert
+//! loads for workload-sorted grouping, and (b) driving the simulator.  Both
+//! consume a `choices[T, E]` matrix.  We provide:
+//!
+//! * [`TraceGenerator::expert_choice`] — balanced expert-choice traces with
+//!   a *popularity-correlated token overlap* knob (which tokens collide on
+//!   which experts is what grouping/scheduling react to);
+//! * [`TraceGenerator::token_choice_zipf`] — token-choice traces with
+//!   Zipf-skewed expert popularity (the classic load-imbalance regime the
+//!   grouping study needs);
+//! * gate-derived traces come from the functional model via the
+//!   coordinator (real HLO execution), not from this module.
+
+use crate::moe::choices::ChoiceMatrix;
+use crate::moe::gate::{expert_choice_route, token_choice_route};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    rng: Pcg32,
+    n_experts: usize,
+}
+
+impl TraceGenerator {
+    pub fn new(n_experts: usize, seed: u64) -> Self {
+        TraceGenerator { rng: Pcg32::new(seed), n_experts }
+    }
+
+    /// Synthetic gate scores where expert popularity follows a Zipf-ish
+    /// profile: expert j has mean score `-skew * ln(j+1)` plus unit
+    /// Gaussian noise.  The popularity *ranking is stable across traces*
+    /// (expert specialisation is a property of the trained model + corpus,
+    /// not of the batch) — that stability is exactly what lets §III-B's
+    /// deployment-time sorted grouping predict inference-time loads from
+    /// small calibration samples.  Running real routing over these scores
+    /// gives traces whose load shapes match skewed corpora.
+    pub fn scores(&mut self, tokens: usize, skew: f64) -> Vec<f32> {
+        let e = self.n_experts;
+        let mut s = vec![0f32; tokens * e];
+        for t in 0..tokens {
+            for j in 0..e {
+                let mean = -skew * ((j + 1) as f64).ln();
+                s[t * e + j] = (mean + self.rng.gen_normal()) as f32;
+            }
+        }
+        s
+    }
+
+    /// Expert-choice trace: balanced per-expert load (capacity each), with
+    /// overlap structure from the skewed scores.
+    pub fn expert_choice(&mut self, tokens: usize, capacity: usize,
+                         skew: f64) -> ChoiceMatrix {
+        let s = self.scores(tokens, skew);
+        expert_choice_route(&s, tokens, self.n_experts, capacity, None).choices
+    }
+
+    /// Token-choice trace with Zipf-skewed expert popularity — the
+    /// load-imbalanced regime (expert collapse) used for the grouping
+    /// ablation.
+    pub fn token_choice_zipf(&mut self, tokens: usize, k: usize,
+                             skew: f64) -> ChoiceMatrix {
+        let s = self.scores(tokens, skew);
+        token_choice_route(&s, tokens, self.n_experts, k).choices
+    }
+
+    /// A small calibration sample (the "traced from small samples of
+    /// datasets" step of §III-B): mean per-expert loads over `n_samples`
+    /// independent token-choice batches.
+    pub fn calibration_loads(&mut self, n_samples: usize, tokens: usize,
+                             k: usize, skew: f64) -> Vec<f64> {
+        let mut acc = vec![0f64; self.n_experts];
+        for _ in 0..n_samples {
+            let m = self.token_choice_zipf(tokens, k, skew);
+            for (j, l) in m.expert_loads().into_iter().enumerate() {
+                acc[j] += l as f64;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= n_samples as f64;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_choice_is_balanced() {
+        let mut g = TraceGenerator::new(16, 7);
+        let m = g.expert_choice(32, 8, 1.0);
+        assert_eq!(m.expert_loads(), vec![8; 16]);
+    }
+
+    #[test]
+    fn token_choice_zipf_is_imbalanced() {
+        let mut g = TraceGenerator::new(16, 11);
+        let m = g.token_choice_zipf(256, 4, 1.5);
+        let loads = m.expert_loads();
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(max >= 3 * (min + 1), "expected heavy skew, got {loads:?}");
+        assert_eq!(loads.iter().sum::<usize>(), 256 * 4);
+    }
+
+    #[test]
+    fn zero_skew_is_roughly_uniform() {
+        let mut g = TraceGenerator::new(8, 13);
+        let loads = g.calibration_loads(8, 128, 2, 0.0);
+        let mean = loads.iter().sum::<f64>() / 8.0;
+        for l in &loads {
+            assert!((l - mean).abs() < mean * 0.5, "{loads:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGenerator::new(16, 99).expert_choice(32, 8, 1.0);
+        let b = TraceGenerator::new(16, 99).expert_choice(32, 8, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn calibration_loads_shape() {
+        let mut g = TraceGenerator::new(4, 5);
+        let loads = g.calibration_loads(3, 64, 2, 1.0);
+        assert_eq!(loads.len(), 4);
+        let total: f64 = loads.iter().sum();
+        assert!((total - 128.0).abs() < 1e-9); // 64 tokens * k=2
+    }
+}

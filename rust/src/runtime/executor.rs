@@ -1,0 +1,208 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! [`Runtime`] owns one CPU PJRT client; [`Executable`]s are compiled once
+//! at startup from `artifacts/*.hlo.txt` (HLO *text* — the interchange
+//! format that survives the jax≥0.5 / xla_extension 0.5.1 version gap, see
+//! python/compile/aot.py) and then executed from the coordinator's hot path
+//! with plain f32/i32 host buffers.  Python is never involved at runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::manifest::{ArtifactEntry, Manifest};
+
+/// A typed host-side tensor handed to / returned from an executable.
+#[derive(Debug, Clone)]
+pub enum TensorView {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorView {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorView::F32(v) => Ok(v),
+            TensorView::I32(_) => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorView::F32(v) => Ok(v),
+            TensorView::I32(_) => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorView::F32(v) => v.len(),
+            TensorView::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// expected input element counts + dtypes (from the manifest)
+    inputs: Vec<(usize, bool)>, // (elems, is_i32)
+    input_shapes: Vec<Vec<usize>>,
+}
+
+impl Executable {
+    /// Execute with host buffers; returns the flattened tuple elements.
+    ///
+    /// Inputs are validated against the manifest spec before staging so a
+    /// stale `artifacts/` directory fails loudly rather than numerically.
+    pub fn run(&self, inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+        if inputs.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, &(elems, is_i32))) in
+            inputs.iter().zip(&self.inputs).enumerate()
+        {
+            if input.len() != elems {
+                return Err(anyhow!(
+                    "{}: input {i} has {} elements, manifest says {elems}",
+                    self.name,
+                    input.len()
+                ));
+            }
+            let dims: Vec<i64> =
+                self.input_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = match (input, is_i32) {
+                (TensorView::F32(v), false) => {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (TensorView::I32(v), true) => {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                _ => {
+                    return Err(anyhow!(
+                        "{}: input {i} dtype mismatch",
+                        self.name
+                    ))
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: empty result", self.name))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            // outputs of the functional model are all f32
+            out.push(TensorView::F32(part.to_vec::<f32>()?));
+        }
+        Ok(out)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The PJRT client plus all compiled artifacts.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load + compile every artifact in the manifest directory.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load from the default artifacts location (`$MOEPIM_ARTIFACTS` or
+    /// `<crate>/artifacts`).
+    pub fn load_default() -> Result<Runtime> {
+        Self::from_manifest(Manifest::load_default()?)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = BTreeMap::new();
+        for entry in manifest.artifacts.values() {
+            let exe = Self::compile_entry(&client, entry)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(Runtime { manifest, client, executables })
+    }
+
+    fn compile_entry(client: &xla::PjRtClient, entry: &ArtifactEntry)
+        -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let inputs = entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                (spec.shape.iter().product::<usize>().max(1),
+                 spec.dtype == "int32")
+            })
+            .collect();
+        let input_shapes =
+            entry.inputs.iter().map(|s| s.shape.clone()).collect();
+        Ok(Executable {
+            name: entry.name.clone(),
+            exe,
+            inputs,
+            input_shapes,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no compiled executable '{name}'"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn n_executables(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in
+    // rust/tests/runtime_roundtrip.rs (integration), since `cargo test`
+    // unit runs should not depend on `make artifacts` having run.
+    use super::*;
+
+    #[test]
+    fn tensorview_accessors() {
+        let f = TensorView::F32(vec![1.0, 2.0]);
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        let i = TensorView::I32(vec![3]);
+        assert!(i.as_f32().is_err());
+        assert!(!i.is_empty());
+        assert_eq!(TensorView::F32(vec![]).len(), 0);
+    }
+}

@@ -1,0 +1,6 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt`, compiles on the CPU PJRT
+//! client, executes from the coordinator's hot path.
+
+pub mod executor;
+
+pub use executor::{Executable, Runtime, TensorView};

@@ -1,0 +1,108 @@
+//! Compact schedule ("C", §III-D step 1): dispatch multiple tokens to
+//! different groups simultaneously — every group drains its own work queue
+//! back-to-back with no idles.
+//!
+//! Latency drops to `max_i Σ_t load[i, t]` slots (the bottleneck group),
+//! but groups fall out of alignment, so the same token may be fetched
+//! repeatedly across groups at different times — the repeated-data-transfer
+//! cost that Algorithm 1 then claws back.
+
+use crate::grouping::Grouping;
+use crate::moe::ChoiceMatrix;
+
+use super::schedule::{Schedule, Slot};
+
+/// Per-group work queues in token order (expert order within a token
+/// follows the group's sorted expert list) — shared by compact and
+/// reschedule builders.
+pub fn group_queues(choices: &ChoiceMatrix, grouping: &Grouping)
+    -> Vec<Vec<(usize, usize)>> {
+    grouping
+        .groups
+        .iter()
+        .map(|g| {
+            let mut q = Vec::new();
+            for t in 0..choices.tokens() {
+                for &e in g {
+                    if choices.get(t, e) {
+                        q.push((t, e));
+                    }
+                }
+            }
+            q
+        })
+        .collect()
+}
+
+pub fn build(choices: &ChoiceMatrix, grouping: &Grouping) -> Schedule {
+    let lanes = group_queues(choices, grouping)
+        .into_iter()
+        .map(|q| {
+            q.into_iter()
+                .map(|(token, expert)| Slot::Work { token, expert })
+                .collect()
+        })
+        .collect();
+    Schedule::new(lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tokenwise;
+
+    fn trace() -> (ChoiceMatrix, Grouping) {
+        // 6 tokens, 4 experts; skewed: expert 0 takes everything
+        let m = ChoiceMatrix::from_rows(
+            &[
+                vec![0, 1],
+                vec![0],
+                vec![0, 2],
+                vec![0, 3],
+                vec![0],
+                vec![0, 1],
+            ],
+            4,
+        );
+        (m, Grouping::uniform(4, 2, 1))
+    }
+
+    #[test]
+    fn compact_never_slower_than_tokenwise() {
+        let (m, g) = trace();
+        let c = build(&m, &g);
+        let t = tokenwise::build(&m, &g);
+        assert!(c.makespan_slots() <= t.makespan_slots());
+        assert_eq!(c.total_work(), t.total_work());
+    }
+
+    #[test]
+    fn makespan_equals_bottleneck_group() {
+        let (m, g) = trace();
+        let c = build(&m, &g);
+        let bottleneck = group_queues(&m, &g)
+            .iter()
+            .map(Vec::len)
+            .max()
+            .unwrap();
+        assert_eq!(c.makespan_slots(), bottleneck);
+    }
+
+    #[test]
+    fn no_idles_in_lanes() {
+        let (m, g) = trace();
+        for lane in &build(&m, &g).lanes {
+            assert!(lane.iter().all(|s| matches!(s, Slot::Work { .. })));
+        }
+    }
+
+    #[test]
+    fn queues_preserve_token_order() {
+        let (m, g) = trace();
+        for q in group_queues(&m, &g) {
+            for pair in q.windows(2) {
+                assert!(pair[0].0 <= pair[1].0);
+            }
+        }
+    }
+}

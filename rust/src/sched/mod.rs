@@ -1,0 +1,50 @@
+//! Dynamic prefill scheduling (§III-D): token-wise baseline, compact
+//! dispatch, and Algorithm 1's reschedule-by-inserting-idle.
+
+pub mod compact;
+pub mod reschedule;
+pub mod schedule;
+pub mod tokenwise;
+
+pub use schedule::{Schedule, Slot};
+
+use crate::config::SchedulePolicy;
+use crate::grouping::Grouping;
+use crate::moe::ChoiceMatrix;
+
+/// Build the schedule selected by `policy`.
+pub fn build(choices: &ChoiceMatrix, grouping: &Grouping,
+             policy: SchedulePolicy) -> Schedule {
+    match policy {
+        SchedulePolicy::TokenWise => tokenwise::build(choices, grouping),
+        SchedulePolicy::Compact => compact::build(choices, grouping),
+        SchedulePolicy::Reschedule => reschedule::build(choices, grouping),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulePolicy as P;
+
+    #[test]
+    fn policy_dispatch_consistency() {
+        let mut g = crate::moe::TraceGenerator::new(8, 3);
+        let m = g.expert_choice(16, 4, 1.0);
+        let grouping = Grouping::uniform(8, 2, 3);
+        let t = build(&m, &grouping, P::TokenWise);
+        let c = build(&m, &grouping, P::Compact);
+        let o = build(&m, &grouping, P::Reschedule);
+        // same work everywhere
+        assert_eq!(t.total_work(), m.total_work());
+        assert_eq!(c.total_work(), m.total_work());
+        assert_eq!(o.total_work(), m.total_work());
+        // paper ordering: latency C == O <= tokenwise; transfers O <= C
+        assert_eq!(c.makespan_slots(), o.makespan_slots());
+        assert!(c.makespan_slots() <= t.makespan_slots());
+        assert!(o.transfers() <= c.transfers());
+        // token-wise is transfer-optimal: one broadcast per active token
+        let active = (0..m.tokens()).filter(|&tk| m.token_fanout(tk) > 0).count();
+        assert_eq!(t.transfers(), active);
+    }
+}

@@ -1,0 +1,190 @@
+//! Reschedule-by-inserting-idle ("O", §III-D step 2, Algorithm 1).
+//!
+//! Starting from the compact schedule, the longest (bottleneck) group is
+//! the anchor: it runs with no idles, so the makespan cannot improve —
+//! Algorithm 1 instead spends the *slack* of every shorter group
+//! (`res[i, t] = csum[max_id, t] - csum[i, t]`, the number of idles group i
+//! can afford by token t) on alignment: an item is delayed to start exactly
+//! when the anchor broadcasts the same token, making its fetch free under
+//! the shared-bus rule, provided the delay never pushes the group's
+//! remaining work past the anchor's finish line.
+//!
+//! The result keeps compact's latency (pinned by proptest) while removing
+//! repeated transfers; the paper's Fig. 2 example drops 16 -> 12.
+//!
+//! The greedy walk below is the paper's "iteratively checking whether there
+//! is a data reuse opportunity", implemented per group in one linear pass
+//! (the paper notes the algorithm is linear in token length and pipelined
+//! in hardware, so its latency is hidden — we likewise exclude it from the
+//! simulated critical path and bench its host cost in `benches/hotpath`).
+
+use std::collections::HashMap;
+
+use crate::grouping::Grouping;
+use crate::moe::ChoiceMatrix;
+
+use super::compact::group_queues;
+use super::schedule::{Schedule, Slot};
+
+pub fn build(choices: &ChoiceMatrix, grouping: &Grouping) -> Schedule {
+    let queues = group_queues(choices, grouping);
+    let n_groups = queues.len();
+    if n_groups == 0 {
+        return Schedule::new(vec![]);
+    }
+
+    // Anchor = longest queue (first on ties) — Algorithm 1 line 2.
+    let anchor = (0..n_groups)
+        .max_by_key(|&i| (queues[i].len(), usize::MAX - i))
+        .unwrap();
+    let horizon = queues[anchor].len();
+
+    // Anchor lane is compact; record the slot range of each token's run.
+    let mut anchor_runs: HashMap<usize, (usize, usize)> = HashMap::new();
+    for (s, &(t, _)) in queues[anchor].iter().enumerate() {
+        anchor_runs
+            .entry(t)
+            .and_modify(|(_, hi)| *hi = s)
+            .or_insert((s, s));
+    }
+
+    let mut lanes: Vec<Vec<Slot>> = Vec::with_capacity(n_groups);
+    for (i, queue) in queues.iter().enumerate() {
+        if i == anchor {
+            lanes.push(
+                queue
+                    .iter()
+                    .map(|&(token, expert)| Slot::Work { token, expert })
+                    .collect(),
+            );
+            continue;
+        }
+        let mut lane: Vec<Slot> = Vec::with_capacity(horizon);
+        let mut next_free = 0usize;
+        let mut prev_token = usize::MAX;
+        for (idx, &(token, expert)) in queue.iter().enumerate() {
+            let remaining_after = queue.len() - idx - 1;
+            // Data-reuse opportunity: start this item inside the anchor's
+            // run of the same token (>= next_free), if the remaining work
+            // still fits before the anchor finishes — the res[i, t] > 0
+            // check of Algorithm 1 line 6.  Never delay an item that
+            // continues the lane's current token run: the local latch is
+            // already a free transfer and an idle would split the run.
+            let mut start = next_free;
+            if prev_token != token {
+                if let Some(&(lo, hi)) = anchor_runs.get(&token) {
+                    let aligned = next_free.max(lo);
+                    if aligned <= hi
+                        && aligned + 1 + remaining_after <= horizon
+                    {
+                        start = aligned;
+                    }
+                }
+            }
+            while lane.len() < start {
+                lane.push(Slot::Idle); // Algorithm 1 line 7: insert idles
+            }
+            lane.push(Slot::Work { token, expert });
+            next_free = start + 1;
+            prev_token = token;
+        }
+        lanes.push(lane);
+    }
+    let aligned = Schedule::new(lanes);
+    // Anchor alignment can still lose the occasional *accidental* same-slot
+    // sharing the compact layout had between two non-anchor lanes; the
+    // scheduler measures both and keeps the cheaper one (same makespan
+    // either way), so "reschedule never transfers more than compact" is an
+    // invariant rather than a heuristic hope (pinned by proptest).
+    let compact = super::compact::build(choices, grouping);
+    debug_assert_eq!(aligned.makespan_slots(), compact.makespan_slots());
+    if aligned.transfers() <= compact.transfers() {
+        aligned
+    } else {
+        compact
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::compact;
+
+    fn skewed_trace(seed: u64) -> (ChoiceMatrix, Grouping) {
+        let mut g = crate::moe::TraceGenerator::new(8, seed);
+        let m = g.expert_choice(24, 6, 1.2);
+        let grouping = Grouping::uniform(8, 2, seed);
+        (m, grouping)
+    }
+
+    #[test]
+    fn keeps_compact_latency() {
+        for seed in 0..20 {
+            let (m, g) = skewed_trace(seed);
+            let c = compact::build(&m, &g);
+            let o = build(&m, &g);
+            assert_eq!(
+                o.makespan_slots(),
+                c.makespan_slots(),
+                "seed {seed}: reschedule must not extend the makespan"
+            );
+        }
+    }
+
+    #[test]
+    fn never_more_transfers_than_compact() {
+        for seed in 0..20 {
+            let (m, g) = skewed_trace(seed);
+            let c = compact::build(&m, &g);
+            let o = build(&m, &g);
+            assert!(
+                o.transfers() <= c.transfers(),
+                "seed {seed}: {} > {}",
+                o.transfers(),
+                c.transfers()
+            );
+        }
+    }
+
+    #[test]
+    fn strictly_improves_on_misaligned_example() {
+        // Anchor group {0,1} works tokens 0,1,2 (slots 0,1,2); group {2,3}
+        // works tokens 1,2 — compact runs them at slots 0,1, misaligned
+        // with the anchor's broadcasts of the same tokens (5 transfers).
+        // Algorithm 1 inserts one idle so both items ride the anchor's
+        // broadcasts (3 transfers), same makespan.
+        let m = ChoiceMatrix::from_rows(
+            &[vec![0], vec![1, 2], vec![0, 3]],
+            4,
+        );
+        let g = Grouping::custom(vec![vec![0, 1], vec![2, 3]]);
+        let c = compact::build(&m, &g);
+        let o = build(&m, &g);
+        assert_eq!(c.transfers(), 5);
+        assert_eq!(o.transfers(), 3);
+        assert_eq!(o.makespan_slots(), c.makespan_slots());
+        // the idle was inserted before group 1's first item
+        assert_eq!(o.lanes[1][0], Slot::Idle);
+    }
+
+    #[test]
+    fn preserves_per_group_order_and_work() {
+        for seed in 0..10 {
+            let (m, g) = skewed_trace(seed);
+            let c = compact::build(&m, &g);
+            let o = build(&m, &g);
+            for lane in 0..g.n_groups() {
+                assert_eq!(c.lane_work(lane), o.lane_work(lane));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let m = ChoiceMatrix::new(0, 4);
+        let g = Grouping::singleton(4);
+        let s = build(&m, &g);
+        assert_eq!(s.makespan_slots(), 0);
+        assert_eq!(s.transfers(), 0);
+    }
+}

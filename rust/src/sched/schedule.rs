@@ -1,0 +1,201 @@
+//! Schedule representation and its cost metrics (makespan, transfers).
+//!
+//! A [`Schedule`] assigns every peripheral-sharing group a sequence of
+//! slots on a global slot clock; slot = one token-expert execution on that
+//! group's shared peripherals (`rounds_per_token` serial MVM rounds).
+//!
+//! **Transfer counting** (the energy-side objective of §III-D): a group
+//! needs a token's activation vector latched into its DAC inputs to run a
+//! slot.  A transfer is *free* when
+//!   (a) the group's previous slot used the same token (still latched), or
+//!   (b) another group starts the same token at the same slot (the
+//!       broadcast bus serves all of them at once).
+//! Otherwise the fetch costs one transfer.  Formally:
+//! `transfers = |{(s, t) : some group begins a maximal run of token t at
+//! slot s}|`.  Token-wise scheduling gives exactly one transfer per token;
+//! compact scheduling pays for its misalignment; Algorithm 1 inserts idles
+//! to re-align and win transfers back without extending the makespan.
+
+/// One slot of one group's sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    Idle,
+    /// token-expert execution
+    Work { token: usize, expert: usize },
+}
+
+impl Slot {
+    pub fn token(&self) -> Option<usize> {
+        match self {
+            Slot::Idle => None,
+            Slot::Work { token, .. } => Some(*token),
+        }
+    }
+}
+
+/// A complete prefill schedule over all groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// lanes[i] = group i's slot sequence (trailing idles trimmed)
+    pub lanes: Vec<Vec<Slot>>,
+}
+
+impl Schedule {
+    pub fn new(mut lanes: Vec<Vec<Slot>>) -> Self {
+        for lane in lanes.iter_mut() {
+            while lane.last() == Some(&Slot::Idle) {
+                lane.pop();
+            }
+        }
+        Schedule { lanes }
+    }
+
+    /// Global makespan in slots.
+    pub fn makespan_slots(&self) -> usize {
+        self.lanes.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Total work items across groups.
+    pub fn total_work(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.iter().filter(|s| matches!(s, Slot::Work { .. })).count())
+            .sum()
+    }
+
+    /// Work items per group, in order — for order-preservation checks.
+    pub fn lane_work(&self, lane: usize) -> Vec<(usize, usize)> {
+        self.lanes[lane]
+            .iter()
+            .filter_map(|s| match s {
+                Slot::Work { token, expert } => Some((*token, *expert)),
+                Slot::Idle => None,
+            })
+            .collect()
+    }
+
+    /// Count activation-vector transfers under the run/broadcast rule.
+    ///
+    /// Perf note (§Perf L3-1): collect run starts into a Vec and
+    /// sort+dedup once instead of inserting into a BTreeSet — ~3x faster
+    /// at 1024-token schedules, and this is the hot half of the
+    /// reschedule builder (it prices both candidate layouts).
+    pub fn transfers(&self) -> usize {
+        let mut starts: Vec<u64> = Vec::with_capacity(self.total_work());
+        for lane in &self.lanes {
+            let mut prev: Option<usize> = None;
+            for (s, slot) in lane.iter().enumerate() {
+                match slot.token() {
+                    Some(t) => {
+                        if prev != Some(t) {
+                            starts.push(((s as u64) << 32) | t as u64);
+                        }
+                        prev = Some(t);
+                    }
+                    None => prev = None,
+                }
+            }
+        }
+        starts.sort_unstable();
+        starts.dedup();
+        starts.len()
+    }
+
+    /// Transfers counted WITHOUT the shared broadcast bus (ablation:
+    /// every lane pays for its own run starts; cross-lane same-slot
+    /// sharing is disabled).  Used by `eval::ablation` to quantify how
+    /// much of Algorithm 1's win depends on the bus.
+    pub fn transfers_local_only(&self) -> usize {
+        let mut n = 0usize;
+        for lane in &self.lanes {
+            let mut prev: Option<usize> = None;
+            for slot in lane {
+                match slot.token() {
+                    Some(t) => {
+                        if prev != Some(t) {
+                            n += 1;
+                        }
+                        prev = Some(t);
+                    }
+                    None => prev = None,
+                }
+            }
+        }
+        n
+    }
+
+    /// Fraction of non-idle slots up to the makespan (hardware utilisation).
+    pub fn utilization(&self) -> f64 {
+        let span = self.makespan_slots();
+        if span == 0 || self.lanes.is_empty() {
+            return 0.0;
+        }
+        self.total_work() as f64 / (span * self.lanes.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(token: usize, expert: usize) -> Slot {
+        Slot::Work { token, expert }
+    }
+
+    #[test]
+    fn makespan_and_trim() {
+        let s = Schedule::new(vec![
+            vec![w(0, 0), Slot::Idle, w(1, 0), Slot::Idle],
+            vec![w(0, 1)],
+        ]);
+        assert_eq!(s.makespan_slots(), 3); // trailing idle trimmed
+        assert_eq!(s.total_work(), 3);
+    }
+
+    #[test]
+    fn transfers_counts_runs() {
+        // one lane, same token twice then a new token: 2 transfers
+        let s = Schedule::new(vec![vec![w(5, 0), w(5, 1), w(6, 0)]]);
+        assert_eq!(s.transfers(), 2);
+    }
+
+    #[test]
+    fn transfers_shared_broadcast() {
+        // two lanes start token 3 at slot 0 simultaneously: 1 transfer
+        let s = Schedule::new(vec![vec![w(3, 0)], vec![w(3, 1)]]);
+        assert_eq!(s.transfers(), 1);
+        // misaligned: 2 transfers
+        let s2 = Schedule::new(vec![vec![w(3, 0)], vec![Slot::Idle, w(3, 1)]]);
+        assert_eq!(s2.transfers(), 2);
+    }
+
+    #[test]
+    fn idle_breaks_latch() {
+        // same token resumed after an idle costs a new transfer
+        let s = Schedule::new(vec![vec![w(1, 0), Slot::Idle, w(1, 1)]]);
+        assert_eq!(s.transfers(), 2);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let s = Schedule::new(vec![vec![w(0, 0), w(1, 0)], vec![w(0, 1)]]);
+        let u = s.utilization();
+        assert!(u > 0.0 && u <= 1.0);
+        assert!((u - 0.75).abs() < 1e-9);
+        assert_eq!(Schedule::new(vec![]).utilization(), 0.0);
+    }
+
+    #[test]
+    fn local_only_counts_each_lane() {
+        // two lanes sharing a broadcast: 1 shared transfer, 2 local
+        let s = Schedule::new(vec![vec![w(3, 0)], vec![w(3, 1)]]);
+        assert_eq!(s.transfers(), 1);
+        assert_eq!(s.transfers_local_only(), 2);
+    }
+
+    #[test]
+    fn lane_work_skips_idles() {
+        let s = Schedule::new(vec![vec![Slot::Idle, w(2, 1), Slot::Idle, w(3, 1)]]);
+        assert_eq!(s.lane_work(0), vec![(2, 1), (3, 1)]);
+    }
+}

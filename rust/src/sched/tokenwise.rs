@@ -1,0 +1,96 @@
+//! Token-wise schedule: the conventional MoE dataflow — tokens fed to the
+//! hardware strictly one at a time (§III-D's starting point).
+//!
+//! Token t occupies a block of `max_i load[i, t]` consecutive slots; within
+//! the block every group serialises its own experts for t on its shared
+//! peripherals while other groups idle once they are done.  With singleton
+//! groups (no sharing) every block is one slot — the paper's baseline.
+
+use crate::grouping::Grouping;
+use crate::moe::ChoiceMatrix;
+
+use super::schedule::{Schedule, Slot};
+
+pub fn build(choices: &ChoiceMatrix, grouping: &Grouping) -> Schedule {
+    let n_groups = grouping.n_groups();
+    let mut lanes: Vec<Vec<Slot>> = vec![Vec::new(); n_groups];
+    // §Perf L3-3: one reusable scratch buffer instead of a fresh
+    // Vec<Vec<usize>> per token (~2x on 1024-token builds; this builder
+    // also runs once per decode step in the un-GO-cached regimes).
+    let mut scratch: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+    for t in 0..choices.tokens() {
+        let mut block = 0usize;
+        for (gi, g) in grouping.groups.iter().enumerate() {
+            scratch[gi].clear();
+            for &e in g {
+                if choices.get(t, e) {
+                    scratch[gi].push(e);
+                }
+            }
+            block = block.max(scratch[gi].len());
+        }
+        if block == 0 {
+            continue; // token selected by nobody: skip entirely
+        }
+        for (lane, experts) in lanes.iter_mut().zip(&scratch) {
+            for s in 0..block {
+                lane.push(match experts.get(s) {
+                    Some(&e) => Slot::Work { token: t, expert: e },
+                    None => Slot::Idle,
+                });
+            }
+        }
+    }
+    Schedule::new(lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ChoiceMatrix;
+
+    #[test]
+    fn singleton_grouping_one_slot_per_token() {
+        // 4 tokens, 4 experts, each token picks 2 experts
+        let m = ChoiceMatrix::from_rows(
+            &[vec![0, 1], vec![2, 3], vec![0, 3], vec![1, 2]],
+            4,
+        );
+        let s = build(&m, &Grouping::singleton(4));
+        assert_eq!(s.makespan_slots(), 4); // one slot per token
+        assert_eq!(s.total_work(), 8);
+        assert_eq!(s.transfers(), 4); // one broadcast per token
+    }
+
+    #[test]
+    fn shared_group_serialises_contended_token() {
+        // both experts of group {0,1} pick token 0 => 2-slot block
+        let m = ChoiceMatrix::from_rows(&[vec![0, 1], vec![2]], 4);
+        let g = Grouping::uniform(4, 2, 0); // arbitrary partition
+        let s = build(&m, &g);
+        let contended = g.group_of[0] == g.group_of[1];
+        if contended {
+            assert_eq!(s.makespan_slots(), 3); // 2 slots for t0 + 1 for t1
+        } else {
+            assert_eq!(s.makespan_slots(), 2);
+        }
+        assert_eq!(s.total_work(), 3);
+    }
+
+    #[test]
+    fn block_structure_keeps_broadcast_shared() {
+        // two groups each work token 0 at the same block start: 1 transfer
+        let m = ChoiceMatrix::from_rows(&[vec![0, 2]], 4);
+        let g = Grouping::sorted(&[1.0, 0.0, 1.0, 0.0], 2); // {0,1},{2,3}-ish
+        let s = build(&m, &g);
+        assert_eq!(s.transfers(), 1);
+    }
+
+    #[test]
+    fn empty_tokens_skipped() {
+        let m = ChoiceMatrix::new(5, 4); // nobody selected
+        let s = build(&m, &Grouping::singleton(4));
+        assert_eq!(s.makespan_slots(), 0);
+        assert_eq!(s.total_work(), 0);
+    }
+}

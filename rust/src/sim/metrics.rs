@@ -1,0 +1,163 @@
+//! Metric types produced by the simulator: per-stage latency/energy with an
+//! operator breakdown, plus the derived efficiency figures the paper
+//! reports (GOPS, GOPS/mm², GOPS/W/mm²).
+//!
+//! Conventions:
+//! * latency in ns, energy in nJ, area in mm²;
+//! * `macs` counts MAC operations *executed by the hardware* (recomputation
+//!   included) — GOPS is hardware throughput, as an accelerator reports it;
+//! * GOPS = 2·macs / latency_ns (multiply-accumulate = 2 ops, latency in ns
+//!   makes the ratio come out in 1e9 ops/s);
+//! * GOPS/W = 2·macs / energy_nj (ops per nJ == Gops/s per W);
+//! * density GOPS/W/mm² divides by the MoE-linear-cores area (§IV-A scope).
+
+/// Additive cost breakdown of one stage (prefill, one decode step, or sums).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    pub attn_ns: f64,
+    pub attn_nj: f64,
+    pub gate_ns: f64,
+    pub gate_nj: f64,
+    pub moe_ns: f64,
+    pub moe_nj: f64,
+    pub dram_ns: f64,
+    pub dram_nj: f64,
+}
+
+impl Breakdown {
+    pub fn add(&mut self, o: &Breakdown) {
+        self.attn_ns += o.attn_ns;
+        self.attn_nj += o.attn_nj;
+        self.gate_ns += o.gate_ns;
+        self.gate_nj += o.gate_nj;
+        self.moe_ns += o.moe_ns;
+        self.moe_nj += o.moe_nj;
+        self.dram_ns += o.dram_ns;
+        self.dram_nj += o.dram_nj;
+    }
+}
+
+/// Cost of one simulated stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageMetrics {
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub breakdown: Breakdown,
+    /// PIM core activations
+    pub activations: u64,
+    /// activation-vector broadcasts into group DACs
+    pub transfers: u64,
+    /// MACs executed (PIM + digital)
+    pub macs: u64,
+}
+
+impl StageMetrics {
+    pub fn add(&mut self, o: &StageMetrics) {
+        self.latency_ns += o.latency_ns;
+        self.energy_nj += o.energy_nj;
+        self.breakdown.add(&o.breakdown);
+        self.activations += o.activations;
+        self.transfers += o.transfers;
+        self.macs += o.macs;
+    }
+
+    pub fn gops(&self) -> f64 {
+        if self.latency_ns == 0.0 {
+            0.0
+        } else {
+            2.0 * self.macs as f64 / self.latency_ns
+        }
+    }
+
+    pub fn gops_per_w(&self) -> f64 {
+        if self.energy_nj == 0.0 {
+            0.0
+        } else {
+            2.0 * self.macs as f64 / self.energy_nj
+        }
+    }
+}
+
+/// Full-inference report: prefill + decode totals plus area-derived
+/// efficiency (what Table I prints).
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub label: String,
+    pub cache_label: &'static str,
+    pub prefill: StageMetrics,
+    /// per-step decode metrics, in generation order
+    pub decode_steps: Vec<StageMetrics>,
+    pub moe_area_mm2: f64,
+}
+
+impl InferenceReport {
+    pub fn decode_total(&self) -> StageMetrics {
+        let mut total = StageMetrics::default();
+        for s in &self.decode_steps {
+            total.add(s);
+        }
+        total
+    }
+
+    pub fn total(&self) -> StageMetrics {
+        let mut t = self.prefill;
+        t.add(&self.decode_total());
+        t
+    }
+
+    /// Area efficiency over the whole inference, GOPS/mm² (Fig. 5's y-axis).
+    pub fn gops_per_mm2(&self) -> f64 {
+        self.total().gops() / self.moe_area_mm2
+    }
+
+    /// Performance density, GOPS/W/mm² (Table I's bottom row).
+    pub fn density(&self) -> f64 {
+        self.total().gops_per_w() / self.moe_area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(lat: f64, nj: f64, macs: u64) -> StageMetrics {
+        StageMetrics {
+            latency_ns: lat,
+            energy_nj: nj,
+            macs,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn addition() {
+        let mut a = stage(10.0, 5.0, 100);
+        a.add(&stage(5.0, 2.0, 50));
+        assert_eq!(a.latency_ns, 15.0);
+        assert_eq!(a.energy_nj, 7.0);
+        assert_eq!(a.macs, 150);
+    }
+
+    #[test]
+    fn gops_definition() {
+        let s = stage(100.0, 50.0, 1000);
+        assert!((s.gops() - 20.0).abs() < 1e-9); // 2*1000/100
+        assert!((s.gops_per_w() - 40.0).abs() < 1e-9); // 2*1000/50
+        assert_eq!(stage(0.0, 0.0, 10).gops(), 0.0);
+    }
+
+    #[test]
+    fn report_totals() {
+        let r = InferenceReport {
+            label: "test".into(),
+            cache_label: "no cache",
+            prefill: stage(100.0, 10.0, 500),
+            decode_steps: vec![stage(10.0, 1.0, 50), stage(10.0, 1.0, 50)],
+            moe_area_mm2: 2.0,
+        };
+        assert_eq!(r.total().latency_ns, 120.0);
+        assert_eq!(r.decode_total().macs, 100);
+        assert!((r.gops_per_mm2() - (2.0 * 600.0 / 120.0) / 2.0).abs() < 1e-9);
+        assert!((r.density() - (2.0 * 600.0 / 12.0) / 2.0).abs() < 1e-9);
+    }
+}

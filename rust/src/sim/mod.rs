@@ -1,0 +1,10 @@
+//! Operator-level PIM simulator: [`engine::Simulator`] prices a whole
+//! inference (prefill + decode) under any grouping/schedule/cache
+//! configuration; [`metrics`] defines the report types.
+
+pub mod engine;
+pub mod metrics;
+pub mod pipeline;
+
+pub use engine::Simulator;
+pub use metrics::{Breakdown, InferenceReport, StageMetrics};

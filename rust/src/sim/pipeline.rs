@@ -1,0 +1,98 @@
+//! Whole-model extension: the paper simulates a single transformer block
+//! ("all blocks have the same size", §IV-A); this module lifts one-layer
+//! reports to the 32-block Llama-MoE-4/16 model under two deployment
+//! styles:
+//!
+//! * **sequential** — one chip holds one layer's MoE; blocks execute
+//!   back-to-back (latency and energy scale by `n_layers`, area stays one
+//!   layer's);
+//! * **spatial pipeline** — every block has its own crossbar complement
+//!   (area scales by `n_layers`) and consecutive *requests* stream through
+//!   the layer pipeline, so steady-state throughput is bounded by the
+//!   slowest stage while a single request's latency still sums all stages.
+
+use crate::sim::metrics::InferenceReport;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deployment {
+    Sequential,
+    SpatialPipeline,
+}
+
+/// Whole-model estimates derived from a single-layer report.
+#[derive(Debug, Clone)]
+pub struct ModelEstimate {
+    pub deployment: Deployment,
+    pub n_layers: usize,
+    /// one full inference (prefill + decode), ns
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub area_mm2: f64,
+    /// steady-state request throughput, requests/s
+    pub throughput_rps: f64,
+}
+
+pub fn scale_to_model(report: &InferenceReport, n_layers: usize,
+                      deployment: Deployment) -> ModelEstimate {
+    let t = report.total();
+    let layers = n_layers as f64;
+    match deployment {
+        Deployment::Sequential => ModelEstimate {
+            deployment,
+            n_layers,
+            latency_ns: t.latency_ns * layers,
+            energy_nj: t.energy_nj * layers,
+            area_mm2: report.moe_area_mm2,
+            // chip is busy for the whole request
+            throughput_rps: 1e9 / (t.latency_ns * layers),
+        },
+        Deployment::SpatialPipeline => ModelEstimate {
+            deployment,
+            n_layers,
+            latency_ns: t.latency_ns * layers,
+            energy_nj: t.energy_nj * layers,
+            area_mm2: report.moe_area_mm2 * layers,
+            // a new request can enter every stage-time
+            throughput_rps: 1e9 / t.latency_ns,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::Simulator;
+
+    fn one_layer() -> InferenceReport {
+        Simulator::paper(SimConfig::s2o_kvgo()).run()
+    }
+
+    #[test]
+    fn sequential_scales_time_not_area() {
+        let r = one_layer();
+        let m = scale_to_model(&r, 32, Deployment::Sequential);
+        assert!((m.latency_ns - r.total().latency_ns * 32.0).abs() < 1e-3);
+        assert_eq!(m.area_mm2, r.moe_area_mm2);
+    }
+
+    #[test]
+    fn pipeline_scales_area_not_throughput_cost() {
+        let r = one_layer();
+        let seq = scale_to_model(&r, 32, Deployment::Sequential);
+        let pipe = scale_to_model(&r, 32, Deployment::SpatialPipeline);
+        assert!((pipe.area_mm2 - r.moe_area_mm2 * 32.0).abs() < 1e-6);
+        assert!((pipe.throughput_rps / seq.throughput_rps - 32.0).abs()
+                < 1e-6);
+        // same single-request latency either way
+        assert_eq!(pipe.latency_ns, seq.latency_ns);
+    }
+
+    #[test]
+    fn energy_is_deployment_independent() {
+        let r = one_layer();
+        let a = scale_to_model(&r, 32, Deployment::Sequential);
+        let b = scale_to_model(&r, 32, Deployment::SpatialPipeline);
+        assert_eq!(a.energy_nj, b.energy_nj);
+    }
+}

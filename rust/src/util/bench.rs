@@ -1,0 +1,141 @@
+//! Mini bench harness — in-tree substitute for criterion (offline image).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]
+//! directly.  The harness warms up, auto-tunes the iteration count to a
+//! target sample time, collects per-sample wall-clock means, and prints a
+//! criterion-flavoured `time: [lo mid hi]` line so existing tooling that
+//! greps bench output keeps working.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            sample_time: Duration::from_millis(120),
+            samples: 20,
+        }
+    }
+}
+
+pub struct Bench {
+    cfg: BenchConfig,
+    group: String,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub lo_ns: f64,
+    pub mid_ns: f64,
+    pub hi_ns: f64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        println!("\nbench group: {group}");
+        Bench { cfg: BenchConfig::default(), group: group.to_string() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Bench {
+        println!("\nbench group: {group}");
+        Bench { cfg, group: group.to_string() }
+    }
+
+    /// Benchmark `f`, printing a criterion-style line.  Returns the stats so
+    /// callers can assert regressions.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup + estimate single-iteration cost.
+        let warm_start = Instant::now();
+        let mut iters_done: u64 = 0;
+        while warm_start.elapsed() < self.cfg.warmup {
+            black_box(f());
+            iters_done += 1;
+        }
+        let per_iter =
+            warm_start.elapsed().as_secs_f64() / iters_done.max(1) as f64;
+        let iters_per_sample = ((self.cfg.sample_time.as_secs_f64() / per_iter)
+            .ceil() as u64)
+            .max(1);
+
+        let mut means = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            means.push(t.elapsed().as_secs_f64() * 1e9
+                / iters_per_sample as f64);
+        }
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            lo_ns: means[means.len() / 20],
+            mid_ns: means[means.len() / 2],
+            hi_ns: means[means.len() - 1 - means.len() / 20],
+        };
+        println!(
+            "{}/{name}  time: [{} {} {}]  ({} it/sample)",
+            self.group,
+            fmt_ns(stats.lo_ns),
+            fmt_ns(stats.mid_ns),
+            fmt_ns(stats.hi_ns),
+            iters_per_sample,
+        );
+        stats
+    }
+
+    /// Report a derived metric (e.g. simulated ns, GOPS) alongside timings —
+    /// used by the figure benches to print the paper's numbers.
+    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+        println!("{}/{name}  metric: {value:.4} {unit}", self.group);
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.2} ns")
+    } else if ns < 1e6 {
+        format!("{:.3} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(12.0), "12.00 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.1e9), "3.100 s");
+    }
+
+    #[test]
+    fn runs_and_orders_stats() {
+        let b = Bench::with_config(
+            "test",
+            BenchConfig {
+                warmup: Duration::from_millis(5),
+                sample_time: Duration::from_millis(2),
+                samples: 5,
+            },
+        );
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.lo_ns <= s.mid_ns && s.mid_ns <= s.hi_ns);
+        assert!(s.mid_ns < 1e6); // a no-op is far under 1ms
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny argv parser — in-tree substitute for clap (offline image).
+//!
+//! Supports `subcommand --flag value --flag=value --bool-flag positional`.
+//! The launcher (`main.rs`) defines its own usage text; this module only
+//! tokenises and type-checks.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  The first non-flag token becomes the subcommand;
+    /// later non-flag tokens are positional.  `--flag value` consumes the
+    /// next token unless it starts with `--`; bare `--flag` stores "true".
+    ///
+    /// Ambiguity note: `--bool positional` reads the positional as the
+    /// flag's value — write boolean flags last or as `--flag=true`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    args.flags
+                        .insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate x --group-size 4 --sched=resched --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.usize_flag("group-size", 2), 4);
+        assert_eq!(a.str_flag("sched", ""), "resched");
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.usize_flag("gen", 8), 8);
+        assert_eq!(a.f64_flag("ratio", 0.4), 0.4);
+        assert!(!a.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_value_looking_like_negative_number() {
+        let a = parse("x --offset -3");
+        // '-3' does not start with --, so it is consumed as the value
+        assert_eq!(a.str_flag("offset", ""), "-3");
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,49 @@
+//! Small in-tree substitutes for crates unavailable in this offline image
+//! (serde/serde_json, rand, clap, criterion, proptest — see Cargo.toml note),
+//! plus shared formatting helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a nanosecond quantity with thousands separators (paper tables
+/// print e.g. `2,297,724`).
+pub fn fmt_thousands(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format a float to `prec` significant-looking decimals without trailing
+/// zeros noise (for report tables).
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thousands() {
+        assert_eq!(fmt_thousands(0), "0");
+        assert_eq!(fmt_thousands(999), "999");
+        assert_eq!(fmt_thousands(1000), "1,000");
+        assert_eq!(fmt_thousands(2297724), "2,297,724");
+        assert_eq!(fmt_thousands(5393776), "5,393,776");
+    }
+
+    #[test]
+    fn floats() {
+        assert_eq!(fmt_f(15.61234, 1), "15.6");
+    }
+}

@@ -1,0 +1,168 @@
+//! Deterministic PRNG (PCG32 + SplitMix64 seeding) — in-tree substitute for
+//! the `rand` crate (offline image).  Everything that samples (trace
+//! generation, uniform grouping, property tests) goes through this so runs
+//! are reproducible from a single `u64` seed.
+
+/// PCG32 (Melissa O'Neill's `pcg32_random_r`): small, fast, statistically
+/// solid for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Seed via SplitMix64 so nearby seeds give uncorrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let mut rng = Pcg32 { state: 0, inc: next() | 1 };
+        rng.state = next();
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` (Lemire-ish rejection via modulo of a wide
+    /// product; bias < 2^-32, fine for simulation).
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be positive");
+        ((self.next_u32() as u64 * bound as u64) >> 32) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed index in `[0, n)` with exponent `s` (inverse-CDF on
+    /// precomputed weights is overkill here; n is small — #experts).
+    pub fn gen_zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        let total: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut u = self.gen_f64() * total;
+        for k in 1..=n {
+            u -= (k as f64).powf(-s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Pcg32::new(7);
+        for _ in 0..10_000 {
+            assert!(r.gen_range(16) < 16);
+        }
+        // all values hit
+        let mut seen = [false; 16];
+        for _ in 0..10_000 {
+            seen[r.gen_range(16)] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg32::new(9);
+        let mut acc = 0.0;
+        for _ in 0..10_000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            acc += v;
+        }
+        let mean = acc / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(13);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_low() {
+        let mut r = Pcg32::new(17);
+        let mut counts = [0usize; 8];
+        for _ in 0..20_000 {
+            counts[r.gen_zipf(8, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[3], "{counts:?}");
+        assert!(counts[0] > counts[7] * 3, "{counts:?}");
+    }
+}

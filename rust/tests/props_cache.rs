@@ -1,0 +1,144 @@
+//! Property tests for the GO cache: the streaming `TopKUpdate` (Eq. 4-5)
+//! must select exactly what a batch expert-choice router over the full
+//! token set would select, under any score stream, capacity and prefix —
+//! the paper's correctness claim for the cache, mirrored by python's
+//! tests/test_routing.py.
+
+use moepim::cache::{GoCache, KvCache};
+use moepim::moe::gate::expert_choice_route;
+use moepim::util::prop::{self, Gen};
+use moepim::util::rng::Pcg32;
+
+fn scores(g: &mut Gen, t: usize, e: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(g.case_seed ^ 0x5C0E);
+    (0..t * e).map(|_| rng.gen_normal() as f32).collect()
+}
+
+#[test]
+fn streaming_topk_equals_batch_topk() {
+    prop::check(250, |g| {
+        let e = *[2usize, 4, 8, 16].get(g.usize(4)).unwrap();
+        let total = g.size(2, 48).max(2);
+        let prefix = g.size(1, total - 1).max(1);
+        let cap = g.size(1, prefix).max(1);
+        let s = scores(g, total, e);
+
+        let pre = expert_choice_route(&s[..prefix * e], prefix, e, cap, None);
+        let mut cache = GoCache::new(e, cap, 0);
+        cache.seed_from_routing(&pre);
+        for t in prefix..total {
+            cache.update_scores(t, &s[t * e..(t + 1) * e]);
+        }
+
+        let full = expert_choice_route(&s, total, e, cap, None);
+        for x in 0..e {
+            assert_eq!(
+                cache.selected_tokens(x),
+                full.choices.tokens_of(x),
+                "expert {x}, prefix {prefix}, cap {cap}, total {total}"
+            );
+        }
+    });
+}
+
+#[test]
+fn ties_resolve_to_earlier_token_both_ways() {
+    prop::check(100, |g| {
+        // quantised scores force ties
+        let e = 4;
+        let total = g.size(4, 24).max(4);
+        let cap = g.size(1, 3).max(1);
+        let mut rng = Pcg32::new(g.case_seed);
+        let s: Vec<f32> = (0..total * e)
+            .map(|_| (rng.gen_range(3) as f32) * 0.5)
+            .collect();
+        let pre = expert_choice_route(&s[..cap * e], cap, e, cap, None);
+        let mut cache = GoCache::new(e, cap, 0);
+        cache.seed_from_routing(&pre);
+        for t in cap..total {
+            cache.update_scores(t, &s[t * e..(t + 1) * e]);
+        }
+        let full = expert_choice_route(&s, total, e, cap, None);
+        for x in 0..e {
+            assert_eq!(cache.selected_tokens(x), full.choices.tokens_of(x));
+        }
+    });
+}
+
+#[test]
+fn at_most_one_eviction_per_expert_per_step() {
+    prop::check(150, |g| {
+        let e = 8;
+        let cap = g.size(1, 6).max(1);
+        let steps = g.size(cap, 40).max(cap);
+        let mut cache = GoCache::new(e, cap, 0);
+        for t in 0..steps {
+            let row: Vec<f32> =
+                (0..e).map(|_| g.normal() as f32).collect();
+            let before: Vec<Vec<usize>> =
+                (0..e).map(|x| cache.selected_tokens(x)).collect();
+            let upd = cache.update_probs(t, &row);
+            assert_eq!(upd.selected.len(), upd.evicted.len());
+            for x in 0..e {
+                let after = cache.selected_tokens(x);
+                assert!(after.len() <= cap);
+                let removed = before[x]
+                    .iter()
+                    .filter(|tk| !after.contains(tk))
+                    .count();
+                assert!(removed <= 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn selection_threshold_never_decreases() {
+    // each expert's cached minimum is monotone non-decreasing over the
+    // stream — the property that lets the chip keep one comparator per
+    // expert instead of re-sorting
+    prop::check(150, |g| {
+        let e = 4;
+        let cap = g.size(1, 4).max(1);
+        let steps = g.size(cap + 1, 32).max(cap + 1);
+        let mut cache = GoCache::new(e, cap, 0);
+        let mut last_min = vec![f32::NEG_INFINITY; e];
+        for t in 0..steps {
+            let row: Vec<f32> =
+                (0..e).map(|_| g.normal() as f32).collect();
+            cache.update_probs(t, &row);
+            for x in 0..e {
+                if let Some(th) = cache.threshold(x) {
+                    assert!(
+                        th.prob >= last_min[x],
+                        "expert {x} threshold decreased"
+                    );
+                    last_min[x] = th.prob;
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn kv_cache_roundtrips_rows() {
+    prop::check(100, |g| {
+        let h = g.size(1, 4).max(1);
+        let dh = g.size(1, 16).max(1);
+        let max = g.size(2, 24).max(2);
+        let mut kv = KvCache::new(max, h, dh);
+        let r = h * dh;
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let n = g.size(1, max).max(1);
+        for i in 0..n {
+            let row: Vec<f32> =
+                (0..r).map(|j| (i * r + j) as f32).collect();
+            kv.append(&row, &row);
+            rows.push(row);
+        }
+        assert_eq!(kv.len(), n);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(kv.row_k(i), row.as_slice());
+        }
+    });
+}

@@ -1,0 +1,145 @@
+//! Property tests for expert grouping: partition validity for every policy
+//! and the statistical guarantee of §III-B — workload-sorted grouping
+//! balances group loads at least as well as random assignment.
+
+use moepim::grouping::{stats, Grouping};
+use moepim::moe::TraceGenerator;
+use moepim::util::prop::{self, Gen};
+use moepim::util::rng::Pcg32;
+
+fn loads(g: &mut Gen, e: usize) -> Vec<f64> {
+    let mut rng = Pcg32::new(g.case_seed ^ 0x10AD);
+    (0..e).map(|_| rng.gen_f64() * 100.0).collect()
+}
+
+#[test]
+fn every_policy_partitions_experts() {
+    prop::check(150, |g| {
+        let e = *[4usize, 8, 16, 32].get(g.usize(4)).unwrap();
+        let gs = *[1usize, 2, 4].get(g.usize(3)).unwrap();
+        let gs = if e % gs == 0 { gs } else { 1 };
+        let l = loads(g, e);
+        for grouping in [
+            Grouping::singleton(e),
+            Grouping::uniform(e, gs, g.case_seed),
+            Grouping::sorted(&l, gs),
+        ] {
+            let mut all: Vec<usize> = grouping.groups.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..e).collect::<Vec<_>>());
+            for (x, &gi) in grouping.group_of.iter().enumerate() {
+                assert!(grouping.groups[gi].contains(&x));
+            }
+        }
+    });
+}
+
+#[test]
+fn sorted_groups_have_equal_size() {
+    prop::check(100, |g| {
+        let e = 16;
+        let gs = *[2usize, 4, 8].get(g.usize(3)).unwrap();
+        let grouping = Grouping::sorted(&loads(g, e), gs);
+        assert_eq!(grouping.n_groups(), e / gs);
+        for grp in &grouping.groups {
+            assert_eq!(grp.len(), gs);
+        }
+    });
+}
+
+#[test]
+fn sorted_imbalance_not_worse_than_uniform_mean() {
+    // averaged over several uniform seeds, sorted grouping's max/mean group
+    // load must be at least as good — the §III-B claim
+    prop::check(60, |g| {
+        let e = 16;
+        let gs = *[2usize, 4].get(g.usize(2)).unwrap();
+        let l = loads(g, e);
+        let sorted = Grouping::sorted(&l, gs).imbalance(&l);
+        let mut uni_sum = 0.0;
+        let trials = 16;
+        for s in 0..trials {
+            uni_sum +=
+                Grouping::uniform(e, gs, g.case_seed ^ s).imbalance(&l);
+        }
+        let uni_mean = uni_sum / trials as f64;
+        assert!(
+            sorted <= uni_mean + 1e-9,
+            "sorted {sorted:.4} vs uniform mean {uni_mean:.4} (g={gs})"
+        );
+    });
+}
+
+#[test]
+fn sorted_pairing_is_optimal_for_two() {
+    // for g=2 the lowest-with-highest pairing minimises the max pair sum
+    // (classic two-partition result); verify against brute force on small E
+    prop::check(40, |g| {
+        let e = 6;
+        let l = loads(g, e);
+        let sorted = Grouping::sorted(&l, 2);
+        let best = brute_force_best_pairing(&l);
+        let got = sorted
+            .group_loads(&l)
+            .into_iter()
+            .fold(f64::MIN, f64::max);
+        assert!(
+            got <= best + 1e-9,
+            "sorted pairing max {got:.4} vs optimal {best:.4}"
+        );
+    });
+}
+
+fn brute_force_best_pairing(loads: &[f64]) -> f64 {
+    // minimal possible max-pair-sum over all perfect matchings of 6 items
+    let idx: Vec<usize> = (0..loads.len()).collect();
+    let mut best = f64::MAX;
+    fn rec(rem: Vec<usize>, cur_max: f64, loads: &[f64], best: &mut f64) {
+        if rem.is_empty() {
+            *best = best.min(cur_max);
+            return;
+        }
+        let a = rem[0];
+        for i in 1..rem.len() {
+            let b = rem[i];
+            let pair = loads[a] + loads[b];
+            let mut next = rem.clone();
+            next.remove(i);
+            next.remove(0);
+            rec(next, cur_max.max(pair), loads, best);
+        }
+    }
+    rec(idx, f64::MIN, loads, &mut best);
+    best
+}
+
+#[test]
+fn trace_based_calibration_feeds_sorted_grouping() {
+    prop::check(30, |g| {
+        let e = 16;
+        let mut tg = TraceGenerator::new(e, g.case_seed);
+        let traces: Vec<_> =
+            (0..4).map(|_| tg.token_choice_zipf(64, 4, 1.0)).collect();
+        let l = stats::mean_loads(&traces);
+        assert_eq!(l.len(), e);
+        let total: f64 = l.iter().sum();
+        assert!((total - 256.0).abs() < 1e-6); // 64 tokens * k=4
+        // grouping on these loads is a valid partition
+        let grouping = Grouping::sorted(&l, 2);
+        assert_eq!(grouping.n_groups(), 8);
+    });
+}
+
+#[test]
+fn load_cv_detects_imbalance() {
+    prop::check(60, |g| {
+        let e = 8;
+        let mut tg = TraceGenerator::new(e, g.case_seed);
+        let balanced = tg.expert_choice(32, 8, 1.0);
+        let skewed = tg.token_choice_zipf(256, 4, 1.5);
+        let cv_b = stats::load_cv(&stats::loads_of(&balanced));
+        let cv_s = stats::load_cv(&stats::loads_of(&skewed));
+        assert!(cv_b < 1e-9, "expert-choice is exactly balanced");
+        assert!(cv_s > 0.1, "zipf token-choice must be imbalanced");
+    });
+}

@@ -1,0 +1,147 @@
+//! Property tests for the scheduler (in-tree prop harness, DESIGN.md §0):
+//! the invariants Algorithm 1 must uphold on *any* choice matrix and
+//! grouping, not just the paper's workloads.
+
+use moepim::config::SchedulePolicy;
+use moepim::grouping::Grouping;
+use moepim::moe::{ChoiceMatrix, TraceGenerator};
+use moepim::sched::{self, compact};
+use moepim::util::prop::{self, Gen};
+
+/// Random (choices, grouping) instance.
+fn instance(g: &mut Gen) -> (ChoiceMatrix, Grouping) {
+    let e = *[4usize, 8, 16].get(g.usize(3)).unwrap();
+    let tokens = g.size(1, 64);
+    let mode = g.usize(3);
+    let mut tg = TraceGenerator::new(e, g.case_seed ^ 0xABCD);
+    let choices = match mode {
+        0 => tg.expert_choice(tokens, (tokens / 2).max(1), 1.0),
+        1 => tg.token_choice_zipf(tokens, (e / 4).max(1), 1.2),
+        _ => {
+            // fully random sparse matrix, including empty rows
+            let mut m = ChoiceMatrix::new(tokens, e);
+            for t in 0..tokens {
+                for x in 0..e {
+                    if g.bool(0.2) {
+                        m.set(t, x, true);
+                    }
+                }
+            }
+            m
+        }
+    };
+    let group_size = *[1usize, 2, 4].get(g.usize(3)).unwrap();
+    let group_size = if e % group_size == 0 { group_size } else { 1 };
+    let grouping = Grouping::uniform(e, group_size, g.case_seed);
+    (choices, grouping)
+}
+
+#[test]
+fn work_is_conserved_by_all_policies() {
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        for p in [SchedulePolicy::TokenWise, SchedulePolicy::Compact,
+                  SchedulePolicy::Reschedule] {
+            let s = sched::build(&m, &gr, p);
+            assert_eq!(s.total_work(), m.total_work(), "{p:?}");
+        }
+    });
+}
+
+#[test]
+fn per_group_order_is_preserved() {
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        let queues = compact::group_queues(&m, &gr);
+        for p in [SchedulePolicy::Compact, SchedulePolicy::Reschedule] {
+            let s = sched::build(&m, &gr, p);
+            for (i, q) in queues.iter().enumerate() {
+                assert_eq!(&s.lane_work(i), q, "{p:?} lane {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn reschedule_keeps_compact_makespan() {
+    prop::check(200, |g| {
+        let (m, gr) = instance(g);
+        let c = sched::build(&m, &gr, SchedulePolicy::Compact);
+        let o = sched::build(&m, &gr, SchedulePolicy::Reschedule);
+        assert_eq!(o.makespan_slots(), c.makespan_slots());
+    });
+}
+
+#[test]
+fn reschedule_never_increases_transfers() {
+    prop::check(200, |g| {
+        let (m, gr) = instance(g);
+        let c = sched::build(&m, &gr, SchedulePolicy::Compact);
+        let o = sched::build(&m, &gr, SchedulePolicy::Reschedule);
+        assert!(o.transfers() <= c.transfers(),
+                "O {} > C {}", o.transfers(), c.transfers());
+    });
+}
+
+#[test]
+fn compact_makespan_is_bottleneck_group() {
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        let c = sched::build(&m, &gr, SchedulePolicy::Compact);
+        let bottleneck = compact::group_queues(&m, &gr)
+            .iter()
+            .map(Vec::len)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(c.makespan_slots(), bottleneck);
+    });
+}
+
+#[test]
+fn tokenwise_never_faster_than_compact() {
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        let t = sched::build(&m, &gr, SchedulePolicy::TokenWise);
+        let c = sched::build(&m, &gr, SchedulePolicy::Compact);
+        assert!(t.makespan_slots() >= c.makespan_slots());
+    });
+}
+
+#[test]
+fn tokenwise_transfers_equal_active_tokens() {
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        let t = sched::build(&m, &gr, SchedulePolicy::TokenWise);
+        let active =
+            (0..m.tokens()).filter(|&tk| m.token_fanout(tk) > 0).count();
+        assert_eq!(t.transfers(), active);
+    });
+}
+
+#[test]
+fn transfers_lower_bound_is_distinct_tokens() {
+    // no schedule can transfer fewer times than the number of distinct
+    // tokens with work (each must reach the chip at least once)
+    prop::check(150, |g| {
+        let (m, gr) = instance(g);
+        let active =
+            (0..m.tokens()).filter(|&tk| m.token_fanout(tk) > 0).count();
+        for p in [SchedulePolicy::TokenWise, SchedulePolicy::Compact,
+                  SchedulePolicy::Reschedule] {
+            let s = sched::build(&m, &gr, p);
+            assert!(s.transfers() >= active, "{p:?}");
+        }
+    });
+}
+
+#[test]
+fn utilization_bounded() {
+    prop::check(100, |g| {
+        let (m, gr) = instance(g);
+        for p in [SchedulePolicy::TokenWise, SchedulePolicy::Compact,
+                  SchedulePolicy::Reschedule] {
+            let u = sched::build(&m, &gr, p).utilization();
+            assert!((0.0..=1.0).contains(&u), "{p:?}: {u}");
+        }
+    });
+}

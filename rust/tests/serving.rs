@@ -1,0 +1,75 @@
+//! Coordinator/server integration: batched serving over the real model
+//! (requires `make artifacts`), including failure injection for bad
+//! requests and artifact-directory errors.
+
+use std::path::PathBuf;
+
+use moepim::coordinator::{Request, Server};
+use moepim::util::rng::Pcg32;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("MOEPIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg32::new(seed);
+    (0..len).map(|_| rng.gen_range(512) as i32).collect()
+}
+
+#[test]
+fn server_lifecycle_and_batching() {
+    let server = Server::spawn(artifacts_dir()).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    );
+
+    // concurrent requests of different lengths interleave and all finish
+    let rxs: Vec<_> = (0..4u64)
+        .map(|i| {
+            server.submit(Request {
+                id: i,
+                prompt: prompt(8 + 4 * i as usize, i),
+                gen_len: 3 + i as usize,
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.tokens.len(), 3 + i);
+        assert!(resp.latency_us >= resp.ttft_us);
+    }
+
+    // identical prompts give identical streams (deterministic serving)
+    let a = server.generate(100, prompt(16, 77), 5).unwrap();
+    let b = server.generate(101, prompt(16, 77), 5).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+
+    // generation clamps at max_seq rather than wedging the router
+    let resp = server.generate(102, prompt(16, 5), 10_000).unwrap();
+    assert!(!resp.tokens.is_empty());
+    assert!(resp.tokens.len() <= 96);
+
+    // an oversized prompt is rejected per-request; the server survives and
+    // keeps serving
+    let rx = server.submit(Request {
+        id: 103,
+        prompt: prompt(500, 9),
+        gen_len: 4,
+    });
+    assert!(
+        rx.recv().is_err(),
+        "oversized prompt must fail its own channel only"
+    );
+    let after = server.generate(104, prompt(8, 11), 2).unwrap();
+    assert_eq!(after.tokens.len(), 2);
+}
+
+#[test]
+fn spawn_fails_cleanly_on_bad_dir() {
+    let err = Server::spawn(PathBuf::from("/nonexistent/artifacts"));
+    assert!(err.is_err());
+}

@@ -1,0 +1,150 @@
+//! Simulator-level invariants across random configurations: cache-regime
+//! orderings, monotonicity, determinism, and breakdown consistency.
+
+use moepim::config::{
+    CachePolicy, GroupingPolicy, RoutingMode, SchedulePolicy, SimConfig,
+};
+use moepim::sim::Simulator;
+use moepim::util::prop::{self, Gen};
+
+fn random_cfg(g: &mut Gen) -> SimConfig {
+    let mut cfg = SimConfig::baseline();
+    cfg.group_size = *[1usize, 2, 4].get(g.usize(3)).unwrap();
+    cfg.grouping = match g.usize(2) {
+        0 => GroupingPolicy::Uniform,
+        _ => GroupingPolicy::Sorted,
+    };
+    cfg.schedule = match g.usize(3) {
+        0 => SchedulePolicy::TokenWise,
+        1 => SchedulePolicy::Compact,
+        _ => SchedulePolicy::Reschedule,
+    };
+    cfg.prompt_len = g.size(8, 48).max(8);
+    cfg.gen_len = g.size(1, 16).max(1);
+    cfg.skew = g.f64() * 1.5;
+    cfg.seed = g.case_seed;
+    cfg
+}
+
+#[test]
+fn cache_regime_latency_ordering() {
+    prop::check(40, |g| {
+        let base = random_cfg(g);
+        let run = |cache: CachePolicy| {
+            let mut c = base.clone();
+            c.cache = cache;
+            Simulator::paper(c).run().decode_total()
+        };
+        let none = run(CachePolicy::NONE);
+        let kv = run(CachePolicy::KV);
+        let go = run(CachePolicy::GO);
+        let kvgo = run(CachePolicy::KVGO);
+        assert!(kvgo.latency_ns <= kv.latency_ns * 1.0001);
+        assert!(kvgo.latency_ns <= go.latency_ns * 1.0001);
+        assert!(kv.latency_ns <= none.latency_ns * 1.0001);
+        assert!(go.latency_ns <= none.latency_ns * 1.0001);
+        assert!(kvgo.energy_nj <= none.energy_nj * 1.0001);
+    });
+}
+
+#[test]
+fn totals_equal_breakdown_sums() {
+    prop::check(40, |g| {
+        let mut cfg = random_cfg(g);
+        cfg.cache = CachePolicy::KVGO;
+        let r = Simulator::paper(cfg).run();
+        for (i, s) in
+            std::iter::once(&r.prefill).chain(&r.decode_steps).enumerate()
+        {
+            let b = &s.breakdown;
+            let lat = b.attn_ns + b.gate_ns + b.moe_ns + b.dram_ns;
+            let nrg = b.attn_nj + b.gate_nj + b.moe_nj + b.dram_nj;
+            assert!((lat - s.latency_ns).abs() < 1e-6, "stage {i} latency");
+            assert!((nrg - s.energy_nj).abs() < 1e-6, "stage {i} energy");
+        }
+    });
+}
+
+#[test]
+fn decode_cost_monotone_in_gen_len() {
+    prop::check(30, |g| {
+        let mut a = random_cfg(g);
+        a.gen_len = g.size(1, 8).max(1);
+        let mut b = a.clone();
+        b.gen_len = a.gen_len + g.size(1, 16).max(1);
+        let ra = Simulator::paper(a).run();
+        let rb = Simulator::paper(b).run();
+        assert!(rb.decode_total().latency_ns > ra.decode_total().latency_ns);
+        assert!(rb.decode_total().energy_nj > ra.decode_total().energy_nj);
+    });
+}
+
+#[test]
+fn runs_are_deterministic() {
+    prop::check(20, |g| {
+        let cfg = random_cfg(g);
+        let a = Simulator::paper(cfg.clone()).run();
+        let b = Simulator::paper(cfg).run();
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.moe_area_mm2, b.moe_area_mm2);
+    });
+}
+
+#[test]
+fn area_independent_of_schedule_and_cache() {
+    prop::check(30, |g| {
+        let a = random_cfg(g);
+        let mut b = a.clone();
+        b.schedule = SchedulePolicy::Compact;
+        b.cache = CachePolicy::KVGO;
+        let ra = Simulator::paper(a).run();
+        let rb = Simulator::paper(b).run();
+        assert_eq!(ra.moe_area_mm2, rb.moe_area_mm2);
+    });
+}
+
+#[test]
+fn all_metrics_finite_and_positive() {
+    prop::check(60, |g| {
+        let mut cfg = random_cfg(g);
+        cfg.routing = if g.bool(0.5) {
+            RoutingMode::ExpertChoice
+        } else {
+            RoutingMode::TokenChoice
+        };
+        cfg.cache = *[CachePolicy::NONE, CachePolicy::KV, CachePolicy::GO,
+                      CachePolicy::KVGO]
+            .get(g.usize(4))
+            .unwrap();
+        let r = Simulator::paper(cfg).run();
+        let t = r.total();
+        assert!(t.latency_ns.is_finite() && t.latency_ns > 0.0);
+        assert!(t.energy_nj.is_finite() && t.energy_nj > 0.0);
+        assert!(t.macs > 0);
+        assert!(r.density().is_finite() && r.density() > 0.0);
+        assert!(r.gops_per_mm2().is_finite());
+    });
+}
+
+#[test]
+fn sharing_never_increases_prefill_energy_much() {
+    // sharing changes transfers, not activations: MoE prefill energy moves
+    // only by the broadcast term
+    prop::check(30, |g| {
+        let mut a = random_cfg(g);
+        a.group_size = 1;
+        a.grouping = GroupingPolicy::None;
+        a.schedule = SchedulePolicy::TokenWise;
+        let mut b = a.clone();
+        b.group_size = 4;
+        b.grouping = GroupingPolicy::Sorted;
+        b.schedule = SchedulePolicy::Compact;
+        let ra = Simulator::paper(a).run();
+        let rb = Simulator::paper(b).run();
+        assert_eq!(ra.prefill.activations, rb.prefill.activations);
+        let moe_a = ra.prefill.breakdown.moe_nj;
+        let moe_b = rb.prefill.breakdown.moe_nj;
+        assert!(moe_b < moe_a * 1.15,
+                "broadcast overhead bounded: {moe_a} -> {moe_b}");
+    });
+}
