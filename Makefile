@@ -1,0 +1,25 @@
+# Repo driver: python AOT artifacts + rust build/test.
+#
+#   make artifacts   lower the functional model to rust/artifacts/*.hlo.txt
+#   make build       release build of the rust crate
+#   make test        tier-1 gate (build + tests; artifacts required first)
+#   make bench       hot-path benchmarks (incl. batched-vs-round-robin decode)
+
+PY ?= python3
+
+.PHONY: artifacts build test bench clean
+
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench hotpath
+
+clean:
+	rm -rf rust/target rust/artifacts

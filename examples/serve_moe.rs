@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     );
     drop(engine);
 
-    // ---- then throughput: batched serving ------------------------------
+    // ---- then throughput: slot-batched serving --------------------------
     let server = Server::spawn(dir)?;
     let n_requests = 8;
     let gen_len = 16;
@@ -73,15 +73,23 @@ fn main() -> anyhow::Result<()> {
     let mut lat_sum = 0.0;
     for rx in rxs {
         let resp = rx.recv()?;
-        total_tokens += resp.tokens.len();
+        let tokens = resp
+            .result
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("request {} failed: {e}", resp.id))?;
+        total_tokens += tokens.len();
         ttft_sum += resp.ttft_us;
         lat_sum += resp.latency_us;
         println!(
-            "  req {:>2}: {:>2} tokens  ttft {:>7.1} ms  latency {:>7.1} ms",
+            "  req {:>2}: {:>2} tokens  ttft {:>7.1} ms  latency {:>7.1} ms  \
+             ({} batched / {} single steps, queued {:.1} ms)",
             resp.id,
-            resp.tokens.len(),
+            tokens.len(),
             resp.ttft_us / 1e3,
-            resp.latency_us / 1e3
+            resp.latency_us / 1e3,
+            resp.batched_steps,
+            resp.single_steps,
+            resp.queue_us / 1e3,
         );
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -92,6 +100,28 @@ fn main() -> anyhow::Result<()> {
         total_tokens as f64 / wall,
         ttft_sum / n_requests as f64 / 1e3,
         lat_sum / n_requests as f64 / 1e3,
+    );
+
+    // ---- serving telemetry: batching + peripheral contention ------------
+    let stats = server.stats()?;
+    println!(
+        "slots {} | {} batched dispatches (mean occupancy {:.2}) | {} \
+         single-token dispatches | peak waiting {}",
+        stats.slots,
+        stats.batch_dispatches,
+        stats.mean_batch_occupancy(),
+        stats.single_dispatches,
+        stats.peak_waiting,
+    );
+    let p = stats.planner;
+    println!(
+        "planner: {} steps, {} work items, {} cycles ({:.1}% from \
+         peripheral contention), {} activation transfers",
+        p.steps,
+        p.work,
+        p.cycles,
+        p.contention_ratio() * 100.0,
+        p.transfers,
     );
     Ok(())
 }

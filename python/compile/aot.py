@@ -22,6 +22,14 @@ Outputs (per ModelConfig, all weights baked in as constants):
     moe_one_sparse.hlo.txt  h[1,D], idx[K]i32, gate[K]  -> y[1,D]  (K=capacity)
     logits_one.hlo.txt      h[1,D]                     -> logits[1,V]
 
+  Slot-batched decode (serving engine, B = cfg.batch_slots):
+
+    embed_batch.hlo.txt       ids[B]i32                -> x[B,D]
+    attn_decode_batch.hlo.txt x[B,D], k[B,S,H,Dh], v[B,S,H,Dh], pos[B]i32
+                                                       -> h[B,D], k1[B,H,Dh], v1[B,H,Dh]
+    gate_batch.hlo.txt        h[B,D]                   -> scores[B,E]
+    moe_batch_sparse.hlo.txt  h[B,D], idx[B,K]i32, gate[B,K] -> y[B,D]
+
 `make artifacts` is a no-op when inputs are unchanged (manifest.json is the
 stamp).  Python never runs on the request path after this.
 """
@@ -85,10 +93,20 @@ def build_entries(cfg: ModelConfig):
     def moe_sparse(hh, idx, gates):
         return model.moe_apply_sparse(params, cfg, hh, idx, gates)
 
+    def attn_decode_batch(xb, kc, vc, pos):
+        return model.attn_decode_batch(params, cfg, xb, kc, vc, pos)
+
+    def gate_batch(hb):
+        return model.gate_batch(params, cfg, hb)
+
+    def moe_batch_sparse(hb, idx, gates):
+        return model.moe_batch_sparse(params, cfg, hb, idx, gates)
+
     def logits(hh):
         return model.logits(params, cfg, hh)
 
     i32 = jnp.int32
+    bsl, cap = cfg.batch_slots, cfg.expert_capacity
     return [
         ("embed_prefill", embed, (_spec((s,), i32),)),
         ("embed_one", embed, (_spec((1,), i32),)),
@@ -104,6 +122,14 @@ def build_entries(cfg: ModelConfig):
          (_spec((1, d)), _spec((cfg.expert_capacity,), i32),
           _spec((cfg.expert_capacity,)))),
         ("logits_one", logits, (_spec((1, d)),)),
+        # slot-batched decode artifacts (serving engine)
+        ("embed_batch", embed, (_spec((bsl,), i32),)),
+        ("attn_decode_batch", attn_decode_batch,
+         (_spec((bsl, d)), _spec((bsl, s, h, dh)), _spec((bsl, s, h, dh)),
+          _spec((bsl,), i32))),
+        ("gate_batch", gate_batch, (_spec((bsl, d)),)),
+        ("moe_batch_sparse", moe_batch_sparse,
+         (_spec((bsl, d)), _spec((bsl, cap), i32), _spec((bsl, cap)))),
     ]
 
 

@@ -28,6 +28,7 @@ class ModelConfig:
     vocab: int = 512          # toy vocabulary
     prompt_len: int = 32      # paper's prompt length
     max_seq: int = 96         # prompt + longest generation (paper: 32+64)
+    batch_slots: int = 4      # serving batch width B (slot-batched decode)
     seed: int = 20260710      # weight RNG seed
 
     # Crossbar-tiling parameters for the Pallas kernels.  The paper's chip is

@@ -147,6 +147,60 @@ def moe_apply_sparse(params, cfg: ModelConfig, h: jnp.ndarray,
     return (h + y,)
 
 
+# ---------------------------------------------------------------------------
+# Slot-batched decode (serving path): one dispatch advances B live sessions
+# ---------------------------------------------------------------------------
+#
+# Every batched computation below unrolls a python loop over the B slots at
+# trace time, so the lowered HLO contains B copies of the *exact* single-token
+# subgraph.  Per-row numerics are therefore bit-compatible with the
+# corresponding `*_one` artifact run on that slot alone — the property the
+# rust batched-vs-single equivalence test pins.  (The activation quantisers
+# are per-row anyway — see kernels.ref.sym_quant — so no cross-slot coupling
+# can sneak in through the analog pipeline either.)
+
+def attn_decode_batch(params, cfg: ModelConfig, xb: jnp.ndarray,
+                      k_caches: jnp.ndarray, v_caches: jnp.ndarray,
+                      pos: jnp.ndarray):
+    """Slot-batched KV-cached decode step.
+
+    xb [B, D]; k_caches/v_caches [B, S, H, Dh] (the coordinator's pooled
+    per-slot buffers, passed as one contiguous tensor); pos [B] i32.
+    Returns (h [B, D], k_new [B, H, Dh], v_new [B, H, Dh]).
+    """
+    b = xb.shape[0]
+    hs, ks, vs = [], [], []
+    for i in range(b):
+        h1, k1, v1 = attn_decode(params, cfg, xb[i:i + 1], k_caches[i],
+                                 v_caches[i], pos[i])
+        hs.append(h1)
+        ks.append(k1)
+        vs.append(v1)
+    return (jnp.concatenate(hs, axis=0), jnp.concatenate(ks, axis=0),
+            jnp.concatenate(vs, axis=0))
+
+
+def gate_batch(params, cfg: ModelConfig, hb: jnp.ndarray):
+    """hb [B, D] -> raw gate scores [B, E], one slot per row (unrolled)."""
+    rows = [gate_scores(params, cfg, hb[i:i + 1])[0]
+            for i in range(hb.shape[0])]
+    return (jnp.concatenate(rows, axis=0),)
+
+
+def moe_batch_sparse(params, cfg: ModelConfig, hb: jnp.ndarray,
+                     expert_idx: jnp.ndarray, gates: jnp.ndarray):
+    """Slot-batched sparse-gather MoE: hb [B, D], expert_idx [B, K] i32,
+    gates [B, K] -> y [B, D] with row i = moe_apply_sparse on slot i.
+
+    Padding convention per row matches the single-token artifact: unused
+    slots carry gate 0.0 (their FFN output contributes exactly +0.0).
+    """
+    rows = [moe_apply_sparse(params, cfg, hb[i:i + 1], expert_idx[i],
+                             gates[i])[0]
+            for i in range(hb.shape[0])]
+    return (jnp.concatenate(rows, axis=0),)
+
+
 def logits(params, cfg: ModelConfig, h: jnp.ndarray):
     """h [1, D] -> logits [1, V] (untied head — a tied head makes the toy
     block parrot its input token, since the residual stream keeps the

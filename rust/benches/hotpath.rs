@@ -96,6 +96,55 @@ fn main() {
             b.run("pjrt/prefill_32tok", || {
                 engine.prefill(&prompt).unwrap().1
             });
+
+            // ---- batched vs round-robin serving decode ------------------
+            // Both closures advance B sessions by one token per iteration,
+            // so the time ratio is exactly the tokens/sec ratio.
+            let bslots = engine.model.batch_slots.max(1);
+            let max_seq = engine.model.max_seq;
+            let mut rr: Vec<(moepim::coordinator::Session, i32)> = (0..bslots)
+                .map(|_| engine.prefill(&prompt).unwrap())
+                .collect();
+            let rr_stats =
+                b.run(&format!("pjrt/decode_roundrobin/{bslots}x1"), || {
+                    for (s, next) in rr.iter_mut() {
+                        if s.pos + 1 >= max_seq {
+                            let (s2, n2) = engine.prefill(&prompt).unwrap();
+                            *s = s2;
+                            *next = n2;
+                        }
+                        *next = engine.decode_cached(s, *next).unwrap();
+                    }
+                    rr.len()
+                });
+            drop(rr);
+
+            let mut batch = moepim::coordinator::BatchEngine::new(engine);
+            let mut steps: Vec<(usize, i32)> = (0..bslots)
+                .map(|_| batch.admit(&prompt).unwrap())
+                .collect();
+            let bt_stats =
+                b.run(&format!("pjrt/decode_batched/{bslots}slots"), || {
+                    let full = steps.iter().any(|&(slot, _)| {
+                        batch.session(slot).unwrap().pos + 1 >= max_seq
+                    });
+                    if full {
+                        for &(slot, _) in &steps {
+                            batch.release(slot);
+                        }
+                        steps = (0..bslots)
+                            .map(|_| batch.admit(&prompt).unwrap())
+                            .collect();
+                    }
+                    let out = batch.decode_batch(&steps).unwrap();
+                    steps = out.next;
+                    steps.len()
+                });
+            println!(
+                "batched decode at B={bslots}: {:.2}x tokens/sec vs \
+                 round-robin",
+                rr_stats.mid_ns / bt_stats.mid_ns
+            );
         }
         Err(e) => {
             println!("(skipping PJRT benches: {e})");

@@ -90,6 +90,19 @@ impl GoCache {
         }
     }
 
+    /// Recycle the cache for a new session (slot reuse in the serving
+    /// pool): drops all score entries and zeroes the output cache.
+    pub fn reset(&mut self) {
+        for es in self.entries.iter_mut() {
+            es.clear();
+        }
+        for per_expert in self.outputs.iter_mut() {
+            for slot in per_expert.iter_mut() {
+                slot.fill(0.0);
+            }
+        }
+    }
+
     /// Current selection threshold of `expert` (the cached minimum prob),
     /// or `None` while the cache is underfull (every token is selected).
     pub fn threshold(&self, expert: usize) -> Option<Entry> {
@@ -112,12 +125,22 @@ impl GoCache {
 
     /// TopKUpdate with already-softmaxed probs.
     pub fn update_probs(&mut self, token: usize, probs: &[f32]) -> GoUpdate {
+        let upd = self.peek_probs(token, probs);
+        self.apply_update(token, &upd);
+        upd
+    }
+
+    /// Compute a TopKUpdate *without* mutating the cache — the first half
+    /// of the batched engine's two-phase step: selection is peeked for
+    /// every slot, the (fallible) MoE dispatch runs, and only then are the
+    /// updates applied, so a failed dispatch leaves every cache untouched.
+    pub fn peek_probs(&self, token: usize, probs: &[f32]) -> GoUpdate {
         assert_eq!(probs.len(), self.n_experts);
         let mut upd =
             GoUpdate { selected: vec![], evicted: vec![], gates: vec![] };
         for expert in 0..self.n_experts {
             let p = probs[expert];
-            let es = &mut self.entries[expert];
+            let es = &self.entries[expert];
             let accept = if es.len() < self.capacity {
                 true
             } else {
@@ -127,17 +150,30 @@ impl GoCache {
             if !accept {
                 continue;
             }
-            let mut evicted_token = usize::MAX;
-            if es.len() == self.capacity {
-                evicted_token = es.pop().unwrap().token;
-            }
-            es.push(Entry { token, prob: p });
-            sort_entries(es);
+            let evicted_token = if es.len() == self.capacity {
+                es.last().unwrap().token
+            } else {
+                usize::MAX
+            };
             upd.selected.push(expert);
             upd.evicted.push(evicted_token);
             upd.gates.push(p);
         }
         upd
+    }
+
+    /// Commit a previously peeked update (must have been computed against
+    /// the current cache state).
+    pub fn apply_update(&mut self, token: usize, upd: &GoUpdate) {
+        for (i, &expert) in upd.selected.iter().enumerate() {
+            let es = &mut self.entries[expert];
+            if es.len() == self.capacity {
+                let evicted = es.pop().unwrap().token;
+                debug_assert_eq!(evicted, upd.evicted[i], "stale update");
+            }
+            es.push(Entry { token, prob: upd.gates[i] });
+            sort_entries(es);
+        }
     }
 
     /// Selected-token set of `expert`, sorted ascending.
@@ -293,6 +329,42 @@ mod tests {
         assert_eq!(GoCache::score_bytes_per_token(16), 32);
         assert_eq!(GoCache::output_cache_bytes(8, 16, 4096), 512 * 1024);
         assert_eq!(GoCache::output_write_bytes(3, 4096), 3 * 4096);
+    }
+
+    #[test]
+    fn peek_then_apply_equals_update() {
+        let e = 8;
+        let s = scores(20, e, 13);
+        let mut a = GoCache::new(e, 3, 0);
+        let mut b = GoCache::new(e, 3, 0);
+        for t in 0..20 {
+            let row = &s[t * e..(t + 1) * e];
+            let probs = softmax_rows(row, 1, e);
+            let upd_a = a.update_probs(t, &probs);
+            let peeked = b.peek_probs(t, &probs);
+            assert_eq!(peeked, upd_a);
+            // peek alone must not change state
+            assert_eq!(b.peek_probs(t, &probs), peeked);
+            b.apply_update(t, &peeked);
+            for x in 0..e {
+                assert_eq!(a.selected_tokens(x), b.selected_tokens(x));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_recycles_state() {
+        let mut cache = GoCache::new(2, 2, 3);
+        cache.update_probs(0, &[0.9, 0.1]);
+        cache.store_output(0, 0, &[1.0, 2.0, 3.0]);
+        cache.reset();
+        assert!(cache.selected_tokens(0).is_empty());
+        assert!(cache.selected_tokens(1).is_empty());
+        assert_eq!(cache.load_output(0, 0), &[0.0; 3]);
+        // behaves like a fresh cache afterwards
+        let upd = cache.update_probs(5, &[0.4, 0.6]);
+        assert_eq!(upd.selected, vec![0, 1]);
+        assert_eq!(cache.selected_tokens(0), vec![5]);
     }
 
     #[test]

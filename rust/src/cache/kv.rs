@@ -97,6 +97,125 @@ impl KvCache {
     }
 }
 
+/// Pooled per-slot KV storage for the slot-batched serving engine.
+///
+/// One contiguous pair of `[B, S, H, Dh]` buffers instead of B separate
+/// [`KvCache`]s: the batched `attn_decode_batch` artifact takes the whole
+/// pool as its cache inputs, so a batch step borrows `k_all()` / `v_all()`
+/// directly — zero copies, where the per-session path used to clone both
+/// buffers every token.  Slots are recycled between requests with
+/// [`KvPool::reset_slot`].
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    slots: usize,
+    max_seq: usize,
+    n_heads: usize,
+    d_head: usize,
+    len: Vec<usize>,
+    /// [slots, max_seq, n_heads, d_head] row-major
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvPool {
+    pub fn new(slots: usize, max_seq: usize, n_heads: usize, d_head: usize)
+        -> Self {
+        assert!(slots >= 1, "pool needs at least one slot");
+        let n = slots * max_seq * n_heads * d_head;
+        KvPool {
+            slots,
+            max_seq,
+            n_heads,
+            d_head,
+            len: vec![0; slots],
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    fn slot_elems(&self) -> usize {
+        self.max_seq * self.row_elems()
+    }
+
+    /// Valid rows of `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.len[slot] == 0
+    }
+
+    /// The whole pooled K buffer `[B, S, H, Dh]` — the batched decode
+    /// artifact's cache input.
+    pub fn k_all(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_all(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// One slot's padded K buffer `[S, H, Dh]` (single-token fallback path).
+    pub fn slot_k(&self, slot: usize) -> &[f32] {
+        let n = self.slot_elems();
+        &self.k[slot * n..(slot + 1) * n]
+    }
+
+    pub fn slot_v(&self, slot: usize) -> &[f32] {
+        let n = self.slot_elems();
+        &self.v[slot * n..(slot + 1) * n]
+    }
+
+    /// Seed `slot` from a prefill's padded K/V outputs (`[S, H, Dh]` each,
+    /// `valid` rows meaningful).
+    pub fn seed_slot(&mut self, slot: usize, k: &[f32], v: &[f32],
+                     valid: usize) {
+        let n = self.slot_elems();
+        assert_eq!(k.len(), n, "k buffer shape mismatch");
+        assert_eq!(v.len(), n, "v buffer shape mismatch");
+        assert!(valid <= self.max_seq);
+        self.k[slot * n..(slot + 1) * n].copy_from_slice(k);
+        self.v[slot * n..(slot + 1) * n].copy_from_slice(v);
+        self.len[slot] = valid;
+    }
+
+    /// Append one decode step's K/V rows (`[1, H, Dh]` each) to `slot`.
+    pub fn append_slot(&mut self, slot: usize, k_row: &[f32],
+                       v_row: &[f32]) {
+        let r = self.row_elems();
+        assert_eq!(k_row.len(), r, "k row shape mismatch");
+        assert_eq!(v_row.len(), r, "v row shape mismatch");
+        assert!(self.len[slot] < self.max_seq, "KV slot full");
+        let off = slot * self.slot_elems() + self.len[slot] * r;
+        self.k[off..off + r].copy_from_slice(k_row);
+        self.v[off..off + r].copy_from_slice(v_row);
+        self.len[slot] += 1;
+    }
+
+    /// Recycle `slot` for a new request.  Zeroes the buffers so a stale
+    /// session can never leak rows into the next one through the padded
+    /// region the batched artifact reads.
+    pub fn reset_slot(&mut self, slot: usize) {
+        let n = self.slot_elems();
+        self.k[slot * n..(slot + 1) * n].fill(0.0);
+        self.v[slot * n..(slot + 1) * n].fill(0.0);
+        self.len[slot] = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +255,47 @@ mod tests {
         let c = KvCache::new(96, 4, 64);
         assert_eq!(c.k_buf().len(), 96 * 4 * 64);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn pool_slots_are_independent() {
+        let mut p = KvPool::new(3, 4, 2, 3);
+        assert_eq!(p.k_all().len(), 3 * 4 * 6);
+        let mut k = vec![0.0; 4 * 6];
+        k[0] = 2.0;
+        let v = vec![0.5; 4 * 6];
+        p.seed_slot(1, &k, &v, 2);
+        assert_eq!(p.len(1), 2);
+        assert_eq!(p.len(0), 0);
+        p.append_slot(1, &[9.0; 6], &[8.0; 6]);
+        assert_eq!(p.len(1), 3);
+        // slot 1's view matches what was written; slot 0 untouched
+        assert_eq!(p.slot_k(1)[0], 2.0);
+        assert_eq!(p.slot_k(1)[2 * 6], 9.0);
+        assert!(p.slot_k(0).iter().all(|&x| x == 0.0));
+        // the pooled buffer is the slots concatenated
+        let n = 4 * 6;
+        assert_eq!(&p.k_all()[n..2 * n], p.slot_k(1));
+    }
+
+    #[test]
+    fn pool_reset_zeroes_slot() {
+        let mut p = KvPool::new(2, 2, 1, 2);
+        p.append_slot(0, &[1.0, 2.0], &[3.0, 4.0]);
+        p.append_slot(1, &[5.0, 6.0], &[7.0, 8.0]);
+        p.reset_slot(0);
+        assert_eq!(p.len(0), 0);
+        assert!(p.slot_k(0).iter().all(|&x| x == 0.0));
+        // neighbouring slot unaffected
+        assert_eq!(p.slot_k(1)[0], 5.0);
+        assert_eq!(p.len(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV slot full")]
+    fn pool_overflow_panics() {
+        let mut p = KvPool::new(1, 1, 1, 1);
+        p.append_slot(0, &[1.0], &[1.0]);
+        p.append_slot(0, &[2.0], &[2.0]);
     }
 }

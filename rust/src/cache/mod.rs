@@ -12,4 +12,4 @@ pub mod go;
 pub mod kv;
 
 pub use go::{GoCache, GoUpdate};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvPool};

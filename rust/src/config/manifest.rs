@@ -37,6 +37,8 @@ pub struct FunctionalModel {
     pub prompt_len: usize,
     pub max_seq: usize,
     pub expert_capacity: usize,
+    /// serving batch width B of the slot-batched decode artifacts
+    pub batch_slots: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -92,6 +94,7 @@ impl Manifest {
             prompt_len: field("prompt_len")?,
             max_seq: field("max_seq")?,
             expert_capacity: field("expert_capacity")?,
+            batch_slots: field("batch_slots")?,
         };
 
         let mut artifacts = BTreeMap::new();
@@ -170,6 +173,11 @@ pub const REQUIRED_ARTIFACTS: &[&str] = &[
     "moe_one",
     "moe_one_sparse",
     "logits_one",
+    // slot-batched decode (serving engine)
+    "embed_batch",
+    "attn_decode_batch",
+    "gate_batch",
+    "moe_batch_sparse",
 ];
 
 #[cfg(test)]
@@ -182,8 +190,8 @@ mod tests {
   "format": "{format}",
   "model": {{"d_model": 256, "n_experts": 16, "top_k": 4, "d_ff": 128,
              "n_heads": 4, "d_head": 64, "vocab": 512, "prompt_len": 32,
-             "max_seq": 96, "expert_capacity": 8, "seed": 1,
-             "xbar_rows": 128, "xbar_cols": 128, "adc_bits": 8,
+             "max_seq": 96, "expert_capacity": 8, "batch_slots": 4,
+             "seed": 1, "xbar_rows": 128, "xbar_cols": 128, "adc_bits": 8,
              "dac_bits": 8, "adc_range_factor": 16.0}},
   "artifacts": {{
     "embed_prefill": {{"file": "embed_prefill.hlo.txt",
@@ -199,7 +207,12 @@ mod tests {
     "moe_full": {{"file": "e.hlo.txt", "inputs": []}},
     "moe_one": {{"file": "f.hlo.txt", "inputs": []}},
     "moe_one_sparse": {{"file": "fs.hlo.txt", "inputs": []}},
-    "logits_one": {{"file": "g.hlo.txt", "inputs": []}}
+    "logits_one": {{"file": "g.hlo.txt", "inputs": []}},
+    "embed_batch": {{"file": "eb.hlo.txt",
+                     "inputs": [{{"shape": [4], "dtype": "int32"}}]}},
+    "attn_decode_batch": {{"file": "adb.hlo.txt", "inputs": []}},
+    "gate_batch": {{"file": "gb.hlo.txt", "inputs": []}},
+    "moe_batch_sparse": {{"file": "mbs.hlo.txt", "inputs": []}}
   }}
 }}"#
         )
@@ -212,11 +225,22 @@ mod tests {
                 .unwrap();
         assert_eq!(m.model.d_model, 256);
         assert_eq!(m.model.expert_capacity, 8);
+        assert_eq!(m.model.batch_slots, 4);
         let e = m.entry("attn_prefill").unwrap();
         assert_eq!(e.inputs.len(), 2);
         assert_eq!(e.inputs[0].shape, vec![96, 256]);
         assert_eq!(e.inputs[1].dtype, "int32");
         assert!(e.file.ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_missing_batch_slots() {
+        // a pre-batching manifest must fail loudly (it would also be
+        // missing the batch artifacts): re-run `make artifacts`
+        let text = sample("hlo-text/return-tuple")
+            .replace("\"batch_slots\": 4,", "");
+        let err = Manifest::parse(Path::new("/tmp/a"), &text).unwrap_err();
+        assert!(err.to_string().contains("batch_slots"), "{err}");
     }
 
     #[test]

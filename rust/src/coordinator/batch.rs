@@ -1,0 +1,325 @@
+//! Slot-batched serving engine: one HLO dispatch advances every live
+//! session one token.
+//!
+//! [`BatchEngine`] owns a fixed pool of `B = manifest.batch_slots` serving
+//! slots with pooled KV storage ([`KvPool`], one contiguous `[B, S, H, Dh]`
+//! pair the batched attention artifact borrows directly) and one GO cache
+//! per slot.  The decode path is:
+//!
+//! 1. `embed_batch` + `attn_decode_batch` + `gate_batch` — one dispatch
+//!    each over all B rows (inactive slots ride along as masked padding
+//!    whose outputs are discarded);
+//! 2. per-slot `TopKUpdate` on each active row's gate scores (host side,
+//!    exactly the per-session streaming update) — *peeked* first and only
+//!    committed after every fallible dispatch succeeded, so a failed batch
+//!    step leaves all slot state untouched and is safe to retry;
+//! 3. the [`BatchPlanner`] lays the step's expert sets out on the grouped
+//!    peripherals — the cycle-by-cycle execution order on the modeled chip
+//!    and the per-step contention telemetry the server exports;
+//! 4. `moe_batch_sparse` — one dispatch computing every active row's
+//!    selected experts (rows whose update selected more than
+//!    `expert_capacity` experts fall back to the dense `moe_one` for that
+//!    row, mirroring the single-token path's guard).
+//!
+//! Every batched artifact unrolls B copies of the exact single-token
+//! subgraph (see python/compile/model.py), so each row's numerics are
+//! bit-compatible with the per-session cached path —
+//! `rust/tests/batch_equivalence.rs` pins the token streams.
+//!
+//! For odd-sized tails (a single live session), [`BatchEngine::decode_single`]
+//! runs the single-token artifacts over the same pooled storage —
+//! borrowed, never cloned.
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{GoCache, KvPool};
+use crate::config::manifest::FunctionalModel;
+use crate::config::SchedulePolicy;
+use crate::coordinator::engine::ModelEngine;
+use crate::moe::gate::softmax_rows;
+use crate::runtime::executor::TensorIn;
+use crate::sched::{BatchPlan, BatchPlanner, PlannerStats};
+
+/// One live slot's sequence state (KV/GO state lives in the pools).
+#[derive(Debug, Clone)]
+pub struct SlotSession {
+    pub ids: Vec<i32>,
+    /// position of the next token to be written (== ids.len())
+    pub pos: usize,
+}
+
+/// Result of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct BatchStep {
+    /// (slot, sampled next token) for every advanced slot, in step order
+    pub next: Vec<(usize, i32)>,
+    /// the planner's execution layout + contention telemetry for this step
+    pub plan: BatchPlan,
+}
+
+pub struct BatchEngine {
+    engine: ModelEngine,
+    slots: usize,
+    kv: KvPool,
+    go: Vec<GoCache>,
+    sessions: Vec<Option<SlotSession>>,
+    planner: BatchPlanner,
+}
+
+impl BatchEngine {
+    /// Wrap `engine` with a `manifest.batch_slots`-wide slot pool and a
+    /// group-aware planner (paper defaults: uniform grouping of size 2
+    /// where divisible, Algorithm 1 rescheduling).
+    pub fn new(engine: ModelEngine) -> Self {
+        let m = engine.model.clone();
+        let group_size = if m.n_experts % 2 == 0 { 2 } else { 1 };
+        let planner = BatchPlanner::new(
+            m.n_experts,
+            group_size,
+            SchedulePolicy::Reschedule,
+        );
+        Self::with_planner(engine, planner)
+    }
+
+    pub fn with_planner(engine: ModelEngine, planner: BatchPlanner) -> Self {
+        // the batched MoE dispatch is always sparse-gather; force the
+        // single-token fallback onto the same path so a session's stream
+        // never depends on whether it rode a batch or decoded alone
+        let engine = engine.with_sparse_moe(true);
+        let m = engine.model.clone();
+        let slots = m.batch_slots.max(1);
+        BatchEngine {
+            kv: KvPool::new(slots, m.max_seq, m.n_heads, m.d_head),
+            go: (0..slots)
+                .map(|_| GoCache::new(m.n_experts, m.expert_capacity, 0))
+                .collect(),
+            sessions: vec![None; slots],
+            slots,
+            engine,
+            planner,
+        }
+    }
+
+    pub fn model(&self) -> &FunctionalModel {
+        &self.engine.model
+    }
+
+    pub fn engine(&self) -> &ModelEngine {
+        &self.engine
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Slots currently holding a live session.
+    pub fn occupied(&self) -> Vec<usize> {
+        (0..self.slots).filter(|&s| self.sessions[s].is_some()).collect()
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        (0..self.slots).find(|&s| self.sessions[s].is_none())
+    }
+
+    pub fn session(&self, slot: usize) -> Option<&SlotSession> {
+        self.sessions[slot].as_ref()
+    }
+
+    pub fn planner_stats(&self) -> PlannerStats {
+        self.planner.stats()
+    }
+
+    /// Prefill `prompt` into a free slot; returns (slot, first sampled
+    /// token).  Fails without touching any slot when the pool is full or
+    /// the prompt is invalid.
+    pub fn admit(&mut self, prompt: &[i32]) -> Result<(usize, i32)> {
+        let slot = self
+            .free_slot()
+            .ok_or_else(|| anyhow!("no free serving slot"))?;
+        let m = self.engine.model.clone();
+        let t = prompt.len();
+        let (y, routing, k, v) = self.engine.prefill_pipeline(prompt)?;
+        // seed_slot overwrites the slot's whole padded region, so no
+        // zero-fill is needed here (release() already reset it anyway)
+        self.kv.seed_slot(slot, &k, &v, t);
+        self.go[slot].reset();
+        self.go[slot].seed_from_routing(&routing);
+        let next =
+            self.engine.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)?;
+        self.sessions[slot] = Some(SlotSession { ids: prompt.to_vec(), pos: t });
+        Ok((slot, next))
+    }
+
+    /// Free `slot` for the next request, returning its final session state.
+    pub fn release(&mut self, slot: usize) -> Option<SlotSession> {
+        let sess = self.sessions[slot].take();
+        if sess.is_some() {
+            self.kv.reset_slot(slot);
+            self.go[slot].reset();
+        }
+        sess
+    }
+
+    /// One batched decode step: advance every `(slot, token)` in `steps` by
+    /// one token with a single dispatch per pipeline stage.
+    pub fn decode_batch(&mut self, steps: &[(usize, i32)]) -> Result<BatchStep> {
+        let m = self.engine.model.clone();
+        if steps.is_empty() {
+            return Err(anyhow!("empty batch step"));
+        }
+        let b = self.slots;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut active = vec![false; b];
+        for &(slot, token) in steps {
+            if slot >= b {
+                return Err(anyhow!("slot {slot} out of range"));
+            }
+            if active[slot] {
+                return Err(anyhow!("slot {slot} appears twice in one step"));
+            }
+            let sess = self.sessions[slot]
+                .as_ref()
+                .ok_or_else(|| anyhow!("slot {slot} has no live session"))?;
+            if sess.pos >= m.max_seq {
+                return Err(anyhow!("slot {slot} at max_seq"));
+            }
+            tokens[slot] = token;
+            pos[slot] = sess.pos as i32;
+            active[slot] = true;
+        }
+
+        let rt = self.engine.runtime();
+        let x = rt
+            .get("embed_batch")?
+            .run(&[TensorIn::I32(&tokens)])?
+            .remove(0)
+            .into_f32()?;
+        let mut attn = rt.get("attn_decode_batch")?.run(&[
+            TensorIn::F32(&x),
+            TensorIn::F32(self.kv.k_all()),
+            TensorIn::F32(self.kv.v_all()),
+            TensorIn::I32(&pos),
+        ])?;
+        let h = attn.remove(0).into_f32()?;
+        let k_new = attn.remove(0).into_f32()?;
+        let v_new = attn.remove(0).into_f32()?;
+        let scores = rt
+            .get("gate_batch")?
+            .run(&[TensorIn::F32(&h)])?
+            .remove(0)
+            .into_f32()?;
+
+        // Host-side routing, *peeked*: selection is computed against the
+        // current GO state but nothing mutates until every fallible
+        // dispatch below has succeeded, so a failed step leaves all slots
+        // untouched and the server can safely retry them one by one.
+        let (e, cap, d) = (m.n_experts, m.expert_capacity, m.d_model);
+        let mut idx = vec![0i32; b * cap];
+        let mut gates = vec![0f32; b * cap];
+        let mut upds = Vec::with_capacity(steps.len());
+        // rows whose update selected more than `cap` experts (possible right
+        // after TopKUpdate under-full edge cases) use the dense single-row
+        // MoE, exactly like the single-token path's guard
+        let mut dense_rows: Vec<(usize, Vec<f32>)> = Vec::new();
+        for &(slot, _) in steps {
+            let sess_pos = self.sessions[slot].as_ref().unwrap().pos;
+            let row = &scores[slot * e..(slot + 1) * e];
+            let probs = softmax_rows(row, 1, e);
+            let upd = self.go[slot].peek_probs(sess_pos, &probs);
+            if upd.selected.len() <= cap {
+                for (i, &ex) in upd.selected.iter().enumerate() {
+                    idx[slot * cap + i] = ex as i32;
+                    gates[slot * cap + i] = probs[ex];
+                }
+            } else {
+                let mut dense_g = vec![0f32; e];
+                for &ex in &upd.selected {
+                    dense_g[ex] = probs[ex];
+                }
+                dense_rows.push((slot, dense_g));
+            }
+            upds.push(upd);
+        }
+
+        let mut y = rt
+            .get("moe_batch_sparse")?
+            .run(&[
+                TensorIn::F32(&h),
+                TensorIn::I32(&idx),
+                TensorIn::F32(&gates),
+            ])?
+            .remove(0)
+            .into_f32()?;
+        for &(slot, ref dense_g) in &dense_rows {
+            let y1 = rt
+                .get("moe_one")?
+                .run(&[
+                    TensorIn::F32(&h[slot * d..(slot + 1) * d]),
+                    TensorIn::F32(dense_g.as_slice()),
+                ])?
+                .remove(0)
+                .into_f32()?;
+            y[slot * d..(slot + 1) * d].copy_from_slice(&y1);
+        }
+
+        // Last fallible stage: sample every advanced row's next token.
+        let mut next = Vec::with_capacity(steps.len());
+        for &(slot, _) in steps {
+            let pos_after = self.sessions[slot].as_ref().unwrap().pos + 1;
+            let nt = self
+                .engine
+                .sample(&y[slot * d..(slot + 1) * d], pos_after)?;
+            next.push((slot, nt));
+        }
+
+        // Commit (infallible from here): plan the step on the grouped
+        // peripherals (the modeled chip's execution order + contention
+        // telemetry — accumulated only for steps that actually landed),
+        // apply GO updates, append K/V rows, advance sessions.
+        let expert_sets: Vec<Vec<usize>> =
+            upds.iter().map(|u| u.selected.clone()).collect();
+        let plan = self.planner.plan(&expert_sets);
+        let r = self.kv.row_elems();
+        for (&(slot, token), upd) in steps.iter().zip(&upds) {
+            let sess_pos = self.sessions[slot].as_ref().unwrap().pos;
+            self.go[slot].apply_update(sess_pos, upd);
+            self.kv.append_slot(
+                slot,
+                &k_new[slot * r..(slot + 1) * r],
+                &v_new[slot * r..(slot + 1) * r],
+            );
+            let sess = self.sessions[slot].as_mut().unwrap();
+            sess.ids.push(token);
+            sess.pos += 1;
+        }
+        Ok(BatchStep { next, plan })
+    }
+
+    /// Single-token fallback for odd-sized tails: the per-token artifacts
+    /// over the same pooled storage (KV buffers borrowed, not cloned).
+    pub fn decode_single(&mut self, slot: usize, token: i32)
+        -> Result<(i32, BatchPlan)> {
+        let max_seq = self.engine.model.max_seq;
+        let pos = match self.sessions[slot].as_ref() {
+            Some(s) if s.pos >= max_seq => {
+                return Err(anyhow!("slot {slot} at max_seq"))
+            }
+            Some(s) => s.pos,
+            None => return Err(anyhow!("slot {slot} has no live session")),
+        };
+        let step = self.engine.decode_core(
+            self.kv.slot_k(slot),
+            self.kv.slot_v(slot),
+            pos,
+            &mut self.go[slot],
+            token,
+        )?;
+        self.kv.append_slot(slot, &step.k_row, &step.v_row);
+        let sess = self.sessions[slot].as_mut().unwrap();
+        sess.ids.push(token);
+        sess.pos += 1;
+        let plan = self.planner.plan(std::slice::from_ref(&step.selected));
+        Ok((step.next, plan))
+    }
+}

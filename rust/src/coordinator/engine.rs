@@ -18,8 +18,8 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::{GoCache, KvCache};
 use crate::config::manifest::FunctionalModel;
-use crate::moe::gate::{expert_choice_route, softmax_rows};
-use crate::runtime::executor::{Runtime, TensorView};
+use crate::moe::gate::{expert_choice_route, softmax_rows, Routing};
+use crate::runtime::executor::{Runtime, TensorIn};
 
 /// How `decode_step` computes the next hidden state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,6 +35,17 @@ pub struct Session {
     go: GoCache,
     /// position of the next token to be written (== ids.len())
     pub pos: usize,
+}
+
+/// Output of one storage-agnostic decode step ([`ModelEngine::decode_core`]):
+/// the sampled next token, the K/V rows the caller appends to its own
+/// storage, and the expert set the GO cache selected (planner telemetry).
+#[derive(Debug, Clone)]
+pub(crate) struct DecodeStep {
+    pub next: i32,
+    pub k_row: Vec<f32>,
+    pub v_row: Vec<f32>,
+    pub selected: Vec<usize>,
 }
 
 /// Output of one generation run.
@@ -79,11 +90,14 @@ impl ModelEngine {
     }
 
     /// Run the padded prefill pipeline over `ids`, returning
-    /// (moe output y [S, D], scores [S, E], k, v buffers).
-    fn prefill_pipeline(&self, ids: &[i32])
-        -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    /// (moe output y [S, D], the expert-choice routing, k, v buffers).
+    pub(crate) fn prefill_pipeline(&self, ids: &[i32])
+        -> Result<(Vec<f32>, Routing, Vec<f32>, Vec<f32>)> {
         let m = &self.model;
         let t = ids.len();
+        if t == 0 {
+            return Err(anyhow!("empty prompt"));
+        }
         if t > m.max_seq {
             return Err(anyhow!("prompt longer than max_seq"));
         }
@@ -91,12 +105,12 @@ impl ModelEngine {
         let x = self
             .rt
             .get("embed_prefill")?
-            .run(&[TensorView::I32(padded)])?
+            .run(&[TensorIn::I32(&padded)])?
             .remove(0)
             .into_f32()?;
         let mut attn = self.rt.get("attn_prefill")?.run(&[
-            TensorView::F32(x),
-            TensorView::I32(vec![t as i32]),
+            TensorIn::F32(&x),
+            TensorIn::I32(&[t as i32]),
         ])?;
         let h = attn.remove(0).into_f32()?;
         let k = attn.remove(0).into_f32()?;
@@ -104,7 +118,7 @@ impl ModelEngine {
         let scores = self
             .rt
             .get("gate_full")?
-            .run(&[TensorView::F32(h.clone())])?
+            .run(&[TensorIn::F32(&h)])?
             .remove(0)
             .into_f32()?;
         // expert-choice routing over the valid prefix, fixed capacity
@@ -113,19 +127,17 @@ impl ModelEngine {
         let y = self
             .rt
             .get("moe_full")?
-            .run(&[TensorView::F32(h), TensorView::F32(routing.gates.clone())])?
+            .run(&[TensorIn::F32(&h), TensorIn::F32(&routing.gates)])?
             .remove(0)
             .into_f32()?;
-        Ok((y, scores, k, v))
+        Ok((y, routing, k, v))
     }
 
     /// Prefill a prompt into a fresh session (seeds both caches).
     pub fn prefill(&self, ids: &[i32]) -> Result<(Session, i32)> {
         let m = &self.model;
         let t = ids.len();
-        let (y, scores, k, v) = self.prefill_pipeline(ids)?;
-        let routing = expert_choice_route(
-            &scores, m.max_seq, m.n_experts, m.expert_capacity, Some(t));
+        let (y, routing, k, v) = self.prefill_pipeline(ids)?;
 
         let mut kv = KvCache::new(m.max_seq, m.n_heads, m.d_head);
         kv.seed(&k, &v, t);
@@ -139,36 +151,54 @@ impl ModelEngine {
 
     /// One cached decode step: append `token`, return the next token.
     pub fn decode_cached(&self, s: &mut Session, token: i32) -> Result<i32> {
-        let m = &self.model;
-        if s.pos >= m.max_seq {
+        if s.pos >= self.model.max_seq {
             return Err(anyhow!("session at max_seq"));
         }
+        let step = {
+            // split the session borrows: KV buffers read-only into the HLO,
+            // GO cache mutated by TopKUpdate
+            let Session { ids: _, kv, go, pos } = s;
+            self.decode_core(kv.k_buf(), kv.v_buf(), *pos, go, token)?
+        };
+        s.kv.append(&step.k_row, &step.v_row);
+        s.ids.push(token);
+        s.pos += 1;
+        Ok(step.next)
+    }
+
+    /// The shared single-token decode pipeline, storage-agnostic: the KV
+    /// buffers are *borrowed* (per-session [`KvCache`] or a serving-pool
+    /// slot — no per-step clones either way) and the new K/V rows are
+    /// returned for the caller to append to its own storage.
+    pub(crate) fn decode_core(&self, k_buf: &[f32], v_buf: &[f32],
+                              pos: usize, go: &mut GoCache, token: i32)
+        -> Result<DecodeStep> {
+        let m = &self.model;
         let x1 = self
             .rt
             .get("embed_one")?
-            .run(&[TensorView::I32(vec![token])])?
+            .run(&[TensorIn::I32(&[token])])?
             .remove(0)
             .into_f32()?;
         let mut attn = self.rt.get("attn_decode")?.run(&[
-            TensorView::F32(x1),
-            TensorView::F32(s.kv.k_buf().to_vec()),
-            TensorView::F32(s.kv.v_buf().to_vec()),
-            TensorView::I32(vec![s.pos as i32]),
+            TensorIn::F32(&x1),
+            TensorIn::F32(k_buf),
+            TensorIn::F32(v_buf),
+            TensorIn::I32(&[pos as i32]),
         ])?;
         let h1 = attn.remove(0).into_f32()?;
-        let k1 = attn.remove(0).into_f32()?;
-        let v1 = attn.remove(0).into_f32()?;
-        s.kv.append(&k1, &v1);
+        let k_row = attn.remove(0).into_f32()?;
+        let v_row = attn.remove(0).into_f32()?;
 
         let scores1 = self
             .rt
             .get("gate_one")?
-            .run(&[TensorView::F32(h1.clone())])?
+            .run(&[TensorIn::F32(&h1)])?
             .remove(0)
             .into_f32()?;
         // TopKUpdate: experts that admit this token compute it; gate
         // weights are the softmax probs, zero elsewhere
-        let upd = s.go.update_scores(s.pos, &scores1);
+        let upd = go.update_scores(pos, &scores1);
         let probs = softmax_rows(&scores1, 1, m.n_experts);
         let y1 = if self.sparse_moe
             && upd.selected.len() <= m.expert_capacity
@@ -183,9 +213,9 @@ impl ModelEngine {
             self.rt
                 .get("moe_one_sparse")?
                 .run(&[
-                    TensorView::F32(h1),
-                    TensorView::I32(idx),
-                    TensorView::F32(g),
+                    TensorIn::F32(&h1),
+                    TensorIn::I32(&idx),
+                    TensorIn::F32(&g),
                 ])?
                 .remove(0)
                 .into_f32()?
@@ -196,14 +226,13 @@ impl ModelEngine {
             }
             self.rt
                 .get("moe_one")?
-                .run(&[TensorView::F32(h1), TensorView::F32(gates)])?
+                .run(&[TensorIn::F32(&h1), TensorIn::F32(&gates)])?
                 .remove(0)
                 .into_f32()?
         };
 
-        s.ids.push(token);
-        s.pos += 1;
-        self.sample(&y1, s.pos)
+        let next = self.sample(&y1, pos + 1)?;
+        Ok(DecodeStep { next, k_row, v_row, selected: upd.selected })
     }
 
     /// One reference decode step: re-prefill everything (no caches), route
@@ -253,11 +282,11 @@ impl ModelEngine {
     /// with the noise seeded by the *position*, so the cached and the
     /// recompute decode paths draw identical noise and the equivalence
     /// test compares real streams rather than a collapsed greedy fixpoint.
-    fn sample(&self, h_row: &[f32], pos: usize) -> Result<i32> {
+    pub(crate) fn sample(&self, h_row: &[f32], pos: usize) -> Result<i32> {
         let logits = self
             .rt
             .get("logits_one")?
-            .run(&[TensorView::F32(h_row.to_vec())])?
+            .run(&[TensorIn::F32(h_row)])?
             .remove(0)
             .into_f32()?;
         let mut rng =

@@ -1,8 +1,12 @@
 //! Serving coordinator (L3 runtime path): the functional model engine with
-//! KV + GO cache state, and a threaded round-robin batching server.
+//! KV + GO cache state, the slot-batched [`BatchEngine`] that advances all
+//! live sessions with one dispatch per pipeline stage, and the threaded
+//! serving loop built on slot admission.
 
+pub mod batch;
 pub mod engine;
 pub mod server;
 
+pub use batch::{BatchEngine, BatchStep, SlotSession};
 pub use engine::{DecodeMode, GenerationResult, ModelEngine, Session};
-pub use server::{Request, Response, Server};
+pub use server::{Request, Response, Server, ServerStats};

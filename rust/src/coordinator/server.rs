@@ -1,7 +1,14 @@
-//! Threaded serving loop: a router thread owns the [`ModelEngine`] (the
-//! PJRT client is single-owner) and interleaves live sessions round-robin,
-//! one decode step per session per cycle — continuous batching in the
-//! vLLM-router sense, sized for the single-chip simulator testbed.
+//! Threaded serving loop: a router thread owns the [`BatchEngine`] (the
+//! PJRT client is single-owner) and serves live sessions with slot-based
+//! continuous batching — waiting requests are admitted FIFO into free
+//! serving slots, and every decode cycle advances *all* live slots with
+//! one batched dispatch per pipeline stage (single-token fallback when only
+//! one session is live).
+//!
+//! Every submitted request gets a terminal [`Response`]: generation
+//! results and failures (oversized prompt, engine errors, shutdown) all
+//! travel the same reply channel, so `submit()` callers never see an
+//! opaque `RecvError` for a request the router accepted.
 //!
 //! (The image ships no tokio; the event loop is a plain mpsc channel +
 //! worker thread, which for a single-device engine is the same topology a
@@ -15,8 +22,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::engine::{DecodeMode, ModelEngine, Session};
+use crate::coordinator::batch::BatchEngine;
+use crate::coordinator::engine::ModelEngine;
 use crate::runtime::Runtime;
+use crate::sched::PlannerStats;
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -26,30 +35,126 @@ pub struct Request {
     pub gen_len: usize,
 }
 
-/// A finished generation.
+/// A terminal reply: every submitted request receives exactly one.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub tokens: Vec<i32>,
+    /// generated tokens, or the error that terminated the request
+    pub result: Result<Vec<i32>, String>,
     /// time from submit to completion
     pub latency_us: f64,
-    /// time from submit to first generated token
+    /// time from submit to first generated token (0 when the request
+    /// errored before producing one)
     pub ttft_us: f64,
+    /// time from submit to slot admission (0 when never admitted)
+    pub queue_us: f64,
+    /// admission sequence number — strictly increasing in submit order
+    /// (FIFO slot admission); `u64::MAX` when never admitted
+    pub admit_seq: u64,
+    /// decode steps this request rode in a batched dispatch
+    pub batched_steps: u64,
+    /// decode steps served by the single-token fallback
+    pub single_steps: u64,
+}
+
+impl Response {
+    /// Generated tokens (empty on error).
+    pub fn tokens(&self) -> &[i32] {
+        self.result.as_deref().unwrap_or(&[])
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+/// Serving-lifetime telemetry (see DESIGN.md §Batched-Serving).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// serving slots (batch width B)
+    pub slots: usize,
+    pub completed: u64,
+    pub errored: u64,
+    pub tokens_generated: u64,
+    /// batched decode dispatches / tokens advanced by them
+    pub batch_dispatches: u64,
+    pub batched_tokens: u64,
+    /// single-token fallback dispatches
+    pub single_dispatches: u64,
+    /// high-water mark of the waiting queue
+    pub peak_waiting: usize,
+    /// cumulative group-aware planner telemetry (peripheral contention)
+    pub planner: PlannerStats,
+}
+
+impl ServerStats {
+    /// Mean live slots per batched dispatch.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_dispatches == 0 {
+            0.0
+        } else {
+            self.batched_tokens as f64 / self.batch_dispatches as f64
+        }
+    }
 }
 
 enum Msg {
     Submit(Request, mpsc::Sender<Response>),
+    Stats(mpsc::Sender<ServerStats>),
     Shutdown,
 }
 
+/// One live serving slot.
 struct Live {
     req: Request,
     reply: mpsc::Sender<Response>,
-    session: Session,
+    slot: usize,
     next: i32,
     tokens: Vec<i32>,
     submitted: Instant,
+    admitted: Instant,
+    admit_seq: u64,
     first_token: Option<Instant>,
+    batched_steps: u64,
+    single_steps: u64,
+}
+
+impl Live {
+    fn respond(self, result: Result<Vec<i32>, String>) {
+        let now = Instant::now();
+        let resp = Response {
+            id: self.req.id,
+            result,
+            latency_us: us(now, self.submitted),
+            ttft_us: self
+                .first_token
+                .map_or(0.0, |t| us(t, self.submitted)),
+            queue_us: us(self.admitted, self.submitted),
+            admit_seq: self.admit_seq,
+            batched_steps: self.batched_steps,
+            single_steps: self.single_steps,
+        };
+        let _ = self.reply.send(resp);
+    }
+}
+
+fn us(later: Instant, earlier: Instant) -> f64 {
+    later.duration_since(earlier).as_secs_f64() * 1e6
+}
+
+/// Terminal error reply for a request that never reached a slot.
+fn reject(id: u64, reply: &mpsc::Sender<Response>, submitted: Instant,
+          err: String) {
+    let _ = reply.send(Response {
+        id,
+        result: Err(err),
+        latency_us: us(Instant::now(), submitted),
+        ttft_us: 0.0,
+        queue_us: 0.0,
+        admit_seq: u64::MAX,
+        batched_steps: 0,
+        single_steps: 0,
+    });
 }
 
 /// Handle to the router thread.
@@ -68,12 +173,11 @@ impl Server {
         let handle = std::thread::spawn(move || {
             let engine = match Runtime::load(&artifacts_dir) {
                 Ok(rt) => {
-                    let platform = rt.platform();
-                    // serving always decodes through the sparse-gather MoE
-                    // (§Perf L2-1)
-                    let engine = ModelEngine::new(rt).with_sparse_moe(true);
-                    let _ = ready_tx.send(Ok(platform));
-                    engine
+                    // BatchEngine forces sparse-gather MoE decode on both
+                    // of its paths (§Perf L2-1)
+                    let engine = ModelEngine::new(rt);
+                    let _ = ready_tx.send(Ok(engine.runtime().platform()));
+                    BatchEngine::new(engine)
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -89,7 +193,7 @@ impl Server {
         }
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the terminal response.
     pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         self.tx
@@ -104,6 +208,15 @@ impl Server {
         let rx = self.submit(Request { id, prompt, gen_len });
         Ok(rx.recv()?)
     }
+
+    /// Snapshot of the serving telemetry.
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| {
+            anyhow!("router thread gone")
+        })?;
+        Ok(rx.recv()?)
+    }
 }
 
 impl Drop for Server {
@@ -115,12 +228,20 @@ impl Drop for Server {
     }
 }
 
-fn run_loop(engine: ModelEngine, rx: mpsc::Receiver<Msg>) {
-    let mut live: VecDeque<Live> = VecDeque::new();
+fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
+    let slots = eng.slots();
+    let mut waiting: VecDeque<(Request, mpsc::Sender<Response>, Instant)> =
+        VecDeque::new();
+    let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
+    let mut stats = ServerStats { slots, ..ServerStats::default() };
+    let mut admit_seq: u64 = 0;
+
     loop {
-        // Admit all pending requests; block only when idle.
+        // ---- 1. drain control messages; block only when fully idle ------
         loop {
-            let msg = if live.is_empty() {
+            let idle = waiting.is_empty()
+                && live.iter().all(Option::is_none);
+            let msg = if idle {
                 match rx.recv() {
                     Ok(m) => m,
                     Err(_) => return,
@@ -133,62 +254,162 @@ fn run_loop(engine: ModelEngine, rx: mpsc::Receiver<Msg>) {
                 }
             };
             match msg {
-                Msg::Shutdown => return,
+                Msg::Shutdown => {
+                    shutdown(waiting, live);
+                    return;
+                }
+                Msg::Stats(tx) => {
+                    let mut snap = stats.clone();
+                    snap.planner = eng.planner_stats();
+                    let _ = tx.send(snap);
+                }
                 Msg::Submit(req, reply) => {
-                    let submitted = Instant::now();
-                    match engine.prefill(&req.prompt) {
-                        Ok((session, next)) => live.push_back(Live {
-                            req,
-                            reply,
-                            session,
-                            next,
-                            tokens: Vec::new(),
-                            submitted,
-                            first_token: None,
-                        }),
-                        Err(e) => {
-                            eprintln!("prefill failed for {}: {e}", req.id);
+                    waiting.push_back((req, reply, Instant::now()));
+                    stats.peak_waiting =
+                        stats.peak_waiting.max(waiting.len());
+                }
+            }
+        }
+
+        // ---- 2. completion sweep: bank the tokens the last decode cycle
+        //         produced, retire finished slots ------------------------
+        for slot in 0..slots {
+            let Some(l) = live[slot].as_mut() else { continue };
+            l.tokens.push(l.next);
+            let pos = eng.session(slot).map_or(0, |s| s.pos);
+            let done = l.tokens.len() >= l.req.gen_len
+                || pos >= eng.model().max_seq;
+            if done {
+                let l = live[slot].take().unwrap();
+                finish_slot(&mut eng, &mut stats, slot, l);
+            }
+        }
+
+        // ---- 3. FIFO slot admission (after the sweep, so slots freed
+        //         this cycle refill and ride this cycle's dispatch) ------
+        while !waiting.is_empty() && eng.free_slot().is_some() {
+            let (req, reply, submitted) = waiting.pop_front().unwrap();
+            match eng.admit(&req.prompt) {
+                Ok((slot, next)) => {
+                    // the prefill-sampled token is banked right away; the
+                    // decode cycle below consumes it as `l.next`
+                    let l = Live {
+                        req,
+                        reply,
+                        slot,
+                        next,
+                        tokens: vec![next],
+                        submitted,
+                        admitted: Instant::now(),
+                        admit_seq,
+                        first_token: Some(Instant::now()),
+                        batched_steps: 0,
+                        single_steps: 0,
+                    };
+                    admit_seq += 1;
+                    let pos = eng.session(slot).map_or(0, |s| s.pos);
+                    let done = l.tokens.len() >= l.req.gen_len
+                        || pos >= eng.model().max_seq;
+                    if done {
+                        finish_slot(&mut eng, &mut stats, slot, l);
+                    } else {
+                        live[slot] = Some(l);
+                    }
+                }
+                Err(e) => {
+                    stats.errored += 1;
+                    reject(req.id, &reply, submitted,
+                           format!("prefill failed: {e}"));
+                }
+            }
+        }
+
+        // ---- 4. one decode cycle over every live slot -------------------
+        let steps: Vec<(usize, i32)> = live
+            .iter()
+            .flatten()
+            .map(|l| (l.slot, l.next))
+            .collect();
+        if steps.is_empty() {
+            continue;
+        }
+        if steps.len() == 1 {
+            // odd-sized tail: single-token fallback over pooled storage
+            let (slot, token) = steps[0];
+            match eng.decode_single(slot, token) {
+                Ok((next, _plan)) => {
+                    let l = live[slot].as_mut().unwrap();
+                    l.next = next;
+                    l.single_steps += 1;
+                    stats.single_dispatches += 1;
+                }
+                Err(e) => fail_slot(&mut eng, &mut live, &mut stats, slot, e),
+            }
+        } else {
+            match eng.decode_batch(&steps) {
+                Ok(step) => {
+                    stats.batch_dispatches += 1;
+                    stats.batched_tokens += step.next.len() as u64;
+                    for (slot, next) in step.next {
+                        let l = live[slot].as_mut().unwrap();
+                        l.next = next;
+                        l.batched_steps += 1;
+                    }
+                }
+                Err(e) => {
+                    // a failed batch dispatch must not sink every rider:
+                    // retry each slot alone so only the culprit errors out
+                    let batch_err = e.to_string();
+                    for (slot, token) in steps {
+                        match eng.decode_single(slot, token) {
+                            Ok((next, _plan)) => {
+                                let l = live[slot].as_mut().unwrap();
+                                l.next = next;
+                                l.single_steps += 1;
+                                stats.single_dispatches += 1;
+                            }
+                            Err(e) => fail_slot(
+                                &mut eng,
+                                &mut live,
+                                &mut stats,
+                                slot,
+                                anyhow!("{batch_err}; retry: {e}"),
+                            ),
                         }
                     }
                 }
             }
         }
+    }
+}
 
-        // One decode step per live session (round-robin batching).
-        let mut still_live = VecDeque::new();
-        while let Some(mut l) = live.pop_front() {
-            l.tokens.push(l.next);
-            l.first_token.get_or_insert_with(Instant::now);
-            let done = l.tokens.len() >= l.req.gen_len
-                || l.session.pos >= engine.model.max_seq;
-            if done {
-                let now = Instant::now();
-                let resp = Response {
-                    id: l.req.id,
-                    tokens: std::mem::take(&mut l.tokens),
-                    latency_us: now
-                        .duration_since(l.submitted)
-                        .as_secs_f64()
-                        * 1e6,
-                    ttft_us: l
-                        .first_token
-                        .unwrap()
-                        .duration_since(l.submitted)
-                        .as_secs_f64()
-                        * 1e6,
-                };
-                let _ = l.reply.send(resp);
-                continue;
-            }
-            match engine.decode_cached(&mut l.session, l.next) {
-                Ok(next) => {
-                    l.next = next;
-                    still_live.push_back(l);
-                }
-                Err(e) => eprintln!("decode failed for {}: {e}", l.req.id),
-            }
-        }
-        live = still_live;
-        let _ = DecodeMode::Cached; // the serving path is always cached
+/// Retire a finished request: free its slot, record stats, reply.
+fn finish_slot(eng: &mut BatchEngine, stats: &mut ServerStats, slot: usize,
+               mut l: Live) {
+    eng.release(slot);
+    stats.completed += 1;
+    stats.tokens_generated += l.tokens.len() as u64;
+    let tokens = std::mem::take(&mut l.tokens);
+    l.respond(Ok(tokens));
+}
+
+/// Retire `slot` with a terminal error reply.
+fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
+             stats: &mut ServerStats, slot: usize, err: anyhow::Error) {
+    if let Some(l) = live[slot].take() {
+        eng.release(slot);
+        stats.errored += 1;
+        l.respond(Err(format!("decode failed: {err}")));
+    }
+}
+
+/// Terminal replies for everything in flight at shutdown.
+fn shutdown(waiting: VecDeque<(Request, mpsc::Sender<Response>, Instant)>,
+            live: Vec<Option<Live>>) {
+    for (req, reply, submitted) in waiting {
+        reject(req.id, &reply, submitted, "server shut down".into());
+    }
+    for l in live.into_iter().flatten() {
+        l.respond(Err("server shut down".into()));
     }
 }

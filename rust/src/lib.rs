@@ -9,8 +9,8 @@
 //!   ([`grouping`]), dynamic prefill scheduling ([`sched`]), the KV + GO
 //!   caches ([`cache`]), the operator-level PIM simulator ([`sim`]), the
 //!   evaluation harness regenerating every paper figure/table ([`eval`]),
-//!   and a serving coordinator driving the real AOT-compiled model
-//!   ([`coordinator`]) through the PJRT runtime ([`runtime`]).
+//!   and a slot-batched serving coordinator driving the real AOT-compiled
+//!   model ([`coordinator`]) through the PJRT runtime ([`runtime`]).
 //! * **L2 (python/compile/model.py)** — the functional MoE transformer
 //!   block, AOT-lowered to `artifacts/*.hlo.txt` at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas crossbar/FFN/gate kernels.

@@ -224,23 +224,50 @@ fn cmd_serve(args: &Args) -> i32 {
         })
         .collect();
     let mut total_tokens = 0usize;
+    let mut failed = 0usize;
     for rx in rxs {
-        let resp = rx.recv().expect("response");
-        total_tokens += resp.tokens.len();
-        println!(
-            "req {}: {} tokens, ttft {:.1} ms, latency {:.1} ms, {:?}",
-            resp.id,
-            resp.tokens.len(),
-            resp.ttft_us / 1e3,
-            resp.latency_us / 1e3,
-            &resp.tokens[..resp.tokens.len().min(8)]
-        );
+        let resp = rx.recv().expect("terminal response");
+        match &resp.result {
+            Ok(tokens) => {
+                total_tokens += tokens.len();
+                println!(
+                    "req {}: {} tokens ({} batched / {} single), ttft \
+                     {:.1} ms, latency {:.1} ms, {:?}",
+                    resp.id,
+                    tokens.len(),
+                    resp.batched_steps,
+                    resp.single_steps,
+                    resp.ttft_us / 1e3,
+                    resp.latency_us / 1e3,
+                    &tokens[..tokens.len().min(8)]
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("req {} failed: {e}", resp.id);
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "served {n} requests / {total_tokens} tokens in {wall:.2}s          ({:.1} tok/s)",
         total_tokens as f64 / wall
     );
+    if let Ok(stats) = server.stats() {
+        println!(
+            "slots {} | batched dispatches {} (mean occupancy {:.2}) | \
+             single {} | contention {:.1}% of {} cycles",
+            stats.slots,
+            stats.batch_dispatches,
+            stats.mean_batch_occupancy(),
+            stats.single_dispatches,
+            stats.planner.contention_ratio() * 100.0,
+            stats.planner.cycles,
+        );
+    }
+    if failed > 0 {
+        return 1;
+    }
     0
 }
 

@@ -13,11 +13,46 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::manifest::{ArtifactEntry, Manifest};
 
-/// A typed host-side tensor handed to / returned from an executable.
+/// A typed host-side tensor returned from an executable (owned).
 #[derive(Debug, Clone)]
 pub enum TensorView {
     F32(Vec<f32>),
     I32(Vec<i32>),
+}
+
+/// A borrowed host-side tensor staged as an executable input.
+///
+/// Inputs borrow (instead of taking the owned [`TensorView`]) so the
+/// coordinator can hand cache-pool buffers straight to PJRT without the
+/// per-decode-step `to_vec()` clones the old API forced — at serving dims
+/// that is 2 x `max_seq * n_heads * d_head` floats per token that no longer
+/// get copied.
+#[derive(Debug, Clone, Copy)]
+pub enum TensorIn<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> TensorIn<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorIn::F32(v) => v.len(),
+            TensorIn::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<'a> From<&'a TensorView> for TensorIn<'a> {
+    fn from(v: &'a TensorView) -> TensorIn<'a> {
+        match v {
+            TensorView::F32(v) => TensorIn::F32(v),
+            TensorView::I32(v) => TensorIn::I32(v),
+        }
+    }
 }
 
 impl TensorView {
@@ -57,11 +92,12 @@ pub struct Executable {
 }
 
 impl Executable {
-    /// Execute with host buffers; returns the flattened tuple elements.
+    /// Execute with borrowed host buffers; returns the flattened tuple
+    /// elements.
     ///
     /// Inputs are validated against the manifest spec before staging so a
     /// stale `artifacts/` directory fails loudly rather than numerically.
-    pub fn run(&self, inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+    pub fn run(&self, inputs: &[TensorIn<'_>]) -> Result<Vec<TensorView>> {
         if inputs.len() != self.inputs.len() {
             return Err(anyhow!(
                 "{}: expected {} inputs, got {}",
@@ -84,10 +120,10 @@ impl Executable {
             let dims: Vec<i64> =
                 self.input_shapes[i].iter().map(|&d| d as i64).collect();
             let lit = match (input, is_i32) {
-                (TensorView::F32(v), false) => {
+                (TensorIn::F32(v), false) => {
                     xla::Literal::vec1(v).reshape(&dims)?
                 }
-                (TensorView::I32(v), true) => {
+                (TensorIn::I32(v), true) => {
                     xla::Literal::vec1(v).reshape(&dims)?
                 }
                 _ => {
@@ -204,5 +240,17 @@ mod tests {
         assert!(i.as_f32().is_err());
         assert!(!i.is_empty());
         assert_eq!(TensorView::F32(vec![]).len(), 0);
+    }
+
+    #[test]
+    fn tensorin_borrows_and_converts() {
+        let owned = TensorView::F32(vec![1.0, 2.0, 3.0]);
+        let brw: TensorIn<'_> = (&owned).into();
+        assert_eq!(brw.len(), 3);
+        assert!(!brw.is_empty());
+        let ids = [1i32, 2];
+        let i = TensorIn::I32(&ids);
+        assert_eq!(i.len(), 2);
+        assert!(TensorIn::F32(&[]).is_empty());
     }
 }

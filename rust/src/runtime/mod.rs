@@ -3,4 +3,4 @@
 
 pub mod executor;
 
-pub use executor::{Executable, Runtime, TensorView};
+pub use executor::{Executable, Runtime, TensorIn, TensorView};

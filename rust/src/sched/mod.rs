@@ -1,11 +1,15 @@
 //! Dynamic prefill scheduling (§III-D): token-wise baseline, compact
-//! dispatch, and Algorithm 1's reschedule-by-inserting-idle.
+//! dispatch, and Algorithm 1's reschedule-by-inserting-idle — plus the
+//! online [`BatchPlanner`] that prices each serving batch step against the
+//! peripheral-sharing model.
 
 pub mod compact;
+pub mod planner;
 pub mod reschedule;
 pub mod schedule;
 pub mod tokenwise;
 
+pub use planner::{BatchPlan, BatchPlanner, PlannerStats};
 pub use schedule::{Schedule, Slot};
 
 use crate::config::SchedulePolicy;

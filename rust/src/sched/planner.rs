@@ -1,0 +1,208 @@
+//! Per-step batch planning for the serving engine (§III-B applied online).
+//!
+//! The simulator prices peripheral-sharing contention offline; the
+//! [`BatchPlanner`] moves that model onto the live decode path.  Each batch
+//! step the serving engine hands the planner one expert set per active slot
+//! (what the GO caches just selected); the planner lays the step out on the
+//! grouped peripherals with the configured [`SchedulePolicy`] and returns a
+//! [`BatchPlan`]: the cycle-by-cycle execution order on the modeled chip
+//! plus the step's contention telemetry.
+//!
+//! * `cycles` — the step's makespan in slot cycles under peripheral
+//!   sharing (experts in one group serialise on the shared ADC column);
+//! * `contention_cycles` — how many of those cycles exist *only* because
+//!   of sharing (makespan minus the exclusive-peripherals makespan, i.e.
+//!   the same step priced against `Grouping::singleton`);
+//! * `transfers` — activation-vector fetches under the latch/broadcast
+//!   rule of [`Schedule::transfers`].
+//!
+//! Cumulative counters aggregate across steps so the server can export
+//! serving-lifetime telemetry without keeping every plan alive.
+
+use crate::config::SchedulePolicy;
+use crate::grouping::Grouping;
+use crate::moe::ChoiceMatrix;
+use crate::sched::{self, Schedule};
+
+/// One batch step's execution layout + contention stats.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// lane-per-group execution order (rows of the batch are "tokens")
+    pub schedule: Schedule,
+    /// makespan in slot cycles under the planner's grouping
+    pub cycles: usize,
+    /// cycles attributable to peripheral sharing alone
+    pub contention_cycles: usize,
+    /// activation transfers under the latch/broadcast rule
+    pub transfers: usize,
+    /// non-idle fraction of the grouped schedule
+    pub utilization: f64,
+    /// total token-expert executions in the step
+    pub work: usize,
+}
+
+/// Cumulative serving-lifetime planner telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlannerStats {
+    pub steps: u64,
+    pub work: u64,
+    pub cycles: u64,
+    pub contention_cycles: u64,
+    pub transfers: u64,
+}
+
+impl PlannerStats {
+    /// Mean makespan per planned step.
+    pub fn mean_cycles(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.steps as f64
+        }
+    }
+
+    /// Fraction of all cycles caused by peripheral sharing.
+    pub fn contention_ratio(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.contention_cycles as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Group-aware planner for batched decode steps.
+pub struct BatchPlanner {
+    grouping: Grouping,
+    policy: SchedulePolicy,
+    n_experts: usize,
+    stats: PlannerStats,
+}
+
+impl BatchPlanner {
+    /// Planner over a uniform grouping of `n_experts` into groups of
+    /// `group_size` (seeded — deployment-time assignment is fixed).
+    pub fn new(n_experts: usize, group_size: usize, policy: SchedulePolicy)
+        -> Self {
+        Self::with_grouping(
+            Grouping::uniform(n_experts, group_size, 0xB47C),
+            policy,
+        )
+    }
+
+    /// Planner over an explicit grouping (e.g. workload-sorted from traced
+    /// loads).
+    pub fn with_grouping(grouping: Grouping, policy: SchedulePolicy) -> Self {
+        let n_experts = grouping.group_of.len();
+        BatchPlanner { grouping, policy, n_experts, stats: PlannerStats::default() }
+    }
+
+    pub fn grouping(&self) -> &Grouping {
+        &self.grouping
+    }
+
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> PlannerStats {
+        self.stats
+    }
+
+    /// Plan one batch step: `expert_sets[i]` is the expert set the GO cache
+    /// selected for the i-th active slot's token.
+    pub fn plan(&mut self, expert_sets: &[Vec<usize>]) -> BatchPlan {
+        let choices = ChoiceMatrix::from_rows(expert_sets, self.n_experts);
+        let grouped = sched::build(&choices, &self.grouping, self.policy);
+        // exclusive-peripherals reference: same step, singleton grouping
+        let exclusive = sched::build(
+            &choices,
+            &Grouping::singleton(self.n_experts),
+            self.policy,
+        );
+        let cycles = grouped.makespan_slots();
+        let contention_cycles =
+            cycles.saturating_sub(exclusive.makespan_slots());
+        let transfers = grouped.transfers();
+        let utilization = grouped.utilization();
+        let work = grouped.total_work();
+
+        self.stats.steps += 1;
+        self.stats.work += work as u64;
+        self.stats.cycles += cycles as u64;
+        self.stats.contention_cycles += contention_cycles as u64;
+        self.stats.transfers += transfers as u64;
+
+        BatchPlan {
+            schedule: grouped,
+            cycles,
+            contention_cycles,
+            transfers,
+            utilization,
+            work,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_all_work() {
+        let mut p = BatchPlanner::new(8, 2, SchedulePolicy::Reschedule);
+        let sets = vec![vec![0, 1, 2], vec![3, 4], vec![5]];
+        let plan = p.plan(&sets);
+        assert_eq!(plan.work, 6);
+        assert_eq!(plan.schedule.total_work(), 6);
+        assert!(plan.cycles >= 1);
+        assert!(plan.utilization > 0.0 && plan.utilization <= 1.0);
+    }
+
+    #[test]
+    fn contention_zero_under_singleton_grouping() {
+        let mut p = BatchPlanner::with_grouping(
+            Grouping::singleton(4),
+            SchedulePolicy::Compact,
+        );
+        let plan = p.plan(&[vec![0, 1], vec![2, 3]]);
+        assert_eq!(plan.contention_cycles, 0);
+    }
+
+    #[test]
+    fn grouped_colliding_experts_serialise() {
+        // experts 0 and 1 share peripherals; two slots hit both => the
+        // grouped makespan must exceed the exclusive one
+        let mut p = BatchPlanner::with_grouping(
+            Grouping::custom(vec![vec![0, 1]]),
+            SchedulePolicy::Compact,
+        );
+        let plan = p.plan(&[vec![0, 1], vec![0, 1]]);
+        // 4 work items on one shared lane: 4 cycles; exclusive would be 2
+        assert_eq!(plan.cycles, 4);
+        assert_eq!(plan.contention_cycles, 2);
+    }
+
+    #[test]
+    fn stats_accumulate_across_steps() {
+        let mut p = BatchPlanner::new(8, 2, SchedulePolicy::TokenWise);
+        assert_eq!(p.stats(), PlannerStats::default());
+        p.plan(&[vec![0, 1]]);
+        p.plan(&[vec![2], vec![3]]);
+        let s = p.stats();
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.work, 4);
+        assert!(s.cycles >= 2);
+        assert!(s.mean_cycles() >= 1.0);
+        assert!(s.contention_ratio() >= 0.0 && s.contention_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn empty_step_is_harmless() {
+        let mut p = BatchPlanner::new(4, 2, SchedulePolicy::Reschedule);
+        let plan = p.plan(&[]);
+        assert_eq!(plan.work, 0);
+        assert_eq!(plan.cycles, 0);
+        assert_eq!(plan.contention_cycles, 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Tentpole equivalence pin: the slot-batched decode path must produce
+//! exactly the token streams of the per-session cached path (requires
+//! `make artifacts`).
+//!
+//! The batched artifacts unroll B copies of the single-token subgraph
+//! (python/compile/model.py), so each row is bit-compatible with the
+//! `*_one` executables on that slot alone; this test closes the loop over
+//! real HLO numerics end-to-end, including partially-filled batches
+//! (padding rows), slot recycling, and the single-token fallback.
+
+use moepim::coordinator::{BatchEngine, DecodeMode, ModelEngine};
+use moepim::runtime::Runtime;
+use moepim::util::rng::Pcg32;
+
+fn prompt(len: usize, seed: u64, vocab: usize) -> Vec<i32> {
+    let mut rng = Pcg32::new(seed);
+    (0..len).map(|_| rng.gen_range(vocab) as i32).collect()
+}
+
+#[test]
+fn batched_decode_matches_per_session_cached() {
+    let rt = Runtime::load_default().expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    );
+    // the serving engine always decodes sparse (§Perf L2-1); the reference
+    // streams use the same mode so the comparison isolates *batching*
+    let engine = ModelEngine::new(rt).with_sparse_moe(true);
+    let m = engine.model.clone();
+    assert!(m.batch_slots >= 2, "need a real batch width for this test");
+
+    // uneven gen lengths: the batch drains to a tail on purpose
+    let prompts: Vec<Vec<i32>> = (0..m.batch_slots)
+        .map(|i| prompt(8 + 3 * i, 900 + i as u64, m.vocab))
+        .collect();
+    let gen_lens: Vec<usize> =
+        (0..m.batch_slots).map(|i| 5 + 2 * i).collect();
+
+    let reference: Vec<Vec<i32>> = prompts
+        .iter()
+        .zip(&gen_lens)
+        .map(|(p, &g)| {
+            engine.generate(p, g, DecodeMode::Cached).unwrap().tokens
+        })
+        .collect();
+
+    let mut batch = BatchEngine::new(engine);
+
+    // admit every prompt; streams start with the prefill-sampled token
+    let mut streams: Vec<Vec<i32>> = Vec::new();
+    let mut slot_of: Vec<usize> = Vec::new();
+    for p in &prompts {
+        let (slot, first) = batch.admit(p).unwrap();
+        slot_of.push(slot);
+        streams.push(vec![first]);
+    }
+
+    // drain: every cycle advances all unfinished sessions in one batched
+    // step (the final cycles exercise padding rows as sessions finish)
+    loop {
+        let steps: Vec<(usize, i32)> = (0..prompts.len())
+            .filter(|&i| streams[i].len() < gen_lens[i])
+            .map(|i| (slot_of[i], *streams[i].last().unwrap()))
+            .collect();
+        if steps.is_empty() {
+            break;
+        }
+        let out = batch.decode_batch(&steps).unwrap();
+        assert_eq!(out.next.len(), steps.len());
+        assert_eq!(out.plan.work, out.plan.schedule.total_work());
+        for (slot, next) in out.next {
+            let i = slot_of.iter().position(|&s| s == slot).unwrap();
+            streams[i].push(next);
+        }
+    }
+
+    for (i, (got, want)) in streams.iter().zip(&reference).enumerate() {
+        assert_eq!(got, want, "slot {i}: batched stream diverged");
+        assert_eq!(got.len(), gen_lens[i]);
+    }
+
+    // ---- slot recycling + single-token fallback over pooled storage ----
+    for &slot in &slot_of {
+        batch.release(slot);
+    }
+    let (slot, first) = batch.admit(&prompts[0]).unwrap();
+    let mut tail = vec![first];
+    while tail.len() < gen_lens[0] {
+        let (next, _plan) =
+            batch.decode_single(slot, *tail.last().unwrap()).unwrap();
+        tail.push(next);
+    }
+    assert_eq!(
+        &tail, &reference[0],
+        "single-token fallback on a recycled slot diverged"
+    );
+
+    // planner telemetry accumulated across both paths
+    let stats = batch.planner_stats();
+    assert!(stats.steps > 0);
+    assert!(stats.work > 0);
+    assert!(stats.cycles >= stats.contention_cycles);
+
+    // a full pool refuses further admissions without corrupting state
+    let mut admitted = vec![slot];
+    while let Ok((s, _)) = batch.admit(&prompts[0]) {
+        admitted.push(s);
+    }
+    assert_eq!(admitted.len(), batch.slots());
+    assert!(batch.free_slot().is_none());
+}

@@ -7,7 +7,7 @@
 
 use moepim::coordinator::{DecodeMode, ModelEngine};
 use moepim::moe::gate::expert_choice_route;
-use moepim::runtime::{Runtime, TensorView};
+use moepim::runtime::{Runtime, TensorIn};
 use moepim::util::rng::Pcg32;
 
 fn prompt(len: usize, seed: u64, vocab: usize) -> Vec<i32> {
@@ -21,7 +21,7 @@ fn functional_pipeline_end_to_end() {
         "artifacts missing — run `make artifacts` before `cargo test`",
     );
     assert_eq!(rt.platform(), "cpu");
-    assert_eq!(rt.n_executables(), 10);
+    assert_eq!(rt.n_executables(), 14);
 
     check_shapes(&rt);
     check_gate_row_locality(&rt);
@@ -66,7 +66,7 @@ fn check_shapes(rt: &Runtime) {
     let x = rt
         .get("embed_prefill")
         .unwrap()
-        .run(&[TensorView::I32(ids)])
+        .run(&[TensorIn::I32(&ids)])
         .unwrap();
     assert_eq!(x.len(), 1);
     assert_eq!(x[0].len(), s * d);
@@ -75,8 +75,8 @@ fn check_shapes(rt: &Runtime) {
         .get("attn_prefill")
         .unwrap()
         .run(&[
-            TensorView::F32(x[0].as_f32().unwrap().to_vec()),
-            TensorView::I32(vec![m.prompt_len as i32]),
+            TensorIn::F32(x[0].as_f32().unwrap()),
+            TensorIn::I32(&[m.prompt_len as i32]),
         ])
         .unwrap();
     assert_eq!(attn.len(), 3);
@@ -87,16 +87,40 @@ fn check_shapes(rt: &Runtime) {
     let scores = rt
         .get("gate_full")
         .unwrap()
-        .run(&[TensorView::F32(attn[0].as_f32().unwrap().to_vec())])
+        .run(&[TensorIn::F32(attn[0].as_f32().unwrap())])
         .unwrap();
     assert_eq!(scores[0].len(), s * e);
 
     let logits = rt
         .get("logits_one")
         .unwrap()
-        .run(&[TensorView::F32(vec![0.1; d])])
+        .run(&[TensorIn::F32(&vec![0.1; d])])
         .unwrap();
     assert_eq!(logits[0].len(), v);
+
+    // batched decode artifacts take the pooled shapes
+    let b = m.batch_slots;
+    assert!(b >= 1);
+    let hb = vec![0.05f32; b * d];
+    let sb = rt
+        .get("gate_batch")
+        .unwrap()
+        .run(&[TensorIn::F32(&hb)])
+        .unwrap();
+    assert_eq!(sb[0].len(), b * e);
+    let attn_b = rt
+        .get("attn_decode_batch")
+        .unwrap()
+        .run(&[
+            TensorIn::F32(&hb),
+            TensorIn::F32(&vec![0.0f32; b * s * h * dh]),
+            TensorIn::F32(&vec![0.0f32; b * s * h * dh]),
+            TensorIn::I32(&vec![0i32; b]),
+        ])
+        .unwrap();
+    assert_eq!(attn_b[0].len(), b * d);
+    assert_eq!(attn_b[1].len(), b * h * dh);
+    assert_eq!(attn_b[2].len(), b * h * dh);
 }
 
 /// gate_one on row i equals gate_full's row i (row-locality — the identity
@@ -109,7 +133,7 @@ fn check_gate_row_locality(rt: &Runtime) {
     let full = rt
         .get("gate_full")
         .unwrap()
-        .run(&[TensorView::F32(h.clone())])
+        .run(&[TensorIn::F32(&h)])
         .unwrap()
         .remove(0)
         .into_f32()
@@ -118,7 +142,7 @@ fn check_gate_row_locality(rt: &Runtime) {
         let one = rt
             .get("gate_one")
             .unwrap()
-            .run(&[TensorView::F32(h[row * d..(row + 1) * d].to_vec())])
+            .run(&[TensorIn::F32(&h[row * d..(row + 1) * d])])
             .unwrap()
             .remove(0)
             .into_f32()
@@ -139,15 +163,12 @@ fn check_input_validation(rt: &Runtime) {
     let exe = rt.get("gate_one").unwrap();
     assert!(exe.run(&[]).is_err(), "arity check");
     assert!(
-        exe.run(&[TensorView::F32(vec![0.0; 3])]).is_err(),
+        exe.run(&[TensorIn::F32(&[0.0; 3])]).is_err(),
         "element-count check"
     );
     assert!(
-        exe.run(&[TensorView::I32(vec![
-            0;
-            rt.manifest.model.d_model
-        ])])
-        .is_err(),
+        exe.run(&[TensorIn::I32(&vec![0; rt.manifest.model.d_model])])
+            .is_err(),
         "dtype check"
     );
 }

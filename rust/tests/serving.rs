@@ -1,6 +1,10 @@
-//! Coordinator/server integration: batched serving over the real model
-//! (requires `make artifacts`), including failure injection for bad
+//! Coordinator/server integration: slot-batched serving over the real
+//! model (requires `make artifacts`), including failure injection for bad
 //! requests and artifact-directory errors.
+//!
+//! All server scenarios share one #[test]: the PJRT client is single-owner
+//! and each `Server::spawn` compiles every artifact, so one router thread
+//! serves every scenario below.
 
 use std::path::PathBuf;
 
@@ -37,35 +41,106 @@ fn server_lifecycle_and_batching() {
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("terminal response");
         assert_eq!(resp.id, i as u64);
-        assert_eq!(resp.tokens.len(), 3 + i);
+        let tokens = resp.result.as_ref().expect("generation succeeds");
+        assert_eq!(tokens.len(), 3 + i);
         assert!(resp.latency_us >= resp.ttft_us);
+        assert!(resp.ttft_us >= resp.queue_us);
     }
 
-    // identical prompts give identical streams (deterministic serving)
+    // identical prompts give identical streams (deterministic serving),
+    // whether they ride a batch together or decode alone
     let a = server.generate(100, prompt(16, 77), 5).unwrap();
     let b = server.generate(101, prompt(16, 77), 5).unwrap();
-    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.result, b.result);
+    assert!(a.is_ok());
+
+    // concurrent submits produce the same streams as isolated requests:
+    // the batched path must be token-equivalent to the single-token tail
+    let isolated: Vec<_> = (0..3u64)
+        .map(|i| {
+            server
+                .generate(200 + i, prompt(10 + i as usize, 50 + i), 6)
+                .unwrap()
+                .result
+                .expect("isolated generation")
+        })
+        .collect();
+    let rxs: Vec<_> = (0..3u64)
+        .map(|i| {
+            server.submit(Request {
+                id: 300 + i,
+                prompt: prompt(10 + i as usize, 50 + i),
+                gen_len: 6,
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(
+            resp.result.as_ref().expect("batched generation"),
+            &isolated[i],
+            "batched stream {i} diverged from isolated serving"
+        );
+        assert!(resp.batched_steps > 0, "request {i} never rode a batch");
+    }
+
+    // slot admission is FIFO: a burst larger than the slot pool is admitted
+    // strictly in submit order
+    let burst = 9u64;
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| {
+            server.submit(Request {
+                id: 400 + i,
+                prompt: prompt(8, 1000 + i),
+                gen_len: 4,
+            })
+        })
+        .collect();
+    let mut seqs = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_ok());
+        seqs.push(resp.admit_seq);
+    }
+    let mut sorted = seqs.clone();
+    sorted.sort_unstable();
+    assert_eq!(seqs, sorted, "admission order broke FIFO: {seqs:?}");
 
     // generation clamps at max_seq rather than wedging the router
     let resp = server.generate(102, prompt(16, 5), 10_000).unwrap();
-    assert!(!resp.tokens.is_empty());
-    assert!(resp.tokens.len() <= 96);
+    let tokens = resp.result.expect("clamped generation succeeds");
+    assert!(!tokens.is_empty());
+    assert!(tokens.len() <= 96);
 
-    // an oversized prompt is rejected per-request; the server survives and
-    // keeps serving
+    // an oversized prompt gets a *terminal error reply* (not a dropped
+    // channel); the server survives and keeps serving
     let rx = server.submit(Request {
         id: 103,
         prompt: prompt(500, 9),
         gen_len: 4,
     });
-    assert!(
-        rx.recv().is_err(),
-        "oversized prompt must fail its own channel only"
-    );
+    let resp = rx.recv().expect("oversized prompt still gets a reply");
+    let err = resp.result.expect_err("oversized prompt must error");
+    assert!(err.contains("max_seq"), "unexpected error: {err}");
     let after = server.generate(104, prompt(8, 11), 2).unwrap();
-    assert_eq!(after.tokens.len(), 2);
+    assert_eq!(after.result.expect("server still serves").len(), 2);
+
+    // an empty prompt errors terminally too
+    let resp = server.generate(105, Vec::new(), 2).unwrap();
+    assert!(resp.result.is_err(), "empty prompt must error");
+
+    // serving telemetry is live and consistent
+    let stats = server.stats().unwrap();
+    assert!(stats.slots >= 1);
+    assert!(stats.completed >= 18, "stats: {stats:?}");
+    assert_eq!(stats.errored, 2);
+    assert!(stats.batch_dispatches > 0, "no batched dispatch happened");
+    assert!(stats.mean_batch_occupancy() > 1.0);
+    assert!(stats.planner.steps > 0, "planner never ran");
+    assert!(stats.planner.work > 0);
+    assert!(stats.tokens_generated > 0);
 }
 
 #[test]
