@@ -1,16 +1,19 @@
 # Repo driver: python AOT artifacts + rust build/test.
 #
 #   make artifacts   lower the functional model to rust/artifacts/*.hlo.txt
+#                    (LAYERS=n overrides the functional depth; the CI
+#                    matrix builds LAYERS=1 and LAYERS=3 sets)
 #   make build       release build of the rust crate
 #   make test        tier-1 gate (build + tests; artifacts required first)
 #   make bench       hot-path benchmarks (incl. batched-vs-round-robin decode)
 
 PY ?= python3
+LAYERS ?= 1
 
 .PHONY: artifacts build test bench clean
 
 artifacts:
-	cd python && $(PY) -m compile.aot --out ../rust/artifacts
+	cd python && $(PY) -m compile.aot --out ../rust/artifacts --layers $(LAYERS)
 
 build:
 	cd rust && cargo build --release

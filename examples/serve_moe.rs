@@ -32,6 +32,9 @@ fn main() -> anyhow::Result<()> {
     println!("loading artifacts from {}", dir.display());
 
     // ---- correctness first: cached decode == recompute reference -------
+    // (a depth-1 statement — at L >= 2 a batch re-route rewrites past
+    // tokens' mid-stack hiddens the cached path froze, so deep sets are
+    // pinned by the batched-vs-per-session suites instead)
     let rt = Runtime::load(&dir)?;
     println!("platform {}, {} executables compiled", rt.platform(),
              rt.n_executables());
@@ -39,19 +42,29 @@ fn main() -> anyhow::Result<()> {
     let vocab = engine.model.vocab;
     let p = prompt(engine.model.prompt_len, 42, vocab);
     let cached = engine.generate(&p, 12, DecodeMode::Cached)?;
-    let reference = engine.generate(&p, 12, DecodeMode::Recompute)?;
-    assert_eq!(
-        cached.tokens, reference.tokens,
-        "GO-cached decode must reproduce the full-recompute reference"
-    );
-    println!(
-        "equivalence OK over 12 tokens: {:?}\n  cached decode {:.1} ms vs \
-         recompute {:.1} ms ({:.2}x functional speedup)",
-        cached.tokens,
-        cached.decode_us / 1e3,
-        reference.decode_us / 1e3,
-        reference.decode_us / cached.decode_us
-    );
+    if engine.model.n_layers == 1 {
+        let reference = engine.generate(&p, 12, DecodeMode::Recompute)?;
+        assert_eq!(
+            cached.tokens, reference.tokens,
+            "GO-cached decode must reproduce the full-recompute reference"
+        );
+        println!(
+            "equivalence OK over 12 tokens: {:?}\n  cached decode {:.1} ms \
+             vs recompute {:.1} ms ({:.2}x functional speedup)",
+            cached.tokens,
+            cached.decode_us / 1e3,
+            reference.decode_us / 1e3,
+            reference.decode_us / cached.decode_us
+        );
+    } else {
+        println!(
+            "cached decode over {} layers: {:?} ({:.1} ms; recompute \
+             equivalence is depth-1-only, skipped)",
+            engine.model.n_layers,
+            cached.tokens,
+            cached.decode_us / 1e3
+        );
+    }
     drop(engine);
 
     // ---- then throughput: slot-batched serving --------------------------
@@ -78,18 +91,19 @@ fn main() -> anyhow::Result<()> {
             .as_ref()
             .map_err(|e| anyhow::anyhow!("request {} failed: {e}", resp.id))?;
         total_tokens += tokens.len();
-        ttft_sum += resp.ttft_us;
+        // a successful response always carries real admission/TTFT times
+        ttft_sum += resp.ttft_us.unwrap_or(0.0);
         lat_sum += resp.latency_us;
         println!(
             "  req {:>2}: {:>2} tokens  ttft {:>7.1} ms  latency {:>7.1} ms  \
              ({} batched / {} single steps, queued {:.1} ms)",
             resp.id,
             tokens.len(),
-            resp.ttft_us / 1e3,
+            resp.ttft_us.unwrap_or(0.0) / 1e3,
             resp.latency_us / 1e3,
             resp.batched_steps,
             resp.single_steps,
-            resp.queue_us / 1e3,
+            resp.queue_us.unwrap_or(0.0) / 1e3,
         );
     }
     let wall = t0.elapsed().as_secs_f64();

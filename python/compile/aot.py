@@ -30,11 +30,18 @@ Outputs (per ModelConfig, all weights baked in as constants):
     gate_batch.hlo.txt        h[B,D]                   -> scores[B,E]
     moe_batch_sparse.hlo.txt  h[B,D], idx[B,K]i32, gate[B,K] -> y[B,D]
 
+  Depth L > 1 (cfg.n_layers_functional / --layers): every per-block family
+  (attn_*, gate_*, moe_*) is lowered once per layer with that layer's
+  weights baked in; layer 0 keeps the bare name and layers >= 1 append
+  `_l{layer}` (see layer_artifact), so an L=1 set is byte-identical to the
+  single-block one.  embed_* and logits_one are shared across the stack.
+
 `make artifacts` is a no-op when inputs are unchanged (manifest.json is the
 stamp).  Python never runs on the request path after this.
 """
 
 import argparse
+import dataclasses
 import functools
 import json
 import os
@@ -64,73 +71,92 @@ def _spec(shape, dtype=jnp.float32):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def build_entries(cfg: ModelConfig):
-    """(name, fn, example_args) for every exported executable."""
-    params = model.init_params(cfg)
-    s, d, e, v = cfg.max_seq, cfg.d_model, cfg.n_experts, cfg.vocab
-    h, dh = cfg.n_heads, cfg.d_head
+def layer_artifact(name: str, layer: int) -> str:
+    """Artifact name of `name` at `layer`.  Layer 0 keeps the bare name so
+    an L=1 artifact set is byte-identical to the pre-multi-layer one (and
+    so every seed stream survives)."""
+    return name if layer == 0 else f"{name}_l{layer}"
 
-    def take1(fn):
-        """Adapt a scalar-index arg to a [1]-i32 tensor (the rust Literal
-        API is simplest with rank-1 inputs)."""
-        return fn
+
+def build_entries(cfg: ModelConfig):
+    """(name, fn, example_args) for every exported executable.
+
+    Shared entries (embed_*, logits_one) appear once; per-block entries
+    (attention / gate / MoE families) appear once per functional layer,
+    named via `layer_artifact`, each with that layer's weights baked in.
+    """
+    params = model.init_params(cfg)
+    s, d, e = cfg.max_seq, cfg.d_model, cfg.n_experts
+    h, dh = cfg.n_heads, cfg.d_head
 
     def embed(ids):
         return model.embed_tokens(params, cfg, ids)
-
-    def attn_prefill(x, valid_len):
-        return model.attn_prefill(params, cfg, x, valid_len[0])
-
-    def attn_decode(x1, kc, vc, pos):
-        return model.attn_decode(params, cfg, x1, kc, vc, pos[0])
-
-    def gate(hh):
-        return model.gate_scores(params, cfg, hh)
-
-    def moe(hh, gates):
-        return model.moe_apply(params, cfg, hh, gates)
-
-    def moe_sparse(hh, idx, gates):
-        return model.moe_apply_sparse(params, cfg, hh, idx, gates)
-
-    def attn_decode_batch(xb, kc, vc, pos):
-        return model.attn_decode_batch(params, cfg, xb, kc, vc, pos)
-
-    def gate_batch(hb):
-        return model.gate_batch(params, cfg, hb)
-
-    def moe_batch_sparse(hb, idx, gates):
-        return model.moe_batch_sparse(params, cfg, hb, idx, gates)
 
     def logits(hh):
         return model.logits(params, cfg, hh)
 
     i32 = jnp.int32
     bsl, cap = cfg.batch_slots, cfg.expert_capacity
-    return [
+    entries = [
         ("embed_prefill", embed, (_spec((s,), i32),)),
         ("embed_one", embed, (_spec((1,), i32),)),
-        ("attn_prefill", attn_prefill, (_spec((s, d)), _spec((1,), i32))),
-        ("attn_decode", attn_decode,
-         (_spec((1, d)), _spec((s, h, dh)), _spec((s, h, dh)),
-          _spec((1,), i32))),
-        ("gate_full", gate, (_spec((s, d)),)),
-        ("gate_one", gate, (_spec((1, d)),)),
-        ("moe_full", moe, (_spec((s, d)), _spec((s, e)))),
-        ("moe_one", moe, (_spec((1, d)), _spec((1, e)))),
-        ("moe_one_sparse", moe_sparse,
-         (_spec((1, d)), _spec((cfg.expert_capacity,), i32),
-          _spec((cfg.expert_capacity,)))),
-        ("logits_one", logits, (_spec((1, d)),)),
-        # slot-batched decode artifacts (serving engine)
         ("embed_batch", embed, (_spec((bsl,), i32),)),
-        ("attn_decode_batch", attn_decode_batch,
-         (_spec((bsl, d)), _spec((bsl, s, h, dh)), _spec((bsl, s, h, dh)),
-          _spec((bsl,), i32))),
-        ("gate_batch", gate_batch, (_spec((bsl, d)),)),
-        ("moe_batch_sparse", moe_batch_sparse,
-         (_spec((bsl, d)), _spec((bsl, cap), i32), _spec((bsl, cap)))),
+        ("logits_one", logits, (_spec((1, d)),)),
     ]
+
+    for layer in range(cfg.n_layers_functional):
+        # bind the loop variable via default args (late binding otherwise)
+        def attn_prefill(x, valid_len, layer=layer):
+            return model.attn_prefill(params, cfg, x, valid_len[0],
+                                      layer=layer)
+
+        def attn_decode(x1, kc, vc, pos, layer=layer):
+            return model.attn_decode(params, cfg, x1, kc, vc, pos[0],
+                                     layer=layer)
+
+        def gate(hh, layer=layer):
+            return model.gate_scores(params, cfg, hh, layer=layer)
+
+        def moe(hh, gates, layer=layer):
+            return model.moe_apply(params, cfg, hh, gates, layer=layer)
+
+        def moe_sparse(hh, idx, gates, layer=layer):
+            return model.moe_apply_sparse(params, cfg, hh, idx, gates,
+                                          layer=layer)
+
+        def attn_decode_batch(xb, kc, vc, pos, layer=layer):
+            return model.attn_decode_batch(params, cfg, xb, kc, vc, pos,
+                                           layer=layer)
+
+        def gate_batch(hb, layer=layer):
+            return model.gate_batch(params, cfg, hb, layer=layer)
+
+        def moe_batch_sparse(hb, idx, gates, layer=layer):
+            return model.moe_batch_sparse(params, cfg, hb, idx, gates,
+                                          layer=layer)
+
+        nm = lambda base: layer_artifact(base, layer)  # noqa: E731
+        entries += [
+            (nm("attn_prefill"), attn_prefill,
+             (_spec((s, d)), _spec((1,), i32))),
+            (nm("attn_decode"), attn_decode,
+             (_spec((1, d)), _spec((s, h, dh)), _spec((s, h, dh)),
+              _spec((1,), i32))),
+            (nm("gate_full"), gate, (_spec((s, d)),)),
+            (nm("gate_one"), gate, (_spec((1, d)),)),
+            (nm("moe_full"), moe, (_spec((s, d)), _spec((s, e)))),
+            (nm("moe_one"), moe, (_spec((1, d)), _spec((1, e)))),
+            (nm("moe_one_sparse"), moe_sparse,
+             (_spec((1, d)), _spec((cap,), i32), _spec((cap,)))),
+            # slot-batched decode artifacts (serving engine)
+            (nm("attn_decode_batch"), attn_decode_batch,
+             (_spec((bsl, d)), _spec((bsl, s, h, dh)),
+              _spec((bsl, s, h, dh)), _spec((bsl,), i32))),
+            (nm("gate_batch"), gate_batch, (_spec((bsl, d)),)),
+            (nm("moe_batch_sparse"), moe_batch_sparse,
+             (_spec((bsl, d)), _spec((bsl, cap), i32), _spec((bsl, cap)))),
+        ]
+    return entries
 
 
 def lower_all(cfg: ModelConfig, out_dir: str) -> dict:
@@ -170,8 +196,15 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="../artifacts",
                     help="output directory for .hlo.txt + manifest.json")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="functional depth L (default: config's "
+                         "n_layers_functional)")
     args = ap.parse_args()
     cfg = DEFAULT
+    if args.layers is not None:
+        if args.layers < 1:
+            ap.error("--layers must be >= 1")
+        cfg = dataclasses.replace(cfg, n_layers_functional=args.layers)
     print(f"AOT-lowering functional model {cfg}")
     artifacts = lower_all(cfg, args.out)
     write_manifest(cfg, artifacts, args.out)

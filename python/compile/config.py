@@ -29,6 +29,12 @@ class ModelConfig:
     prompt_len: int = 32      # paper's prompt length
     max_seq: int = 96         # prompt + longest generation (paper: 32+64)
     batch_slots: int = 4      # serving batch width B (slot-batched decode)
+    # Depth of the *functional* stack (paper model: 32 blocks).  Layer 0
+    # reuses the exact seed weights of the single-block model, so L=1
+    # artifacts (and their token streams) are bit-identical to the
+    # pre-multi-layer ones; deeper layers derive fresh per-layer weights
+    # from fold_in(seed, layer).
+    n_layers_functional: int = 1
     seed: int = 20260710      # weight RNG seed
 
     # Crossbar-tiling parameters for the Pallas kernels.  The paper's chip is
@@ -53,9 +59,18 @@ class ModelConfig:
         """
         return self.prompt_len * self.top_k // self.n_experts
 
+    @property
+    def expert_capacity_per_layer(self) -> list:
+        """Per-layer expert capacity (recorded in the manifest so the rust
+        side sizes each layer's GO bank independently).  Uniform today —
+        every layer routes at the load-balanced prefill capacity — but the
+        schema supports heterogeneous depth-wise capacities."""
+        return [self.expert_capacity] * self.n_layers_functional
+
     def manifest_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["expert_capacity"] = self.expert_capacity
+        d["expert_capacity_per_layer"] = self.expert_capacity_per_layer
         return d
 
 

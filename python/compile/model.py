@@ -29,28 +29,49 @@ from .kernels import ref as kref
 # Parameters
 # ---------------------------------------------------------------------------
 
-def init_params(cfg: ModelConfig) -> dict:
-    """Seeded model weights.  Scales follow 1/sqrt(fan_in) so activations
-    stay O(1) through the quantised pipeline."""
-    ks = jax.random.split(jax.random.PRNGKey(cfg.seed), 10)
+def _init(key, shape, fan_in):
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            / jnp.sqrt(float(fan_in)))
+
+
+def _layer_weights(cfg: ModelConfig, keys) -> dict:
+    """Weights of one transformer block from 7 RNG keys.  Scales follow
+    1/sqrt(fan_in) so activations stay O(1) through the quantised
+    pipeline."""
     d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
-
-    def init(key, shape, fan_in):
-        return (jax.random.normal(key, shape, dtype=jnp.float32)
-                / jnp.sqrt(float(fan_in)))
-
     return {
-        "embed": init(ks[0], (cfg.vocab, d), 1.0) * 0.5,
-        "wq": init(ks[1], (d, d), d),
-        "wk": init(ks[2], (d, d), d),
-        "wv": init(ks[3], (d, d), d),
-        "wo": init(ks[4], (d, d), d),
-        "w_gate": init(ks[5], (d, e), d),
-        "w_up": init(ks[6], (e, d, f), d),
-        "w_down": init(ks[7], (e, f, d), f),
-        "w_out": init(ks[8], (d, cfg.vocab), d),
+        "wq": _init(keys[0], (d, d), d),
+        "wk": _init(keys[1], (d, d), d),
+        "wv": _init(keys[2], (d, d), d),
+        "wo": _init(keys[3], (d, d), d),
+        "w_gate": _init(keys[4], (d, e), d),
+        "w_up": _init(keys[5], (e, d, f), d),
+        "w_down": _init(keys[6], (e, f, d), f),
         "norm_attn": jnp.ones((d,), dtype=jnp.float32),
         "norm_moe": jnp.ones((d,), dtype=jnp.float32),
+    }
+
+
+def init_params(cfg: ModelConfig) -> dict:
+    """Seeded model weights for a depth-`n_layers_functional` stack.
+
+    Layer 0 draws from exactly the keys the single-block model used
+    (ks[1..7] of the 10-way split), so an L=1 model is bit-identical to the
+    pre-multi-layer one; layers >= 1 derive fresh keys via
+    `fold_in(seed, layer)`.  Embedding and logits head are shared across
+    the stack.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(cfg.seed), 10)
+    d = cfg.d_model
+    layers = [_layer_weights(cfg, ks[1:8])]
+    for layer in range(1, cfg.n_layers_functional):
+        lks = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), layer), 7)
+        layers.append(_layer_weights(cfg, lks))
+    return {
+        "embed": _init(ks[0], (cfg.vocab, d), 1.0) * 0.5,
+        "w_out": _init(ks[8], (d, cfg.vocab), d),
+        "layers": layers,
     }
 
 
@@ -64,55 +85,61 @@ def embed_tokens(params, cfg: ModelConfig, ids: jnp.ndarray):
 
 
 def attn_prefill(params, cfg: ModelConfig, x: jnp.ndarray,
-                 valid_len: jnp.ndarray):
-    """Padded prefill attention.
+                 valid_len: jnp.ndarray, layer: int = 0):
+    """Padded prefill attention of one block.
 
     x [S, D], valid_len scalar i32 -> (h [S, D], k [S, H, Dh], v [S, H, Dh]).
     h includes the residual; rows >= valid_len are meaningless padding.
     """
-    xn = kref.rmsnorm_ref(x, params["norm_attn"])
+    lp = params["layers"][layer]
+    xn = kref.rmsnorm_ref(x, lp["norm_attn"])
     out, k, v = kref.attention_prefill_ref(
-        xn, params["wq"], params["wk"], params["wv"], params["wo"],
+        xn, lp["wq"], lp["wk"], lp["wv"], lp["wo"],
         cfg.n_heads, cfg.d_head, valid_len=valid_len)
     return x + out, k, v
 
 
 def attn_decode(params, cfg: ModelConfig, x1: jnp.ndarray,
                 k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                pos: jnp.ndarray):
-    """One KV-cached decode step.
+                pos: jnp.ndarray, layer: int = 0):
+    """One KV-cached decode step of one block.
 
     x1 [1, D]; caches [S, H, Dh]; pos scalar i32 (index of the new token).
     Returns (h [1, D] with residual, k_new [1, H, Dh], v_new [1, H, Dh]).
-    The rust coordinator owns the cache buffers and writes k_new/v_new back
-    at `pos` (mirroring the DRAM-resident KV cache of the paper).
+    The rust coordinator owns the cache buffers (one bank per layer) and
+    writes k_new/v_new back at `pos` (mirroring the DRAM-resident KV cache
+    of the paper).
     """
-    xn = kref.rmsnorm_ref(x1, params["norm_attn"])
+    lp = params["layers"][layer]
+    xn = kref.rmsnorm_ref(x1, lp["norm_attn"])
     out, k_new, v_new = kref.attention_decode_ref(
-        xn, k_cache, v_cache, pos, params["wq"], params["wk"], params["wv"],
-        params["wo"], cfg.n_heads, cfg.d_head)
+        xn, k_cache, v_cache, pos, lp["wq"], lp["wk"], lp["wv"],
+        lp["wo"], cfg.n_heads, cfg.d_head)
     return x1 + out, k_new, v_new
 
 
-def gate_scores(params, cfg: ModelConfig, h: jnp.ndarray):
+def gate_scores(params, cfg: ModelConfig, h: jnp.ndarray, layer: int = 0):
     """h [T, D] (post-attention hidden) -> raw gate scores [T, E].
 
     Runs the L1 digital-matmul Pallas kernel on the *normed* hidden state;
     routing (softmax + expert-choice top-k / TopKUpdate) happens in rust.
     """
-    hn = kref.rmsnorm_ref(h, params["norm_moe"])
-    return (kgate.gate_scores(hn, params["w_gate"]),)
+    lp = params["layers"][layer]
+    hn = kref.rmsnorm_ref(h, lp["norm_moe"])
+    return (kgate.gate_scores(hn, lp["w_gate"]),)
 
 
-def moe_apply(params, cfg: ModelConfig, h: jnp.ndarray, gates: jnp.ndarray):
+def moe_apply(params, cfg: ModelConfig, h: jnp.ndarray, gates: jnp.ndarray,
+              layer: int = 0):
     """h [T, D], gates [T, E] (dense mask from rust routing) -> y [T, D].
 
     y includes the residual: y = h + sum_e gates[:,e] * FFN_e(norm(h)).
     Every expert runs through the L1 crossbar kernels (dense-masked; the
     sparsity win is modelled by the L3 simulator).
     """
-    hn = kref.rmsnorm_ref(h, params["norm_moe"])
-    y = kffn.moe_apply(hn, gates, params["w_up"], params["w_down"],
+    lp = params["layers"][layer]
+    hn = kref.rmsnorm_ref(h, lp["norm_moe"])
+    y = kffn.moe_apply(hn, gates, lp["w_up"], lp["w_down"],
                        xbar_rows=cfg.xbar_rows, dac_bits=cfg.dac_bits,
                        adc_bits=cfg.adc_bits,
                        range_factor=cfg.adc_range_factor)
@@ -120,7 +147,8 @@ def moe_apply(params, cfg: ModelConfig, h: jnp.ndarray, gates: jnp.ndarray):
 
 
 def moe_apply_sparse(params, cfg: ModelConfig, h: jnp.ndarray,
-                     expert_idx: jnp.ndarray, gates: jnp.ndarray):
+                     expert_idx: jnp.ndarray, gates: jnp.ndarray,
+                     layer: int = 0):
     """Sparse decode-path MoE (§Perf L2-1): h [1, D], expert_idx [K] i32,
     gates [K] f32 -> y [1, D] with y = h + sum_i gates[i] * FFN_{idx[i]}(h).
 
@@ -133,9 +161,10 @@ def moe_apply_sparse(params, cfg: ModelConfig, h: jnp.ndarray,
     but contributes exactly +0.0, keeping summation bit-compatible with
     the dense path's zero-gate terms).
     """
-    hn = kref.rmsnorm_ref(h, params["norm_moe"])
-    w_up = jnp.take(params["w_up"], expert_idx, axis=0)      # [K, D, F]
-    w_down = jnp.take(params["w_down"], expert_idx, axis=0)  # [K, F, D]
+    lp = params["layers"][layer]
+    hn = kref.rmsnorm_ref(h, lp["norm_moe"])
+    w_up = jnp.take(lp["w_up"], expert_idx, axis=0)      # [K, D, F]
+    w_down = jnp.take(lp["w_down"], expert_idx, axis=0)  # [K, F, D]
     y = jnp.zeros_like(h)
     k = expert_idx.shape[0]
     for i in range(k):
@@ -161,18 +190,18 @@ def moe_apply_sparse(params, cfg: ModelConfig, h: jnp.ndarray,
 
 def attn_decode_batch(params, cfg: ModelConfig, xb: jnp.ndarray,
                       k_caches: jnp.ndarray, v_caches: jnp.ndarray,
-                      pos: jnp.ndarray):
-    """Slot-batched KV-cached decode step.
+                      pos: jnp.ndarray, layer: int = 0):
+    """Slot-batched KV-cached decode step of one block.
 
-    xb [B, D]; k_caches/v_caches [B, S, H, Dh] (the coordinator's pooled
-    per-slot buffers, passed as one contiguous tensor); pos [B] i32.
+    xb [B, D]; k_caches/v_caches [B, S, H, Dh] (one contiguous layer bank
+    of the coordinator's pooled per-slot buffers); pos [B] i32.
     Returns (h [B, D], k_new [B, H, Dh], v_new [B, H, Dh]).
     """
     b = xb.shape[0]
     hs, ks, vs = [], [], []
     for i in range(b):
         h1, k1, v1 = attn_decode(params, cfg, xb[i:i + 1], k_caches[i],
-                                 v_caches[i], pos[i])
+                                 v_caches[i], pos[i], layer=layer)
         hs.append(h1)
         ks.append(k1)
         vs.append(v1)
@@ -180,15 +209,16 @@ def attn_decode_batch(params, cfg: ModelConfig, xb: jnp.ndarray,
             jnp.concatenate(vs, axis=0))
 
 
-def gate_batch(params, cfg: ModelConfig, hb: jnp.ndarray):
+def gate_batch(params, cfg: ModelConfig, hb: jnp.ndarray, layer: int = 0):
     """hb [B, D] -> raw gate scores [B, E], one slot per row (unrolled)."""
-    rows = [gate_scores(params, cfg, hb[i:i + 1])[0]
+    rows = [gate_scores(params, cfg, hb[i:i + 1], layer=layer)[0]
             for i in range(hb.shape[0])]
     return (jnp.concatenate(rows, axis=0),)
 
 
 def moe_batch_sparse(params, cfg: ModelConfig, hb: jnp.ndarray,
-                     expert_idx: jnp.ndarray, gates: jnp.ndarray):
+                     expert_idx: jnp.ndarray, gates: jnp.ndarray,
+                     layer: int = 0):
     """Slot-batched sparse-gather MoE: hb [B, D], expert_idx [B, K] i32,
     gates [B, K] -> y [B, D] with row i = moe_apply_sparse on slot i.
 
@@ -196,7 +226,7 @@ def moe_batch_sparse(params, cfg: ModelConfig, hb: jnp.ndarray,
     slots carry gate 0.0 (their FFN output contributes exactly +0.0).
     """
     rows = [moe_apply_sparse(params, cfg, hb[i:i + 1], expert_idx[i],
-                             gates[i])[0]
+                             gates[i], layer=layer)[0]
             for i in range(hb.shape[0])]
     return (jnp.concatenate(rows, axis=0),)
 
@@ -213,12 +243,19 @@ def logits(params, cfg: ModelConfig, h: jnp.ndarray):
 # ---------------------------------------------------------------------------
 
 def block_prefill_ref(params, cfg: ModelConfig, ids):
-    """Full prefill at true length (no padding) for equivalence tests."""
+    """Full depth-L prefill at true length (no padding) for equivalence
+    tests.  Returns the final hidden state plus per-layer scores/k/v
+    lists (length `n_layers_functional`)."""
     x = jnp.take(params["embed"], ids, axis=0)
     t = x.shape[0]
-    h, k, v = attn_prefill(params, cfg, x, jnp.int32(t))
-    scores = gate_scores(params, cfg, h)[0]
-    gates = kref.expert_choice_gates_ref(scores, cfg.expert_capacity,
-                                         valid_len=t)
-    y = moe_apply(params, cfg, h, gates)[0]
-    return y, scores, k, v
+    all_scores, all_k, all_v = [], [], []
+    for layer in range(cfg.n_layers_functional):
+        h, k, v = attn_prefill(params, cfg, x, jnp.int32(t), layer=layer)
+        scores = gate_scores(params, cfg, h, layer=layer)[0]
+        gates = kref.expert_choice_gates_ref(scores, cfg.expert_capacity,
+                                             valid_len=t)
+        x = moe_apply(params, cfg, h, gates, layer=layer)[0]
+        all_scores.append(scores)
+        all_k.append(k)
+        all_v.append(v)
+    return x, all_scores, all_k, all_v

@@ -71,6 +71,37 @@ def test_manifest_contents(lowered_dir):
     assert set(m["artifacts"]) == set(artifacts)
 
 
+def test_layered_lowering_names_and_manifest():
+    """Depth L > 1: per-block families are lowered once per layer with the
+    `_l{layer}` suffix (layer 0 bare), shared entries stay single, and the
+    manifest records the depth + per-layer capacities."""
+    cfg = ModelConfig(d_model=128, n_experts=4, top_k=2, d_ff=128,
+                      n_heads=2, d_head=64, vocab=64, prompt_len=8,
+                      max_seq=16, n_layers_functional=2)
+    names = [name for name, _, _ in aot.build_entries(cfg)]
+    assert names.count("gate_one") == 1
+    assert "gate_one_l1" in names and "gate_one_l2" not in names
+    assert "attn_decode_batch_l1" in names
+    assert names.count("embed_batch") == 1 and "embed_batch_l1" not in names
+    assert "logits_one_l1" not in names
+    # 4 shared + 10 per-block families per layer
+    assert len(names) == 4 + 10 * 2
+
+    m = cfg.manifest_dict()
+    assert m["n_layers_functional"] == 2
+    assert m["expert_capacity_per_layer"] == [cfg.expert_capacity] * 2
+
+    with tempfile.TemporaryDirectory() as d:
+        artifacts = aot.lower_all(cfg, d)
+        aot.write_manifest(cfg, artifacts, d)
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert manifest["model"]["n_layers_functional"] == 2
+        assert set(artifacts) == set(names)
+        l0 = open(os.path.join(d, "gate_one.hlo.txt")).read()
+        l1 = open(os.path.join(d, "gate_one_l1.hlo.txt")).read()
+        assert l0 != l1, "layers must bake distinct weights"
+
+
 def test_outputs_are_tuples(lowered_dir):
     """return_tuple=True: every ROOT is a tuple so the rust side can always
     unwrap with to_tupleN."""

@@ -133,7 +133,8 @@ def test_block_prefill_ref_runs(tiny_cfg, tiny_params):
                                               toks(tiny_cfg,
                                                    tiny_cfg.prompt_len))
     assert y.shape == (tiny_cfg.prompt_len, tiny_cfg.d_model)
-    assert scores.shape == (tiny_cfg.prompt_len, tiny_cfg.n_experts)
+    assert len(scores) == tiny_cfg.n_layers_functional
+    assert scores[0].shape == (tiny_cfg.prompt_len, tiny_cfg.n_experts)
     assert np.isfinite(np.asarray(y)).all()
 
 
@@ -157,5 +158,26 @@ def test_activations_bounded(cfg, params):
 def test_init_params_seeded(cfg):
     a = model.init_params(cfg)
     b = model.init_params(cfg)
-    np.testing.assert_array_equal(np.asarray(a["w_up"]),
-                                  np.asarray(b["w_up"]))
+    np.testing.assert_array_equal(np.asarray(a["layers"][0]["w_up"]),
+                                  np.asarray(b["layers"][0]["w_up"]))
+
+
+def test_deeper_layers_get_distinct_weights():
+    """Layer 0 of a deep stack must equal the single-block weights (the
+    L=1 bit-identity contract) while layers >= 1 draw fresh weights."""
+    shallow = ModelConfig(d_model=64, n_experts=4, top_k=2, d_ff=32,
+                          n_heads=2, d_head=32, vocab=64, prompt_len=8,
+                          max_seq=16)
+    import dataclasses
+    deep_cfg = dataclasses.replace(shallow, n_layers_functional=3)
+    p1 = model.init_params(shallow)
+    p3 = model.init_params(deep_cfg)
+    assert len(p3["layers"]) == 3
+    np.testing.assert_array_equal(np.asarray(p1["layers"][0]["w_up"]),
+                                  np.asarray(p3["layers"][0]["w_up"]))
+    np.testing.assert_array_equal(np.asarray(p1["embed"]),
+                                  np.asarray(p3["embed"]))
+    assert not np.array_equal(np.asarray(p3["layers"][0]["w_up"]),
+                              np.asarray(p3["layers"][1]["w_up"]))
+    assert not np.array_equal(np.asarray(p3["layers"][1]["w_up"]),
+                              np.asarray(p3["layers"][2]["w_up"]))

@@ -62,6 +62,20 @@ impl GoCache {
         }
     }
 
+    /// One independent GO bank per functional layer (depth-L sessions):
+    /// `capacities[l]` sizes layer `l`'s bank.  Banks are fully isolated —
+    /// a layer's `TopKUpdate` can never perturb another layer's selections,
+    /// matching the per-layer score/output caches of the paper's 32-block
+    /// target model.
+    pub fn banks(capacities: &[usize], n_experts: usize, out_dim: usize)
+        -> Vec<GoCache> {
+        assert!(!capacities.is_empty(), "need at least one layer");
+        capacities
+            .iter()
+            .map(|&cap| GoCache::new(n_experts, cap, out_dim))
+            .collect()
+    }
+
     pub fn capacity(&self) -> usize {
         self.capacity
     }

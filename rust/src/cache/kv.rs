@@ -1,27 +1,38 @@
-//! KV cache: per-sequence key/value buffers for attention decode.
+//! KV cache: per-sequence, per-layer key/value banks for attention decode.
 //!
-//! The coordinator owns one [`KvCache`] per live sequence; the
-//! `attn_decode` executable receives the full (padded) buffers plus the
-//! write position and returns the new token's K/V rows, which the
-//! coordinator writes back — mirroring the DRAM-resident cache of the
-//! paper's chip, where the PIM die streams K/V in per step.
+//! The coordinator owns one [`KvCache`] per live sequence, holding one
+//! bank per functional layer; the layer-`l` `attn_decode` executable
+//! receives layer `l`'s full (padded) buffers plus the write position and
+//! returns the new token's K/V rows, which the coordinator writes back —
+//! mirroring the DRAM-resident cache of the paper's chip, where the PIM
+//! die streams each layer's K/V in per step.
+//!
+//! Layout: one contiguous buffer with the *layer as the outermost
+//! dimension* (`[L, S, H, Dh]` per-session, `[L, B, S, H, Dh]` pooled), so
+//! a layer bank is a contiguous slice the attention artifacts borrow
+//! zero-copy.
 
-/// Functional KV buffer of one sequence, padded to `max_seq`.
+/// Functional KV banks of one sequence: `[n_layers, max_seq, H, Dh]`,
+/// padded to `max_seq`.  All layers share one sequence length.
 #[derive(Debug, Clone)]
 pub struct KvCache {
+    n_layers: usize,
     max_seq: usize,
     n_heads: usize,
     d_head: usize,
     len: usize,
-    /// [max_seq, n_heads, d_head] row-major
+    /// [n_layers, max_seq, n_heads, d_head] row-major
     k: Vec<f32>,
     v: Vec<f32>,
 }
 
 impl KvCache {
-    pub fn new(max_seq: usize, n_heads: usize, d_head: usize) -> Self {
-        let n = max_seq * n_heads * d_head;
+    pub fn new(n_layers: usize, max_seq: usize, n_heads: usize,
+               d_head: usize) -> Self {
+        assert!(n_layers >= 1, "cache needs at least one layer");
+        let n = n_layers * max_seq * n_heads * d_head;
         KvCache {
+            n_layers,
             max_seq,
             n_heads,
             d_head,
@@ -43,86 +54,118 @@ impl KvCache {
         self.max_seq
     }
 
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
     pub fn row_elems(&self) -> usize {
         self.n_heads * self.d_head
     }
 
-    /// Full padded buffers (what `attn_decode` takes as inputs).
-    pub fn k_buf(&self) -> &[f32] {
-        &self.k
+    fn layer_elems(&self) -> usize {
+        self.max_seq * self.row_elems()
     }
 
-    pub fn v_buf(&self) -> &[f32] {
-        &self.v
+    /// Layer `layer`'s full padded K bank `[S, H, Dh]` (what the layer's
+    /// `attn_decode` takes as its cache input).
+    pub fn layer_k(&self, layer: usize) -> &[f32] {
+        let n = self.layer_elems();
+        &self.k[layer * n..(layer + 1) * n]
     }
 
-    /// Seed from a prefill's K/V outputs (padded [max_seq, H, Dh] buffers,
-    /// `valid` rows meaningful).
-    pub fn seed(&mut self, k: &[f32], v: &[f32], valid: usize) {
-        assert_eq!(k.len(), self.k.len(), "k buffer shape mismatch");
-        assert_eq!(v.len(), self.v.len(), "v buffer shape mismatch");
+    pub fn layer_v(&self, layer: usize) -> &[f32] {
+        let n = self.layer_elems();
+        &self.v[layer * n..(layer + 1) * n]
+    }
+
+    /// Seed from a prefill's per-layer K/V outputs (each a padded
+    /// `[S, H, Dh]` buffer, `valid` rows meaningful).
+    pub fn seed<R: AsRef<[f32]>>(&mut self, ks: &[R], vs: &[R],
+                                 valid: usize) {
+        assert_eq!(ks.len(), self.n_layers, "layer count mismatch");
+        assert_eq!(vs.len(), self.n_layers, "layer count mismatch");
         assert!(valid <= self.max_seq);
-        self.k.copy_from_slice(k);
-        self.v.copy_from_slice(v);
+        let n = self.layer_elems();
+        for (layer, (k, v)) in ks.iter().zip(vs).enumerate() {
+            let (k, v) = (k.as_ref(), v.as_ref());
+            assert_eq!(k.len(), n, "k buffer shape mismatch");
+            assert_eq!(v.len(), n, "v buffer shape mismatch");
+            self.k[layer * n..(layer + 1) * n].copy_from_slice(k);
+            self.v[layer * n..(layer + 1) * n].copy_from_slice(v);
+        }
         self.len = valid;
     }
 
-    /// Append one decode step's K/V rows ([1, H, Dh] each).
-    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
-        let r = self.row_elems();
-        assert_eq!(k_row.len(), r, "k row shape mismatch");
-        assert_eq!(v_row.len(), r, "v row shape mismatch");
+    /// Append one decode step's K/V rows (`[1, H, Dh]` per layer; any
+    /// `AsRef<[f32]>` row — owned buffers or borrowed pool slices — so
+    /// hot-path callers never clone).
+    pub fn append<R: AsRef<[f32]>>(&mut self, k_rows: &[R], v_rows: &[R]) {
+        assert_eq!(k_rows.len(), self.n_layers, "layer count mismatch");
+        assert_eq!(v_rows.len(), self.n_layers, "layer count mismatch");
         assert!(self.len < self.max_seq, "KV cache full");
-        let off = self.len * r;
-        self.k[off..off + r].copy_from_slice(k_row);
-        self.v[off..off + r].copy_from_slice(v_row);
+        let r = self.row_elems();
+        let n = self.layer_elems();
+        for (layer, (k_row, v_row)) in k_rows.iter().zip(v_rows).enumerate()
+        {
+            let (k_row, v_row) = (k_row.as_ref(), v_row.as_ref());
+            assert_eq!(k_row.len(), r, "k row shape mismatch");
+            assert_eq!(v_row.len(), r, "v row shape mismatch");
+            let off = layer * n + self.len * r;
+            self.k[off..off + r].copy_from_slice(k_row);
+            self.v[off..off + r].copy_from_slice(v_row);
+        }
         self.len += 1;
     }
 
-    pub fn row_k(&self, pos: usize) -> &[f32] {
+    pub fn row_k(&self, layer: usize, pos: usize) -> &[f32] {
         let r = self.row_elems();
-        &self.k[pos * r..(pos + 1) * r]
+        let off = layer * self.layer_elems() + pos * r;
+        &self.k[off..off + r]
     }
 
-    /// Bytes written per generated token on the paper's chip (K + V rows at
-    /// 8-bit I/O precision).
+    /// Bytes written per generated token *per layer* on the paper's chip
+    /// (K + V rows at 8-bit I/O precision).
     pub fn bytes_per_token_write(n_heads: usize, d_head: usize) -> u64 {
         2 * (n_heads * d_head) as u64
     }
 
-    /// Bytes read per decode step at context length `l` (stream all cached
-    /// K and V rows).
+    /// Bytes read per decode step *per layer* at context length `l`
+    /// (stream all cached K and V rows).
     pub fn bytes_read_at(n_heads: usize, d_head: usize, l: usize) -> u64 {
         2 * (n_heads * d_head) as u64 * l as u64
     }
 }
 
-/// Pooled per-slot KV storage for the slot-batched serving engine.
+/// Pooled per-slot, per-layer KV storage for the slot-batched serving
+/// engine.
 ///
-/// One contiguous pair of `[B, S, H, Dh]` buffers instead of B separate
-/// [`KvCache`]s: the batched `attn_decode_batch` artifact takes the whole
-/// pool as its cache inputs, so a batch step borrows `k_all()` / `v_all()`
-/// directly — zero copies, where the per-session path used to clone both
-/// buffers every token.  Slots are recycled between requests with
+/// One contiguous pair of `[L, B, S, H, Dh]` buffers instead of B separate
+/// [`KvCache`]s: layer `l`'s bank (`layer_k(l)` / `layer_v(l)`) is exactly
+/// the `[B, S, H, Dh]` tensor the layer's `attn_decode_batch` artifact
+/// takes as its cache inputs, so a batch step borrows each bank directly —
+/// zero copies at every depth.  Slots are recycled between requests with
 /// [`KvPool::reset_slot`].
 #[derive(Debug, Clone)]
 pub struct KvPool {
+    n_layers: usize,
     slots: usize,
     max_seq: usize,
     n_heads: usize,
     d_head: usize,
     len: Vec<usize>,
-    /// [slots, max_seq, n_heads, d_head] row-major
+    /// [n_layers, slots, max_seq, n_heads, d_head] row-major
     k: Vec<f32>,
     v: Vec<f32>,
 }
 
 impl KvPool {
-    pub fn new(slots: usize, max_seq: usize, n_heads: usize, d_head: usize)
-        -> Self {
+    pub fn new(n_layers: usize, slots: usize, max_seq: usize,
+               n_heads: usize, d_head: usize) -> Self {
+        assert!(n_layers >= 1, "pool needs at least one layer");
         assert!(slots >= 1, "pool needs at least one slot");
-        let n = slots * max_seq * n_heads * d_head;
+        let n = n_layers * slots * max_seq * n_heads * d_head;
         KvPool {
+            n_layers,
             slots,
             max_seq,
             n_heads,
@@ -141,6 +184,10 @@ impl KvPool {
         self.max_seq
     }
 
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
     pub fn row_elems(&self) -> usize {
         self.n_heads * self.d_head
     }
@@ -149,7 +196,11 @@ impl KvPool {
         self.max_seq * self.row_elems()
     }
 
-    /// Valid rows of `slot`.
+    fn layer_elems(&self) -> usize {
+        self.slots * self.slot_elems()
+    }
+
+    /// Valid rows of `slot` (shared by all layers).
     pub fn len(&self, slot: usize) -> usize {
         self.len[slot]
     }
@@ -158,60 +209,82 @@ impl KvPool {
         self.len[slot] == 0
     }
 
-    /// The whole pooled K buffer `[B, S, H, Dh]` — the batched decode
-    /// artifact's cache input.
-    pub fn k_all(&self) -> &[f32] {
-        &self.k
+    /// Layer `layer`'s pooled K bank `[B, S, H, Dh]` — the batched decode
+    /// artifact's cache input for that layer.
+    pub fn layer_k(&self, layer: usize) -> &[f32] {
+        let n = self.layer_elems();
+        &self.k[layer * n..(layer + 1) * n]
     }
 
-    pub fn v_all(&self) -> &[f32] {
-        &self.v
+    pub fn layer_v(&self, layer: usize) -> &[f32] {
+        let n = self.layer_elems();
+        &self.v[layer * n..(layer + 1) * n]
     }
 
-    /// One slot's padded K buffer `[S, H, Dh]` (single-token fallback path).
-    pub fn slot_k(&self, slot: usize) -> &[f32] {
-        let n = self.slot_elems();
-        &self.k[slot * n..(slot + 1) * n]
+    /// One slot's padded K bank `[S, H, Dh]` at `layer` (single-token
+    /// fallback path).
+    pub fn slot_k(&self, layer: usize, slot: usize) -> &[f32] {
+        let off = layer * self.layer_elems() + slot * self.slot_elems();
+        &self.k[off..off + self.slot_elems()]
     }
 
-    pub fn slot_v(&self, slot: usize) -> &[f32] {
-        let n = self.slot_elems();
-        &self.v[slot * n..(slot + 1) * n]
+    pub fn slot_v(&self, layer: usize, slot: usize) -> &[f32] {
+        let off = layer * self.layer_elems() + slot * self.slot_elems();
+        &self.v[off..off + self.slot_elems()]
     }
 
-    /// Seed `slot` from a prefill's padded K/V outputs (`[S, H, Dh]` each,
-    /// `valid` rows meaningful).
-    pub fn seed_slot(&mut self, slot: usize, k: &[f32], v: &[f32],
-                     valid: usize) {
-        let n = self.slot_elems();
-        assert_eq!(k.len(), n, "k buffer shape mismatch");
-        assert_eq!(v.len(), n, "v buffer shape mismatch");
+    /// Seed `slot` from a prefill's per-layer padded K/V outputs
+    /// (`[S, H, Dh]` each, `valid` rows meaningful).
+    pub fn seed_slot<R: AsRef<[f32]>>(&mut self, slot: usize, ks: &[R],
+                                      vs: &[R], valid: usize) {
+        assert_eq!(ks.len(), self.n_layers, "layer count mismatch");
+        assert_eq!(vs.len(), self.n_layers, "layer count mismatch");
         assert!(valid <= self.max_seq);
-        self.k[slot * n..(slot + 1) * n].copy_from_slice(k);
-        self.v[slot * n..(slot + 1) * n].copy_from_slice(v);
+        let n = self.slot_elems();
+        for (layer, (k, v)) in ks.iter().zip(vs).enumerate() {
+            let (k, v) = (k.as_ref(), v.as_ref());
+            assert_eq!(k.len(), n, "k buffer shape mismatch");
+            assert_eq!(v.len(), n, "v buffer shape mismatch");
+            let off = layer * self.layer_elems() + slot * n;
+            self.k[off..off + n].copy_from_slice(k);
+            self.v[off..off + n].copy_from_slice(v);
+        }
         self.len[slot] = valid;
     }
 
-    /// Append one decode step's K/V rows (`[1, H, Dh]` each) to `slot`.
-    pub fn append_slot(&mut self, slot: usize, k_row: &[f32],
-                       v_row: &[f32]) {
-        let r = self.row_elems();
-        assert_eq!(k_row.len(), r, "k row shape mismatch");
-        assert_eq!(v_row.len(), r, "v row shape mismatch");
+    /// Append one decode step's K/V rows (`[1, H, Dh]` per layer; any
+    /// `AsRef<[f32]>` row, so the batched commit passes borrowed slices
+    /// of the dispatch outputs without cloning) to `slot`.
+    pub fn append_slot<R: AsRef<[f32]>>(&mut self, slot: usize,
+                                        k_rows: &[R], v_rows: &[R]) {
+        assert_eq!(k_rows.len(), self.n_layers, "layer count mismatch");
+        assert_eq!(v_rows.len(), self.n_layers, "layer count mismatch");
         assert!(self.len[slot] < self.max_seq, "KV slot full");
-        let off = slot * self.slot_elems() + self.len[slot] * r;
-        self.k[off..off + r].copy_from_slice(k_row);
-        self.v[off..off + r].copy_from_slice(v_row);
+        let r = self.row_elems();
+        for (layer, (k_row, v_row)) in k_rows.iter().zip(v_rows).enumerate()
+        {
+            let (k_row, v_row) = (k_row.as_ref(), v_row.as_ref());
+            assert_eq!(k_row.len(), r, "k row shape mismatch");
+            assert_eq!(v_row.len(), r, "v row shape mismatch");
+            let off = layer * self.layer_elems()
+                + slot * self.slot_elems()
+                + self.len[slot] * r;
+            self.k[off..off + r].copy_from_slice(k_row);
+            self.v[off..off + r].copy_from_slice(v_row);
+        }
         self.len[slot] += 1;
     }
 
-    /// Recycle `slot` for a new request.  Zeroes the buffers so a stale
-    /// session can never leak rows into the next one through the padded
-    /// region the batched artifact reads.
+    /// Recycle `slot` for a new request.  Zeroes every layer's region so a
+    /// stale session can never leak rows into the next one through the
+    /// padded region the batched artifacts read.
     pub fn reset_slot(&mut self, slot: usize) {
         let n = self.slot_elems();
-        self.k[slot * n..(slot + 1) * n].fill(0.0);
-        self.v[slot * n..(slot + 1) * n].fill(0.0);
+        for layer in 0..self.n_layers {
+            let off = layer * self.layer_elems() + slot * n;
+            self.k[off..off + n].fill(0.0);
+            self.v[off..off + n].fill(0.0);
+        }
         self.len[slot] = 0;
     }
 }
@@ -222,24 +295,44 @@ mod tests {
 
     #[test]
     fn seed_and_append() {
-        let mut c = KvCache::new(4, 2, 3);
+        let mut c = KvCache::new(1, 4, 2, 3);
         let mut k = vec![0.0; 4 * 6];
         let v = vec![0.5; 4 * 6];
         k[0] = 1.0; // token 0, head 0, dim 0
-        c.seed(&k, &v, 2);
+        c.seed(&[k], &[v], 2);
         assert_eq!(c.len(), 2);
-        c.append(&[9.0; 6], &[8.0; 6]);
+        c.append(&[vec![9.0; 6]], &[vec![8.0; 6]]);
         assert_eq!(c.len(), 3);
-        assert_eq!(c.row_k(2), &[9.0; 6]);
-        assert_eq!(c.row_k(0)[0], 1.0);
+        assert_eq!(c.row_k(0, 2), &[9.0; 6]);
+        assert_eq!(c.row_k(0, 0)[0], 1.0);
+    }
+
+    #[test]
+    fn layers_are_independent_banks() {
+        let mut c = KvCache::new(3, 4, 1, 2);
+        let ks: Vec<Vec<f32>> =
+            (0..3).map(|l| vec![l as f32 + 1.0; 4 * 2]).collect();
+        let vs = ks.clone();
+        c.seed(&ks, &vs, 1);
+        for l in 0..3 {
+            assert_eq!(c.layer_k(l)[0], l as f32 + 1.0);
+            assert_eq!(c.layer_k(l).len(), 4 * 2);
+        }
+        c.append(
+            &(0..3).map(|l| vec![10.0 * (l as f32 + 1.0); 2]).collect::<Vec<_>>(),
+            &(0..3).map(|_| vec![0.0; 2]).collect::<Vec<_>>(),
+        );
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.row_k(2, 1), &[30.0, 30.0]);
+        assert_eq!(c.row_k(0, 1), &[10.0, 10.0]);
     }
 
     #[test]
     #[should_panic(expected = "KV cache full")]
     fn overflow_panics() {
-        let mut c = KvCache::new(1, 1, 1);
-        c.append(&[1.0], &[1.0]);
-        c.append(&[2.0], &[2.0]);
+        let mut c = KvCache::new(1, 1, 1, 1);
+        c.append(&[vec![1.0]], &[vec![1.0]]);
+        c.append(&[vec![2.0]], &[vec![2.0]]);
     }
 
     #[test]
@@ -252,50 +345,70 @@ mod tests {
 
     #[test]
     fn buffers_padded_to_max() {
-        let c = KvCache::new(96, 4, 64);
-        assert_eq!(c.k_buf().len(), 96 * 4 * 64);
+        let c = KvCache::new(2, 96, 4, 64);
+        assert_eq!(c.layer_k(0).len(), 96 * 4 * 64);
+        assert_eq!(c.layer_k(1).len(), 96 * 4 * 64);
         assert!(c.is_empty());
     }
 
     #[test]
     fn pool_slots_are_independent() {
-        let mut p = KvPool::new(3, 4, 2, 3);
-        assert_eq!(p.k_all().len(), 3 * 4 * 6);
+        let mut p = KvPool::new(1, 3, 4, 2, 3);
+        assert_eq!(p.layer_k(0).len(), 3 * 4 * 6);
         let mut k = vec![0.0; 4 * 6];
         k[0] = 2.0;
         let v = vec![0.5; 4 * 6];
-        p.seed_slot(1, &k, &v, 2);
+        p.seed_slot(1, &[k], &[v], 2);
         assert_eq!(p.len(1), 2);
         assert_eq!(p.len(0), 0);
-        p.append_slot(1, &[9.0; 6], &[8.0; 6]);
+        p.append_slot(1, &[vec![9.0; 6]], &[vec![8.0; 6]]);
         assert_eq!(p.len(1), 3);
         // slot 1's view matches what was written; slot 0 untouched
-        assert_eq!(p.slot_k(1)[0], 2.0);
-        assert_eq!(p.slot_k(1)[2 * 6], 9.0);
-        assert!(p.slot_k(0).iter().all(|&x| x == 0.0));
-        // the pooled buffer is the slots concatenated
+        assert_eq!(p.slot_k(0, 1)[0], 2.0);
+        assert_eq!(p.slot_k(0, 1)[2 * 6], 9.0);
+        assert!(p.slot_k(0, 0).iter().all(|&x| x == 0.0));
+        // a layer bank is the slots concatenated
         let n = 4 * 6;
-        assert_eq!(&p.k_all()[n..2 * n], p.slot_k(1));
+        assert_eq!(&p.layer_k(0)[n..2 * n], p.slot_k(0, 1));
     }
 
     #[test]
-    fn pool_reset_zeroes_slot() {
-        let mut p = KvPool::new(2, 2, 1, 2);
-        p.append_slot(0, &[1.0, 2.0], &[3.0, 4.0]);
-        p.append_slot(1, &[5.0, 6.0], &[7.0, 8.0]);
+    fn pool_layer_banks_are_contiguous_slot_major() {
+        let mut p = KvPool::new(2, 2, 2, 1, 2);
+        p.seed_slot(0, &[vec![1.0; 4], vec![2.0; 4]],
+                    &[vec![0.0; 4], vec![0.0; 4]], 1);
+        p.seed_slot(1, &[vec![3.0; 4], vec![4.0; 4]],
+                    &[vec![0.0; 4], vec![0.0; 4]], 1);
+        // layer 0 bank = [slot0 @ l0, slot1 @ l0]
+        assert_eq!(p.layer_k(0), &[1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(p.layer_k(1), &[2.0, 2.0, 2.0, 2.0, 4.0, 4.0, 4.0, 4.0]);
+        assert_eq!(p.slot_k(1, 1), &[4.0; 4]);
+    }
+
+    #[test]
+    fn pool_reset_zeroes_slot_across_layers() {
+        let mut p = KvPool::new(2, 2, 2, 1, 2);
+        p.append_slot(0, &[vec![1.0, 2.0], vec![1.5, 2.5]],
+                      &[vec![3.0, 4.0], vec![3.5, 4.5]]);
+        p.append_slot(1, &[vec![5.0, 6.0], vec![5.5, 6.5]],
+                      &[vec![7.0, 8.0], vec![7.5, 8.5]]);
         p.reset_slot(0);
         assert_eq!(p.len(0), 0);
-        assert!(p.slot_k(0).iter().all(|&x| x == 0.0));
-        // neighbouring slot unaffected
-        assert_eq!(p.slot_k(1)[0], 5.0);
+        for l in 0..2 {
+            assert!(p.slot_k(l, 0).iter().all(|&x| x == 0.0));
+            assert!(p.slot_v(l, 0).iter().all(|&x| x == 0.0));
+        }
+        // neighbouring slot unaffected on every layer
+        assert_eq!(p.slot_k(0, 1)[0], 5.0);
+        assert_eq!(p.slot_k(1, 1)[0], 5.5);
         assert_eq!(p.len(1), 1);
     }
 
     #[test]
     #[should_panic(expected = "KV slot full")]
     fn pool_overflow_panics() {
-        let mut p = KvPool::new(1, 1, 1, 1);
-        p.append_slot(0, &[1.0], &[1.0]);
-        p.append_slot(0, &[2.0], &[2.0]);
+        let mut p = KvPool::new(1, 1, 1, 1, 1);
+        p.append_slot(0, &[vec![1.0]], &[vec![1.0]]);
+        p.append_slot(0, &[vec![2.0]], &[vec![2.0]]);
     }
 }

@@ -39,6 +39,30 @@ pub struct FunctionalModel {
     pub expert_capacity: usize,
     /// serving batch width B of the slot-batched decode artifacts
     pub batch_slots: usize,
+    /// functional stack depth L (`n_layers_functional` in the manifest)
+    pub n_layers: usize,
+    /// GO-bank capacity per layer (len == `n_layers`; uniform today, but
+    /// the schema supports heterogeneous depth-wise capacities)
+    pub expert_capacity_per_layer: Vec<usize>,
+}
+
+impl FunctionalModel {
+    /// Expert capacity of `layer`'s GO bank.
+    pub fn capacity(&self, layer: usize) -> usize {
+        self.expert_capacity_per_layer[layer]
+    }
+}
+
+/// Artifact name of a per-block family member at `layer`: layer 0 keeps
+/// the bare name (an L=1 artifact set is byte-identical to the
+/// pre-multi-layer one), deeper layers append `_l{layer}` — the naming
+/// contract with python's `compile.aot.layer_artifact`.
+pub fn layer_artifact(base: &str, layer: usize) -> String {
+    if layer == 0 {
+        base.to_string()
+    } else {
+        format!("{base}_l{layer}")
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -83,6 +107,29 @@ impl Manifest {
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow!("manifest model missing '{k}'"))
         };
+        let n_layers = field("n_layers_functional")?;
+        if n_layers == 0 {
+            return Err(anyhow!("manifest n_layers_functional must be >= 1"));
+        }
+        let caps = m
+            .get("expert_capacity_per_layer")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                anyhow!("manifest model missing 'expert_capacity_per_layer'")
+            })?
+            .iter()
+            .map(|c| {
+                c.as_usize()
+                    .ok_or_else(|| anyhow!("bad expert_capacity_per_layer"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if caps.len() != n_layers {
+            return Err(anyhow!(
+                "expert_capacity_per_layer has {} entries for {} layers",
+                caps.len(),
+                n_layers
+            ));
+        }
         let model = FunctionalModel {
             d_model: field("d_model")?,
             n_experts: field("n_experts")?,
@@ -95,6 +142,8 @@ impl Manifest {
             max_seq: field("max_seq")?,
             expert_capacity: field("expert_capacity")?,
             batch_slots: field("batch_slots")?,
+            n_layers,
+            expert_capacity_per_layer: caps,
         };
 
         let mut artifacts = BTreeMap::new();
@@ -150,6 +199,41 @@ impl Manifest {
                 ));
             }
         }
+        // depth-L sets additionally carry every per-block family at every
+        // layer (layer 0 is the bare name, covered above)
+        for layer in 1..model.n_layers {
+            for family in LAYERED_ARTIFACTS {
+                let name = layer_artifact(family, layer);
+                if !artifacts.contains_key(&name) {
+                    return Err(anyhow!(
+                        "manifest says {} layers but is missing '{name}' \
+                         — re-run `make artifacts`",
+                        model.n_layers
+                    ));
+                }
+            }
+        }
+        // each layer's declared capacity must match what its sparse-MoE
+        // artifact was actually lowered with (the expert-index input is
+        // `idx[K]`); a hand-edited capacity list would otherwise only
+        // fail at dispatch time (unit-test fixtures may omit input specs)
+        for layer in 0..model.n_layers {
+            let name = layer_artifact("moe_one_sparse", layer);
+            if let Some(idx_spec) = artifacts
+                .get(&name)
+                .and_then(|entry| entry.inputs.get(1))
+            {
+                let cap = model.expert_capacity_per_layer[layer];
+                if idx_spec.shape != [cap] {
+                    return Err(anyhow!(
+                        "'{name}' was lowered with expert-index shape \
+                         {:?} but the manifest declares capacity {cap} \
+                         for layer {layer} — re-run `make artifacts`",
+                        idx_spec.shape
+                    ));
+                }
+            }
+        }
 
         Ok(Manifest { dir: dir.to_path_buf(), model, artifacts })
     }
@@ -161,7 +245,9 @@ impl Manifest {
     }
 }
 
-/// Executables the coordinator requires (aot.py writes exactly these).
+/// Executables the coordinator requires at any depth (aot.py writes
+/// exactly these for layer 0, plus `_l{n}` variants of the per-block
+/// families below for layers >= 1).
 pub const REQUIRED_ARTIFACTS: &[&str] = &[
     "embed_prefill",
     "embed_one",
@@ -180,6 +266,21 @@ pub const REQUIRED_ARTIFACTS: &[&str] = &[
     "moe_batch_sparse",
 ];
 
+/// Per-block families lowered once per functional layer (everything
+/// except the shared embed_* / logits_one entries).
+pub const LAYERED_ARTIFACTS: &[&str] = &[
+    "attn_prefill",
+    "attn_decode",
+    "gate_full",
+    "gate_one",
+    "moe_full",
+    "moe_one",
+    "moe_one_sparse",
+    "attn_decode_batch",
+    "gate_batch",
+    "moe_batch_sparse",
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +292,7 @@ mod tests {
   "model": {{"d_model": 256, "n_experts": 16, "top_k": 4, "d_ff": 128,
              "n_heads": 4, "d_head": 64, "vocab": 512, "prompt_len": 32,
              "max_seq": 96, "expert_capacity": 8, "batch_slots": 4,
+             "n_layers_functional": 1, "expert_capacity_per_layer": [8],
              "seed": 1, "xbar_rows": 128, "xbar_cols": 128, "adc_bits": 8,
              "dac_bits": 8, "adc_range_factor": 16.0}},
   "artifacts": {{
@@ -218,6 +320,28 @@ mod tests {
         )
     }
 
+    /// Rewrite the L=1 sample into a depth-2 one (layered `_l1` entries
+    /// for every per-block family).
+    fn sample_l2() -> String {
+        let mut extra = String::new();
+        for family in LAYERED_ARTIFACTS {
+            extra.push_str(&format!(
+                ",\n    \"{family}_l1\": {{\"file\": \"{family}_l1.hlo.txt\", \
+                 \"inputs\": []}}"
+            ));
+        }
+        sample("hlo-text/return-tuple")
+            .replace("\"n_layers_functional\": 1", "\"n_layers_functional\": 2")
+            .replace(
+                "\"expert_capacity_per_layer\": [8]",
+                "\"expert_capacity_per_layer\": [8, 8]",
+            )
+            .replace(
+                "\"inputs\": []}\n  }",
+                &format!("\"inputs\": []}}{extra}\n  }}"),
+            )
+    }
+
     #[test]
     fn parses_sample() {
         let m =
@@ -226,11 +350,72 @@ mod tests {
         assert_eq!(m.model.d_model, 256);
         assert_eq!(m.model.expert_capacity, 8);
         assert_eq!(m.model.batch_slots, 4);
+        assert_eq!(m.model.n_layers, 1);
+        assert_eq!(m.model.expert_capacity_per_layer, vec![8]);
+        assert_eq!(m.model.capacity(0), 8);
         let e = m.entry("attn_prefill").unwrap();
         assert_eq!(e.inputs.len(), 2);
         assert_eq!(e.inputs[0].shape, vec![96, 256]);
         assert_eq!(e.inputs[1].dtype, "int32");
         assert!(e.file.ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn layer_artifact_naming() {
+        assert_eq!(layer_artifact("gate_one", 0), "gate_one");
+        assert_eq!(layer_artifact("gate_one", 2), "gate_one_l2");
+    }
+
+    #[test]
+    fn parses_layered_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), &sample_l2()).unwrap();
+        assert_eq!(m.model.n_layers, 2);
+        assert_eq!(m.model.expert_capacity_per_layer, vec![8, 8]);
+        assert_eq!(m.model.capacity(1), 8);
+        assert!(m.entry("gate_one_l1").is_ok());
+        assert!(m.entry(&layer_artifact("moe_batch_sparse", 1)).is_ok());
+    }
+
+    #[test]
+    fn rejects_capacity_artifact_shape_mismatch() {
+        // the sparse-MoE artifact was lowered with idx[4] but the model
+        // declares capacity 8 for that layer — a hand-edited manifest
+        // must fail at parse, not at dispatch
+        let text = sample("hlo-text/return-tuple").replace(
+            "\"moe_one_sparse\": {\"file\": \"fs.hlo.txt\", \"inputs\": []}",
+            "\"moe_one_sparse\": {\"file\": \"fs.hlo.txt\", \"inputs\": [\
+               {\"shape\": [1, 256], \"dtype\": \"float32\"},\
+               {\"shape\": [4], \"dtype\": \"int32\"},\
+               {\"shape\": [4], \"dtype\": \"float32\"}]}",
+        );
+        let err = Manifest::parse(Path::new("/tmp/a"), &text).unwrap_err();
+        assert!(err.to_string().contains("capacity"), "{err}");
+    }
+
+    #[test]
+    fn rejects_depth_without_layer_artifacts() {
+        // claims 2 layers but carries only the layer-0 set
+        let text = sample("hlo-text/return-tuple")
+            .replace("\"n_layers_functional\": 1", "\"n_layers_functional\": 2")
+            .replace(
+                "\"expert_capacity_per_layer\": [8]",
+                "\"expert_capacity_per_layer\": [8, 8]",
+            );
+        let err = Manifest::parse(Path::new("/tmp/a"), &text).unwrap_err();
+        assert!(err.to_string().contains("_l1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_capacity_list_depth_mismatch() {
+        let text = sample_l2().replace(
+            "\"expert_capacity_per_layer\": [8, 8]",
+            "\"expert_capacity_per_layer\": [8]",
+        );
+        let err = Manifest::parse(Path::new("/tmp/a"), &text).unwrap_err();
+        assert!(
+            err.to_string().contains("expert_capacity_per_layer"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -1,30 +1,36 @@
-//! Slot-batched serving engine: one HLO dispatch advances every live
-//! session one token.
+//! Slot-batched serving engine: one HLO dispatch per pipeline stage *per
+//! layer* advances every live session one token.
 //!
 //! [`BatchEngine`] owns a fixed pool of `B = manifest.batch_slots` serving
-//! slots with pooled KV storage ([`KvPool`], one contiguous `[B, S, H, Dh]`
-//! pair the batched attention artifact borrows directly) and one GO cache
-//! per slot.  The decode path is:
+//! slots with pooled per-layer KV storage ([`KvPool`], one contiguous
+//! `[L, B, S, H, Dh]` pair whose layer banks the batched attention
+//! artifacts borrow directly) and one GO bank per slot *per layer*.  The
+//! decode path runs the stack depth-first:
 //!
-//! 1. `embed_batch` + `attn_decode_batch` + `gate_batch` — one dispatch
-//!    each over all B rows (inactive slots ride along as masked padding
-//!    whose outputs are discarded);
-//! 2. per-slot `TopKUpdate` on each active row's gate scores (host side,
-//!    exactly the per-session streaming update) — *peeked* first and only
-//!    committed after every fallible dispatch succeeded, so a failed batch
-//!    step leaves all slot state untouched and is safe to retry;
-//! 3. the [`BatchPlanner`] lays the step's expert sets out on the grouped
-//!    peripherals — the cycle-by-cycle execution order on the modeled chip
-//!    and the per-step contention telemetry the server exports;
-//! 4. `moe_batch_sparse` — one dispatch computing every active row's
-//!    selected experts (rows whose update selected more than
-//!    `expert_capacity` experts fall back to the dense `moe_one` for that
-//!    row, mirroring the single-token path's guard).
+//! 1. `embed_batch`, then for each layer `l`: `attn_decode_batch[_l{l}]` +
+//!    `gate_batch[_l{l}]` — one dispatch each over all B rows (inactive
+//!    slots ride along as masked padding whose outputs are discarded);
+//! 2. per-slot `TopKUpdate` on each active row's layer-`l` gate scores
+//!    (host side, exactly the per-session streaming update) — *peeked*
+//!    only: nothing mutates until every fallible dispatch of every layer
+//!    has succeeded, so a failed step leaves all L layers of all slots
+//!    untouched and is safe to retry;
+//! 3. `moe_batch_sparse[_l{l}]` — one dispatch computing every active
+//!    row's selected experts at layer `l` (rows whose update selected more
+//!    than the layer's `expert_capacity` experts fall back to the dense
+//!    `moe_one[_l{l}]` for that row, mirroring the single-token path's
+//!    per-layer guard); the MoE output is the next layer's input;
+//! 4. after sampling, the **transactional commit covers all L layers of
+//!    the step**: the [`BatchPlanner`] prices the step as L planned
+//!    layer-steps (the per-step contention telemetry the server exports),
+//!    every layer's GO updates are applied, every layer's K/V rows are
+//!    appended, and the sessions advance — all infallible.
 //!
 //! Every batched artifact unrolls B copies of the exact single-token
 //! subgraph (see python/compile/model.py), so each row's numerics are
 //! bit-compatible with the per-session cached path —
-//! `rust/tests/batch_equivalence.rs` pins the token streams.
+//! `rust/tests/batch_equivalence.rs` pins the token streams at every
+//! artifact depth.
 //!
 //! For odd-sized tails (a single live session), [`BatchEngine::decode_single`]
 //! runs the single-token artifacts over the same pooled storage —
@@ -32,7 +38,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::{GoCache, KvPool};
+use crate::cache::{GoCache, GoUpdate, KvPool};
 use crate::config::manifest::FunctionalModel;
 use crate::config::SchedulePolicy;
 use crate::coordinator::engine::ModelEngine;
@@ -53,15 +59,17 @@ pub struct SlotSession {
 pub struct BatchStep {
     /// (slot, sampled next token) for every advanced slot, in step order
     pub next: Vec<(usize, i32)>,
-    /// the planner's execution layout + contention telemetry for this step
-    pub plan: BatchPlan,
+    /// the planner's execution layout + contention telemetry, one
+    /// [`BatchPlan`] per functional layer (len == `model.n_layers`)
+    pub plans: Vec<BatchPlan>,
 }
 
 pub struct BatchEngine {
     engine: ModelEngine,
     slots: usize,
     kv: KvPool,
-    go: Vec<GoCache>,
+    /// `go[slot][layer]` — one GO bank per slot per layer
+    go: Vec<Vec<GoCache>>,
     sessions: Vec<Option<SlotSession>>,
     planner: BatchPlanner,
 }
@@ -89,9 +97,16 @@ impl BatchEngine {
         let m = engine.model.clone();
         let slots = m.batch_slots.max(1);
         BatchEngine {
-            kv: KvPool::new(slots, m.max_seq, m.n_heads, m.d_head),
+            kv: KvPool::new(m.n_layers, slots, m.max_seq, m.n_heads,
+                            m.d_head),
             go: (0..slots)
-                .map(|_| GoCache::new(m.n_experts, m.expert_capacity, 0))
+                .map(|_| {
+                    GoCache::banks(
+                        &m.expert_capacity_per_layer,
+                        m.n_experts,
+                        0,
+                    )
+                })
                 .collect(),
             sessions: vec![None; slots],
             slots,
@@ -138,15 +153,22 @@ impl BatchEngine {
             .ok_or_else(|| anyhow!("no free serving slot"))?;
         let m = self.engine.model.clone();
         let t = prompt.len();
-        let (y, routing, k, v) = self.engine.prefill_pipeline(prompt)?;
-        // seed_slot overwrites the slot's whole padded region, so no
-        // zero-fill is needed here (release() already reset it anyway)
-        self.kv.seed_slot(slot, &k, &v, t);
-        self.go[slot].reset();
-        self.go[slot].seed_from_routing(&routing);
-        let next =
-            self.engine.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)?;
-        self.sessions[slot] = Some(SlotSession { ids: prompt.to_vec(), pos: t });
+        let out = self.engine.prefill_pipeline(prompt)?;
+        // seed_slot overwrites the slot's whole padded region on every
+        // layer, so no zero-fill is needed here (release() already reset
+        // it anyway)
+        self.kv.seed_slot(slot, &out.ks, &out.vs, t);
+        for (bank, routing) in
+            self.go[slot].iter_mut().zip(&out.routings)
+        {
+            bank.reset();
+            bank.seed_from_routing(routing);
+        }
+        let next = self
+            .engine
+            .sample(&out.y[(t - 1) * m.d_model..t * m.d_model], t)?;
+        self.sessions[slot] =
+            Some(SlotSession { ids: prompt.to_vec(), pos: t });
         Ok((slot, next))
     }
 
@@ -155,13 +177,15 @@ impl BatchEngine {
         let sess = self.sessions[slot].take();
         if sess.is_some() {
             self.kv.reset_slot(slot);
-            self.go[slot].reset();
+            for bank in self.go[slot].iter_mut() {
+                bank.reset();
+            }
         }
         sess
     }
 
     /// One batched decode step: advance every `(slot, token)` in `steps` by
-    /// one token with a single dispatch per pipeline stage.
+    /// one token with a single dispatch per pipeline stage per layer.
     pub fn decode_batch(&mut self, steps: &[(usize, i32)]) -> Result<BatchStep> {
         let m = self.engine.model.clone();
         if steps.is_empty() {
@@ -190,117 +214,150 @@ impl BatchEngine {
         }
 
         let rt = self.engine.runtime();
-        let x = rt
+        let (e, d) = (m.n_experts, m.d_model);
+        let r = self.kv.row_elems();
+        let mut x = rt
             .get("embed_batch")?
             .run(&[TensorIn::I32(&tokens)])?
             .remove(0)
             .into_f32()?;
-        let mut attn = rt.get("attn_decode_batch")?.run(&[
-            TensorIn::F32(&x),
-            TensorIn::F32(self.kv.k_all()),
-            TensorIn::F32(self.kv.v_all()),
-            TensorIn::I32(&pos),
-        ])?;
-        let h = attn.remove(0).into_f32()?;
-        let k_new = attn.remove(0).into_f32()?;
-        let v_new = attn.remove(0).into_f32()?;
-        let scores = rt
-            .get("gate_batch")?
-            .run(&[TensorIn::F32(&h)])?
-            .remove(0)
-            .into_f32()?;
+        // per-layer peeked updates / K/V rows, committed only after every
+        // fallible dispatch of every layer succeeded
+        let mut upds_per_layer: Vec<Vec<GoUpdate>> =
+            Vec::with_capacity(m.n_layers);
+        let mut k_news: Vec<Vec<f32>> = Vec::with_capacity(m.n_layers);
+        let mut v_news: Vec<Vec<f32>> = Vec::with_capacity(m.n_layers);
+        for layer in 0..m.n_layers {
+            let nm = self.engine.layer_names(layer);
+            let mut attn = rt.get(&nm.attn_decode_batch)?.run(&[
+                TensorIn::F32(&x),
+                TensorIn::F32(self.kv.layer_k(layer)),
+                TensorIn::F32(self.kv.layer_v(layer)),
+                TensorIn::I32(&pos),
+            ])?;
+            let h = attn.remove(0).into_f32()?;
+            let k_new = attn.remove(0).into_f32()?;
+            let v_new = attn.remove(0).into_f32()?;
+            let scores = rt
+                .get(&nm.gate_batch)?
+                .run(&[TensorIn::F32(&h)])?
+                .remove(0)
+                .into_f32()?;
 
-        // Host-side routing, *peeked*: selection is computed against the
-        // current GO state but nothing mutates until every fallible
-        // dispatch below has succeeded, so a failed step leaves all slots
-        // untouched and the server can safely retry them one by one.
-        let (e, cap, d) = (m.n_experts, m.expert_capacity, m.d_model);
-        let mut idx = vec![0i32; b * cap];
-        let mut gates = vec![0f32; b * cap];
-        let mut upds = Vec::with_capacity(steps.len());
-        // rows whose update selected more than `cap` experts (possible right
-        // after TopKUpdate under-full edge cases) use the dense single-row
-        // MoE, exactly like the single-token path's guard
-        let mut dense_rows: Vec<(usize, Vec<f32>)> = Vec::new();
-        for &(slot, _) in steps {
-            let sess_pos = self.sessions[slot].as_ref().unwrap().pos;
-            let row = &scores[slot * e..(slot + 1) * e];
-            let probs = softmax_rows(row, 1, e);
-            let upd = self.go[slot].peek_probs(sess_pos, &probs);
-            if upd.selected.len() <= cap {
-                for (i, &ex) in upd.selected.iter().enumerate() {
-                    idx[slot * cap + i] = ex as i32;
-                    gates[slot * cap + i] = probs[ex];
+            // Host-side routing, *peeked*: selection is computed against
+            // the current GO bank state but nothing mutates until the
+            // whole stack has dispatched, so a failed step leaves every
+            // layer of every slot untouched and the server can safely
+            // retry them one by one.
+            let cap = m.capacity(layer);
+            let mut idx = vec![0i32; b * cap];
+            let mut gates = vec![0f32; b * cap];
+            let mut upds = Vec::with_capacity(steps.len());
+            // rows whose update selected more than `cap` experts (possible
+            // right after TopKUpdate under-full edge cases) use the dense
+            // single-row MoE, exactly like the single-token path's
+            // per-layer guard
+            let mut dense_rows: Vec<(usize, Vec<f32>)> = Vec::new();
+            for &(slot, _) in steps {
+                let sess_pos = pos[slot] as usize;
+                let row = &scores[slot * e..(slot + 1) * e];
+                let probs = softmax_rows(row, 1, e);
+                let upd = self.go[slot][layer].peek_probs(sess_pos, &probs);
+                if upd.selected.len() <= cap {
+                    for (i, &ex) in upd.selected.iter().enumerate() {
+                        idx[slot * cap + i] = ex as i32;
+                        gates[slot * cap + i] = probs[ex];
+                    }
+                } else {
+                    let mut dense_g = vec![0f32; e];
+                    for &ex in &upd.selected {
+                        dense_g[ex] = probs[ex];
+                    }
+                    dense_rows.push((slot, dense_g));
                 }
-            } else {
-                let mut dense_g = vec![0f32; e];
-                for &ex in &upd.selected {
-                    dense_g[ex] = probs[ex];
-                }
-                dense_rows.push((slot, dense_g));
+                upds.push(upd);
             }
-            upds.push(upd);
-        }
 
-        let mut y = rt
-            .get("moe_batch_sparse")?
-            .run(&[
-                TensorIn::F32(&h),
-                TensorIn::I32(&idx),
-                TensorIn::F32(&gates),
-            ])?
-            .remove(0)
-            .into_f32()?;
-        for &(slot, ref dense_g) in &dense_rows {
-            let y1 = rt
-                .get("moe_one")?
+            let mut y = rt
+                .get(&nm.moe_batch_sparse)?
                 .run(&[
-                    TensorIn::F32(&h[slot * d..(slot + 1) * d]),
-                    TensorIn::F32(dense_g.as_slice()),
+                    TensorIn::F32(&h),
+                    TensorIn::I32(&idx),
+                    TensorIn::F32(&gates),
                 ])?
                 .remove(0)
                 .into_f32()?;
-            y[slot * d..(slot + 1) * d].copy_from_slice(&y1);
+            for &(slot, ref dense_g) in &dense_rows {
+                let y1 = rt
+                    .get(&nm.moe_one)?
+                    .run(&[
+                        TensorIn::F32(&h[slot * d..(slot + 1) * d]),
+                        TensorIn::F32(dense_g.as_slice()),
+                    ])?
+                    .remove(0)
+                    .into_f32()?;
+                y[slot * d..(slot + 1) * d].copy_from_slice(&y1);
+            }
+
+            x = y;
+            upds_per_layer.push(upds);
+            k_news.push(k_new);
+            v_news.push(v_new);
         }
 
         // Last fallible stage: sample every advanced row's next token.
         let mut next = Vec::with_capacity(steps.len());
         for &(slot, _) in steps {
-            let pos_after = self.sessions[slot].as_ref().unwrap().pos + 1;
+            let pos_after = pos[slot] as usize + 1;
             let nt = self
                 .engine
-                .sample(&y[slot * d..(slot + 1) * d], pos_after)?;
+                .sample(&x[slot * d..(slot + 1) * d], pos_after)?;
             next.push((slot, nt));
         }
 
-        // Commit (infallible from here): plan the step on the grouped
-        // peripherals (the modeled chip's execution order + contention
-        // telemetry — accumulated only for steps that actually landed),
-        // apply GO updates, append K/V rows, advance sessions.
-        let expert_sets: Vec<Vec<usize>> =
-            upds.iter().map(|u| u.selected.clone()).collect();
-        let plan = self.planner.plan(&expert_sets);
-        let r = self.kv.row_elems();
-        for (&(slot, token), upd) in steps.iter().zip(&upds) {
-            let sess_pos = self.sessions[slot].as_ref().unwrap().pos;
-            self.go[slot].apply_update(sess_pos, upd);
-            self.kv.append_slot(
-                slot,
-                &k_new[slot * r..(slot + 1) * r],
-                &v_new[slot * r..(slot + 1) * r],
-            );
+        // Commit (infallible from here), covering all L layers of the
+        // step: plan it on the grouped peripherals as L layer-steps (the
+        // modeled chip's execution order + contention telemetry —
+        // accumulated only for steps that actually landed), apply every
+        // layer's GO updates, append every layer's K/V rows, advance
+        // sessions.
+        let layer_sets: Vec<Vec<Vec<usize>>> = upds_per_layer
+            .iter()
+            .map(|upds| upds.iter().map(|u| u.selected.clone()).collect())
+            .collect();
+        let plans = self.planner.plan_layers(&layer_sets);
+        for (layer, upds) in upds_per_layer.iter().enumerate() {
+            for (&(slot, _), upd) in steps.iter().zip(upds) {
+                let sess_pos = pos[slot] as usize;
+                self.go[slot][layer].apply_update(sess_pos, upd);
+            }
+        }
+        for &(slot, token) in steps {
+            // borrowed row slices straight out of the dispatch outputs —
+            // no per-token clones on the commit path
+            let k_rows: Vec<&[f32]> = k_news
+                .iter()
+                .map(|bank| &bank[slot * r..(slot + 1) * r])
+                .collect();
+            let v_rows: Vec<&[f32]> = v_news
+                .iter()
+                .map(|bank| &bank[slot * r..(slot + 1) * r])
+                .collect();
+            self.kv.append_slot(slot, &k_rows, &v_rows);
             let sess = self.sessions[slot].as_mut().unwrap();
             sess.ids.push(token);
             sess.pos += 1;
         }
-        Ok(BatchStep { next, plan })
+        Ok(BatchStep { next, plans })
     }
 
     /// Single-token fallback for odd-sized tails: the per-token artifacts
-    /// over the same pooled storage (KV buffers borrowed, not cloned).
+    /// over the same pooled storage (KV banks borrowed, not cloned).
+    /// Returns the sampled token plus the step's per-layer plans.
     pub fn decode_single(&mut self, slot: usize, token: i32)
-        -> Result<(i32, BatchPlan)> {
+        -> Result<(i32, Vec<BatchPlan>)> {
         let max_seq = self.engine.model.max_seq;
+        let n_layers = self.engine.model.n_layers;
         let pos = match self.sessions[slot].as_ref() {
             Some(s) if s.pos >= max_seq => {
                 return Err(anyhow!("slot {slot} at max_seq"))
@@ -308,18 +365,27 @@ impl BatchEngine {
             Some(s) => s.pos,
             None => return Err(anyhow!("slot {slot} has no live session")),
         };
+        let kv = &self.kv; // shared borrow outliving the closure
+        let kv_layers: Vec<(&[f32], &[f32])> = (0..n_layers)
+            .map(|l| (kv.slot_k(l, slot), kv.slot_v(l, slot)))
+            .collect();
         let step = self.engine.decode_core(
-            self.kv.slot_k(slot),
-            self.kv.slot_v(slot),
+            &kv_layers,
             pos,
             &mut self.go[slot],
             token,
         )?;
-        self.kv.append_slot(slot, &step.k_row, &step.v_row);
+        drop(kv_layers);
+        self.kv.append_slot(slot, &step.k_rows, &step.v_rows);
         let sess = self.sessions[slot].as_mut().unwrap();
         sess.ids.push(token);
         sess.pos += 1;
-        let plan = self.planner.plan(std::slice::from_ref(&step.selected));
-        Ok((step.next, plan))
+        let layer_sets: Vec<Vec<Vec<usize>>> = step
+            .selected
+            .iter()
+            .map(|sel| vec![sel.clone()])
+            .collect();
+        let plans = self.planner.plan_layers(&layer_sets);
+        Ok((step.next, plans))
     }
 }

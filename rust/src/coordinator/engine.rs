@@ -1,23 +1,32 @@
-//! Functional model engine: drives the AOT-compiled transformer block
-//! end-to-end (embed → attention → gate → route → MoE → logits) with the
-//! KV + GO caches owned on the rust side.
+//! Functional model engine: drives the AOT-compiled depth-L transformer
+//! stack end-to-end (embed → L × (attention → gate → route → MoE) →
+//! logits) with the per-layer KV + GO cache banks owned on the rust side.
 //!
 //! Two decode paths exist on purpose:
 //! * [`DecodeMode::Cached`] — the paper's path: KV-cached attention plus
-//!   GO-cached routing (`TopKUpdate` on one token);
+//!   GO-cached routing (`TopKUpdate` on one token, per layer);
 //! * [`DecodeMode::Recompute`] — the expert-choice reference: re-prefill
 //!   everything each step and re-route the whole batch at the same fixed
 //!   capacity.
 //!
 //! The integration test `rust/tests/functional_equivalence.rs` pins that
-//! both paths generate the same token stream — the end-to-end correctness
-//! statement for the GO cache (streaming top-k == batch top-k holds all
-//! the way through real HLO numerics, not just in the abstract).
+//! at depth 1 both paths generate the same token stream — the end-to-end
+//! correctness statement for the GO cache (streaming top-k == batch top-k
+//! holds all the way through real HLO numerics, not just in the abstract).
+//!
+//! **Depth caveat:** at L ≥ 2 the two modes are *not* stream-equivalent,
+//! by construction of expert-choice routing rather than by bug: a batch
+//! re-route at step t can displace an earlier token from a mid-stack
+//! expert, rewriting that token's layer-l output and therefore its
+//! layer-(l+1) K/V contribution — state the cached path deliberately froze
+//! when the token was generated.  At L ≥ 2 the pinned references are
+//! therefore streaming-vs-streaming (batched vs per-session, pooled vs
+//! session storage, and an artifact-level manual reference).
 
 use anyhow::{anyhow, Result};
 
 use crate::cache::{GoCache, KvCache};
-use crate::config::manifest::FunctionalModel;
+use crate::config::manifest::{layer_artifact, FunctionalModel};
 use crate::moe::gate::{expert_choice_route, softmax_rows, Routing};
 use crate::runtime::executor::{Runtime, TensorIn};
 
@@ -28,24 +37,39 @@ pub enum DecodeMode {
     Recompute,
 }
 
-/// One live generation session.
+/// One live generation session: per-layer KV banks and one GO bank per
+/// layer.
 pub struct Session {
     pub ids: Vec<i32>,
     kv: KvCache,
-    go: GoCache,
+    go: Vec<GoCache>,
     /// position of the next token to be written (== ids.len())
     pub pos: usize,
 }
 
 /// Output of one storage-agnostic decode step ([`ModelEngine::decode_core`]):
-/// the sampled next token, the K/V rows the caller appends to its own
-/// storage, and the expert set the GO cache selected (planner telemetry).
+/// the sampled next token, the per-layer K/V rows the caller appends to its
+/// own storage, and the per-layer expert sets the GO banks selected
+/// (planner telemetry).
 #[derive(Debug, Clone)]
 pub(crate) struct DecodeStep {
     pub next: i32,
-    pub k_row: Vec<f32>,
-    pub v_row: Vec<f32>,
-    pub selected: Vec<usize>,
+    /// `[L]` new K rows, one `[H * Dh]` row per layer
+    pub k_rows: Vec<Vec<f32>>,
+    pub v_rows: Vec<Vec<f32>>,
+    /// `[L]` expert sets selected by each layer's TopKUpdate
+    pub selected: Vec<Vec<usize>>,
+}
+
+/// Output of the padded prefill pipeline ([`ModelEngine::prefill_pipeline`]).
+pub(crate) struct PrefillOut {
+    /// final layer's MoE output `[S, D]`
+    pub y: Vec<f32>,
+    /// per-layer expert-choice routing over the valid prefix
+    pub routings: Vec<Routing>,
+    /// per-layer padded K/V buffers `[S, H, Dh]`
+    pub ks: Vec<Vec<f32>>,
+    pub vs: Vec<Vec<f32>>,
 }
 
 /// Output of one generation run.
@@ -57,21 +81,57 @@ pub struct GenerationResult {
     pub decode_us: f64,
 }
 
+/// Per-layer artifact names, resolved once at engine construction so the
+/// decode hot path never formats strings.
+#[derive(Debug, Clone)]
+pub(crate) struct LayerNames {
+    pub attn_prefill: String,
+    pub attn_decode: String,
+    pub gate_full: String,
+    pub gate_one: String,
+    pub moe_full: String,
+    pub moe_one: String,
+    pub moe_one_sparse: String,
+    pub attn_decode_batch: String,
+    pub gate_batch: String,
+    pub moe_batch_sparse: String,
+}
+
+impl LayerNames {
+    fn new(layer: usize) -> Self {
+        LayerNames {
+            attn_prefill: layer_artifact("attn_prefill", layer),
+            attn_decode: layer_artifact("attn_decode", layer),
+            gate_full: layer_artifact("gate_full", layer),
+            gate_one: layer_artifact("gate_one", layer),
+            moe_full: layer_artifact("moe_full", layer),
+            moe_one: layer_artifact("moe_one", layer),
+            moe_one_sparse: layer_artifact("moe_one_sparse", layer),
+            attn_decode_batch: layer_artifact("attn_decode_batch", layer),
+            gate_batch: layer_artifact("gate_batch", layer),
+            moe_batch_sparse: layer_artifact("moe_batch_sparse", layer),
+        }
+    }
+}
+
 pub struct ModelEngine {
     rt: Runtime,
     pub model: FunctionalModel,
-    /// §Perf L2-1: use the sparse-gather MoE executable on the decode path
-    /// (computes only up to `expert_capacity` selected experts instead of
-    /// all E masked ones).  Off by default so the strict cached-vs-
-    /// recompute equivalence compares identical HLO modules; the serving
-    /// loop turns it on.
+    /// per-layer artifact name table (len == `model.n_layers`)
+    names: Vec<LayerNames>,
+    /// §Perf L2-1: use the sparse-gather MoE executables on the decode
+    /// path (computes only up to the layer's `expert_capacity` selected
+    /// experts instead of all E masked ones).  Off by default so the
+    /// strict cached-vs-recompute equivalence compares identical HLO
+    /// modules; the serving loop turns it on.
     sparse_moe: bool,
 }
 
 impl ModelEngine {
     pub fn new(rt: Runtime) -> Self {
         let model = rt.manifest.model.clone();
-        ModelEngine { rt, model, sparse_moe: false }
+        let names = (0..model.n_layers).map(LayerNames::new).collect();
+        ModelEngine { rt, model, names, sparse_moe: false }
     }
 
     pub fn with_sparse_moe(mut self, on: bool) -> Self {
@@ -83,16 +143,18 @@ impl ModelEngine {
         &self.rt
     }
 
+    pub(crate) fn layer_names(&self, layer: usize) -> &LayerNames {
+        &self.names[layer]
+    }
+
     fn pad_ids(&self, ids: &[i32]) -> Vec<i32> {
         let mut padded = ids.to_vec();
         padded.resize(self.model.max_seq, 0);
         padded
     }
 
-    /// Run the padded prefill pipeline over `ids`, returning
-    /// (moe output y [S, D], the expert-choice routing, k, v buffers).
-    pub(crate) fn prefill_pipeline(&self, ids: &[i32])
-        -> Result<(Vec<f32>, Routing, Vec<f32>, Vec<f32>)> {
+    /// Run the padded prefill pipeline over `ids` through all L layers.
+    pub(crate) fn prefill_pipeline(&self, ids: &[i32]) -> Result<PrefillOut> {
         let m = &self.model;
         let t = ids.len();
         if t == 0 {
@@ -102,50 +164,63 @@ impl ModelEngine {
             return Err(anyhow!("prompt longer than max_seq"));
         }
         let padded = self.pad_ids(ids);
-        let x = self
+        let mut x = self
             .rt
             .get("embed_prefill")?
             .run(&[TensorIn::I32(&padded)])?
             .remove(0)
             .into_f32()?;
-        let mut attn = self.rt.get("attn_prefill")?.run(&[
-            TensorIn::F32(&x),
-            TensorIn::I32(&[t as i32]),
-        ])?;
-        let h = attn.remove(0).into_f32()?;
-        let k = attn.remove(0).into_f32()?;
-        let v = attn.remove(0).into_f32()?;
-        let scores = self
-            .rt
-            .get("gate_full")?
-            .run(&[TensorIn::F32(&h)])?
-            .remove(0)
-            .into_f32()?;
-        // expert-choice routing over the valid prefix, fixed capacity
-        let routing = expert_choice_route(
-            &scores, m.max_seq, m.n_experts, m.expert_capacity, Some(t));
-        let y = self
-            .rt
-            .get("moe_full")?
-            .run(&[TensorIn::F32(&h), TensorIn::F32(&routing.gates)])?
-            .remove(0)
-            .into_f32()?;
-        Ok((y, routing, k, v))
+        let mut routings = Vec::with_capacity(m.n_layers);
+        let mut ks = Vec::with_capacity(m.n_layers);
+        let mut vs = Vec::with_capacity(m.n_layers);
+        for layer in 0..m.n_layers {
+            let nm = &self.names[layer];
+            let mut attn = self.rt.get(&nm.attn_prefill)?.run(&[
+                TensorIn::F32(&x),
+                TensorIn::I32(&[t as i32]),
+            ])?;
+            let h = attn.remove(0).into_f32()?;
+            let k = attn.remove(0).into_f32()?;
+            let v = attn.remove(0).into_f32()?;
+            let scores = self
+                .rt
+                .get(&nm.gate_full)?
+                .run(&[TensorIn::F32(&h)])?
+                .remove(0)
+                .into_f32()?;
+            // expert-choice routing over the valid prefix, fixed per-layer
+            // capacity
+            let routing = expert_choice_route(
+                &scores, m.max_seq, m.n_experts, m.capacity(layer), Some(t));
+            x = self
+                .rt
+                .get(&nm.moe_full)?
+                .run(&[TensorIn::F32(&h), TensorIn::F32(&routing.gates)])?
+                .remove(0)
+                .into_f32()?;
+            routings.push(routing);
+            ks.push(k);
+            vs.push(v);
+        }
+        Ok(PrefillOut { y: x, routings, ks, vs })
     }
 
-    /// Prefill a prompt into a fresh session (seeds both caches).
+    /// Prefill a prompt into a fresh session (seeds every layer's caches).
     pub fn prefill(&self, ids: &[i32]) -> Result<(Session, i32)> {
         let m = &self.model;
         let t = ids.len();
-        let (y, routing, k, v) = self.prefill_pipeline(ids)?;
+        let out = self.prefill_pipeline(ids)?;
 
-        let mut kv = KvCache::new(m.max_seq, m.n_heads, m.d_head);
-        kv.seed(&k, &v, t);
-        let mut go = GoCache::new(m.n_experts, m.expert_capacity, 0);
-        go.seed_from_routing(&routing);
+        let mut kv = KvCache::new(m.n_layers, m.max_seq, m.n_heads, m.d_head);
+        kv.seed(&out.ks, &out.vs, t);
+        let mut go =
+            GoCache::banks(&m.expert_capacity_per_layer, m.n_experts, 0);
+        for (bank, routing) in go.iter_mut().zip(&out.routings) {
+            bank.seed_from_routing(routing);
+        }
 
         let next =
-            self.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)?;
+            self.sample(&out.y[(t - 1) * m.d_model..t * m.d_model], t)?;
         Ok((Session { ids: ids.to_vec(), kv, go, pos: t }, next))
     }
 
@@ -155,88 +230,109 @@ impl ModelEngine {
             return Err(anyhow!("session at max_seq"));
         }
         let step = {
-            // split the session borrows: KV buffers read-only into the HLO,
-            // GO cache mutated by TopKUpdate
+            // split the session borrows: KV banks read-only into the HLO,
+            // GO banks mutated by each layer's TopKUpdate
             let Session { ids: _, kv, go, pos } = s;
-            self.decode_core(kv.k_buf(), kv.v_buf(), *pos, go, token)?
+            let kv: &KvCache = kv; // shared borrow outliving the closure
+            let kv_layers: Vec<(&[f32], &[f32])> = (0..kv.n_layers())
+                .map(|l| (kv.layer_k(l), kv.layer_v(l)))
+                .collect();
+            self.decode_core(&kv_layers, *pos, go, token)?
         };
-        s.kv.append(&step.k_row, &step.v_row);
+        s.kv.append(&step.k_rows, &step.v_rows);
         s.ids.push(token);
         s.pos += 1;
         Ok(step.next)
     }
 
-    /// The shared single-token decode pipeline, storage-agnostic: the KV
-    /// buffers are *borrowed* (per-session [`KvCache`] or a serving-pool
-    /// slot — no per-step clones either way) and the new K/V rows are
-    /// returned for the caller to append to its own storage.
-    pub(crate) fn decode_core(&self, k_buf: &[f32], v_buf: &[f32],
-                              pos: usize, go: &mut GoCache, token: i32)
+    /// The shared single-token decode pipeline, storage-agnostic: one
+    /// `(k, v)` bank borrow per layer (per-session [`KvCache`] or a
+    /// serving-pool slot — no per-step clones either way) and the new
+    /// per-layer K/V rows are returned for the caller to append to its own
+    /// storage.  `go` holds one GO bank per layer and is updated in layer
+    /// order as the stack executes.
+    pub(crate) fn decode_core(&self, kv_layers: &[(&[f32], &[f32])],
+                              pos: usize, go: &mut [GoCache], token: i32)
         -> Result<DecodeStep> {
         let m = &self.model;
-        let x1 = self
+        debug_assert_eq!(kv_layers.len(), m.n_layers);
+        debug_assert_eq!(go.len(), m.n_layers);
+        let mut x = self
             .rt
             .get("embed_one")?
             .run(&[TensorIn::I32(&[token])])?
             .remove(0)
             .into_f32()?;
-        let mut attn = self.rt.get("attn_decode")?.run(&[
-            TensorIn::F32(&x1),
-            TensorIn::F32(k_buf),
-            TensorIn::F32(v_buf),
-            TensorIn::I32(&[pos as i32]),
-        ])?;
-        let h1 = attn.remove(0).into_f32()?;
-        let k_row = attn.remove(0).into_f32()?;
-        let v_row = attn.remove(0).into_f32()?;
+        let mut k_rows = Vec::with_capacity(m.n_layers);
+        let mut v_rows = Vec::with_capacity(m.n_layers);
+        let mut selected = Vec::with_capacity(m.n_layers);
+        for layer in 0..m.n_layers {
+            let nm = &self.names[layer];
+            let (k_buf, v_buf) = kv_layers[layer];
+            let mut attn = self.rt.get(&nm.attn_decode)?.run(&[
+                TensorIn::F32(&x),
+                TensorIn::F32(k_buf),
+                TensorIn::F32(v_buf),
+                TensorIn::I32(&[pos as i32]),
+            ])?;
+            let h1 = attn.remove(0).into_f32()?;
+            let k_row = attn.remove(0).into_f32()?;
+            let v_row = attn.remove(0).into_f32()?;
 
-        let scores1 = self
-            .rt
-            .get("gate_one")?
-            .run(&[TensorIn::F32(&h1)])?
-            .remove(0)
-            .into_f32()?;
-        // TopKUpdate: experts that admit this token compute it; gate
-        // weights are the softmax probs, zero elsewhere
-        let upd = go.update_scores(pos, &scores1);
-        let probs = softmax_rows(&scores1, 1, m.n_experts);
-        let y1 = if self.sparse_moe
-            && upd.selected.len() <= m.expert_capacity
-        {
-            // gather only the selected experts (pad with gate 0.0 slots)
-            let mut idx = vec![0i32; m.expert_capacity];
-            let mut g = vec![0f32; m.expert_capacity];
-            for (i, &e) in upd.selected.iter().enumerate() {
-                idx[i] = e as i32;
-                g[i] = probs[e];
-            }
-            self.rt
-                .get("moe_one_sparse")?
-                .run(&[
-                    TensorIn::F32(&h1),
-                    TensorIn::I32(&idx),
-                    TensorIn::F32(&g),
-                ])?
+            let scores1 = self
+                .rt
+                .get(&nm.gate_one)?
+                .run(&[TensorIn::F32(&h1)])?
                 .remove(0)
-                .into_f32()?
-        } else {
-            let mut gates = vec![0f32; m.n_experts];
-            for &e in &upd.selected {
-                gates[e] = probs[e];
-            }
-            self.rt
-                .get("moe_one")?
-                .run(&[TensorIn::F32(&h1), TensorIn::F32(&gates)])?
-                .remove(0)
-                .into_f32()?
-        };
+                .into_f32()?;
+            // TopKUpdate: experts that admit this token compute it; gate
+            // weights are the softmax probs, zero elsewhere
+            let upd = go[layer].update_scores(pos, &scores1);
+            let probs = softmax_rows(&scores1, 1, m.n_experts);
+            let cap = m.capacity(layer);
+            let y1 = if self.sparse_moe && upd.selected.len() <= cap {
+                // gather only the selected experts (pad with gate 0.0
+                // slots)
+                let mut idx = vec![0i32; cap];
+                let mut g = vec![0f32; cap];
+                for (i, &e) in upd.selected.iter().enumerate() {
+                    idx[i] = e as i32;
+                    g[i] = probs[e];
+                }
+                self.rt
+                    .get(&nm.moe_one_sparse)?
+                    .run(&[
+                        TensorIn::F32(&h1),
+                        TensorIn::I32(&idx),
+                        TensorIn::F32(&g),
+                    ])?
+                    .remove(0)
+                    .into_f32()?
+            } else {
+                let mut gates = vec![0f32; m.n_experts];
+                for &e in &upd.selected {
+                    gates[e] = probs[e];
+                }
+                self.rt
+                    .get(&nm.moe_one)?
+                    .run(&[TensorIn::F32(&h1), TensorIn::F32(&gates)])?
+                    .remove(0)
+                    .into_f32()?
+            };
+            x = y1;
+            k_rows.push(k_row);
+            v_rows.push(v_row);
+            selected.push(upd.selected);
+        }
 
-        let next = self.sample(&y1, pos + 1)?;
-        Ok(DecodeStep { next, k_row, v_row, selected: upd.selected })
+        let next = self.sample(&x, pos + 1)?;
+        Ok(DecodeStep { next, k_rows, v_rows, selected })
     }
 
     /// One reference decode step: re-prefill everything (no caches), route
-    /// the whole batch at fixed capacity, return the next token.
+    /// the whole batch at fixed capacity per layer, return the next token.
+    /// Stream-equivalent to [`DecodeMode::Cached`] at depth 1 only — see
+    /// the module docs for why deeper stacks diverge.
     pub fn decode_recompute(&self, s: &mut Session, token: i32)
         -> Result<i32> {
         let m = &self.model;
@@ -246,8 +342,8 @@ impl ModelEngine {
         s.ids.push(token);
         s.pos += 1;
         let t = s.ids.len();
-        let (y, _, _, _) = self.prefill_pipeline(&s.ids)?;
-        self.sample(&y[(t - 1) * m.d_model..t * m.d_model], t)
+        let out = self.prefill_pipeline(&s.ids)?;
+        self.sample(&out.y[(t - 1) * m.d_model..t * m.d_model], t)
     }
 
     /// Generate `gen_len` tokens greedily from `prompt`.

@@ -36,6 +36,10 @@ pub struct Request {
 }
 
 /// A terminal reply: every submitted request receives exactly one.
+///
+/// Events that may never have happened are `Option`s rather than sentinel
+/// values (`None` == "never happened"), so a caller can't mistake an
+/// errored request's timings for real zero-latency measurements.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -43,14 +47,14 @@ pub struct Response {
     pub result: Result<Vec<i32>, String>,
     /// time from submit to completion
     pub latency_us: f64,
-    /// time from submit to first generated token (0 when the request
-    /// errored before producing one)
-    pub ttft_us: f64,
-    /// time from submit to slot admission (0 when never admitted)
-    pub queue_us: f64,
+    /// time from submit to first generated token; `None` when the request
+    /// errored before producing one
+    pub ttft_us: Option<f64>,
+    /// time from submit to slot admission; `None` when never admitted
+    pub queue_us: Option<f64>,
     /// admission sequence number — strictly increasing in submit order
-    /// (FIFO slot admission); `u64::MAX` when never admitted
-    pub admit_seq: u64,
+    /// (FIFO slot admission); `None` when never admitted
+    pub admit_seq: Option<u64>,
     /// decode steps this request rode in a batched dispatch
     pub batched_steps: u64,
     /// decode steps served by the single-token fallback
@@ -126,11 +130,9 @@ impl Live {
             id: self.req.id,
             result,
             latency_us: us(now, self.submitted),
-            ttft_us: self
-                .first_token
-                .map_or(0.0, |t| us(t, self.submitted)),
-            queue_us: us(self.admitted, self.submitted),
-            admit_seq: self.admit_seq,
+            ttft_us: self.first_token.map(|t| us(t, self.submitted)),
+            queue_us: Some(us(self.admitted, self.submitted)),
+            admit_seq: Some(self.admit_seq),
             batched_steps: self.batched_steps,
             single_steps: self.single_steps,
         };
@@ -142,16 +144,17 @@ fn us(later: Instant, earlier: Instant) -> f64 {
     later.duration_since(earlier).as_secs_f64() * 1e6
 }
 
-/// Terminal error reply for a request that never reached a slot.
+/// Terminal error reply for a request that never reached a slot: it was
+/// never admitted and never produced a token, so those fields are `None`.
 fn reject(id: u64, reply: &mpsc::Sender<Response>, submitted: Instant,
           err: String) {
     let _ = reply.send(Response {
         id,
         result: Err(err),
         latency_us: us(Instant::now(), submitted),
-        ttft_us: 0.0,
-        queue_us: 0.0,
-        admit_seq: u64::MAX,
+        ttft_us: None,
+        queue_us: None,
+        admit_seq: None,
         batched_steps: 0,
         single_steps: 0,
     });
@@ -337,7 +340,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
             // odd-sized tail: single-token fallback over pooled storage
             let (slot, token) = steps[0];
             match eng.decode_single(slot, token) {
-                Ok((next, _plan)) => {
+                Ok((next, _plans)) => {
                     let l = live[slot].as_mut().unwrap();
                     l.next = next;
                     l.single_steps += 1;
@@ -362,7 +365,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
                     let batch_err = e.to_string();
                     for (slot, token) in steps {
                         match eng.decode_single(slot, token) {
-                            Ok((next, _plan)) => {
+                            Ok((next, _plans)) => {
                                 let l = live[slot].as_mut().unwrap();
                                 l.next = next;
                                 l.single_steps += 1;

@@ -11,8 +11,10 @@
 //!   evaluation harness regenerating every paper figure/table ([`eval`]),
 //!   and a slot-batched serving coordinator driving the real AOT-compiled
 //!   model ([`coordinator`]) through the PJRT runtime ([`runtime`]).
-//! * **L2 (python/compile/model.py)** — the functional MoE transformer
-//!   block, AOT-lowered to `artifacts/*.hlo.txt` at build time.
+//! * **L2 (python/compile/model.py)** — the functional depth-L MoE
+//!   transformer stack, AOT-lowered to `artifacts/*.hlo.txt` at build
+//!   time (per-layer artifact families, `n_layers_functional` in the
+//!   manifest).
 //! * **L1 (python/compile/kernels/)** — Pallas crossbar/FFN/gate kernels.
 //!
 //! Python never runs on the request path: after `make artifacts` the rust

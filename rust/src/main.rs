@@ -237,7 +237,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     tokens.len(),
                     resp.batched_steps,
                     resp.single_steps,
-                    resp.ttft_us / 1e3,
+                    resp.ttft_us.unwrap_or(0.0) / 1e3,
                     resp.latency_us / 1e3,
                     &tokens[..tokens.len().min(8)]
                 );
@@ -294,6 +294,20 @@ fn cmd_generate(args: &Args) -> i32 {
     println!("cached   : {:?}  (prefill {:.1} ms, decode {:.1} ms)",
              r.tokens, r.prefill_us / 1e3, r.decode_us / 1e3);
     if args.bool_flag("check") {
+        // cached == recompute is a depth-1 statement: at L >= 2 a batch
+        // re-route rewrites past tokens' mid-stack hiddens the cached
+        // path froze (see coordinator::engine docs), so the comparison
+        // would false-fail on a perfectly good deep artifact set
+        if engine.model.n_layers != 1 {
+            println!(
+                "--check skipped: cached-vs-recompute equivalence is \
+                 defined at depth 1 only (artifact set has {} layers); \
+                 deep stacks are pinned by the batched-vs-per-session \
+                 test suites",
+                engine.model.n_layers
+            );
+            return 0;
+        }
         let r2 = engine
             .generate(&prompt, gen, DecodeMode::Recompute)
             .expect("recompute generation");

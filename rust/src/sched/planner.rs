@@ -142,6 +142,19 @@ impl BatchPlanner {
             work,
         }
     }
+
+    /// Plan one depth-L decode step: `layer_sets[l][i]` is the expert set
+    /// layer `l`'s GO bank selected for the i-th active slot's token.
+    ///
+    /// The modeled chip executes the stack sequentially, re-laying each
+    /// layer's expert sets out on the grouped peripherals, so a depth-L
+    /// step is priced as L planned *layer-steps*: `stats().steps` advances
+    /// by L per decode cycle and the serving telemetry reflects real depth
+    /// (`rust/tests/props_sched.rs` pins the linear scaling).
+    pub fn plan_layers(&mut self, layer_sets: &[Vec<Vec<usize>>])
+        -> Vec<BatchPlan> {
+        layer_sets.iter().map(|sets| self.plan(sets)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +208,21 @@ mod tests {
         assert!(s.cycles >= 2);
         assert!(s.mean_cycles() >= 1.0);
         assert!(s.contention_ratio() >= 0.0 && s.contention_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn plan_layers_prices_each_layer() {
+        let mut p = BatchPlanner::new(8, 2, SchedulePolicy::Reschedule);
+        let layer_sets = vec![
+            vec![vec![0, 1], vec![2]],
+            vec![vec![3], vec![4, 5]],
+            vec![vec![6, 7], vec![0]],
+        ];
+        let plans = p.plan_layers(&layer_sets);
+        assert_eq!(plans.len(), 3);
+        let s = p.stats();
+        assert_eq!(s.steps, 3, "one planned layer-step per layer");
+        assert_eq!(s.work, 8);
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Tentpole equivalence pin: the slot-batched decode path must produce
 //! exactly the token streams of the per-session cached path (requires
-//! `make artifacts`).
+//! `make artifacts`), at whatever depth L the artifact set was lowered
+//! with — the CI matrix runs this against both an L=1 and an L=3 set.
 //!
 //! The batched artifacts unroll B copies of the single-token subgraph
-//! (python/compile/model.py), so each row is bit-compatible with the
-//! `*_one` executables on that slot alone; this test closes the loop over
-//! real HLO numerics end-to-end, including partially-filled batches
-//! (padding rows), slot recycling, and the single-token fallback.
+//! (python/compile/model.py) at every layer, so each row is
+//! bit-compatible with the `*_one[_l{n}]` executables on that slot alone;
+//! this test closes the loop over real HLO numerics end-to-end, including
+//! partially-filled batches (padding rows), slot recycling, the
+//! single-token fallback, and the per-layer planner telemetry.
 
 use moepim::coordinator::{BatchEngine, DecodeMode, ModelEngine};
 use moepim::runtime::Runtime;
@@ -66,7 +68,11 @@ fn batched_decode_matches_per_session_cached() {
         }
         let out = batch.decode_batch(&steps).unwrap();
         assert_eq!(out.next.len(), steps.len());
-        assert_eq!(out.plan.work, out.plan.schedule.total_work());
+        // one plan per functional layer, each internally consistent
+        assert_eq!(out.plans.len(), m.n_layers);
+        for plan in &out.plans {
+            assert_eq!(plan.work, plan.schedule.total_work());
+        }
         for (slot, next) in out.next {
             let i = slot_of.iter().position(|&s| s == slot).unwrap();
             streams[i].push(next);
@@ -85,8 +91,9 @@ fn batched_decode_matches_per_session_cached() {
     let (slot, first) = batch.admit(&prompts[0]).unwrap();
     let mut tail = vec![first];
     while tail.len() < gen_lens[0] {
-        let (next, _plan) =
+        let (next, plans) =
             batch.decode_single(slot, *tail.last().unwrap()).unwrap();
+        assert_eq!(plans.len(), m.n_layers);
         tail.push(next);
     }
     assert_eq!(
@@ -94,9 +101,12 @@ fn batched_decode_matches_per_session_cached() {
         "single-token fallback on a recycled slot diverged"
     );
 
-    // planner telemetry accumulated across both paths
+    // planner telemetry accumulated across both paths; every decode step
+    // is priced as L planned layer-steps
     let stats = batch.planner_stats();
     assert!(stats.steps > 0);
+    assert_eq!(stats.steps % m.n_layers as u64, 0,
+               "steps must be a whole number of depth-L decode cycles");
     assert!(stats.work > 0);
     assert!(stats.cycles >= stats.contention_cycles);
 

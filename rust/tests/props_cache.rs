@@ -1,11 +1,20 @@
-//! Property tests for the GO cache: the streaming `TopKUpdate` (Eq. 4-5)
-//! must select exactly what a batch expert-choice router over the full
-//! token set would select, under any score stream, capacity and prefix —
-//! the paper's correctness claim for the cache, mirrored by python's
-//! tests/test_routing.py.
+//! Property tests for the caches.
+//!
+//! GO cache: the streaming `TopKUpdate` (Eq. 4-5) must select exactly
+//! what a batch expert-choice router over the full token set would
+//! select, under any score stream, capacity and prefix — the paper's
+//! correctness claim for the cache, mirrored by python's
+//! tests/test_routing.py.  The batched engine's two-phase step adds a
+//! second contract: `peek_probs` + `apply_update` must equal the direct
+//! `update_probs`, and a peek alone must leave the cache untouched.
+//!
+//! KV pool: slot *and layer* isolation — any interleaving of
+//! `seed_slot` / `append_slot` / `reset_slot` calls must never perturb
+//! any other slot's or layer's bytes (checked against a byte-exact
+//! reference model after every operation).
 
-use moepim::cache::{GoCache, KvCache};
-use moepim::moe::gate::expert_choice_route;
+use moepim::cache::{GoCache, KvCache, KvPool};
+use moepim::moe::gate::{expert_choice_route, softmax_rows};
 use moepim::util::prop::{self, Gen};
 use moepim::util::rng::Pcg32;
 
@@ -121,24 +130,207 @@ fn selection_threshold_never_decreases() {
 }
 
 #[test]
-fn kv_cache_roundtrips_rows() {
+fn kv_cache_roundtrips_rows_per_layer() {
     prop::check(100, |g| {
+        let layers = g.size(1, 3).max(1);
         let h = g.size(1, 4).max(1);
         let dh = g.size(1, 16).max(1);
         let max = g.size(2, 24).max(2);
-        let mut kv = KvCache::new(max, h, dh);
+        let mut kv = KvCache::new(layers, max, h, dh);
         let r = h * dh;
-        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let mut rows: Vec<Vec<Vec<f32>>> = Vec::new();
         let n = g.size(1, max).max(1);
         for i in 0..n {
-            let row: Vec<f32> =
-                (0..r).map(|j| (i * r + j) as f32).collect();
-            kv.append(&row, &row);
-            rows.push(row);
+            let layer_rows: Vec<Vec<f32>> = (0..layers)
+                .map(|l| {
+                    (0..r)
+                        .map(|j| ((l * max + i) * r + j) as f32)
+                        .collect()
+                })
+                .collect();
+            kv.append(&layer_rows, &layer_rows);
+            rows.push(layer_rows);
         }
         assert_eq!(kv.len(), n);
-        for (i, row) in rows.iter().enumerate() {
-            assert_eq!(kv.row_k(i), row.as_slice());
+        for (i, layer_rows) in rows.iter().enumerate() {
+            for (l, row) in layer_rows.iter().enumerate() {
+                assert_eq!(kv.row_k(l, i), row.as_slice());
+            }
+        }
+    });
+}
+
+/// Byte-exact reference model of a [`KvPool`]: per slot, per layer, the
+/// expected full padded K/V buffers plus the shared length.
+struct PoolModel {
+    layers: usize,
+    slots: usize,
+    slot_elems: usize,
+    len: Vec<usize>,
+    /// k[slot][layer] / v[slot][layer]: full padded [S * H * Dh] buffers
+    k: Vec<Vec<Vec<f32>>>,
+    v: Vec<Vec<Vec<f32>>>,
+}
+
+impl PoolModel {
+    fn new(layers: usize, slots: usize, max_seq: usize, row: usize) -> Self {
+        let slot_elems = max_seq * row;
+        PoolModel {
+            layers,
+            slots,
+            slot_elems,
+            len: vec![0; slots],
+            k: vec![vec![vec![0.0; slot_elems]; layers]; slots],
+            v: vec![vec![vec![0.0; slot_elems]; layers]; slots],
+        }
+    }
+
+    fn assert_matches(&self, pool: &KvPool) {
+        for slot in 0..self.slots {
+            assert_eq!(pool.len(slot), self.len[slot], "slot {slot} len");
+            for layer in 0..self.layers {
+                assert_eq!(
+                    pool.slot_k(layer, slot),
+                    self.k[slot][layer].as_slice(),
+                    "slot {slot} layer {layer} K bytes perturbed"
+                );
+                assert_eq!(
+                    pool.slot_v(layer, slot),
+                    self.v[slot][layer].as_slice(),
+                    "slot {slot} layer {layer} V bytes perturbed"
+                );
+            }
+        }
+    }
+}
+
+/// Random interleavings of `seed_slot` / `append_slot` / `reset_slot`
+/// must never perturb any other slot or layer (byte-exact, checked after
+/// every single operation).
+#[test]
+fn kv_pool_slot_and_layer_isolation() {
+    prop::check(120, |g| {
+        let layers = g.size(1, 3).max(1);
+        let slots = g.size(1, 4).max(1);
+        let max_seq = g.size(2, 6).max(2);
+        let h = g.size(1, 2).max(1);
+        let dh = g.size(1, 3).max(1);
+        let r = h * dh;
+        let mut pool = KvPool::new(layers, slots, max_seq, h, dh);
+        let mut model = PoolModel::new(layers, slots, max_seq, r);
+        let ops = g.size(4, 40).max(4);
+        let mut stamp = 1.0f32;
+        for _ in 0..ops {
+            let slot = g.usize(slots);
+            match g.usize(3) {
+                // seed: overwrite the slot's whole padded region
+                0 => {
+                    let valid = g.usize(max_seq + 1);
+                    let ks: Vec<Vec<f32>> = (0..layers)
+                        .map(|l| {
+                            vec![stamp + l as f32; max_seq * r]
+                        })
+                        .collect();
+                    let vs: Vec<Vec<f32>> = (0..layers)
+                        .map(|l| {
+                            vec![-(stamp + l as f32); max_seq * r]
+                        })
+                        .collect();
+                    pool.seed_slot(slot, &ks, &vs, valid);
+                    for l in 0..layers {
+                        model.k[slot][l].copy_from_slice(&ks[l]);
+                        model.v[slot][l].copy_from_slice(&vs[l]);
+                    }
+                    model.len[slot] = valid;
+                    stamp += layers as f32;
+                }
+                // append: one row per layer at the current length
+                1 if model.len[slot] < max_seq => {
+                    let k_rows: Vec<Vec<f32>> = (0..layers)
+                        .map(|l| vec![stamp + l as f32; r])
+                        .collect();
+                    let v_rows: Vec<Vec<f32>> = (0..layers)
+                        .map(|l| vec![-(stamp + l as f32); r])
+                        .collect();
+                    pool.append_slot(slot, &k_rows, &v_rows);
+                    let off = model.len[slot] * r;
+                    for l in 0..layers {
+                        model.k[slot][l][off..off + r]
+                            .copy_from_slice(&k_rows[l]);
+                        model.v[slot][l][off..off + r]
+                            .copy_from_slice(&v_rows[l]);
+                    }
+                    model.len[slot] += 1;
+                    stamp += layers as f32;
+                }
+                1 => {} // slot full: appending would panic by contract
+                // reset: zero the slot everywhere
+                _ => {
+                    pool.reset_slot(slot);
+                    for l in 0..layers {
+                        model.k[slot][l].fill(0.0);
+                        model.v[slot][l].fill(0.0);
+                    }
+                    model.len[slot] = 0;
+                }
+            }
+            model.assert_matches(&pool);
+            // the contiguous layer banks stay consistent with the
+            // per-slot views (the zero-copy borrow the engine hands to
+            // the batched attention artifact)
+            for l in 0..layers {
+                let bank = pool.layer_k(l);
+                for slot in 0..slots {
+                    assert_eq!(
+                        &bank[slot * model.slot_elems
+                            ..(slot + 1) * model.slot_elems],
+                        pool.slot_k(l, slot),
+                        "layer {l} bank vs slot {slot} view"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The batched engine's two-phase step: peeking an update and applying it
+/// later must equal the direct update, and a peek alone must leave every
+/// expert's state untouched.
+#[test]
+fn go_peek_then_apply_equals_direct_update() {
+    prop::check(150, |g| {
+        let e = *[2usize, 4, 8, 16].get(g.usize(4)).unwrap();
+        let cap = g.size(1, 6).max(1);
+        let steps = g.size(2, 40).max(2);
+        let mut direct = GoCache::new(e, cap, 0);
+        let mut staged = GoCache::new(e, cap, 0);
+        for t in 0..steps {
+            let row: Vec<f32> = (0..e).map(|_| g.normal() as f32).collect();
+            let probs = softmax_rows(&row, 1, e);
+
+            let before: Vec<Vec<usize>> =
+                (0..e).map(|x| staged.selected_tokens(x)).collect();
+            let peeked = staged.peek_probs(t, &probs);
+            // peek must not mutate: state identical, and re-peeking gives
+            // the same answer
+            for x in 0..e {
+                assert_eq!(staged.selected_tokens(x), before[x],
+                           "peek mutated expert {x}");
+            }
+            assert_eq!(staged.peek_probs(t, &probs), peeked);
+
+            let applied = direct.update_probs(t, &probs);
+            assert_eq!(peeked, applied, "peek disagrees with direct update");
+
+            staged.apply_update(t, &peeked);
+            for x in 0..e {
+                assert_eq!(
+                    staged.selected_tokens(x),
+                    direct.selected_tokens(x),
+                    "expert {x} diverged after apply"
+                );
+                assert_eq!(staged.threshold(x), direct.threshold(x));
+            }
         }
     });
 }

@@ -1,11 +1,13 @@
 //! Property tests for the scheduler (in-tree prop harness, DESIGN.md §0):
 //! the invariants Algorithm 1 must uphold on *any* choice matrix and
-//! grouping, not just the paper's workloads.
+//! grouping, not just the paper's workloads — plus the online
+//! [`BatchPlanner`]'s contention accounting and its depth-L step pricing
+//! (one planned layer-step per functional layer).
 
 use moepim::config::SchedulePolicy;
 use moepim::grouping::Grouping;
 use moepim::moe::{ChoiceMatrix, TraceGenerator};
-use moepim::sched::{self, compact};
+use moepim::sched::{self, compact, BatchPlanner};
 use moepim::util::prop::{self, Gen};
 
 /// Random (choices, grouping) instance.
@@ -143,5 +145,99 @@ fn utilization_bounded() {
             let u = sched::build(&m, &gr, p).utilization();
             assert!((0.0..=1.0).contains(&u), "{p:?}: {u}");
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Online BatchPlanner invariants (the serving engine's per-step pricing)
+// ---------------------------------------------------------------------------
+
+/// Random per-slot expert sets for one batch step.
+fn expert_sets(g: &mut Gen, e: usize) -> Vec<Vec<usize>> {
+    let b = g.size(1, 6).max(1);
+    (0..b)
+        .map(|_| (0..e).filter(|_| g.bool(0.3)).collect())
+        .collect()
+}
+
+#[test]
+fn planner_contention_zero_under_singleton_grouping() {
+    // with exclusive peripherals there is nothing to contend for: every
+    // step's sharing-attributable cycles must be exactly zero
+    prop::check(150, |g| {
+        let e = *[4usize, 8, 16].get(g.usize(3)).unwrap();
+        let policy = *[SchedulePolicy::TokenWise, SchedulePolicy::Compact,
+                       SchedulePolicy::Reschedule]
+            .get(g.usize(3))
+            .unwrap();
+        let mut p =
+            BatchPlanner::with_grouping(Grouping::singleton(e), policy);
+        for _ in 0..g.size(1, 8).max(1) {
+            let sets = expert_sets(g, e);
+            let plan = p.plan(&sets);
+            assert_eq!(plan.contention_cycles, 0, "{policy:?}");
+        }
+        assert_eq!(p.stats().contention_cycles, 0);
+    });
+}
+
+#[test]
+fn planner_grouped_makespan_never_beats_exclusive() {
+    // peripheral sharing can only serialise work: the grouped makespan is
+    // >= the exclusive-peripherals makespan on the same step, and the
+    // plan's contention_cycles is exactly the difference
+    prop::check(150, |g| {
+        let e = *[4usize, 8, 16].get(g.usize(3)).unwrap();
+        let group_size = *[2usize, 4].get(g.usize(2)).unwrap();
+        let group_size = if e % group_size == 0 { group_size } else { 2 };
+        let policy = *[SchedulePolicy::Compact, SchedulePolicy::Reschedule]
+            .get(g.usize(2))
+            .unwrap();
+        let mut grouped = BatchPlanner::with_grouping(
+            Grouping::uniform(e, group_size, g.case_seed),
+            policy,
+        );
+        let mut exclusive =
+            BatchPlanner::with_grouping(Grouping::singleton(e), policy);
+        let sets = expert_sets(g, e);
+        let gp = grouped.plan(&sets);
+        let xp = exclusive.plan(&sets);
+        assert!(
+            gp.cycles >= xp.cycles,
+            "grouped {} < exclusive {}", gp.cycles, xp.cycles
+        );
+        assert_eq!(gp.contention_cycles, gp.cycles - xp.cycles);
+        assert_eq!(gp.work, xp.work, "work must be grouping-invariant");
+    });
+}
+
+#[test]
+fn planner_steps_scale_linearly_in_depth() {
+    // a depth-L decode step is priced as L planned layer-steps: for a
+    // fixed batch, stats().steps after n cycles is exactly n * L
+    prop::check(100, |g| {
+        let e = *[4usize, 8, 16].get(g.usize(3)).unwrap();
+        let layers = g.size(1, 5).max(1);
+        let cycles = g.size(1, 6).max(1);
+        let sets = expert_sets(g, e);
+        let mut p = BatchPlanner::new(e, 2, SchedulePolicy::Reschedule);
+        let mut work_one_cycle = None;
+        for cycle in 0..cycles {
+            let layer_sets: Vec<Vec<Vec<usize>>> =
+                (0..layers).map(|_| sets.clone()).collect();
+            let plans = p.plan_layers(&layer_sets);
+            assert_eq!(plans.len(), layers);
+            let cycle_work: usize = plans.iter().map(|pl| pl.work).sum();
+            // identical per-layer sets => identical per-cycle work
+            match work_one_cycle {
+                None => work_one_cycle = Some(cycle_work),
+                Some(w) => assert_eq!(cycle_work, w, "cycle {cycle}"),
+            }
+        }
+        let s = p.stats();
+        assert_eq!(s.steps, (cycles * layers) as u64,
+                   "steps must equal cycles x layers");
+        assert_eq!(s.work, (cycles * layers) as u64
+                   * sets.iter().map(Vec::len).sum::<usize>() as u64);
     });
 }

@@ -1,14 +1,18 @@
 //! Coordinator/server integration: slot-batched serving over the real
-//! model (requires `make artifacts`), including failure injection for bad
-//! requests and artifact-directory errors.
+//! depth-L model (requires `make artifacts`), including failure injection
+//! for bad requests and artifact-directory errors, plus a randomized
+//! churn scenario pinned against per-session engine references.
 //!
 //! All server scenarios share one #[test]: the PJRT client is single-owner
 //! and each `Server::spawn` compiles every artifact, so one router thread
-//! serves every scenario below.
+//! serves every scenario below.  The churn references are computed from a
+//! private `ModelEngine` that is dropped *before* the server spawns its
+//! own client.
 
 use std::path::PathBuf;
 
-use moepim::coordinator::{Request, Server};
+use moepim::coordinator::{DecodeMode, ModelEngine, Request, Server};
+use moepim::runtime::Runtime;
 use moepim::util::rng::Pcg32;
 
 fn artifacts_dir() -> PathBuf {
@@ -24,11 +28,51 @@ fn prompt(len: usize, seed: u64) -> Vec<i32> {
     (0..len).map(|_| rng.gen_range(512) as i32).collect()
 }
 
+/// One churn request: prompt, requested generation length, and the
+/// per-session reference stream it must reproduce.
+struct ChurnCase {
+    prompt: Vec<i32>,
+    gen_len: usize,
+    want: Vec<i32>,
+}
+
+/// Randomized mixed-length churn cases with their reference streams,
+/// computed on the per-session cached path (sparse MoE — the mode the
+/// serving engine always uses).  At artifact depth L >= 2 this pins the
+/// whole serving stack against per-session references at real depth; the
+/// CI matrix provides the L=3 set.
+fn churn_cases(engine: &ModelEngine, n: usize) -> Vec<ChurnCase> {
+    let m = engine.model.clone();
+    let mut rng = Pcg32::new(0xC4C4);
+    (0..n)
+        .map(|i| {
+            let plen =
+                4 + rng.gen_range(m.prompt_len.saturating_sub(4).max(1));
+            let gen_len = 1 + rng.gen_range(11);
+            let p = prompt(plen, 3000 + i as u64);
+            let want = engine
+                .generate(&p, gen_len, DecodeMode::Cached)
+                .expect("reference generation")
+                .tokens;
+            ChurnCase { prompt: p, gen_len, want }
+        })
+        .collect()
+}
+
 #[test]
-fn server_lifecycle_and_batching() {
-    let server = Server::spawn(artifacts_dir()).expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    );
+fn server_lifecycle_batching_and_churn() {
+    // ---- per-session references first (own PJRT client, dropped before
+    //      the server thread constructs its own) -------------------------
+    let (cases, n_layers) = {
+        let rt = Runtime::load(&artifacts_dir()).expect(
+            "artifacts missing — run `make artifacts` before `cargo test`",
+        );
+        let n_layers = rt.manifest.model.n_layers;
+        let engine = ModelEngine::new(rt).with_sparse_moe(true);
+        (churn_cases(&engine, 10), n_layers)
+    };
+
+    let server = Server::spawn(artifacts_dir()).expect("server spawns");
 
     // concurrent requests of different lengths interleave and all finish
     let rxs: Vec<_> = (0..4u64)
@@ -45,8 +89,12 @@ fn server_lifecycle_and_batching() {
         assert_eq!(resp.id, i as u64);
         let tokens = resp.result.as_ref().expect("generation succeeds");
         assert_eq!(tokens.len(), 3 + i);
-        assert!(resp.latency_us >= resp.ttft_us);
-        assert!(resp.ttft_us >= resp.queue_us);
+        // a served request has real admission/first-token events
+        let ttft = resp.ttft_us.expect("served request has a TTFT");
+        let queued = resp.queue_us.expect("served request was admitted");
+        assert!(resp.latency_us >= ttft);
+        assert!(ttft >= queued);
+        assert!(resp.admit_seq.is_some());
     }
 
     // identical prompts give identical streams (deterministic serving),
@@ -102,7 +150,7 @@ fn server_lifecycle_and_batching() {
     for rx in rxs {
         let resp = rx.recv().unwrap();
         assert!(resp.is_ok());
-        seqs.push(resp.admit_seq);
+        seqs.push(resp.admit_seq.expect("served burst request admitted"));
     }
     let mut sorted = seqs.clone();
     sorted.sort_unstable();
@@ -115,7 +163,8 @@ fn server_lifecycle_and_batching() {
     assert!(tokens.len() <= 96);
 
     // an oversized prompt gets a *terminal error reply* (not a dropped
-    // channel); the server survives and keeps serving
+    // channel) with `None` in every never-happened field; the server
+    // survives and keeps serving
     let rx = server.submit(Request {
         id: 103,
         prompt: prompt(500, 9),
@@ -124,21 +173,82 @@ fn server_lifecycle_and_batching() {
     let resp = rx.recv().expect("oversized prompt still gets a reply");
     let err = resp.result.expect_err("oversized prompt must error");
     assert!(err.contains("max_seq"), "unexpected error: {err}");
+    assert_eq!(resp.admit_seq, None, "rejected request was never admitted");
+    assert_eq!(resp.queue_us, None);
+    assert_eq!(resp.ttft_us, None);
     let after = server.generate(104, prompt(8, 11), 2).unwrap();
     assert_eq!(after.result.expect("server still serves").len(), 2);
 
     // an empty prompt errors terminally too
     let resp = server.generate(105, Vec::new(), 2).unwrap();
     assert!(resp.result.is_err(), "empty prompt must error");
+    assert!(resp.ttft_us.is_none());
 
-    // serving telemetry is live and consistent
+    // ---- randomized churn: staggered submissions, mixed prompt/gen
+    //      lengths, slot recycling; every stream pinned against its
+    //      per-session reference -----------------------------------------
+    let mut rng = Pcg32::new(0x57A6);
+    let mut pending: Vec<(usize, std::sync::mpsc::Receiver<_>)> = Vec::new();
+    let mut submitted = 0usize;
+    let mut checked = 0usize;
+    while checked < cases.len() {
+        // submit a random-sized wave (requests arrive while earlier ones
+        // are mid-generation or already retiring — admission interleaves
+        // with decode cycles and recycled slots)
+        let wave = 1 + rng.gen_range(3);
+        for _ in 0..wave {
+            if submitted >= cases.len() {
+                break;
+            }
+            let c = &cases[submitted];
+            let rx = server.submit(Request {
+                id: 500 + submitted as u64,
+                prompt: c.prompt.clone(),
+                gen_len: c.gen_len,
+            });
+            pending.push((submitted, rx));
+            submitted += 1;
+        }
+        // drain a random number of outstanding responses (all of them
+        // once everything is submitted)
+        let drain = if submitted >= cases.len() {
+            pending.len()
+        } else {
+            rng.gen_range(pending.len() + 1)
+        };
+        for (idx, rx) in pending.drain(..drain) {
+            let resp = rx.recv().expect("terminal churn response");
+            let tokens =
+                resp.result.as_ref().expect("churn generation succeeds");
+            assert_eq!(
+                tokens, &cases[idx].want,
+                "churn request {idx} diverged from its per-session \
+                 reference"
+            );
+            assert_eq!(tokens.len(), cases[idx].gen_len);
+            assert!(resp.admit_seq.is_some());
+            let ttft = resp.ttft_us.unwrap();
+            assert!(resp.queue_us.unwrap() <= ttft);
+            assert!(ttft <= resp.latency_us);
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, cases.len());
+
+    // serving telemetry is live and consistent; the planner prices every
+    // decode cycle as L layer-steps
     let stats = server.stats().unwrap();
     assert!(stats.slots >= 1);
-    assert!(stats.completed >= 18, "stats: {stats:?}");
+    assert!(stats.completed >= 28, "stats: {stats:?}");
     assert_eq!(stats.errored, 2);
     assert!(stats.batch_dispatches > 0, "no batched dispatch happened");
     assert!(stats.mean_batch_occupancy() > 1.0);
     assert!(stats.planner.steps > 0, "planner never ran");
+    assert_eq!(
+        stats.planner.steps % n_layers as u64,
+        0,
+        "planner steps must be a whole number of depth-{n_layers} cycles"
+    );
     assert!(stats.planner.work > 0);
     assert!(stats.tokens_generated > 0);
 }
