@@ -74,11 +74,8 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
-            server.submit(Request {
-                id: i,
-                prompt: prompt(32, 100 + i, vocab),
-                gen_len,
-            })
+            server.submit(Request::new(i, prompt(32, 100 + i, vocab),
+                                       gen_len))
         })
         .collect();
     let mut total_tokens = 0;

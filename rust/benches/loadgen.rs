@@ -1,0 +1,79 @@
+//! Throughput-under-load benchmarks over the virtual-time cluster: how
+//! fast the workload subsystem itself runs (driver + planner-priced
+//! decode cycles — this is host-side code on the serving hot path), plus
+//! derived metrics comparing admission policies under identical seeded
+//! traffic (simulated tokens/sec, p99 e2e, SLO attainment).
+//!
+//! `cargo bench --bench loadgen` — no artifacts needed.
+
+use moepim::util::bench::Bench;
+use moepim::workload::report;
+use moepim::workload::{
+    run_virtual, AdmissionPolicy, ArrivalProcess, SizeModel, VirtualConfig,
+    WorkloadSpec,
+};
+
+fn spec(arrival: ArrivalProcess, requests: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        seed: 0xBE0C,
+        requests,
+        arrival,
+        sizes: SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 1.2,
+            prompt: (4, 24),
+            gen: (1, 12),
+        },
+        slo_e2e_ms: 50.0,
+        deadline_slack_us_per_token: 500,
+    }
+}
+
+fn main() {
+    let b = Bench::new("loadgen");
+    let cfg = VirtualConfig::default();
+
+    // ---- simulation throughput: wall time per experiment ----------------
+    let poisson = spec(ArrivalProcess::Poisson { rate_rps: 400.0 }, 64);
+    b.run("virtual/poisson_fifo/64req", || {
+        run_virtual(&cfg, &poisson, AdmissionPolicy::fifo()).samples.len()
+    });
+    let closed = spec(
+        ArrivalProcess::Closed { users: 8, think_ms: 0.0 },
+        64,
+    );
+    b.run("virtual/closed_sjf/64req", || {
+        run_virtual(&cfg, &closed, AdmissionPolicy::sjf()).samples.len()
+    });
+
+    // ---- policy comparison under identical seeded traffic ---------------
+    let pressure = spec(ArrivalProcess::Poisson { rate_rps: 2000.0 }, 128);
+    for policy in [
+        AdmissionPolicy::fifo(),
+        AdmissionPolicy::sjf(),
+        AdmissionPolicy::deadline(),
+    ] {
+        let out = run_virtual(&cfg, &pressure, policy);
+        let s = report::summarize(&pressure, &out);
+        b.metric(
+            &format!("policy/{}/tokens_per_s", policy.label()),
+            s.tokens_per_s,
+            "tok/s (virtual)",
+        );
+        b.metric(
+            &format!("policy/{}/p99_e2e", policy.label()),
+            s.e2e.quantile(0.99) / 1e3,
+            "ms (virtual)",
+        );
+        b.metric(
+            &format!("policy/{}/slo_attainment", policy.label()),
+            s.attainment * 100.0,
+            "%",
+        );
+        b.metric(
+            &format!("policy/{}/contention", policy.label()),
+            out.planner.contention_ratio() * 100.0,
+            "% of cycles",
+        );
+    }
+}

@@ -1,9 +1,10 @@
 //! Threaded serving loop: a router thread owns the [`BatchEngine`] (the
 //! PJRT client is single-owner) and serves live sessions with slot-based
-//! continuous batching — waiting requests are admitted FIFO into free
-//! serving slots, and every decode cycle advances *all* live slots with
-//! one batched dispatch per pipeline stage (single-token fallback when only
-//! one session is live).
+//! continuous batching — waiting requests are admitted into free serving
+//! slots by a pluggable [`AdmissionPolicy`] (FIFO by default; SJF and
+//! deadline-aware variants for loadtest comparison), and every decode
+//! cycle advances *all* live slots with one batched dispatch per pipeline
+//! stage (single-token fallback when only one session is live).
 //!
 //! Every submitted request gets a terminal [`Response`]: generation
 //! results and failures (oversized prompt, engine errors, shutdown) all
@@ -26,6 +27,7 @@ use crate::coordinator::batch::BatchEngine;
 use crate::coordinator::engine::ModelEngine;
 use crate::runtime::Runtime;
 use crate::sched::PlannerStats;
+use crate::workload::{AdmissionPolicy, QueuedMeta};
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -33,6 +35,20 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub gen_len: usize,
+    /// end-to-end deadline budget from submit, for deadline-aware
+    /// admission (`None`: no deadline — sorts last under EDF)
+    pub deadline_us: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, gen_len: usize) -> Request {
+        Request { id, prompt, gen_len, deadline_us: None }
+    }
+
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Request {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
 }
 
 /// A terminal reply: every submitted request receives exactly one.
@@ -52,8 +68,10 @@ pub struct Response {
     pub ttft_us: Option<f64>,
     /// time from submit to slot admission; `None` when never admitted
     pub queue_us: Option<f64>,
-    /// admission sequence number — strictly increasing in submit order
-    /// (FIFO slot admission); `None` when never admitted
+    /// admission sequence number — strictly increasing in *admission*
+    /// order; under the default FIFO policy that is also submit order
+    /// (the monotonicity pin in `tests/serving.rs`).  `None` when never
+    /// admitted
     pub admit_seq: Option<u64>,
     /// decode steps this request rode in a batched dispatch
     pub batched_steps: u64,
@@ -167,10 +185,17 @@ pub struct Server {
 }
 
 impl Server {
+    /// Spawn with the default FIFO admission policy.
+    pub fn spawn(artifacts_dir: PathBuf) -> Result<Server> {
+        Self::spawn_with(artifacts_dir, AdmissionPolicy::Fifo)
+    }
+
     /// Spawn the router thread; the engine (and its PJRT client, which is
     /// not `Send`) is constructed *inside* the thread from the artifacts
-    /// directory.  Blocks until compilation finished or failed.
-    pub fn spawn(artifacts_dir: PathBuf) -> Result<Server> {
+    /// directory.  Blocks until compilation finished or failed.  `policy`
+    /// decides which waiting request each freed slot goes to.
+    pub fn spawn_with(artifacts_dir: PathBuf, policy: AdmissionPolicy)
+        -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         let handle = std::thread::spawn(move || {
@@ -187,7 +212,7 @@ impl Server {
                     return;
                 }
             };
-            run_loop(engine, rx);
+            run_loop(engine, rx, policy);
         });
         match ready_rx.recv() {
             Ok(Ok(_platform)) => Ok(Server { tx, handle: Some(handle) }),
@@ -208,7 +233,7 @@ impl Server {
     /// Submit-and-wait convenience.
     pub fn generate(&self, id: u64, prompt: Vec<i32>, gen_len: usize)
         -> Result<Response> {
-        let rx = self.submit(Request { id, prompt, gen_len });
+        let rx = self.submit(Request::new(id, prompt, gen_len));
         Ok(rx.recv()?)
     }
 
@@ -231,10 +256,19 @@ impl Drop for Server {
     }
 }
 
-fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
+/// One waiting request, in arrival order, plus the bookkeeping the
+/// admission policy's starvation guard needs.
+struct Waiting {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+    passed_over: u32,
+}
+
+fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
+            policy: AdmissionPolicy) {
     let slots = eng.slots();
-    let mut waiting: VecDeque<(Request, mpsc::Sender<Response>, Instant)> =
-        VecDeque::new();
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
     let mut stats = ServerStats { slots, ..ServerStats::default() };
     let mut admit_seq: u64 = 0;
@@ -267,7 +301,31 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
                     let _ = tx.send(snap);
                 }
                 Msg::Submit(req, reply) => {
-                    waiting.push_back((req, reply, Instant::now()));
+                    if req.gen_len == 0 {
+                        // zero-length request: an immediate terminal
+                        // success with no tokens — it never queues, never
+                        // occupies a slot, and never ran prefill, so the
+                        // never-happened fields stay `None`
+                        stats.completed += 1;
+                        let now = Instant::now();
+                        let _ = reply.send(Response {
+                            id: req.id,
+                            result: Ok(Vec::new()),
+                            latency_us: us(now, now),
+                            ttft_us: None,
+                            queue_us: None,
+                            admit_seq: None,
+                            batched_steps: 0,
+                            single_steps: 0,
+                        });
+                        continue;
+                    }
+                    waiting.push_back(Waiting {
+                        req,
+                        reply,
+                        submitted: Instant::now(),
+                        passed_over: 0,
+                    });
                     stats.peak_waiting =
                         stats.peak_waiting.max(waiting.len());
                 }
@@ -288,10 +346,38 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>) {
             }
         }
 
-        // ---- 3. FIFO slot admission (after the sweep, so slots freed
-        //         this cycle refill and ride this cycle's dispatch) ------
+        // ---- 3. policy-driven slot admission (after the sweep, so slots
+        //         freed this cycle refill and ride this cycle's dispatch).
+        //         The queue stays in arrival order; the policy picks an
+        //         index into it (FIFO: always 0, preserving the seed
+        //         behaviour and `admit_seq` monotonicity in submit order).
         while !waiting.is_empty() && eng.free_slot().is_some() {
-            let (req, reply, submitted) = waiting.pop_front().unwrap();
+            let w = if matches!(policy, AdmissionPolicy::Fifo) {
+                // FIFO stays the O(1) pop the seed had — no metas needed
+                waiting.pop_front().unwrap()
+            } else {
+                let now = Instant::now();
+                let metas: Vec<QueuedMeta> = waiting
+                    .iter()
+                    .map(|w| QueuedMeta {
+                        gen_len: w.req.gen_len,
+                        deadline_us: w.req.deadline_us,
+                        waited_us: us(now, w.submitted) as u64,
+                        passed_over: w.passed_over,
+                    })
+                    .collect();
+                let pick = policy.select(&metas).min(waiting.len() - 1);
+                let w = waiting.remove(pick).expect("policy index in range");
+                // only requests the pick actually jumped over (older than
+                // it, i.e. at indices < pick) were passed over — younger
+                // ones weren't, or a standing queue would age everyone
+                // into the starvation guard and degrade SJF/EDF to FIFO
+                for o in waiting.iter_mut().take(pick) {
+                    o.passed_over += 1;
+                }
+                w
+            };
+            let (req, reply, submitted) = (w.req, w.reply, w.submitted);
             match eng.admit(&req.prompt) {
                 Ok((slot, next)) => {
                     // the prefill-sampled token is banked right away; the
@@ -407,10 +493,9 @@ fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
 }
 
 /// Terminal replies for everything in flight at shutdown.
-fn shutdown(waiting: VecDeque<(Request, mpsc::Sender<Response>, Instant)>,
-            live: Vec<Option<Live>>) {
-    for (req, reply, submitted) in waiting {
-        reject(req.id, &reply, submitted, "server shut down".into());
+fn shutdown(waiting: VecDeque<Waiting>, live: Vec<Option<Live>>) {
+    for w in waiting {
+        reject(w.req.id, &w.reply, w.submitted, "server shut down".into());
     }
     for l in live.into_iter().flatten() {
         l.respond(Err("server shut down".into()));

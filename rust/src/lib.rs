@@ -9,8 +9,11 @@
 //!   ([`grouping`]), dynamic prefill scheduling ([`sched`]), the KV + GO
 //!   caches ([`cache`]), the operator-level PIM simulator ([`sim`]), the
 //!   evaluation harness regenerating every paper figure/table ([`eval`]),
-//!   and a slot-batched serving coordinator driving the real AOT-compiled
-//!   model ([`coordinator`]) through the PJRT runtime ([`runtime`]).
+//!   a slot-batched serving coordinator driving the real AOT-compiled
+//!   model ([`coordinator`]) through the PJRT runtime ([`runtime`]), and
+//!   the load-testing subsystem ([`workload`]): seeded traffic
+//!   generation, policy-driven admission, and SLO telemetry over either
+//!   the real server or a deterministic virtual-time cluster.
 //! * **L2 (python/compile/model.py)** — the functional depth-L MoE
 //!   transformer stack, AOT-lowered to `artifacts/*.hlo.txt` at build
 //!   time (per-layer artifact families, `n_layers_functional` in the
@@ -33,3 +36,4 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod util;
+pub mod workload;

@@ -9,6 +9,9 @@
 //! moepim trace    [--tokens N] [--skew X] [--seed N] [--routing ...]
 //! moepim serve    [--prompts N] [--gen N] [--artifacts DIR]
 //! moepim generate [--prompt-len N] [--gen N] [--artifacts DIR] [--check]
+//! moepim loadtest [--seed N] [--process poisson|bursty|closed|replay]
+//!                 [--policy fifo|sjf|edf] [--requests N] [--rate RPS]
+//!                 [--slo-ms X] [--real] [--out FILE] [--smoke]
 //! ```
 
 use moepim::config::{
@@ -27,6 +30,7 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
+        Some("loadtest") => cmd_loadtest(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'\n{USAGE}");
             2
@@ -48,10 +52,18 @@ subcommands:
   trace [flags]                                    inspect a workload trace
   serve [flags]                                    threaded serving demo (real model)
   generate [flags]                                 single-sequence generation (real model)
+  loadtest [flags]                                 seeded load experiment -> JSON SloReport
+           (virtual clock by default: byte-identical per seed; --real
+            drives the threaded server instead; --smoke runs the CI matrix)
 
 common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
               --prompt N --gen N --seed N --routing token|expert --skew X
-              --config file.json (simulate; overrides flags)";
+              --config file.json (simulate; overrides flags)
+loadtest flags: --process poisson|bursty|closed|replay --policy fifo|sjf|edf
+              --requests N --rate RPS --on-ms X --off-ms X --users N
+              --think-ms X --replay-us T0,T1,... --sizes trace|uniform|fixed
+              --slo-ms X --deadline-slack-us N --slots B --layers L
+              --experts E --real --artifacts DIR --out FILE --smoke";
 
 fn cmd_eval(args: &Args) -> i32 {
     let what = args
@@ -216,11 +228,11 @@ fn cmd_serve(args: &Args) -> i32 {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            server.submit(moepim::coordinator::Request {
-                id: i as u64,
-                prompt: toy_prompt(32, 1000 + i as u64, 512),
-                gen_len: gen,
-            })
+            server.submit(moepim::coordinator::Request::new(
+                i as u64,
+                toy_prompt(32, 1000 + i as u64, 512),
+                gen,
+            ))
         })
         .collect();
     let mut total_tokens = 0usize;
@@ -254,13 +266,16 @@ fn cmd_serve(args: &Args) -> i32 {
         total_tokens as f64 / wall
     );
     if let Ok(stats) = server.stats() {
+        // the same telemetry the loadtest report carries, so interactive
+        // runs and SLO reports read off one vocabulary
         println!(
             "slots {} | batched dispatches {} (mean occupancy {:.2}) | \
-             single {} | contention {:.1}% of {} cycles",
+             single {} | peak waiting {} | contention {:.1}% of {} cycles",
             stats.slots,
             stats.batch_dispatches,
             stats.mean_batch_occupancy(),
             stats.single_dispatches,
+            stats.peak_waiting,
             stats.planner.contention_ratio() * 100.0,
             stats.planner.cycles,
         );
@@ -320,5 +335,264 @@ fn cmd_generate(args: &Args) -> i32 {
             return 1;
         }
     }
+    0
+}
+
+// ---------------------------------------------------------------------------
+// loadtest: seeded load experiment -> JSON SloReport (DESIGN.md E8)
+// ---------------------------------------------------------------------------
+
+fn cmd_loadtest(args: &Args) -> i32 {
+    use moepim::workload::{report, run_virtual, AdmissionPolicy};
+    if args.bool_flag("smoke") {
+        return loadtest_smoke(args);
+    }
+    let Some(policy) =
+        AdmissionPolicy::parse(&args.str_flag("policy", "fifo"))
+    else {
+        eprintln!("unknown --policy (expected fifo|sjf|edf)");
+        return 2;
+    };
+    let spec = match loadtest_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let report = if args.bool_flag("real") {
+        // wall-clock run against the threaded server (not byte-repeatable)
+        match run_real_loadtest(args, &spec, policy) {
+            Ok(r) => r,
+            Err(code) => return code,
+        }
+    } else {
+        // virtual clock: byte-identical output for a given seed
+        let cfg = loadtest_vcfg(args);
+        let out = run_virtual(&cfg, &spec, policy);
+        report::build(&spec, policy, &out)
+    };
+    let text = report.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "");
+    if !out_path.is_empty() {
+        if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+            eprintln!("failed to write {out_path}: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn loadtest_spec(args: &Args)
+    -> Result<moepim::workload::WorkloadSpec, String> {
+    use moepim::workload::{ArrivalProcess, SizeModel, WorkloadSpec};
+    let rate = args.f64_flag("rate", 64.0);
+    if rate <= 0.0 {
+        return Err("--rate must be > 0".into());
+    }
+    let arrival = match args.str_flag("process", "poisson").as_str() {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
+        "bursty" => ArrivalProcess::Bursty {
+            rate_rps: rate,
+            mean_on_ms: args.f64_flag("on-ms", 25.0),
+            mean_off_ms: args.f64_flag("off-ms", 75.0),
+        },
+        "closed" => ArrivalProcess::Closed {
+            users: args.usize_flag("users", 8).max(1),
+            think_ms: args.f64_flag("think-ms", 2.0),
+        },
+        "replay" => {
+            let raw = args.str_flag("replay-us", "");
+            let mut times: Vec<u64> = Vec::new();
+            for tok in raw.split(',').map(str::trim) {
+                if tok.is_empty() {
+                    continue;
+                }
+                match tok.parse() {
+                    Ok(t) => times.push(t),
+                    Err(_) => {
+                        return Err(format!(
+                            "--replay-us: '{tok}' is not a µs offset"
+                        ));
+                    }
+                }
+            }
+            if times.is_empty() {
+                return Err(
+                    "--replay-us takes comma-separated ascending µs \
+                     offsets (e.g. --replay-us 0,1000,2500)"
+                        .into(),
+                );
+            }
+            if times.windows(2).any(|w| w[0] > w[1]) {
+                return Err(
+                    "--replay-us offsets must be ascending (the replay \
+                     wrap period is last offset + 1)"
+                        .into(),
+                );
+            }
+            ArrivalProcess::Replay { times_us: times }
+        }
+        other => return Err(format!("unknown --process '{other}'")),
+    };
+    let pmax = args.usize_flag("prompt", 24).max(1);
+    let gmax = args.usize_flag("gen", 12);
+    let sizes = match args.str_flag("sizes", "trace").as_str() {
+        "fixed" => SizeModel::Fixed { prompt_len: pmax, gen_len: gmax },
+        "uniform" => SizeModel::Uniform {
+            prompt: (pmax.min(4), pmax),
+            gen: (gmax.min(1), gmax.max(1)),
+        },
+        "trace" => SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: args.f64_flag("skew", 1.2),
+            prompt: (pmax.min(4), pmax),
+            gen: (gmax.min(1), gmax.max(1)),
+        },
+        other => return Err(format!("unknown --sizes '{other}'")),
+    };
+    Ok(WorkloadSpec {
+        seed: args.u64_flag("seed", 2026),
+        requests: args.usize_flag("requests", 64),
+        arrival,
+        sizes,
+        slo_e2e_ms: args.f64_flag("slo-ms", 250.0),
+        deadline_slack_us_per_token: args.u64_flag("deadline-slack-us", 500),
+    })
+}
+
+fn loadtest_vcfg(args: &Args) -> moepim::workload::VirtualConfig {
+    let d = moepim::workload::VirtualConfig::default();
+    moepim::workload::VirtualConfig {
+        slots: args.usize_flag("slots", d.slots).max(1),
+        n_experts: args.usize_flag("experts", d.n_experts).max(1),
+        n_layers: args.usize_flag("layers", d.n_layers).max(1),
+        ..d
+    }
+}
+
+fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
+                     policy: moepim::workload::AdmissionPolicy)
+    -> Result<moepim::util::json::Json, i32> {
+    use moepim::coordinator::Server;
+    use moepim::workload::{report, run_against_server};
+    let server = match Server::spawn_with(artifacts_dir(args), policy) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to start server: {e:#}");
+            return Err(1);
+        }
+    };
+    match run_against_server(&server, spec) {
+        Ok(out) => Ok(report::build(spec, policy, &out)),
+        Err(e) => {
+            eprintln!("loadtest failed: {e:#}");
+            Err(1)
+        }
+    }
+}
+
+/// `--smoke`: the CI gate.  Virtual leg: every (process × policy) cell of
+/// the acceptance matrix must emit a byte-identical report twice in a
+/// row.  Real leg (when an artifact set is present): a short closed-loop
+/// run against the threaded server under FIFO and SJF, every request
+/// terminal and successful.
+fn loadtest_smoke(args: &Args) -> i32 {
+    use moepim::workload::{
+        report, run_against_server, run_virtual, AdmissionPolicy,
+        ArrivalProcess, SizeModel, VirtualConfig, WorkloadSpec,
+    };
+    let seed = args.u64_flag("seed", 2026);
+    let cfg = VirtualConfig::default();
+    let processes = [
+        ArrivalProcess::Poisson { rate_rps: 400.0 },
+        ArrivalProcess::Bursty {
+            rate_rps: 1200.0,
+            mean_on_ms: 10.0,
+            mean_off_ms: 30.0,
+        },
+    ];
+    let policies = [AdmissionPolicy::fifo(), AdmissionPolicy::sjf()];
+    for arrival in &processes {
+        for &policy in &policies {
+            let spec = WorkloadSpec {
+                seed,
+                requests: 32,
+                arrival: arrival.clone(),
+                sizes: SizeModel::TraceSeeded {
+                    n_experts: 16,
+                    skew: 1.2,
+                    prompt: (4, 24),
+                    gen: (1, 12),
+                },
+                slo_e2e_ms: 50.0,
+                deadline_slack_us_per_token: 500,
+            };
+            let a = report::build(&spec, policy,
+                                  &run_virtual(&cfg, &spec, policy))
+                .to_string_pretty();
+            let b = report::build(&spec, policy,
+                                  &run_virtual(&cfg, &spec, policy))
+                .to_string_pretty();
+            if a != b {
+                eprintln!("smoke: NONDETERMINISTIC report for {} x {}",
+                          arrival.label(), policy.label());
+                return 1;
+            }
+            println!("smoke: virtual {} x {} deterministic ({} bytes)",
+                     arrival.label(), policy.label(), a.len());
+        }
+    }
+    let dir = artifacts_dir(args);
+    if !dir.join("manifest.json").exists() {
+        println!("smoke: no artifact set at {} — real-server leg skipped",
+                 dir.display());
+        return 0;
+    }
+    for &policy in &policies {
+        let server = match moepim::coordinator::Server::spawn_with(
+            dir.clone(), policy) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("smoke: server spawn failed: {e:#}");
+                return 1;
+            }
+        };
+        let spec = WorkloadSpec {
+            seed,
+            requests: 8,
+            arrival: ArrivalProcess::Closed { users: 3, think_ms: 0.0 },
+            sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
+            slo_e2e_ms: 60_000.0,
+            deadline_slack_us_per_token: 500,
+        };
+        match run_against_server(&server, &spec) {
+            Ok(out) => {
+                let ok = out.samples.iter().filter(|s| s.ok).count();
+                if out.samples.len() != spec.requests
+                    || ok != out.samples.len()
+                {
+                    eprintln!("smoke: real {} run incomplete ({}/{} ok)",
+                              policy.label(), ok, out.samples.len());
+                    return 1;
+                }
+                println!(
+                    "smoke: real closed-loop x {} OK ({} requests, \
+                     {:.1} tok/s)",
+                    policy.label(),
+                    out.samples.len(),
+                    out.tokens_generated() as f64 / out.duration_s
+                );
+            }
+            Err(e) => {
+                eprintln!("smoke: real {} run failed: {e:#}",
+                          policy.label());
+                return 1;
+            }
+        }
+        // `server` drops here, before the next spawn (PJRT single-owner)
+    }
+    println!("smoke: PASS");
     0
 }

@@ -59,6 +59,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn u64_flag(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
     pub fn f64_flag(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -93,8 +100,15 @@ mod tests {
     fn defaults() {
         let a = parse("eval");
         assert_eq!(a.usize_flag("gen", 8), 8);
+        assert_eq!(a.u64_flag("seed", 42), 42);
         assert_eq!(a.f64_flag("ratio", 0.4), 0.4);
         assert!(!a.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn u64_flags_hold_full_width_seeds() {
+        let a = parse("loadtest --seed 18446744073709551615");
+        assert_eq!(a.u64_flag("seed", 0), u64::MAX);
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Deterministic traffic generation: arrival processes and request-size
+//! models, all driven by [`Pcg32`] so a whole load experiment replays from
+//! one `u64` seed.
+//!
+//! Three open-loop arrival shapes (Poisson, bursty on/off, replay of an
+//! explicit timeline) plus a closed-loop shape (`users` concurrent
+//! sessions with think time — the driver issues the next request when the
+//! previous one completes).  Request sizes come from a [`SizeModel`];
+//! the [`SizeModel::TraceSeeded`] variant derives its length distribution
+//! from a [`crate::moe::TraceGenerator`] routing trace, so prompt/gen
+//! lengths follow the same skew shape as the expert loads the grouping
+//! study measures.
+//!
+//! [`WorkloadSpec::materialize`] turns a spec into concrete
+//! [`RequestSpec`]s — identical for every admission policy under test,
+//! which is what makes policy comparisons apples-to-apples.
+
+use crate::moe::TraceGenerator;
+use crate::util::rng::Pcg32;
+
+/// Distinct rng streams per concern, so adding a size draw never perturbs
+/// the arrival timeline of the same seed.
+const ARRIVAL_SALT: u64 = 0xA221_7A1E_57A6_0001;
+const SIZE_SALT: u64 = 0x517E_D157_0000_0002;
+const TRACE_SALT: u64 = 0x7124_CE00_0000_0003;
+
+/// When requests arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open loop, exponential inter-arrivals at `rate_rps` requests/s.
+    Poisson { rate_rps: f64 },
+    /// Open loop, Markov-modulated on/off: Poisson at `rate_rps` during
+    /// ON windows (mean `mean_on_ms`), silent during OFF gaps (mean
+    /// `mean_off_ms`).  Long-run rate ≈ `rate_rps · on/(on+off)`.
+    Bursty {
+        rate_rps: f64,
+        mean_on_ms: f64,
+        mean_off_ms: f64,
+    },
+    /// Closed loop: `users` concurrent sessions, each submitting its next
+    /// request `think_ms` after its previous one completed.  Arrival
+    /// times are produced by the driver, not precomputed.
+    Closed { users: usize, think_ms: f64 },
+    /// Open loop, replay of an explicit timeline (µs offsets, ascending).
+    /// Requests beyond the timeline wrap around with the timeline's span
+    /// as the period.
+    Replay { times_us: Vec<u64> },
+}
+
+impl ArrivalProcess {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Closed { .. } => "closed",
+            ArrivalProcess::Replay { .. } => "replay",
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, ArrivalProcess::Closed { .. })
+    }
+
+    /// Arrival times in ns for `n` requests, ascending.  For the closed
+    /// loop this returns all-zero placeholders (the driver paces
+    /// submissions by completions instead).
+    pub fn times_ns(&self, n: usize, rng: &mut Pcg32) -> Vec<u64> {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                let mean_ns = 1e9 / rate_rps.max(1e-9);
+                let mut t = 0u64;
+                (0..n)
+                    .map(|_| {
+                        t += exp_ns(rng, mean_ns);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { rate_rps, mean_on_ms, mean_off_ms } => {
+                let mean_ns = 1e9 / rate_rps.max(1e-9);
+                let on_ns = (mean_on_ms.max(1e-6)) * 1e6;
+                let off_ns = (mean_off_ms.max(0.0)) * 1e6;
+                let mut t = 0u64;
+                let mut window_end = exp_ns(rng, on_ns);
+                (0..n)
+                    .map(|_| {
+                        // bounded: degenerate parameters (ON windows much
+                        // shorter than one inter-arrival gap) force-place
+                        // the arrival instead of spinning across windows
+                        for _ in 0..10_000 {
+                            let dt = exp_ns(rng, mean_ns);
+                            if t + dt <= window_end {
+                                t += dt;
+                                return t;
+                            }
+                            // window exhausted: jump over an OFF gap into
+                            // the next ON window
+                            t = window_end + exp_ns(rng, off_ns);
+                            window_end = t + exp_ns(rng, on_ns);
+                        }
+                        t += exp_ns(rng, mean_ns);
+                        window_end = window_end.max(t);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Closed { .. } => vec![0; n],
+            ArrivalProcess::Replay { times_us } => {
+                if times_us.is_empty() {
+                    return vec![0; n];
+                }
+                let span_us = times_us.last().copied().unwrap_or(0) + 1;
+                (0..n)
+                    .map(|k| {
+                        let lap = (k / times_us.len()) as u64;
+                        (times_us[k % times_us.len()] + lap * span_us) * 1000
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Exponential sample with the given mean, truncated to whole ns.
+fn exp_ns(rng: &mut Pcg32, mean_ns: f64) -> u64 {
+    let u = rng.gen_f64(); // in [0, 1) => 1-u in (0, 1]
+    (-(1.0 - u).ln() * mean_ns) as u64
+}
+
+/// How big requests are.  All ranges are inclusive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SizeModel {
+    Fixed { prompt_len: usize, gen_len: usize },
+    Uniform {
+        prompt: (usize, usize),
+        gen: (usize, usize),
+    },
+    /// Lengths follow the load shape of a seeded routing trace: a
+    /// [`TraceGenerator::token_choice_zipf`] trace's per-expert loads
+    /// become a categorical distribution over the length range, so the
+    /// same skew that concentrates tokens on popular experts concentrates
+    /// requests on short lengths, with a heavy tail of long ones.
+    TraceSeeded {
+        n_experts: usize,
+        skew: f64,
+        prompt: (usize, usize),
+        gen: (usize, usize),
+    },
+}
+
+impl SizeModel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SizeModel::Fixed { .. } => "fixed",
+            SizeModel::Uniform { .. } => "uniform",
+            SizeModel::TraceSeeded { .. } => "trace",
+        }
+    }
+
+    /// Per-spec precomputation (the trace-derived categorical weights).
+    fn weights(&self, seed: u64) -> Vec<f64> {
+        match self {
+            SizeModel::TraceSeeded { n_experts, skew, .. } => {
+                let e = (*n_experts).max(1);
+                let mut gen = TraceGenerator::new(e, seed ^ TRACE_SALT);
+                let m = gen.token_choice_zipf(256, 2, *skew);
+                m.expert_loads()
+                    .into_iter()
+                    .map(|l| l as f64 + 1.0)
+                    .collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    fn sample(&self, rng: &mut Pcg32, weights: &[f64]) -> (usize, usize) {
+        match self {
+            SizeModel::Fixed { prompt_len, gen_len } => (*prompt_len, *gen_len),
+            SizeModel::Uniform { prompt, gen } => {
+                (range_sample(rng, *prompt), range_sample(rng, *gen))
+            }
+            SizeModel::TraceSeeded { prompt, gen, .. } => {
+                let jp = categorical(rng, weights);
+                let jg = categorical(rng, weights);
+                (
+                    map_to_range(jp, weights.len(), *prompt),
+                    map_to_range(jg, weights.len(), *gen),
+                )
+            }
+        }
+    }
+}
+
+fn range_sample(rng: &mut Pcg32, (lo, hi): (usize, usize)) -> usize {
+    let (lo, hi) = (lo.min(hi), lo.max(hi));
+    lo + rng.gen_range(hi - lo + 1)
+}
+
+fn categorical(rng: &mut Pcg32, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.gen_f64() * total;
+    for (j, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return j;
+        }
+    }
+    weights.len().saturating_sub(1)
+}
+
+/// Map category `j` of `n` linearly onto an inclusive range (category 0 —
+/// the most loaded expert under zipf skew — maps to the range's low end).
+fn map_to_range(j: usize, n: usize, (lo, hi): (usize, usize)) -> usize {
+    let (lo, hi) = (lo.min(hi), lo.max(hi));
+    if n <= 1 {
+        return lo;
+    }
+    lo + (j * (hi - lo)) / (n - 1)
+}
+
+/// One concrete request of a materialized workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// deadline budget from submit, for deadline-aware admission
+    pub deadline_us: u64,
+    /// arrival offset from experiment start (0 for closed-loop specs)
+    pub arrival_ns: u64,
+}
+
+/// A complete seeded load experiment: who arrives when, how big, and what
+/// the SLO target is.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub requests: usize,
+    pub arrival: ArrivalProcess,
+    pub sizes: SizeModel,
+    /// end-to-end latency target for SLO-attainment accounting (ms)
+    pub slo_e2e_ms: f64,
+    /// per-token slack added to each request's deadline budget
+    /// (`deadline_us = slo_e2e_ms·1000 + gen_len · this`)
+    pub deadline_slack_us_per_token: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            seed: 2026,
+            requests: 64,
+            arrival: ArrivalProcess::Poisson { rate_rps: 64.0 },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 24),
+                gen: (1, 12),
+            },
+            slo_e2e_ms: 250.0,
+            deadline_slack_us_per_token: 500,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Expand into concrete requests — deterministic in `seed`, and
+    /// independent of whichever admission policy or backend later serves
+    /// them.
+    pub fn materialize(&self) -> Vec<RequestSpec> {
+        let mut arr_rng = Pcg32::new(self.seed ^ ARRIVAL_SALT);
+        let mut size_rng = Pcg32::new(self.seed ^ SIZE_SALT);
+        let times = self.arrival.times_ns(self.requests, &mut arr_rng);
+        let weights = self.sizes.weights(self.seed);
+        let base_us = (self.slo_e2e_ms * 1000.0).max(0.0) as u64;
+        times
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_ns)| {
+                let (prompt_len, gen_len) =
+                    self.sizes.sample(&mut size_rng, &weights);
+                RequestSpec {
+                    id: i as u64,
+                    prompt_len,
+                    gen_len,
+                    deadline_us: base_us
+                        + gen_len as u64 * self.deadline_slack_us_per_token,
+                    arrival_ns,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_times_ascend_and_are_deterministic() {
+        let p = ArrivalProcess::Poisson { rate_rps: 500.0 };
+        let a = p.times_ns(200, &mut Pcg32::new(9));
+        let b = p.times_ns(200, &mut Pcg32::new(9));
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn bursty_clusters_arrivals() {
+        let p = ArrivalProcess::Bursty {
+            rate_rps: 2000.0,
+            mean_on_ms: 5.0,
+            mean_off_ms: 50.0,
+        };
+        let t = p.times_ns(400, &mut Pcg32::new(3));
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+        // effective rate must be well below the in-burst rate
+        let dur_s = *t.last().unwrap() as f64 / 1e9;
+        let eff = 400.0 / dur_s;
+        assert!(eff < 1200.0, "effective rate {eff} not bursty-limited");
+    }
+
+    #[test]
+    fn replay_wraps_monotonically() {
+        let p = ArrivalProcess::Replay { times_us: vec![0, 10, 25] };
+        let t = p.times_ns(7, &mut Pcg32::new(1));
+        assert_eq!(t.len(), 7);
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(t[0], 0);
+        assert_eq!(t[1], 10_000);
+        assert_eq!(t[3], 26_000); // second lap: 0 + span(26)µs
+    }
+
+    #[test]
+    fn materialize_is_seed_deterministic() {
+        let spec = WorkloadSpec::default();
+        assert_eq!(spec.materialize(), spec.materialize());
+        let other = WorkloadSpec { seed: 1, ..WorkloadSpec::default() };
+        assert_ne!(spec.materialize(), other.materialize());
+    }
+
+    #[test]
+    fn sizes_respect_ranges() {
+        let spec = WorkloadSpec {
+            requests: 300,
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 24),
+                gen: (1, 12),
+            },
+            ..WorkloadSpec::default()
+        };
+        for r in spec.materialize() {
+            assert!((4..=24).contains(&r.prompt_len), "{r:?}");
+            assert!((1..=12).contains(&r.gen_len), "{r:?}");
+            assert!(r.deadline_us >= 250_000);
+        }
+    }
+
+    #[test]
+    fn closed_loop_materializes_placeholder_arrivals() {
+        let spec = WorkloadSpec {
+            requests: 5,
+            arrival: ArrivalProcess::Closed { users: 2, think_ms: 1.0 },
+            ..WorkloadSpec::default()
+        };
+        assert!(spec.materialize().iter().all(|r| r.arrival_ns == 0));
+    }
+}

@@ -1,0 +1,225 @@
+//! Load driver: runs a [`WorkloadSpec`] against the real threaded
+//! [`Server`] and collects per-request [`Sample`]s.
+//!
+//! Two loop disciplines, chosen by the spec's arrival process:
+//!
+//! * **open loop** — submissions are paced by the precomputed arrival
+//!   timeline regardless of completions (the "users keep coming" regime
+//!   where queues actually build up);
+//! * **closed loop** — `users` concurrent sessions, each submitting its
+//!   next request `think_ms` after its previous reply (the saturation
+//!   regime; offered load adapts to service rate).
+//!
+//! Wall-clock runs are inherently non-repeatable, so their reports carry
+//! `"clock": "wall"`; the byte-identical variant is the virtual-time
+//! cluster in [`crate::workload::vsim`], which produces the same
+//! [`LoadOutcome`] shape from a deterministic discrete-event simulation.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Request, Response, Server};
+use crate::sched::PlannerStats;
+use crate::util::rng::Pcg32;
+use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
+
+/// Vocabulary cap for generated prompt tokens (safely below every
+/// artifact set's vocab).
+const PROMPT_VOCAB: usize = 512;
+const PROMPT_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One request's terminal measurement, backend-agnostic: the real driver
+/// fills it from a [`Response`], the virtual cluster from its event clock.
+/// `None` timing fields mean "never happened" (e.g. a rejected request was
+/// never admitted), mirroring [`Response`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub id: u64,
+    /// submission order within the experiment (0-based)
+    pub submit_seq: u64,
+    pub ok: bool,
+    pub queue_us: Option<f64>,
+    pub ttft_us: Option<f64>,
+    pub e2e_us: f64,
+    pub tokens: u64,
+    pub admit_seq: Option<u64>,
+}
+
+/// Everything one load experiment produced: per-request samples plus the
+/// serving-side telemetry snapshot the report folds in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadOutcome {
+    pub samples: Vec<Sample>,
+    pub planner: PlannerStats,
+    pub slots: usize,
+    pub peak_waiting: usize,
+    pub batch_dispatches: u64,
+    pub batched_tokens: u64,
+    pub single_dispatches: u64,
+    pub duration_s: f64,
+    /// `"virtual"` (deterministic, byte-identical reports) or `"wall"`
+    pub clock: &'static str,
+}
+
+impl LoadOutcome {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_dispatches == 0 {
+            0.0
+        } else {
+            self.batched_tokens as f64 / self.batch_dispatches as f64
+        }
+    }
+
+    pub fn tokens_generated(&self) -> u64 {
+        self.samples.iter().map(|s| s.tokens).sum()
+    }
+}
+
+/// Convert a terminal [`Response`] into a [`Sample`].
+pub fn sample_from_response(resp: &Response, submit_seq: u64) -> Sample {
+    Sample {
+        id: resp.id,
+        submit_seq,
+        ok: resp.is_ok(),
+        queue_us: resp.queue_us,
+        ttft_us: resp.ttft_us,
+        e2e_us: resp.latency_us,
+        tokens: resp.tokens().len() as u64,
+        admit_seq: resp.admit_seq,
+    }
+}
+
+/// Materialize one request's payload: seeded toy prompt + deadline budget.
+fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
+    let mut rng = Pcg32::new(spec.seed ^ r.id.wrapping_mul(PROMPT_SALT));
+    let prompt: Vec<i32> = (0..r.prompt_len)
+        .map(|_| rng.gen_range(PROMPT_VOCAB) as i32)
+        .collect();
+    Request::new(r.id, prompt, r.gen_len).with_deadline_us(r.deadline_us)
+}
+
+/// Run `spec` against a live server and collect every terminal reply.
+///
+/// The returned telemetry snapshot (`planner`, dispatch counters,
+/// `peak_waiting`) is the server's *lifetime* view — on a freshly spawned
+/// server it describes exactly this experiment.
+pub fn run_against_server(server: &Server, spec: &WorkloadSpec)
+    -> Result<LoadOutcome> {
+    let reqs = spec.materialize();
+    let t0 = Instant::now();
+    let samples = match spec.arrival {
+        ArrivalProcess::Closed { users, think_ms } => {
+            drive_closed(server, spec, &reqs, users.max(1), think_ms)?
+        }
+        _ => drive_open(server, spec, &reqs)?,
+    };
+    let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = server.stats()?;
+    Ok(LoadOutcome {
+        samples,
+        planner: stats.planner,
+        slots: stats.slots,
+        peak_waiting: stats.peak_waiting,
+        batch_dispatches: stats.batch_dispatches,
+        batched_tokens: stats.batched_tokens,
+        single_dispatches: stats.single_dispatches,
+        duration_s,
+        clock: "wall",
+    })
+}
+
+/// Open loop: pace submissions by the arrival timeline, then drain.
+fn drive_open(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec])
+    -> Result<Vec<Sample>> {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for (submit_seq, r) in reqs.iter().enumerate() {
+        let target = Duration::from_nanos(r.arrival_ns);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let rx = server.submit(request_for(spec, r));
+        rxs.push((submit_seq as u64, r.id, rx));
+    }
+    let mut samples = Vec::with_capacity(rxs.len());
+    for (submit_seq, id, rx) in rxs {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow!("request {id}: reply channel dropped"))?;
+        samples.push(sample_from_response(&resp, submit_seq));
+    }
+    Ok(samples)
+}
+
+/// One closed-loop user's request in flight.
+struct InFlight {
+    id: u64,
+    submit_seq: u64,
+    rx: mpsc::Receiver<Response>,
+}
+
+/// Closed loop: `users` sessions, each resubmitting `think_ms` after its
+/// previous reply.  Polls with `try_recv` so every user's completion is
+/// reacted to promptly (blocking on one user would delay the others'
+/// resubmissions and distort the loop).
+fn drive_closed(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec],
+                users: usize, think_ms: f64) -> Result<Vec<Sample>> {
+    let think = Duration::from_nanos((think_ms.max(0.0) * 1e6) as u64);
+    let mut outstanding: Vec<Option<InFlight>> =
+        (0..users).map(|_| None).collect();
+    let mut ready_at: Vec<Instant> = vec![Instant::now(); users];
+    let mut next = 0usize;
+    let mut submit_seq = 0u64;
+    let mut samples = Vec::with_capacity(reqs.len());
+    while samples.len() < reqs.len() {
+        let mut progressed = false;
+        for u in 0..users {
+            if outstanding[u].is_none()
+                && next < reqs.len()
+                && Instant::now() >= ready_at[u]
+            {
+                let r = &reqs[next];
+                let rx = server.submit(request_for(spec, r));
+                outstanding[u] =
+                    Some(InFlight { id: r.id, submit_seq, rx });
+                submit_seq += 1;
+                next += 1;
+                progressed = true;
+            }
+            let finished = match outstanding[u].as_ref() {
+                Some(inflight) => match inflight.rx.try_recv() {
+                    Ok(resp) => Some(Some(resp)),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => Some(None),
+                },
+                None => None,
+            };
+            if let Some(resp) = finished {
+                let inflight = outstanding[u].take().unwrap();
+                match resp {
+                    Some(resp) => {
+                        samples.push(sample_from_response(
+                            &resp,
+                            inflight.submit_seq,
+                        ));
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "request {}: reply channel dropped",
+                            inflight.id
+                        ));
+                    }
+                }
+                ready_at[u] = Instant::now() + think;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    Ok(samples)
+}

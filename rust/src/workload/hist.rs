@@ -1,0 +1,223 @@
+//! Mergeable log-bucketed latency histogram.
+//!
+//! The loadtest driver records tens of thousands of per-request timings;
+//! keeping them all to sort at the end would make merged / sharded
+//! experiments awkward, so the histogram stores counts in geometric
+//! buckets instead: bucket `i` covers `[2^(i/8), 2^((i+1)/8))`
+//! microseconds (8 buckets per octave).  Any quantile it reports is the
+//! geometric midpoint of the bucket holding that order statistic, which is
+//! within `2^(1/16) - 1` (≈ 4.4%) of the exact sample — the bound
+//! `rust/tests/props_workload.rs` pins, together with quantile
+//! monotonicity and merge == concat-then-build.
+//!
+//! Buckets live in a `BTreeMap` keyed by bucket index, so iteration is in
+//! value order and two histograms merge by adding counts — merging is
+//! exact, not approximate-on-approximate.
+
+use std::collections::BTreeMap;
+
+/// Buckets per power of two.  8 → worst-case relative quantile error
+/// `2^(1/16) - 1 ≈ 4.4%`, ~600 live buckets for values spanning ns..hours.
+const BUCKETS_PER_OCTAVE: f64 = 8.0;
+
+/// Log-bucketed histogram of non-negative latencies (microseconds by
+/// convention — the unit the serving stack reports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: BTreeMap<i32, u64>,
+    zeros: u64,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: BTreeMap::new(),
+            zeros: 0,
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Record one value.  Non-finite or negative values are rejected (they
+    /// indicate a driver bug, not a latency) — debug builds assert.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            debug_assert!(false, "latency must be finite and >= 0, got {v}");
+            return;
+        }
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v == 0.0 {
+            self.zeros += 1;
+        } else {
+            let idx = (v.log2() * BUCKETS_PER_OCTAVE).floor() as i32;
+            *self.counts.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max
+    }
+
+    /// The q-quantile (`0 < q <= 1`) as the representative of the bucket
+    /// holding order statistic `clamp(ceil(q·n), 1, n)` — the same rank
+    /// rule as `sorted[ceil(q·n) - 1]` on the raw samples, so the reported
+    /// value sits in the same bucket as the exact one and inherits the
+    /// [`Self::rel_error_bound`] guarantee.  Returns 0 on an empty
+    /// histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = self.zeros;
+        if cum >= rank {
+            return 0.0;
+        }
+        for (&idx, &c) in &self.counts {
+            cum += c;
+            if cum >= rank {
+                return bucket_rep(idx);
+            }
+        }
+        self.max
+    }
+
+    /// Add `other`'s counts into `self`.  Exact on the bucket level:
+    /// merging two histograms gives the same buckets (hence the same
+    /// quantiles) as building one histogram over the concatenated samples.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (&idx, &c) in &other.counts {
+            *self.counts.entry(idx).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Worst-case relative error of [`Self::quantile`] against the exact
+    /// order statistic (for positive samples).
+    pub fn rel_error_bound() -> f64 {
+        2f64.powf(0.5 / BUCKETS_PER_OCTAVE) - 1.0
+    }
+}
+
+/// Geometric midpoint of bucket `idx`: `2^((idx + 0.5) / 8)`.
+fn bucket_rep(idx: i32) -> f64 {
+    2f64.powf((idx as f64 + 0.5) / BUCKETS_PER_OCTAVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.min_us(), 0.0);
+        assert_eq!(h.max_us(), 0.0);
+    }
+
+    #[test]
+    fn single_value_within_bound() {
+        let mut h = LatencyHistogram::new();
+        h.record(1234.5);
+        let p50 = h.quantile(0.5);
+        let err = (p50 - 1234.5).abs() / 1234.5;
+        assert!(err <= LatencyHistogram::rel_error_bound() + 1e-12,
+                "p50 {p50} err {err}");
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn quantiles_track_order_statistics() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=1000 {
+            h.record(v as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.05, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.05, "p99 {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn zeros_are_their_own_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(0.0);
+        h.record(8.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert!(h.quantile(1.0) > 0.0);
+        assert_eq!(h.min_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let xs = [3.0, 17.5, 0.0, 250.0];
+        let ys = [9.9, 1.0e6, 42.0];
+        let mut h1 = LatencyHistogram::new();
+        let mut h2 = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for &v in &xs {
+            h1.record(v);
+            all.record(v);
+        }
+        for &v in &ys {
+            h2.record(v);
+            all.record(v);
+        }
+        h1.merge(&h2);
+        assert_eq!(h1.count(), all.count());
+        assert_eq!(h1.min_us(), all.min_us());
+        assert_eq!(h1.max_us(), all.max_us());
+        for i in 1..=20 {
+            let q = i as f64 / 20.0;
+            assert_eq!(h1.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+}

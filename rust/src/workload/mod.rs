@@ -1,0 +1,40 @@
+//! Workload subsystem: traffic generation, SLO telemetry, and
+//! policy-driven admission for the batched serving engine.
+//!
+//! Everything upstream of this module evaluates the stack as an
+//! *algorithm* (equivalence suites, figure benches); this module
+//! evaluates it as a *service*:
+//!
+//! * [`arrival`] — deterministic arrival processes (Poisson, bursty
+//!   on/off, closed-loop, replay) and request-size models, materialized
+//!   from one seed into policy-independent [`RequestSpec`]s;
+//! * [`policy`] — pluggable slot-admission policies (FIFO / SJF / EDF
+//!   with starvation guards) shared by the real server and the virtual
+//!   cluster;
+//! * [`driver`] — open-/closed-loop load driver against the real
+//!   [`crate::coordinator::Server`], collecting per-request [`Sample`]s;
+//! * [`vsim`] — a virtual-time discrete-event mirror of the router loop,
+//!   priced by the real [`crate::sched::BatchPlanner`] contention model —
+//!   the backend whose reports are byte-identical per seed;
+//! * [`hist`] / [`report`] — mergeable log-bucketed latency histograms
+//!   folded into the `moepim.slo_report.v1` JSON document
+//!   (p50/p95/p99 queue/TTFT/e2e, SLO attainment, tokens/sec, planner
+//!   contention snapshot).
+//!
+//! Entry points: `moepim loadtest` (CLI), `cargo bench --bench loadgen`,
+//! `examples/loadtest_policies.rs` (E8), and the
+//! `rust/tests/{props_workload,loadtest_virtual}.rs` suites.
+
+pub mod arrival;
+pub mod driver;
+pub mod hist;
+pub mod policy;
+pub mod report;
+pub mod vsim;
+
+pub use arrival::{ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec};
+pub use driver::{run_against_server, LoadOutcome, Sample};
+pub use hist::LatencyHistogram;
+pub use policy::{AdmissionPolicy, QueuedMeta};
+pub use report::{summarize, SloSummary};
+pub use vsim::{run_virtual, VirtualConfig};

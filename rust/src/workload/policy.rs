@@ -1,0 +1,188 @@
+//! Pluggable slot-admission policies for the serving loop.
+//!
+//! The router keeps its waiting queue in arrival order and, whenever a
+//! serving slot frees up, asks the policy which waiting request to prefill
+//! next.  The policy sees only per-request metadata ([`QueuedMeta`]) — it
+//! cannot touch engine state — so the same policy drives both the real
+//! [`crate::coordinator::Server`] and the virtual-time cluster in
+//! [`crate::workload::vsim`], and two policies can be compared under
+//! byte-identical seeded traffic.
+//!
+//! Non-FIFO policies carry a starvation guard: once the *oldest* waiting
+//! request has been passed over `starvation_limit` times it is admitted
+//! unconditionally.  The guard inspects the queue head only, so it is a
+//! progress guarantee, not a per-request constant bound: the head drains
+//! within `starvation_limit` further admissions, then the next-oldest
+//! becomes the head, and so on — a request at queue position `p` can
+//! therefore wait up to ~`p · starvation_limit` admissions in the worst
+//! case, but never indefinitely ("SJF must not starve", pinned in
+//! `rust/tests/loadtest_virtual.rs`).
+
+/// What the policy knows about one waiting request.  `queue[0]` is the
+/// oldest (arrival order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueuedMeta {
+    /// requested generation length (the "job size" SJF orders by)
+    pub gen_len: usize,
+    /// deadline budget from submit, if the request carries one
+    pub deadline_us: Option<u64>,
+    /// how long the request has been waiting already
+    pub waited_us: u64,
+    /// admissions that picked a younger request over this one
+    pub passed_over: u32,
+}
+
+/// Which waiting request gets the next free serving slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Arrival order (the seed behaviour; `admit_seq` monotone in submit
+    /// order).
+    Fifo,
+    /// Shortest job (smallest `gen_len`) first; ties by arrival order.
+    Sjf { starvation_limit: u32 },
+    /// Earliest deadline first: smallest `deadline_us - waited_us` slack;
+    /// requests without a deadline sort last.  Ties by arrival order.
+    Deadline { starvation_limit: u32 },
+}
+
+impl AdmissionPolicy {
+    pub const DEFAULT_STARVATION_LIMIT: u32 = 8;
+
+    pub fn fifo() -> Self {
+        AdmissionPolicy::Fifo
+    }
+
+    pub fn sjf() -> Self {
+        AdmissionPolicy::Sjf {
+            starvation_limit: Self::DEFAULT_STARVATION_LIMIT,
+        }
+    }
+
+    pub fn deadline() -> Self {
+        AdmissionPolicy::Deadline {
+            starvation_limit: Self::DEFAULT_STARVATION_LIMIT,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::Sjf { .. } => "sjf",
+            AdmissionPolicy::Deadline { .. } => "edf",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` on unknown input.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" | "FIFO" => Some(Self::fifo()),
+            "sjf" | "SJF" => Some(Self::sjf()),
+            "edf" | "EDF" | "deadline" => Some(Self::deadline()),
+            _ => None,
+        }
+    }
+
+    /// Index of the request to admit next.  `queue` must be non-empty and
+    /// in arrival order (index 0 oldest).  Deterministic: ties always go
+    /// to the lower index.
+    pub fn select(&self, queue: &[QueuedMeta]) -> usize {
+        debug_assert!(!queue.is_empty(), "select on an empty queue");
+        if queue.is_empty() {
+            return 0;
+        }
+        match self {
+            AdmissionPolicy::Fifo => 0,
+            AdmissionPolicy::Sjf { starvation_limit } => {
+                if queue[0].passed_over >= *starvation_limit {
+                    return 0;
+                }
+                let mut best = 0usize;
+                for (i, m) in queue.iter().enumerate().skip(1) {
+                    if m.gen_len < queue[best].gen_len {
+                        best = i;
+                    }
+                }
+                best
+            }
+            AdmissionPolicy::Deadline { starvation_limit } => {
+                if queue[0].passed_over >= *starvation_limit {
+                    return 0;
+                }
+                let mut best = 0usize;
+                for (i, m) in queue.iter().enumerate().skip(1) {
+                    if slack_us(m) < slack_us(&queue[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Remaining slack before the deadline (negative when already blown);
+/// deadline-less requests report `i64::MAX` and sort last.
+fn slack_us(m: &QueuedMeta) -> i64 {
+    match m.deadline_us {
+        Some(d) => d as i64 - m.waited_us as i64,
+        None => i64::MAX,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(gen_len: usize, deadline_us: Option<u64>, waited_us: u64,
+            passed_over: u32) -> QueuedMeta {
+        QueuedMeta { gen_len, deadline_us, waited_us, passed_over }
+    }
+
+    #[test]
+    fn fifo_always_takes_the_head() {
+        let q = vec![meta(9, None, 10, 0), meta(1, Some(5), 0, 0)];
+        assert_eq!(AdmissionPolicy::fifo().select(&q), 0);
+    }
+
+    #[test]
+    fn sjf_picks_shortest_with_stable_ties() {
+        let q = vec![
+            meta(5, None, 30, 0),
+            meta(2, None, 20, 0),
+            meta(2, None, 10, 0),
+            meta(8, None, 0, 0),
+        ];
+        assert_eq!(AdmissionPolicy::sjf().select(&q), 1);
+    }
+
+    #[test]
+    fn sjf_starvation_guard_boosts_the_head() {
+        let limit = AdmissionPolicy::DEFAULT_STARVATION_LIMIT;
+        let q = vec![meta(50, None, 900, limit), meta(1, None, 5, 0)];
+        assert_eq!(AdmissionPolicy::sjf().select(&q), 0);
+        let fresh = vec![meta(50, None, 900, limit - 1), meta(1, None, 5, 0)];
+        assert_eq!(AdmissionPolicy::sjf().select(&fresh), 1);
+    }
+
+    #[test]
+    fn deadline_picks_tightest_slack() {
+        let q = vec![
+            meta(4, Some(10_000), 2_000, 0), // slack 8000
+            meta(4, Some(5_000), 1_000, 0),  // slack 4000
+            meta(4, None, 9_000, 0),         // no deadline: last
+        ];
+        assert_eq!(AdmissionPolicy::deadline().select(&q), 1);
+    }
+
+    #[test]
+    fn parse_round_trips_labels() {
+        for p in [
+            AdmissionPolicy::fifo(),
+            AdmissionPolicy::sjf(),
+            AdmissionPolicy::deadline(),
+        ] {
+            assert_eq!(AdmissionPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("lifo"), None);
+    }
+}

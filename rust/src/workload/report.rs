@@ -1,0 +1,247 @@
+//! SLO report assembly: fold a [`LoadOutcome`] into latency histograms
+//! and serialize the `moepim.slo_report.v1` JSON schema via [`Json`]
+//! (ordered keys — deterministic output, so virtual-clock reports are
+//! byte-identical across runs of the same seed).
+//!
+//! Schema (see DESIGN.md §Workload for the field-by-field table):
+//!
+//! ```text
+//! { schema, workload{seed, requests, process, sizes, policy, clock, slots},
+//!   latency_us{queue|ttft|e2e → {count, mean, min, max, p50, p95, p99}},
+//!   slo{target_e2e_ms, attainment},
+//!   throughput{duration_s, tokens_per_s, requests_per_s},
+//!   counts{completed, errored, tokens},
+//!   server{batch_dispatches, single_dispatches, mean_batch_occupancy,
+//!          peak_waiting},
+//!   planner{steps, work, cycles, transfers, contention_ratio} }
+//! ```
+
+use crate::util::json::Json;
+use crate::workload::arrival::WorkloadSpec;
+use crate::workload::driver::LoadOutcome;
+use crate::workload::hist::LatencyHistogram;
+use crate::workload::policy::AdmissionPolicy;
+
+/// Aggregated view of one experiment's samples.  Histograms cover
+/// successful requests (errored ones count against SLO attainment and in
+/// `errored`, but their timings aren't latencies of served traffic).
+#[derive(Debug, Clone)]
+pub struct SloSummary {
+    pub queue: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+    pub e2e: LatencyHistogram,
+    pub completed: u64,
+    pub errored: u64,
+    pub tokens: u64,
+    /// fraction of *all* terminal requests that completed within the SLO
+    /// target (errors are misses)
+    pub attainment: f64,
+    pub tokens_per_s: f64,
+    pub requests_per_s: f64,
+}
+
+pub fn summarize(spec: &WorkloadSpec, out: &LoadOutcome) -> SloSummary {
+    let slo_us = spec.slo_e2e_ms * 1000.0;
+    let mut queue = LatencyHistogram::new();
+    let mut ttft = LatencyHistogram::new();
+    let mut e2e = LatencyHistogram::new();
+    let mut completed = 0u64;
+    let mut errored = 0u64;
+    let mut tokens = 0u64;
+    let mut met = 0u64;
+    for s in &out.samples {
+        if !s.ok {
+            errored += 1;
+            continue;
+        }
+        completed += 1;
+        tokens += s.tokens;
+        if let Some(q) = s.queue_us {
+            queue.record(q);
+        }
+        if let Some(t) = s.ttft_us {
+            ttft.record(t);
+        }
+        e2e.record(s.e2e_us);
+        if s.e2e_us <= slo_us {
+            met += 1;
+        }
+    }
+    let n = out.samples.len();
+    let attainment =
+        if n == 0 { 1.0 } else { met as f64 / n as f64 };
+    let dur = out.duration_s.max(1e-9);
+    SloSummary {
+        queue,
+        ttft,
+        e2e,
+        completed,
+        errored,
+        tokens,
+        attainment,
+        tokens_per_s: tokens as f64 / dur,
+        requests_per_s: n as f64 / dur,
+    }
+}
+
+/// Build the full `moepim.slo_report.v1` document.
+pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
+             out: &LoadOutcome) -> Json {
+    let s = summarize(spec, out);
+    Json::obj(vec![
+        ("schema", Json::str("moepim.slo_report.v1")),
+        (
+            "workload",
+            Json::obj(vec![
+                // string, not number: a u64 seed above 2^53 would lose
+                // precision through the f64-backed Json::Num
+                ("seed", Json::str(&spec.seed.to_string())),
+                ("requests", Json::num(spec.requests as f64)),
+                ("process", Json::str(spec.arrival.label())),
+                ("sizes", Json::str(spec.sizes.label())),
+                ("policy", Json::str(policy.label())),
+                ("clock", Json::str(out.clock)),
+                ("slots", Json::num(out.slots as f64)),
+            ]),
+        ),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("queue", hist_json(&s.queue)),
+                ("ttft", hist_json(&s.ttft)),
+                ("e2e", hist_json(&s.e2e)),
+            ]),
+        ),
+        (
+            "slo",
+            Json::obj(vec![
+                ("target_e2e_ms", Json::num(spec.slo_e2e_ms)),
+                ("attainment", Json::num(round6(s.attainment))),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("duration_s", Json::num(round6(out.duration_s))),
+                ("tokens_per_s", Json::num(round3(s.tokens_per_s))),
+                ("requests_per_s", Json::num(round3(s.requests_per_s))),
+            ]),
+        ),
+        (
+            "counts",
+            Json::obj(vec![
+                ("completed", Json::num(s.completed as f64)),
+                ("errored", Json::num(s.errored as f64)),
+                ("tokens", Json::num(s.tokens as f64)),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![
+                ("batch_dispatches", Json::num(out.batch_dispatches as f64)),
+                ("single_dispatches",
+                 Json::num(out.single_dispatches as f64)),
+                ("mean_batch_occupancy",
+                 Json::num(round3(out.mean_batch_occupancy()))),
+                ("peak_waiting", Json::num(out.peak_waiting as f64)),
+            ]),
+        ),
+        (
+            "planner",
+            Json::obj(vec![
+                ("steps", Json::num(out.planner.steps as f64)),
+                ("work", Json::num(out.planner.work as f64)),
+                ("cycles", Json::num(out.planner.cycles as f64)),
+                ("transfers", Json::num(out.planner.transfers as f64)),
+                ("contention_ratio",
+                 Json::num(round6(out.planner.contention_ratio()))),
+            ]),
+        ),
+    ])
+}
+
+fn hist_json(h: &LatencyHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("mean", Json::num(round3(h.mean_us()))),
+        ("min", Json::num(round3(h.min_us()))),
+        ("max", Json::num(round3(h.max_us()))),
+        ("p50", Json::num(round3(h.quantile(0.5)))),
+        ("p95", Json::num(round3(h.quantile(0.95)))),
+        ("p99", Json::num(round3(h.quantile(0.99)))),
+    ])
+}
+
+fn round3(v: f64) -> f64 {
+    if !v.is_finite() {
+        return 0.0;
+    }
+    (v * 1e3).round() / 1e3
+}
+
+fn round6(v: f64) -> f64 {
+    if !v.is_finite() {
+        return 0.0;
+    }
+    (v * 1e6).round() / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::workload::vsim::{run_virtual, VirtualConfig};
+
+    #[test]
+    fn report_round_trips_and_has_every_headline_field() {
+        let spec = WorkloadSpec { requests: 16, ..WorkloadSpec::default() };
+        let out = run_virtual(&VirtualConfig::default(), &spec,
+                              AdmissionPolicy::sjf());
+        let report = build(&spec, AdmissionPolicy::sjf(), &out);
+        let text = report.to_string_pretty();
+        let parsed = json::parse(&text).expect("report parses");
+        for path in [
+            vec!["workload", "policy"],
+            vec!["latency_us", "queue", "p50"],
+            vec!["latency_us", "ttft", "p95"],
+            vec!["latency_us", "e2e", "p99"],
+            vec!["slo", "attainment"],
+            vec!["throughput", "tokens_per_s"],
+            vec!["planner", "contention_ratio"],
+            vec!["server", "mean_batch_occupancy"],
+        ] {
+            assert!(parsed.path(&path).is_some(), "missing {path:?}");
+        }
+        assert_eq!(
+            parsed.path(&["workload", "clock"]).unwrap().as_str(),
+            Some("virtual")
+        );
+        // the seed is a string so full-width u64 seeds survive round-trips
+        assert_eq!(
+            parsed.path(&["workload", "seed"]).unwrap().as_str(),
+            Some("2026")
+        );
+        assert_eq!(
+            parsed.path(&["counts", "completed"]).unwrap().as_usize(),
+            Some(16)
+        );
+    }
+
+    #[test]
+    fn attainment_counts_errors_as_misses() {
+        let spec = WorkloadSpec {
+            requests: 8,
+            sizes: crate::workload::arrival::SizeModel::Fixed {
+                prompt_len: 500,
+                gen_len: 4,
+            },
+            ..WorkloadSpec::default()
+        };
+        let out = run_virtual(&VirtualConfig::default(), &spec,
+                              AdmissionPolicy::fifo());
+        let s = summarize(&spec, &out);
+        assert_eq!(s.errored, 8);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.attainment, 0.0);
+    }
+}

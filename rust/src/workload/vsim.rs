@@ -1,0 +1,457 @@
+//! Virtual-time serving cluster: a deterministic discrete-event mirror of
+//! the router loop in `coordinator/server.rs`, for load experiments whose
+//! reports must be byte-identical across runs.
+//!
+//! Wall-clock loadtests measure the machine as much as the policy; this
+//! module replaces the PJRT dispatches with a deterministic cost model so
+//! `moepim loadtest` replays exactly from a seed:
+//!
+//! * slot admission, the completion sweep, batched-vs-single dispatch and
+//!   slot recycling follow the real router's cycle structure;
+//! * each decode cycle's cost comes from the *real* [`BatchPlanner`]: the
+//!   live slots' expert sets (sampled per-request from a seeded zipf
+//!   router, mirroring `moe::trace`) are laid out on the grouped
+//!   peripherals and the makespan prices the cycle — so admission policies
+//!   are compared under the paper's contention model, not a constant;
+//! * prefill costs scale with prompt length and serialise on the engine,
+//!   like `BatchEngine::admit` does.
+//!
+//! The event clock is integer nanoseconds; every timing in the resulting
+//! [`Sample`]s derives from it, which is what makes the serialized
+//! `SloReport` reproducible byte-for-byte.
+
+use std::collections::VecDeque;
+
+use crate::config::SchedulePolicy;
+use crate::sched::BatchPlanner;
+use crate::util::rng::Pcg32;
+use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
+use crate::workload::driver::{LoadOutcome, Sample};
+use crate::workload::policy::{AdmissionPolicy, QueuedMeta};
+
+/// Salt for the per-request expert-routing stream — deliberately distinct
+/// from `driver::PROMPT_SALT` so routing and prompt-token draws of the
+/// same request id are uncorrelated.
+const ROUTE_SALT: u64 = 0x6A09_E667_F3BC_C909;
+
+/// Cost model + modeled-chip shape for the virtual cluster.  Defaults
+/// mirror the paper configuration the serving stack ships (16 experts,
+/// uniform g=2 grouping, Algorithm 1 rescheduling, 4 serving slots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualConfig {
+    pub slots: usize,
+    pub n_experts: usize,
+    pub n_layers: usize,
+    /// experts selected per token per layer (top-k routing width)
+    pub experts_per_token: usize,
+    /// zipf skew of the simulated router's expert popularity
+    pub route_skew: f64,
+    pub group_size: usize,
+    pub schedule: SchedulePolicy,
+    /// ns per planner slot-cycle (peripheral-shared expert execution)
+    pub cycle_ns: u64,
+    /// fixed per-decode-cycle cost (embed + sample + dispatch framework)
+    pub dispatch_overhead_ns: u64,
+    /// prefill cost per prompt token (serialises on the engine)
+    pub prefill_ns_per_token: u64,
+    pub max_seq: usize,
+}
+
+impl Default for VirtualConfig {
+    fn default() -> Self {
+        VirtualConfig {
+            slots: 4,
+            n_experts: 16,
+            n_layers: 1,
+            experts_per_token: 2,
+            route_skew: 1.2,
+            group_size: 2,
+            schedule: SchedulePolicy::Reschedule,
+            cycle_ns: 400,
+            dispatch_overhead_ns: 25_000,
+            prefill_ns_per_token: 4_000,
+            max_seq: 96,
+        }
+    }
+}
+
+/// One waiting request (arrival order preserved by the queue).
+struct VQueued {
+    idx: usize,
+    arrived_ns: u64,
+    passed_over: u32,
+}
+
+/// One live serving slot.
+struct VLive {
+    idx: usize,
+    arrived_ns: u64,
+    admitted_ns: u64,
+    admit_seq: u64,
+    /// generated tokens banked so far (prefill's sampled token included)
+    tokens: u64,
+    /// per-request router stream — seeded from (spec.seed, request id) so
+    /// a request's expert trajectory is independent of scheduling order
+    rng: Pcg32,
+}
+
+/// Closed-loop continuation: issue the next request `think` after a
+/// completion (no-op once the spec is exhausted, or for open loops).
+fn issue_next(upcoming: &mut VecDeque<(u64, usize)>, next_issue: &mut usize,
+              total: usize, at_ns: u64) {
+    if *next_issue < total {
+        upcoming.push_back((at_ns, *next_issue));
+        *next_issue += 1;
+    }
+}
+
+fn ns_to_us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Sample `k` distinct experts from a zipf-skewed popularity profile.
+fn sample_experts(rng: &mut Pcg32, e: usize, k: usize, skew: f64)
+    -> Vec<usize> {
+    let k = k.min(e);
+    let mut sel: Vec<usize> = Vec::with_capacity(k);
+    for _ in 0..64 {
+        if sel.len() == k {
+            break;
+        }
+        let j = rng.gen_zipf(e, skew);
+        if !sel.contains(&j) {
+            sel.push(j);
+        }
+    }
+    let mut fill = 0;
+    while sel.len() < k {
+        if !sel.contains(&fill) {
+            sel.push(fill);
+        }
+        fill += 1;
+    }
+    sel
+}
+
+/// Run `spec` under `policy` on the virtual cluster.  Deterministic: the
+/// same `(cfg, spec, policy)` always yields an identical [`LoadOutcome`].
+pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                   policy: AdmissionPolicy) -> LoadOutcome {
+    let reqs = spec.materialize();
+    let slots = cfg.slots.max(1);
+    let n_layers = cfg.n_layers.max(1);
+    let (closed, think_ns) = match spec.arrival {
+        ArrivalProcess::Closed { users, think_ms } => {
+            (users.max(1), (think_ms.max(0.0) * 1e6) as u64)
+        }
+        _ => (0, 0),
+    };
+
+    // Open loops precompute the full arrival timeline; closed loops start
+    // one request per user and chain the rest off completions.
+    let mut upcoming: VecDeque<(u64, usize)> = if closed > 0 {
+        (0..reqs.len().min(closed)).map(|i| (0u64, i)).collect()
+    } else {
+        reqs.iter().enumerate().map(|(i, r)| (r.arrival_ns, i)).collect()
+    };
+    let mut next_issue =
+        if closed > 0 { reqs.len().min(closed) } else { reqs.len() };
+
+    let mut planner =
+        BatchPlanner::new(cfg.n_experts.max(1), cfg.group_size.max(1),
+                          cfg.schedule);
+    let mut waiting: VecDeque<VQueued> = VecDeque::new();
+    let mut live: Vec<Option<VLive>> = (0..slots).map(|_| None).collect();
+    let mut samples: Vec<Sample> = Vec::with_capacity(reqs.len());
+    let mut now: u64 = 0;
+    let mut admit_seq: u64 = 0;
+    let mut peak_waiting = 0usize;
+    let mut batch_dispatches = 0u64;
+    let mut batched_tokens = 0u64;
+    let mut single_dispatches = 0u64;
+
+    loop {
+        // ---- 1. ingest arrivals due by now --------------------------------
+        while let Some(&(t, idx)) = upcoming.front() {
+            if t > now {
+                break;
+            }
+            upcoming.pop_front();
+            let r = &reqs[idx];
+            if r.gen_len == 0 {
+                // zero-length request: immediate terminal reply, no slot
+                // (mirrors the server's submit-path short-circuit)
+                samples.push(Sample {
+                    id: r.id,
+                    submit_seq: idx as u64,
+                    ok: true,
+                    queue_us: None,
+                    ttft_us: None,
+                    e2e_us: 0.0,
+                    tokens: 0,
+                    admit_seq: None,
+                });
+                if closed > 0 {
+                    issue_next(&mut upcoming, &mut next_issue, reqs.len(),
+                               now + think_ns);
+                }
+                continue;
+            }
+            waiting.push_back(VQueued { idx, arrived_ns: t, passed_over: 0 });
+            peak_waiting = peak_waiting.max(waiting.len());
+        }
+
+        // ---- 2. policy-driven slot admission ------------------------------
+        while !waiting.is_empty() {
+            let Some(slot) = live.iter().position(Option::is_none) else {
+                break;
+            };
+            let w = if matches!(policy, AdmissionPolicy::Fifo) {
+                waiting.pop_front().expect("waiting non-empty")
+            } else {
+                let metas: Vec<QueuedMeta> = waiting
+                    .iter()
+                    .map(|w| QueuedMeta {
+                        gen_len: reqs[w.idx].gen_len,
+                        deadline_us: Some(reqs[w.idx].deadline_us),
+                        waited_us: (now - w.arrived_ns) / 1000,
+                        passed_over: w.passed_over,
+                    })
+                    .collect();
+                let pick = policy.select(&metas);
+                let w =
+                    waiting.remove(pick).expect("selected index in range");
+                // mirror of the server rule: only entries the pick jumped
+                // over (indices < pick) count as passed over
+                for o in waiting.iter_mut().take(pick) {
+                    o.passed_over += 1;
+                }
+                w
+            };
+            let r = &reqs[w.idx];
+            if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
+                // admission failure: terminal error reply, never admitted
+                samples.push(Sample {
+                    id: r.id,
+                    submit_seq: w.idx as u64,
+                    ok: false,
+                    queue_us: None,
+                    ttft_us: None,
+                    e2e_us: ns_to_us(now - w.arrived_ns),
+                    tokens: 0,
+                    admit_seq: None,
+                });
+                if closed > 0 {
+                    issue_next(&mut upcoming, &mut next_issue, reqs.len(),
+                               now + think_ns);
+                }
+                continue;
+            }
+            // prefill serialises on the engine and banks the first token
+            now += r.prompt_len as u64 * cfg.prefill_ns_per_token;
+            let l = VLive {
+                idx: w.idx,
+                arrived_ns: w.arrived_ns,
+                admitted_ns: now,
+                admit_seq,
+                tokens: 1,
+                rng: Pcg32::new(spec.seed ^ r.id.wrapping_mul(ROUTE_SALT)),
+            };
+            admit_seq += 1;
+            if l.tokens >= r.gen_len as u64
+                || r.prompt_len + 1 >= cfg.max_seq
+            {
+                // the prefill-sampled token already completed the request
+                samples.push(finish_sample(&reqs, &l, now));
+                if closed > 0 {
+                    issue_next(&mut upcoming, &mut next_issue, reqs.len(),
+                               now + think_ns);
+                }
+            } else {
+                live[slot] = Some(l);
+            }
+        }
+
+        // ---- 3. idle fast-forward / termination ---------------------------
+        let active: Vec<usize> =
+            (0..slots).filter(|&s| live[s].is_some()).collect();
+        if active.is_empty() {
+            match upcoming.front() {
+                Some(&(t, _)) => {
+                    now = now.max(t);
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // ---- 4. one decode cycle, priced as L planned layer-steps ---------
+        let mut layer_sets: Vec<Vec<Vec<usize>>> =
+            Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let sets: Vec<Vec<usize>> = active
+                .iter()
+                .map(|&s| {
+                    let l = live[s].as_mut().unwrap();
+                    sample_experts(
+                        &mut l.rng,
+                        cfg.n_experts.max(1),
+                        cfg.experts_per_token.max(1),
+                        cfg.route_skew,
+                    )
+                })
+                .collect();
+            layer_sets.push(sets);
+        }
+        let plans = planner.plan_layers(&layer_sets);
+        let cycles: u64 = plans.iter().map(|p| p.cycles as u64).sum();
+        now += cfg.dispatch_overhead_ns + cycles * cfg.cycle_ns;
+        if active.len() == 1 {
+            single_dispatches += 1;
+        } else {
+            batch_dispatches += 1;
+            batched_tokens += active.len() as u64;
+        }
+
+        // ---- 5. bank tokens, retire finished slots ------------------------
+        for &s in &active {
+            let done = {
+                let l = live[s].as_mut().unwrap();
+                l.tokens += 1;
+                let r = &reqs[l.idx];
+                l.tokens >= r.gen_len as u64
+                    || r.prompt_len as u64 + l.tokens >= cfg.max_seq as u64
+            };
+            if done {
+                let l = live[s].take().unwrap();
+                samples.push(finish_sample(&reqs, &l, now));
+                if closed > 0 {
+                    issue_next(&mut upcoming, &mut next_issue, reqs.len(),
+                               now + think_ns);
+                }
+            }
+        }
+    }
+
+    LoadOutcome {
+        samples,
+        planner: planner.stats(),
+        slots,
+        peak_waiting,
+        batch_dispatches,
+        batched_tokens,
+        single_dispatches,
+        duration_s: now as f64 / 1e9,
+        clock: "virtual",
+    }
+}
+
+fn finish_sample(reqs: &[RequestSpec], l: &VLive, now: u64) -> Sample {
+    let r = &reqs[l.idx];
+    let admit_wait = ns_to_us(l.admitted_ns - l.arrived_ns);
+    Sample {
+        id: r.id,
+        submit_seq: l.idx as u64,
+        ok: true,
+        queue_us: Some(admit_wait),
+        ttft_us: Some(admit_wait),
+        e2e_us: ns_to_us(now - l.arrived_ns),
+        tokens: l.tokens,
+        admit_seq: Some(l.admit_seq),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::SizeModel;
+
+    fn base_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            seed: 77,
+            requests: 24,
+            arrival: ArrivalProcess::Poisson { rate_rps: 2_000.0 },
+            sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 200,
+        }
+    }
+
+    #[test]
+    fn repeated_runs_are_identical() {
+        let cfg = VirtualConfig::default();
+        let a = run_virtual(&cfg, &base_spec(), AdmissionPolicy::sjf());
+        let b = run_virtual(&cfg, &base_spec(), AdmissionPolicy::sjf());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_request_terminates_exactly_once() {
+        let cfg = VirtualConfig::default();
+        for policy in [
+            AdmissionPolicy::fifo(),
+            AdmissionPolicy::sjf(),
+            AdmissionPolicy::deadline(),
+        ] {
+            let out = run_virtual(&cfg, &base_spec(), policy);
+            assert_eq!(out.samples.len(), 24, "{}", policy.label());
+            let mut ids: Vec<u64> =
+                out.samples.iter().map(|s| s.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..24).collect::<Vec<u64>>());
+            assert!(out.samples.iter().all(|s| s.ok));
+            assert!(out.duration_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn fifo_admits_in_submit_order() {
+        let cfg = VirtualConfig::default();
+        let out = run_virtual(&cfg, &base_spec(), AdmissionPolicy::fifo());
+        let mut by_submit = out.samples.clone();
+        by_submit.sort_by_key(|s| s.submit_seq);
+        let seqs: Vec<u64> =
+            by_submit.iter().filter_map(|s| s.admit_seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    }
+
+    #[test]
+    fn closed_loop_terminates_with_zero_think() {
+        let cfg = VirtualConfig { slots: 2, ..VirtualConfig::default() };
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Closed { users: 5, think_ms: 0.0 },
+            ..base_spec()
+        };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::sjf());
+        assert_eq!(out.samples.len(), 24);
+        assert!(out.samples.iter().all(|s| s.ok));
+    }
+
+    #[test]
+    fn zero_gen_requests_never_occupy_a_slot() {
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec {
+            sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 0 },
+            ..base_spec()
+        };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        assert_eq!(out.samples.len(), 24);
+        assert!(out.samples.iter().all(|s| {
+            s.ok && s.tokens == 0 && s.admit_seq.is_none()
+        }));
+        assert_eq!(out.batch_dispatches + out.single_dispatches, 0);
+        assert_eq!(out.planner.steps, 0);
+    }
+
+    #[test]
+    fn oversized_prompts_error_terminally() {
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec {
+            sizes: SizeModel::Fixed { prompt_len: 500, gen_len: 4 },
+            ..base_spec()
+        };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        assert_eq!(out.samples.len(), 24);
+        assert!(out.samples.iter().all(|s| !s.ok && s.admit_seq.is_none()));
+    }
+}

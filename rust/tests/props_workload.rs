@@ -1,0 +1,245 @@
+//! Property tests for the workload subsystem: the latency histogram's
+//! quantile contract (monotonicity, merge == concat-then-build, bounded
+//! relative bucket error), arrival-generator determinism and mean-rate
+//! convergence, and admission-policy selection invariants.
+//!
+//! No artifacts needed — everything here is host-side math.
+
+use moepim::util::prop;
+use moepim::util::rng::Pcg32;
+use moepim::workload::{
+    AdmissionPolicy, ArrivalProcess, LatencyHistogram, QueuedMeta,
+};
+
+// ---------------------------------------------------------------------------
+// LatencyHistogram
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantiles_are_monotone_in_q() {
+    prop::check(200, |g| {
+        let n = g.size(1, 400);
+        let mut h = LatencyHistogram::new();
+        for _ in 0..n {
+            // heavy-tailed positive values spanning several octaves
+            h.record(g.normal().abs() * 1e4 + g.f64());
+        }
+        let mut prev = 0.0f64;
+        for k in 1..=50 {
+            let q = k as f64 / 50.0;
+            let v = h.quantile(q);
+            assert!(
+                v >= prev,
+                "quantile not monotone: q={q} gave {v} after {prev}"
+            );
+            prev = v;
+        }
+        assert!(h.quantile(1.0) <= h.max_us() * 1.05 + 1e-9);
+    });
+}
+
+#[test]
+fn merge_equals_concat_then_build() {
+    prop::check(150, |g| {
+        let n1 = g.size(0, 200);
+        let n2 = g.size(0, 200);
+        let xs: Vec<f64> =
+            (0..n1).map(|_| g.normal().abs() * 5e3).collect();
+        let ys: Vec<f64> =
+            (0..n2).map(|_| g.normal().abs() * 50.0).collect();
+        let mut h1 = LatencyHistogram::new();
+        let mut h2 = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for &v in &xs {
+            h1.record(v);
+            all.record(v);
+        }
+        for &v in &ys {
+            h2.record(v);
+            all.record(v);
+        }
+        h1.merge(&h2);
+        assert_eq!(h1.count(), all.count());
+        assert_eq!(h1.min_us(), all.min_us());
+        assert_eq!(h1.max_us(), all.max_us());
+        for k in 1..=25 {
+            let q = k as f64 / 25.0;
+            assert_eq!(h1.quantile(q), all.quantile(q), "q={q}");
+        }
+        let (m1, m2) = (h1.mean_us(), all.mean_us());
+        assert!((m1 - m2).abs() <= m2.abs() * 1e-9 + 1e-9);
+    });
+}
+
+#[test]
+fn quantile_error_is_bounded_relative_to_exact() {
+    let bound = LatencyHistogram::rel_error_bound() + 1e-9;
+    prop::check(200, |g| {
+        let n = g.size(1, 300);
+        let mut vals: Vec<f64> = (0..n)
+            .map(|_| g.normal().abs() * 2e4 + 1e-3)
+            .collect();
+        let mut h = LatencyHistogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = (g.usize(100) as f64 + 1.0) / 100.0;
+        // identical rank rule on both sides: order statistic ceil(q·n)
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        let exact = vals[rank - 1];
+        let approx = h.quantile(q);
+        let err = (approx - exact).abs() / exact;
+        assert!(
+            err <= bound,
+            "q={q} exact={exact} approx={approx} err={err} > {bound}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Arrival generators
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arrival_timelines_are_seed_deterministic_and_monotone() {
+    prop::check(60, |g| {
+        let seed = g.rng.next_u64();
+        let n = g.size(1, 300);
+        for p in [
+            ArrivalProcess::Poisson { rate_rps: 200.0 },
+            ArrivalProcess::Bursty {
+                rate_rps: 800.0,
+                mean_on_ms: 10.0,
+                mean_off_ms: 30.0,
+            },
+            ArrivalProcess::Replay { times_us: vec![0, 5, 11, 40] },
+        ] {
+            let a = p.times_ns(n, &mut Pcg32::new(seed));
+            let b = p.times_ns(n, &mut Pcg32::new(seed));
+            assert_eq!(a, b, "{} not deterministic", p.label());
+            assert!(
+                a.windows(2).all(|w| w[0] <= w[1]),
+                "{} times not monotone",
+                p.label()
+            );
+        }
+    });
+}
+
+#[test]
+fn poisson_mean_rate_converges() {
+    prop::check(25, |g| {
+        let rate = 50.0 + g.f64() * 1950.0;
+        let n = g.size(200, 4000).max(1);
+        let t = ArrivalProcess::Poisson { rate_rps: rate }
+            .times_ns(n, &mut Pcg32::new(g.rng.next_u64()));
+        let span_s = *t.last().unwrap() as f64 / 1e9;
+        if span_s <= 0.0 {
+            return; // degenerate shrunk case
+        }
+        let empirical = n as f64 / span_s;
+        // mean of n exponentials: sigma ~ rate/sqrt(n); 5-sigma + slack
+        let tol = 5.0 / (n as f64).sqrt() + 0.02;
+        let rel = (empirical - rate).abs() / rate;
+        assert!(
+            rel <= tol,
+            "rate {rate}: empirical {empirical} off by {rel} (> {tol}, n={n})"
+        );
+    });
+}
+
+#[test]
+fn bursty_long_run_rate_is_duty_cycle_limited() {
+    let p = ArrivalProcess::Bursty {
+        rate_rps: 2000.0,
+        mean_on_ms: 10.0,
+        mean_off_ms: 30.0,
+    };
+    let n = 3000;
+    let t = p.times_ns(n, &mut Pcg32::new(0xB0B));
+    let span_s = *t.last().unwrap() as f64 / 1e9;
+    let empirical = n as f64 / span_s;
+    // duty cycle 10/(10+30) = 0.25 -> ~500 rps long-run; allow wide slack
+    // but pin it well below the in-burst rate and above zero
+    assert!(empirical < 1200.0, "empirical {empirical}");
+    assert!(empirical > 100.0, "empirical {empirical}");
+}
+
+// ---------------------------------------------------------------------------
+// Admission policies
+// ---------------------------------------------------------------------------
+
+fn random_queue(g: &mut prop::Gen, n: usize) -> Vec<QueuedMeta> {
+    (0..n)
+        .map(|_| QueuedMeta {
+            gen_len: g.usize(64),
+            deadline_us: if g.bool(0.7) {
+                Some(g.usize(1_000_000) as u64)
+            } else {
+                None
+            },
+            waited_us: g.usize(1_000_000) as u64,
+            // up to 12 so the starvation guard (limit 8) genuinely fires
+            passed_over: g.usize(12) as u32,
+        })
+        .collect()
+}
+
+#[test]
+fn policies_select_in_range_and_fifo_is_head() {
+    prop::check(300, |g| {
+        let n = g.size(1, 40);
+        let q = random_queue(g, n);
+        for policy in [
+            AdmissionPolicy::fifo(),
+            AdmissionPolicy::sjf(),
+            AdmissionPolicy::deadline(),
+        ] {
+            let pick = policy.select(&q);
+            assert!(pick < q.len(), "{} out of range", policy.label());
+        }
+        assert_eq!(AdmissionPolicy::fifo().select(&q), 0);
+    });
+}
+
+#[test]
+fn sjf_picks_a_minimal_job_unless_guard_fires() {
+    prop::check(300, |g| {
+        let n = g.size(1, 40);
+        let q = random_queue(g, n);
+        let limit = AdmissionPolicy::DEFAULT_STARVATION_LIMIT;
+        let pick = AdmissionPolicy::sjf().select(&q);
+        if q[0].passed_over >= limit {
+            assert_eq!(pick, 0, "starvation guard must boost the head");
+        } else {
+            let min_gen = q.iter().map(|m| m.gen_len).min().unwrap();
+            assert_eq!(q[pick].gen_len, min_gen);
+            // stable: no earlier index has the same gen_len
+            assert!(q[..pick].iter().all(|m| m.gen_len > min_gen));
+        }
+    });
+}
+
+#[test]
+fn edf_picks_minimal_slack_unless_guard_fires() {
+    prop::check(300, |g| {
+        let n = g.size(1, 40);
+        let q = random_queue(g, n);
+        let limit = AdmissionPolicy::DEFAULT_STARVATION_LIMIT;
+        let pick = AdmissionPolicy::deadline().select(&q);
+        let slack = |m: &QueuedMeta| -> i64 {
+            match m.deadline_us {
+                Some(d) => d as i64 - m.waited_us as i64,
+                None => i64::MAX,
+            }
+        };
+        if q[0].passed_over >= limit {
+            assert_eq!(pick, 0);
+        } else {
+            let min_slack = q.iter().map(slack).min().unwrap();
+            assert_eq!(slack(&q[pick]), min_slack);
+            assert!(q[..pick].iter().all(|m| slack(m) > min_slack));
+        }
+    });
+}

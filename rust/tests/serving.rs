@@ -14,6 +14,10 @@ use std::path::PathBuf;
 use moepim::coordinator::{DecodeMode, ModelEngine, Request, Server};
 use moepim::runtime::Runtime;
 use moepim::util::rng::Pcg32;
+use moepim::workload::{
+    run_against_server, AdmissionPolicy, ArrivalProcess, SizeModel,
+    WorkloadSpec,
+};
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("MOEPIM_ARTIFACTS")
@@ -77,11 +81,11 @@ fn server_lifecycle_batching_and_churn() {
     // concurrent requests of different lengths interleave and all finish
     let rxs: Vec<_> = (0..4u64)
         .map(|i| {
-            server.submit(Request {
-                id: i,
-                prompt: prompt(8 + 4 * i as usize, i),
-                gen_len: 3 + i as usize,
-            })
+            server.submit(Request::new(
+                i,
+                prompt(8 + 4 * i as usize, i),
+                3 + i as usize,
+            ))
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -117,11 +121,11 @@ fn server_lifecycle_batching_and_churn() {
         .collect();
     let rxs: Vec<_> = (0..3u64)
         .map(|i| {
-            server.submit(Request {
-                id: 300 + i,
-                prompt: prompt(10 + i as usize, 50 + i),
-                gen_len: 6,
-            })
+            server.submit(Request::new(
+                300 + i,
+                prompt(10 + i as usize, 50 + i),
+                6,
+            ))
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -139,11 +143,7 @@ fn server_lifecycle_batching_and_churn() {
     let burst = 9u64;
     let rxs: Vec<_> = (0..burst)
         .map(|i| {
-            server.submit(Request {
-                id: 400 + i,
-                prompt: prompt(8, 1000 + i),
-                gen_len: 4,
-            })
+            server.submit(Request::new(400 + i, prompt(8, 1000 + i), 4))
         })
         .collect();
     let mut seqs = Vec::new();
@@ -165,11 +165,7 @@ fn server_lifecycle_batching_and_churn() {
     // an oversized prompt gets a *terminal error reply* (not a dropped
     // channel) with `None` in every never-happened field; the server
     // survives and keeps serving
-    let rx = server.submit(Request {
-        id: 103,
-        prompt: prompt(500, 9),
-        gen_len: 4,
-    });
+    let rx = server.submit(Request::new(103, prompt(500, 9), 4));
     let resp = rx.recv().expect("oversized prompt still gets a reply");
     let err = resp.result.expect_err("oversized prompt must error");
     assert!(err.contains("max_seq"), "unexpected error: {err}");
@@ -201,11 +197,11 @@ fn server_lifecycle_batching_and_churn() {
                 break;
             }
             let c = &cases[submitted];
-            let rx = server.submit(Request {
-                id: 500 + submitted as u64,
-                prompt: c.prompt.clone(),
-                gen_len: c.gen_len,
-            });
+            let rx = server.submit(Request::new(
+                500 + submitted as u64,
+                c.prompt.clone(),
+                c.gen_len,
+            ));
             pending.push((submitted, rx));
             submitted += 1;
         }
@@ -251,6 +247,71 @@ fn server_lifecycle_batching_and_churn() {
     );
     assert!(stats.planner.work > 0);
     assert!(stats.tokens_generated > 0);
+
+    // ---- gen_len == 0 regression: an immediate terminal success that
+    //      never queues, never occupies a slot, and never ran prefill ----
+    let rx = server.submit(Request::new(600, prompt(8, 21), 0));
+    let resp = rx.recv().expect("zero-length request gets a reply");
+    let toks = resp.result.expect("zero-length request succeeds");
+    assert!(toks.is_empty());
+    assert_eq!(resp.admit_seq, None, "zero-length must not take a slot");
+    assert_eq!(resp.queue_us, None);
+    assert_eq!(resp.ttft_us, None);
+    assert_eq!(resp.batched_steps + resp.single_steps, 0);
+    let after = server.generate(601, prompt(8, 22), 2).unwrap();
+    assert_eq!(after.result.expect("server still serves").len(), 2);
+    let s2 = server.stats().unwrap();
+    assert_eq!(s2.errored, 2, "zero-length request must not count errored");
+    assert_eq!(s2.completed, stats.completed + 2);
+
+    // ---- seeded loadtest driver smoke over the live FIFO server: an
+    //      open-loop burst (near-simultaneous arrivals) must preserve
+    //      admit_seq monotonicity in submit order ------------------------
+    let spec = WorkloadSpec {
+        seed: 0xF1F0,
+        requests: 8,
+        arrival: ArrivalProcess::Poisson { rate_rps: 1e5 },
+        sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 4 },
+        slo_e2e_ms: 60_000.0,
+        deadline_slack_us_per_token: 0,
+    };
+    let out = run_against_server(&server, &spec).expect("loadtest driver");
+    assert_eq!(out.samples.len(), 8);
+    assert!(out.samples.iter().all(|s| s.ok), "{:?}", out.samples);
+    assert_eq!(out.tokens_generated(), 8 * 4);
+    let mut by_submit = out.samples.clone();
+    by_submit.sort_by_key(|s| s.submit_seq);
+    let seqs: Vec<u64> = by_submit
+        .iter()
+        .map(|s| s.admit_seq.expect("burst request admitted"))
+        .collect();
+    assert!(
+        seqs.windows(2).all(|w| w[0] < w[1]),
+        "FIFO admission order broke submit order: {seqs:?}"
+    );
+
+    drop(server);
+
+    // ---- SJF admission under the closed-loop driver: mixed job sizes
+    //      keep the queue non-empty, and the starvation guard must get
+    //      every long job through — all requests end terminally Ok ------
+    let sjf_server = Server::spawn_with(artifacts_dir(),
+                                        AdmissionPolicy::sjf())
+        .expect("sjf server spawns");
+    let spec = WorkloadSpec {
+        seed: 0x57F5,
+        requests: 10,
+        arrival: ArrivalProcess::Closed { users: 3, think_ms: 0.0 },
+        sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 10) },
+        slo_e2e_ms: 60_000.0,
+        deadline_slack_us_per_token: 0,
+    };
+    let out = run_against_server(&sjf_server, &spec)
+        .expect("closed-loop loadtest");
+    assert_eq!(out.samples.len(), 10, "a request starved or vanished");
+    assert!(out.samples.iter().all(|s| s.ok), "{:?}", out.samples);
+    assert!(out.samples.iter().all(|s| s.admit_seq.is_some()));
+    assert!(out.tokens_generated() > 0);
 }
 
 #[test]
