@@ -1,0 +1,106 @@
+//! E9 driver: the multi-server placement study — shard count × placement
+//! policy on the virtual clock, under identical seeded traffic.
+//!
+//! One `WorkloadSpec` is materialized once per cell; the `ShardedDriver`
+//! splits it across N virtual clusters under each placement policy and
+//! merges shard-exactly, so every row of a block saw byte-identical
+//! requests and any difference is the placement (and the parallelism N
+//! buys) alone.  The table reads off the trade the ROADMAP's
+//! "multi-server sharding" item asks about: how much merged-p99 each
+//! policy leaves on the table vs how evenly it spreads load.
+//!
+//! ```bash
+//! cargo run --release --example shard_placement
+//! ```
+
+use moepim::workload::{
+    report, shard, AdmissionPolicy, ArrivalProcess, PlacementPolicy,
+    ShardedDriver, SizeModel, VirtualConfig, WorkloadSpec,
+};
+
+fn spec() -> WorkloadSpec {
+    WorkloadSpec {
+        seed: 9,
+        requests: 160,
+        arrival: ArrivalProcess::Poisson { rate_rps: 3_000.0 },
+        sizes: SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 1.2,
+            prompt: (4, 24),
+            gen: (1, 12),
+        },
+        slo_e2e_ms: 30.0,
+        deadline_slack_us_per_token: 250,
+    }
+}
+
+fn main() {
+    let cfg = VirtualConfig::default();
+    let spec = spec();
+    let policy = AdmissionPolicy::fifo();
+    let placements = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::SizeHash,
+        PlacementPolicy::route_aware(&cfg),
+    ];
+    println!(
+        "placement study: {} requests, poisson 3000 rps, SLO {} ms e2e, \
+         FIFO admission per shard",
+        spec.requests, spec.slo_e2e_ms
+    );
+    for shards in [1usize, 2, 4, 8] {
+        println!("\n== {shards} shard(s) ==");
+        println!(
+            "{:<18} {:>9} {:>9} {:>9} {:>7} {:>10} {:>8} {:>9}",
+            "placement", "p50 e2e", "p99 e2e", "gap p99", "load",
+            "tok/s", "SLO", "contention"
+        );
+        for placement in placements {
+            let driver = ShardedDriver::new(shards, placement);
+            let run = driver.run_virtual(&cfg, &spec, policy);
+            let (merged, imb) = shard::analyze(&spec, &run.shards);
+            let total: usize =
+                run.shards.iter().map(|s| s.outcome.samples.len()).sum();
+            assert_eq!(total, spec.requests, "a request was lost or duplicated");
+            println!(
+                "{:<18} {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>6.2}x {:>10.0} \
+                 {:>7.1}% {:>8.1}%",
+                placement.label(),
+                merged.summary.e2e.quantile(0.5) / 1e3,
+                merged.summary.e2e.quantile(0.99) / 1e3,
+                imb.p99_gap_us / 1e3,
+                imb.load_ratio,
+                merged.summary.tokens_per_s,
+                merged.summary.attainment * 100.0,
+                merged.planner.contention_ratio() * 100.0,
+            );
+        }
+    }
+
+    // one full merged v2 document, to show the report surface
+    let driver = ShardedDriver::new(
+        4,
+        PlacementPolicy::route_aware(&cfg),
+    );
+    let run = driver.run_virtual(&cfg, &spec, policy);
+    let doc = report::build_sharded(&spec, policy, &driver, &run);
+    let text = doc.to_string_pretty();
+    let parsed =
+        moepim::util::json::parse(&text).expect("v2 report parses");
+    println!(
+        "\nmerged v2 report (4 shards, route-aware): schema={} \
+         shards[]={} imbalance.load_ratio={}",
+        parsed.path(&["schema"]).unwrap().as_str().unwrap(),
+        parsed.path(&["shards"]).unwrap().as_arr().unwrap().len(),
+        parsed
+            .path(&["imbalance", "load_ratio"])
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+    );
+    println!(
+        "(virtual clock: rerunning this example reproduces every number \
+         byte-for-byte; see `moepim shardtest` for the full JSON)"
+    );
+}

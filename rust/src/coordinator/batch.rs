@@ -49,6 +49,7 @@ use crate::sched::{BatchPlan, BatchPlanner, PlannerStats};
 /// One live slot's sequence state (KV/GO state lives in the pools).
 #[derive(Debug, Clone)]
 pub struct SlotSession {
+    /// prompt + generated token ids so far
     pub ids: Vec<i32>,
     /// position of the next token to be written (== ids.len())
     pub pos: usize,
@@ -64,6 +65,10 @@ pub struct BatchStep {
     pub plans: Vec<BatchPlan>,
 }
 
+/// The slot-batched serving engine: a fixed pool of serving slots over
+/// pooled per-layer KV/GO storage, advanced one token per decode cycle
+/// with one dispatch per pipeline stage per layer (see the module docs
+/// for the full cycle anatomy).
 pub struct BatchEngine {
     engine: ModelEngine,
     slots: usize,
@@ -89,6 +94,8 @@ impl BatchEngine {
         Self::with_planner(engine, planner)
     }
 
+    /// Wrap `engine` with an explicit [`BatchPlanner`] (the grouping /
+    /// schedule-policy knob the paper's contention studies turn).
     pub fn with_planner(engine: ModelEngine, planner: BatchPlanner) -> Self {
         // the batched MoE dispatch is always sparse-gather; force the
         // single-token fallback onto the same path so a session's stream
@@ -115,14 +122,17 @@ impl BatchEngine {
         }
     }
 
+    /// The loaded model's manifest-derived shape.
     pub fn model(&self) -> &FunctionalModel {
         &self.engine.model
     }
 
+    /// The wrapped per-session engine (shared decode core).
     pub fn engine(&self) -> &ModelEngine {
         &self.engine
     }
 
+    /// Serving slots (batch width B, from the manifest).
     pub fn slots(&self) -> usize {
         self.slots
     }
@@ -132,14 +142,17 @@ impl BatchEngine {
         (0..self.slots).filter(|&s| self.sessions[s].is_some()).collect()
     }
 
+    /// The lowest-indexed free slot, if any.
     pub fn free_slot(&self) -> Option<usize> {
         (0..self.slots).find(|&s| self.sessions[s].is_none())
     }
 
+    /// The live session in `slot`, if any.
     pub fn session(&self, slot: usize) -> Option<&SlotSession> {
         self.sessions[slot].as_ref()
     }
 
+    /// Cumulative planner telemetry over every committed step.
     pub fn planner_stats(&self) -> PlannerStats {
         self.planner.stats()
     }

@@ -30,16 +30,21 @@ use crate::config::manifest::{layer_artifact, FunctionalModel};
 use crate::moe::gate::{expert_choice_route, softmax_rows, Routing};
 use crate::runtime::executor::{Runtime, TensorIn};
 
-/// How `decode_step` computes the next hidden state.
+/// How the decode step computes the next hidden state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodeMode {
+    /// The paper's path: KV-cached attention + GO-cached routing
+    /// (streaming `TopKUpdate` on the new token, per layer).
     Cached,
+    /// The expert-choice reference: re-prefill everything each step and
+    /// re-route the whole batch at the same fixed capacity.
     Recompute,
 }
 
 /// One live generation session: per-layer KV banks and one GO bank per
 /// layer.
 pub struct Session {
+    /// prompt + generated token ids so far
     pub ids: Vec<i32>,
     kv: KvCache,
     go: Vec<GoCache>,
@@ -75,9 +80,11 @@ pub(crate) struct PrefillOut {
 /// Output of one generation run.
 #[derive(Debug, Clone)]
 pub struct GenerationResult {
+    /// the generated token ids
     pub tokens: Vec<i32>,
-    /// wall-clock spent inside HLO executions, per stage
+    /// wall-clock spent inside prefill HLO executions (µs)
     pub prefill_us: f64,
+    /// wall-clock spent inside decode HLO executions (µs)
     pub decode_us: f64,
 }
 
@@ -114,8 +121,11 @@ impl LayerNames {
     }
 }
 
+/// The per-session functional engine: drives the AOT-compiled depth-L
+/// stack over the PJRT runtime, with KV/GO cache state owned host-side.
 pub struct ModelEngine {
     rt: Runtime,
+    /// the loaded model's manifest-derived shape
     pub model: FunctionalModel,
     /// per-layer artifact name table (len == `model.n_layers`)
     names: Vec<LayerNames>,
@@ -128,17 +138,22 @@ pub struct ModelEngine {
 }
 
 impl ModelEngine {
+    /// Wrap a loaded [`Runtime`] (dense decode MoE; see
+    /// [`ModelEngine::with_sparse_moe`]).
     pub fn new(rt: Runtime) -> Self {
         let model = rt.manifest.model.clone();
         let names = (0..model.n_layers).map(LayerNames::new).collect();
         ModelEngine { rt, model, names, sparse_moe: false }
     }
 
+    /// Toggle the sparse-gather MoE executables on the decode path
+    /// (§Perf L2-1; the serving loop turns this on).
     pub fn with_sparse_moe(mut self, on: bool) -> Self {
         self.sparse_moe = on;
         self
     }
 
+    /// The underlying PJRT runtime and its compiled artifacts.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }

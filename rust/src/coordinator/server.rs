@@ -32,8 +32,11 @@ use crate::workload::{AdmissionPolicy, QueuedMeta};
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// caller-chosen id, echoed on the terminal [`Response`]
     pub id: u64,
+    /// prompt token ids to prefill
     pub prompt: Vec<i32>,
+    /// tokens to generate (0: immediate empty terminal reply)
     pub gen_len: usize,
     /// end-to-end deadline budget from submit, for deadline-aware
     /// admission (`None`: no deadline — sorts last under EDF)
@@ -41,10 +44,12 @@ pub struct Request {
 }
 
 impl Request {
+    /// A deadline-less request (EDF sorts it last; FIFO/SJF ignore it).
     pub fn new(id: u64, prompt: Vec<i32>, gen_len: usize) -> Request {
         Request { id, prompt, gen_len, deadline_us: None }
     }
 
+    /// Attach an end-to-end deadline budget (µs from submit).
     pub fn with_deadline_us(mut self, deadline_us: u64) -> Request {
         self.deadline_us = Some(deadline_us);
         self
@@ -58,6 +63,7 @@ impl Request {
 /// errored request's timings for real zero-latency measurements.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// the submitted request's id
     pub id: u64,
     /// generated tokens, or the error that terminated the request
     pub result: Result<Vec<i32>, String>,
@@ -85,6 +91,7 @@ impl Response {
         self.result.as_deref().unwrap_or(&[])
     }
 
+    /// `true` iff the request completed successfully.
     pub fn is_ok(&self) -> bool {
         self.result.is_ok()
     }
@@ -95,11 +102,15 @@ impl Response {
 pub struct ServerStats {
     /// serving slots (batch width B)
     pub slots: usize,
+    /// requests that completed successfully
     pub completed: u64,
+    /// requests that ended in a terminal error
     pub errored: u64,
+    /// total generated tokens across completed requests
     pub tokens_generated: u64,
-    /// batched decode dispatches / tokens advanced by them
+    /// batched decode dispatches
     pub batch_dispatches: u64,
+    /// tokens advanced by batched dispatches
     pub batched_tokens: u64,
     /// single-token fallback dispatches
     pub single_dispatches: u64,
@@ -107,6 +118,11 @@ pub struct ServerStats {
     pub peak_waiting: usize,
     /// cumulative group-aware planner telemetry (peripheral contention)
     pub planner: PlannerStats,
+    /// shard id this server serves in a fan-out (`None`: standalone).
+    /// Set by [`Server::spawn_sharded`]; flows into
+    /// [`crate::workload::LoadOutcome`] and the per-shard sections of the
+    /// `moepim.slo_report.v2` document.
+    pub shard: Option<usize>,
 }
 
 impl ServerStats {
@@ -196,6 +212,21 @@ impl Server {
     /// decides which waiting request each freed slot goes to.
     pub fn spawn_with(artifacts_dir: PathBuf, policy: AdmissionPolicy)
         -> Result<Server> {
+        Self::spawn_inner(artifacts_dir, policy, None)
+    }
+
+    /// [`Server::spawn_with`], tagged as shard `shard` of a multi-server
+    /// fan-out: the id travels on every [`ServerStats`] snapshot so load
+    /// outcomes collected from this server are attributable to their shard
+    /// in the merged `moepim.slo_report.v2`.  The tag changes telemetry
+    /// only — admission and decode behave exactly as in an untagged server.
+    pub fn spawn_sharded(artifacts_dir: PathBuf, policy: AdmissionPolicy,
+                         shard: usize) -> Result<Server> {
+        Self::spawn_inner(artifacts_dir, policy, Some(shard))
+    }
+
+    fn spawn_inner(artifacts_dir: PathBuf, policy: AdmissionPolicy,
+                   shard: Option<usize>) -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         let handle = std::thread::spawn(move || {
@@ -212,7 +243,7 @@ impl Server {
                     return;
                 }
             };
-            run_loop(engine, rx, policy);
+            run_loop(engine, rx, policy, shard);
         });
         match ready_rx.recv() {
             Ok(Ok(_platform)) => Ok(Server { tx, handle: Some(handle) }),
@@ -266,11 +297,11 @@ struct Waiting {
 }
 
 fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
-            policy: AdmissionPolicy) {
+            policy: AdmissionPolicy, shard: Option<usize>) {
     let slots = eng.slots();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
-    let mut stats = ServerStats { slots, ..ServerStats::default() };
+    let mut stats = ServerStats { slots, shard, ..ServerStats::default() };
     let mut admit_seq: u64 = 0;
 
     loop {

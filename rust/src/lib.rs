@@ -4,29 +4,50 @@
 //! Mixture-of-Experts via Multiplexing and Caching"* (Gao & Yang, 2026) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the paper's system contribution: crossbar-level
-//!   peripheral multiplexing ([`hw`]), load-aware expert grouping
-//!   ([`grouping`]), dynamic prefill scheduling ([`sched`]), the KV + GO
-//!   caches ([`cache`]), the operator-level PIM simulator ([`sim`]), the
-//!   evaluation harness regenerating every paper figure/table ([`eval`]),
-//!   a slot-batched serving coordinator driving the real AOT-compiled
-//!   model ([`coordinator`]) through the PJRT runtime ([`runtime`]), and
-//!   the load-testing subsystem ([`workload`]): seeded traffic
-//!   generation, policy-driven admission, and SLO telemetry over either
-//!   the real server or a deterministic virtual-time cluster.
+//! * **L3 (this crate)** — the paper's system contribution plus the
+//!   serving runtime grown around it;
 //! * **L2 (python/compile/model.py)** — the functional depth-L MoE
 //!   transformer stack, AOT-lowered to `artifacts/*.hlo.txt` at build
 //!   time (per-layer artifact families, `n_layers_functional` in the
-//!   manifest).
+//!   manifest);
 //! * **L1 (python/compile/kernels/)** — Pallas crossbar/FFN/gate kernels.
 //!
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
+//! ## Module ↔ paper map
+//!
+//! | Module | Paper anchor | Role |
+//! |--------|--------------|------|
+//! | [`hw`] | §III-A | crossbar area/energy model, peripheral multiplexing, PCM read noise |
+//! | [`grouping`] | §III-B | peripheral-sharing expert groups (uniform / workload-sorted) |
+//! | [`cache`] | §III-C | KV cache + GO (gating-output) cache, per-session and pooled |
+//! | [`sched`] | §III-D | prefill schedules (token-wise / compact / Algorithm 1) + the online `BatchPlanner` |
+//! | [`moe`] | §II, §III-B | routing modes, choice matrices, seeded trace generation |
+//! | [`sim`] | §IV | operator-level PIM simulator (latency/energy/area pipeline) |
+//! | [`eval`] | §IV figures | regenerates every paper figure/table (`moepim eval all`) |
+//! | [`config`] | Table 1 | model dims, hardware constants, sim knobs, manifest reader |
+//!
+//! Beyond the paper, the serving stack scales the same ideas up from one
+//! chip to a service:
+//!
+//! | Module | Role |
+//! |--------|------|
+//! | [`runtime`] | PJRT client owning the AOT-compiled artifacts |
+//! | [`coordinator`] | per-session engine, slot-batched `BatchEngine`, threaded `Server` with pluggable admission |
+//! | [`workload`] | seeded traffic generation, SLO telemetry, admission policies, virtual-time cluster, and the sharded multi-server fan-out with placement policies |
+//! | [`util`] | in-tree substitutes for serde/rand/clap/criterion (offline image) |
+//!
+//! The serving-facing API surface ([`workload`] and [`coordinator`]) is
+//! fully documented and doctested; `cargo doc --no-deps` runs in CI with
+//! `-D warnings`, so broken intra-doc links and undocumented items in
+//! those modules fail the build.
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
 pub mod cache;
 pub mod config;
+#[warn(missing_docs)]
 pub mod coordinator;
 pub mod eval;
 pub mod grouping;
@@ -36,4 +57,5 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod util;
+#[warn(missing_docs)]
 pub mod workload;

@@ -1,29 +1,34 @@
 //! `moepim` launcher — CLI over the simulator, the evaluation harness and
 //! the serving coordinator.
 //!
-//! ```text
-//! moepim eval <fig4a|fig4b|fig5|table1|ratio-sweep|all> [--gen N]
-//! moepim simulate [--group-size N] [--grouping U|S] [--sched T|C|O]
-//!                 [--kv] [--go] [--prompt N] [--gen N] [--seed N]
-//!                 [--routing token|expert] [--skew X]
-//! moepim trace    [--tokens N] [--skew X] [--seed N] [--routing ...]
-//! moepim serve    [--prompts N] [--gen N] [--artifacts DIR]
-//! moepim generate [--prompt-len N] [--gen N] [--artifacts DIR] [--check]
-//! moepim loadtest [--seed N] [--process poisson|bursty|closed|replay]
-//!                 [--policy fifo|sjf|edf] [--requests N] [--rate RPS]
-//!                 [--slo-ms X] [--real] [--out FILE] [--smoke]
-//! ```
+//! All usage text lives in `moepim::util::cli::usage` (one definition per
+//! subcommand); this file only dispatches.  `moepim` prints the root
+//! usage, `moepim <subcommand> --help` the per-subcommand one.
 
 use moepim::config::{
     CachePolicy, GroupingPolicy, RoutingMode, SchedulePolicy, SimConfig,
 };
 use moepim::sim::Simulator;
-use moepim::util::cli::Args;
+use moepim::util::cli::{usage, Args};
 use moepim::util::fmt_thousands;
 use moepim::{eval, moe};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    if let Some(sub) = args.subcommand.as_deref() {
+        if args.bool_flag("help") {
+            match usage::help_for(sub) {
+                Some(text) => {
+                    println!("{text}");
+                    std::process::exit(0);
+                }
+                None => {
+                    eprintln!("unknown subcommand '{sub}'\n{}", usage::ROOT);
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("eval") => cmd_eval(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -31,39 +36,18 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
         Some("loadtest") => cmd_loadtest(&args),
+        Some("shardtest") => cmd_shardtest(&args),
         Some(other) => {
-            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            eprintln!("unknown subcommand '{other}'\n{}", usage::ROOT);
             2
         }
         None => {
-            println!("{USAGE}");
+            println!("{}", usage::ROOT);
             0
         }
     };
     std::process::exit(code);
 }
-
-const USAGE: &str = "\
-moepim — area-efficient PIM for MoE (paper reproduction)
-
-subcommands:
-  eval <fig4a|fig4b|fig5|table1|ratio-sweep|calibration|ablation|all>  regenerate paper artefacts
-  simulate [flags]                                 one simulator run
-  trace [flags]                                    inspect a workload trace
-  serve [flags]                                    threaded serving demo (real model)
-  generate [flags]                                 single-sequence generation (real model)
-  loadtest [flags]                                 seeded load experiment -> JSON SloReport
-           (virtual clock by default: byte-identical per seed; --real
-            drives the threaded server instead; --smoke runs the CI matrix)
-
-common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
-              --prompt N --gen N --seed N --routing token|expert --skew X
-              --config file.json (simulate; overrides flags)
-loadtest flags: --process poisson|bursty|closed|replay --policy fifo|sjf|edf
-              --requests N --rate RPS --on-ms X --off-ms X --users N
-              --think-ms X --replay-us T0,T1,... --sizes trace|uniform|fixed
-              --slo-ms X --deadline-slack-us N --slots B --layers L
-              --experts E --real --artifacts DIR --out FILE --smoke";
 
 fn cmd_eval(args: &Args) -> i32 {
     let what = args
@@ -347,6 +331,12 @@ fn cmd_loadtest(args: &Args) -> i32 {
     if args.bool_flag("smoke") {
         return loadtest_smoke(args);
     }
+    // --shards N >= 2 promotes the run to the sharded fan-out (merged v2
+    // report); --shards 1 / absent keeps the classic single-backend v1
+    let shards = args.usize_flag("shards", 1);
+    if shards > 1 {
+        return run_sharded(args, shards);
+    }
     let Some(policy) =
         AdmissionPolicy::parse(&args.str_flag("policy", "fifo"))
     else {
@@ -491,6 +481,90 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
             Err(1)
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// shardtest: sharded fan-out -> merged JSON SloReport v2 (DESIGN.md E9)
+// ---------------------------------------------------------------------------
+
+fn cmd_shardtest(args: &Args) -> i32 {
+    run_sharded(args, args.usize_flag("shards", 2).max(1))
+}
+
+/// Shared by `shardtest` and `loadtest --shards`: split the spec across
+/// `shards` backends (virtual clusters by default, real servers with
+/// `--real`), merge shard-exactly, and print the `moepim.slo_report.v2`
+/// document.
+fn run_sharded(args: &Args, shards: usize) -> i32 {
+    use moepim::workload::{
+        report, run_requests_against_server, AdmissionPolicy,
+        PlacementPolicy, ShardedDriver,
+    };
+    if args.bool_flag("virtual") && args.bool_flag("real") {
+        eprintln!("--virtual and --real are mutually exclusive");
+        return 2;
+    }
+    let Some(policy) =
+        AdmissionPolicy::parse(&args.str_flag("policy", "fifo"))
+    else {
+        eprintln!("unknown --policy (expected fifo|sjf|edf)");
+        return 2;
+    };
+    let spec = match loadtest_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let vcfg = loadtest_vcfg(args);
+    let placement_flag = args.str_flag("placement", "round-robin");
+    let Some(mut placement) = PlacementPolicy::parse(&placement_flag) else {
+        eprintln!(
+            "unknown --placement '{placement_flag}' (expected round-robin|\
+             least-outstanding|size-hash|route-aware)"
+        );
+        return 2;
+    };
+    if matches!(placement, PlacementPolicy::RouteAware { .. }) {
+        // align the placement's route model with the backend's chip shape
+        placement = PlacementPolicy::route_aware(&vcfg);
+    }
+    let driver = ShardedDriver::new(shards, placement);
+    let run = if args.bool_flag("real") {
+        // real servers share one PJRT process (single-owner), so shards
+        // run serially — each against a fresh server that serves only its
+        // own subset, dropped before the next spawn
+        let result = driver.run_with(&spec, |shard, sspec, reqs| {
+            let server = moepim::coordinator::Server::spawn_sharded(
+                artifacts_dir(args),
+                policy,
+                shard,
+            )?;
+            run_requests_against_server(&server, sspec, reqs)
+        });
+        match result {
+            Ok(run) => run,
+            Err(e) => {
+                eprintln!("shardtest failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        // N independent virtual clusters: byte-identical output per seed
+        driver.run_virtual(&vcfg, &spec, policy)
+    };
+    let doc = report::build_sharded(&spec, policy, &driver, &run);
+    let text = doc.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "");
+    if !out_path.is_empty() {
+        if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+            eprintln!("failed to write {out_path}: {e}");
+            return 1;
+        }
+    }
+    0
 }
 
 /// `--smoke`: the CI gate.  Virtual leg: every (process × policy) cell of

@@ -1,10 +1,127 @@
-//! Tiny argv parser — in-tree substitute for clap (offline image).
+//! Tiny argv parser — in-tree substitute for clap (offline image) — plus
+//! the centralized usage text for every `moepim` subcommand.
 //!
 //! Supports `subcommand --flag value --flag=value --bool-flag positional`.
-//! The launcher (`main.rs`) defines its own usage text; this module only
-//! tokenises and type-checks.
+//! The launcher (`main.rs`) renders help exclusively from [`usage`], so a
+//! new flag is documented in exactly one place and `moepim <sub> --help`
+//! and the root usage can never drift apart.
 
 use std::collections::BTreeMap;
+
+/// Centralized usage strings: one constant per subcommand plus the root
+/// summary, looked up by [`usage::for_subcommand`].
+pub mod usage {
+    /// Root usage: every subcommand with a one-line description.
+    pub const ROOT: &str = "\
+moepim — area-efficient PIM for MoE (paper reproduction)
+
+subcommands (moepim <subcommand> --help for flags):
+  eval <fig4a|fig4b|fig5|table1|ratio-sweep|calibration|ablation|all>  regenerate paper artefacts
+  simulate [flags]      one simulator run
+  trace [flags]         inspect a workload trace
+  serve [flags]         threaded serving demo (real model)
+  generate [flags]      single-sequence generation (real model)
+  loadtest [flags]      seeded load experiment -> JSON SloReport v1
+                        (virtual clock by default: byte-identical per seed;
+                         --real drives the threaded server; --shards N >= 2
+                         fans out and emits the merged v2 report;
+                         --smoke runs the CI matrix)
+  shardtest [flags]     sharded multi-server fan-out -> merged JSON
+                        SloReport v2 with per-shard breakdown + imbalance
+                        metrics (virtual clusters by default; --real
+                        drives real servers, one shard at a time)
+
+common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
+              --prompt N --gen N --seed N --routing token|expert --skew X
+              --config file.json (simulate; overrides flags)";
+
+    /// `moepim eval` flags.
+    pub const EVAL: &str = "\
+moepim eval <fig4a|fig4b|fig5|table1|ratio-sweep|calibration|ablation|all>
+            [--gen N]";
+
+    /// `moepim simulate` flags.
+    pub const SIMULATE: &str = "\
+moepim simulate [--group-size N] [--grouping U|S] [--sched T|C|O]
+                [--kv] [--go] [--prompt N] [--gen N] [--seed N]
+                [--routing token|expert] [--skew X]
+                [--config file.json  (overrides flags)]";
+
+    /// `moepim trace` flags.
+    pub const TRACE: &str = "\
+moepim trace [--tokens N] [--skew X] [--seed N] [--routing token|expert]";
+
+    /// `moepim serve` flags.
+    pub const SERVE: &str = "\
+moepim serve [--prompts N] [--gen N] [--artifacts DIR]";
+
+    /// `moepim generate` flags.
+    pub const GENERATE: &str = "\
+moepim generate [--prompt-len N] [--gen N] [--artifacts DIR] [--check]";
+
+    /// Traffic-shape flags shared by `loadtest` and `shardtest`.
+    pub const WORKLOAD_FLAGS: &str = "\
+workload flags:
+  --seed N --requests N --process poisson|bursty|closed|replay
+  --policy fifo|sjf|edf --rate RPS --on-ms X --off-ms X --users N
+  --think-ms X --replay-us T0,T1,... --sizes trace|uniform|fixed
+  --prompt N --gen N --skew X --slo-ms X --deadline-slack-us N
+  --slots B --layers L --experts E";
+
+    /// `moepim loadtest` flags (v1 report; `--shards` upgrades to v2).
+    pub const LOADTEST: &str = "\
+moepim loadtest [workload flags] [--shards N] [--placement P]
+                [--real] [--artifacts DIR] [--out FILE] [--smoke]
+
+  virtual clock by default: reports are byte-identical per seed.
+  --real    drive the threaded server instead (wall clock)
+  --shards N >= 2   fan out across N backends and emit the merged
+            moepim.slo_report.v2 (equivalent to `moepim shardtest`)
+  --smoke   run the CI determinism matrix + real-server leg";
+
+    /// `moepim shardtest` flags (merged v2 report).
+    pub const SHARDTEST: &str = "\
+moepim shardtest [--shards N] [--placement P] [--virtual | --real]
+                 [workload flags] [--artifacts DIR] [--out FILE]
+
+  --shards N      number of backends to fan out across (default 2)
+  --placement P   round-robin | least-outstanding | size-hash | route-aware
+                  (route-aware shards by the expert group of each request's
+                   seeded routing stream — exact for virtual backends, a
+                   seeded proxy under --real)
+  --virtual       N virtual clusters (default; byte-identical per seed)
+  --real          N real servers (PJRT is single-owner, so shards run
+                  serially, each against a fresh server)
+  --out FILE      also write the merged v2 report to FILE
+
+  note: closed-loop specs split their user population across shards with
+  a floor of one user per request-holding shard, so keep --users >= N
+  when the concurrency level itself is under study";
+
+    /// The usage text for `name`, if it is a known subcommand.
+    pub fn for_subcommand(name: &str) -> Option<&'static str> {
+        match name {
+            "eval" => Some(EVAL),
+            "simulate" => Some(SIMULATE),
+            "trace" => Some(TRACE),
+            "serve" => Some(SERVE),
+            "generate" => Some(GENERATE),
+            "loadtest" => Some(LOADTEST),
+            "shardtest" => Some(SHARDTEST),
+            _ => None,
+        }
+    }
+
+    /// Full help text for `name`: the subcommand usage, with the shared
+    /// workload-flag block appended for the load-generating subcommands
+    /// (so those flags are documented exactly once).
+    pub fn help_for(name: &str) -> Option<String> {
+        for_subcommand(name).map(|u| match name {
+            "loadtest" | "shardtest" => format!("{u}\n\n{WORKLOAD_FLAGS}"),
+            _ => u.to_string(),
+        })
+    }
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -123,5 +240,35 @@ mod tests {
         let a = parse("");
         assert!(a.subcommand.is_none());
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn usage_covers_every_subcommand() {
+        for sub in [
+            "eval", "simulate", "trace", "serve", "generate", "loadtest",
+            "shardtest",
+        ] {
+            assert!(usage::ROOT.contains(sub), "root usage misses {sub}");
+            assert!(
+                usage::for_subcommand(sub).is_some(),
+                "no usage text for {sub}"
+            );
+        }
+        assert_eq!(usage::for_subcommand("lifo"), None);
+    }
+
+    #[test]
+    fn usage_documents_the_sharding_surface() {
+        assert!(usage::LOADTEST.contains("--shards"));
+        assert!(usage::SHARDTEST.contains("--shards"));
+        assert!(usage::SHARDTEST.contains("--placement"));
+        assert!(usage::SHARDTEST.contains("route-aware"));
+        // the shared workload flags ride along on both help texts
+        for sub in ["loadtest", "shardtest"] {
+            let help = usage::help_for(sub).expect("known subcommand");
+            assert!(help.contains("--policy fifo|sjf|edf"), "{sub}");
+            assert!(help.contains("--process poisson|bursty|closed|replay"),
+                    "{sub}");
+        }
     }
 }

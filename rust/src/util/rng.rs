@@ -3,6 +3,18 @@
 //! generation, uniform grouping, property tests) goes through this so runs
 //! are reproducible from a single `u64` seed.
 
+/// One SplitMix64 step: advance `state` by the golden-ratio increment and
+/// return the mixed output.  Shared by [`Pcg32::new`] seeding and the
+/// workload shard driver's stateless size hash, so the magic constants
+/// live in exactly one place.
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// PCG32 (Melissa O'Neill's `pcg32_random_r`): small, fast, statistically
 /// solid for simulation workloads.
 #[derive(Debug, Clone)]
@@ -15,15 +27,8 @@ impl Pcg32 {
     /// Seed via SplitMix64 so nearby seeds give uncorrelated streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
-        };
-        let mut rng = Pcg32 { state: 0, inc: next() | 1 };
-        rng.state = next();
+        let mut rng = Pcg32 { state: 0, inc: splitmix64(&mut sm) | 1 };
+        rng.state = splitmix64(&mut sm);
         rng.next_u32();
         rng
     }

@@ -48,6 +48,7 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
+    /// The spelling used in CLI flags and report JSON.
     pub fn label(&self) -> &'static str {
         match self {
             ArrivalProcess::Poisson { .. } => "poisson",
@@ -57,6 +58,7 @@ impl ArrivalProcess {
         }
     }
 
+    /// `true` for the closed-loop shape (driver paces by completions).
     pub fn is_closed(&self) -> bool {
         matches!(self, ArrivalProcess::Closed { .. })
     }
@@ -64,6 +66,24 @@ impl ArrivalProcess {
     /// Arrival times in ns for `n` requests, ascending.  For the closed
     /// loop this returns all-zero placeholders (the driver paces
     /// submissions by completions instead).
+    ///
+    /// Deterministic: the same `(process, n, rng seed)` always produces
+    /// the same timeline, which is what lets a whole load experiment
+    /// replay from one `u64` seed.
+    ///
+    /// ```
+    /// use moepim::util::rng::Pcg32;
+    /// use moepim::workload::ArrivalProcess;
+    ///
+    /// let p = ArrivalProcess::Poisson { rate_rps: 500.0 };
+    /// let a = p.times_ns(64, &mut Pcg32::new(7));
+    /// let b = p.times_ns(64, &mut Pcg32::new(7));
+    /// assert_eq!(a, b); // same seed => same timeline, bit for bit
+    /// assert!(a.windows(2).all(|w| w[0] <= w[1])); // and it ascends
+    ///
+    /// let c = p.times_ns(64, &mut Pcg32::new(8));
+    /// assert_ne!(a, c); // a different seed is a different experiment
+    /// ```
     pub fn times_ns(&self, n: usize, rng: &mut Pcg32) -> Vec<u64> {
         match self {
             ArrivalProcess::Poisson { rate_rps } => {
@@ -130,7 +150,9 @@ fn exp_ns(rng: &mut Pcg32, mean_ns: f64) -> u64 {
 /// How big requests are.  All ranges are inclusive.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SizeModel {
+    /// Every request has exactly this prompt/generation length.
     Fixed { prompt_len: usize, gen_len: usize },
+    /// Lengths drawn uniformly from the inclusive ranges.
     Uniform {
         prompt: (usize, usize),
         gen: (usize, usize),
@@ -149,6 +171,7 @@ pub enum SizeModel {
 }
 
 impl SizeModel {
+    /// The spelling used in CLI flags and report JSON.
     pub fn label(&self) -> &'static str {
         match self {
             SizeModel::Fixed { .. } => "fixed",
@@ -221,8 +244,13 @@ fn map_to_range(j: usize, n: usize, (lo, hi): (usize, usize)) -> usize {
 /// One concrete request of a materialized workload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestSpec {
+    /// workload-global request id (index in submission order); prompt and
+    /// routing streams key off `(spec.seed, id)`, so a request behaves
+    /// identically regardless of queue position or shard placement
     pub id: u64,
+    /// prompt tokens to prefill
     pub prompt_len: usize,
+    /// tokens to generate
     pub gen_len: usize,
     /// deadline budget from submit, for deadline-aware admission
     pub deadline_us: u64,
@@ -234,9 +262,13 @@ pub struct RequestSpec {
 /// the SLO target is.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
+    /// the one `u64` every random draw in the experiment derives from
     pub seed: u64,
+    /// requests to materialize
     pub requests: usize,
+    /// when requests arrive
     pub arrival: ArrivalProcess,
+    /// how big requests are
     pub sizes: SizeModel,
     /// end-to-end latency target for SLO-attainment accounting (ms)
     pub slo_e2e_ms: f64,
@@ -267,6 +299,17 @@ impl WorkloadSpec {
     /// Expand into concrete requests — deterministic in `seed`, and
     /// independent of whichever admission policy or backend later serves
     /// them.
+    ///
+    /// ```
+    /// use moepim::workload::WorkloadSpec;
+    ///
+    /// let spec = WorkloadSpec { seed: 42, ..WorkloadSpec::default() };
+    /// // same spec => byte-identical request stream, every time
+    /// assert_eq!(spec.materialize(), spec.materialize());
+    /// // a different seed materializes a different experiment
+    /// let other = WorkloadSpec { seed: 43, ..spec.clone() };
+    /// assert_ne!(spec.materialize(), other.materialize());
+    /// ```
     pub fn materialize(&self) -> Vec<RequestSpec> {
         let mut arr_rng = Pcg32::new(self.seed ^ ARRIVAL_SALT);
         let mut size_rng = Pcg32::new(self.seed ^ SIZE_SALT);

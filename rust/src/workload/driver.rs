@@ -36,14 +36,21 @@ const PROMPT_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
 /// never admitted), mirroring [`Response`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sample {
+    /// the request's workload-global id ([`RequestSpec::id`])
     pub id: u64,
     /// submission order within the experiment (0-based)
     pub submit_seq: u64,
+    /// terminal outcome: `true` iff the request completed successfully
     pub ok: bool,
+    /// submit → slot admission (µs); `None` when never admitted
     pub queue_us: Option<f64>,
+    /// submit → first generated token (µs); `None` when none was produced
     pub ttft_us: Option<f64>,
+    /// submit → terminal reply (µs)
     pub e2e_us: f64,
+    /// generated tokens banked by the terminal reply
     pub tokens: u64,
+    /// admission sequence number; `None` when never admitted
     pub admit_seq: Option<u64>,
 }
 
@@ -51,19 +58,32 @@ pub struct Sample {
 /// serving-side telemetry snapshot the report folds in.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoadOutcome {
+    /// one terminal measurement per submitted request
     pub samples: Vec<Sample>,
+    /// cumulative group-aware planner telemetry (peripheral contention)
     pub planner: PlannerStats,
+    /// serving slots of the backend that produced this outcome
     pub slots: usize,
+    /// high-water mark of the admission queue
     pub peak_waiting: usize,
+    /// batched decode dispatches
     pub batch_dispatches: u64,
+    /// tokens advanced by batched dispatches
     pub batched_tokens: u64,
+    /// single-token fallback dispatches
     pub single_dispatches: u64,
+    /// experiment wall/virtual time in seconds
     pub duration_s: f64,
     /// `"virtual"` (deterministic, byte-identical reports) or `"wall"`
     pub clock: &'static str,
+    /// which shard of a fan-out produced this outcome (`None`: unsharded).
+    /// Real runs inherit it from [`crate::coordinator::ServerStats::shard`];
+    /// the sharded driver tags virtual outcomes itself.
+    pub shard: Option<usize>,
 }
 
 impl LoadOutcome {
+    /// Mean live slots per batched dispatch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.batch_dispatches == 0 {
             0.0
@@ -72,6 +92,7 @@ impl LoadOutcome {
         }
     }
 
+    /// Total generated tokens across all samples.
     pub fn tokens_generated(&self) -> u64 {
         self.samples.iter().map(|s| s.tokens).sum()
     }
@@ -107,13 +128,26 @@ fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
 /// server it describes exactly this experiment.
 pub fn run_against_server(server: &Server, spec: &WorkloadSpec)
     -> Result<LoadOutcome> {
-    let reqs = spec.materialize();
+    run_requests_against_server(server, spec, &spec.materialize())
+}
+
+/// Run an explicit request list against a live server.
+///
+/// This is [`run_against_server`] with the materialization step factored
+/// out, for the sharded fan-out driver: the full spec is materialized
+/// once, partitioned, and each shard's server is driven with its subset
+/// (arrival offsets are kept from the global timeline).  The outcome's
+/// `shard` tag is inherited from the server's
+/// [`crate::coordinator::ServerStats::shard`].
+pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
+                                   reqs: &[RequestSpec])
+    -> Result<LoadOutcome> {
     let t0 = Instant::now();
     let samples = match spec.arrival {
         ArrivalProcess::Closed { users, think_ms } => {
-            drive_closed(server, spec, &reqs, users.max(1), think_ms)?
+            drive_closed(server, spec, reqs, users.max(1), think_ms)?
         }
-        _ => drive_open(server, spec, &reqs)?,
+        _ => drive_open(server, spec, reqs)?,
     };
     let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
     let stats = server.stats()?;
@@ -127,6 +161,7 @@ pub fn run_against_server(server: &Server, spec: &WorkloadSpec)
         single_dispatches: stats.single_dispatches,
         duration_s,
         clock: "wall",
+        shard: stats.shard,
     })
 }
 

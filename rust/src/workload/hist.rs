@@ -39,6 +39,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             counts: BTreeMap::new(),
@@ -69,14 +70,18 @@ impl LatencyHistogram {
         }
     }
 
+    /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// `true` iff nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.total == 0
     }
 
+    /// Exact mean of the recorded values (0 when empty) — the sum is
+    /// tracked outside the buckets, so the mean carries no bucket error.
     pub fn mean_us(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -85,6 +90,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Exact minimum recorded value (0 when empty).
     pub fn min_us(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -93,6 +99,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Exact maximum recorded value (0 when empty).
     pub fn max_us(&self) -> f64 {
         self.max
     }
@@ -123,7 +130,33 @@ impl LatencyHistogram {
 
     /// Add `other`'s counts into `self`.  Exact on the bucket level:
     /// merging two histograms gives the same buckets (hence the same
-    /// quantiles) as building one histogram over the concatenated samples.
+    /// quantiles) as building one histogram over the concatenated samples
+    /// — the contract the sharded fan-out's report merge leans on.
+    ///
+    /// ```
+    /// use moepim::workload::LatencyHistogram;
+    ///
+    /// let mut left = LatencyHistogram::new();
+    /// let mut right = LatencyHistogram::new();
+    /// let mut concat = LatencyHistogram::new();
+    /// for v in [3.0, 120.5, 0.0, 9_999.0] {
+    ///     left.record(v);
+    ///     concat.record(v);
+    /// }
+    /// for v in [0.25, 88.0, 1.0e6] {
+    ///     right.record(v);
+    ///     concat.record(v);
+    /// }
+    ///
+    /// left.merge(&right);
+    /// assert_eq!(left.count(), concat.count());
+    /// assert_eq!(left.min_us(), concat.min_us());
+    /// assert_eq!(left.max_us(), concat.max_us());
+    /// for k in 1..=20 {
+    ///     let q = k as f64 / 20.0;
+    ///     assert_eq!(left.quantile(q), concat.quantile(q));
+    /// }
+    /// ```
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (&idx, &c) in &other.counts {
             *self.counts.entry(idx).or_insert(0) += c;

@@ -16,25 +16,39 @@
 //! * [`vsim`] — a virtual-time discrete-event mirror of the router loop,
 //!   priced by the real [`crate::sched::BatchPlanner`] contention model —
 //!   the backend whose reports are byte-identical per seed;
+//! * [`shard`] — the multi-server fan-out: a [`ShardedDriver`] splits one
+//!   [`WorkloadSpec`] across N backends under a pluggable
+//!   [`PlacementPolicy`] (round-robin / least-outstanding / size-hash /
+//!   routing-aware) and merges the per-shard outcomes shard-exactly;
 //! * [`hist`] / [`report`] — mergeable log-bucketed latency histograms
-//!   folded into the `moepim.slo_report.v1` JSON document
-//!   (p50/p95/p99 queue/TTFT/e2e, SLO attainment, tokens/sec, planner
-//!   contention snapshot).
+//!   folded into the `moepim.slo_report.v1` JSON document (p50/p95/p99
+//!   queue/TTFT/e2e, SLO attainment, tokens/sec, planner contention
+//!   snapshot), or the merged `moepim.slo_report.v2` for sharded runs
+//!   (per-shard breakdown + imbalance metrics).
 //!
-//! Entry points: `moepim loadtest` (CLI), `cargo bench --bench loadgen`,
-//! `examples/loadtest_policies.rs` (E8), and the
-//! `rust/tests/{props_workload,loadtest_virtual}.rs` suites.
+//! Entry points: `moepim loadtest` / `moepim shardtest` (CLI),
+//! `cargo bench --bench loadgen`, `examples/loadtest_policies.rs` (E8),
+//! `examples/shard_placement.rs` (E9), and the
+//! `rust/tests/{props_workload,loadtest_virtual,shard_virtual}.rs`
+//! suites.
 
 pub mod arrival;
 pub mod driver;
 pub mod hist;
 pub mod policy;
 pub mod report;
+pub mod shard;
 pub mod vsim;
 
 pub use arrival::{ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec};
-pub use driver::{run_against_server, LoadOutcome, Sample};
+pub use driver::{
+    run_against_server, run_requests_against_server, LoadOutcome, Sample,
+};
 pub use hist::LatencyHistogram;
 pub use policy::{AdmissionPolicy, QueuedMeta};
 pub use report::{summarize, SloSummary};
-pub use vsim::{run_virtual, VirtualConfig};
+pub use shard::{
+    Imbalance, MergedLoad, PlacementPolicy, ShardLoad, ShardOutcome,
+    ShardedDriver, ShardedRun,
+};
+pub use vsim::{run_virtual, run_virtual_requests, VirtualConfig};

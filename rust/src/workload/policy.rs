@@ -46,24 +46,30 @@ pub enum AdmissionPolicy {
 }
 
 impl AdmissionPolicy {
+    /// Pass-overs the queue head tolerates before the starvation guard
+    /// force-admits it (the limit the convenience constructors use).
     pub const DEFAULT_STARVATION_LIMIT: u32 = 8;
 
+    /// FIFO admission (the seed behaviour).
     pub fn fifo() -> Self {
         AdmissionPolicy::Fifo
     }
 
+    /// Shortest-job-first with the default starvation limit.
     pub fn sjf() -> Self {
         AdmissionPolicy::Sjf {
             starvation_limit: Self::DEFAULT_STARVATION_LIMIT,
         }
     }
 
+    /// Earliest-deadline-first with the default starvation limit.
     pub fn deadline() -> Self {
         AdmissionPolicy::Deadline {
             starvation_limit: Self::DEFAULT_STARVATION_LIMIT,
         }
     }
 
+    /// The spelling used in CLI flags and report JSON.
     pub fn label(&self) -> &'static str {
         match self {
             AdmissionPolicy::Fifo => "fifo",

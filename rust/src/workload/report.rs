@@ -1,9 +1,12 @@
 //! SLO report assembly: fold a [`LoadOutcome`] into latency histograms
-//! and serialize the `moepim.slo_report.v1` JSON schema via [`Json`]
+//! and serialize the `moepim.slo_report` JSON schemas via [`Json`]
 //! (ordered keys — deterministic output, so virtual-clock reports are
 //! byte-identical across runs of the same seed).
 //!
-//! Schema (see DESIGN.md §Workload for the field-by-field table):
+//! Two documents share the core shape (see DESIGN.md §Workload for the
+//! field-by-field table):
+//!
+//! * **v1** ([`build`]) — one backend, one outcome:
 //!
 //! ```text
 //! { schema, workload{seed, requests, process, sizes, policy, clock, slots},
@@ -15,31 +18,52 @@
 //!          peak_waiting},
 //!   planner{steps, work, cycles, transfers, contention_ratio} }
 //! ```
+//!
+//! * **v2** ([`build_sharded`]) — a sharded fan-out, merged shard-exact:
+//!   the same sections over the merged data (`workload` gains `shards` +
+//!   `placement`; `slots` is the cluster total; `duration_s` the cluster
+//!   makespan), plus a per-shard `shards[]` breakdown and an `imbalance`
+//!   section (max/min shard load, per-shard p99 spread vs the merged
+//!   p99).
 
 use crate::util::json::Json;
 use crate::workload::arrival::WorkloadSpec;
 use crate::workload::driver::LoadOutcome;
 use crate::workload::hist::LatencyHistogram;
 use crate::workload::policy::AdmissionPolicy;
+use crate::workload::shard::{self, ShardedDriver, ShardedRun};
 
 /// Aggregated view of one experiment's samples.  Histograms cover
 /// successful requests (errored ones count against SLO attainment and in
 /// `errored`, but their timings aren't latencies of served traffic).
 #[derive(Debug, Clone)]
 pub struct SloSummary {
+    /// submit → slot-admission latencies of successful requests
     pub queue: LatencyHistogram,
+    /// submit → first-token latencies of successful requests
     pub ttft: LatencyHistogram,
+    /// submit → terminal-reply latencies of successful requests
     pub e2e: LatencyHistogram,
+    /// requests that completed successfully
     pub completed: u64,
+    /// requests that ended in a terminal error
     pub errored: u64,
+    /// generated tokens across completed requests
     pub tokens: u64,
+    /// requests that completed within the SLO target (the numerator of
+    /// `attainment` — kept separately so shard merges stay exact instead
+    /// of re-deriving counts from a rounded ratio)
+    pub slo_met: u64,
     /// fraction of *all* terminal requests that completed within the SLO
     /// target (errors are misses)
     pub attainment: f64,
+    /// generated tokens per second of experiment duration
     pub tokens_per_s: f64,
+    /// terminal requests per second of experiment duration
     pub requests_per_s: f64,
 }
 
+/// Fold one [`LoadOutcome`]'s samples into an [`SloSummary`].
 pub fn summarize(spec: &WorkloadSpec, out: &LoadOutcome) -> SloSummary {
     let slo_us = spec.slo_e2e_ms * 1000.0;
     let mut queue = LatencyHistogram::new();
@@ -78,6 +102,7 @@ pub fn summarize(spec: &WorkloadSpec, out: &LoadOutcome) -> SloSummary {
         completed,
         errored,
         tokens,
+        slo_met: met,
         attainment,
         tokens_per_s: tokens as f64 / dur,
         requests_per_s: n as f64 / dur,
@@ -155,6 +180,143 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("transfers", Json::num(out.planner.transfers as f64)),
                 ("contention_ratio",
                  Json::num(round6(out.planner.contention_ratio()))),
+            ]),
+        ),
+    ])
+}
+
+/// Build the merged `moepim.slo_report.v2` document for a sharded
+/// fan-out run: the v1 shape (schema bumped, `workload` gaining `shards`
+/// + `placement`), plus a per-shard breakdown array and cluster
+/// [`shard::Imbalance`] metrics.  The merge is shard-exact
+/// ([`LatencyHistogram::merge`] adds bucket counts), so a 1-shard v2
+/// report carries exactly the latency quantiles of the unsharded v1
+/// report for the same `(spec, policy)` — the degeneracy pin in
+/// `rust/tests/shard_virtual.rs`.
+pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
+                     driver: &ShardedDriver, run: &ShardedRun) -> Json {
+    // fold every shard's samples exactly once; the merge, the per-shard
+    // breakdown and the imbalance section all reuse these summaries
+    let parts: Vec<SloSummary> = run
+        .shards
+        .iter()
+        .map(|s| summarize(spec, &s.outcome))
+        .collect();
+    let m = shard::merge_summaries(&run.shards, &parts);
+    let imb = shard::imbalance_from(&run.shards, &parts, &m);
+    let shards_json: Vec<Json> = run
+        .shards
+        .iter()
+        .zip(&parts)
+        .map(|(s, part)| {
+            Json::obj(vec![
+                ("shard",
+                 Json::num(s.outcome.shard.unwrap_or(s.shard) as f64)),
+                ("requests", Json::num(s.requests as f64)),
+                ("completed", Json::num(part.completed as f64)),
+                ("errored", Json::num(part.errored as f64)),
+                ("tokens", Json::num(part.tokens as f64)),
+                ("duration_s", Json::num(round6(s.outcome.duration_s))),
+                ("peak_waiting",
+                 Json::num(s.outcome.peak_waiting as f64)),
+                ("p50_e2e_us", Json::num(round3(part.e2e.quantile(0.5)))),
+                ("p99_e2e_us",
+                 Json::num(round3(part.e2e.quantile(0.99)))),
+                ("attainment", Json::num(round6(part.attainment))),
+                ("tokens_per_s", Json::num(round3(part.tokens_per_s))),
+                ("contention_ratio",
+                 Json::num(round6(
+                     s.outcome.planner.contention_ratio(),
+                 ))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str("moepim.slo_report.v2")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("seed", Json::str(&spec.seed.to_string())),
+                ("requests", Json::num(spec.requests as f64)),
+                ("process", Json::str(spec.arrival.label())),
+                ("sizes", Json::str(spec.sizes.label())),
+                ("policy", Json::str(policy.label())),
+                ("clock", Json::str(m.clock)),
+                ("slots", Json::num(m.slots as f64)),
+                ("shards", Json::num(driver.shards as f64)),
+                ("placement", Json::str(driver.placement.label())),
+            ]),
+        ),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("queue", hist_json(&m.summary.queue)),
+                ("ttft", hist_json(&m.summary.ttft)),
+                ("e2e", hist_json(&m.summary.e2e)),
+            ]),
+        ),
+        (
+            "slo",
+            Json::obj(vec![
+                ("target_e2e_ms", Json::num(spec.slo_e2e_ms)),
+                ("attainment", Json::num(round6(m.summary.attainment))),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("duration_s", Json::num(round6(m.duration_s))),
+                ("tokens_per_s",
+                 Json::num(round3(m.summary.tokens_per_s))),
+                ("requests_per_s",
+                 Json::num(round3(m.summary.requests_per_s))),
+            ]),
+        ),
+        (
+            "counts",
+            Json::obj(vec![
+                ("completed", Json::num(m.summary.completed as f64)),
+                ("errored", Json::num(m.summary.errored as f64)),
+                ("tokens", Json::num(m.summary.tokens as f64)),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![
+                ("batch_dispatches",
+                 Json::num(m.batch_dispatches as f64)),
+                ("single_dispatches",
+                 Json::num(m.single_dispatches as f64)),
+                ("mean_batch_occupancy",
+                 Json::num(round3(m.mean_batch_occupancy()))),
+                ("peak_waiting", Json::num(m.peak_waiting as f64)),
+            ]),
+        ),
+        (
+            "planner",
+            Json::obj(vec![
+                ("steps", Json::num(m.planner.steps as f64)),
+                ("work", Json::num(m.planner.work as f64)),
+                ("cycles", Json::num(m.planner.cycles as f64)),
+                ("transfers", Json::num(m.planner.transfers as f64)),
+                ("contention_ratio",
+                 Json::num(round6(m.planner.contention_ratio()))),
+            ]),
+        ),
+        ("shards", Json::arr(shards_json)),
+        (
+            "imbalance",
+            Json::obj(vec![
+                ("requests_max", Json::num(imb.requests_max as f64)),
+                ("requests_min", Json::num(imb.requests_min as f64)),
+                ("load_ratio", Json::num(round3(imb.load_ratio))),
+                ("p99_e2e_max_us",
+                 Json::num(round3(imb.p99_e2e_max_us))),
+                ("p99_e2e_min_us",
+                 Json::num(round3(imb.p99_e2e_min_us))),
+                ("p99_gap_us", Json::num(round3(imb.p99_gap_us))),
+                ("merged_p99_e2e_us",
+                 Json::num(round3(imb.merged_p99_e2e_us))),
             ]),
         ),
     ])

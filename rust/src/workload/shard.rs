@@ -1,0 +1,689 @@
+//! Sharded multi-server fan-out: split one [`WorkloadSpec`] across N
+//! backends and merge the per-shard results into one cluster-level view.
+//!
+//! The paper's multiplexing story is intra-chip (crossbars sharing
+//! peripherals); this module is the same idea one level up — N serving
+//! stacks sharing one request stream.  A [`ShardedDriver`] materializes
+//! the spec **once**, assigns every request to a shard with a pluggable
+//! [`PlacementPolicy`], runs each shard's subset on its own backend
+//! (a [`crate::coordinator::Server`] or a virtual cluster from
+//! [`crate::workload::vsim`]), and merges the per-shard
+//! [`LoadOutcome`]s:
+//!
+//! ```text
+//! WorkloadSpec ──materialize──► [RequestSpec; R]
+//!                                     │ PlacementPolicy::assign
+//!                     ┌───────────────┼────────────────┐
+//!                     ▼               ▼                ▼
+//!                 shard 0          shard 1   …      shard N-1
+//!               run_virtual_     run_virtual_     run_virtual_
+//!                requests()       requests()       requests()
+//!                     │               │                │
+//!                     └──────── merge() ───────────────┘
+//!                                     ▼
+//!                    moepim.slo_report.v2 (merged + per-shard)
+//! ```
+//!
+//! Everything stays deterministic: per-request prompt and routing streams
+//! are keyed off `(spec.seed, request id)` — not off queue position or
+//! shard — so a request behaves identically wherever it is placed, and a
+//! one-shard split replays *exactly* the event sequence of the unsharded
+//! [`crate::workload::run_virtual`] (pinned by
+//! `rust/tests/shard_virtual.rs`).  Merging is shard-exact because
+//! [`LatencyHistogram::merge`] adds bucket counts: merged quantiles equal
+//! the quantiles of one histogram built over the concatenated samples.
+
+use anyhow::Result;
+
+use crate::sched::PlannerStats;
+use crate::util::rng::splitmix64;
+use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
+use crate::workload::driver::LoadOutcome;
+use crate::workload::hist::LatencyHistogram;
+use crate::workload::policy::AdmissionPolicy;
+use crate::workload::report::{summarize, SloSummary};
+use crate::workload::vsim::{
+    route_rng, run_virtual_requests, sample_experts, VirtualConfig,
+};
+
+/// Deterministic service-time estimate the least-outstanding placement
+/// uses (ns per prompt token of prefill; mirrors the default
+/// [`VirtualConfig`]'s `prefill_ns_per_token`).
+const EST_PREFILL_NS_PER_TOKEN: u64 = 4_000;
+/// Deterministic per-generated-token cost estimate for least-outstanding
+/// placement (dispatch overhead + typical priced cycles on the default
+/// virtual chip).
+const EST_DECODE_NS_PER_TOKEN: u64 = 30_000;
+
+/// Which shard each request of a workload is served by.
+///
+/// Placement runs at *split* time over the materialized request stream, so
+/// it is deterministic per seed and identical for every admission policy
+/// under test — policy comparisons stay apples-to-apples even sharded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlacementPolicy {
+    /// Request `i` goes to shard `i mod N` — the oblivious baseline.
+    RoundRobin,
+    /// Each arrival goes to the shard with the fewest requests still
+    /// estimated in flight at its arrival time (deterministic analytic
+    /// estimate — prompt·prefill + gen·decode cost constants — not
+    /// feedback from the backends); count ties break by least estimated
+    /// outstanding *work*, then lowest shard id.  For closed-loop specs
+    /// every materialized arrival offset is 0, so nothing has "completed"
+    /// by any arrival and the count degenerates to balanced assignment —
+    /// the work tie-break is then what spreads large requests apart.
+    LeastOutstanding,
+    /// Hash of `(prompt_len, gen_len)` picks the shard, so same-sized
+    /// requests colocate — size affinity keeps each shard's batch
+    /// composition homogeneous under SJF-style admission.
+    SizeHash,
+    /// Routing-aware placement: peek the request's seeded expert-routing
+    /// stream (the same `(seed, id)` stream the virtual cluster will
+    /// draw), take its first decode cycle's first-drawn expert — a
+    /// zipf-weighted draw, so biased toward (not guaranteed to be) the
+    /// hottest expert — and shard by that expert's peripheral-sharing
+    /// group.  Requests that will contend on the same group tend to land
+    /// on the same shard, so the *other* shards don't pay that group's
+    /// makespan.  The peeked stream is the *virtual* route model: against
+    /// virtual backends it is exactly what each shard will draw; against
+    /// `--real` servers (whose routing comes from the compiled model) it
+    /// is only a seeded proxy, so the colocation rationale does not carry
+    /// over.
+    RouteAware {
+        /// experts in the modeled router (match the backend's config)
+        n_experts: usize,
+        /// top-k routing width of the modeled router
+        experts_per_token: usize,
+        /// zipf skew of the modeled router's expert popularity
+        skew: f64,
+        /// peripheral-sharing group size (experts per group)
+        group_size: usize,
+    },
+}
+
+impl PlacementPolicy {
+    /// Routing-aware placement matching a virtual cluster's route model.
+    pub fn route_aware(cfg: &VirtualConfig) -> Self {
+        PlacementPolicy::RouteAware {
+            n_experts: cfg.n_experts.max(1),
+            experts_per_token: cfg.experts_per_token.max(1),
+            skew: cfg.route_skew,
+            group_size: cfg.group_size.max(1),
+        }
+    }
+
+    /// Canonical CLI spelling (`moepim shardtest --placement <label>`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastOutstanding => "least-outstanding",
+            PlacementPolicy::SizeHash => "size-hash",
+            PlacementPolicy::RouteAware { .. } => "route-aware",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` on unknown input.  `route-aware`
+    /// parses with the default virtual-cluster route model — callers with
+    /// a concrete [`VirtualConfig`] should rebuild it via
+    /// [`PlacementPolicy::route_aware`] so placement and backend agree.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
+            "least-outstanding" | "lo" => {
+                Some(PlacementPolicy::LeastOutstanding)
+            }
+            "size-hash" | "hash" => Some(PlacementPolicy::SizeHash),
+            "route-aware" | "route" => {
+                Some(PlacementPolicy::route_aware(&VirtualConfig::default()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Assign every request to a shard in `[0, shards)`.  Deterministic in
+    /// `(spec.seed, reqs, shards)`; requests must be in arrival order
+    /// (which [`WorkloadSpec::materialize`] guarantees).
+    pub fn assign(&self, spec: &WorkloadSpec, reqs: &[RequestSpec],
+                  shards: usize) -> Vec<usize> {
+        let n = shards.max(1);
+        match self {
+            PlacementPolicy::RoundRobin => {
+                (0..reqs.len()).map(|i| i % n).collect()
+            }
+            PlacementPolicy::LeastOutstanding => {
+                // per-shard (est completion time, est service) in flight
+                let mut inflight: Vec<Vec<(u64, u64)>> =
+                    vec![Vec::new(); n];
+                reqs.iter()
+                    .map(|r| {
+                        let t = r.arrival_ns;
+                        for f in inflight.iter_mut() {
+                            f.retain(|&(done, _)| done > t);
+                        }
+                        let best = (0..n)
+                            .min_by_key(|&s| {
+                                let work: u64 = inflight[s]
+                                    .iter()
+                                    .map(|&(_, w)| w)
+                                    .sum();
+                                (inflight[s].len(), work, s)
+                            })
+                            .unwrap_or(0);
+                        let service = r.prompt_len as u64
+                            * EST_PREFILL_NS_PER_TOKEN
+                            + r.gen_len as u64 * EST_DECODE_NS_PER_TOKEN;
+                        inflight[best].push((t + service, service));
+                        best
+                    })
+                    .collect()
+            }
+            PlacementPolicy::SizeHash => reqs
+                .iter()
+                .map(|r| {
+                    // stateless SplitMix64 hash of the size pair (the same
+                    // mix Pcg32 seeds with)
+                    let mut key = ((r.prompt_len as u64) << 32)
+                        | (r.gen_len as u64 & 0xFFFF_FFFF);
+                    (splitmix64(&mut key) % n as u64) as usize
+                })
+                .collect(),
+            PlacementPolicy::RouteAware {
+                n_experts,
+                experts_per_token,
+                skew,
+                group_size,
+            } => reqs
+                .iter()
+                .map(|r| {
+                    let mut rng = route_rng(spec.seed, r.id);
+                    let sel = sample_experts(
+                        &mut rng,
+                        (*n_experts).max(1),
+                        (*experts_per_token).max(1),
+                        *skew,
+                    );
+                    let dominant = sel.first().copied().unwrap_or(0);
+                    (dominant / (*group_size).max(1)) % n
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One shard's slice of a split workload: the sub-spec its backend runs
+/// under (same seed/SLO; closed-loop user share adjusted) plus its
+/// requests, with workload-global ids and arrival offsets preserved.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardLoad {
+    /// shard index in `[0, N)`
+    pub shard: usize,
+    /// the per-shard spec (`requests` = this shard's count; for closed
+    /// loops, `users` is this shard's share of the population)
+    pub spec: WorkloadSpec,
+    /// this shard's requests, in global arrival order
+    pub reqs: Vec<RequestSpec>,
+}
+
+/// One shard's collected result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardOutcome {
+    /// shard index in `[0, N)`
+    pub shard: usize,
+    /// requests assigned to this shard (== terminal samples collected)
+    pub requests: usize,
+    /// the shard backend's full load outcome
+    pub outcome: LoadOutcome,
+}
+
+/// Every shard's outcome from one fan-out run, in shard order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedRun {
+    /// one entry per shard, index == shard id
+    pub shards: Vec<ShardOutcome>,
+}
+
+/// Splits one workload across N backends and collects per-shard outcomes.
+///
+/// The driver is backend-agnostic: [`ShardedDriver::run_virtual`] fans out
+/// over N independent virtual clusters (deterministic, byte-identical
+/// reports per seed), while [`ShardedDriver::run_with`] accepts any
+/// per-shard runner — e.g. real [`crate::coordinator::Server`]s spawned
+/// one at a time (the PJRT client is single-owner, so real shards execute
+/// serially; each still serves only its own subset).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedDriver {
+    /// number of shards N (>= 1)
+    pub shards: usize,
+    /// how requests are assigned to shards
+    pub placement: PlacementPolicy,
+}
+
+impl ShardedDriver {
+    /// A driver fanning out over `shards` backends under `placement`.
+    pub fn new(shards: usize, placement: PlacementPolicy) -> Self {
+        ShardedDriver { shards: shards.max(1), placement }
+    }
+
+    /// Materialize `spec` once and partition it: every request lands on
+    /// exactly one shard (pinned by `rust/tests/shard_virtual.rs`).  For
+    /// closed-loop specs the user population is divided across shards
+    /// (shard `i` gets `users/N`, the first `users % N` shards one extra,
+    /// minimum one per shard — a shard holding requests needs a driver to
+    /// make progress).  That floor means a closed loop fanned out over
+    /// more shards than users runs *more* concurrent users than the spec
+    /// asked for (up to one per request-holding shard); keep
+    /// `users >= N` when the closed-loop concurrency level is the thing
+    /// under study.
+    pub fn split(&self, spec: &WorkloadSpec) -> Vec<ShardLoad> {
+        let n = self.shards.max(1);
+        let reqs = spec.materialize();
+        let assign = self.placement.assign(spec, &reqs, n);
+        let mut parts: Vec<Vec<RequestSpec>> = vec![Vec::new(); n];
+        for (r, &s) in reqs.iter().zip(&assign) {
+            parts[s.min(n - 1)].push(r.clone());
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, reqs_i)| {
+                let arrival = match &spec.arrival {
+                    ArrivalProcess::Closed { users, think_ms } => {
+                        let share = users / n + usize::from(i < users % n);
+                        ArrivalProcess::Closed {
+                            users: share.max(1),
+                            think_ms: *think_ms,
+                        }
+                    }
+                    other => other.clone(),
+                };
+                ShardLoad {
+                    shard: i,
+                    spec: WorkloadSpec {
+                        requests: reqs_i.len(),
+                        arrival,
+                        ..spec.clone()
+                    },
+                    reqs: reqs_i,
+                }
+            })
+            .collect()
+    }
+
+    /// Fan `spec` out over N independent virtual clusters (each a fresh
+    /// [`VirtualConfig`]-shaped chip with its own event clock) and collect
+    /// every shard's outcome.  Deterministic: the same
+    /// `(cfg, spec, policy, shards, placement)` always yields an identical
+    /// [`ShardedRun`], so merged reports are byte-identical per seed.
+    pub fn run_virtual(&self, cfg: &VirtualConfig, spec: &WorkloadSpec,
+                       policy: AdmissionPolicy) -> ShardedRun {
+        self.run_with(spec, |shard, sspec, reqs| {
+            let mut out = run_virtual_requests(cfg, sspec, reqs, policy);
+            out.shard = Some(shard);
+            Ok(out)
+        })
+        .expect("virtual shard runs are infallible")
+    }
+
+    /// Fan `spec` out with a caller-supplied per-shard runner (shard id,
+    /// per-shard spec, this shard's requests).  Shards run in shard order;
+    /// the first runner error aborts the fan-out.  An outcome the runner
+    /// left untagged gets its shard id filled in.
+    pub fn run_with<F>(&self, spec: &WorkloadSpec, mut run: F)
+        -> Result<ShardedRun>
+    where
+        F: FnMut(usize, &WorkloadSpec, &[RequestSpec])
+            -> Result<LoadOutcome>,
+    {
+        let loads = self.split(spec);
+        let mut shards = Vec::with_capacity(loads.len());
+        for load in &loads {
+            let mut outcome = run(load.shard, &load.spec, &load.reqs)?;
+            if outcome.shard.is_none() {
+                outcome.shard = Some(load.shard);
+            }
+            shards.push(ShardOutcome {
+                shard: load.shard,
+                requests: load.reqs.len(),
+                outcome,
+            });
+        }
+        Ok(ShardedRun { shards })
+    }
+}
+
+/// The cluster-level merge of a fan-out run: shard-exact histograms plus
+/// summed/extremal serving telemetry, ready for the
+/// `moepim.slo_report.v2` document.
+#[derive(Debug, Clone)]
+pub struct MergedLoad {
+    /// merged latency histograms + counts; throughput is computed over the
+    /// cluster makespan (the slowest shard's duration — shards run
+    /// concurrently)
+    pub summary: SloSummary,
+    /// cluster makespan: max per-shard `duration_s`
+    pub duration_s: f64,
+    /// total serving slots across shards
+    pub slots: usize,
+    /// max per-shard admission-queue high-water mark
+    pub peak_waiting: usize,
+    /// batched decode dispatches, summed across shards
+    pub batch_dispatches: u64,
+    /// tokens advanced by batched dispatches, summed
+    pub batched_tokens: u64,
+    /// single-token fallback dispatches, summed
+    pub single_dispatches: u64,
+    /// planner telemetry with every counter summed across shards
+    pub planner: PlannerStats,
+    /// `"virtual"` or `"wall"`, from the shard outcomes
+    pub clock: &'static str,
+}
+
+impl MergedLoad {
+    /// Mean live slots per batched dispatch, cluster-wide.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_dispatches == 0 {
+            0.0
+        } else {
+            self.batched_tokens as f64 / self.batch_dispatches as f64
+        }
+    }
+}
+
+/// Merge per-shard outcomes into one cluster view.  Exact on the bucket
+/// level: merged quantiles equal those of one histogram built over all
+/// shards' samples concatenated (within zero error — same buckets), which
+/// is why a 1-shard merge reproduces the unsharded report's quantiles
+/// exactly.
+pub fn merge(spec: &WorkloadSpec, shards: &[ShardOutcome]) -> MergedLoad {
+    let parts: Vec<SloSummary> =
+        shards.iter().map(|s| summarize(spec, &s.outcome)).collect();
+    merge_summaries(shards, &parts)
+}
+
+/// [`merge`] over per-shard summaries the caller already computed — the
+/// report builder folds each shard's samples exactly once and reuses the
+/// summaries for the breakdown and imbalance sections.  `parts[i]` must
+/// be `summarize(spec, &shards[i].outcome)`.
+pub(crate) fn merge_summaries(shards: &[ShardOutcome],
+                              parts: &[SloSummary]) -> MergedLoad {
+    debug_assert_eq!(shards.len(), parts.len());
+    let summary = SloSummary {
+        queue: LatencyHistogram::new(),
+        ttft: LatencyHistogram::new(),
+        e2e: LatencyHistogram::new(),
+        completed: 0,
+        errored: 0,
+        tokens: 0,
+        slo_met: 0,
+        attainment: 1.0,
+        tokens_per_s: 0.0,
+        requests_per_s: 0.0,
+    };
+    let mut merged = MergedLoad {
+        summary,
+        duration_s: 0.0,
+        slots: 0,
+        peak_waiting: 0,
+        batch_dispatches: 0,
+        batched_tokens: 0,
+        single_dispatches: 0,
+        planner: PlannerStats::default(),
+        clock: "virtual",
+    };
+    for (i, (s, part)) in shards.iter().zip(parts).enumerate() {
+        merged.summary.queue.merge(&part.queue);
+        merged.summary.ttft.merge(&part.ttft);
+        merged.summary.e2e.merge(&part.e2e);
+        merged.summary.completed += part.completed;
+        merged.summary.errored += part.errored;
+        merged.summary.tokens += part.tokens;
+        merged.summary.slo_met += part.slo_met;
+        merged.duration_s = merged.duration_s.max(s.outcome.duration_s);
+        merged.slots += s.outcome.slots;
+        merged.peak_waiting =
+            merged.peak_waiting.max(s.outcome.peak_waiting);
+        merged.batch_dispatches += s.outcome.batch_dispatches;
+        merged.batched_tokens += s.outcome.batched_tokens;
+        merged.single_dispatches += s.outcome.single_dispatches;
+        merged.planner.steps += s.outcome.planner.steps;
+        merged.planner.work += s.outcome.planner.work;
+        merged.planner.cycles += s.outcome.planner.cycles;
+        merged.planner.contention_cycles +=
+            s.outcome.planner.contention_cycles;
+        merged.planner.transfers += s.outcome.planner.transfers;
+        if i == 0 {
+            merged.clock = s.outcome.clock;
+        }
+    }
+    let n = merged.summary.completed + merged.summary.errored;
+    merged.summary.attainment = if n == 0 {
+        1.0
+    } else {
+        merged.summary.slo_met as f64 / n as f64
+    };
+    let dur = merged.duration_s.max(1e-9);
+    merged.summary.tokens_per_s = merged.summary.tokens as f64 / dur;
+    merged.summary.requests_per_s = n as f64 / dur;
+    merged
+}
+
+/// Cluster imbalance metrics: how evenly the placement spread the load,
+/// and how far the worst shard's tail sits from the merged one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Imbalance {
+    /// requests on the most-loaded shard
+    pub requests_max: usize,
+    /// requests on the least-loaded shard
+    pub requests_min: usize,
+    /// `requests_max / max(requests_min, 1)`
+    pub load_ratio: f64,
+    /// highest per-shard p99 e2e latency (µs)
+    pub p99_e2e_max_us: f64,
+    /// lowest per-shard p99 e2e latency (µs; 0 for an empty shard)
+    pub p99_e2e_min_us: f64,
+    /// `p99_e2e_max_us - p99_e2e_min_us` — the per-shard tail spread
+    pub p99_gap_us: f64,
+    /// the merged histogram's p99 e2e (µs), for gauging how much the
+    /// worst shard's tail exceeds the cluster-level tail
+    pub merged_p99_e2e_us: f64,
+}
+
+/// Compute [`Imbalance`] over a fan-out run.  Callers that also need the
+/// merge should use [`analyze`] — it folds each shard's samples once and
+/// returns both.
+pub fn imbalance(spec: &WorkloadSpec, shards: &[ShardOutcome])
+    -> Imbalance {
+    analyze(spec, shards).1
+}
+
+/// The merge and the imbalance metrics in one pass: each shard's samples
+/// are folded into summaries exactly once and both views derive from the
+/// same fold (so they can never disagree).  This is what the report
+/// builder and the placement-study example use.
+pub fn analyze(spec: &WorkloadSpec, shards: &[ShardOutcome])
+    -> (MergedLoad, Imbalance) {
+    let parts: Vec<SloSummary> =
+        shards.iter().map(|s| summarize(spec, &s.outcome)).collect();
+    let merged = merge_summaries(shards, &parts);
+    let imb = imbalance_from(shards, &parts, &merged);
+    (merged, imb)
+}
+
+/// [`imbalance`] over summaries and a merge the caller already computed
+/// (`parts[i]` must summarize `shards[i]`; `merged` their merge).
+pub(crate) fn imbalance_from(shards: &[ShardOutcome],
+                             parts: &[SloSummary], merged: &MergedLoad)
+    -> Imbalance {
+    debug_assert_eq!(shards.len(), parts.len());
+    let mut requests_max = 0usize;
+    let mut requests_min = usize::MAX;
+    let mut p99_max = 0.0f64;
+    let mut p99_min = f64::INFINITY;
+    for (s, part) in shards.iter().zip(parts) {
+        requests_max = requests_max.max(s.requests);
+        requests_min = requests_min.min(s.requests);
+        let p99 = part.e2e.quantile(0.99);
+        p99_max = p99_max.max(p99);
+        p99_min = p99_min.min(p99);
+    }
+    if shards.is_empty() {
+        requests_min = 0;
+        p99_min = 0.0;
+    }
+    Imbalance {
+        requests_max,
+        requests_min,
+        load_ratio: requests_max as f64 / requests_min.max(1) as f64,
+        p99_e2e_max_us: p99_max,
+        p99_e2e_min_us: if p99_min.is_finite() { p99_min } else { 0.0 },
+        p99_gap_us: p99_max
+            - if p99_min.is_finite() { p99_min } else { 0.0 },
+        merged_p99_e2e_us: merged.summary.e2e.quantile(0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::SizeModel;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            seed: 51,
+            requests: 40,
+            arrival: ArrivalProcess::Poisson { rate_rps: 1_500.0 },
+            sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 200,
+        }
+    }
+
+    fn all_placements() -> Vec<PlacementPolicy> {
+        vec![
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastOutstanding,
+            PlacementPolicy::SizeHash,
+            PlacementPolicy::route_aware(&VirtualConfig::default()),
+        ]
+    }
+
+    #[test]
+    fn assignments_are_deterministic_and_in_range() {
+        let spec = spec();
+        let reqs = spec.materialize();
+        for p in all_placements() {
+            for n in [1usize, 2, 4, 8] {
+                let a = p.assign(&spec, &reqs, n);
+                let b = p.assign(&spec, &reqs, n);
+                assert_eq!(a, b, "{} not deterministic", p.label());
+                assert_eq!(a.len(), reqs.len());
+                assert!(a.iter().all(|&s| s < n), "{}", p.label());
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_is_modular() {
+        let spec = spec();
+        let reqs = spec.materialize();
+        let a = PlacementPolicy::RoundRobin.assign(&spec, &reqs, 3);
+        assert!(a.iter().enumerate().all(|(i, &s)| s == i % 3));
+    }
+
+    #[test]
+    fn split_partitions_every_request_exactly_once() {
+        let spec = spec();
+        for p in all_placements() {
+            let driver = ShardedDriver::new(4, p);
+            let loads = driver.split(&spec);
+            assert_eq!(loads.len(), 4);
+            let mut ids: Vec<u64> = loads
+                .iter()
+                .flat_map(|l| l.reqs.iter().map(|r| r.id))
+                .collect();
+            ids.sort_unstable();
+            assert_eq!(
+                ids,
+                (0..spec.requests as u64).collect::<Vec<u64>>(),
+                "{}",
+                p.label()
+            );
+        }
+    }
+
+    #[test]
+    fn one_shard_split_is_the_whole_spec() {
+        let spec = spec();
+        let driver =
+            ShardedDriver::new(1, PlacementPolicy::LeastOutstanding);
+        let loads = driver.split(&spec);
+        assert_eq!(loads.len(), 1);
+        assert_eq!(loads[0].reqs, spec.materialize());
+        assert_eq!(loads[0].spec, spec);
+    }
+
+    #[test]
+    fn merged_one_shard_equals_direct_run() {
+        let cfg = VirtualConfig::default();
+        let spec = spec();
+        let policy = AdmissionPolicy::sjf();
+        let direct = run_virtual_requests(
+            &cfg,
+            &spec,
+            &spec.materialize(),
+            policy,
+        );
+        let run = ShardedDriver::new(1, PlacementPolicy::RoundRobin)
+            .run_virtual(&cfg, &spec, policy);
+        assert_eq!(run.shards.len(), 1);
+        assert_eq!(run.shards[0].outcome.samples, direct.samples);
+        let merged = merge(&spec, &run.shards);
+        let solo = summarize(&spec, &direct);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.summary.e2e.quantile(q), solo.e2e.quantile(q));
+        }
+        assert_eq!(merged.summary.attainment, solo.attainment);
+        assert_eq!(merged.duration_s, direct.duration_s);
+    }
+
+    #[test]
+    fn closed_loop_user_shares_cover_the_population() {
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Closed { users: 6, think_ms: 0.0 },
+            ..spec()
+        };
+        let driver = ShardedDriver::new(4, PlacementPolicy::RoundRobin);
+        let loads = driver.split(&spec);
+        let users: Vec<usize> = loads
+            .iter()
+            .map(|l| match l.spec.arrival {
+                ArrivalProcess::Closed { users, .. } => users,
+                _ => panic!("closed spec lost its arrival shape"),
+            })
+            .collect();
+        assert_eq!(users, vec![2, 2, 1, 1]);
+        let run = driver.run_virtual(
+            &VirtualConfig::default(),
+            &spec,
+            AdmissionPolicy::fifo(),
+        );
+        let total: usize =
+            run.shards.iter().map(|s| s.outcome.samples.len()).sum();
+        assert_eq!(total, spec.requests);
+    }
+
+    #[test]
+    fn imbalance_is_consistent() {
+        let cfg = VirtualConfig::default();
+        let spec = spec();
+        let run = ShardedDriver::new(4, PlacementPolicy::SizeHash)
+            .run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        let imb = imbalance(&spec, &run.shards);
+        assert!(imb.requests_max >= imb.requests_min);
+        assert!(imb.load_ratio >= 1.0 || imb.requests_max == 0);
+        assert!(imb.p99_e2e_max_us >= imb.p99_e2e_min_us);
+        assert!(imb.p99_gap_us >= 0.0);
+        let total: usize = run.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(total, spec.requests);
+    }
+}

@@ -39,14 +39,20 @@ const ROUTE_SALT: u64 = 0x6A09_E667_F3BC_C909;
 /// uniform g=2 grouping, Algorithm 1 rescheduling, 4 serving slots).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VirtualConfig {
+    /// serving slots (continuous-batching width B)
     pub slots: usize,
+    /// experts on the modeled chip
     pub n_experts: usize,
+    /// functional depth: each decode cycle is priced as this many planned
+    /// layer-steps
     pub n_layers: usize,
     /// experts selected per token per layer (top-k routing width)
     pub experts_per_token: usize,
     /// zipf skew of the simulated router's expert popularity
     pub route_skew: f64,
+    /// peripheral-sharing group size handed to the planner
     pub group_size: usize,
+    /// prefill schedule policy the planner prices cycles under
     pub schedule: SchedulePolicy,
     /// ns per planner slot-cycle (peripheral-shared expert execution)
     pub cycle_ns: u64,
@@ -54,6 +60,7 @@ pub struct VirtualConfig {
     pub dispatch_overhead_ns: u64,
     /// prefill cost per prompt token (serialises on the engine)
     pub prefill_ns_per_token: u64,
+    /// maximum sequence length a slot can hold (prompt + generated)
     pub max_seq: usize,
 }
 
@@ -109,8 +116,18 @@ fn ns_to_us(ns: u64) -> f64 {
     ns as f64 / 1000.0
 }
 
+/// The per-request router stream: seeded from `(spec seed, request id)` so
+/// a request's expert trajectory is independent of scheduling order, of
+/// which shard serves it, and of whatever else ran before it.  The sharded
+/// driver's routing-aware placement peeks the same stream (see
+/// [`crate::workload::shard`]), which is what aligns its shard choice with
+/// the experts the request will actually hit.
+pub(crate) fn route_rng(spec_seed: u64, id: u64) -> Pcg32 {
+    Pcg32::new(spec_seed ^ id.wrapping_mul(ROUTE_SALT))
+}
+
 /// Sample `k` distinct experts from a zipf-skewed popularity profile.
-fn sample_experts(rng: &mut Pcg32, e: usize, k: usize, skew: f64)
+pub(crate) fn sample_experts(rng: &mut Pcg32, e: usize, k: usize, skew: f64)
     -> Vec<usize> {
     let k = k.min(e);
     let mut sel: Vec<usize> = Vec::with_capacity(k);
@@ -137,7 +154,22 @@ fn sample_experts(rng: &mut Pcg32, e: usize, k: usize, skew: f64)
 /// same `(cfg, spec, policy)` always yields an identical [`LoadOutcome`].
 pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
                    policy: AdmissionPolicy) -> LoadOutcome {
-    let reqs = spec.materialize();
+    run_virtual_requests(cfg, spec, &spec.materialize(), policy)
+}
+
+/// Run an explicit request list under `policy` on the virtual cluster.
+///
+/// This is [`run_virtual`] with the materialization step factored out: the
+/// sharded fan-out driver ([`crate::workload::shard`]) materializes a spec
+/// once, partitions the requests across shards, and hands each shard its
+/// subset — so a one-shard split runs *exactly* the same event sequence as
+/// [`run_virtual`] on the whole spec.  `spec` still supplies the seed (per
+/// request prompt/routing streams key off `spec.seed ^ id`, not off queue
+/// position) and the arrival discipline; arrival *times* come from the
+/// `reqs` themselves.
+pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                            reqs: &[RequestSpec], policy: AdmissionPolicy)
+    -> LoadOutcome {
     let slots = cfg.slots.max(1);
     let n_layers = cfg.n_layers.max(1);
     let (closed, think_ns) = match spec.arrival {
@@ -255,14 +287,14 @@ pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 admitted_ns: now,
                 admit_seq,
                 tokens: 1,
-                rng: Pcg32::new(spec.seed ^ r.id.wrapping_mul(ROUTE_SALT)),
+                rng: route_rng(spec.seed, r.id),
             };
             admit_seq += 1;
             if l.tokens >= r.gen_len as u64
                 || r.prompt_len + 1 >= cfg.max_seq
             {
                 // the prefill-sampled token already completed the request
-                samples.push(finish_sample(&reqs, &l, now));
+                samples.push(finish_sample(reqs, &l, now));
                 if closed > 0 {
                     issue_next(&mut upcoming, &mut next_issue, reqs.len(),
                                now + think_ns);
@@ -324,7 +356,7 @@ pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
             };
             if done {
                 let l = live[s].take().unwrap();
-                samples.push(finish_sample(&reqs, &l, now));
+                samples.push(finish_sample(reqs, &l, now));
                 if closed > 0 {
                     issue_next(&mut upcoming, &mut next_issue, reqs.len(),
                                now + think_ns);
@@ -343,6 +375,7 @@ pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
         single_dispatches,
         duration_s: now as f64 / 1e9,
         clock: "virtual",
+        shard: None,
     }
 }
 

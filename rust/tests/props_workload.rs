@@ -1,14 +1,19 @@
 //! Property tests for the workload subsystem: the latency histogram's
 //! quantile contract (monotonicity, merge == concat-then-build, bounded
-//! relative bucket error), arrival-generator determinism and mean-rate
-//! convergence, and admission-policy selection invariants.
+//! relative bucket error), the sharded fan-out's merge contract (for any
+//! seed / shard count / placement, merged quantiles track the
+//! concatenated samples within the documented bucket error),
+//! arrival-generator determinism and mean-rate convergence, and
+//! admission-policy selection invariants.
 //!
 //! No artifacts needed — everything here is host-side math.
 
 use moepim::util::prop;
 use moepim::util::rng::Pcg32;
 use moepim::workload::{
-    AdmissionPolicy, ArrivalProcess, LatencyHistogram, QueuedMeta,
+    report, shard, AdmissionPolicy, ArrivalProcess, LatencyHistogram,
+    PlacementPolicy, QueuedMeta, ShardedDriver, SizeModel, VirtualConfig,
+    WorkloadSpec,
 };
 
 // ---------------------------------------------------------------------------
@@ -94,6 +99,96 @@ fn quantile_error_is_bounded_relative_to_exact() {
             err <= bound,
             "q={q} exact={exact} approx={approx} err={err} > {bound}"
         );
+    });
+}
+
+/// For any seed and shard count, the shard-merged e2e histogram's
+/// quantiles equal the exact order statistics of the concatenated
+/// per-shard samples within the documented `2^(1/16) - 1` bucket error —
+/// i.e. splitting an experiment across shards and merging loses nothing
+/// beyond the histogram's own (bounded) bucketing.
+#[test]
+fn shard_merged_quantiles_match_concat_within_bucket_error() {
+    let bound = LatencyHistogram::rel_error_bound() + 1e-9;
+    let placements = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::SizeHash,
+        PlacementPolicy::route_aware(&VirtualConfig::default()),
+    ];
+    prop::check(25, |g| {
+        let seed = g.rng.next_u64();
+        let shards = 1 + g.usize(8);
+        let placement = placements[g.usize(placements.len())];
+        let spec = WorkloadSpec {
+            seed,
+            requests: g.size(4, 64),
+            arrival: ArrivalProcess::Poisson {
+                rate_rps: 200.0 + g.f64() * 3000.0,
+            },
+            sizes: SizeModel::Uniform { prompt: (4, 16), gen: (1, 10) },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 500,
+        };
+        let run = ShardedDriver::new(shards, placement).run_virtual(
+            &VirtualConfig::default(),
+            &spec,
+            AdmissionPolicy::fifo(),
+        );
+        let merged = shard::merge(&spec, &run.shards);
+
+        // exact reference: every successful sample across all shards
+        let mut all: Vec<f64> = run
+            .shards
+            .iter()
+            .flat_map(|s| s.outcome.samples.iter())
+            .filter(|x| x.ok)
+            .map(|x| x.e2e_us)
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = all.len();
+        assert_eq!(merged.summary.e2e.count(), n as u64);
+        if n == 0 {
+            return;
+        }
+        for k in 1..=20 {
+            let q = k as f64 / 20.0;
+            // identical rank rule on both sides: order statistic ceil(q·n)
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = all[rank - 1];
+            let approx = merged.summary.e2e.quantile(q);
+            if exact == 0.0 {
+                assert_eq!(approx, 0.0, "q={q}");
+            } else {
+                let err = (approx - exact).abs() / exact;
+                assert!(
+                    err <= bound,
+                    "{} x {shards} shards q={q}: exact={exact} \
+                     approx={approx} err={err} > {bound}",
+                    placement.label()
+                );
+            }
+        }
+        // and the merged histogram is exactly the concat-then-build one
+        let mut concat = LatencyHistogram::new();
+        for &v in &all {
+            concat.record(v);
+        }
+        for k in 1..=20 {
+            let q = k as f64 / 20.0;
+            assert_eq!(
+                merged.summary.e2e.quantile(q),
+                concat.quantile(q),
+                "merge != concat at q={q}"
+            );
+        }
+        // sanity: per-shard summaries partition the merged counts
+        let total: u64 = run
+            .shards
+            .iter()
+            .map(|s| report::summarize(&spec, &s.outcome).completed)
+            .sum();
+        assert_eq!(merged.summary.completed, total);
     });
 }
 
