@@ -40,7 +40,7 @@ fn main() {
     let policy = AdmissionPolicy::fifo();
     let placements = [
         PlacementPolicy::RoundRobin,
-        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::least_outstanding(&cfg),
         PlacementPolicy::SizeHash,
         PlacementPolicy::route_aware(&cfg),
     ];

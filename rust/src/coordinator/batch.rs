@@ -55,6 +55,29 @@ pub struct SlotSession {
     pub pos: usize,
 }
 
+/// An in-progress chunked prefill occupying a serving slot
+/// (see [`BatchEngine::begin_prefill`] / [`BatchEngine::advance_prefill`]).
+///
+/// The prompt cursor tracks how far the slot's KV/GO banks are filled: the
+/// pools currently hold the pipeline state of the length-`cursor` prefix.
+/// The padded prefill artifacts recompute the whole valid prefix per
+/// dispatch (fixed-shape HLO), so each chunk advance replays the layer
+/// stack at the grown prefix length and re-seeds the banks; the *final*
+/// chunk runs at the full prompt length, making its dispatches — and
+/// therefore the banks it leaves behind and the first sampled token —
+/// bit-identical to a monolithic [`BatchEngine::admit`].
+#[derive(Debug, Clone)]
+pub struct PrefillState {
+    /// the full prompt being prefilled into this slot
+    pub prompt: Vec<i32>,
+    /// prompt tokens whose pipeline state the slot's banks currently hold
+    /// (`0..cursor` filled; prefill completes when `cursor == prompt.len()`)
+    pub cursor: usize,
+    /// cached `embed_prefill` output (computed on the first chunk; the
+    /// embedding has no valid-length input, so it is chunk-invariant)
+    embed: Option<Vec<f32>>,
+}
+
 /// Result of one batched decode step.
 #[derive(Debug, Clone)]
 pub struct BatchStep {
@@ -76,6 +99,9 @@ pub struct BatchEngine {
     /// `go[slot][layer]` — one GO bank per slot per layer
     go: Vec<Vec<GoCache>>,
     sessions: Vec<Option<SlotSession>>,
+    /// per-slot in-progress chunked prefill (a slot is either decoding —
+    /// `sessions[s]` — or prefilling — `prefill[s]` — never both)
+    prefill: Vec<Option<PrefillState>>,
     planner: BatchPlanner,
 }
 
@@ -116,6 +142,7 @@ impl BatchEngine {
                 })
                 .collect(),
             sessions: vec![None; slots],
+            prefill: vec![None; slots],
             slots,
             engine,
             planner,
@@ -142,14 +169,26 @@ impl BatchEngine {
         (0..self.slots).filter(|&s| self.sessions[s].is_some()).collect()
     }
 
-    /// The lowest-indexed free slot, if any.
+    /// The lowest-indexed free slot (neither decoding nor mid-prefill),
+    /// if any.
     pub fn free_slot(&self) -> Option<usize> {
-        (0..self.slots).find(|&s| self.sessions[s].is_none())
+        (0..self.slots)
+            .find(|&s| self.sessions[s].is_none() && self.prefill[s].is_none())
     }
 
     /// The live session in `slot`, if any.
     pub fn session(&self, slot: usize) -> Option<&SlotSession> {
         self.sessions[slot].as_ref()
+    }
+
+    /// Slots currently mid-chunked-prefill (holding a [`PrefillState`]).
+    pub fn prefilling(&self) -> Vec<usize> {
+        (0..self.slots).filter(|&s| self.prefill[s].is_some()).collect()
+    }
+
+    /// The in-progress prefill in `slot`, if any.
+    pub fn prefill_state(&self, slot: usize) -> Option<&PrefillState> {
+        self.prefill[slot].as_ref()
     }
 
     /// Cumulative planner telemetry over every committed step.
@@ -158,43 +197,168 @@ impl BatchEngine {
     }
 
     /// Prefill `prompt` into a free slot; returns (slot, first sampled
-    /// token).  Fails without touching any slot when the pool is full or
-    /// the prompt is invalid.
+    /// token).  Fails without leaving any slot occupied when the pool is
+    /// full or the prompt is invalid.
+    ///
+    /// Implemented as [`BatchEngine::begin_prefill`] plus one full-length
+    /// [`BatchEngine::advance_prefill`], so monolithic admission *is* the
+    /// single-chunk case — chunked/monolithic stream equivalence is
+    /// structural (one prefill code path), not merely test-enforced, and
+    /// prompt rows are priced on the planner identically either way.
     pub fn admit(&mut self, prompt: &[i32]) -> Result<(usize, i32)> {
-        let slot = self
-            .free_slot()
-            .ok_or_else(|| anyhow!("no free serving slot"))?;
-        let m = self.engine.model.clone();
-        let t = prompt.len();
-        let out = self.engine.prefill_pipeline(prompt)?;
-        // seed_slot overwrites the slot's whole padded region on every
-        // layer, so no zero-fill is needed here (release() already reset
-        // it anyway)
-        self.kv.seed_slot(slot, &out.ks, &out.vs, t);
-        for (bank, routing) in
-            self.go[slot].iter_mut().zip(&out.routings)
-        {
-            bank.reset();
-            bank.seed_from_routing(routing);
+        let slot = self.begin_prefill(prompt)?;
+        match self.advance_prefill(slot, prompt.len()) {
+            Ok(Some(next)) => Ok((slot, next)),
+            Ok(None) => {
+                self.release(slot);
+                Err(anyhow!("full-length prefill chunk did not complete"))
+            }
+            Err(e) => {
+                self.release(slot);
+                Err(e)
+            }
         }
-        let next = self
-            .engine
-            .sample(&out.y[(t - 1) * m.d_model..t * m.d_model], t)?;
-        self.sessions[slot] =
-            Some(SlotSession { ids: prompt.to_vec(), pos: t });
-        Ok((slot, next))
     }
 
     /// Free `slot` for the next request, returning its final session state.
+    /// Also aborts an in-progress chunked prefill holding the slot (its
+    /// partial bank fill is reset; there is no session to return).
     pub fn release(&mut self, slot: usize) -> Option<SlotSession> {
         let sess = self.sessions[slot].take();
-        if sess.is_some() {
+        let fill = self.prefill[slot].take();
+        if sess.is_some() || fill.is_some() {
             self.kv.reset_slot(slot);
             for bank in self.go[slot].iter_mut() {
                 bank.reset();
             }
         }
         sess
+    }
+
+    /// Claim a free slot for a chunked prefill of `prompt` without running
+    /// any dispatch yet; returns the claimed slot.  The slot is occupied
+    /// (invisible to [`BatchEngine::free_slot`] / [`BatchEngine::admit`])
+    /// until [`BatchEngine::advance_prefill`] completes the prompt or
+    /// [`BatchEngine::release`] aborts it.  Fails without touching any
+    /// slot when the pool is full or the prompt is invalid (empty /
+    /// longer than `max_seq` — the same checks monolithic admission runs).
+    pub fn begin_prefill(&mut self, prompt: &[i32]) -> Result<usize> {
+        let m = &self.engine.model;
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        if prompt.len() > m.max_seq {
+            return Err(anyhow!("prompt longer than max_seq"));
+        }
+        let slot = self
+            .free_slot()
+            .ok_or_else(|| anyhow!("no free serving slot"))?;
+        self.prefill[slot] = Some(PrefillState {
+            prompt: prompt.to_vec(),
+            cursor: 0,
+            embed: None,
+        });
+        Ok(slot)
+    }
+
+    /// Advance the chunked prefill in `slot` by up to `chunk` prompt
+    /// tokens (at least one).  Returns `Ok(None)` while the prompt is
+    /// still filling and `Ok(Some(first_token))` on the chunk that
+    /// completes it — at which point the slot holds a live decode session
+    /// exactly as if [`BatchEngine::admit`] had prefilled it monolithically.
+    ///
+    /// Each advance re-runs the padded layer stack at the grown prefix
+    /// length `t_c` from the cached embedding (the fixed-shape prefill
+    /// artifacts recompute the whole valid prefix per dispatch), seeds the
+    /// slot's KV/GO banks with the length-`t_c` state (the partial bank
+    /// fill), and prices the chunk's newly-covered token rows on the
+    /// [`BatchPlanner`] so prefill work shows up in the same peripheral
+    /// contention telemetry as decode rows.  The final chunk runs at the
+    /// full prompt length, so its dispatches, bank seeds and sampled first
+    /// token are bit-identical to the monolithic path — pinned by
+    /// `rust/tests/batch_equivalence.rs` across chunk sizes.
+    ///
+    /// On error the prefill stays claimed but un-advanced; callers retire
+    /// the slot with [`BatchEngine::release`].
+    pub fn advance_prefill(&mut self, slot: usize, chunk: usize)
+        -> Result<Option<i32>> {
+        // take the state out of the slot so the chunk body can borrow the
+        // engine/pools mutably without cloning the prompt or the cached
+        // embedding (it goes back on every non-completing outcome)
+        let mut st = self.prefill[slot]
+            .take()
+            .ok_or_else(|| {
+                anyhow!("slot {slot} has no prefill in progress")
+            })?;
+        match self.advance_chunk(slot, chunk, &mut st) {
+            Ok(Some(next)) => {
+                let t = st.prompt.len();
+                self.sessions[slot] =
+                    Some(SlotSession { ids: st.prompt, pos: t });
+                Ok(Some(next))
+            }
+            Ok(None) => {
+                self.prefill[slot] = Some(st);
+                Ok(None)
+            }
+            Err(e) => {
+                self.prefill[slot] = Some(st);
+                Err(e)
+            }
+        }
+    }
+
+    /// One chunk of the padded prefill replay over `st` (state borrowed,
+    /// never cloned).  Returns the first sampled token when the chunk
+    /// reaches the full prompt length.
+    fn advance_chunk(&mut self, slot: usize, chunk: usize,
+                     st: &mut PrefillState) -> Result<Option<i32>> {
+        let t = st.prompt.len();
+        if st.embed.is_none() {
+            st.embed = Some(self.engine.prefill_embed(&st.prompt)?);
+        }
+        let x0 = st.embed.as_deref().expect("embedding cached above");
+        let t_c = (st.cursor + chunk.max(1)).min(t);
+        let out = self.engine.prefill_layers(x0, t_c)?;
+        // partial bank fill: the pools now hold the length-t_c prefix
+        // state (seed_slot overwrites the slot's whole padded region per
+        // layer, so each chunk supersedes the previous fill wholesale)
+        self.kv.seed_slot(slot, &out.ks, &out.vs, t_c);
+        for (bank, routing) in self.go[slot].iter_mut().zip(&out.routings)
+        {
+            bank.reset();
+            bank.seed_from_routing(routing);
+        }
+        // price the chunk's newly-covered token rows as L planned
+        // layer-steps: prefill rows occupy the same grouped peripherals
+        // the decode dispatches are priced on, so the serving-lifetime
+        // contention telemetry sees prefill work too.  Monolithic
+        // admission rides this same path as the single-chunk case, so
+        // prompt rows are always priced — but a multi-chunk prefill
+        // emits ceil(P/C)·L layer-steps (vs L monolithic) and its
+        // intermediate chunks price rows from shorter-prefix routings,
+        // so planner counters are comparable in mechanism, not
+        // numerically identical, across the chunk knob
+        let layer_sets: Vec<Vec<Vec<usize>>> = out
+            .routings
+            .iter()
+            .map(|routing| {
+                (st.cursor..t_c)
+                    .map(|tok| routing.choices.experts_of(tok))
+                    .collect()
+            })
+            .collect();
+        self.planner.plan_layers(&layer_sets);
+        if t_c < t {
+            st.cursor = t_c;
+            return Ok(None);
+        }
+        // final chunk: runs at the full prompt length — sample the first
+        // token; the caller promotes the slot to a live session
+        st.cursor = t_c;
+        let d = self.engine.model.d_model;
+        let next = self.engine.sample(&out.y[(t - 1) * d..t * d], t)?;
+        Ok(Some(next))
     }
 
     /// One batched decode step: advance every `(slot, token)` in `steps` by

@@ -168,8 +168,12 @@ impl ModelEngine {
         padded
     }
 
-    /// Run the padded prefill pipeline over `ids` through all L layers.
-    pub(crate) fn prefill_pipeline(&self, ids: &[i32]) -> Result<PrefillOut> {
+    /// The embedding stage of the padded prefill pipeline: validate `ids`,
+    /// pad to `max_seq`, run `embed_prefill`.  The output is a pure
+    /// function of the prompt (no valid-length input), so chunked prefill
+    /// ([`crate::coordinator::BatchEngine::advance_prefill`]) computes it
+    /// once and replays the layer stack at growing prefix lengths.
+    pub(crate) fn prefill_embed(&self, ids: &[i32]) -> Result<Vec<f32>> {
         let m = &self.model;
         let t = ids.len();
         if t == 0 {
@@ -179,12 +183,29 @@ impl ModelEngine {
             return Err(anyhow!("prompt longer than max_seq"));
         }
         let padded = self.pad_ids(ids);
-        let mut x = self
-            .rt
+        self.rt
             .get("embed_prefill")?
             .run(&[TensorIn::I32(&padded)])?
             .remove(0)
-            .into_f32()?;
+            .into_f32()
+    }
+
+    /// Run the padded prefill pipeline over `ids` through all L layers.
+    pub(crate) fn prefill_pipeline(&self, ids: &[i32]) -> Result<PrefillOut> {
+        let x0 = self.prefill_embed(ids)?;
+        self.prefill_layers(&x0, ids.len())
+    }
+
+    /// The layer stack of the padded prefill pipeline at valid prefix
+    /// length `t`, from a cached [`ModelEngine::prefill_embed`] output.
+    /// Every dispatch is identical to what a monolithic
+    /// [`ModelEngine::prefill_pipeline`] over the length-`t` prefix would
+    /// issue, which is what makes chunked prefill's final chunk (run at
+    /// the full prompt length) bit-identical to the monolithic path.
+    pub(crate) fn prefill_layers(&self, x0: &[f32], t: usize)
+        -> Result<PrefillOut> {
+        let m = &self.model;
+        let mut x = x0.to_vec();
         let mut routings = Vec::with_capacity(m.n_layers);
         let mut ks = Vec::with_capacity(m.n_layers);
         let mut vs = Vec::with_capacity(m.n_layers);

@@ -7,6 +7,6 @@ pub mod batch;
 pub mod engine;
 pub mod server;
 
-pub use batch::{BatchEngine, BatchStep, SlotSession};
+pub use batch::{BatchEngine, BatchStep, PrefillState, SlotSession};
 pub use engine::{DecodeMode, GenerationResult, ModelEngine, Session};
-pub use server::{Request, Response, Server, ServerStats};
+pub use server::{Request, Response, Server, ServerOptions, ServerStats};

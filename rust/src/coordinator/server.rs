@@ -4,7 +4,11 @@
 //! slots by a pluggable [`AdmissionPolicy`] (FIFO by default; SJF and
 //! deadline-aware variants for loadtest comparison), and every decode
 //! cycle advances *all* live slots with one batched dispatch per pipeline
-//! stage (single-token fallback when only one session is live).
+//! stage (single-token fallback when only one session is live).  With
+//! [`ServerOptions::prefill_chunk`] > 0 the router interleaves bounded
+//! prefill chunks of admitted-but-still-filling slots with those decode
+//! dispatches, so one long prompt no longer stalls every live decode slot
+//! (see DESIGN.md §Chunked prefill).
 //!
 //! Every submitted request gets a terminal [`Response`]: generation
 //! results and failures (oversized prompt, engine errors, shutdown) all
@@ -28,6 +32,39 @@ use crate::coordinator::engine::ModelEngine;
 use crate::runtime::Runtime;
 use crate::sched::PlannerStats;
 use crate::workload::{AdmissionPolicy, QueuedMeta};
+
+/// Spawn-time configuration for a [`Server`].
+///
+/// `prefill_chunk == 0` (the default) keeps the seed behaviour: admission
+/// runs the whole prefill pipeline monolithically before the next decode
+/// dispatch.  `prefill_chunk == N > 0` enables chunked prefill: admission
+/// only *claims* a slot, and each router cycle advances every claimed
+/// slot's prefill by at most `N` prompt tokens before dispatching the
+/// batched decode — so one long prompt can no longer stall every live
+/// decode slot (the head-of-line blocking fix; see DESIGN.md §Chunked
+/// prefill).  Chunked and monolithic admission produce bit-identical
+/// token streams for every prompt.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// which waiting request each freed slot goes to
+    pub policy: AdmissionPolicy,
+    /// shard id tag for multi-server fan-outs (`None`: standalone);
+    /// telemetry-only, see [`Server::spawn_sharded`]
+    pub shard: Option<usize>,
+    /// prefill chunk budget in prompt tokens per slot per router cycle
+    /// (`0`: monolithic prefill at admission, the seed behaviour)
+    pub prefill_chunk: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            policy: AdmissionPolicy::Fifo,
+            shard: None,
+            prefill_chunk: 0,
+        }
+    }
+}
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -114,6 +151,9 @@ pub struct ServerStats {
     pub batched_tokens: u64,
     /// single-token fallback dispatches
     pub single_dispatches: u64,
+    /// prefill chunk advances dispatched (0 unless the server was spawned
+    /// with [`ServerOptions::prefill_chunk`] > 0)
+    pub prefill_chunks: u64,
     /// high-water mark of the waiting queue
     pub peak_waiting: usize,
     /// cumulative group-aware planner telemetry (peripheral contention)
@@ -212,7 +252,8 @@ impl Server {
     /// decides which waiting request each freed slot goes to.
     pub fn spawn_with(artifacts_dir: PathBuf, policy: AdmissionPolicy)
         -> Result<Server> {
-        Self::spawn_inner(artifacts_dir, policy, None)
+        Self::spawn_opts(artifacts_dir,
+                         ServerOptions { policy, ..ServerOptions::default() })
     }
 
     /// [`Server::spawn_with`], tagged as shard `shard` of a multi-server
@@ -222,11 +263,17 @@ impl Server {
     /// only — admission and decode behave exactly as in an untagged server.
     pub fn spawn_sharded(artifacts_dir: PathBuf, policy: AdmissionPolicy,
                          shard: usize) -> Result<Server> {
-        Self::spawn_inner(artifacts_dir, policy, Some(shard))
+        Self::spawn_opts(artifacts_dir, ServerOptions {
+            policy,
+            shard: Some(shard),
+            ..ServerOptions::default()
+        })
     }
 
-    fn spawn_inner(artifacts_dir: PathBuf, policy: AdmissionPolicy,
-                   shard: Option<usize>) -> Result<Server> {
+    /// Spawn with explicit [`ServerOptions`] — the full surface: admission
+    /// policy, shard tag, and the chunked-prefill budget.
+    pub fn spawn_opts(artifacts_dir: PathBuf, opts: ServerOptions)
+        -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         let handle = std::thread::spawn(move || {
@@ -243,7 +290,7 @@ impl Server {
                     return;
                 }
             };
-            run_loop(engine, rx, policy, shard);
+            run_loop(engine, rx, opts);
         });
         match ready_rx.recv() {
             Ok(Ok(_platform)) => Ok(Server { tx, handle: Some(handle) }),
@@ -296,11 +343,43 @@ struct Waiting {
     passed_over: u32,
 }
 
+/// One slot mid-chunked-prefill: the admission bookkeeping carried while
+/// the engine's [`crate::coordinator::batch::PrefillState`] fills the
+/// slot's banks chunk by chunk.  `admitted` is the slot-grant instant
+/// (prefill start), so `queue_us` measures pure slot wait and TTFT picks
+/// up the prefill time — the same split the virtual clock reports.
+struct Fill {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+    admitted: Instant,
+    admit_seq: u64,
+}
+
+impl Fill {
+    /// Terminal error reply for a request that was admitted (slot granted,
+    /// prefill started) but never produced a token.
+    fn respond_err(self, err: String) {
+        let _ = self.reply.send(Response {
+            id: self.req.id,
+            result: Err(err),
+            latency_us: us(Instant::now(), self.submitted),
+            ttft_us: None,
+            queue_us: Some(us(self.admitted, self.submitted)),
+            admit_seq: Some(self.admit_seq),
+            batched_steps: 0,
+            single_steps: 0,
+        });
+    }
+}
+
 fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
-            policy: AdmissionPolicy, shard: Option<usize>) {
+            opts: ServerOptions) {
+    let ServerOptions { policy, shard, prefill_chunk } = opts;
     let slots = eng.slots();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
+    let mut filling: Vec<Option<Fill>> = (0..slots).map(|_| None).collect();
     let mut stats = ServerStats { slots, shard, ..ServerStats::default() };
     let mut admit_seq: u64 = 0;
 
@@ -308,7 +387,8 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
         // ---- 1. drain control messages; block only when fully idle ------
         loop {
             let idle = waiting.is_empty()
-                && live.iter().all(Option::is_none);
+                && live.iter().all(Option::is_none)
+                && filling.iter().all(Option::is_none);
             let msg = if idle {
                 match rx.recv() {
                     Ok(m) => m,
@@ -323,7 +403,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             };
             match msg {
                 Msg::Shutdown => {
-                    shutdown(waiting, live);
+                    shutdown(waiting, live, filling);
                     return;
                 }
                 Msg::Stats(tx) => {
@@ -409,6 +489,33 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                 w
             };
             let (req, reply, submitted) = (w.req, w.reply, w.submitted);
+            // the slot-grant instant: queue_us ends here, before any
+            // prefill work, so TTFT (through the first sampled token)
+            // carries the prefill cost — chunked and monolithic admission
+            // report the same split
+            let granted = Instant::now();
+            if prefill_chunk > 0 {
+                // chunked admission: claim the slot only; the prefill
+                // advances chunk-by-chunk below, interleaved with decode
+                match eng.begin_prefill(&req.prompt) {
+                    Ok(slot) => {
+                        filling[slot] = Some(Fill {
+                            req,
+                            reply,
+                            submitted,
+                            admitted: granted,
+                            admit_seq,
+                        });
+                        admit_seq += 1;
+                    }
+                    Err(e) => {
+                        stats.errored += 1;
+                        reject(req.id, &reply, submitted,
+                               format!("prefill failed: {e}"));
+                    }
+                }
+                continue;
+            }
             match eng.admit(&req.prompt) {
                 Ok((slot, next)) => {
                     // the prefill-sampled token is banked right away; the
@@ -420,7 +527,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         next,
                         tokens: vec![next],
                         submitted,
-                        admitted: Instant::now(),
+                        admitted: granted,
                         admit_seq,
                         first_token: Some(Instant::now()),
                         batched_steps: 0,
@@ -440,6 +547,57 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     stats.errored += 1;
                     reject(req.id, &reply, submitted,
                            format!("prefill failed: {e}"));
+                }
+            }
+        }
+
+        // ---- 3b. chunked prefill: advance every filling slot by at most
+        //          `prefill_chunk` prompt tokens, so long prompts fill in
+        //          across cycles instead of stalling the decode dispatch
+        //          below (the head-of-line blocking fix) -----------------
+        if prefill_chunk > 0 {
+            for slot in 0..slots {
+                if filling[slot].is_none() {
+                    continue;
+                }
+                match eng.advance_prefill(slot, prefill_chunk) {
+                    Ok(None) => {
+                        stats.prefill_chunks += 1;
+                    }
+                    Ok(Some(first)) => {
+                        stats.prefill_chunks += 1;
+                        let f = filling[slot].take().unwrap();
+                        // prefill complete: promote to a live decode
+                        // session; it rides this cycle's dispatch, exactly
+                        // like a freshly admitted monolithic request
+                        let l = Live {
+                            req: f.req,
+                            reply: f.reply,
+                            slot,
+                            next: first,
+                            tokens: vec![first],
+                            submitted: f.submitted,
+                            admitted: f.admitted,
+                            admit_seq: f.admit_seq,
+                            first_token: Some(Instant::now()),
+                            batched_steps: 0,
+                            single_steps: 0,
+                        };
+                        let pos = eng.session(slot).map_or(0, |s| s.pos);
+                        let done = l.tokens.len() >= l.req.gen_len
+                            || pos >= eng.model().max_seq;
+                        if done {
+                            finish_slot(&mut eng, &mut stats, slot, l);
+                        } else {
+                            live[slot] = Some(l);
+                        }
+                    }
+                    Err(e) => {
+                        let f = filling[slot].take().unwrap();
+                        eng.release(slot);
+                        stats.errored += 1;
+                        f.respond_err(format!("prefill failed: {e}"));
+                    }
                 }
             }
         }
@@ -524,11 +682,15 @@ fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
 }
 
 /// Terminal replies for everything in flight at shutdown.
-fn shutdown(waiting: VecDeque<Waiting>, live: Vec<Option<Live>>) {
+fn shutdown(waiting: VecDeque<Waiting>, live: Vec<Option<Live>>,
+            filling: Vec<Option<Fill>>) {
     for w in waiting {
         reject(w.req.id, &w.reply, w.submitted, "server shut down".into());
     }
     for l in live.into_iter().flatten() {
         l.respond(Err("server shut down".into()));
+    }
+    for f in filling.into_iter().flatten() {
+        f.respond_err("server shut down".into());
     }
 }

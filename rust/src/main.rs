@@ -198,16 +198,25 @@ fn toy_prompt(len: usize, seed: u64, vocab: usize) -> Vec<i32> {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use moepim::coordinator::Server;
+    use moepim::coordinator::{Server, ServerOptions};
     let n = args.usize_flag("prompts", 4);
     let gen = args.usize_flag("gen", 8);
-    let server = match Server::spawn(artifacts_dir(args)) {
+    let prefill_chunk = args.usize_flag("prefill-chunk", 0);
+    let server = match Server::spawn_opts(artifacts_dir(args),
+                                          ServerOptions {
+                                              prefill_chunk,
+                                              ..ServerOptions::default()
+                                          }) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("failed to start server: {e:#}");
             return 1;
         }
     };
+    if prefill_chunk > 0 {
+        println!("chunked prefill on: {prefill_chunk} prompt tokens per \
+                  slot per cycle");
+    }
     println!("server up; submitting {n} requests (gen {gen})");
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
@@ -254,11 +263,13 @@ fn cmd_serve(args: &Args) -> i32 {
         // runs and SLO reports read off one vocabulary
         println!(
             "slots {} | batched dispatches {} (mean occupancy {:.2}) | \
-             single {} | peak waiting {} | contention {:.1}% of {} cycles",
+             single {} | prefill chunks {} | peak waiting {} | \
+             contention {:.1}% of {} cycles",
             stats.slots,
             stats.batch_dispatches,
             stats.mean_batch_occupancy(),
             stats.single_dispatches,
+            stats.prefill_chunks,
             stats.peak_waiting,
             stats.planner.contention_ratio() * 100.0,
             stats.planner.cycles,
@@ -458,6 +469,7 @@ fn loadtest_vcfg(args: &Args) -> moepim::workload::VirtualConfig {
         slots: args.usize_flag("slots", d.slots).max(1),
         n_experts: args.usize_flag("experts", d.n_experts).max(1),
         n_layers: args.usize_flag("layers", d.n_layers).max(1),
+        prefill_chunk: args.usize_flag("prefill-chunk", d.prefill_chunk),
         ..d
     }
 }
@@ -465,9 +477,14 @@ fn loadtest_vcfg(args: &Args) -> moepim::workload::VirtualConfig {
 fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
                      policy: moepim::workload::AdmissionPolicy)
     -> Result<moepim::util::json::Json, i32> {
-    use moepim::coordinator::Server;
+    use moepim::coordinator::{Server, ServerOptions};
     use moepim::workload::{report, run_against_server};
-    let server = match Server::spawn_with(artifacts_dir(args), policy) {
+    let opts = ServerOptions {
+        policy,
+        prefill_chunk: args.usize_flag("prefill-chunk", 0),
+        ..ServerOptions::default()
+    };
+    let server = match Server::spawn_opts(artifacts_dir(args), opts) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("failed to start server: {e:#}");
@@ -530,16 +547,31 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
         // align the placement's route model with the backend's chip shape
         placement = PlacementPolicy::route_aware(&vcfg);
     }
+    if matches!(placement, PlacementPolicy::LeastOutstanding { .. }) {
+        // align the placement's service-time estimates with the backend
+        // actually serving the run: derived from the virtual config, or
+        // the real-path calibration constants under --real (the parse-time
+        // default silently mis-estimated any non-default config)
+        placement = if args.bool_flag("real") {
+            PlacementPolicy::least_outstanding_real()
+        } else {
+            PlacementPolicy::least_outstanding(&vcfg)
+        };
+    }
     let driver = ShardedDriver::new(shards, placement);
     let run = if args.bool_flag("real") {
         // real servers share one PJRT process (single-owner), so shards
         // run serially — each against a fresh server that serves only its
         // own subset, dropped before the next spawn
+        let prefill_chunk = args.usize_flag("prefill-chunk", 0);
         let result = driver.run_with(&spec, |shard, sspec, reqs| {
-            let server = moepim::coordinator::Server::spawn_sharded(
+            let server = moepim::coordinator::Server::spawn_opts(
                 artifacts_dir(args),
-                policy,
-                shard,
+                moepim::coordinator::ServerOptions {
+                    policy,
+                    shard: Some(shard),
+                    prefill_chunk,
+                },
             )?;
             run_requests_against_server(&server, sspec, reqs)
         });
@@ -567,18 +599,19 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
     0
 }
 
-/// `--smoke`: the CI gate.  Virtual leg: every (process × policy) cell of
-/// the acceptance matrix must emit a byte-identical report twice in a
-/// row.  Real leg (when an artifact set is present): a short closed-loop
-/// run against the threaded server under FIFO and SJF, every request
-/// terminal and successful.
+/// `--smoke`: the CI gate.  Virtual leg: every (process × policy ×
+/// prefill-chunk) cell of the acceptance matrix must emit a
+/// byte-identical report twice in a row — chunked admission exactly as
+/// repeatable as monolithic.  Real leg (when an artifact set is
+/// present): short closed-loop runs against the threaded server under
+/// FIFO, SJF, and FIFO with chunked prefill, every request terminal and
+/// successful.
 fn loadtest_smoke(args: &Args) -> i32 {
     use moepim::workload::{
         report, run_against_server, run_virtual, AdmissionPolicy,
         ArrivalProcess, SizeModel, VirtualConfig, WorkloadSpec,
     };
     let seed = args.u64_flag("seed", 2026);
-    let cfg = VirtualConfig::default();
     let processes = [
         ArrivalProcess::Poisson { rate_rps: 400.0 },
         ArrivalProcess::Bursty {
@@ -588,34 +621,50 @@ fn loadtest_smoke(args: &Args) -> i32 {
         },
     ];
     let policies = [AdmissionPolicy::fifo(), AdmissionPolicy::sjf()];
+    // the chunked-admission leg rides the same matrix: chunked virtual
+    // prefill must be exactly as byte-repeatable per seed as monolithic
+    let chunks = [0usize, 4];
     for arrival in &processes {
         for &policy in &policies {
-            let spec = WorkloadSpec {
-                seed,
-                requests: 32,
-                arrival: arrival.clone(),
-                sizes: SizeModel::TraceSeeded {
-                    n_experts: 16,
-                    skew: 1.2,
-                    prompt: (4, 24),
-                    gen: (1, 12),
-                },
-                slo_e2e_ms: 50.0,
-                deadline_slack_us_per_token: 500,
-            };
-            let a = report::build(&spec, policy,
-                                  &run_virtual(&cfg, &spec, policy))
-                .to_string_pretty();
-            let b = report::build(&spec, policy,
-                                  &run_virtual(&cfg, &spec, policy))
-                .to_string_pretty();
-            if a != b {
-                eprintln!("smoke: NONDETERMINISTIC report for {} x {}",
-                          arrival.label(), policy.label());
-                return 1;
+            for &prefill_chunk in &chunks {
+                let cfg = VirtualConfig {
+                    prefill_chunk,
+                    ..VirtualConfig::default()
+                };
+                let spec = WorkloadSpec {
+                    seed,
+                    requests: 32,
+                    arrival: arrival.clone(),
+                    sizes: SizeModel::TraceSeeded {
+                        n_experts: 16,
+                        skew: 1.2,
+                        prompt: (4, 24),
+                        gen: (1, 12),
+                    },
+                    slo_e2e_ms: 50.0,
+                    deadline_slack_us_per_token: 500,
+                };
+                let a = report::build(&spec, policy,
+                                      &run_virtual(&cfg, &spec, policy))
+                    .to_string_pretty();
+                let b = report::build(&spec, policy,
+                                      &run_virtual(&cfg, &spec, policy))
+                    .to_string_pretty();
+                if a != b {
+                    eprintln!(
+                        "smoke: NONDETERMINISTIC report for {} x {} x \
+                         chunk {}",
+                        arrival.label(), policy.label(), prefill_chunk
+                    );
+                    return 1;
+                }
+                println!(
+                    "smoke: virtual {} x {} x chunk {} deterministic \
+                     ({} bytes)",
+                    arrival.label(), policy.label(), prefill_chunk,
+                    a.len()
+                );
             }
-            println!("smoke: virtual {} x {} deterministic ({} bytes)",
-                     arrival.label(), policy.label(), a.len());
         }
     }
     let dir = artifacts_dir(args);
@@ -624,9 +673,22 @@ fn loadtest_smoke(args: &Args) -> i32 {
                  dir.display());
         return 0;
     }
-    for &policy in &policies {
-        let server = match moepim::coordinator::Server::spawn_with(
-            dir.clone(), policy) {
+    // real-server legs: FIFO and SJF monolithic, plus one chunked FIFO
+    // run so the chunked router loop is exercised against real artifacts
+    let real_legs = [
+        (AdmissionPolicy::fifo(), 0usize),
+        (AdmissionPolicy::sjf(), 0),
+        (AdmissionPolicy::fifo(), 3),
+    ];
+    for &(policy, prefill_chunk) in &real_legs {
+        let server = match moepim::coordinator::Server::spawn_opts(
+            dir.clone(),
+            moepim::coordinator::ServerOptions {
+                policy,
+                prefill_chunk,
+                ..moepim::coordinator::ServerOptions::default()
+            },
+        ) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("smoke: server spawn failed: {e:#}");
@@ -647,21 +709,32 @@ fn loadtest_smoke(args: &Args) -> i32 {
                 if out.samples.len() != spec.requests
                     || ok != out.samples.len()
                 {
-                    eprintln!("smoke: real {} run incomplete ({}/{} ok)",
-                              policy.label(), ok, out.samples.len());
+                    eprintln!(
+                        "smoke: real {} (chunk {}) run incomplete \
+                         ({}/{} ok)",
+                        policy.label(), prefill_chunk, ok,
+                        out.samples.len()
+                    );
+                    return 1;
+                }
+                if prefill_chunk > 0 && out.prefill_chunks == 0 {
+                    eprintln!(
+                        "smoke: chunked real run never advanced a chunk"
+                    );
                     return 1;
                 }
                 println!(
-                    "smoke: real closed-loop x {} OK ({} requests, \
-                     {:.1} tok/s)",
+                    "smoke: real closed-loop x {} x chunk {} OK \
+                     ({} requests, {:.1} tok/s)",
                     policy.label(),
+                    prefill_chunk,
                     out.samples.len(),
                     out.tokens_generated() as f64 / out.duration_s
                 );
             }
             Err(e) => {
-                eprintln!("smoke: real {} run failed: {e:#}",
-                          policy.label());
+                eprintln!("smoke: real {} (chunk {}) run failed: {e:#}",
+                          policy.label(), prefill_chunk);
                 return 1;
             }
         }

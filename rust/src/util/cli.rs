@@ -53,7 +53,12 @@ moepim trace [--tokens N] [--skew X] [--seed N] [--routing token|expert]";
 
     /// `moepim serve` flags.
     pub const SERVE: &str = "\
-moepim serve [--prompts N] [--gen N] [--artifacts DIR]";
+moepim serve [--prompts N] [--gen N] [--prefill-chunk N] [--artifacts DIR]
+
+  --prefill-chunk N   chunked prefill: admit prompts into slots at most N
+                      tokens per router cycle, interleaved with decode
+                      (0 = monolithic prefill, the default); output token
+                      streams are bit-identical either way";
 
     /// `moepim generate` flags.
     pub const GENERATE: &str = "\
@@ -66,7 +71,9 @@ workload flags:
   --policy fifo|sjf|edf --rate RPS --on-ms X --off-ms X --users N
   --think-ms X --replay-us T0,T1,... --sizes trace|uniform|fixed
   --prompt N --gen N --skew X --slo-ms X --deadline-slack-us N
-  --slots B --layers L --experts E";
+  --slots B --layers L --experts E
+  --prefill-chunk N   chunked prefill budget (prompt tokens per slot per
+                      router cycle; 0 = monolithic admission, the default)";
 
     /// `moepim loadtest` flags (v1 report; `--shards` upgrades to v2).
     pub const LOADTEST: &str = "\
@@ -269,6 +276,17 @@ mod tests {
             assert!(help.contains("--policy fifo|sjf|edf"), "{sub}");
             assert!(help.contains("--process poisson|bursty|closed|replay"),
                     "{sub}");
+        }
+    }
+
+    #[test]
+    fn usage_documents_chunked_prefill_everywhere_it_applies() {
+        // serve takes the flag directly; loadtest/shardtest get it via the
+        // shared workload-flag block (documented exactly once)
+        assert!(usage::SERVE.contains("--prefill-chunk"));
+        for sub in ["loadtest", "shardtest"] {
+            let help = usage::help_for(sub).expect("known subcommand");
+            assert!(help.contains("--prefill-chunk"), "{sub}");
         }
     }
 }

@@ -72,6 +72,11 @@ pub struct LoadOutcome {
     pub batched_tokens: u64,
     /// single-token fallback dispatches
     pub single_dispatches: u64,
+    /// prefill chunk advances (0 when the backend ran monolithic prefill,
+    /// i.e. `prefill_chunk == 0` — see
+    /// [`crate::coordinator::ServerOptions::prefill_chunk`] and
+    /// [`crate::workload::VirtualConfig::prefill_chunk`])
+    pub prefill_chunks: u64,
     /// experiment wall/virtual time in seconds
     pub duration_s: f64,
     /// `"virtual"` (deterministic, byte-identical reports) or `"wall"`
@@ -159,6 +164,7 @@ pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
         batch_dispatches: stats.batch_dispatches,
         batched_tokens: stats.batched_tokens,
         single_dispatches: stats.single_dispatches,
+        prefill_chunks: stats.prefill_chunks,
         duration_s,
         clock: "wall",
         shard: stats.shard,

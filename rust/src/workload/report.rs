@@ -15,7 +15,7 @@
 //!   throughput{duration_s, tokens_per_s, requests_per_s},
 //!   counts{completed, errored, tokens},
 //!   server{batch_dispatches, single_dispatches, mean_batch_occupancy,
-//!          peak_waiting},
+//!          prefill_chunks, peak_waiting},
 //!   planner{steps, work, cycles, transfers, contention_ratio} }
 //! ```
 //!
@@ -168,6 +168,7 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(out.single_dispatches as f64)),
                 ("mean_batch_occupancy",
                  Json::num(round3(out.mean_batch_occupancy()))),
+                ("prefill_chunks", Json::num(out.prefill_chunks as f64)),
                 ("peak_waiting", Json::num(out.peak_waiting as f64)),
             ]),
         ),
@@ -289,6 +290,7 @@ pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(m.single_dispatches as f64)),
                 ("mean_batch_occupancy",
                  Json::num(round3(m.mean_batch_occupancy()))),
+                ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
                 ("peak_waiting", Json::num(m.peak_waiting as f64)),
             ]),
         ),

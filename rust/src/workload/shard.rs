@@ -46,14 +46,15 @@ use crate::workload::vsim::{
     route_rng, run_virtual_requests, sample_experts, VirtualConfig,
 };
 
-/// Deterministic service-time estimate the least-outstanding placement
-/// uses (ns per prompt token of prefill; mirrors the default
-/// [`VirtualConfig`]'s `prefill_ns_per_token`).
-const EST_PREFILL_NS_PER_TOKEN: u64 = 4_000;
-/// Deterministic per-generated-token cost estimate for least-outstanding
-/// placement (dispatch overhead + typical priced cycles on the default
-/// virtual chip).
-const EST_DECODE_NS_PER_TOKEN: u64 = 30_000;
+/// Real-path calibration estimate for least-outstanding placement when
+/// the backends are `--real` servers (ns per prompt token of prefill).
+/// The PJRT prefill dispatch is padded fixed-shape, so per-token cost is
+/// an amortized estimate; refine via the ROADMAP "virtual-cluster
+/// calibration" item when measured fits land.
+pub const REAL_EST_PREFILL_NS_PER_TOKEN: u64 = 60_000;
+/// Real-path calibration estimate per generated token (one batched
+/// decode-cycle share on the threaded server).
+pub const REAL_EST_DECODE_NS_PER_TOKEN: u64 = 450_000;
 
 /// Which shard each request of a workload is served by.
 ///
@@ -72,7 +73,20 @@ pub enum PlacementPolicy {
     /// every materialized arrival offset is 0, so nothing has "completed"
     /// by any arrival and the count degenerates to balanced assignment —
     /// the work tie-break is then what spreads large requests apart.
-    LeastOutstanding,
+    ///
+    /// The cost constants must describe the backend actually serving the
+    /// run: build via [`PlacementPolicy::least_outstanding`] (derived from
+    /// the run's [`VirtualConfig`]) or
+    /// [`PlacementPolicy::least_outstanding_real`] (the `--real`
+    /// calibration constants) rather than hand-picking numbers — a
+    /// mismatched estimate silently mis-ranks shards for any non-default
+    /// config.
+    LeastOutstanding {
+        /// estimated prefill cost per prompt token (ns)
+        prefill_ns_per_token: u64,
+        /// estimated cost per generated token (ns)
+        decode_ns_per_token: u64,
+    },
     /// Hash of `(prompt_len, gen_len)` picks the shard, so same-sized
     /// requests colocate — size affinity keeps each shard's batch
     /// composition homogeneous under SJF-style admission.
@@ -102,6 +116,38 @@ pub enum PlacementPolicy {
 }
 
 impl PlacementPolicy {
+    /// Least-outstanding placement whose cost estimates are derived from
+    /// the virtual cluster that will serve the run: prefill cost is the
+    /// config's own `prefill_ns_per_token`, and the per-generated-token
+    /// estimate is the config's dispatch overhead plus a typical priced
+    /// decode cycle (each of the token's `n_layers · experts_per_token`
+    /// expert executions costing ~2 slot-cycles under grouped
+    /// peripherals).  With [`VirtualConfig::default`] this lands within a
+    /// few µs of the constants the placement used to hardcode; with any
+    /// other config it now tracks the backend instead of silently
+    /// mis-estimating (the bug this replaced: a fixed 4 µs/token prefill
+    /// estimate "mirroring the default config" regardless of the actual
+    /// `prefill_ns_per_token` under test).
+    pub fn least_outstanding(cfg: &VirtualConfig) -> Self {
+        let per_token_cycles = 2 * cfg.n_layers.max(1) as u64
+            * cfg.experts_per_token.max(1) as u64;
+        PlacementPolicy::LeastOutstanding {
+            prefill_ns_per_token: cfg.prefill_ns_per_token,
+            decode_ns_per_token: cfg.dispatch_overhead_ns
+                + per_token_cycles * cfg.cycle_ns,
+        }
+    }
+
+    /// Least-outstanding placement with the `--real` threaded-server
+    /// calibration constants ([`REAL_EST_PREFILL_NS_PER_TOKEN`] /
+    /// [`REAL_EST_DECODE_NS_PER_TOKEN`]).
+    pub fn least_outstanding_real() -> Self {
+        PlacementPolicy::LeastOutstanding {
+            prefill_ns_per_token: REAL_EST_PREFILL_NS_PER_TOKEN,
+            decode_ns_per_token: REAL_EST_DECODE_NS_PER_TOKEN,
+        }
+    }
+
     /// Routing-aware placement matching a virtual cluster's route model.
     pub fn route_aware(cfg: &VirtualConfig) -> Self {
         PlacementPolicy::RouteAware {
@@ -116,22 +162,25 @@ impl PlacementPolicy {
     pub fn label(&self) -> &'static str {
         match self {
             PlacementPolicy::RoundRobin => "round-robin",
-            PlacementPolicy::LeastOutstanding => "least-outstanding",
+            PlacementPolicy::LeastOutstanding { .. } => "least-outstanding",
             PlacementPolicy::SizeHash => "size-hash",
             PlacementPolicy::RouteAware { .. } => "route-aware",
         }
     }
 
-    /// Parse a CLI spelling; `None` on unknown input.  `route-aware`
-    /// parses with the default virtual-cluster route model — callers with
-    /// a concrete [`VirtualConfig`] should rebuild it via
-    /// [`PlacementPolicy::route_aware`] so placement and backend agree.
+    /// Parse a CLI spelling; `None` on unknown input.  `route-aware` and
+    /// `least-outstanding` parse with the default virtual-cluster model —
+    /// callers with a concrete [`VirtualConfig`] (or `--real` backends)
+    /// should rebuild via [`PlacementPolicy::route_aware`] /
+    /// [`PlacementPolicy::least_outstanding`] /
+    /// [`PlacementPolicy::least_outstanding_real`] so placement and
+    /// backend agree.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
-            "least-outstanding" | "lo" => {
-                Some(PlacementPolicy::LeastOutstanding)
-            }
+            "least-outstanding" | "lo" => Some(
+                PlacementPolicy::least_outstanding(&VirtualConfig::default()),
+            ),
             "size-hash" | "hash" => Some(PlacementPolicy::SizeHash),
             "route-aware" | "route" => {
                 Some(PlacementPolicy::route_aware(&VirtualConfig::default()))
@@ -150,7 +199,10 @@ impl PlacementPolicy {
             PlacementPolicy::RoundRobin => {
                 (0..reqs.len()).map(|i| i % n).collect()
             }
-            PlacementPolicy::LeastOutstanding => {
+            PlacementPolicy::LeastOutstanding {
+                prefill_ns_per_token,
+                decode_ns_per_token,
+            } => {
                 // per-shard (est completion time, est service) in flight
                 let mut inflight: Vec<Vec<(u64, u64)>> =
                     vec![Vec::new(); n];
@@ -170,8 +222,8 @@ impl PlacementPolicy {
                             })
                             .unwrap_or(0);
                         let service = r.prompt_len as u64
-                            * EST_PREFILL_NS_PER_TOKEN
-                            + r.gen_len as u64 * EST_DECODE_NS_PER_TOKEN;
+                            * prefill_ns_per_token
+                            + r.gen_len as u64 * decode_ns_per_token;
                         inflight[best].push((t + service, service));
                         best
                     })
@@ -372,6 +424,9 @@ pub struct MergedLoad {
     pub batched_tokens: u64,
     /// single-token fallback dispatches, summed
     pub single_dispatches: u64,
+    /// prefill chunk advances, summed across shards (0 for monolithic
+    /// prefill backends)
+    pub prefill_chunks: u64,
     /// planner telemetry with every counter summed across shards
     pub planner: PlannerStats,
     /// `"virtual"` or `"wall"`, from the shard outcomes
@@ -427,6 +482,7 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         batch_dispatches: 0,
         batched_tokens: 0,
         single_dispatches: 0,
+        prefill_chunks: 0,
         planner: PlannerStats::default(),
         clock: "virtual",
     };
@@ -445,6 +501,7 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         merged.batch_dispatches += s.outcome.batch_dispatches;
         merged.batched_tokens += s.outcome.batched_tokens;
         merged.single_dispatches += s.outcome.single_dispatches;
+        merged.prefill_chunks += s.outcome.prefill_chunks;
         merged.planner.steps += s.outcome.planner.steps;
         merged.planner.work += s.outcome.planner.work;
         merged.planner.cycles += s.outcome.planner.cycles;
@@ -561,7 +618,7 @@ mod tests {
     fn all_placements() -> Vec<PlacementPolicy> {
         vec![
             PlacementPolicy::RoundRobin,
-            PlacementPolicy::LeastOutstanding,
+            PlacementPolicy::least_outstanding(&VirtualConfig::default()),
             PlacementPolicy::SizeHash,
             PlacementPolicy::route_aware(&VirtualConfig::default()),
         ]
@@ -580,6 +637,53 @@ mod tests {
                 assert!(a.iter().all(|&s| s < n), "{}", p.label());
             }
         }
+    }
+
+    #[test]
+    fn least_outstanding_estimates_derive_from_the_run_config() {
+        // the derived constants track the config under test…
+        let slow = VirtualConfig {
+            prefill_ns_per_token: 40_000,
+            ..VirtualConfig::default()
+        };
+        match PlacementPolicy::least_outstanding(&slow) {
+            PlacementPolicy::LeastOutstanding {
+                prefill_ns_per_token, ..
+            } => assert_eq!(prefill_ns_per_token, 40_000),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // …and the estimate genuinely changes placement: a prompt-heavy
+        // request stays "in flight" much longer under a prefill-expensive
+        // config, so a later arrival dodges its shard — under the default
+        // config the same request is long done and the arrival lands on
+        // the (estimated-idle) lowest shard instead.  The hardcoded 4 µs
+        // constant this replaced could never see that difference.
+        let mk = |id, prompt_len, gen_len, arrival_ns| RequestSpec {
+            id,
+            prompt_len,
+            gen_len,
+            deadline_us: 1_000_000,
+            arrival_ns,
+        };
+        let reqs = vec![
+            mk(0, 100, 1, 0),
+            mk(1, 1, 100, 0),
+            mk(2, 8, 4, 2_000_000),
+        ];
+        let spec = spec();
+        let expensive_prefill = VirtualConfig {
+            prefill_ns_per_token: 1_000_000,
+            ..VirtualConfig::default()
+        };
+        let a = PlacementPolicy::least_outstanding(&expensive_prefill)
+            .assign(&spec, &reqs, 2);
+        let b = PlacementPolicy::least_outstanding(&VirtualConfig::default())
+            .assign(&spec, &reqs, 2);
+        assert_eq!(a[..2], b[..2], "first two arrivals balance identically");
+        assert_ne!(
+            a[2], b[2],
+            "the config-derived estimate must be able to change placement"
+        );
     }
 
     #[test]
@@ -614,8 +718,10 @@ mod tests {
     #[test]
     fn one_shard_split_is_the_whole_spec() {
         let spec = spec();
-        let driver =
-            ShardedDriver::new(1, PlacementPolicy::LeastOutstanding);
+        let driver = ShardedDriver::new(
+            1,
+            PlacementPolicy::least_outstanding(&VirtualConfig::default()),
+        );
         let loads = driver.split(&spec);
         assert_eq!(loads.len(), 1);
         assert_eq!(loads[0].reqs, spec.materialize());

@@ -14,7 +14,11 @@
 //!   peripherals and the makespan prices the cycle — so admission policies
 //!   are compared under the paper's contention model, not a constant;
 //! * prefill costs scale with prompt length and serialise on the engine,
-//!   like `BatchEngine::admit` does.
+//!   like `BatchEngine::admit` does — or, with
+//!   [`VirtualConfig::prefill_chunk`] > 0, advance in bounded chunks
+//!   interleaved with decode cycles, mirroring the real router's chunked
+//!   admission (each chunk rides the cycle's planned step as extra rows,
+//!   so prefill/decode peripheral contention is priced too).
 //!
 //! The event clock is integer nanoseconds; every timing in the resulting
 //! [`Sample`]s derives from it, which is what makes the serialized
@@ -33,6 +37,14 @@ use crate::workload::policy::{AdmissionPolicy, QueuedMeta};
 /// from `driver::PROMPT_SALT` so routing and prompt-token draws of the
 /// same request id are uncorrelated.
 const ROUTE_SALT: u64 = 0x6A09_E667_F3BC_C909;
+
+/// Salt for the prefill-chunk routing stream — distinct from both salts
+/// above so chunked prefill's planner rows draw from their own stream and
+/// never perturb the request's *decode* routing trajectory: a request's
+/// decode expert draws are identical whether its prefill ran chunked or
+/// monolithically (what keeps chunked-vs-unchunked SLO studies
+/// apples-to-apples, and the route-aware placement peek valid).
+const PREFILL_ROUTE_SALT: u64 = 0xBB67_AE85_84CA_A73B;
 
 /// Cost model + modeled-chip shape for the virtual cluster.  Defaults
 /// mirror the paper configuration the serving stack ships (16 experts,
@@ -62,6 +74,16 @@ pub struct VirtualConfig {
     pub prefill_ns_per_token: u64,
     /// maximum sequence length a slot can hold (prompt + generated)
     pub max_seq: usize,
+    /// chunked-prefill budget in prompt tokens per slot per router cycle
+    /// (`0`: monolithic prefill at admission, mirroring the real server's
+    /// [`crate::coordinator::ServerOptions::prefill_chunk`] default).
+    /// With `N > 0`, admission only claims the slot and each cycle
+    /// advances every filling slot by at most `N` tokens before the
+    /// decode rows are priced — prefill interleaves with decode instead
+    /// of stalling it, and each chunk contributes one row per layer to
+    /// the cycle's planned step so contention telemetry sees prefill
+    /// occupancy of the shared peripheral groups.
+    pub prefill_chunk: usize,
 }
 
 impl Default for VirtualConfig {
@@ -78,6 +100,7 @@ impl Default for VirtualConfig {
             dispatch_overhead_ns: 25_000,
             prefill_ns_per_token: 4_000,
             max_seq: 96,
+            prefill_chunk: 0,
         }
     }
 }
@@ -93,12 +116,33 @@ struct VQueued {
 struct VLive {
     idx: usize,
     arrived_ns: u64,
+    /// slot-grant instant (prefill start): `queue_us` ends here
     admitted_ns: u64,
+    /// prefill-completion instant (the first token is sampled by the
+    /// dispatch that finishes prefill): `ttft_us` ends here, so TTFT
+    /// carries the prefill cost the clock was charged — the
+    /// `ttft >= queue + prefill` invariant pinned in this module's tests
+    first_token_ns: u64,
     admit_seq: u64,
     /// generated tokens banked so far (prefill's sampled token included)
     tokens: u64,
     /// per-request router stream — seeded from (spec.seed, request id) so
     /// a request's expert trajectory is independent of scheduling order
+    rng: Pcg32,
+}
+
+/// One slot mid-chunked-prefill (the virtual mirror of the real router's
+/// `Fill` bookkeeping over [`crate::coordinator::BatchEngine`]'s
+/// `PrefillState`).
+struct VFill {
+    idx: usize,
+    arrived_ns: u64,
+    /// slot-grant instant — stamped at claim, before any prefill charge
+    admitted_ns: u64,
+    admit_seq: u64,
+    /// prompt tokens still to prefill
+    remaining: usize,
+    /// dedicated prefill routing stream (see [`PREFILL_ROUTE_SALT`])
     rng: Pcg32,
 }
 
@@ -124,6 +168,12 @@ fn ns_to_us(ns: u64) -> f64 {
 /// the experts the request will actually hit.
 pub(crate) fn route_rng(spec_seed: u64, id: u64) -> Pcg32 {
     Pcg32::new(spec_seed ^ id.wrapping_mul(ROUTE_SALT))
+}
+
+/// The per-request prefill-chunk routing stream (planner rows only; the
+/// decode stream above is untouched by chunking).
+fn prefill_rng(spec_seed: u64, id: u64) -> Pcg32 {
+    Pcg32::new(spec_seed ^ id.wrapping_mul(PREFILL_ROUTE_SALT))
 }
 
 /// Sample `k` distinct experts from a zipf-skewed popularity profile.
@@ -189,11 +239,13 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut next_issue =
         if closed > 0 { reqs.len().min(closed) } else { reqs.len() };
 
+    let chunk = cfg.prefill_chunk;
     let mut planner =
         BatchPlanner::new(cfg.n_experts.max(1), cfg.group_size.max(1),
                           cfg.schedule);
     let mut waiting: VecDeque<VQueued> = VecDeque::new();
     let mut live: Vec<Option<VLive>> = (0..slots).map(|_| None).collect();
+    let mut filling: Vec<Option<VFill>> = (0..slots).map(|_| None).collect();
     let mut samples: Vec<Sample> = Vec::with_capacity(reqs.len());
     let mut now: u64 = 0;
     let mut admit_seq: u64 = 0;
@@ -201,6 +253,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut batch_dispatches = 0u64;
     let mut batched_tokens = 0u64;
     let mut single_dispatches = 0u64;
+    let mut prefill_chunks = 0u64;
 
     loop {
         // ---- 1. ingest arrivals due by now --------------------------------
@@ -235,7 +288,9 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
 
         // ---- 2. policy-driven slot admission ------------------------------
         while !waiting.is_empty() {
-            let Some(slot) = live.iter().position(Option::is_none) else {
+            let Some(slot) = (0..slots)
+                .find(|&s| live[s].is_none() && filling[s].is_none())
+            else {
                 break;
             };
             let w = if matches!(policy, AdmissionPolicy::Fifo) {
@@ -279,35 +334,55 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 }
                 continue;
             }
-            // prefill serialises on the engine and banks the first token
-            now += r.prompt_len as u64 * cfg.prefill_ns_per_token;
-            let l = VLive {
-                idx: w.idx,
-                arrived_ns: w.arrived_ns,
-                admitted_ns: now,
-                admit_seq,
-                tokens: 1,
-                rng: route_rng(spec.seed, r.id),
-            };
-            admit_seq += 1;
-            if l.tokens >= r.gen_len as u64
-                || r.prompt_len + 1 >= cfg.max_seq
-            {
-                // the prefill-sampled token already completed the request
-                samples.push(finish_sample(reqs, &l, now));
-                if closed > 0 {
-                    issue_next(&mut upcoming, &mut next_issue, reqs.len(),
-                               now + think_ns);
+            if chunk == 0 {
+                // monolithic: the slot is granted now (queue_us ends), the
+                // prefill charge serialises on the engine, and the first
+                // token is banked once the charge lands (ttft_us ends)
+                let admitted_ns = now;
+                now += r.prompt_len as u64 * cfg.prefill_ns_per_token;
+                let l = VLive {
+                    idx: w.idx,
+                    arrived_ns: w.arrived_ns,
+                    admitted_ns,
+                    first_token_ns: now,
+                    admit_seq,
+                    tokens: 1,
+                    rng: route_rng(spec.seed, r.id),
+                };
+                admit_seq += 1;
+                if l.tokens >= r.gen_len as u64
+                    || r.prompt_len + 1 >= cfg.max_seq
+                {
+                    // the prefill-sampled token already completed the
+                    // request
+                    samples.push(finish_sample(reqs, &l, now));
+                    if closed > 0 {
+                        issue_next(&mut upcoming, &mut next_issue,
+                                   reqs.len(), now + think_ns);
+                    }
+                } else {
+                    live[slot] = Some(l);
                 }
             } else {
-                live[slot] = Some(l);
+                // chunked: claim the slot without charging the clock; the
+                // prefill advances chunk-by-chunk in the cycle loop below,
+                // interleaved with decode (the head-of-line blocking fix)
+                filling[slot] = Some(VFill {
+                    idx: w.idx,
+                    arrived_ns: w.arrived_ns,
+                    admitted_ns: now,
+                    admit_seq,
+                    remaining: r.prompt_len,
+                    rng: prefill_rng(spec.seed, r.id),
+                });
+                admit_seq += 1;
             }
         }
 
         // ---- 3. idle fast-forward / termination ---------------------------
-        let active: Vec<usize> =
-            (0..slots).filter(|&s| live[s].is_some()).collect();
-        if active.is_empty() {
+        if live.iter().all(Option::is_none)
+            && filling.iter().all(Option::is_none)
+        {
             match upcoming.front() {
                 Some(&(t, _)) => {
                     now = now.max(t);
@@ -317,11 +392,66 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             }
         }
 
-        // ---- 4. one decode cycle, priced as L planned layer-steps ---------
+        // ---- 4. one router cycle ------------------------------------------
+        // 4a. chunked prefill advances (serialise on the engine ahead of
+        //     the decode dispatch, like the real router's step 3b): each
+        //     filling slot is charged up to `chunk` tokens of prefill and
+        //     contributes one row per layer to this cycle's planned step;
+        //     a slot whose prompt completes banks its first token here and
+        //     joins this very cycle's decode, exactly like a freshly
+        //     admitted monolithic request.
+        let mut prefill_sets: Vec<Vec<Vec<usize>>> =
+            vec![Vec::new(); n_layers];
+        for s in 0..slots {
+            let Some(f) = filling[s].as_mut() else { continue };
+            let advanced = f.remaining.min(chunk);
+            now += advanced as u64 * cfg.prefill_ns_per_token;
+            f.remaining -= advanced;
+            prefill_chunks += 1;
+            for layer_rows in prefill_sets.iter_mut() {
+                layer_rows.push(sample_experts(
+                    &mut f.rng,
+                    cfg.n_experts.max(1),
+                    cfg.experts_per_token.max(1),
+                    cfg.route_skew,
+                ));
+            }
+            if f.remaining == 0 {
+                let f = filling[s].take().unwrap();
+                let r = &reqs[f.idx];
+                let l = VLive {
+                    idx: f.idx,
+                    arrived_ns: f.arrived_ns,
+                    admitted_ns: f.admitted_ns,
+                    first_token_ns: now,
+                    admit_seq: f.admit_seq,
+                    tokens: 1,
+                    rng: route_rng(spec.seed, r.id),
+                };
+                if l.tokens >= r.gen_len as u64
+                    || r.prompt_len + 1 >= cfg.max_seq
+                {
+                    samples.push(finish_sample(reqs, &l, now));
+                    if closed > 0 {
+                        issue_next(&mut upcoming, &mut next_issue,
+                                   reqs.len(), now + think_ns);
+                    }
+                } else {
+                    live[s] = Some(l);
+                }
+            }
+        }
+
+        // 4b. the mixed step, priced as L planned layer-steps: decode rows
+        //     first (slot order), then this cycle's prefill-chunk rows —
+        //     both share the grouped peripherals, so the makespan (and the
+        //     contention telemetry) reflects prefill/decode interference.
+        let active: Vec<usize> =
+            (0..slots).filter(|&s| live[s].is_some()).collect();
         let mut layer_sets: Vec<Vec<Vec<usize>>> =
             Vec::with_capacity(n_layers);
-        for _ in 0..n_layers {
-            let sets: Vec<Vec<usize>> = active
+        for prefill_rows in prefill_sets.iter_mut() {
+            let mut sets: Vec<Vec<usize>> = active
                 .iter()
                 .map(|&s| {
                     let l = live[s].as_mut().unwrap();
@@ -333,16 +463,25 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                     )
                 })
                 .collect();
+            sets.append(prefill_rows);
             layer_sets.push(sets);
+        }
+        if layer_sets[0].is_empty() {
+            // nothing to dispatch this cycle (every slot is still
+            // mid-prefill and no chunk advanced — unreachable, but cheap
+            // to guard); re-enter the loop rather than price an empty step
+            continue;
         }
         let plans = planner.plan_layers(&layer_sets);
         let cycles: u64 = plans.iter().map(|p| p.cycles as u64).sum();
         now += cfg.dispatch_overhead_ns + cycles * cfg.cycle_ns;
-        if active.len() == 1 {
-            single_dispatches += 1;
-        } else {
-            batch_dispatches += 1;
-            batched_tokens += active.len() as u64;
+        match active.len() {
+            0 => {}
+            1 => single_dispatches += 1,
+            _ => {
+                batch_dispatches += 1;
+                batched_tokens += active.len() as u64;
+            }
         }
 
         // ---- 5. bank tokens, retire finished slots ------------------------
@@ -373,6 +512,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
         batch_dispatches,
         batched_tokens,
         single_dispatches,
+        prefill_chunks,
         duration_s: now as f64 / 1e9,
         clock: "virtual",
         shard: None,
@@ -381,13 +521,15 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
 
 fn finish_sample(reqs: &[RequestSpec], l: &VLive, now: u64) -> Sample {
     let r = &reqs[l.idx];
-    let admit_wait = ns_to_us(l.admitted_ns - l.arrived_ns);
     Sample {
         id: r.id,
         submit_seq: l.idx as u64,
         ok: true,
-        queue_us: Some(admit_wait),
-        ttft_us: Some(admit_wait),
+        // queue ends at slot grant; TTFT ends at prefill completion (the
+        // dispatch that samples the first token), so the prefill cost the
+        // clock was charged shows up in TTFT — not silently dropped
+        queue_us: Some(ns_to_us(l.admitted_ns - l.arrived_ns)),
+        ttft_us: Some(ns_to_us(l.first_token_ns - l.arrived_ns)),
         e2e_us: ns_to_us(now - l.arrived_ns),
         tokens: l.tokens,
         admit_seq: Some(l.admit_seq),
@@ -472,6 +614,113 @@ mod tests {
         assert!(out.samples.iter().all(|s| {
             s.ok && s.tokens == 0 && s.admit_seq.is_none()
         }));
+        assert_eq!(out.batch_dispatches + out.single_dispatches, 0);
+        assert_eq!(out.planner.steps, 0);
+    }
+
+    /// Satellite regression for the TTFT bug: the virtual clock charges
+    /// `prompt_len * prefill_ns_per_token` for prefill, so TTFT (submit →
+    /// first generated token, which the prefill-completing dispatch
+    /// samples) must carry that cost on top of the pure slot wait — it
+    /// used to be reported equal to `queue_us`, silently dropping prefill
+    /// from every virtual TTFT quantile.
+    #[test]
+    fn virtual_ttft_includes_prefill_time() {
+        let prompt_len = 16usize;
+        let spec = WorkloadSpec {
+            sizes: SizeModel::Fixed { prompt_len, gen_len: 4 },
+            ..base_spec()
+        };
+        for chunk in [0usize, 1, 5] {
+            let cfg = VirtualConfig {
+                prefill_chunk: chunk,
+                ..VirtualConfig::default()
+            };
+            let prefill_us = prompt_len as f64
+                * cfg.prefill_ns_per_token as f64
+                / 1000.0;
+            let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+            assert_eq!(out.samples.len(), 24);
+            for s in &out.samples {
+                let q = s.queue_us.expect("admitted");
+                let t = s.ttft_us.expect("served");
+                assert!(
+                    t >= q + prefill_us - 1e-6,
+                    "chunk {chunk}: ttft {t} < queue {q} + prefill \
+                     {prefill_us}"
+                );
+                assert!(s.e2e_us >= t);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_deterministic_and_conserves_requests() {
+        let cfg = VirtualConfig {
+            prefill_chunk: 4,
+            ..VirtualConfig::default()
+        };
+        let a = run_virtual(&cfg, &base_spec(), AdmissionPolicy::sjf());
+        let b = run_virtual(&cfg, &base_spec(), AdmissionPolicy::sjf());
+        assert_eq!(a, b);
+        assert_eq!(a.samples.len(), 24);
+        assert!(a.samples.iter().all(|s| s.ok));
+        assert!(a.prefill_chunks > 0, "chunked run never advanced a chunk");
+    }
+
+    /// Chunking reshapes *when* work happens, not *what* happens: every
+    /// request still terminates exactly once with the same outcome and
+    /// token count (its decode routing stream is salted separately from
+    /// the prefill-chunk stream, so the expert trajectory is untouched).
+    #[test]
+    fn chunking_changes_latency_not_outcomes() {
+        let spec = base_spec();
+        let mono = run_virtual(
+            &VirtualConfig::default(),
+            &spec,
+            AdmissionPolicy::fifo(),
+        );
+        let chunked = run_virtual(
+            &VirtualConfig {
+                prefill_chunk: 3,
+                ..VirtualConfig::default()
+            },
+            &spec,
+            AdmissionPolicy::fifo(),
+        );
+        let key = |o: &LoadOutcome| {
+            let mut v: Vec<(u64, bool, u64)> = o
+                .samples
+                .iter()
+                .map(|s| (s.id, s.ok, s.tokens))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(&mono), key(&chunked));
+        assert_eq!(mono.prefill_chunks, 0);
+        assert!(chunked.prefill_chunks > 0);
+    }
+
+    /// Satellite regression: a `gen_len == 0` request must short-circuit
+    /// at submit even with chunking enabled — no slot, no chunk budget,
+    /// no planner step.
+    #[test]
+    fn zero_gen_requests_consume_no_chunk_budget() {
+        let cfg = VirtualConfig {
+            prefill_chunk: 2,
+            ..VirtualConfig::default()
+        };
+        let spec = WorkloadSpec {
+            sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 0 },
+            ..base_spec()
+        };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        assert_eq!(out.samples.len(), 24);
+        assert!(out.samples.iter().all(|s| {
+            s.ok && s.tokens == 0 && s.admit_seq.is_none()
+        }));
+        assert_eq!(out.prefill_chunks, 0);
         assert_eq!(out.batch_dispatches + out.single_dispatches, 0);
         assert_eq!(out.planner.steps, 0);
     }

@@ -117,4 +117,73 @@ fn batched_decode_matches_per_session_cached() {
     }
     assert_eq!(admitted.len(), batch.slots());
     assert!(batch.free_slot().is_none());
+    // …and a full pool refuses chunked claims too
+    assert!(batch.begin_prefill(&prompts[0]).is_err());
+
+    // ---- chunked prefill equivalence matrix ----------------------------
+    // chunk sizes {1, 7, P, >P} must reproduce the monolithic streams
+    // bit-for-bit: every advance replays the padded layer stack at the
+    // grown prefix length, so the final chunk's dispatches (and the banks
+    // + first token they produce) are exactly the monolithic ones.  The
+    // CI artifact matrix runs this at L=1 and L=3.
+    for slot in 0..batch.slots() {
+        batch.release(slot);
+    }
+    let case = 1usize; // mixed-length case with a real multi-chunk prompt
+    let p = prompts[case].clone();
+    let plen = p.len();
+    for chunk in [1usize, 7, plen, plen + 5] {
+        let slot = batch.begin_prefill(&p).unwrap();
+        // mid-prefill the slot is claimed but not yet decodable
+        assert!(batch.session(slot).is_none());
+        assert_eq!(batch.prefilling(), vec![slot], "chunk {chunk}");
+        assert_ne!(batch.free_slot(), Some(slot), "claimed slot stayed free");
+        let mut first = None;
+        let mut advances = 0usize;
+        while first.is_none() {
+            first = batch.advance_prefill(slot, chunk).unwrap();
+            advances += 1;
+            assert!(advances <= plen, "chunk {chunk}: prefill never ended");
+        }
+        assert_eq!(
+            advances,
+            plen.div_ceil(chunk),
+            "chunk {chunk}: wrong number of chunk advances for a \
+             {plen}-token prompt"
+        );
+        let cursor_done = batch.session(slot).expect("prefill completed");
+        assert_eq!(cursor_done.pos, plen);
+        let mut stream = vec![first.unwrap()];
+        while stream.len() < gen_lens[case] {
+            let (next, _plans) =
+                batch.decode_single(slot, *stream.last().unwrap()).unwrap();
+            stream.push(next);
+        }
+        assert_eq!(
+            &stream, &reference[case],
+            "chunk {chunk}: chunked prefill diverged from the monolithic \
+             stream"
+        );
+        batch.release(slot);
+    }
+
+    // aborting a partial prefill releases a clean slot: a fresh monolithic
+    // admission on the same pool state reproduces the reference stream
+    let slot = batch.begin_prefill(&p).unwrap();
+    let mid = batch.advance_prefill(slot, 3).unwrap();
+    assert!(mid.is_none(), "a 3-token chunk must not finish this prompt");
+    batch.release(slot);
+    assert!(batch.session(slot).is_none());
+    assert!(batch.prefill_state(slot).is_none());
+    let (slot2, first) = batch.admit(&p).unwrap();
+    let mut stream = vec![first];
+    while stream.len() < gen_lens[case] {
+        let (next, _plans) =
+            batch.decode_single(slot2, *stream.last().unwrap()).unwrap();
+        stream.push(next);
+    }
+    assert_eq!(
+        &stream, &reference[case],
+        "monolithic admission after an aborted chunked prefill diverged"
+    );
 }

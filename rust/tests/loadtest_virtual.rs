@@ -168,6 +168,125 @@ fn edf_completes_everything_and_reports_under_pressure() {
     assert!(moepim::util::json::parse(&s).is_ok());
 }
 
+/// The tentpole's virtual pin: a bursty arrival of long prompts — the
+/// ROADMAP head-of-line regime — must show strictly lower queue-p99 with
+/// chunking on vs off at the same seed.
+///
+/// Mechanism: monolithic admission charges every granted request's whole
+/// prefill to the engine clock *inside the admission pass*, so when a
+/// burst refills several slots at once, the 2nd..Nth grants (and every
+/// later completion) wait out the earlier lumps; chunked admission grants
+/// all free slots at the same instant and spreads the identical linear
+/// prefill cost across subsequent cycles, interleaved with decode.
+///
+/// The burst rides a `Replay` timeline (12 long prompts, 50 µs apart,
+/// hitting an idle cluster) rather than the exponential on/off process:
+/// the pin needs the last burst request to be a multi-grant "lump
+/// victim" *structurally*, and exponential window draws make the burst
+/// shape a seed lottery.  The p99 margin here is ~35% (≈4 histogram
+/// buckets), far above the log-bucket width, and was cross-checked
+/// against a python mirror of this event loop under both optimistic and
+/// fully-serial planner cost models.
+#[test]
+fn chunked_prefill_improves_bursty_queue_p99() {
+    let spec = WorkloadSpec {
+        seed: 25,
+        requests: 12,
+        arrival: ArrivalProcess::Replay {
+            times_us: (0..12u64).map(|k| k * 50).collect(),
+        },
+        // long prompts, short generations: prefill dominates slot
+        // residency, which is exactly where head-of-line blocking bites
+        sizes: SizeModel::Uniform { prompt: (48, 80), gen: (1, 2) },
+        slo_e2e_ms: 250.0,
+        deadline_slack_us_per_token: 500,
+    };
+    // a prefill-heavy chip (30 µs/token) in both runs — the comparison
+    // turns exactly one knob, the chunk budget
+    let mono_cfg = VirtualConfig {
+        prefill_ns_per_token: 30_000,
+        ..VirtualConfig::default()
+    };
+    let chunk_cfg = VirtualConfig {
+        prefill_chunk: 16,
+        ..mono_cfg.clone()
+    };
+    let mono = run_virtual(&mono_cfg, &spec, AdmissionPolicy::fifo());
+    let chunked = run_virtual(&chunk_cfg, &spec, AdmissionPolicy::fifo());
+    assert_eq!(mono.samples.len(), 12);
+    assert_eq!(chunked.samples.len(), 12);
+    assert!(mono.samples.iter().all(|s| s.ok));
+    assert!(chunked.samples.iter().all(|s| s.ok));
+    assert_eq!(mono.prefill_chunks, 0);
+    assert!(chunked.prefill_chunks > 0);
+
+    let mono_q = report::summarize(&spec, &mono).queue;
+    let chunk_q = report::summarize(&spec, &chunked).queue;
+    assert!(
+        chunk_q.quantile(0.99) < mono_q.quantile(0.99),
+        "queue p99 must strictly improve with chunking: chunked {} >= \
+         monolithic {}",
+        chunk_q.quantile(0.99),
+        mono_q.quantile(0.99)
+    );
+    assert!(
+        chunk_q.mean_us() < mono_q.mean_us(),
+        "mean queue must improve with chunking: chunked {} >= \
+         monolithic {}",
+        chunk_q.mean_us(),
+        mono_q.mean_us()
+    );
+    // the win reshapes waiting, it doesn't shrink the work: the chunked
+    // makespan stays in the same ballpark (bounded per-cycle overhead)
+    assert!(chunked.duration_s <= mono.duration_s * 1.5);
+
+    // and on the exponential-window bursty process itself (the shape the
+    // ROADMAP item named): at this seed the burst structure makes the
+    // tail request a lump victim with a ~4-bucket p99 margin under both
+    // bracketing planner cost models of the mirror study, and the mean
+    // improves too (many grants in every refill pass are lump victims)
+    let bursty = WorkloadSpec {
+        seed: 351,
+        requests: 48,
+        arrival: ArrivalProcess::Bursty {
+            rate_rps: 3_000.0,
+            mean_on_ms: 4.0,
+            mean_off_ms: 20.0,
+        },
+        ..spec.clone()
+    };
+    let b_mono_cfg = VirtualConfig {
+        prefill_ns_per_token: 20_000,
+        ..VirtualConfig::default()
+    };
+    let b_chunk_cfg = VirtualConfig {
+        prefill_chunk: 16,
+        ..b_mono_cfg.clone()
+    };
+    let b_mono = run_virtual(&b_mono_cfg, &bursty, AdmissionPolicy::fifo());
+    let b_chunked =
+        run_virtual(&b_chunk_cfg, &bursty, AdmissionPolicy::fifo());
+    assert!(b_mono.samples.iter().all(|s| s.ok));
+    assert!(b_chunked.samples.iter().all(|s| s.ok));
+    let bm = report::summarize(&bursty, &b_mono).queue;
+    let bc = report::summarize(&bursty, &b_chunked).queue;
+    assert!(
+        bc.quantile(0.99) < bm.quantile(0.99),
+        "bursty queue p99 must strictly improve with chunking: chunked \
+         {} >= monolithic {}",
+        bc.quantile(0.99),
+        bm.quantile(0.99)
+    );
+    assert!(
+        bc.mean_us() < bm.mean_us() * 0.97,
+        "bursty mean queue must improve with chunking: chunked {} vs \
+         monolithic {}",
+        bc.mean_us(),
+        bm.mean_us()
+    );
+    assert!(b_chunked.duration_s <= b_mono.duration_s * 1.5);
+}
+
 #[test]
 fn loadtest_counts_planner_layer_steps_per_decode_cycle() {
     // a depth-L virtual cluster prices every decode cycle as L planned

@@ -112,7 +112,7 @@ fn shard_merged_quantiles_match_concat_within_bucket_error() {
     let bound = LatencyHistogram::rel_error_bound() + 1e-9;
     let placements = [
         PlacementPolicy::RoundRobin,
-        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::least_outstanding(&VirtualConfig::default()),
         PlacementPolicy::SizeHash,
         PlacementPolicy::route_aware(&VirtualConfig::default()),
     ];

@@ -11,7 +11,9 @@
 
 use std::path::PathBuf;
 
-use moepim::coordinator::{DecodeMode, ModelEngine, Request, Server};
+use moepim::coordinator::{
+    DecodeMode, ModelEngine, Request, Server, ServerOptions,
+};
 use moepim::runtime::Runtime;
 use moepim::util::rng::Pcg32;
 use moepim::workload::{
@@ -312,6 +314,72 @@ fn server_lifecycle_batching_and_churn() {
     assert!(out.samples.iter().all(|s| s.ok), "{:?}", out.samples);
     assert!(out.samples.iter().all(|s| s.admit_seq.is_some()));
     assert!(out.tokens_generated() > 0);
+    drop(sjf_server);
+
+    // ---- chunked prefill end-to-end: a server admitting prompts in
+    //      3-token chunks must reproduce every per-session reference
+    //      stream bit-for-bit while admissions interleave with decode ----
+    let chunked = Server::spawn_opts(artifacts_dir(), ServerOptions {
+        prefill_chunk: 3,
+        ..ServerOptions::default()
+    })
+    .expect("chunked server spawns");
+    let rxs: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (
+                i,
+                chunked.submit(Request::new(
+                    700 + i as u64,
+                    c.prompt.clone(),
+                    c.gen_len,
+                )),
+            )
+        })
+        .collect();
+    for (i, rx) in rxs {
+        let resp = rx.recv().expect("terminal chunked response");
+        let tokens =
+            resp.result.as_ref().expect("chunked generation succeeds");
+        assert_eq!(
+            tokens, &cases[i].want,
+            "chunked request {i} diverged from its per-session reference"
+        );
+        assert!(resp.admit_seq.is_some());
+        let ttft = resp.ttft_us.expect("served request has a TTFT");
+        assert!(resp.queue_us.expect("admitted") <= ttft);
+        assert!(ttft <= resp.latency_us);
+    }
+    let chunk_stats = chunked.stats().unwrap();
+    assert!(
+        chunk_stats.prefill_chunks > 0,
+        "chunked server never advanced a prefill chunk"
+    );
+    // prompts are 4..=prompt_len tokens in 3-token chunks: at least as
+    // many advances as requests, and more than one for any prompt > 3
+    assert!(chunk_stats.prefill_chunks >= cases.len() as u64);
+    assert_eq!(chunk_stats.errored, 0);
+
+    // gen_len == 0 on the chunked path: still an immediate terminal
+    // success that never takes a slot and never consumes chunk budget
+    let rx = chunked.submit(Request::new(800, prompt(8, 23), 0));
+    let resp = rx.recv().expect("zero-length request gets a reply");
+    assert!(resp.result.expect("zero-length succeeds").is_empty());
+    assert_eq!(resp.admit_seq, None, "zero-length must not take a slot");
+    assert_eq!(resp.queue_us, None);
+    assert_eq!(resp.ttft_us, None);
+    let s3 = chunked.stats().unwrap();
+    assert_eq!(
+        s3.prefill_chunks, chunk_stats.prefill_chunks,
+        "zero-length request consumed prefill chunk budget"
+    );
+    assert_eq!(s3.completed, chunk_stats.completed + 1);
+    // an oversized prompt still errors terminally on the chunked path
+    let resp = chunked.generate(801, prompt(500, 9), 4).unwrap();
+    let err = resp.result.expect_err("oversized prompt must error");
+    assert!(err.contains("max_seq"), "unexpected error: {err}");
+    assert!(resp.ttft_us.is_none());
 }
 
 #[test]

@@ -30,7 +30,7 @@ fn spec() -> WorkloadSpec {
 fn placements() -> Vec<PlacementPolicy> {
     vec![
         PlacementPolicy::RoundRobin,
-        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::least_outstanding(&VirtualConfig::default()),
         PlacementPolicy::SizeHash,
         PlacementPolicy::route_aware(&VirtualConfig::default()),
     ]
@@ -193,7 +193,8 @@ fn sharded_closed_loop_completes_with_split_user_population() {
     };
     for shards in [2usize, 4] {
         let driver =
-            ShardedDriver::new(shards, PlacementPolicy::LeastOutstanding);
+            ShardedDriver::new(shards,
+                               PlacementPolicy::least_outstanding(&cfg));
         let run = driver.run_virtual(&cfg, &spec, AdmissionPolicy::sjf());
         let total: usize =
             run.shards.iter().map(|s| s.outcome.samples.len()).sum();
