@@ -1,0 +1,363 @@
+//! Cluster front door: N concurrently-live [`Server`] backends behind
+//! one intake queue and a placement thread.
+//!
+//! Each backend is a full serving stack — its own router thread, its own
+//! [`crate::runtime::Runtime`] and PJRT client (constructed inside the
+//! thread; see `runtime::executor` for the concurrency contract) — so
+//! the N shards decode genuinely in parallel.  The front door adds three
+//! things on top of bare servers:
+//!
+//! * **Live placement.**  A dedicated placement thread assigns each
+//!   arrival to a backend using the backends' live
+//!   [`LoadSignal::inflight`] counters (queue depth + outstanding
+//!   slots), not the split-time analytic estimates of
+//!   [`crate::workload::PlacementPolicy::LeastOutstanding`] — the
+//!   static estimate assumes service starts at arrival and never sees
+//!   queueing feedback; the live signal *is* the queueing feedback.
+//! * **Backpressure.**  The intake queue is bounded
+//!   ([`ClusterOptions::intake_cap`]); a submitter that finds it full
+//!   blocks until the placement thread drains — arrival pressure
+//!   propagates to producers instead of growing an unbounded buffer.
+//! * **Load shedding.**  With [`ClusterOptions::shed_depth`] > 0, an
+//!   arrival that finds *every* backend saturated (in-flight ≥ slots +
+//!   `shed_depth`) is answered immediately with a terminal `overloaded`
+//!   error instead of queueing — the caller learns *now*, and interactive
+//!   latency for admitted requests stays bounded.  Sheds are counted
+//!   per candidate shard in [`ClusterStats::shed`].
+//!
+//! Reply delivery is per-request and direct: the placement thread hands
+//! the caller's reply channel to the placed backend, so streamed tokens
+//! ([`crate::coordinator::Reply::Token`]) flow router-thread → caller
+//! without re-crossing the front door.
+//!
+//! ```text
+//!   callers ──submit()──▶ bounded intake ──▶ placement thread
+//!                                               │ argmin inflight / RR
+//!                 ┌─────────────────────────────┼──────────────┐
+//!                 ▼                             ▼              ▼
+//!           Server shard 0               Server shard 1   … shard N-1
+//!           router thread                router thread
+//!           Runtime+PJRT client          Runtime+PJRT client
+//!                 │                             │
+//!                 └──── per-request reply channels ───▶ callers
+//! ```
+//!
+//! Shutdown (dropping the [`Cluster`]) drops every backend in turn; each
+//! backend's router terminally answers everything still waiting, filling,
+//! or live, so no reply channel is ever left dangling (the exactly-once
+//! pin in `rust/tests/cluster_concurrent.rs`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::server::{
+    LoadSignal, Reply, ReplyTo, Request, Response, Server, ServerOptions,
+    ServerStats,
+};
+
+/// Intake bound used when [`ClusterOptions::intake_cap`] is 0: deep
+/// enough that open-loop drivers never block in steady state, finite so
+/// a stalled placement thread surfaces as backpressure instead of
+/// unbounded memory growth.
+pub const DEFAULT_INTAKE_CAP: usize = 1024;
+
+/// How the placement thread assigns arrivals to backends.
+///
+/// Distinct from [`crate::workload::PlacementPolicy`], which partitions
+/// a *known* request list ahead of time from analytic cost estimates:
+/// a `ClusterPlacement` decides per arrival, online, from live signals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPlacement {
+    /// arrival k goes to shard k mod N — the live counterpart of
+    /// [`crate::workload::PlacementPolicy::RoundRobin`]; with shedding
+    /// off it reproduces the static round-robin split exactly, which is
+    /// what makes concurrent-vs-serial equivalence testable
+    RoundRobin,
+    /// each arrival goes to the backend with the fewest in-flight
+    /// requests right now ([`LoadSignal::inflight`]; ties to the lowest
+    /// shard id) — the live control loop that replaces
+    /// `PlacementPolicy::LeastOutstanding`'s split-time estimates
+    LiveLeastOutstanding,
+}
+
+impl ClusterPlacement {
+    /// Stable label for reports and artifact filenames.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClusterPlacement::RoundRobin => "round-robin",
+            ClusterPlacement::LiveLeastOutstanding => {
+                "live-least-outstanding"
+            }
+        }
+    }
+
+    /// Parse a CLI spelling (`"rr"`/`"round-robin"`,
+    /// `"live"`/`"live-least-outstanding"`/`"live-lo"`).
+    pub fn parse(s: &str) -> Option<ClusterPlacement> {
+        match s {
+            "rr" | "round-robin" => Some(ClusterPlacement::RoundRobin),
+            "live" | "live-least-outstanding" | "live-lo" => {
+                Some(ClusterPlacement::LiveLeastOutstanding)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Spawn-time configuration for a [`Cluster`].
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// backend count (floored to 1)
+    pub shards: usize,
+    /// per-backend [`ServerOptions`]; the cluster overrides
+    /// [`ServerOptions::shard`] with each backend's index
+    pub server: ServerOptions,
+    /// arrival-to-backend assignment policy
+    pub placement: ClusterPlacement,
+    /// intake queue bound (`0`: [`DEFAULT_INTAKE_CAP`]); submitters
+    /// block while the queue is full — this is the backpressure surface
+    pub intake_cap: usize,
+    /// all-shards saturation threshold for load shedding: an arrival is
+    /// shed iff every backend has in-flight ≥ its slots + `shed_depth`
+    /// (`0`: never shed)
+    pub shed_depth: usize,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            shards: 2,
+            server: ServerOptions::default(),
+            placement: ClusterPlacement::LiveLeastOutstanding,
+            intake_cap: 0,
+            shed_depth: 0,
+        }
+    }
+}
+
+/// Cluster-wide telemetry snapshot: every backend's [`ServerStats`] plus
+/// the front door's own counters.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// per-backend serving stats, indexed by shard id
+    pub shards: Vec<ServerStats>,
+    /// requests the placement thread forwarded to each backend
+    pub placed: Vec<u64>,
+    /// requests shed at the front door, attributed to the shard that
+    /// would have received them (per-backend `queue_cap` sheds are in
+    /// `shards[i].shed_requests` instead)
+    pub shed: Vec<u64>,
+    /// high-water mark of the intake queue depth
+    pub peak_intake_depth: usize,
+}
+
+impl ClusterStats {
+    /// Total requests shed anywhere in the cluster: front-door sheds
+    /// plus every backend's own `queue_cap` sheds.
+    pub fn shed_requests(&self) -> u64 {
+        self.shed.iter().sum::<u64>()
+            + self.shards.iter().map(|s| s.shed_requests).sum::<u64>()
+    }
+}
+
+enum FrontMsg {
+    Submit(Request, ReplyTo),
+    Stats(mpsc::Sender<Result<ClusterStats>>),
+    Shutdown,
+}
+
+/// Handle to a running cluster: the placement thread plus its N owned
+/// backends.  Dropping it shuts the whole stack down (terminal replies
+/// for everything in flight, then joins).
+pub struct Cluster {
+    tx: mpsc::SyncSender<FrontMsg>,
+    depth: Arc<AtomicUsize>,
+    peak: Arc<AtomicUsize>,
+    shards: usize,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn `opts.shards` backends (serially — each spawn blocks on its
+    /// artifact compilation) and the placement thread that owns them.
+    /// Returns once every backend is serving.
+    pub fn spawn(artifacts_dir: &Path, opts: ClusterOptions)
+        -> Result<Cluster> {
+        let n = opts.shards.max(1);
+        let mut servers = Vec::with_capacity(n);
+        let mut signals: Vec<Arc<LoadSignal>> = Vec::with_capacity(n);
+        let mut slots = Vec::with_capacity(n);
+        for shard in 0..n {
+            let server = Server::spawn_opts(
+                artifacts_dir.to_path_buf(),
+                ServerOptions { shard: Some(shard), ..opts.server.clone() },
+            )?;
+            slots.push(server.stats()?.slots);
+            signals.push(server.signal());
+            servers.push(server);
+        }
+        let intake_cap = if opts.intake_cap == 0 {
+            DEFAULT_INTAKE_CAP
+        } else {
+            opts.intake_cap
+        };
+        let (tx, rx) = mpsc::sync_channel::<FrontMsg>(intake_cap);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let thread_depth = Arc::clone(&depth);
+        let thread_peak = Arc::clone(&peak);
+        let placement = opts.placement;
+        let shed_depth = opts.shed_depth;
+        let handle = std::thread::spawn(move || {
+            place_loop(servers, signals, slots, rx, placement, shed_depth,
+                       thread_depth, thread_peak);
+        });
+        Ok(Cluster { tx, depth, peak, shards: n, handle: Some(handle) })
+    }
+
+    /// Backend count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Submit a request; returns a receiver for the terminal
+    /// [`Response`].  Blocks while the intake queue is full
+    /// (backpressure).
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.send(req, ReplyTo::Terminal(tx));
+        rx
+    }
+
+    /// Submit for streaming delivery: [`Reply::Token`] events from the
+    /// placed backend's router thread, then exactly one
+    /// [`Reply::Terminal`].  Blocks while the intake queue is full.
+    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Reply> {
+        let (tx, rx) = mpsc::channel();
+        self.send(req, ReplyTo::Streaming(tx));
+        rx
+    }
+
+    fn send(&self, req: Request, sink: ReplyTo) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(d, Ordering::Relaxed);
+        self.tx
+            .send(FrontMsg::Submit(req, sink))
+            .expect("placement thread alive");
+    }
+
+    /// Snapshot cluster-wide telemetry (round-trips through the
+    /// placement thread and every backend router).
+    pub fn stats(&self) -> Result<ClusterStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(FrontMsg::Stats(tx))
+            .map_err(|_| anyhow!("placement thread gone"))?;
+        rx.recv()?
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        let _ = self.tx.send(FrontMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Terminal `overloaded` reply issued at the front door (never reached a
+/// backend, so there is no in-flight count to retire).
+fn shed_reply(req: &Request, sink: ReplyTo, candidate: usize,
+              shards: usize, shed_depth: usize) {
+    let resp = Response {
+        id: req.id,
+        result: Err(format!(
+            "overloaded: all {shards} shards saturated \
+             (shed depth {shed_depth})"
+        )),
+        latency_us: 0.0,
+        ttft_us: None,
+        queue_us: None,
+        admit_seq: None,
+        batched_steps: 0,
+        single_steps: 0,
+        shard: Some(candidate),
+    };
+    match sink {
+        ReplyTo::Terminal(tx) => {
+            let _ = tx.send(resp);
+        }
+        ReplyTo::Streaming(tx) => {
+            let _ = tx.send(Reply::Terminal(resp));
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
+              slots: Vec<usize>, rx: mpsc::Receiver<FrontMsg>,
+              placement: ClusterPlacement, shed_depth: usize,
+              depth: Arc<AtomicUsize>, peak: Arc<AtomicUsize>) {
+    let n = servers.len();
+    let mut rr: usize = 0;
+    let mut placed = vec![0u64; n];
+    let mut shed = vec![0u64; n];
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            // every Cluster handle gone: fall through to shutdown
+            Err(_) => break,
+        };
+        match msg {
+            FrontMsg::Shutdown => break,
+            FrontMsg::Stats(tx) => {
+                let snap = servers
+                    .iter()
+                    .map(|s| s.stats())
+                    .collect::<Result<Vec<_>>>()
+                    .map(|stats| ClusterStats {
+                        shards: stats,
+                        placed: placed.clone(),
+                        shed: shed.clone(),
+                        peak_intake_depth: peak.load(Ordering::Relaxed),
+                    });
+                let _ = tx.send(snap);
+            }
+            FrontMsg::Submit(req, sink) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                // candidate first (round-robin advances even on a shed,
+                // least-outstanding re-reads signals per arrival), so a
+                // shed is attributable to the backend it would have hit
+                let candidate = match placement {
+                    ClusterPlacement::RoundRobin => {
+                        let c = rr % n;
+                        rr += 1;
+                        c
+                    }
+                    ClusterPlacement::LiveLeastOutstanding => (0..n)
+                        .min_by_key(|&i| (signals[i].inflight(), i))
+                        .unwrap_or(0),
+                };
+                let saturated = shed_depth > 0
+                    && (0..n).all(|i| {
+                        signals[i].inflight() >= slots[i] + shed_depth
+                    });
+                if saturated {
+                    shed[candidate] += 1;
+                    shed_reply(&req, sink, candidate, n, shed_depth);
+                } else {
+                    placed[candidate] += 1;
+                    servers[candidate].forward(req, sink);
+                }
+            }
+        }
+    }
+    // dropping the servers shuts each backend down in turn; their
+    // routers terminally answer everything still in flight
+    drop(servers);
+}

@@ -1,12 +1,23 @@
 //! Serving coordinator (L3 runtime path): the functional model engine with
 //! KV + GO cache state, the slot-batched [`BatchEngine`] that advances all
-//! live sessions with one dispatch per pipeline stage, and the threaded
-//! serving loop built on slot admission.
+//! live sessions with one dispatch per pipeline stage, the threaded
+//! serving loop built on slot admission, and the [`Cluster`] front door
+//! that runs N of those serving loops genuinely concurrently behind one
+//! bounded intake queue with live-signal placement, streaming replies,
+//! and load shedding.
 
 pub mod batch;
+pub mod cluster;
 pub mod engine;
 pub mod server;
 
 pub use batch::{BatchEngine, BatchStep, PrefillState, SlotSession};
+pub use cluster::{
+    Cluster, ClusterOptions, ClusterPlacement, ClusterStats,
+    DEFAULT_INTAKE_CAP,
+};
 pub use engine::{DecodeMode, GenerationResult, ModelEngine, Session};
-pub use server::{Request, Response, Server, ServerOptions, ServerStats};
+pub use server::{
+    LoadSignal, Reply, Request, Response, Server, ServerOptions,
+    ServerStats,
+};

@@ -1,19 +1,33 @@
-//! Threaded serving loop: a router thread owns the [`BatchEngine`] (the
-//! PJRT client is single-owner) and serves live sessions with slot-based
-//! continuous batching — waiting requests are admitted into free serving
-//! slots by a pluggable [`AdmissionPolicy`] (FIFO by default; SJF and
-//! deadline-aware variants for loadtest comparison), and every decode
-//! cycle advances *all* live slots with one batched dispatch per pipeline
-//! stage (single-token fallback when only one session is live).  With
-//! [`ServerOptions::prefill_chunk`] > 0 the router interleaves bounded
-//! prefill chunks of admitted-but-still-filling slots with those decode
-//! dispatches, so one long prompt no longer stalls every live decode slot
-//! (see DESIGN.md §Chunked prefill).
+//! Threaded serving loop: a router thread owns the [`BatchEngine`] — the
+//! engine and its PJRT client are constructed *inside* the thread, so
+//! every [`Server`] is a self-contained serving stack and N servers run
+//! genuinely concurrently (each on its own router thread with its own
+//! client; the cluster front door in [`crate::coordinator::cluster`]
+//! builds on exactly this).  The router serves live sessions with
+//! slot-based continuous batching — waiting requests are admitted into
+//! free serving slots by a pluggable [`AdmissionPolicy`] (FIFO by
+//! default; SJF and deadline-aware variants for loadtest comparison),
+//! and every decode cycle advances *all* live slots with one batched
+//! dispatch per pipeline stage (single-token fallback when only one
+//! session is live).  With [`ServerOptions::prefill_chunk`] > 0 the
+//! router interleaves bounded prefill chunks of admitted-but-still-
+//! filling slots with those decode dispatches, so one long prompt no
+//! longer stalls every live decode slot (see DESIGN.md §Chunked
+//! prefill).
 //!
 //! Every submitted request gets a terminal [`Response`]: generation
-//! results and failures (oversized prompt, engine errors, shutdown) all
-//! travel the same reply channel, so `submit()` callers never see an
-//! opaque `RecvError` for a request the router accepted.
+//! results and failures (oversized prompt, engine errors, shed on a full
+//! queue, shutdown) all travel the same reply channel, so `submit()`
+//! callers never see an opaque `RecvError` for a request the router
+//! accepted.  [`Server::submit_streaming`] returns the same lifecycle as
+//! a stream: zero or more [`Reply::Token`] events as tokens are banked,
+//! then exactly one [`Reply::Terminal`] carrying the full [`Response`]
+//! (see DESIGN.md §Concurrent cluster for the lifecycle diagram).
+//!
+//! With [`ServerOptions::queue_cap`] > 0 the router sheds load instead
+//! of queueing without bound: a submit that finds the admission queue at
+//! the cap gets an immediate terminal `overloaded` error, counted in
+//! [`ServerStats::shed_requests`].
 //!
 //! (The image ships no tokio; the event loop is a plain mpsc channel +
 //! worker thread, which for a single-device engine is the same topology a
@@ -21,7 +35,8 @@
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -49,11 +64,17 @@ pub struct ServerOptions {
     /// which waiting request each freed slot goes to
     pub policy: AdmissionPolicy,
     /// shard id tag for multi-server fan-outs (`None`: standalone);
-    /// telemetry-only, see [`Server::spawn_sharded`]
+    /// echoed on every [`Response`] and [`ServerStats`] snapshot, see
+    /// [`Server::spawn_sharded`]
     pub shard: Option<usize>,
     /// prefill chunk budget in prompt tokens per slot per router cycle
     /// (`0`: monolithic prefill at admission, the seed behaviour)
     pub prefill_chunk: usize,
+    /// admission-queue cap: a submit that finds `queue_cap` requests
+    /// already waiting is shed with an immediate terminal `overloaded`
+    /// error instead of queueing (`0`: unbounded, the seed behaviour).
+    /// Shed requests count in [`ServerStats::shed_requests`]
+    pub queue_cap: usize,
 }
 
 impl Default for ServerOptions {
@@ -62,6 +83,7 @@ impl Default for ServerOptions {
             policy: AdmissionPolicy::Fifo,
             shard: None,
             prefill_chunk: 0,
+            queue_cap: 0,
         }
     }
 }
@@ -120,6 +142,11 @@ pub struct Response {
     pub batched_steps: u64,
     /// decode steps served by the single-token fallback
     pub single_steps: u64,
+    /// shard tag of the backend that replied (`None`: standalone server).
+    /// Set on every reply path — including sheds and shutdown — so a
+    /// cluster front door's callers can attribute each terminal reply to
+    /// the backend (or shed candidate) that produced it
+    pub shard: Option<usize>,
 }
 
 impl Response {
@@ -131,6 +158,66 @@ impl Response {
     /// `true` iff the request completed successfully.
     pub fn is_ok(&self) -> bool {
         self.result.is_ok()
+    }
+}
+
+/// One event on a streaming reply channel
+/// ([`Server::submit_streaming`] / `Cluster::submit_streaming`): the
+/// streaming variant of [`Response`].
+///
+/// Lifecycle per request: zero or more `Token` events in generation
+/// order, then exactly one `Terminal` — always last, always present
+/// (errors and shutdown included).  The terminal response's token vector
+/// equals the concatenation of the streamed tokens, so a streaming
+/// consumer can render incrementally and still reconcile against the
+/// terminal reply.  A request that errors mid-stream has streamed a
+/// prefix and then receives `Terminal` with the error.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// one generated token, delivered as soon as the router banks it
+    Token {
+        /// the submitted request's id
+        id: u64,
+        /// 0-based position of this token in the generated stream
+        index: u64,
+        /// the token id
+        token: i32,
+    },
+    /// the terminal reply (exactly one per request, always last)
+    Terminal(Response),
+}
+
+/// Live load signals a backend publishes for placement decisions —
+/// the feedback that replaces
+/// [`crate::workload::PlacementPolicy::LeastOutstanding`]'s split-time
+/// analytic estimates in the cluster front door
+/// ([`crate::coordinator::cluster`]).
+///
+/// The one counter that matters for placement is `inflight`: requests
+/// submitted but not yet terminally replied (queue depth + occupied
+/// slots).  It is incremented synchronously on the submit path and
+/// decremented by the router on every terminal reply, so a placement
+/// thread reading it sees its *own* recent assignments immediately —
+/// no round-trip to the router, no stale-snapshot race.
+#[derive(Debug, Default)]
+pub struct LoadSignal {
+    inflight: AtomicUsize,
+}
+
+impl LoadSignal {
+    /// Requests submitted to this backend but not yet terminally
+    /// replied: admission-queue depth plus outstanding (filling + live)
+    /// slots.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    fn inc(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn dec(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -156,6 +243,20 @@ pub struct ServerStats {
     pub prefill_chunks: u64,
     /// high-water mark of the waiting queue
     pub peak_waiting: usize,
+    /// requests shed with an immediate terminal `overloaded` error
+    /// because the waiting queue was at [`ServerOptions::queue_cap`]
+    /// (0 when the cap is unbounded)
+    pub shed_requests: u64,
+    /// wall-clock µs since the unix epoch of the first decode/prefill
+    /// dispatch this server issued (`None`: never dispatched).  Together
+    /// with [`ServerStats::last_dispatch_unix_us`] this gives each
+    /// router thread's busy interval on a *common* clock, which is how
+    /// the concurrent-cluster tests check that shards' router cycles
+    /// genuinely overlap in time
+    pub first_dispatch_unix_us: Option<u64>,
+    /// wall-clock µs since the unix epoch of the most recent
+    /// decode/prefill dispatch (`None`: never dispatched)
+    pub last_dispatch_unix_us: Option<u64>,
     /// cumulative group-aware planner telemetry (peripheral contention)
     pub planner: PlannerStats,
     /// shard id this server serves in a fan-out (`None`: standalone).
@@ -176,8 +277,49 @@ impl ServerStats {
     }
 }
 
+/// Where a request's replies go: a terminal-only channel (the classic
+/// [`Server::submit`] surface) or a streaming channel that also carries
+/// per-token [`Reply::Token`] events.  Shared with the cluster front
+/// door, which forwards its callers' sinks to the placed backend.
+pub(crate) enum ReplyTo {
+    /// terminal [`Response`] only
+    Terminal(mpsc::Sender<Response>),
+    /// [`Reply::Token`] events followed by one [`Reply::Terminal`]
+    Streaming(mpsc::Sender<Reply>),
+}
+
+/// A reply sink bound to its backend's [`LoadSignal`]: every terminal
+/// reply decrements `inflight` exactly once (the type consumes itself on
+/// `finish`, so a double terminal reply is unrepresentable).
+struct Replier {
+    sink: ReplyTo,
+    signal: Arc<LoadSignal>,
+}
+
+impl Replier {
+    /// Send the terminal reply and retire the in-flight count.
+    fn finish(self, resp: Response) {
+        self.signal.dec();
+        match self.sink {
+            ReplyTo::Terminal(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTo::Streaming(tx) => {
+                let _ = tx.send(Reply::Terminal(resp));
+            }
+        }
+    }
+
+    /// Send one streamed token (no-op on terminal-only sinks).
+    fn token(&self, id: u64, index: u64, token: i32) {
+        if let ReplyTo::Streaming(tx) = &self.sink {
+            let _ = tx.send(Reply::Token { id, index, token });
+        }
+    }
+}
+
 enum Msg {
-    Submit(Request, mpsc::Sender<Response>),
+    Submit(Request, ReplyTo),
     Stats(mpsc::Sender<ServerStats>),
     Shutdown,
 }
@@ -185,7 +327,7 @@ enum Msg {
 /// One live serving slot.
 struct Live {
     req: Request,
-    reply: mpsc::Sender<Response>,
+    reply: Replier,
     slot: usize,
     next: i32,
     tokens: Vec<i32>,
@@ -198,7 +340,8 @@ struct Live {
 }
 
 impl Live {
-    fn respond(self, result: Result<Vec<i32>, String>) {
+    fn respond(self, result: Result<Vec<i32>, String>,
+               shard: Option<usize>) {
         let now = Instant::now();
         let resp = Response {
             id: self.req.id,
@@ -209,8 +352,9 @@ impl Live {
             admit_seq: Some(self.admit_seq),
             batched_steps: self.batched_steps,
             single_steps: self.single_steps,
+            shard,
         };
-        let _ = self.reply.send(resp);
+        self.reply.finish(resp);
     }
 }
 
@@ -218,11 +362,18 @@ fn us(later: Instant, earlier: Instant) -> f64 {
     later.duration_since(earlier).as_secs_f64() * 1e6
 }
 
+fn unix_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
 /// Terminal error reply for a request that never reached a slot: it was
 /// never admitted and never produced a token, so those fields are `None`.
-fn reject(id: u64, reply: &mpsc::Sender<Response>, submitted: Instant,
-          err: String) {
-    let _ = reply.send(Response {
+fn reject(id: u64, reply: Replier, submitted: Instant,
+          shard: Option<usize>, err: String) {
+    reply.finish(Response {
         id,
         result: Err(err),
         latency_us: us(Instant::now(), submitted),
@@ -231,12 +382,14 @@ fn reject(id: u64, reply: &mpsc::Sender<Response>, submitted: Instant,
         admit_seq: None,
         batched_steps: 0,
         single_steps: 0,
+        shard,
     });
 }
 
 /// Handle to the router thread.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
+    signal: Arc<LoadSignal>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -257,10 +410,11 @@ impl Server {
     }
 
     /// [`Server::spawn_with`], tagged as shard `shard` of a multi-server
-    /// fan-out: the id travels on every [`ServerStats`] snapshot so load
-    /// outcomes collected from this server are attributable to their shard
-    /// in the merged `moepim.slo_report.v2`.  The tag changes telemetry
-    /// only — admission and decode behave exactly as in an untagged server.
+    /// fan-out: the id travels on every [`ServerStats`] snapshot and every
+    /// [`Response`] so load outcomes collected from this server are
+    /// attributable to their shard in the merged `moepim.slo_report.v2`.
+    /// The tag changes telemetry only — admission and decode behave
+    /// exactly as in an untagged server.
     pub fn spawn_sharded(artifacts_dir: PathBuf, policy: AdmissionPolicy,
                          shard: usize) -> Result<Server> {
         Self::spawn_opts(artifacts_dir, ServerOptions {
@@ -271,11 +425,13 @@ impl Server {
     }
 
     /// Spawn with explicit [`ServerOptions`] — the full surface: admission
-    /// policy, shard tag, and the chunked-prefill budget.
+    /// policy, shard tag, chunked-prefill budget, and the shedding cap.
     pub fn spawn_opts(artifacts_dir: PathBuf, opts: ServerOptions)
         -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let signal = Arc::new(LoadSignal::default());
+        let thread_signal = Arc::clone(&signal);
         let handle = std::thread::spawn(move || {
             let engine = match Runtime::load(&artifacts_dir) {
                 Ok(rt) => {
@@ -290,10 +446,12 @@ impl Server {
                     return;
                 }
             };
-            run_loop(engine, rx, opts);
+            run_loop(engine, rx, opts, thread_signal);
         });
         match ready_rx.recv() {
-            Ok(Ok(_platform)) => Ok(Server { tx, handle: Some(handle) }),
+            Ok(Ok(_platform)) => {
+                Ok(Server { tx, signal, handle: Some(handle) })
+            }
             Ok(Err(e)) => Err(e),
             Err(_) => Err(anyhow!("router thread died during startup")),
         }
@@ -302,10 +460,26 @@ impl Server {
     /// Submit a request; returns a receiver for the terminal response.
     pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(req, tx))
-            .expect("router thread alive");
+        self.forward(req, ReplyTo::Terminal(tx));
         rx
+    }
+
+    /// Submit a request for streaming delivery: the receiver yields each
+    /// generated token as the router banks it ([`Reply::Token`]), then
+    /// exactly one [`Reply::Terminal`] with the full [`Response`].
+    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Reply> {
+        let (tx, rx) = mpsc::channel();
+        self.forward(req, ReplyTo::Streaming(tx));
+        rx
+    }
+
+    /// Forward a request with a caller-built reply sink (the cluster
+    /// front door's path), charging the live in-flight signal.
+    pub(crate) fn forward(&self, req: Request, reply: ReplyTo) {
+        self.signal.inc();
+        self.tx
+            .send(Msg::Submit(req, reply))
+            .expect("router thread alive");
     }
 
     /// Submit-and-wait convenience.
@@ -323,6 +497,13 @@ impl Server {
         })?;
         Ok(rx.recv()?)
     }
+
+    /// This backend's live load signal (in-flight request count), for
+    /// cluster placement.  The `Arc` can be cloned and read from any
+    /// thread without round-tripping through the router.
+    pub fn signal(&self) -> Arc<LoadSignal> {
+        Arc::clone(&self.signal)
+    }
 }
 
 impl Drop for Server {
@@ -338,7 +519,7 @@ impl Drop for Server {
 /// admission policy's starvation guard needs.
 struct Waiting {
     req: Request,
-    reply: mpsc::Sender<Response>,
+    reply: Replier,
     submitted: Instant,
     passed_over: u32,
 }
@@ -350,7 +531,7 @@ struct Waiting {
 /// up the prefill time — the same split the virtual clock reports.
 struct Fill {
     req: Request,
-    reply: mpsc::Sender<Response>,
+    reply: Replier,
     submitted: Instant,
     admitted: Instant,
     admit_seq: u64,
@@ -359,8 +540,8 @@ struct Fill {
 impl Fill {
     /// Terminal error reply for a request that was admitted (slot granted,
     /// prefill started) but never produced a token.
-    fn respond_err(self, err: String) {
-        let _ = self.reply.send(Response {
+    fn respond_err(self, err: String, shard: Option<usize>) {
+        let resp = Response {
             id: self.req.id,
             result: Err(err),
             latency_us: us(Instant::now(), self.submitted),
@@ -369,13 +550,15 @@ impl Fill {
             admit_seq: Some(self.admit_seq),
             batched_steps: 0,
             single_steps: 0,
-        });
+            shard,
+        };
+        self.reply.finish(resp);
     }
 }
 
 fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
-            opts: ServerOptions) {
-    let ServerOptions { policy, shard, prefill_chunk } = opts;
+            opts: ServerOptions, signal: Arc<LoadSignal>) {
+    let ServerOptions { policy, shard, prefill_chunk, queue_cap } = opts;
     let slots = eng.slots();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
@@ -403,7 +586,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             };
             match msg {
                 Msg::Shutdown => {
-                    shutdown(waiting, live, filling);
+                    shutdown(waiting, live, filling, shard);
                     return;
                 }
                 Msg::Stats(tx) => {
@@ -411,7 +594,9 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     snap.planner = eng.planner_stats();
                     let _ = tx.send(snap);
                 }
-                Msg::Submit(req, reply) => {
+                Msg::Submit(req, sink) => {
+                    let reply =
+                        Replier { sink, signal: Arc::clone(&signal) };
                     if req.gen_len == 0 {
                         // zero-length request: an immediate terminal
                         // success with no tokens — it never queues, never
@@ -419,7 +604,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         // never-happened fields stay `None`
                         stats.completed += 1;
                         let now = Instant::now();
-                        let _ = reply.send(Response {
+                        reply.finish(Response {
                             id: req.id,
                             result: Ok(Vec::new()),
                             latency_us: us(now, now),
@@ -428,7 +613,19 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                             admit_seq: None,
                             batched_steps: 0,
                             single_steps: 0,
+                            shard,
                         });
+                        continue;
+                    }
+                    if queue_cap > 0 && waiting.len() >= queue_cap {
+                        // shed: an immediate terminal error beats an
+                        // unbounded queue — the caller learns *now* that
+                        // this backend is saturated
+                        stats.shed_requests += 1;
+                        stats.errored += 1;
+                        reject(req.id, reply, Instant::now(), shard,
+                               format!("overloaded: admission queue at \
+                                        cap ({queue_cap})"));
                         continue;
                     }
                     waiting.push_back(Waiting {
@@ -448,12 +645,14 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
         for slot in 0..slots {
             let Some(l) = live[slot].as_mut() else { continue };
             l.tokens.push(l.next);
+            l.reply
+                .token(l.req.id, l.tokens.len() as u64 - 1, l.next);
             let pos = eng.session(slot).map_or(0, |s| s.pos);
             let done = l.tokens.len() >= l.req.gen_len
                 || pos >= eng.model().max_seq;
             if done {
                 let l = live[slot].take().unwrap();
-                finish_slot(&mut eng, &mut stats, slot, l);
+                finish_slot(&mut eng, &mut stats, slot, l, shard);
             }
         }
 
@@ -510,7 +709,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     }
                     Err(e) => {
                         stats.errored += 1;
-                        reject(req.id, &reply, submitted,
+                        reject(req.id, reply, submitted, shard,
                                format!("prefill failed: {e}"));
                     }
                 }
@@ -533,19 +732,20 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         batched_steps: 0,
                         single_steps: 0,
                     };
+                    l.reply.token(l.req.id, 0, next);
                     admit_seq += 1;
                     let pos = eng.session(slot).map_or(0, |s| s.pos);
                     let done = l.tokens.len() >= l.req.gen_len
                         || pos >= eng.model().max_seq;
                     if done {
-                        finish_slot(&mut eng, &mut stats, slot, l);
+                        finish_slot(&mut eng, &mut stats, slot, l, shard);
                     } else {
                         live[slot] = Some(l);
                     }
                 }
                 Err(e) => {
                     stats.errored += 1;
-                    reject(req.id, &reply, submitted,
+                    reject(req.id, reply, submitted, shard,
                            format!("prefill failed: {e}"));
                 }
             }
@@ -560,6 +760,11 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                 if filling[slot].is_none() {
                     continue;
                 }
+                let t = unix_us();
+                if stats.first_dispatch_unix_us.is_none() {
+                    stats.first_dispatch_unix_us = Some(t);
+                }
+                stats.last_dispatch_unix_us = Some(t);
                 match eng.advance_prefill(slot, prefill_chunk) {
                     Ok(None) => {
                         stats.prefill_chunks += 1;
@@ -583,11 +788,13 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                             batched_steps: 0,
                             single_steps: 0,
                         };
+                        l.reply.token(l.req.id, 0, first);
                         let pos = eng.session(slot).map_or(0, |s| s.pos);
                         let done = l.tokens.len() >= l.req.gen_len
                             || pos >= eng.model().max_seq;
                         if done {
-                            finish_slot(&mut eng, &mut stats, slot, l);
+                            finish_slot(&mut eng, &mut stats, slot, l,
+                                        shard);
                         } else {
                             live[slot] = Some(l);
                         }
@@ -596,7 +803,8 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         let f = filling[slot].take().unwrap();
                         eng.release(slot);
                         stats.errored += 1;
-                        f.respond_err(format!("prefill failed: {e}"));
+                        f.respond_err(format!("prefill failed: {e}"),
+                                      shard);
                     }
                 }
             }
@@ -611,6 +819,13 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
         if steps.is_empty() {
             continue;
         }
+        // stamp the dispatch on the unix clock: the cross-shard overlap
+        // evidence the concurrent-cluster tests read
+        let t = unix_us();
+        if stats.first_dispatch_unix_us.is_none() {
+            stats.first_dispatch_unix_us = Some(t);
+        }
+        stats.last_dispatch_unix_us = Some(t);
         if steps.len() == 1 {
             // odd-sized tail: single-token fallback over pooled storage
             let (slot, token) = steps[0];
@@ -621,7 +836,10 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     l.single_steps += 1;
                     stats.single_dispatches += 1;
                 }
-                Err(e) => fail_slot(&mut eng, &mut live, &mut stats, slot, e),
+                Err(e) => {
+                    fail_slot(&mut eng, &mut live, &mut stats, slot, e,
+                              shard)
+                }
             }
         } else {
             match eng.decode_batch(&steps) {
@@ -652,6 +870,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                                 &mut stats,
                                 slot,
                                 anyhow!("{batch_err}; retry: {e}"),
+                                shard,
                             ),
                         }
                     }
@@ -663,34 +882,39 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
 
 /// Retire a finished request: free its slot, record stats, reply.
 fn finish_slot(eng: &mut BatchEngine, stats: &mut ServerStats, slot: usize,
-               mut l: Live) {
+               mut l: Live, shard: Option<usize>) {
     eng.release(slot);
     stats.completed += 1;
     stats.tokens_generated += l.tokens.len() as u64;
     let tokens = std::mem::take(&mut l.tokens);
-    l.respond(Ok(tokens));
+    l.respond(Ok(tokens), shard);
 }
 
 /// Retire `slot` with a terminal error reply.
 fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
-             stats: &mut ServerStats, slot: usize, err: anyhow::Error) {
+             stats: &mut ServerStats, slot: usize, err: anyhow::Error,
+             shard: Option<usize>) {
     if let Some(l) = live[slot].take() {
         eng.release(slot);
         stats.errored += 1;
-        l.respond(Err(format!("decode failed: {err}")));
+        l.respond(Err(format!("decode failed: {err}")), shard);
     }
 }
 
-/// Terminal replies for everything in flight at shutdown.
+/// Terminal replies for everything in flight at shutdown: waiting,
+/// mid-prefill, and live (possibly mid-stream) requests each get exactly
+/// one terminal error — the exactly-once pin in
+/// `rust/tests/cluster_concurrent.rs`.
 fn shutdown(waiting: VecDeque<Waiting>, live: Vec<Option<Live>>,
-            filling: Vec<Option<Fill>>) {
+            filling: Vec<Option<Fill>>, shard: Option<usize>) {
     for w in waiting {
-        reject(w.req.id, &w.reply, w.submitted, "server shut down".into());
+        reject(w.req.id, w.reply, w.submitted, shard,
+               "server shut down".into());
     }
     for l in live.into_iter().flatten() {
-        l.respond(Err("server shut down".into()));
+        l.respond(Err("server shut down".into()), shard);
     }
     for f in filling.into_iter().flatten() {
-        f.respond_err("server shut down".into());
+        f.respond_err("server shut down".into(), shard);
     }
 }

@@ -33,9 +33,9 @@
 //!
 //! | Module | Role |
 //! |--------|------|
-//! | [`runtime`] | PJRT client owning the AOT-compiled artifacts |
-//! | [`coordinator`] | per-session engine, slot-batched `BatchEngine`, threaded `Server` with pluggable admission |
-//! | [`workload`] | seeded traffic generation, SLO telemetry, admission policies, virtual-time cluster, and the sharded multi-server fan-out with placement policies |
+//! | [`runtime`] | PJRT client owning the AOT-compiled artifacts (one client per router thread; independent clients run concurrently) |
+//! | [`coordinator`] | per-session engine, slot-batched `BatchEngine`, threaded `Server` with pluggable admission, and the multi-backend `Cluster` front door (live placement, streaming replies, backpressure) |
+//! | [`workload`] | seeded traffic generation, SLO telemetry, admission policies, virtual-time cluster, and the sharded multi-server fan-out — static placement splits or live-signal cluster runs, concurrent real backends by default |
 //! | [`util`] | in-tree substitutes for serde/rand/clap/criterion (offline image) |
 //!
 //! The serving-facing API surface ([`workload`] and [`coordinator`]) is

@@ -482,6 +482,7 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
     let opts = ServerOptions {
         policy,
         prefill_chunk: args.usize_flag("prefill-chunk", 0),
+        queue_cap: args.usize_flag("queue-cap", 0),
         ..ServerOptions::default()
     };
     let server = match Server::spawn_opts(artifacts_dir(args), opts) {
@@ -505,13 +506,20 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
 // ---------------------------------------------------------------------------
 
 fn cmd_shardtest(args: &Args) -> i32 {
+    if args.bool_flag("bench-cluster") {
+        return cluster_bench(args);
+    }
     run_sharded(args, args.usize_flag("shards", 2).max(1))
 }
 
 /// Shared by `shardtest` and `loadtest --shards`: split the spec across
-/// `shards` backends (virtual clusters by default, real servers with
-/// `--real`), merge shard-exactly, and print the `moepim.slo_report.v2`
-/// document.
+/// `shards` backends (virtual clusters by default, concurrently-running
+/// real servers with `--real`), merge shard-exactly, and print the
+/// `moepim.slo_report.v2` document.  `--placement live` switches from
+/// the static split to online live-signal placement (a `Cluster` front
+/// door under `--real`, incrementally-advanced virtual backends
+/// otherwise); `--serial` keeps the legacy one-shard-at-a-time real
+/// fan-out as the concurrency bench's A/B baseline.
 fn run_sharded(args: &Args, shards: usize) -> i32 {
     use moepim::workload::{
         report, run_requests_against_server, AdmissionPolicy,
@@ -536,10 +544,14 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
     };
     let vcfg = loadtest_vcfg(args);
     let placement_flag = args.str_flag("placement", "round-robin");
+    if matches!(placement_flag.as_str(),
+                "live" | "live-least-outstanding" | "live-lo") {
+        return run_sharded_live(args, shards, policy, &spec, &vcfg);
+    }
     let Some(mut placement) = PlacementPolicy::parse(&placement_flag) else {
         eprintln!(
             "unknown --placement '{placement_flag}' (expected round-robin|\
-             least-outstanding|size-hash|route-aware)"
+             least-outstanding|size-hash|route-aware|live)"
         );
         return 2;
     };
@@ -560,21 +572,27 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
     }
     let driver = ShardedDriver::new(shards, placement);
     let run = if args.bool_flag("real") {
-        // real servers share one PJRT process (single-owner), so shards
-        // run serially — each against a fresh server that serves only its
-        // own subset, dropped before the next spawn
-        let prefill_chunk = args.usize_flag("prefill-chunk", 0);
-        let result = driver.run_with(&spec, |shard, sspec, reqs| {
-            let server = moepim::coordinator::Server::spawn_opts(
-                artifacts_dir(args),
-                moepim::coordinator::ServerOptions {
-                    policy,
-                    shard: Some(shard),
-                    prefill_chunk,
-                },
-            )?;
-            run_requests_against_server(&server, sspec, reqs)
-        });
+        let opts = real_server_opts(args, policy);
+        let result = if args.bool_flag("serial") {
+            // legacy one-shard-at-a-time fan-out, kept only as the A/B
+            // baseline the concurrency bench compares against: each
+            // shard runs against a fresh server serving its own subset,
+            // dropped before the next spawn
+            driver.run_with(&spec, |shard, sspec, reqs| {
+                let server = moepim::coordinator::Server::spawn_opts(
+                    artifacts_dir(args),
+                    moepim::coordinator::ServerOptions {
+                        shard: Some(shard),
+                        ..opts.clone()
+                    },
+                )?;
+                run_requests_against_server(&server, sspec, reqs)
+            })
+        } else {
+            // N real backends, each with its own engine and PJRT client
+            // on its own router thread, driven genuinely in parallel
+            driver.run_real_concurrent(&artifacts_dir(args), &spec, &opts)
+        };
         match result {
             Ok(run) => run,
             Err(e) => {
@@ -586,7 +604,74 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
         // N independent virtual clusters: byte-identical output per seed
         driver.run_virtual(&vcfg, &spec, policy)
     };
-    let doc = report::build_sharded(&spec, policy, &driver, &run);
+    print_report(args, &report::build_sharded(&spec, policy, &driver, &run))
+}
+
+/// `--placement live`: online least-outstanding placement from live
+/// per-shard signals instead of split-time estimates.  Real runs go
+/// through the `Cluster` front door (with `--intake-cap` backpressure
+/// and `--shed-depth` load shedding); virtual runs advance N virtual
+/// backends in lock-step, which requires an open-loop arrival process.
+fn run_sharded_live(args: &Args, shards: usize,
+                    policy: moepim::workload::AdmissionPolicy,
+                    spec: &moepim::workload::WorkloadSpec,
+                    vcfg: &moepim::workload::VirtualConfig) -> i32 {
+    use moepim::coordinator::{Cluster, ClusterOptions, ClusterPlacement};
+    use moepim::workload::{report, run_against_cluster, run_virtual_live};
+    let run = if args.bool_flag("real") {
+        let cluster = match Cluster::spawn(&artifacts_dir(args),
+                                           ClusterOptions {
+            shards,
+            server: real_server_opts(args, policy),
+            placement: ClusterPlacement::LiveLeastOutstanding,
+            intake_cap: args.usize_flag("intake-cap", 0),
+            shed_depth: args.usize_flag("shed-depth", 0),
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("failed to start cluster: {e:#}");
+                return 1;
+            }
+        };
+        match run_against_cluster(&cluster, spec) {
+            Ok(run) => run,
+            Err(e) => {
+                eprintln!("shardtest failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        if matches!(spec.arrival,
+                    moepim::workload::ArrivalProcess::Closed { .. }) {
+            eprintln!(
+                "--placement live requires an open-loop arrival process \
+                 (poisson|bursty|replay): live placement decides per \
+                 arrival, and closed-loop arrivals are completion-driven"
+            );
+            return 2;
+        }
+        run_virtual_live(vcfg, spec, policy, shards)
+    };
+    print_report(args, &report::build_sharded_labeled(
+        spec, policy, shards, "live-least-outstanding", &run))
+}
+
+/// The real-backend `ServerOptions` every `--real` path shares: policy
+/// plus the `--prefill-chunk` and `--queue-cap` knobs (shard tags are
+/// filled in per backend by the fan-out).
+fn real_server_opts(args: &Args,
+                    policy: moepim::workload::AdmissionPolicy)
+    -> moepim::coordinator::ServerOptions {
+    moepim::coordinator::ServerOptions {
+        policy,
+        shard: None,
+        prefill_chunk: args.usize_flag("prefill-chunk", 0),
+        queue_cap: args.usize_flag("queue-cap", 0),
+    }
+}
+
+/// Print `doc` and honour `--out`; the shared tail of every report path.
+fn print_report(args: &Args, doc: &moepim::util::json::Json) -> i32 {
     let text = doc.to_string_pretty();
     println!("{text}");
     let out_path = args.str_flag("out", "");
@@ -599,13 +684,165 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
     0
 }
 
+/// `--bench-cluster`: the concurrency perf artifact (CI's
+/// `BENCH_cluster.json`).  Three legs over the same workload and the
+/// same artifact set: `single` (the whole spec on one backend),
+/// `serial` (the legacy one-shard-at-a-time fan-out; its duration is
+/// the *sum* of per-shard drive times), and `concurrent` (N backends on
+/// their own router threads; its duration is the slowest shard's).
+/// Record-only: the JSON carries throughput and p99 e2e per leg plus
+/// the concurrent-vs-serial speedup, and CI uploads it as an artifact
+/// instead of gating on a wall-clock threshold (shared runners would
+/// make such a gate flaky).
+fn cluster_bench(args: &Args) -> i32 {
+    use moepim::util::json::Json;
+    use moepim::workload::{
+        run_requests_against_server, AdmissionPolicy, PlacementPolicy,
+        ShardedDriver, ShardedRun,
+    };
+    let dir = artifacts_dir(args);
+    if !dir.join("manifest.json").exists() {
+        println!("bench-cluster: no artifact set at {} — skipped",
+                 dir.display());
+        return 0;
+    }
+    let Some(policy) =
+        AdmissionPolicy::parse(&args.str_flag("policy", "fifo"))
+    else {
+        eprintln!("unknown --policy (expected fifo|sjf|edf)");
+        return 2;
+    };
+    let spec = match loadtest_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let shards = args.usize_flag("shards", 2).max(2);
+    let opts = real_server_opts(args, policy);
+
+    // duration per leg: serial legs cost the sum of per-shard drive
+    // times (they ran back to back), concurrent legs the max (they
+    // overlapped); tokens and latency samples merge the same either way
+    fn leg_json(mode: &str, nshards: usize, run: &ShardedRun,
+                serial: bool) -> (f64, Json) {
+        let duration_s = if serial {
+            run.shards.iter().map(|s| s.outcome.duration_s).sum::<f64>()
+        } else {
+            run.shards
+                .iter()
+                .map(|s| s.outcome.duration_s)
+                .fold(0.0_f64, f64::max)
+        }
+        .max(1e-9);
+        let tokens: u64 = run
+            .shards
+            .iter()
+            .map(|s| s.outcome.tokens_generated())
+            .sum();
+        let mut e2e: Vec<f64> = run
+            .shards
+            .iter()
+            .flat_map(|s| s.outcome.samples.iter())
+            .map(|s| s.e2e_us)
+            .collect();
+        e2e.sort_by(f64::total_cmp);
+        let p99 = if e2e.is_empty() {
+            0.0
+        } else {
+            e2e[((e2e.len() - 1) as f64 * 0.99).round() as usize]
+        };
+        let doc = Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("shards", Json::num(nshards as f64)),
+            ("duration_s", Json::num(duration_s)),
+            ("tokens", Json::num(tokens as f64)),
+            ("tokens_per_s", Json::num(tokens as f64 / duration_s)),
+            ("p99_e2e_us", Json::num(p99)),
+        ]);
+        (duration_s, doc)
+    }
+    let spawn_serial = |shard: usize,
+                        sspec: &moepim::workload::WorkloadSpec,
+                        reqs: &[moepim::workload::RequestSpec]| {
+        let server = moepim::coordinator::Server::spawn_opts(
+            dir.clone(),
+            moepim::coordinator::ServerOptions {
+                shard: Some(shard),
+                ..opts.clone()
+            },
+        )?;
+        run_requests_against_server(&server, sspec, reqs)
+    };
+    let mut legs = Vec::new();
+    println!("bench-cluster: single backend, {} requests", spec.requests);
+    let single = match ShardedDriver::new(1, PlacementPolicy::RoundRobin)
+        .run_real_concurrent(&dir, &spec, &opts)
+    {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("bench-cluster: single leg failed: {e:#}");
+            return 1;
+        }
+    };
+    legs.push(leg_json("single", 1, &single, false).1);
+    println!("bench-cluster: {shards}-shard serial fan-out");
+    let serial = match ShardedDriver::new(shards,
+                                          PlacementPolicy::RoundRobin)
+        .run_with(&spec, spawn_serial)
+    {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("bench-cluster: serial leg failed: {e:#}");
+            return 1;
+        }
+    };
+    let (serial_s, serial_doc) = leg_json("serial", shards, &serial, true);
+    legs.push(serial_doc);
+    println!("bench-cluster: {shards}-shard concurrent fan-out");
+    let conc = match ShardedDriver::new(shards, PlacementPolicy::RoundRobin)
+        .run_real_concurrent(&dir, &spec, &opts)
+    {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("bench-cluster: concurrent leg failed: {e:#}");
+            return 1;
+        }
+    };
+    let (conc_s, conc_doc) = leg_json("concurrent", shards, &conc, false);
+    legs.push(conc_doc);
+    let doc = Json::obj(vec![
+        ("schema", Json::str("moepim.bench_cluster.v1")),
+        ("policy", Json::str(policy.label())),
+        ("shards", Json::num(shards as f64)),
+        ("requests", Json::num(spec.requests as f64)),
+        ("seed", Json::num(spec.seed as f64)),
+        ("legs", Json::Arr(legs)),
+        ("speedup_concurrent_vs_serial",
+         Json::num(serial_s / conc_s.max(1e-9))),
+    ]);
+    let text = doc.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "BENCH_cluster.json");
+    if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+        eprintln!("failed to write {out_path}: {e}");
+        return 1;
+    }
+    println!("bench-cluster: wrote {out_path} (speedup {:.2}x)",
+             serial_s / conc_s.max(1e-9));
+    0
+}
+
 /// `--smoke`: the CI gate.  Virtual leg: every (process × policy ×
 /// prefill-chunk) cell of the acceptance matrix must emit a
 /// byte-identical report twice in a row — chunked admission exactly as
-/// repeatable as monolithic.  Real leg (when an artifact set is
+/// repeatable as monolithic.  Real legs (when an artifact set is
 /// present): short closed-loop runs against the threaded server under
 /// FIFO, SJF, and FIFO with chunked prefill, every request terminal and
-/// successful.
+/// successful; then a 2-shard concurrent cluster flooded into its
+/// shedding threshold — every request must still get exactly one
+/// terminal reply, and shed replies must come back immediately.
 fn loadtest_smoke(args: &Args) -> i32 {
     use moepim::workload::{
         report, run_against_server, run_virtual, AdmissionPolicy,
@@ -738,7 +975,103 @@ fn loadtest_smoke(args: &Args) -> i32 {
                 return 1;
             }
         }
-        // `server` drops here, before the next spawn (PJRT single-owner)
+        // `server` drops here before the next spawn, keeping each leg's
+        // telemetry independent (concurrent servers are exercised by the
+        // cluster leg below)
+    }
+    // concurrent-cluster backpressure leg: two real backends behind the
+    // front door, shedding forced by a near-simultaneous open-loop flood
+    // (shed_depth 1 saturates once every backend holds slots+1 requests).
+    // Every request must get exactly one terminal reply; sheds must be
+    // nonzero, match the error count, and come back immediately — the
+    // interactive-latency guarantee under overload.
+    let cluster = match moepim::coordinator::Cluster::spawn(
+        &dir,
+        moepim::coordinator::ClusterOptions {
+            shards: 2,
+            shed_depth: 1,
+            ..moepim::coordinator::ClusterOptions::default()
+        },
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("smoke: cluster spawn failed: {e:#}");
+            return 1;
+        }
+    };
+    let spec = WorkloadSpec {
+        seed,
+        requests: 24,
+        arrival: ArrivalProcess::Poisson { rate_rps: 50_000.0 },
+        sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
+        slo_e2e_ms: 60_000.0,
+        deadline_slack_us_per_token: 500,
+    };
+    match moepim::workload::run_against_cluster(&cluster, &spec) {
+        Ok(run) => {
+            let total: usize = run
+                .shards
+                .iter()
+                .map(|s| s.outcome.samples.len())
+                .sum();
+            let shed: u64 = run
+                .shards
+                .iter()
+                .map(|s| s.outcome.shed_requests)
+                .sum();
+            let ok = run
+                .shards
+                .iter()
+                .flat_map(|s| s.outcome.samples.iter())
+                .filter(|s| s.ok)
+                .count();
+            let slow_shed = run
+                .shards
+                .iter()
+                .flat_map(|s| s.outcome.samples.iter())
+                .any(|s| !s.ok && s.e2e_us > 1_000_000.0);
+            if total != spec.requests {
+                eprintln!(
+                    "smoke: cluster leg lost replies ({total}/{} terminal)",
+                    spec.requests
+                );
+                return 1;
+            }
+            if shed == 0 {
+                eprintln!(
+                    "smoke: cluster leg shed nothing under a {}-request \
+                     flood",
+                    spec.requests
+                );
+                return 1;
+            }
+            if ok + shed as usize != total {
+                eprintln!(
+                    "smoke: cluster leg bookkeeping off (ok {ok} + shed \
+                     {shed} != {total})"
+                );
+                return 1;
+            }
+            if slow_shed {
+                eprintln!(
+                    "smoke: a shed reply took > 1 s — shedding must be \
+                     immediate"
+                );
+                return 1;
+            }
+            println!(
+                "smoke: cluster 2-shard backpressure OK ({ok} served, \
+                 {shed} shed, peak intake depth {})",
+                run.shards
+                    .first()
+                    .map(|s| s.outcome.peak_intake_depth)
+                    .unwrap_or(0)
+            );
+        }
+        Err(e) => {
+            eprintln!("smoke: cluster leg failed: {e:#}");
+            return 1;
+        }
     }
     println!("smoke: PASS");
     0

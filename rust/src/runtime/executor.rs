@@ -5,6 +5,17 @@
 //! format that survives the jax≥0.5 / xla_extension 0.5.1 version gap, see
 //! python/compile/aot.py) and then executed from the coordinator's hot path
 //! with plain f32/i32 host buffers.  Python is never involved at runtime.
+//!
+//! ## Concurrency contract
+//!
+//! A `Runtime` (and the client inside it) is **single-threaded**: it is
+//! constructed on its router thread and never crosses threads — the
+//! client type is not `Send`, so the compiler enforces this.  There is no
+//! process-wide exclusivity, though: *independent* `Runtime`s on
+//! *different* threads execute concurrently, each against its own CPU
+//! PJRT client.  That is exactly how the multi-backend
+//! `coordinator::Cluster` gets real parallelism — one `Runtime` per
+//! backend router thread, N backends decoding at once.
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -29,7 +29,9 @@ subcommands (moepim <subcommand> --help for flags):
   shardtest [flags]     sharded multi-server fan-out -> merged JSON
                         SloReport v2 with per-shard breakdown + imbalance
                         metrics (virtual clusters by default; --real
-                        drives real servers, one shard at a time)
+                        drives N real servers concurrently, each with its
+                        own router thread and PJRT client;
+                        --bench-cluster writes the concurrency bench)
 
 common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
               --prompt N --gen N --seed N --routing token|expert --skew X
@@ -82,23 +84,47 @@ moepim loadtest [workload flags] [--shards N] [--placement P]
 
   virtual clock by default: reports are byte-identical per seed.
   --real    drive the threaded server instead (wall clock)
+  --queue-cap N     (--real) shed submissions that find N requests
+            already waiting with an immediate terminal overloaded
+            error (0 = unbounded, the default)
   --shards N >= 2   fan out across N backends and emit the merged
             moepim.slo_report.v2 (equivalent to `moepim shardtest`)
-  --smoke   run the CI determinism matrix + real-server leg";
+  --smoke   run the CI determinism matrix + real-server legs (incl.
+            the 2-shard concurrent-cluster backpressure leg)";
 
     /// `moepim shardtest` flags (merged v2 report).
     pub const SHARDTEST: &str = "\
 moepim shardtest [--shards N] [--placement P] [--virtual | --real]
+                 [--serial] [--shed-depth N] [--intake-cap N]
+                 [--queue-cap N] [--bench-cluster]
                  [workload flags] [--artifacts DIR] [--out FILE]
 
   --shards N      number of backends to fan out across (default 2)
-  --placement P   round-robin | least-outstanding | size-hash | route-aware
+  --placement P   round-robin | least-outstanding | size-hash |
+                  route-aware | live
                   (route-aware shards by the expert group of each request's
                    seeded routing stream — exact for virtual backends, a
-                   seeded proxy under --real)
+                   seeded proxy under --real; live places each arrival
+                   online by live in-flight counts instead of split-time
+                   estimates — a concurrent Cluster front door under
+                   --real, lock-step virtual backends otherwise, and it
+                   requires an open-loop arrival process)
   --virtual       N virtual clusters (default; byte-identical per seed)
-  --real          N real servers (PJRT is single-owner, so shards run
-                  serially, each against a fresh server)
+  --real          N real servers running concurrently, each with its own
+                  engine and PJRT client on its own router thread; the
+                  fan-out's wall time is the slowest shard's, not the sum
+  --serial        (--real) legacy one-shard-at-a-time fan-out, kept as
+                  the A/B baseline for the concurrency bench
+  --shed-depth N  (--real --placement live) shed arrivals once every
+                  backend holds slots+N in-flight requests; shed requests
+                  get an immediate terminal overloaded reply and count in
+                  shed_requests (0 = never shed, the default)
+  --intake-cap N  (--real --placement live) bound the front-door intake
+                  queue; submitters block while it is full (0 = 1024)
+  --queue-cap N   (--real) per-backend admission-queue shedding cap
+                  (0 = unbounded, the default)
+  --bench-cluster run the single/serial/concurrent perf comparison and
+                  write BENCH_cluster.json (--out overrides the path)
   --out FILE      also write the merged v2 report to FILE
 
   note: closed-loop specs split their user population across shards with
@@ -270,6 +296,19 @@ mod tests {
         assert!(usage::SHARDTEST.contains("--shards"));
         assert!(usage::SHARDTEST.contains("--placement"));
         assert!(usage::SHARDTEST.contains("route-aware"));
+        // the concurrent-cluster surface: live placement, backpressure
+        // knobs, the serial A/B baseline, and the perf bench
+        assert!(usage::SHARDTEST.contains("live"));
+        assert!(usage::SHARDTEST.contains("--serial"));
+        assert!(usage::SHARDTEST.contains("--shed-depth"));
+        assert!(usage::SHARDTEST.contains("--intake-cap"));
+        assert!(usage::SHARDTEST.contains("--queue-cap"));
+        assert!(usage::SHARDTEST.contains("--bench-cluster"));
+        assert!(usage::SHARDTEST.contains("concurrently"));
+        assert!(usage::LOADTEST.contains("--queue-cap"));
+        // no doc may claim real shards run serially by necessity
+        assert!(!usage::ROOT.contains("single-owner"));
+        assert!(!usage::SHARDTEST.contains("single-owner"));
         // the shared workload flags ride along on both help texts
         for sub in ["loadtest", "shardtest"] {
             let help = usage::help_for(sub).expect("known subcommand");

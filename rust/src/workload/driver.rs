@@ -52,6 +52,13 @@ pub struct Sample {
     pub tokens: u64,
     /// admission sequence number; `None` when never admitted
     pub admit_seq: Option<u64>,
+    /// shard tag on the terminal reply (`None`: unsharded backend or
+    /// virtual clock, where the outcome-level
+    /// [`LoadOutcome::shard`] tag already identifies the backend).
+    /// Cluster runs use it to bucket one interleaved sample stream back
+    /// into per-shard outcomes — shed replies carry the shard that
+    /// would have received the request
+    pub shard: Option<usize>,
 }
 
 /// Everything one load experiment produced: per-request samples plus the
@@ -77,6 +84,24 @@ pub struct LoadOutcome {
     /// [`crate::coordinator::ServerOptions::prefill_chunk`] and
     /// [`crate::workload::VirtualConfig::prefill_chunk`])
     pub prefill_chunks: u64,
+    /// requests shed with an immediate terminal `overloaded` error —
+    /// per-server `queue_cap` sheds plus, in cluster runs, front-door
+    /// sheds attributed to this shard (0 when shedding is off)
+    pub shed_requests: u64,
+    /// high-water mark of the cluster intake queue (0 for single-server
+    /// and virtual runs, which have no front-door queue; a cluster run
+    /// records the cluster-wide peak on every shard's outcome, and the
+    /// merge takes the max)
+    pub peak_intake_depth: usize,
+    /// unix-epoch µs of the backend's first dispatch (`None`: virtual
+    /// clock, or never dispatched); with
+    /// [`LoadOutcome::last_dispatch_unix_us`] this is the router
+    /// thread's busy interval on a common clock — the concurrency
+    /// evidence the cluster tests assert on (shards' intervals overlap)
+    pub first_dispatch_unix_us: Option<u64>,
+    /// unix-epoch µs of the backend's most recent dispatch (`None`:
+    /// virtual clock, or never dispatched)
+    pub last_dispatch_unix_us: Option<u64>,
     /// experiment wall/virtual time in seconds
     pub duration_s: f64,
     /// `"virtual"` (deterministic, byte-identical reports) or `"wall"`
@@ -114,11 +139,17 @@ pub fn sample_from_response(resp: &Response, submit_seq: u64) -> Sample {
         e2e_us: resp.latency_us,
         tokens: resp.tokens().len() as u64,
         admit_seq: resp.admit_seq,
+        shard: resp.shard,
     }
 }
 
 /// Materialize one request's payload: seeded toy prompt + deadline budget.
-fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
+///
+/// Public so equivalence tests can submit byte-identical prompts through
+/// different front ends (bare [`Server`], serial fan-out, concurrent
+/// cluster) — the prompt depends only on the workload seed and the
+/// request's global id, never on which backend serves it.
+pub fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
     let mut rng = Pcg32::new(spec.seed ^ r.id.wrapping_mul(PROMPT_SALT));
     let prompt: Vec<i32> = (0..r.prompt_len)
         .map(|_| rng.gen_range(PROMPT_VOCAB) as i32)
@@ -148,12 +179,7 @@ pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
                                    reqs: &[RequestSpec])
     -> Result<LoadOutcome> {
     let t0 = Instant::now();
-    let samples = match spec.arrival {
-        ArrivalProcess::Closed { users, think_ms } => {
-            drive_closed(server, spec, reqs, users.max(1), think_ms)?
-        }
-        _ => drive_open(server, spec, reqs)?,
-    };
+    let samples = drive(|r| server.submit(r), spec, reqs)?;
     let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
     let stats = server.stats()?;
     Ok(LoadOutcome {
@@ -165,15 +191,40 @@ pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
         batched_tokens: stats.batched_tokens,
         single_dispatches: stats.single_dispatches,
         prefill_chunks: stats.prefill_chunks,
+        shed_requests: stats.shed_requests,
+        peak_intake_depth: 0,
+        first_dispatch_unix_us: stats.first_dispatch_unix_us,
+        last_dispatch_unix_us: stats.last_dispatch_unix_us,
         duration_s,
         clock: "wall",
         shard: stats.shard,
     })
 }
 
+/// Drive `reqs` through any submit surface — a bare [`Server`] or the
+/// concurrent cluster front door — using the loop discipline the spec's
+/// arrival process selects.  The submit closure hides which backend (or
+/// placement layer) receives each request; pacing and collection are
+/// identical either way.
+pub(crate) fn drive<F>(submit: F, spec: &WorkloadSpec, reqs: &[RequestSpec])
+    -> Result<Vec<Sample>>
+where
+    F: Fn(Request) -> mpsc::Receiver<Response>,
+{
+    match spec.arrival {
+        ArrivalProcess::Closed { users, think_ms } => {
+            drive_closed(&submit, spec, reqs, users.max(1), think_ms)
+        }
+        _ => drive_open(&submit, spec, reqs),
+    }
+}
+
 /// Open loop: pace submissions by the arrival timeline, then drain.
-fn drive_open(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec])
-    -> Result<Vec<Sample>> {
+fn drive_open<F>(submit: &F, spec: &WorkloadSpec, reqs: &[RequestSpec])
+    -> Result<Vec<Sample>>
+where
+    F: Fn(Request) -> mpsc::Receiver<Response>,
+{
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(reqs.len());
     for (submit_seq, r) in reqs.iter().enumerate() {
@@ -182,7 +233,7 @@ fn drive_open(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec])
         if target > elapsed {
             std::thread::sleep(target - elapsed);
         }
-        let rx = server.submit(request_for(spec, r));
+        let rx = submit(request_for(spec, r));
         rxs.push((submit_seq as u64, r.id, rx));
     }
     let mut samples = Vec::with_capacity(rxs.len());
@@ -206,8 +257,11 @@ struct InFlight {
 /// previous reply.  Polls with `try_recv` so every user's completion is
 /// reacted to promptly (blocking on one user would delay the others'
 /// resubmissions and distort the loop).
-fn drive_closed(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec],
-                users: usize, think_ms: f64) -> Result<Vec<Sample>> {
+fn drive_closed<F>(submit: &F, spec: &WorkloadSpec, reqs: &[RequestSpec],
+                   users: usize, think_ms: f64) -> Result<Vec<Sample>>
+where
+    F: Fn(Request) -> mpsc::Receiver<Response>,
+{
     let think = Duration::from_nanos((think_ms.max(0.0) * 1e6) as u64);
     let mut outstanding: Vec<Option<InFlight>> =
         (0..users).map(|_| None).collect();
@@ -223,7 +277,7 @@ fn drive_closed(server: &Server, spec: &WorkloadSpec, reqs: &[RequestSpec],
                 && Instant::now() >= ready_at[u]
             {
                 let r = &reqs[next];
-                let rx = server.submit(request_for(spec, r));
+                let rx = submit(request_for(spec, r));
                 outstanding[u] =
                     Some(InFlight { id: r.id, submit_seq, rx });
                 submit_seq += 1;

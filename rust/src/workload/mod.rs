@@ -12,14 +12,20 @@
 //!   with starvation guards) shared by the real server and the virtual
 //!   cluster;
 //! * [`driver`] — open-/closed-loop load driver against the real
-//!   [`crate::coordinator::Server`], collecting per-request [`Sample`]s;
+//!   [`crate::coordinator::Server`] (or the concurrent
+//!   [`crate::coordinator::Cluster`] front door), collecting per-request
+//!   [`Sample`]s;
 //! * [`vsim`] — a virtual-time discrete-event mirror of the router loop,
 //!   priced by the real [`crate::sched::BatchPlanner`] contention model —
-//!   the backend whose reports are byte-identical per seed;
+//!   the backend whose reports are byte-identical per seed; includes
+//!   [`run_virtual_live`], live-signal least-outstanding placement over
+//!   N incrementally-advanced virtual backends;
 //! * [`shard`] — the multi-server fan-out: a [`ShardedDriver`] splits one
 //!   [`WorkloadSpec`] across N backends under a pluggable
 //!   [`PlacementPolicy`] (round-robin / least-outstanding / size-hash /
 //!   routing-aware) and merges the per-shard outcomes shard-exactly;
+//!   real shards run concurrently ([`ShardedDriver::run_real_concurrent`],
+//!   [`shard::run_against_cluster`]);
 //! * [`hist`] / [`report`] — mergeable log-bucketed latency histograms
 //!   folded into the `moepim.slo_report.v1` JSON document (p50/p95/p99
 //!   queue/TTFT/e2e, SLO attainment, tokens/sec, planner contention
@@ -42,13 +48,16 @@ pub mod vsim;
 
 pub use arrival::{ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec};
 pub use driver::{
-    run_against_server, run_requests_against_server, LoadOutcome, Sample,
+    request_for, run_against_server, run_requests_against_server,
+    LoadOutcome, Sample,
 };
 pub use hist::LatencyHistogram;
 pub use policy::{AdmissionPolicy, QueuedMeta};
 pub use report::{summarize, SloSummary};
 pub use shard::{
-    Imbalance, MergedLoad, PlacementPolicy, ShardLoad, ShardOutcome,
-    ShardedDriver, ShardedRun,
+    run_against_cluster, Imbalance, MergedLoad, PlacementPolicy,
+    ShardLoad, ShardOutcome, ShardedDriver, ShardedRun,
 };
-pub use vsim::{run_virtual, run_virtual_requests, VirtualConfig};
+pub use vsim::{
+    run_virtual, run_virtual_live, run_virtual_requests, VirtualConfig,
+};

@@ -15,16 +15,22 @@
 //!   throughput{duration_s, tokens_per_s, requests_per_s},
 //!   counts{completed, errored, tokens},
 //!   server{batch_dispatches, single_dispatches, mean_batch_occupancy,
-//!          prefill_chunks, peak_waiting},
+//!          prefill_chunks, peak_waiting, shed_requests,
+//!          peak_intake_depth},
 //!   planner{steps, work, cycles, transfers, contention_ratio} }
 //! ```
 //!
-//! * **v2** ([`build_sharded`]) — a sharded fan-out, merged shard-exact:
-//!   the same sections over the merged data (`workload` gains `shards` +
-//!   `placement`; `slots` is the cluster total; `duration_s` the cluster
-//!   makespan), plus a per-shard `shards[]` breakdown and an `imbalance`
-//!   section (max/min shard load, per-shard p99 spread vs the merged
-//!   p99).
+//! * **v2** ([`build_sharded`] / [`build_sharded_labeled`]) — a sharded
+//!   fan-out, merged shard-exact: the same sections over the merged data
+//!   (`workload` gains `shards` + `placement`; `slots` is the cluster
+//!   total; `duration_s` the cluster makespan), plus a per-shard
+//!   `shards[]` breakdown and an `imbalance` section (max/min shard load,
+//!   per-shard p99 spread vs the merged p99).
+//!
+//! Both schemas keep their ids across the concurrent-cluster revision:
+//! `shed_requests` / `peak_intake_depth` (and the per-shard
+//! `shed_requests`) are purely additive fields — every pre-existing path
+//! is unchanged (see DESIGN.md §Concurrent cluster).
 
 use crate::util::json::Json;
 use crate::workload::arrival::WorkloadSpec;
@@ -170,6 +176,9 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(round3(out.mean_batch_occupancy()))),
                 ("prefill_chunks", Json::num(out.prefill_chunks as f64)),
                 ("peak_waiting", Json::num(out.peak_waiting as f64)),
+                ("shed_requests", Json::num(out.shed_requests as f64)),
+                ("peak_intake_depth",
+                 Json::num(out.peak_intake_depth as f64)),
             ]),
         ),
         (
@@ -196,6 +205,20 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
 /// `rust/tests/shard_virtual.rs`.
 pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
                      driver: &ShardedDriver, run: &ShardedRun) -> Json {
+    build_sharded_labeled(spec, policy, driver.shards,
+                          driver.placement.label(), run)
+}
+
+/// [`build_sharded`] with the shard count and placement label supplied
+/// directly — for runs that don't go through a [`ShardedDriver`] split,
+/// i.e. the live-placement paths (the real
+/// [`crate::coordinator::Cluster`] front door and the virtual
+/// [`crate::workload::run_virtual_live`]), whose placement labels
+/// (`"live-least-outstanding"`, …) aren't [`shard::PlacementPolicy`]
+/// variants.
+pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
+                             shards: usize, placement: &str,
+                             run: &ShardedRun) -> Json {
     // fold every shard's samples exactly once; the merge, the per-shard
     // breakdown and the imbalance section all reuse these summaries
     let parts: Vec<SloSummary> = run
@@ -220,6 +243,8 @@ pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("duration_s", Json::num(round6(s.outcome.duration_s))),
                 ("peak_waiting",
                  Json::num(s.outcome.peak_waiting as f64)),
+                ("shed_requests",
+                 Json::num(s.outcome.shed_requests as f64)),
                 ("p50_e2e_us", Json::num(round3(part.e2e.quantile(0.5)))),
                 ("p99_e2e_us",
                  Json::num(round3(part.e2e.quantile(0.99)))),
@@ -244,8 +269,8 @@ pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("policy", Json::str(policy.label())),
                 ("clock", Json::str(m.clock)),
                 ("slots", Json::num(m.slots as f64)),
-                ("shards", Json::num(driver.shards as f64)),
-                ("placement", Json::str(driver.placement.label())),
+                ("shards", Json::num(shards as f64)),
+                ("placement", Json::str(placement)),
             ]),
         ),
         (
@@ -292,6 +317,9 @@ pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(round3(m.mean_batch_occupancy()))),
                 ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
                 ("peak_waiting", Json::num(m.peak_waiting as f64)),
+                ("shed_requests", Json::num(m.shed_requests as f64)),
+                ("peak_intake_depth",
+                 Json::num(m.peak_intake_depth as f64)),
             ]),
         ),
         (

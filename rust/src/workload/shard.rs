@@ -32,13 +32,27 @@
 //! `rust/tests/shard_virtual.rs`).  Merging is shard-exact because
 //! [`LatencyHistogram::merge`] adds bucket counts: merged quantiles equal
 //! the quantiles of one histogram built over the concatenated samples.
+//!
+//! Real backends run **concurrently**: each [`crate::coordinator::Server`]
+//! owns its engine and PJRT client inside its own router thread, so
+//! [`ShardedDriver::run_real_concurrent`] drives all N shards in parallel
+//! driver threads (the static-split path), and [`run_against_cluster`]
+//! drives the live-placement [`crate::coordinator::Cluster`] front door
+//! and buckets its interleaved reply stream back into per-shard outcomes.
 
-use anyhow::Result;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Cluster, Server, ServerOptions};
 
 use crate::sched::PlannerStats;
 use crate::util::rng::splitmix64;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
-use crate::workload::driver::LoadOutcome;
+use crate::workload::driver::{
+    drive, run_requests_against_server, LoadOutcome, Sample,
+};
 use crate::workload::hist::LatencyHistogram;
 use crate::workload::policy::AdmissionPolicy;
 use crate::workload::report::{summarize, SloSummary};
@@ -298,10 +312,13 @@ pub struct ShardedRun {
 ///
 /// The driver is backend-agnostic: [`ShardedDriver::run_virtual`] fans out
 /// over N independent virtual clusters (deterministic, byte-identical
-/// reports per seed), while [`ShardedDriver::run_with`] accepts any
-/// per-shard runner — e.g. real [`crate::coordinator::Server`]s spawned
-/// one at a time (the PJRT client is single-owner, so real shards execute
-/// serially; each still serves only its own subset).
+/// reports per seed); [`ShardedDriver::run_real_concurrent`] drives N
+/// real [`crate::coordinator::Server`]s genuinely in parallel (each owns
+/// its engine and PJRT client on its own router thread, and each shard
+/// gets its own driver thread); and [`ShardedDriver::run_with`] accepts
+/// any serial per-shard runner for A/B comparison (e.g. the legacy
+/// `--serial` fan-out, which runs one shard at a time and whose summed
+/// wall time is the concurrent path's speedup baseline).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardedDriver {
     /// number of shards N (>= 1)
@@ -376,6 +393,68 @@ impl ShardedDriver {
         .expect("virtual shard runs are infallible")
     }
 
+    /// Fan `spec` out over N **concurrently-running** real servers: every
+    /// shard's backend is spawned first (serially — each spawn blocks on
+    /// artifact compilation), then each `(backend, subset)` pair is driven
+    /// on its own thread under `std::thread::scope`, so the N router
+    /// threads decode in parallel and the fan-out's wall time is the
+    /// slowest shard's drive time, not the sum.  Each server is moved
+    /// into its driver thread (reply senders are `Send`, not `Sync`) and
+    /// dropped there, so shard shutdowns overlap too.  The per-shard
+    /// durations exclude compilation, making them comparable with the
+    /// serial [`ShardedDriver::run_with`] baseline.
+    pub fn run_real_concurrent(&self, artifacts_dir: &Path,
+                               spec: &WorkloadSpec, opts: &ServerOptions)
+        -> Result<ShardedRun> {
+        let loads = self.split(spec);
+        let mut servers = Vec::with_capacity(loads.len());
+        for load in &loads {
+            servers.push(Server::spawn_opts(
+                artifacts_dir.to_path_buf(),
+                ServerOptions { shard: Some(load.shard), ..opts.clone() },
+            )?);
+        }
+        let results: Vec<Result<LoadOutcome>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = loads
+                    .iter()
+                    .zip(servers.drain(..))
+                    .map(|(load, server)| {
+                        scope.spawn(move || {
+                            run_requests_against_server(
+                                &server, &load.spec, &load.reqs,
+                            )
+                            // server drops here: shutdown + join happen
+                            // inside the driver thread, concurrently
+                            // across shards
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(_) => {
+                            Err(anyhow!("shard driver thread panicked"))
+                        }
+                    })
+                    .collect()
+            });
+        let mut shards = Vec::with_capacity(loads.len());
+        for (load, result) in loads.iter().zip(results) {
+            let mut outcome = result?;
+            if outcome.shard.is_none() {
+                outcome.shard = Some(load.shard);
+            }
+            shards.push(ShardOutcome {
+                shard: load.shard,
+                requests: load.reqs.len(),
+                outcome,
+            });
+        }
+        Ok(ShardedRun { shards })
+    }
+
     /// Fan `spec` out with a caller-supplied per-shard runner (shard id,
     /// per-shard spec, this shard's requests).  Shards run in shard order;
     /// the first runner error aborts the fan-out.  An outcome the runner
@@ -403,6 +482,62 @@ impl ShardedDriver {
     }
 }
 
+/// Run one whole `spec` through a live-placement [`Cluster`] front door
+/// and bucket the interleaved reply stream back into per-shard outcomes.
+///
+/// Unlike the static-split paths there is no per-shard request list ahead
+/// of time: the cluster's placement thread decides each arrival online,
+/// and every terminal [`crate::coordinator::Response`] carries the shard
+/// that served (or, for a shed, would have served) it.  All shards share
+/// the one global wall-clock duration — they genuinely ran concurrently —
+/// so the merged makespan equals it.  Per-shard `shed_requests` combines
+/// the backend's own `queue_cap` sheds with front-door sheds attributed
+/// to that shard; `peak_intake_depth` (a cluster-wide value) is recorded
+/// on every shard and max-merged.
+pub fn run_against_cluster(cluster: &Cluster, spec: &WorkloadSpec)
+    -> Result<ShardedRun> {
+    let reqs = spec.materialize();
+    let t0 = Instant::now();
+    let samples = drive(|r| cluster.submit(r), spec, &reqs)?;
+    let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = cluster.stats()?;
+    let n = cluster.shards();
+    let mut buckets: Vec<Vec<Sample>> = vec![Vec::new(); n];
+    for s in samples {
+        let shard = s.shard.unwrap_or(0).min(n - 1);
+        buckets[shard].push(s);
+    }
+    let shards = buckets
+        .into_iter()
+        .enumerate()
+        .map(|(i, samples)| {
+            let st = &stats.shards[i];
+            ShardOutcome {
+                shard: i,
+                requests: samples.len(),
+                outcome: LoadOutcome {
+                    samples,
+                    planner: st.planner.clone(),
+                    slots: st.slots,
+                    peak_waiting: st.peak_waiting,
+                    batch_dispatches: st.batch_dispatches,
+                    batched_tokens: st.batched_tokens,
+                    single_dispatches: st.single_dispatches,
+                    prefill_chunks: st.prefill_chunks,
+                    shed_requests: st.shed_requests + stats.shed[i],
+                    peak_intake_depth: stats.peak_intake_depth,
+                    first_dispatch_unix_us: st.first_dispatch_unix_us,
+                    last_dispatch_unix_us: st.last_dispatch_unix_us,
+                    duration_s,
+                    clock: "wall",
+                    shard: Some(i),
+                },
+            }
+        })
+        .collect();
+    Ok(ShardedRun { shards })
+}
+
 /// The cluster-level merge of a fan-out run: shard-exact histograms plus
 /// summed/extremal serving telemetry, ready for the
 /// `moepim.slo_report.v2` document.
@@ -427,6 +562,14 @@ pub struct MergedLoad {
     /// prefill chunk advances, summed across shards (0 for monolithic
     /// prefill backends)
     pub prefill_chunks: u64,
+    /// requests shed with terminal `overloaded` errors, summed across
+    /// shards (per-backend `queue_cap` sheds plus cluster front-door
+    /// sheds; 0 when shedding is off)
+    pub shed_requests: u64,
+    /// max per-shard recorded cluster intake-queue high-water mark (a
+    /// cluster run records the cluster-wide peak on every shard, so the
+    /// max recovers it; 0 for single-server and virtual runs)
+    pub peak_intake_depth: usize,
     /// planner telemetry with every counter summed across shards
     pub planner: PlannerStats,
     /// `"virtual"` or `"wall"`, from the shard outcomes
@@ -483,6 +626,8 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         batched_tokens: 0,
         single_dispatches: 0,
         prefill_chunks: 0,
+        shed_requests: 0,
+        peak_intake_depth: 0,
         planner: PlannerStats::default(),
         clock: "virtual",
     };
@@ -502,6 +647,9 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         merged.batched_tokens += s.outcome.batched_tokens;
         merged.single_dispatches += s.outcome.single_dispatches;
         merged.prefill_chunks += s.outcome.prefill_chunks;
+        merged.shed_requests += s.outcome.shed_requests;
+        merged.peak_intake_depth =
+            merged.peak_intake_depth.max(s.outcome.peak_intake_depth);
         merged.planner.steps += s.outcome.planner.steps;
         merged.planner.work += s.outcome.planner.work;
         merged.planner.cycles += s.outcome.planner.cycles;

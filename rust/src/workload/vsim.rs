@@ -275,6 +275,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                     e2e_us: 0.0,
                     tokens: 0,
                     admit_seq: None,
+                    shard: None,
                 });
                 if closed > 0 {
                     issue_next(&mut upcoming, &mut next_issue, reqs.len(),
@@ -327,6 +328,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                     e2e_us: ns_to_us(now - w.arrived_ns),
                     tokens: 0,
                     admit_seq: None,
+                    shard: None,
                 });
                 if closed > 0 {
                     issue_next(&mut upcoming, &mut next_issue, reqs.len(),
@@ -513,6 +515,10 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
         batched_tokens,
         single_dispatches,
         prefill_chunks,
+        shed_requests: 0,
+        peak_intake_depth: 0,
+        first_dispatch_unix_us: None,
+        last_dispatch_unix_us: None,
         duration_s: now as f64 / 1e9,
         clock: "virtual",
         shard: None,
@@ -533,7 +539,430 @@ fn finish_sample(reqs: &[RequestSpec], l: &VLive, now: u64) -> Sample {
         e2e_us: ns_to_us(now - l.arrived_ns),
         tokens: l.tokens,
         admit_seq: Some(l.admit_seq),
+        shard: None,
     }
+}
+
+/// One incrementally-advanced virtual backend, for live-signal placement
+/// ([`run_virtual_live`]): the open-loop event loop of
+/// [`run_virtual_requests`] restructured so a placement loop can park the
+/// clock at each global arrival, read the backend's simulated load, and
+/// inject the next request — the virtual mirror of the real cluster's
+/// placement thread reading [`crate::coordinator::LoadSignal`].
+///
+/// The pump is an exact mirror of the single-run loop (ingest → admit →
+/// idle fast-forward → cycle), with two differences only: arrivals come
+/// from an inbox filled by [`VBackend::arrive`] instead of a precomputed
+/// timeline, and [`VBackend::advance_to`] parks at the loop *top* once
+/// `now` reaches the horizon — before ingesting — so requests assigned at
+/// the same instant still batch through one admission pass exactly as
+/// they would mid-timeline in the single run.  A 1-shard
+/// [`run_virtual_live`] therefore replays [`run_virtual_requests`]'s
+/// event sequence exactly (pinned in `rust/tests/shard_virtual.rs`),
+/// which guards the two loops against drifting apart.
+struct VBackend {
+    cfg: VirtualConfig,
+    seed: u64,
+    policy: AdmissionPolicy,
+    /// requests assigned to this backend, arrival order; local index is
+    /// the sample's `submit_seq`, matching a static shard's subset run
+    reqs: Vec<RequestSpec>,
+    /// assigned but not yet ingested: (arrival_ns, local idx)
+    inbox: VecDeque<(u64, usize)>,
+    waiting: VecDeque<VQueued>,
+    live: Vec<Option<VLive>>,
+    filling: Vec<Option<VFill>>,
+    planner: BatchPlanner,
+    samples: Vec<Sample>,
+    now: u64,
+    admit_seq: u64,
+    peak_waiting: usize,
+    batch_dispatches: u64,
+    batched_tokens: u64,
+    single_dispatches: u64,
+    prefill_chunks: u64,
+}
+
+impl VBackend {
+    fn new(cfg: &VirtualConfig, seed: u64, policy: AdmissionPolicy)
+        -> VBackend {
+        let slots = cfg.slots.max(1);
+        VBackend {
+            cfg: cfg.clone(),
+            seed,
+            policy,
+            reqs: Vec::new(),
+            inbox: VecDeque::new(),
+            waiting: VecDeque::new(),
+            live: (0..slots).map(|_| None).collect(),
+            filling: (0..slots).map(|_| None).collect(),
+            planner: BatchPlanner::new(cfg.n_experts.max(1),
+                                       cfg.group_size.max(1), cfg.schedule),
+            samples: Vec::new(),
+            now: 0,
+            admit_seq: 0,
+            peak_waiting: 0,
+            batch_dispatches: 0,
+            batched_tokens: 0,
+            single_dispatches: 0,
+            prefill_chunks: 0,
+        }
+    }
+
+    /// The live load signal: requests assigned but not yet terminally
+    /// sampled — inbox (assigned, not ingested) + waiting queue +
+    /// occupied slots.  The virtual analogue of
+    /// [`crate::coordinator::LoadSignal::inflight`].
+    fn load(&self) -> usize {
+        self.inbox.len()
+            + self.waiting.len()
+            + self.live.iter().flatten().count()
+            + self.filling.iter().flatten().count()
+    }
+
+    /// Assign a request to this backend (ingested once the clock reaches
+    /// its arrival; callers feed arrivals in global arrival order).
+    fn arrive(&mut self, r: RequestSpec) {
+        let idx = self.reqs.len();
+        self.inbox.push_back((r.arrival_ns, idx));
+        self.reqs.push(r);
+    }
+
+    /// Advance the event clock to `horizon` (parking there even when
+    /// idle, so the next `load()` read is a same-instant snapshot).
+    fn advance_to(&mut self, horizon: u64) {
+        self.pump(Some(horizon));
+    }
+
+    /// Run to completion: every assigned request terminates.
+    fn drain(&mut self) {
+        self.pump(None);
+    }
+
+    /// The event loop — phases 1–4/5 of [`run_virtual_requests`] (open
+    /// loop only; no closed-loop chaining), plus horizon parking at the
+    /// loop top.
+    fn pump(&mut self, horizon: Option<u64>) {
+        let cfg = self.cfg.clone();
+        let slots = cfg.slots.max(1);
+        let n_layers = cfg.n_layers.max(1);
+        let chunk = cfg.prefill_chunk;
+        loop {
+            if let Some(h) = horizon {
+                if self.now >= h {
+                    return;
+                }
+            }
+
+            // ---- 1. ingest arrivals due by now ----------------------
+            while let Some(&(t, idx)) = self.inbox.front() {
+                if t > self.now {
+                    break;
+                }
+                self.inbox.pop_front();
+                let r = &self.reqs[idx];
+                if r.gen_len == 0 {
+                    self.samples.push(Sample {
+                        id: r.id,
+                        submit_seq: idx as u64,
+                        ok: true,
+                        queue_us: None,
+                        ttft_us: None,
+                        e2e_us: 0.0,
+                        tokens: 0,
+                        admit_seq: None,
+                        shard: None,
+                    });
+                    continue;
+                }
+                self.waiting.push_back(VQueued {
+                    idx,
+                    arrived_ns: t,
+                    passed_over: 0,
+                });
+                self.peak_waiting =
+                    self.peak_waiting.max(self.waiting.len());
+            }
+
+            // ---- 2. policy-driven slot admission --------------------
+            while !self.waiting.is_empty() {
+                let Some(slot) = (0..slots).find(|&s| {
+                    self.live[s].is_none() && self.filling[s].is_none()
+                }) else {
+                    break;
+                };
+                let w = if matches!(self.policy, AdmissionPolicy::Fifo) {
+                    self.waiting.pop_front().expect("waiting non-empty")
+                } else {
+                    let metas: Vec<QueuedMeta> = self
+                        .waiting
+                        .iter()
+                        .map(|w| QueuedMeta {
+                            gen_len: self.reqs[w.idx].gen_len,
+                            deadline_us: Some(self.reqs[w.idx].deadline_us),
+                            waited_us: (self.now - w.arrived_ns) / 1000,
+                            passed_over: w.passed_over,
+                        })
+                        .collect();
+                    let pick = self.policy.select(&metas);
+                    let w = self
+                        .waiting
+                        .remove(pick)
+                        .expect("selected index in range");
+                    for o in self.waiting.iter_mut().take(pick) {
+                        o.passed_over += 1;
+                    }
+                    w
+                };
+                let r = &self.reqs[w.idx];
+                if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
+                    self.samples.push(Sample {
+                        id: r.id,
+                        submit_seq: w.idx as u64,
+                        ok: false,
+                        queue_us: None,
+                        ttft_us: None,
+                        e2e_us: ns_to_us(self.now - w.arrived_ns),
+                        tokens: 0,
+                        admit_seq: None,
+                        shard: None,
+                    });
+                    continue;
+                }
+                if chunk == 0 {
+                    let admitted_ns = self.now;
+                    self.now +=
+                        r.prompt_len as u64 * cfg.prefill_ns_per_token;
+                    let l = VLive {
+                        idx: w.idx,
+                        arrived_ns: w.arrived_ns,
+                        admitted_ns,
+                        first_token_ns: self.now,
+                        admit_seq: self.admit_seq,
+                        tokens: 1,
+                        rng: route_rng(self.seed, r.id),
+                    };
+                    self.admit_seq += 1;
+                    if l.tokens >= r.gen_len as u64
+                        || r.prompt_len + 1 >= cfg.max_seq
+                    {
+                        self.samples
+                            .push(finish_sample(&self.reqs, &l, self.now));
+                    } else {
+                        self.live[slot] = Some(l);
+                    }
+                } else {
+                    self.filling[slot] = Some(VFill {
+                        idx: w.idx,
+                        arrived_ns: w.arrived_ns,
+                        admitted_ns: self.now,
+                        admit_seq: self.admit_seq,
+                        remaining: r.prompt_len,
+                        rng: prefill_rng(self.seed, r.id),
+                    });
+                    self.admit_seq += 1;
+                }
+            }
+
+            // ---- 3. idle fast-forward / park / terminate ------------
+            if self.live.iter().all(Option::is_none)
+                && self.filling.iter().all(Option::is_none)
+            {
+                match self.inbox.front() {
+                    Some(&(t, _)) => {
+                        self.now = self.now.max(t);
+                        continue;
+                    }
+                    None => {
+                        // idle with nothing assigned: park at the
+                        // horizon so the caller's next load() read is a
+                        // same-instant snapshot, or finish the drain
+                        if let Some(h) = horizon {
+                            self.now = self.now.max(h);
+                        }
+                        return;
+                    }
+                }
+            }
+
+            // ---- 4a. chunked prefill advances -----------------------
+            let mut prefill_sets: Vec<Vec<Vec<usize>>> =
+                vec![Vec::new(); n_layers];
+            for s in 0..slots {
+                let Some(f) = self.filling[s].as_mut() else { continue };
+                let advanced = f.remaining.min(chunk);
+                self.now += advanced as u64 * cfg.prefill_ns_per_token;
+                f.remaining -= advanced;
+                self.prefill_chunks += 1;
+                for layer_rows in prefill_sets.iter_mut() {
+                    layer_rows.push(sample_experts(
+                        &mut f.rng,
+                        cfg.n_experts.max(1),
+                        cfg.experts_per_token.max(1),
+                        cfg.route_skew,
+                    ));
+                }
+                if f.remaining == 0 {
+                    let f = self.filling[s].take().unwrap();
+                    let r = &self.reqs[f.idx];
+                    let l = VLive {
+                        idx: f.idx,
+                        arrived_ns: f.arrived_ns,
+                        admitted_ns: f.admitted_ns,
+                        first_token_ns: self.now,
+                        admit_seq: f.admit_seq,
+                        tokens: 1,
+                        rng: route_rng(self.seed, r.id),
+                    };
+                    if l.tokens >= r.gen_len as u64
+                        || r.prompt_len + 1 >= cfg.max_seq
+                    {
+                        self.samples
+                            .push(finish_sample(&self.reqs, &l, self.now));
+                    } else {
+                        self.live[s] = Some(l);
+                    }
+                }
+            }
+
+            // ---- 4b. the mixed step, planner-priced -----------------
+            let active: Vec<usize> =
+                (0..slots).filter(|&s| self.live[s].is_some()).collect();
+            let mut layer_sets: Vec<Vec<Vec<usize>>> =
+                Vec::with_capacity(n_layers);
+            for prefill_rows in prefill_sets.iter_mut() {
+                let mut sets: Vec<Vec<usize>> = active
+                    .iter()
+                    .map(|&s| {
+                        let l = self.live[s].as_mut().unwrap();
+                        sample_experts(
+                            &mut l.rng,
+                            cfg.n_experts.max(1),
+                            cfg.experts_per_token.max(1),
+                            cfg.route_skew,
+                        )
+                    })
+                    .collect();
+                sets.append(prefill_rows);
+                layer_sets.push(sets);
+            }
+            if layer_sets[0].is_empty() {
+                continue;
+            }
+            let plans = self.planner.plan_layers(&layer_sets);
+            let cycles: u64 = plans.iter().map(|p| p.cycles as u64).sum();
+            self.now += cfg.dispatch_overhead_ns + cycles * cfg.cycle_ns;
+            match active.len() {
+                0 => {}
+                1 => self.single_dispatches += 1,
+                _ => {
+                    self.batch_dispatches += 1;
+                    self.batched_tokens += active.len() as u64;
+                }
+            }
+
+            // ---- 5. bank tokens, retire finished slots --------------
+            for &s in &active {
+                let done = {
+                    let l = self.live[s].as_mut().unwrap();
+                    l.tokens += 1;
+                    let r = &self.reqs[l.idx];
+                    l.tokens >= r.gen_len as u64
+                        || r.prompt_len as u64 + l.tokens
+                            >= cfg.max_seq as u64
+                };
+                if done {
+                    let l = self.live[s].take().unwrap();
+                    self.samples
+                        .push(finish_sample(&self.reqs, &l, self.now));
+                }
+            }
+        }
+    }
+
+    /// Close out the backend into a [`LoadOutcome`] (the caller tags the
+    /// shard id).  `duration_s` is this backend's own event-clock end.
+    fn into_outcome(self) -> LoadOutcome {
+        let slots = self.cfg.slots.max(1);
+        LoadOutcome {
+            samples: self.samples,
+            planner: self.planner.stats(),
+            slots,
+            peak_waiting: self.peak_waiting,
+            batch_dispatches: self.batch_dispatches,
+            batched_tokens: self.batched_tokens,
+            single_dispatches: self.single_dispatches,
+            prefill_chunks: self.prefill_chunks,
+            shed_requests: 0,
+            peak_intake_depth: 0,
+            first_dispatch_unix_us: None,
+            last_dispatch_unix_us: None,
+            duration_s: self.now as f64 / 1e9,
+            clock: "virtual",
+            shard: None,
+        }
+    }
+}
+
+/// Live-signal least-outstanding placement on the virtual clock: N
+/// incremental [`VBackend`]s, one placement loop walking the global
+/// arrival timeline — each arrival advances every backend's clock to its
+/// arrival instant, reads the backends' *simulated* loads (inbox + queue
+/// + occupied slots), and assigns the request to the least-loaded backend
+/// (ties to the lowest shard id).  This is the virtual mirror of the real
+/// [`crate::coordinator::Cluster`]'s control loop, and the live
+/// counterpart of the estimate-based
+/// [`crate::workload::PlacementPolicy::LeastOutstanding`] split: the
+/// estimate assumes service starts at arrival and never sees queueing;
+/// the live signal *is* the queueing, so the two diverge under skewed
+/// bursts (pinned in `rust/tests/shard_virtual.rs`).
+///
+/// Deterministic: same `(cfg, spec, policy, shards)` → identical
+/// [`crate::workload::ShardedRun`].  With `shards == 1` it replays
+/// [`run_virtual_requests`] exactly.
+///
+/// Open-loop arrival processes only — a closed loop has no global arrival
+/// timeline to place from (arrivals chain off per-backend completions),
+/// so this panics on [`ArrivalProcess::Closed`]; the CLI rejects the
+/// combination before calling.
+pub fn run_virtual_live(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                        policy: AdmissionPolicy, shards: usize)
+    -> crate::workload::shard::ShardedRun {
+    assert!(
+        !matches!(spec.arrival, ArrivalProcess::Closed { .. }),
+        "live placement requires an open-loop arrival process"
+    );
+    let n = shards.max(1);
+    let mut backends: Vec<VBackend> =
+        (0..n).map(|_| VBackend::new(cfg, spec.seed, policy)).collect();
+    for r in spec.materialize() {
+        let t = r.arrival_ns;
+        for b in backends.iter_mut() {
+            b.advance_to(t);
+        }
+        let best = (0..n)
+            .min_by_key(|&i| (backends[i].load(), i))
+            .unwrap_or(0);
+        backends[best].arrive(r);
+    }
+    for b in backends.iter_mut() {
+        b.drain();
+    }
+    let shards = backends
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let requests = b.reqs.len();
+            let mut outcome = b.into_outcome();
+            outcome.shard = Some(i);
+            crate::workload::shard::ShardOutcome {
+                shard: i,
+                requests,
+                outcome,
+            }
+        })
+        .collect();
+    crate::workload::shard::ShardedRun { shards }
 }
 
 #[cfg(test)]

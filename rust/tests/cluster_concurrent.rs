@@ -1,0 +1,240 @@
+//! Cluster front-door integration over the real depth-L model (requires
+//! `make artifacts`): concurrent N-shard serving must reproduce the
+//! single-backend token streams byte-identically, stream tokens in
+//! order, genuinely overlap its backends, survive shutdown under load
+//! with exactly one terminal reply per request, and shed — terminally,
+//! immediately, and accountably — when every backend is saturated.
+//!
+//! All scenarios share one #[test]: every `Server::spawn` compiles the
+//! whole artifact set, so the legs reuse as few spawns as possible and
+//! run back to back.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use moepim::coordinator::{
+    Cluster, ClusterOptions, ClusterPlacement, Reply, Server,
+};
+use moepim::workload::{
+    request_for, ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec,
+};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("MOEPIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// The shared workload: seeded sizes, open-loop arrivals (unused — the
+/// legs submit as a burst; token streams do not depend on timing).
+fn spec(requests: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        seed: 2026,
+        requests,
+        arrival: ArrivalProcess::Poisson { rate_rps: 50_000.0 },
+        sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
+        slo_e2e_ms: 60_000.0,
+        deadline_slack_us_per_token: 500,
+    }
+}
+
+#[test]
+fn cluster_matches_serial_streams_and_survives_load() {
+    let dir = artifacts_dir();
+    let spec24 = spec(24);
+    let reqs: Vec<RequestSpec> = spec24.materialize();
+
+    // ---- leg A: single-backend reference streams ----------------------
+    // One standalone server serves every request; its per-request token
+    // streams are the byte-level reference for the concurrent cluster
+    // (the engine is deterministic in (prompt, gen_len), so placement
+    // and batching composition must not change a single token).
+    let mut reference: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    {
+        let server = Server::spawn(dir.clone()).expect(
+            "artifacts missing — run `make artifacts` before `cargo test`",
+        );
+        let rxs: Vec<_> = reqs
+            .iter()
+            .map(|r| server.submit(request_for(&spec24, r)))
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("terminal reference reply");
+            let tokens =
+                resp.result.as_ref().expect("reference succeeds").clone();
+            reference.insert(resp.id, tokens);
+        }
+    }
+    assert_eq!(reference.len(), reqs.len());
+    let reference_total: usize = reference.values().map(Vec::len).sum();
+
+    // ---- leg B: concurrent round-robin cluster ------------------------
+    // Round-robin with shedding off assigns submit order mod N — the
+    // same split a static round-robin fan-out produces — so every
+    // response is checkable against both its reference stream and its
+    // expected shard.  The first few requests ride the streaming path.
+    let cluster = Cluster::spawn(&dir, ClusterOptions {
+        shards: 2,
+        placement: ClusterPlacement::RoundRobin,
+        ..ClusterOptions::default()
+    })
+    .expect("cluster spawns");
+    const STREAMED: usize = 4;
+    let stream_rxs: Vec<_> = reqs[..STREAMED]
+        .iter()
+        .map(|r| cluster.submit_streaming(request_for(&spec24, r)))
+        .collect();
+    let term_rxs: Vec<_> = reqs[STREAMED..]
+        .iter()
+        .map(|r| cluster.submit(request_for(&spec24, r)))
+        .collect();
+    let mut cluster_total = 0usize;
+    for (i, rx) in stream_rxs.into_iter().enumerate() {
+        // streaming lifecycle: tokens in index order, then exactly one
+        // terminal whose token vector equals the streamed concatenation
+        let mut streamed: Vec<i32> = Vec::new();
+        let mut terminal = None;
+        for event in rx.iter() {
+            match event {
+                Reply::Token { id, index, token } => {
+                    assert!(
+                        terminal.is_none(),
+                        "token after terminal on request {id}"
+                    );
+                    assert_eq!(index as usize, streamed.len(),
+                               "stream index out of order");
+                    streamed.push(token);
+                }
+                Reply::Terminal(resp) => {
+                    assert!(terminal.is_none(), "double terminal");
+                    terminal = Some(resp);
+                }
+            }
+        }
+        // rx.iter() ended: the replier hung up after the terminal
+        let resp = terminal.expect("streaming request got a terminal");
+        let want = &reference[&resp.id];
+        let got = resp.result.as_ref().expect("streamed request succeeds");
+        assert_eq!(got, want, "cluster stream diverged from reference");
+        assert_eq!(&streamed, want,
+                   "streamed tokens != terminal tokens");
+        assert_eq!(resp.shard, Some(i % 2), "round-robin shard tag");
+        cluster_total += got.len();
+    }
+    for (i, rx) in term_rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("terminal cluster reply");
+        let want = &reference[&resp.id];
+        let got = resp.result.as_ref().expect("cluster request succeeds");
+        assert_eq!(got, want, "cluster stream diverged from reference");
+        assert_eq!(resp.shard, Some((STREAMED + i) % 2),
+                   "round-robin shard tag");
+        cluster_total += got.len();
+    }
+    // merged counters, modulo timing: same requests, same total tokens
+    assert_eq!(cluster_total, reference_total);
+    let stats = cluster.stats().expect("cluster stats");
+    assert_eq!(stats.placed, vec![12, 12]);
+    assert_eq!(stats.shed, vec![0, 0]);
+    assert_eq!(stats.shed_requests(), 0);
+    let completed: u64 = stats.shards.iter().map(|s| s.completed).sum();
+    assert_eq!(completed, reqs.len() as u64);
+    // genuine concurrency: the two router threads' dispatch windows
+    // [first, last] overlap on the shared wall clock
+    let windows: Vec<(u64, u64)> = stats
+        .shards
+        .iter()
+        .map(|s| {
+            (
+                s.first_dispatch_unix_us.expect("shard 0/1 dispatched"),
+                s.last_dispatch_unix_us.expect("shard 0/1 dispatched"),
+            )
+        })
+        .collect();
+    assert!(
+        windows[0].0 <= windows[1].1 && windows[1].0 <= windows[0].1,
+        "shard dispatch windows never overlapped: {windows:?} — \
+         backends ran serially"
+    );
+    drop(cluster);
+
+    // ---- leg C: shutdown under load -----------------------------------
+    // Drop the cluster while requests are still in flight: every
+    // submitted request must still get exactly one terminal reply (a
+    // success or a "server shut down" error), never a silent hangup.
+    let cluster = Cluster::spawn(&dir, ClusterOptions {
+        shards: 2,
+        placement: ClusterPlacement::RoundRobin,
+        ..ClusterOptions::default()
+    })
+    .expect("cluster spawns");
+    let spec12 = spec(12);
+    let rxs: Vec<_> = spec12
+        .materialize()
+        .iter()
+        .map(|r| cluster.submit(request_for(&spec12, r)))
+        .collect();
+    drop(cluster);
+    for rx in rxs {
+        let resp = rx.recv().expect(
+            "request in flight at shutdown still gets a terminal reply",
+        );
+        if let Err(e) = &resp.result {
+            assert!(e.contains("shut down"), "unexpected error: {e}");
+        }
+        assert!(
+            rx.recv().is_err(),
+            "more than one terminal reply for request {}", resp.id
+        );
+    }
+
+    // ---- leg D: forced shedding ---------------------------------------
+    // Live placement with shed_depth 1: a 40-request burst saturates
+    // both backends (each fills slots+1 in-flight long before decode
+    // finishes), so the front door must shed — terminally, immediately,
+    // and with counters that reconcile exactly.
+    let cluster = Cluster::spawn(&dir, ClusterOptions {
+        shards: 2,
+        placement: ClusterPlacement::LiveLeastOutstanding,
+        shed_depth: 1,
+        ..ClusterOptions::default()
+    })
+    .expect("cluster spawns");
+    let spec40 = spec(40);
+    let rxs: Vec<_> = spec40
+        .materialize()
+        .iter()
+        .map(|r| cluster.submit(request_for(&spec40, r)))
+        .collect();
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().expect("every request gets a terminal reply");
+        match &resp.result {
+            Ok(_) => served += 1,
+            Err(e) => {
+                assert!(e.contains("overloaded"),
+                        "unexpected error: {e}");
+                // a shed is decided at the front door, before serving:
+                // it must come back with no admission or token events
+                assert!(resp.ttft_us.is_none());
+                assert!(resp.admit_seq.is_none());
+                assert!(resp.shard.is_some(),
+                        "shed reply carries its candidate shard");
+                shed += 1;
+            }
+        }
+        assert!(rx.recv().is_err(), "duplicate terminal reply");
+    }
+    assert_eq!(served + shed, 40);
+    assert!(shed > 0, "a 40-request burst against 2 backends at shed \
+                       depth 1 must shed");
+    assert!(served > 0, "shedding must not starve the cluster entirely");
+    let stats = cluster.stats().expect("cluster stats");
+    assert_eq!(stats.shed_requests(), shed, "shed telemetry reconciles");
+    let errored: u64 = stats.shards.iter().map(|s| s.errored).sum();
+    // front-door sheds never reach a backend, so backend error counts
+    // stay clean (only queue_cap sheds would land there, and it is off)
+    assert_eq!(errored, 0);
+}

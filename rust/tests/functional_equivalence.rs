@@ -4,9 +4,9 @@
 //! manifest and pins the whole stack, so the CI matrix runs it against
 //! both an L=1 and an L=3 artifact set.
 //!
-//! The PJRT client is single-owner, and HLO compilation of the multi-MB
-//! constant-laden modules is the expensive part, so everything shares one
-//! `Runtime` inside a single #[test].
+//! HLO compilation of the multi-MB constant-laden modules is the
+//! expensive part of constructing a `Runtime` (each owns its own PJRT
+//! client), so everything shares one `Runtime` inside a single #[test].
 
 use moepim::cache::GoCache;
 use moepim::config::manifest::layer_artifact;

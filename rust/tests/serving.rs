@@ -3,11 +3,13 @@
 //! for bad requests and artifact-directory errors, plus a randomized
 //! churn scenario pinned against per-session engine references.
 //!
-//! All server scenarios share one #[test]: the PJRT client is single-owner
-//! and each `Server::spawn` compiles every artifact, so one router thread
-//! serves every scenario below.  The churn references are computed from a
-//! private `ModelEngine` that is dropped *before* the server spawns its
-//! own client.
+//! All server scenarios share one #[test] because each `Server::spawn`
+//! compiles every artifact — one router thread serves every scenario
+//! below to keep the suite fast (concurrent multi-server serving is
+//! exercised by `tests/cluster_concurrent.rs`).  The churn references
+//! are computed from a private `ModelEngine` that is dropped before the
+//! server spawns, purely so the reference buffers are gone before the
+//! serving run starts.
 
 use std::path::PathBuf;
 

@@ -7,8 +7,9 @@
 
 use moepim::util::json;
 use moepim::workload::{
-    report, run_virtual, shard, AdmissionPolicy, ArrivalProcess,
-    PlacementPolicy, ShardedDriver, SizeModel, VirtualConfig, WorkloadSpec,
+    report, run_virtual, run_virtual_live, shard, AdmissionPolicy,
+    ArrivalProcess, PlacementPolicy, ShardedDriver, SizeModel,
+    VirtualConfig, WorkloadSpec,
 };
 
 fn spec() -> WorkloadSpec {
@@ -288,4 +289,129 @@ fn route_aware_assignment_is_stable_and_grouped() {
     for (id, (&s4, &g)) in a4.iter().zip(&a8).enumerate() {
         assert_eq!(s4, g % 4, "request {id} split from its group");
     }
+}
+
+// ---------------------------------------------------------------------------
+// live-signal placement (run_virtual_live)
+// ---------------------------------------------------------------------------
+
+/// The live-placement pump is the router loop: with one backend there is
+/// nothing to place, so `run_virtual_live` at N=1 must reproduce the
+/// classic single-cluster run sample-for-sample — the guard that the
+/// incremental advance/drain pump is an exact reformulation and not a
+/// near-miss reimplementation.
+#[test]
+fn one_shard_live_placement_reproduces_unsharded_loadtest() {
+    let cfg = VirtualConfig::default();
+    let spec = spec();
+    for policy in [
+        AdmissionPolicy::fifo(),
+        AdmissionPolicy::sjf(),
+        AdmissionPolicy::deadline(),
+    ] {
+        let direct = run_virtual(&cfg, &spec, policy);
+        let live = run_virtual_live(&cfg, &spec, policy, 1);
+        assert_eq!(live.shards.len(), 1);
+        assert_eq!(
+            live.shards[0].outcome.samples, direct.samples,
+            "1-shard live run diverged under {}",
+            policy.label()
+        );
+        assert_eq!(live.shards[0].outcome.planner.cycles,
+                   direct.planner.cycles);
+        assert_eq!(live.shards[0].outcome.batch_dispatches,
+                   direct.batch_dispatches);
+    }
+}
+
+/// A skewed burst: the estimate-based `LeastOutstanding` split and the
+/// live-signal placement see different worlds.  The estimator charges
+/// each shard its *predicted* service time at split time; the live
+/// pump reads each backend's *actual* queue at each arrival.  Under
+/// bursty skewed traffic those disagree — the regression pin that the
+/// live path really replaced the estimates (if it secretly re-derived
+/// the same split, every seed would match).  Both must still conserve
+/// every request exactly once.
+#[test]
+fn live_placement_diverges_from_estimate_split_under_skewed_burst() {
+    let cfg = VirtualConfig { slots: 2, ..VirtualConfig::default() };
+    let shards = 2usize;
+    let mut any_diverged = false;
+    for seed in [7u64, 8, 9] {
+        let spec = WorkloadSpec {
+            seed,
+            requests: 48,
+            arrival: ArrivalProcess::Bursty {
+                rate_rps: 4_000.0,
+                mean_on_ms: 5.0,
+                mean_off_ms: 20.0,
+            },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 2.0,
+                prompt: (4, 48),
+                gen: (1, 24),
+            },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 500,
+        };
+        let reqs = spec.materialize();
+        let estimate = PlacementPolicy::least_outstanding(&cfg)
+            .assign(&spec, &reqs, shards);
+        let mut est_ids: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        for (r, &s) in reqs.iter().zip(&estimate) {
+            est_ids[s.min(shards - 1)].push(r.id);
+        }
+        let live =
+            run_virtual_live(&cfg, &spec, AdmissionPolicy::fifo(), shards);
+        let mut live_ids: Vec<Vec<u64>> = live
+            .shards
+            .iter()
+            .map(|s| s.outcome.samples.iter().map(|x| x.id).collect())
+            .collect();
+        // conservation on both sides: every request on exactly one shard
+        for ids in live_ids.iter_mut().chain(est_ids.iter_mut()) {
+            ids.sort_unstable();
+        }
+        let mut all_live: Vec<u64> =
+            live_ids.iter().flatten().copied().collect();
+        all_live.sort_unstable();
+        assert_eq!(all_live, (0..spec.requests as u64).collect::<Vec<_>>());
+        if live_ids != est_ids {
+            any_diverged = true;
+        }
+    }
+    assert!(
+        any_diverged,
+        "live placement reproduced the estimate-based split on every \
+         seed — the live signals are not actually being read"
+    );
+}
+
+/// Live placement is still a deterministic virtual-clock path: same
+/// inputs, byte-identical merged report.
+#[test]
+fn live_placement_reports_are_byte_identical_across_reruns() {
+    let cfg = VirtualConfig::default();
+    let spec = spec();
+    let policy = AdmissionPolicy::sjf();
+    let a = run_virtual_live(&cfg, &spec, policy, 4);
+    let b = run_virtual_live(&cfg, &spec, policy, 4);
+    assert_eq!(a.shards, b.shards, "live runs diverged across reruns");
+    let ra = report::build_sharded_labeled(
+        &spec, policy, 4, "live-least-outstanding", &a)
+        .to_string_pretty();
+    let rb = report::build_sharded_labeled(
+        &spec, policy, 4, "live-least-outstanding", &b)
+        .to_string_pretty();
+    assert_eq!(ra, rb);
+    let parsed = json::parse(&ra).expect("valid JSON");
+    assert_eq!(
+        parsed.path(&["workload", "placement"]).unwrap().as_str(),
+        Some("live-least-outstanding")
+    );
+    assert_eq!(
+        parsed.path(&["shards"]).unwrap().as_arr().unwrap().len(),
+        4
+    );
 }
