@@ -1,0 +1,99 @@
+//! E11 driver: the trace lifecycle end to end — record a virtual run,
+//! round-trip the `moepim.trace.v1` document through its JSON text,
+//! replay it byte-identically, then calibrate the virtual cost model
+//! against the recording and print the fit.
+//!
+//! The same loop the CLI exposes as `loadtest --record FILE`,
+//! `loadtest --replay FILE`, and `calibrate --trace FILE`, driven here
+//! in-process so the identity and the fit are visible side by side.
+//!
+//! ```bash
+//! cargo run --release --example trace_roundtrip
+//! ```
+
+use moepim::util::json;
+use moepim::workload::record::{RecordedTrace, TraceBackend, TraceRecorder};
+use moepim::workload::{
+    calibrate, report, run_virtual, run_virtual_requests, scenario_spec,
+    AdmissionPolicy, VirtualConfig,
+};
+
+fn main() {
+    let cfg = VirtualConfig::default();
+    let policy = AdmissionPolicy::fifo();
+    let spec = scenario_spec("mixed-tenants", 2026).expect("known preset");
+    println!(
+        "E11: trace lifecycle on the mixed-tenants preset ({} requests, \
+         seed {})",
+        spec.requests, spec.seed
+    );
+
+    // ---- record -----------------------------------------------------------
+    let out = run_virtual(&cfg, &spec, policy);
+    let recorded = report::build(&spec, policy, &out).to_string_pretty();
+    let trace = TraceRecorder::new(&spec, policy)
+        .finish(&out, TraceBackend::from_virtual(&cfg));
+    let text = trace.to_json().to_string_pretty();
+    println!(
+        "recorded {} requests -> {} bytes of moepim.trace.v1",
+        trace.requests.len(),
+        text.len()
+    );
+
+    // ---- reload + replay --------------------------------------------------
+    let doc = json::parse(&text).expect("trace text parses");
+    let loaded = RecordedTrace::from_json(&doc).expect("trace loads");
+    assert_eq!(loaded, trace, "JSON round trip must be lossless");
+    let replay = run_virtual_requests(
+        &cfg,
+        loaded.original_spec(),
+        &loaded.replay_requests(),
+        policy,
+    );
+    let replayed = report::build(loaded.original_spec(), policy, &replay)
+        .to_string_pretty();
+    println!(
+        "replay report: {} bytes, byte-identical to the recording: {}",
+        replayed.len(),
+        replayed == recorded
+    );
+    assert_eq!(replayed, recorded);
+
+    // ---- calibrate --------------------------------------------------------
+    let cal = calibrate(&loaded, &cfg).expect("calibration fit");
+    println!(
+        "calibration over {} samples (mean {:.2} planner cycles/step):",
+        cal.n_samples, cal.mean_cycles_per_step
+    );
+    println!(
+        "  prefill_ns_per_token : fitted {:>8.1}  (base {})",
+        cal.prefill_ns_per_token, cal.base.prefill_ns_per_token
+    );
+    println!(
+        "  decode_step_ns       : fitted {:>8.1}  (scale {:.4} applied \
+         to dispatch {} + cycle {})",
+        cal.decode_step_ns,
+        cal.scale,
+        cal.base.dispatch_overhead_ns,
+        cal.base.cycle_ns
+    );
+    println!(
+        "  fit residual         : {:.1} us rms over service times",
+        cal.rms_residual_us
+    );
+    println!(
+        "  re-prediction        : p50 {:.1} us vs {:.1} us ({:.2}% err), \
+         p99 {:.1} us vs {:.1} us ({:.2}% err)",
+        cal.predicted_p50_e2e_us,
+        cal.recorded_p50_e2e_us,
+        cal.p50_err_pct,
+        cal.predicted_p99_e2e_us,
+        cal.recorded_p99_e2e_us,
+        cal.p99_err_pct
+    );
+    assert!(
+        cal.p50_err_pct <= 15.0 && cal.p99_err_pct <= 15.0,
+        "self-calibration must land inside the 15% acceptance gate"
+    );
+    println!("E11 OK: record -> replay byte-identical, fit inside 15%");
+}

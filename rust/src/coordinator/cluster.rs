@@ -153,6 +153,10 @@ pub struct ClusterStats {
     pub shed: Vec<u64>,
     /// high-water mark of the intake queue depth
     pub peak_intake_depth: usize,
+    /// placement-policy label the front door runs
+    /// ([`ClusterPlacement::label`]) — recorded into `moepim.trace.v1`
+    /// documents (see [`crate::workload::record`])
+    pub placement: String,
 }
 
 impl ClusterStats {
@@ -325,6 +329,7 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                         placed: placed.clone(),
                         shed: shed.clone(),
                         peak_intake_depth: peak.load(Ordering::Relaxed),
+                        placement: placement.label().to_string(),
                     });
                 let _ = tx.send(snap);
             }

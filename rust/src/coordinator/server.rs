@@ -264,6 +264,16 @@ pub struct ServerStats {
     /// [`crate::workload::LoadOutcome`] and the per-shard sections of the
     /// `moepim.slo_report.v2` document.
     pub shard: Option<usize>,
+    /// admission-policy label this server was spawned with (the
+    /// [`AdmissionPolicy::label`] spelling).  Recorded so a served
+    /// workload's trace (`moepim.trace.v1`, see
+    /// [`crate::workload::record`]) names the configuration that
+    /// produced it without the caller re-threading its options.
+    pub policy: String,
+    /// [`ServerOptions::prefill_chunk`] this server runs under
+    pub prefill_chunk: usize,
+    /// [`ServerOptions::queue_cap`] this server runs under
+    pub queue_cap: usize,
 }
 
 impl ServerStats {
@@ -563,7 +573,14 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
     let mut filling: Vec<Option<Fill>> = (0..slots).map(|_| None).collect();
-    let mut stats = ServerStats { slots, shard, ..ServerStats::default() };
+    let mut stats = ServerStats {
+        slots,
+        shard,
+        policy: policy.label().to_string(),
+        prefill_chunk,
+        queue_cap,
+        ..ServerStats::default()
+    };
     let mut admit_seq: u64 = 0;
 
     loop {

@@ -37,6 +37,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("loadtest") => cmd_loadtest(&args),
         Some("shardtest") => cmd_shardtest(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'\n{}", usage::ROOT);
             2
@@ -342,6 +343,15 @@ fn cmd_loadtest(args: &Args) -> i32 {
     if args.bool_flag("smoke") {
         return loadtest_smoke(args);
     }
+    if args.bool_flag("bench-scenarios") {
+        return scenario_bench(args);
+    }
+    // --replay FILE: drive a recorded moepim.trace.v1 document instead of
+    // generating a workload (single-backend; exact ns-precision arrivals)
+    let replay_path = args.str_flag("replay", "");
+    if !replay_path.is_empty() {
+        return run_trace_replay(args, &replay_path);
+    }
     // --shards N >= 2 promotes the run to the sharded fan-out (merged v2
     // report); --shards 1 / absent keeps the classic single-backend v1
     let shards = args.usize_flag("shards", 1);
@@ -371,23 +381,174 @@ fn cmd_loadtest(args: &Args) -> i32 {
         // virtual clock: byte-identical output for a given seed
         let cfg = loadtest_vcfg(args);
         let out = run_virtual(&cfg, &spec, policy);
+        let record_path = args.str_flag("record", "");
+        if !record_path.is_empty() {
+            let trace = moepim::workload::TraceRecorder::new(&spec, policy)
+                .finish(
+                    &out,
+                    moepim::workload::TraceBackend::from_virtual(&cfg),
+                );
+            if let Err(code) = write_trace(&trace, &record_path) {
+                return code;
+            }
+        }
         report::build(&spec, policy, &out)
     };
-    let text = report.to_string_pretty();
-    println!("{text}");
-    let out_path = args.str_flag("out", "");
-    if !out_path.is_empty() {
-        if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
-            eprintln!("failed to write {out_path}: {e}");
+    print_report(args, &report)
+}
+
+/// Write `trace` as a pretty-printed `moepim.trace.v1` file.  The notice
+/// goes to stderr so `--record` composes with report redirection.
+fn write_trace(trace: &moepim::workload::RecordedTrace, path: &str)
+    -> Result<(), i32> {
+    let text = trace.to_json().to_string_pretty();
+    if let Err(e) = std::fs::write(path, format!("{text}\n")) {
+        eprintln!("failed to write trace {path}: {e}");
+        return Err(1);
+    }
+    eprintln!("recorded {} requests -> {path}", trace.requests.len());
+    Ok(())
+}
+
+/// Load a `moepim.trace.v1` file, or explain why it didn't.
+fn load_trace(path: &str) -> Result<moepim::workload::RecordedTrace, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("failed to read {path}: {e}"))?;
+    let doc = moepim::util::json::parse(&text)
+        .map_err(|e| format!("{path}: {e}"))?;
+    moepim::workload::RecordedTrace::from_json(&doc)
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+/// `loadtest --replay FILE`: re-drive a recorded request stream.  The
+/// backend shape and policy default to what the trace recorded (flags
+/// still override); a virtual-clock replay of a virtual-clock recording
+/// reproduces the recorded report byte for byte.
+fn run_trace_replay(args: &Args, path: &str) -> i32 {
+    use moepim::workload::{
+        report, run_requests_against_server, run_virtual_requests,
+        AdmissionPolicy, VirtualConfig,
+    };
+    let trace = match load_trace(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
             return 1;
         }
+    };
+    let policy_flag = args.str_flag("policy", &trace.policy);
+    let Some(policy) = AdmissionPolicy::parse(&policy_flag) else {
+        eprintln!("unknown --policy (expected fifo|sjf|edf)");
+        return 2;
+    };
+    let spec = trace.original_spec().clone();
+    let reqs = trace.replay_requests();
+    let report = if args.bool_flag("real") {
+        let opts = moepim::coordinator::ServerOptions {
+            policy,
+            prefill_chunk: args
+                .usize_flag("prefill-chunk", trace.backend.prefill_chunk),
+            queue_cap: args.usize_flag("queue-cap", trace.backend.queue_cap),
+            ..moepim::coordinator::ServerOptions::default()
+        };
+        let server = match moepim::coordinator::Server::spawn_opts(
+            artifacts_dir(args),
+            opts,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("failed to start server: {e:#}");
+                return 1;
+            }
+        };
+        match run_requests_against_server(&server, &spec, &reqs) {
+            Ok(out) => report::build(&spec, policy, &out),
+            Err(e) => {
+                eprintln!("replay failed: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        let d = VirtualConfig::default();
+        let cfg = VirtualConfig {
+            slots: args
+                .usize_flag("slots", trace.backend.slots.max(1))
+                .max(1),
+            n_experts: args.usize_flag("experts", d.n_experts).max(1),
+            n_layers: args.usize_flag("layers", d.n_layers).max(1),
+            prefill_chunk: args
+                .usize_flag("prefill-chunk", trace.backend.prefill_chunk),
+            ..d
+        };
+        let out = run_virtual_requests(&cfg, &spec, &reqs, policy);
+        report::build(&spec, policy, &out)
+    };
+    print_report(args, &report)
+}
+
+// ---------------------------------------------------------------------------
+// calibrate: fit virtual cost constants against a recorded trace (E11)
+// ---------------------------------------------------------------------------
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    use moepim::workload::calibrate;
+    let trace_path = args.str_flag("trace", "");
+    if trace_path.is_empty() {
+        eprintln!("--trace FILE is required\n{}", usage::CALIBRATE);
+        return 2;
     }
-    0
+    let trace = match load_trace(&trace_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let base = loadtest_vcfg(args);
+    match calibrate(&trace, &base) {
+        Ok(cal) => {
+            eprintln!(
+                "calibrate: {} samples, prefill {:.0} ns/token, decode \
+                 step {:.0} ns (scale {:.3}); p50 err {:.2}%, p99 err \
+                 {:.2}%",
+                cal.n_samples,
+                cal.prefill_ns_per_token,
+                cal.decode_step_ns,
+                cal.scale,
+                cal.p50_err_pct,
+                cal.p99_err_pct,
+            );
+            print_report(args, &cal.to_json())
+        }
+        Err(e) => {
+            eprintln!("calibration failed: {e}");
+            1
+        }
+    }
 }
 
 fn loadtest_spec(args: &Args)
     -> Result<moepim::workload::WorkloadSpec, String> {
     use moepim::workload::{ArrivalProcess, SizeModel, WorkloadSpec};
+    // --scenario NAME: a named preset replaces flag composition wholesale
+    // (the preset *is* the experiment); --seed and --requests still apply
+    let scenario = args.str_flag("scenario", "");
+    if !scenario.is_empty() {
+        let mut spec = moepim::workload::scenario_spec(
+            &scenario,
+            args.u64_flag("seed", 2026),
+        )
+        .ok_or_else(|| {
+            format!(
+                "unknown --scenario '{scenario}' (expected {})",
+                moepim::workload::scenario_names()
+                    .collect::<Vec<_>>()
+                    .join("|")
+            )
+        })?;
+        spec.requests = args.usize_flag("requests", spec.requests);
+        return Ok(spec);
+    }
     let rate = args.f64_flag("rate", 64.0);
     if rate <= 0.0 {
         return Err("--rate must be > 0".into());
@@ -428,8 +589,8 @@ fn loadtest_spec(args: &Args)
             }
             if times.windows(2).any(|w| w[0] > w[1]) {
                 return Err(
-                    "--replay-us offsets must be ascending (the replay \
-                     wrap period is last offset + 1)"
+                    "--replay-us offsets must be ascending (past the last \
+                     offset the timeline repeats after a mean-gap seam)"
                         .into(),
                 );
             }
@@ -493,7 +654,31 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
         }
     };
     match run_against_server(&server, spec) {
-        Ok(out) => Ok(report::build(spec, policy, &out)),
+        Ok(out) => {
+            let record_path = args.str_flag("record", "");
+            if !record_path.is_empty() {
+                // backend block read off the live server's recording hooks
+                let backend = match server.stats() {
+                    Ok(stats) => {
+                        moepim::workload::TraceBackend::from_server_stats(
+                            &stats,
+                        )
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "failed to read server stats for the trace: \
+                             {e:#}"
+                        );
+                        return Err(1);
+                    }
+                };
+                let trace =
+                    moepim::workload::TraceRecorder::new(spec, policy)
+                        .finish(&out, backend);
+                write_trace(&trace, &record_path)?;
+            }
+            Ok(report::build(spec, policy, &out))
+        }
         Err(e) => {
             eprintln!("loadtest failed: {e:#}");
             Err(1)
@@ -570,6 +755,7 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
             PlacementPolicy::least_outstanding(&vcfg)
         };
     }
+    let placement_label = placement.label();
     let driver = ShardedDriver::new(shards, placement);
     let run = if args.bool_flag("real") {
         let opts = real_server_opts(args, policy);
@@ -604,6 +790,26 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
         // N independent virtual clusters: byte-identical output per seed
         driver.run_virtual(&vcfg, &spec, policy)
     };
+    let record_path = args.str_flag("record", "");
+    if !record_path.is_empty() {
+        let backend = moepim::workload::TraceBackend {
+            // per-backend slot count read off the run itself (real shards
+            // report their spawned shape, virtual ones echo the config)
+            slots: run
+                .shards
+                .first()
+                .map_or(vcfg.slots.max(1), |s| s.outcome.slots),
+            prefill_chunk: vcfg.prefill_chunk,
+            queue_cap: args.usize_flag("queue-cap", 0),
+            shards,
+            placement: Some(placement_label.to_string()),
+        };
+        let trace = moepim::workload::TraceRecorder::new(&spec, policy)
+            .finish_sharded(&run, backend);
+        if let Err(code) = write_trace(&trace, &record_path) {
+            return code;
+        }
+    }
     print_report(args, &report::build_sharded(&spec, policy, &driver, &run))
 }
 
@@ -618,7 +824,8 @@ fn run_sharded_live(args: &Args, shards: usize,
                     vcfg: &moepim::workload::VirtualConfig) -> i32 {
     use moepim::coordinator::{Cluster, ClusterOptions, ClusterPlacement};
     use moepim::workload::{report, run_against_cluster, run_virtual_live};
-    let run = if args.bool_flag("real") {
+    let record_path = args.str_flag("record", "");
+    let (run, record_backend) = if args.bool_flag("real") {
         let cluster = match Cluster::spawn(&artifacts_dir(args),
                                            ClusterOptions {
             shards,
@@ -633,13 +840,32 @@ fn run_sharded_live(args: &Args, shards: usize,
                 return 1;
             }
         };
-        match run_against_cluster(&cluster, spec) {
+        let run = match run_against_cluster(&cluster, spec) {
             Ok(run) => run,
             Err(e) => {
                 eprintln!("shardtest failed: {e:#}");
                 return 1;
             }
-        }
+        };
+        let backend = if record_path.is_empty() {
+            None
+        } else {
+            // backend block read off the cluster's recording hooks
+            match cluster.stats() {
+                Ok(stats) => Some(
+                    moepim::workload::TraceBackend::from_cluster_stats(
+                        &stats,
+                    ),
+                ),
+                Err(e) => {
+                    eprintln!(
+                        "failed to read cluster stats for the trace: {e:#}"
+                    );
+                    return 1;
+                }
+            }
+        };
+        (run, backend)
     } else {
         if matches!(spec.arrival,
                     moepim::workload::ArrivalProcess::Closed { .. }) {
@@ -650,8 +876,22 @@ fn run_sharded_live(args: &Args, shards: usize,
             );
             return 2;
         }
-        run_virtual_live(vcfg, spec, policy, shards)
+        let run = run_virtual_live(vcfg, spec, policy, shards);
+        let backend = (!record_path.is_empty()).then(|| {
+            let mut b = moepim::workload::TraceBackend::from_virtual(vcfg);
+            b.shards = shards;
+            b.placement = Some("live-least-outstanding".to_string());
+            b
+        });
+        (run, backend)
     };
+    if let Some(backend) = record_backend {
+        let trace = moepim::workload::TraceRecorder::new(spec, policy)
+            .finish_sharded(&run, backend);
+        if let Err(code) = write_trace(&trace, &record_path) {
+            return code;
+        }
+    }
     print_report(args, &report::build_sharded_labeled(
         spec, policy, shards, "live-least-outstanding", &run))
 }
@@ -834,10 +1074,91 @@ fn cluster_bench(args: &Args) -> i32 {
     0
 }
 
+/// `--bench-scenarios`: the scenario perf artifact (CI's
+/// `BENCH_scenarios.json`).  Runs every preset on the virtual backend
+/// (byte-repeatable, no artifact set needed) and records throughput and
+/// tail latency per scenario.  Record-only like `--bench-cluster`: CI
+/// uploads the document instead of gating on thresholds, but a repeat
+/// run must still match byte for byte — a nondeterministic artifact
+/// would be useless as a regression reference.
+fn scenario_bench(args: &Args) -> i32 {
+    use moepim::util::json::Json;
+    use moepim::workload::{
+        report, run_virtual, scenario_names, scenario_spec, AdmissionPolicy,
+    };
+    let Some(policy) =
+        AdmissionPolicy::parse(&args.str_flag("policy", "fifo"))
+    else {
+        eprintln!("unknown --policy (expected fifo|sjf|edf)");
+        return 2;
+    };
+    let seed = args.u64_flag("seed", 2026);
+    let cfg = loadtest_vcfg(args);
+    let mut legs = Vec::new();
+    for name in scenario_names() {
+        let spec = scenario_spec(name, seed).expect("known preset");
+        let out = run_virtual(&cfg, &spec, policy);
+        let a = report::build(&spec, policy, &out).to_string_pretty();
+        let b = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        if a != b {
+            eprintln!("bench-scenarios: {name} not deterministic");
+            return 1;
+        }
+        let mut e2e: Vec<f64> =
+            out.samples.iter().map(|s| s.e2e_us).collect();
+        e2e.sort_by(f64::total_cmp);
+        let pct = |q: f64| {
+            if e2e.is_empty() {
+                0.0
+            } else {
+                e2e[((e2e.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        let ok = out.samples.iter().filter(|s| s.ok).count();
+        let tokens = out.tokens_generated();
+        let duration_s = out.duration_s.max(1e-9);
+        legs.push(Json::obj(vec![
+            ("scenario", Json::str(name)),
+            ("requests", Json::num(spec.requests as f64)),
+            ("ok", Json::num(ok as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("duration_s", Json::num(duration_s)),
+            ("tokens_per_s", Json::num(tokens as f64 / duration_s)),
+            ("p50_e2e_us", Json::num(pct(0.50))),
+            ("p99_e2e_us", Json::num(pct(0.99))),
+        ]));
+        println!(
+            "bench-scenarios: {name} OK ({} requests, {tokens} tokens)",
+            spec.requests
+        );
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("moepim.bench_scenarios.v1")),
+        ("policy", Json::str(policy.label())),
+        ("seed", Json::str(&seed.to_string())),
+        ("slots", Json::num(cfg.slots as f64)),
+        ("scenarios", Json::Arr(legs)),
+    ]);
+    let text = doc.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "BENCH_scenarios.json");
+    if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+        eprintln!("failed to write {out_path}: {e}");
+        return 1;
+    }
+    println!("bench-scenarios: wrote {out_path}");
+    0
+}
+
 /// `--smoke`: the CI gate.  Virtual leg: every (process × policy ×
 /// prefill-chunk) cell of the acceptance matrix must emit a
 /// byte-identical report twice in a row — chunked admission exactly as
-/// repeatable as monolithic.  Real legs (when an artifact set is
+/// repeatable as monolithic.  Then the trace-lifecycle legs: a recorded
+/// virtual run must replay byte-identically through its JSON round trip,
+/// and every scenario preset must be report-deterministic per seed.
+/// Real legs (when an artifact set is
 /// present): short closed-loop runs against the threaded server under
 /// FIFO, SJF, and FIFO with chunked prefill, every request terminal and
 /// successful; then a 2-shard concurrent cluster flooded into its
@@ -903,6 +1224,87 @@ fn loadtest_smoke(args: &Args) -> i32 {
                 );
             }
         }
+    }
+    // record -> replay -> compare leg: a trace recorded off a virtual run
+    // must survive its JSON round trip and replay byte-identically
+    // through the exact-request path (the lifecycle the CLI exposes as
+    // `--record` / `--replay`)
+    {
+        use moepim::workload::record::{
+            RecordedTrace, TraceBackend, TraceRecorder,
+        };
+        use moepim::workload::run_virtual_requests;
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec {
+            seed,
+            requests: 32,
+            arrival: ArrivalProcess::Poisson { rate_rps: 400.0 },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 24),
+                gen: (1, 12),
+            },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 500,
+        };
+        let policy = AdmissionPolicy::fifo();
+        let out = run_virtual(&cfg, &spec, policy);
+        let recorded = report::build(&spec, policy, &out).to_string_pretty();
+        let trace = TraceRecorder::new(&spec, policy)
+            .finish(&out, TraceBackend::from_virtual(&cfg));
+        let text = trace.to_json().to_string_pretty();
+        let loaded = match moepim::util::json::parse(&text)
+            .map_err(|e| e.to_string())
+            .and_then(|doc| RecordedTrace::from_json(&doc))
+        {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("smoke: trace round-trip failed: {e}");
+                return 1;
+            }
+        };
+        let replay = run_virtual_requests(
+            &cfg,
+            loaded.original_spec(),
+            &loaded.replay_requests(),
+            policy,
+        );
+        let replayed = report::build(loaded.original_spec(), policy, &replay)
+            .to_string_pretty();
+        if replayed != recorded {
+            eprintln!(
+                "smoke: record->replay report diverged ({} vs {} bytes)",
+                replayed.len(),
+                recorded.len()
+            );
+            return 1;
+        }
+        println!(
+            "smoke: record->replay byte-identical ({} bytes)",
+            recorded.len()
+        );
+    }
+    // scenario sweep: every preset must run clean and emit a
+    // byte-identical report twice in a row on the virtual backend
+    for name in moepim::workload::scenario_names() {
+        let Some(spec) = moepim::workload::scenario_spec(name, seed) else {
+            eprintln!("smoke: scenario {name} missing");
+            return 1;
+        };
+        let cfg = VirtualConfig::default();
+        let policy = AdmissionPolicy::fifo();
+        let a = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        let b = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        if a != b {
+            eprintln!("smoke: NONDETERMINISTIC scenario {name}");
+            return 1;
+        }
+        println!("smoke: scenario {name} deterministic ({} bytes)", a.len());
     }
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {

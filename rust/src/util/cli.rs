@@ -32,6 +32,9 @@ subcommands (moepim <subcommand> --help for flags):
                         drives N real servers concurrently, each with its
                         own router thread and PJRT client;
                         --bench-cluster writes the concurrency bench)
+  calibrate [flags]     fit VirtualConfig cost constants against a
+                        recorded moepim.trace.v1 run -> JSON
+                        moepim.calibration.v1 with a fit-quality report
 
 common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
               --prompt N --gen N --seed N --routing token|expert --skew X
@@ -80,6 +83,7 @@ workload flags:
     /// `moepim loadtest` flags (v1 report; `--shards` upgrades to v2).
     pub const LOADTEST: &str = "\
 moepim loadtest [workload flags] [--shards N] [--placement P]
+                [--scenario NAME] [--record FILE] [--replay FILE]
                 [--real] [--artifacts DIR] [--out FILE] [--smoke]
 
   virtual clock by default: reports are byte-identical per seed.
@@ -89,8 +93,40 @@ moepim loadtest [workload flags] [--shards N] [--placement P]
             error (0 = unbounded, the default)
   --shards N >= 2   fan out across N backends and emit the merged
             moepim.slo_report.v2 (equivalent to `moepim shardtest`)
+  --scenario NAME   run a named scenario preset instead of composing
+            workload flags: diurnal | flash-crowd | long-prompt-flood |
+            mixed-tenants (each a seeded WorkloadSpec; --seed and
+            --requests still apply, other workload flags are ignored)
+  --record FILE     dump the served workload as a moepim.trace.v1
+            document (arrivals, sizes, deadlines, shard tags, outcomes)
+            for replay and calibration
+  --replay FILE     replay a recorded moepim.trace.v1 document exactly
+            (ns-precision arrivals; overrides workload flags) — a
+            virtual-clock replay of a virtual-clock recording
+            reproduces its report byte for byte
+  --bench-scenarios run every preset on the virtual backend and write
+            the BENCH_scenarios.json perf artifact (record-only)
   --smoke   run the CI determinism matrix + real-server legs (incl.
-            the 2-shard concurrent-cluster backpressure leg)";
+            the 2-shard concurrent-cluster backpressure leg, the
+            record->replay->compare leg, and the scenario sweep)";
+
+    /// `moepim calibrate` flags.
+    pub const CALIBRATE: &str = "\
+moepim calibrate --trace FILE [--out FILE]
+                 [--slots B] [--layers L] [--experts E] [--prefill-chunk N]
+
+  fit VirtualConfig's cost constants (cycle_ns, dispatch_overhead_ns,
+  prefill_ns_per_token) against a recorded moepim.trace.v1 run by
+  least squares over the recorded per-request service times, then
+  re-predict the trace with the calibrated config and report p50/p99
+  end-to-end error.  Record the trace with `loadtest --record` (use a
+  --real run to calibrate the virtual model against the PJRT server).
+
+  --trace FILE   the recorded moepim.trace.v1 document (required)
+  --out FILE     write the moepim.calibration.v1 document to FILE
+                 (default: print to stdout)
+  --slots/--layers/--experts/--prefill-chunk  base-config overrides
+                 (chip shape is not fitted, only cost constants are)";
 
     /// `moepim shardtest` flags (merged v2 report).
     pub const SHARDTEST: &str = "\
@@ -141,6 +177,7 @@ moepim shardtest [--shards N] [--placement P] [--virtual | --real]
             "generate" => Some(GENERATE),
             "loadtest" => Some(LOADTEST),
             "shardtest" => Some(SHARDTEST),
+            "calibrate" => Some(CALIBRATE),
             _ => None,
         }
     }
@@ -279,7 +316,7 @@ mod tests {
     fn usage_covers_every_subcommand() {
         for sub in [
             "eval", "simulate", "trace", "serve", "generate", "loadtest",
-            "shardtest",
+            "shardtest", "calibrate",
         ] {
             assert!(usage::ROOT.contains(sub), "root usage misses {sub}");
             assert!(
@@ -316,6 +353,26 @@ mod tests {
             assert!(help.contains("--process poisson|bursty|closed|replay"),
                     "{sub}");
         }
+    }
+
+    #[test]
+    fn usage_documents_the_trace_lifecycle() {
+        // record → replay → calibrate → scenarios: every stage of the
+        // lifecycle is discoverable from the usage text
+        assert!(usage::LOADTEST.contains("--scenario"));
+        assert!(usage::LOADTEST.contains("--record"));
+        assert!(usage::LOADTEST.contains("--replay"));
+        assert!(usage::LOADTEST.contains("moepim.trace.v1"));
+        for name in
+            ["diurnal", "flash-crowd", "long-prompt-flood", "mixed-tenants"]
+        {
+            assert!(usage::LOADTEST.contains(name), "preset {name} undocumented");
+        }
+        assert!(usage::ROOT.contains("calibrate"));
+        assert!(usage::CALIBRATE.contains("--trace"));
+        assert!(usage::CALIBRATE.contains("moepim.calibration.v1"));
+        assert!(usage::CALIBRATE.contains("cycle_ns"));
+        assert_eq!(usage::for_subcommand("calibrate"), Some(usage::CALIBRATE));
     }
 
     #[test]

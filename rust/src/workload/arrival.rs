@@ -41,9 +41,17 @@ pub enum ArrivalProcess {
     /// request `think_ms` after its previous one completed.  Arrival
     /// times are produced by the driver, not precomputed.
     Closed { users: usize, think_ms: f64 },
-    /// Open loop, replay of an explicit timeline (µs offsets, ascending).
-    /// Requests beyond the timeline wrap around with the timeline's span
-    /// as the period.
+    /// Open loop, replay of an explicit timeline (µs offsets).  The
+    /// timeline is canonicalized before use: sorted ascending and shifted
+    /// to a zero start, so a segment cut out of a longer recording
+    /// replays identically wherever its absolute clock began.  Requests
+    /// beyond the timeline wrap around; the seam between laps preserves
+    /// the trace's mean inter-arrival gap (floored at 1 µs) instead of
+    /// inserting a fixed epsilon the trace may never contain.
+    ///
+    /// Recorded timelines come from
+    /// [`crate::workload::record::RecordedTrace::replay_process`]; ad-hoc
+    /// ones from `--replay-us`.
     Replay { times_us: Vec<u64> },
 }
 
@@ -118,8 +126,13 @@ impl ArrivalProcess {
                             t = window_end + exp_ns(rng, off_ns);
                             window_end = t + exp_ns(rng, on_ns);
                         }
+                        // force-place, then re-derive a *fresh* ON window:
+                        // leaving `window_end == t` made every later
+                        // arrival fail the in-window check and eat an OFF
+                        // gap — one degenerate window poisoned the
+                        // remainder of the stream
                         t += exp_ns(rng, mean_ns);
-                        window_end = window_end.max(t);
+                        window_end = t + exp_ns(rng, on_ns);
                         t
                     })
                     .collect()
@@ -129,11 +142,30 @@ impl ArrivalProcess {
                 if times_us.is_empty() {
                     return vec![0; n];
                 }
-                let span_us = times_us.last().copied().unwrap_or(0) + 1;
+                // canonicalize: sort (unsorted timelines used to leak
+                // through as non-monotone arrivals that `drive_open`
+                // clamps into a spurious burst) and shift to a zero start
+                // (a nonzero-offset timeline used to re-apply its offset
+                // on every lap)
+                let mut tl = times_us.clone();
+                tl.sort_unstable();
+                let start = tl[0];
+                for t in tl.iter_mut() {
+                    *t -= start;
+                }
+                let span_us = *tl.last().expect("non-empty timeline");
+                // the lap seam carries the trace's mean inter-arrival gap
+                // (rounded, floored at 1 µs so degenerate all-coincident
+                // timelines still advance) — a fixed 1 µs seam used to
+                // glue laps together regardless of the trace's structure
+                let m = (tl.len() - 1) as u64;
+                let seam_us =
+                    if m == 0 { 1 } else { ((span_us + m / 2) / m).max(1) };
+                let period_us = span_us + seam_us;
                 (0..n)
                     .map(|k| {
-                        let lap = (k / times_us.len()) as u64;
-                        (times_us[k % times_us.len()] + lap * span_us) * 1000
+                        let lap = (k / tl.len()) as u64;
+                        (tl[k % tl.len()] + lap * period_us) * 1000
                     })
                     .collect()
             }
@@ -142,6 +174,15 @@ impl ArrivalProcess {
 }
 
 /// Exponential sample with the given mean, truncated to whole ns.
+///
+/// The truncation means ns-scale mean gaps legitimately produce
+/// `dt == 0`, i.e. *coincident* arrival timestamps at extreme rates.
+/// Downstream consumers must break those ties deterministically:
+/// `drive_open` submits coincident arrivals strictly in request order,
+/// and the virtual cluster ingests them in timeline order into a FIFO
+/// waiting queue — both pinned by tests
+/// (`driver::tests::open_loop_submits_coincident_arrivals_in_order`,
+/// `vsim::tests::coincident_arrivals_admit_fifo_by_id`).
 fn exp_ns(rng: &mut Pcg32, mean_ns: f64) -> u64 {
     let u = rng.gen_f64(); // in [0, 1) => 1-u in (0, 1]
     (-(1.0 - u).ln() * mean_ns) as u64
@@ -371,7 +412,88 @@ mod tests {
         assert!(t.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(t[0], 0);
         assert_eq!(t[1], 10_000);
-        assert_eq!(t[3], 26_000); // second lap: 0 + span(26)µs
+        // second lap starts after span(25) + mean-gap seam(13) = 38 µs
+        assert_eq!(t[3], 38_000);
+    }
+
+    #[test]
+    fn replay_seam_preserves_mean_gap() {
+        // trace gaps are 10 and 15 µs; mean 12.5 rounds to a 13 µs seam,
+        // and every lap repeats with the same 38 µs period
+        let p = ArrivalProcess::Replay { times_us: vec![0, 10, 25] };
+        let t = p.times_ns(7, &mut Pcg32::new(1));
+        assert_eq!(t[3] - t[2], 13_000);
+        assert_eq!(t[4], 48_000);
+        assert_eq!(t[6], 76_000);
+    }
+
+    #[test]
+    fn replay_normalizes_nonzero_start() {
+        let base = ArrivalProcess::Replay { times_us: vec![0, 10, 25] };
+        let offs = ArrivalProcess::Replay { times_us: vec![500, 510, 525] };
+        let a = base.times_ns(9, &mut Pcg32::new(1));
+        let b = offs.times_ns(9, &mut Pcg32::new(1));
+        assert_eq!(a, b, "nonzero start must not shift or skew laps");
+        assert_eq!(b[0], 0);
+    }
+
+    #[test]
+    fn replay_sorts_unsorted_timelines() {
+        let sorted = ArrivalProcess::Replay { times_us: vec![0, 10, 25] };
+        let shuffled = ArrivalProcess::Replay { times_us: vec![25, 0, 10] };
+        assert_eq!(
+            sorted.times_ns(9, &mut Pcg32::new(1)),
+            shuffled.times_ns(9, &mut Pcg32::new(1)),
+        );
+    }
+
+    #[test]
+    fn replay_degenerate_timelines_still_advance() {
+        // single point: normalized to 0, 1 µs seam per lap
+        let p = ArrivalProcess::Replay { times_us: vec![40] };
+        let t = p.times_ns(4, &mut Pcg32::new(1));
+        assert_eq!(t, vec![0, 1_000, 2_000, 3_000]);
+        // all-coincident timeline: seam floors at 1 µs, no stuck laps
+        let q = ArrivalProcess::Replay { times_us: vec![7, 7, 7] };
+        let u = q.times_ns(6, &mut Pcg32::new(1));
+        assert_eq!(u, vec![0, 0, 0, 1_000, 1_000, 1_000]);
+    }
+
+    #[test]
+    fn bursty_force_place_recovers_the_stream() {
+        // degenerate regime: ON windows (1 ns mean after the clamp) are
+        // far shorter than one inter-arrival gap and OFF gaps are zero,
+        // so every arrival rides the bounded force-place fallback.  The
+        // stream must keep advancing at roughly the nominal rate instead
+        // of collapsing once the first fallback fires.
+        let p = ArrivalProcess::Bursty {
+            rate_rps: 1_000.0,
+            mean_on_ms: 1e-9,
+            mean_off_ms: 0.0,
+        };
+        let t = p.times_ns(64, &mut Pcg32::new(11));
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+        let dur_s = *t.last().unwrap() as f64 / 1e9;
+        let eff = 64.0 / dur_s;
+        assert!(
+            (200.0..5_000.0).contains(&eff),
+            "post-fallback effective rate {eff} rps degenerated"
+        );
+    }
+
+    #[test]
+    fn extreme_rates_truncate_to_coincident_arrivals() {
+        // whole-ns truncation of exponential gaps: at a 2 ns mean gap,
+        // `dt == 0` is common, so duplicate timestamps are a legitimate
+        // output — the timeline stays non-decreasing and consumers break
+        // the ties FIFO (pinned in the driver and vsim tests)
+        let p = ArrivalProcess::Poisson { rate_rps: 500_000_000.0 };
+        let t = p.times_ns(256, &mut Pcg32::new(5));
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+        assert!(
+            t.windows(2).any(|w| w[0] == w[1]),
+            "expected dt == 0 duplicates at a 2 ns mean gap"
+        );
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Calibration: fit [`VirtualConfig`]'s cost constants against a recorded
+//! trace so virtual SLO studies quantitatively predict the backend that
+//! produced it.
+//!
+//! The virtual cluster prices a request's service time as
+//!
+//! ```text
+//! service ≈ prompt_len · prefill_ns_per_token
+//!         + (gen_len − 1) · (dispatch_overhead_ns + k̄ · cycle_ns)
+//! ```
+//!
+//! where `k̄` is the planner's mean slot-cycles per decode step (the
+//! contention model's output, recorded in the trace's planner block).
+//! [`calibrate`] runs a two-variable least-squares fit of the recorded
+//! service times (`e2e − queue`) over `(prompt_len, gen_len − 1)`:
+//!
+//! * the prompt slope **is** `prefill_ns_per_token`;
+//! * the decode-step slope `c` bundles the collinear pair
+//!   `dispatch_overhead_ns + k̄·cycle_ns` — per-step telemetry can't
+//!   separate them, so the fit preserves the base config's
+//!   overhead-to-cycle *ratio*: both are scaled by `s = c / c₀` with
+//!   `c₀` the base config's per-step cost at the recorded `k̄`.
+//!
+//! The fit then *re-predicts the trace* — the calibrated config replays
+//! the recorded requests on the virtual cluster — and reports p50/p99
+//! end-to-end error, which is the accuracy figure that matters (the
+//! acceptance gate is ≤ 15%).  Results serialize as
+//! `moepim.calibration.v1` ([`Calibration::to_json`]).
+//!
+//! Caveat: traces recorded under chunked prefill interleave prefill with
+//! decode, so the linear model is an approximation there; record the
+//! calibration run with `prefill_chunk == 0` for the cleanest fit.
+
+use crate::util::json::Json;
+use crate::workload::policy::AdmissionPolicy;
+use crate::workload::record::RecordedTrace;
+use crate::workload::vsim::{run_virtual_requests, VirtualConfig};
+
+/// Schema id stamped on every calibration document.
+pub const CALIBRATION_SCHEMA: &str = "moepim.calibration.v1";
+
+/// A fitted cost model plus its fit-quality report.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// the base config the fit scaled (supplies slots/chip shape and the
+    /// overhead-to-cycle ratio)
+    pub base: VirtualConfig,
+    /// the calibrated config: base with fitted cost constants and the
+    /// trace's slots/prefill_chunk substituted
+    pub cfg: VirtualConfig,
+    /// fitted prefill slope (ns per prompt token)
+    pub prefill_ns_per_token: f64,
+    /// fitted per-decode-step cost `c` (ns)
+    pub decode_step_ns: f64,
+    /// `c / c₀` — the factor applied to both `dispatch_overhead_ns` and
+    /// `cycle_ns`
+    pub scale: f64,
+    /// recorded mean planner slot-cycles per decode step (`k̄`)
+    pub mean_cycles_per_step: f64,
+    /// successful samples the regression used
+    pub n_samples: usize,
+    /// root-mean-square service-time residual of the fit (µs)
+    pub rms_residual_us: f64,
+    /// recorded p50 end-to-end latency (µs)
+    pub recorded_p50_e2e_us: f64,
+    /// recorded p99 end-to-end latency (µs)
+    pub recorded_p99_e2e_us: f64,
+    /// calibrated re-prediction's p50 end-to-end latency (µs)
+    pub predicted_p50_e2e_us: f64,
+    /// calibrated re-prediction's p99 end-to-end latency (µs)
+    pub predicted_p99_e2e_us: f64,
+    /// |predicted − recorded| / recorded at p50, in percent
+    pub p50_err_pct: f64,
+    /// |predicted − recorded| / recorded at p99, in percent
+    pub p99_err_pct: f64,
+}
+
+/// Fit `base`'s cost constants against `trace` and validate by
+/// re-predicting it.  Errors when the trace has too few successful
+/// samples to regress (needs ≥ 2 with distinct shapes).
+pub fn calibrate(trace: &RecordedTrace, base: &VirtualConfig)
+    -> Result<Calibration, String> {
+    // ---- least squares: service_ns ≈ a·prompt + c·(gen−1) -------------
+    let mut spp = 0.0f64; // Σ p²
+    let mut spd = 0.0f64; // Σ p·d
+    let mut sdd = 0.0f64; // Σ d²
+    let mut sps = 0.0f64; // Σ p·service
+    let mut sds = 0.0f64; // Σ d·service
+    let mut n = 0usize;
+    for r in &trace.requests {
+        if !r.ok || r.tokens == 0 {
+            continue;
+        }
+        let service_us = r.e2e_us - r.queue_us.unwrap_or(0.0);
+        if !service_us.is_finite() || service_us < 0.0 {
+            continue;
+        }
+        let s = service_us * 1e3; // ns
+        let p = r.prompt_len as f64;
+        let d = (r.gen_len.saturating_sub(1)) as f64;
+        spp += p * p;
+        spd += p * d;
+        sdd += d * d;
+        sps += p * s;
+        sds += d * s;
+        n += 1;
+    }
+    if n < 2 {
+        return Err(format!(
+            "calibration needs at least 2 successful samples, found {n}"
+        ));
+    }
+    let det = spp * sdd - spd * spd;
+    let (a, c) = if det.abs() > 1e-9 * (spp * sdd).max(1.0) {
+        (
+            (sps * sdd - sds * spd) / det,
+            (sds * spp - sps * spd) / det,
+        )
+    } else if spp > 0.0 && sdd == 0.0 {
+        // every request generated exactly one token: prefill-only fit,
+        // decode cost unobservable — keep the base per-step cost
+        let kbar = trace.planner.mean_cycles();
+        let c0 = base.dispatch_overhead_ns as f64
+            + kbar * base.cycle_ns as f64;
+        (sps / spp, c0)
+    } else {
+        return Err(
+            "degenerate trace: no prompt/decode shape variation to fit"
+                .to_string(),
+        );
+    };
+    let a = a.max(0.0);
+    let c = c.max(0.0);
+
+    // ---- decompose c across the collinear overhead/cycle pair ---------
+    let kbar = trace.planner.mean_cycles();
+    let c0 = base.dispatch_overhead_ns as f64 + kbar * base.cycle_ns as f64;
+    let scale = if c0 > 0.0 { c / c0 } else { 1.0 };
+    let mut cfg = base.clone();
+    cfg.slots = trace.backend.slots.max(1);
+    cfg.prefill_chunk = trace.backend.prefill_chunk;
+    cfg.prefill_ns_per_token = (a.round() as u64).max(1);
+    cfg.dispatch_overhead_ns =
+        ((base.dispatch_overhead_ns as f64 * scale).round() as u64).max(1);
+    cfg.cycle_ns = ((base.cycle_ns as f64 * scale).round() as u64).max(1);
+
+    // ---- fit residuals -------------------------------------------------
+    let mut sq = 0.0f64;
+    for r in &trace.requests {
+        if !r.ok || r.tokens == 0 {
+            continue;
+        }
+        let service_us = r.e2e_us - r.queue_us.unwrap_or(0.0);
+        if !service_us.is_finite() || service_us < 0.0 {
+            continue;
+        }
+        let pred_us = (a * r.prompt_len as f64
+            + c * (r.gen_len.saturating_sub(1)) as f64)
+            / 1e3;
+        sq += (pred_us - service_us).powi(2);
+    }
+    let rms_residual_us = (sq / n as f64).sqrt();
+
+    // ---- validate: re-predict the trace with the calibrated config ----
+    let policy = AdmissionPolicy::parse(&trace.policy)
+        .unwrap_or(AdmissionPolicy::Fifo);
+    let replay = run_virtual_requests(
+        &cfg,
+        trace.original_spec(),
+        &trace.replay_requests(),
+        policy,
+    );
+    let mut recorded: Vec<f64> = trace
+        .requests
+        .iter()
+        .filter(|r| r.ok)
+        .map(|r| r.e2e_us)
+        .collect();
+    let mut predicted: Vec<f64> = replay
+        .samples
+        .iter()
+        .filter(|s| s.ok)
+        .map(|s| s.e2e_us)
+        .collect();
+    recorded.sort_by(|x, y| x.total_cmp(y));
+    predicted.sort_by(|x, y| x.total_cmp(y));
+    let recorded_p50_e2e_us = percentile(&recorded, 0.50);
+    let recorded_p99_e2e_us = percentile(&recorded, 0.99);
+    let predicted_p50_e2e_us = percentile(&predicted, 0.50);
+    let predicted_p99_e2e_us = percentile(&predicted, 0.99);
+
+    Ok(Calibration {
+        base: base.clone(),
+        cfg,
+        prefill_ns_per_token: a,
+        decode_step_ns: c,
+        scale,
+        mean_cycles_per_step: kbar,
+        n_samples: n,
+        rms_residual_us,
+        recorded_p50_e2e_us,
+        recorded_p99_e2e_us,
+        predicted_p50_e2e_us,
+        predicted_p99_e2e_us,
+        p50_err_pct: err_pct(predicted_p50_e2e_us, recorded_p50_e2e_us),
+        p99_err_pct: err_pct(predicted_p99_e2e_us, recorded_p99_e2e_us),
+    })
+}
+
+impl Calibration {
+    /// Serialize as the `moepim.calibration.v1` document.
+    pub fn to_json(&self) -> Json {
+        let consts = |cfg: &VirtualConfig| {
+            Json::obj(vec![
+                ("cycle_ns", Json::num(cfg.cycle_ns as f64)),
+                (
+                    "dispatch_overhead_ns",
+                    Json::num(cfg.dispatch_overhead_ns as f64),
+                ),
+                (
+                    "prefill_ns_per_token",
+                    Json::num(cfg.prefill_ns_per_token as f64),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("schema", Json::str(CALIBRATION_SCHEMA)),
+            ("base", consts(&self.base)),
+            ("fitted", consts(&self.cfg)),
+            (
+                "fit",
+                Json::obj(vec![
+                    ("n_samples", Json::num(self.n_samples as f64)),
+                    (
+                        "prefill_ns_per_token",
+                        Json::num(round3(self.prefill_ns_per_token)),
+                    ),
+                    (
+                        "decode_step_ns",
+                        Json::num(round3(self.decode_step_ns)),
+                    ),
+                    ("scale", Json::num(round6(self.scale))),
+                    (
+                        "mean_cycles_per_step",
+                        Json::num(round3(self.mean_cycles_per_step)),
+                    ),
+                    (
+                        "rms_residual_us",
+                        Json::num(round3(self.rms_residual_us)),
+                    ),
+                ]),
+            ),
+            (
+                "validation",
+                Json::obj(vec![
+                    (
+                        "recorded",
+                        Json::obj(vec![
+                            (
+                                "p50_e2e_us",
+                                Json::num(round3(self.recorded_p50_e2e_us)),
+                            ),
+                            (
+                                "p99_e2e_us",
+                                Json::num(round3(self.recorded_p99_e2e_us)),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "predicted",
+                        Json::obj(vec![
+                            (
+                                "p50_e2e_us",
+                                Json::num(round3(self.predicted_p50_e2e_us)),
+                            ),
+                            (
+                                "p99_e2e_us",
+                                Json::num(round3(self.predicted_p99_e2e_us)),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "p50_err_pct",
+                        Json::num(round3(self.p50_err_pct)),
+                    ),
+                    (
+                        "p99_err_pct",
+                        Json::num(round3(self.p99_err_pct)),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn err_pct(predicted: f64, recorded: f64) -> f64 {
+    if recorded <= 0.0 {
+        return 0.0;
+    }
+    (predicted - recorded).abs() / recorded * 100.0
+}
+
+fn round3(v: f64) -> f64 {
+    if !v.is_finite() {
+        return 0.0;
+    }
+    (v * 1e3).round() / 1e3
+}
+
+fn round6(v: f64) -> f64 {
+    if !v.is_finite() {
+        return 0.0;
+    }
+    (v * 1e6).round() / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::record::{TraceBackend, TraceRecorder};
+    use crate::workload::vsim::run_virtual;
+    use crate::workload::WorkloadSpec;
+
+    fn virtual_trace(cfg: &VirtualConfig) -> RecordedTrace {
+        let spec = WorkloadSpec { requests: 48, ..WorkloadSpec::default() };
+        let out = run_virtual(cfg, &spec, AdmissionPolicy::fifo());
+        TraceRecorder::new(&spec, AdmissionPolicy::fifo())
+            .finish(&out, TraceBackend::from_virtual(cfg))
+    }
+
+    #[test]
+    fn self_calibration_recovers_the_generating_constants() {
+        // a trace recorded by the virtual cluster itself must calibrate
+        // back to (approximately) the constants that generated it, and
+        // re-predict its own percentiles well inside the 15% gate
+        let cfg = VirtualConfig::default();
+        let trace = virtual_trace(&cfg);
+        let cal = calibrate(&trace, &cfg).expect("fit");
+        let prefill_err = (cal.prefill_ns_per_token
+            - cfg.prefill_ns_per_token as f64)
+            .abs()
+            / cfg.prefill_ns_per_token as f64;
+        assert!(
+            prefill_err < 0.10,
+            "prefill slope {} vs true {}",
+            cal.prefill_ns_per_token,
+            cfg.prefill_ns_per_token
+        );
+        assert!(
+            cal.p50_err_pct <= 15.0 && cal.p99_err_pct <= 15.0,
+            "re-prediction error p50 {:.2}% p99 {:.2}%",
+            cal.p50_err_pct,
+            cal.p99_err_pct
+        );
+    }
+
+    #[test]
+    fn calibration_tracks_a_scaled_cost_model() {
+        // record under a 2x-cost config, fit starting from the default:
+        // the fitted constants must move toward the generating ones
+        let mut gen_cfg = VirtualConfig::default();
+        gen_cfg.cycle_ns *= 2;
+        gen_cfg.dispatch_overhead_ns *= 2;
+        gen_cfg.prefill_ns_per_token *= 2;
+        let trace = virtual_trace(&gen_cfg);
+        let cal =
+            calibrate(&trace, &VirtualConfig::default()).expect("fit");
+        assert!(
+            cal.scale > 1.5,
+            "decode scale {} did not track the 2x cost model",
+            cal.scale
+        );
+        assert!(
+            cal.p50_err_pct <= 15.0 && cal.p99_err_pct <= 15.0,
+            "re-prediction error p50 {:.2}% p99 {:.2}%",
+            cal.p50_err_pct,
+            cal.p99_err_pct
+        );
+    }
+
+    #[test]
+    fn calibration_document_shape() {
+        let cfg = VirtualConfig::default();
+        let cal = calibrate(&virtual_trace(&cfg), &cfg).expect("fit");
+        let doc = cal.to_json();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str(),
+            Some(CALIBRATION_SCHEMA)
+        );
+        for path in [
+            vec!["fitted", "cycle_ns"],
+            vec!["fitted", "dispatch_overhead_ns"],
+            vec!["fitted", "prefill_ns_per_token"],
+            vec!["fit", "n_samples"],
+            vec!["fit", "rms_residual_us"],
+            vec!["validation", "p50_err_pct"],
+            vec!["validation", "p99_err_pct"],
+        ] {
+            assert!(doc.path(&path).is_some(), "missing {path:?}");
+        }
+    }
+
+    #[test]
+    fn too_small_traces_are_rejected() {
+        let cfg = VirtualConfig::default();
+        let mut trace = virtual_trace(&cfg);
+        trace.requests.truncate(1);
+        assert!(calibrate(&trace, &cfg).is_err());
+    }
+}

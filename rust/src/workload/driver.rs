@@ -318,3 +318,60 @@ where
     }
     Ok(samples)
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn open_loop_submits_coincident_arrivals_in_order() {
+        // duplicate arrival timestamps are legitimate (whole-ns truncation
+        // in `arrival::exp_ns` at extreme rates, and recorded replay
+        // timelines); the open loop must break the tie by submitting
+        // strictly in request order — the deterministic FIFO tie-break
+        // that record→replay byte-identity leans on
+        let spec = WorkloadSpec {
+            requests: 6,
+            arrival: ArrivalProcess::Replay {
+                times_us: vec![0, 0, 0, 1, 1, 1],
+            },
+            ..WorkloadSpec::default()
+        };
+        let reqs = spec.materialize();
+        assert!(
+            reqs.windows(2).any(|w| w[0].arrival_ns == w[1].arrival_ns),
+            "setup: expected coincident arrivals"
+        );
+        let order = Mutex::new(Vec::new());
+        let samples = drive(
+            |req| {
+                order.lock().unwrap().push(req.id);
+                let (tx, rx) = mpsc::channel();
+                tx.send(Response {
+                    id: req.id,
+                    result: Ok(vec![0; req.gen_len]),
+                    latency_us: 1.0,
+                    ttft_us: Some(1.0),
+                    queue_us: Some(0.5),
+                    admit_seq: Some(req.id),
+                    batched_steps: 0,
+                    single_steps: 0,
+                    shard: None,
+                })
+                .expect("rx alive");
+                rx
+            },
+            &spec,
+            &reqs,
+        )
+        .expect("mock drive");
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4, 5]);
+        let ids: Vec<u64> = samples.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        assert!(samples
+            .iter()
+            .enumerate()
+            .all(|(i, s)| s.submit_seq == i as u64));
+    }
+}

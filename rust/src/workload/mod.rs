@@ -30,30 +30,50 @@
 //!   folded into the `moepim.slo_report.v1` JSON document (p50/p95/p99
 //!   queue/TTFT/e2e, SLO attainment, tokens/sec, planner contention
 //!   snapshot), or the merged `moepim.slo_report.v2` for sharded runs
-//!   (per-shard breakdown + imbalance metrics).
+//!   (per-shard breakdown + imbalance metrics);
+//! * [`record`] — the trace lifecycle's record/replay half: a
+//!   [`TraceRecorder`] dumps a served workload (exact arrivals, sizes,
+//!   deadlines, shard tags, outcomes) as a `moepim.trace.v1` document,
+//!   and [`RecordedTrace`] loads it back for exact
+//!   (`replay_requests`) or timeline-shaped (`replay_spec`) replay;
+//! * [`calibrate`] — least-squares fit of [`VirtualConfig`]'s cost
+//!   constants against a recorded trace, emitting `moepim.calibration.v1`
+//!   with a re-prediction accuracy report;
+//! * [`scenario`] — named, seeded [`WorkloadSpec`] presets (`diurnal`,
+//!   `flash-crowd`, `long-prompt-flood`, `mixed-tenants`) for
+//!   `loadtest --scenario`.
 //!
-//! Entry points: `moepim loadtest` / `moepim shardtest` (CLI),
-//! `cargo bench --bench loadgen`, `examples/loadtest_policies.rs` (E8),
-//! `examples/shard_placement.rs` (E9), and the
-//! `rust/tests/{props_workload,loadtest_virtual,shard_virtual}.rs`
-//! suites.
+//! Entry points: `moepim loadtest` / `moepim shardtest` /
+//! `moepim calibrate` (CLI), `cargo bench --bench loadgen`,
+//! `examples/loadtest_policies.rs` (E8), `examples/shard_placement.rs`
+//! (E9), `examples/trace_roundtrip.rs` (E11), and the
+//! `rust/tests/{props_workload,loadtest_virtual,shard_virtual,
+//! trace_lifecycle}.rs` suites.
 
 pub mod arrival;
+pub mod calibrate;
 pub mod driver;
 pub mod hist;
 pub mod policy;
+pub mod record;
 pub mod report;
+pub mod scenario;
 pub mod shard;
 pub mod vsim;
 
 pub use arrival::{ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec};
+pub use calibrate::{calibrate, Calibration, CALIBRATION_SCHEMA};
 pub use driver::{
     request_for, run_against_server, run_requests_against_server,
     LoadOutcome, Sample,
 };
 pub use hist::LatencyHistogram;
 pub use policy::{AdmissionPolicy, QueuedMeta};
+pub use record::{
+    RecordedTrace, TraceBackend, TraceRecorder, TraceRequest, TRACE_SCHEMA,
+};
 pub use report::{summarize, SloSummary};
+pub use scenario::{scenario_names, scenario_spec, SCENARIOS};
 pub use shard::{
     run_against_cluster, Imbalance, MergedLoad, PlacementPolicy,
     ShardLoad, ShardOutcome, ShardedDriver, ShardedRun,

@@ -1,0 +1,727 @@
+//! Trace recording and replay: dump a served workload as a versioned
+//! `moepim.trace.v1` document and load it back for deterministic replay.
+//!
+//! The document captures everything a replay needs, at three levels:
+//!
+//! * the **original [`WorkloadSpec`]** (seed, arrival process, size
+//!   model, SLO) — so a trace *names* the experiment that produced it
+//!   and [`RecordedTrace::original_spec`] can re-materialize it;
+//! * the **backend configuration** that served it ([`TraceBackend`]:
+//!   slots, admission policy, prefill chunk, queue cap, shard count and
+//!   placement), read off the live [`crate::coordinator::ServerStats`] /
+//!   [`crate::coordinator::ClusterStats`] recording hooks rather than
+//!   re-threaded by the caller;
+//! * the **per-request records** ([`TraceRequest`]): exact arrival
+//!   timestamps (integer ns), prompt/gen sizes, deadline budgets, shard
+//!   tags, and the measured outcome (ok, queue/TTFT/e2e, tokens).
+//!
+//! Replay has two fidelities:
+//!
+//! * [`RecordedTrace::replay_requests`] rebuilds the exact
+//!   [`RequestSpec`]s (ns-precision arrivals) — feeding them through
+//!   [`crate::workload::run_virtual_requests`] with
+//!   [`RecordedTrace::original_spec`] replays the recorded run
+//!   *byte-identically* (same `moepim.slo_report.v1`), which is the
+//!   round-trip pin in `rust/tests/trace_lifecycle.rs`;
+//! * [`RecordedTrace::replay_spec`] folds the arrivals into an
+//!   [`ArrivalProcess::Replay`] timeline (µs truncation) — the generic
+//!   path for driving *any* backend or request count with the recorded
+//!   traffic shape, at the cost of sub-µs arrival detail.
+//!
+//! The calibration fit ([`crate::workload::calibrate`]) consumes the same
+//! document: recorded planner telemetry supplies the mean cycles/step the
+//! cost-constant decomposition needs.
+
+use crate::coordinator::{ClusterStats, ServerStats};
+use crate::sched::PlannerStats;
+use crate::util::json::Json;
+use crate::workload::arrival::{
+    ArrivalProcess, RequestSpec, SizeModel, WorkloadSpec,
+};
+use crate::workload::driver::LoadOutcome;
+use crate::workload::policy::AdmissionPolicy;
+use crate::workload::shard::ShardedRun;
+use crate::workload::vsim::VirtualConfig;
+
+/// Schema id stamped on every trace document.
+pub const TRACE_SCHEMA: &str = "moepim.trace.v1";
+
+/// The serving-side configuration a trace was recorded under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceBackend {
+    /// serving slots (per backend)
+    pub slots: usize,
+    /// prefill chunk budget (0: monolithic)
+    pub prefill_chunk: usize,
+    /// admission-queue cap (0: unbounded)
+    pub queue_cap: usize,
+    /// backend count (1: single server / virtual cluster)
+    pub shards: usize,
+    /// placement label for multi-backend runs (`None`: unsharded)
+    pub placement: Option<String>,
+}
+
+impl TraceBackend {
+    /// Backend block for a virtual run under `cfg`.
+    pub fn from_virtual(cfg: &VirtualConfig) -> TraceBackend {
+        TraceBackend {
+            slots: cfg.slots.max(1),
+            prefill_chunk: cfg.prefill_chunk,
+            queue_cap: 0,
+            shards: 1,
+            placement: None,
+        }
+    }
+
+    /// Backend block read off a live server's recording hooks.
+    pub fn from_server_stats(stats: &ServerStats) -> TraceBackend {
+        TraceBackend {
+            slots: stats.slots,
+            prefill_chunk: stats.prefill_chunk,
+            queue_cap: stats.queue_cap,
+            shards: 1,
+            placement: None,
+        }
+    }
+
+    /// Backend block read off a live cluster's recording hooks (slots /
+    /// chunk / cap come from shard 0 — the cluster spawns homogeneous
+    /// backends).
+    pub fn from_cluster_stats(stats: &ClusterStats) -> TraceBackend {
+        let first = stats.shards.first();
+        TraceBackend {
+            slots: first.map_or(0, |s| s.slots),
+            prefill_chunk: first.map_or(0, |s| s.prefill_chunk),
+            queue_cap: first.map_or(0, |s| s.queue_cap),
+            shards: stats.shards.len().max(1),
+            placement: Some(stats.placement.clone()),
+        }
+    }
+}
+
+/// One request's recorded lifetime: what arrived, and what happened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// workload-global request id
+    pub id: u64,
+    /// exact arrival offset from experiment start (ns — integer-exact in
+    /// JSON up to 2^53 ns ≈ 104 days, far beyond any experiment)
+    pub arrival_ns: u64,
+    /// prompt tokens prefillled
+    pub prompt_len: usize,
+    /// tokens requested
+    pub gen_len: usize,
+    /// deadline budget from submit (µs)
+    pub deadline_us: u64,
+    /// shard that served (or shed) it, when sharded
+    pub shard: Option<usize>,
+    /// terminal outcome
+    pub ok: bool,
+    /// submit → slot admission (µs); `None`: never admitted
+    pub queue_us: Option<f64>,
+    /// submit → first token (µs); `None`: none produced
+    pub ttft_us: Option<f64>,
+    /// submit → terminal reply (µs)
+    pub e2e_us: f64,
+    /// tokens banked by the terminal reply
+    pub tokens: u64,
+}
+
+/// A loaded (or freshly recorded) `moepim.trace.v1` document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordedTrace {
+    /// the spec that generated the workload
+    pub spec: WorkloadSpec,
+    /// admission-policy label the backend ran
+    pub policy: String,
+    /// `"virtual"` or `"wall"`
+    pub clock: String,
+    /// serving-side configuration
+    pub backend: TraceBackend,
+    /// cumulative planner telemetry of the recorded run (the calibration
+    /// fit reads mean cycles/step from here)
+    pub planner: PlannerStats,
+    /// recorded experiment duration (s)
+    pub duration_s: f64,
+    /// per-request records, in id order
+    pub requests: Vec<TraceRequest>,
+}
+
+/// Records one load experiment into a [`RecordedTrace`].  Construct it
+/// with the spec/policy the experiment runs under, run the experiment,
+/// then `finish` with the outcome and the backend block read off the
+/// serving stats:
+///
+/// ```
+/// use moepim::workload::record::{TraceBackend, TraceRecorder};
+/// use moepim::workload::{run_virtual, AdmissionPolicy, VirtualConfig,
+///                        WorkloadSpec};
+///
+/// let cfg = VirtualConfig::default();
+/// let spec = WorkloadSpec { requests: 8, ..WorkloadSpec::default() };
+/// let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+/// let trace = TraceRecorder::new(&spec, AdmissionPolicy::fifo())
+///     .finish(&out, TraceBackend::from_virtual(&cfg));
+/// assert_eq!(trace.requests.len(), 8);
+/// // the document round-trips through its JSON form
+/// let back = moepim::workload::record::RecordedTrace::from_json(
+///     &trace.to_json()).unwrap();
+/// assert_eq!(back, trace);
+/// ```
+pub struct TraceRecorder {
+    spec: WorkloadSpec,
+    policy: String,
+}
+
+impl TraceRecorder {
+    /// Start recording an experiment described by `spec` under `policy`.
+    pub fn new(spec: &WorkloadSpec, policy: AdmissionPolicy)
+        -> TraceRecorder {
+        TraceRecorder {
+            spec: spec.clone(),
+            policy: policy.label().to_string(),
+        }
+    }
+
+    /// Fold a single-backend outcome into a trace document.
+    pub fn finish(self, out: &LoadOutcome, backend: TraceBackend)
+        -> RecordedTrace {
+        let requests =
+            join_requests(&self.spec, out.samples.iter().map(|s| (s, None)));
+        RecordedTrace {
+            spec: self.spec,
+            policy: self.policy,
+            clock: out.clock.to_string(),
+            backend,
+            planner: out.planner,
+            duration_s: out.duration_s,
+            requests,
+        }
+    }
+
+    /// Fold a sharded run into one trace document: samples from every
+    /// shard merged back into id order (each tagged with its shard),
+    /// planner telemetry summed, duration the cluster makespan.
+    pub fn finish_sharded(self, run: &ShardedRun, backend: TraceBackend)
+        -> RecordedTrace {
+        let mut planner = PlannerStats::default();
+        let mut duration_s = 0.0f64;
+        let mut clock = "virtual";
+        let samples = run.shards.iter().flat_map(|s| {
+            planner.steps += s.outcome.planner.steps;
+            planner.work += s.outcome.planner.work;
+            planner.cycles += s.outcome.planner.cycles;
+            planner.contention_cycles += s.outcome.planner.contention_cycles;
+            planner.transfers += s.outcome.planner.transfers;
+            duration_s = duration_s.max(s.outcome.duration_s);
+            clock = s.outcome.clock;
+            let tag = s.outcome.shard.unwrap_or(s.shard);
+            s.outcome.samples.iter().map(move |smp| (smp, Some(tag)))
+        });
+        let requests = join_requests(&self.spec, samples);
+        RecordedTrace {
+            spec: self.spec,
+            policy: self.policy,
+            clock: clock.to_string(),
+            backend,
+            planner,
+            duration_s,
+            requests,
+        }
+    }
+}
+
+/// Join samples (id → outcome) with the spec's materialized requests
+/// (id → arrival/sizes/deadline), producing id-ordered records.  Samples
+/// override the per-sample shard tag when the iterator supplies one.
+fn join_requests<'a, I>(spec: &WorkloadSpec, samples: I) -> Vec<TraceRequest>
+where
+    I: Iterator<Item = (&'a crate::workload::driver::Sample, Option<usize>)>,
+{
+    let reqs = spec.materialize();
+    let mut records: Vec<TraceRequest> = samples
+        .filter_map(|(s, tag)| {
+            let r = reqs.get(s.id as usize)?;
+            Some(TraceRequest {
+                id: s.id,
+                arrival_ns: r.arrival_ns,
+                prompt_len: r.prompt_len,
+                gen_len: r.gen_len,
+                deadline_us: r.deadline_us,
+                shard: tag.or(s.shard),
+                ok: s.ok,
+                queue_us: s.queue_us,
+                ttft_us: s.ttft_us,
+                e2e_us: s.e2e_us,
+                tokens: s.tokens,
+            })
+        })
+        .collect();
+    records.sort_by_key(|r| r.id);
+    records
+}
+
+impl RecordedTrace {
+    /// The spec the workload was generated from, verbatim.  Re-running it
+    /// (`spec.materialize()`) regenerates the recorded request stream
+    /// exactly — arrivals, sizes, and deadlines all derive from the seed.
+    pub fn original_spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    /// Exact replay: rebuild the recorded [`RequestSpec`]s with their
+    /// integer-ns arrival offsets.  Driving these through
+    /// [`crate::workload::run_virtual_requests`] (with
+    /// [`RecordedTrace::original_spec`] supplying the seed) replays the
+    /// recorded event sequence byte-identically.
+    pub fn replay_requests(&self) -> Vec<RequestSpec> {
+        self.requests
+            .iter()
+            .map(|r| RequestSpec {
+                id: r.id,
+                prompt_len: r.prompt_len,
+                gen_len: r.gen_len,
+                deadline_us: r.deadline_us,
+                arrival_ns: r.arrival_ns,
+            })
+            .collect()
+    }
+
+    /// The recorded arrival timeline as a replayable
+    /// [`ArrivalProcess::Replay`] (µs offsets — sub-µs detail truncates).
+    pub fn replay_process(&self) -> ArrivalProcess {
+        ArrivalProcess::Replay {
+            times_us: self
+                .requests
+                .iter()
+                .map(|r| r.arrival_ns / 1000)
+                .collect(),
+        }
+    }
+
+    /// The original spec with its arrival process swapped for the
+    /// recorded timeline — the generic "drive anything with this traffic
+    /// shape" handle.  Size/deadline draws are salted independently of
+    /// the arrival stream, so when the original arrival was already a
+    /// canonical `Replay` timeline this materializes the recorded
+    /// workload exactly; for ns-granular processes (Poisson/bursty) the
+    /// arrivals are µs-truncated.
+    pub fn replay_spec(&self) -> WorkloadSpec {
+        WorkloadSpec {
+            arrival: self.replay_process(),
+            ..self.spec.clone()
+        }
+    }
+
+    // ----- JSON ------------------------------------------------------------
+
+    /// Serialize to the `moepim.trace.v1` document.
+    pub fn to_json(&self) -> Json {
+        let requests: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("arrival_ns", Json::num(r.arrival_ns as f64)),
+                    ("prompt_len", Json::num(r.prompt_len as f64)),
+                    ("gen_len", Json::num(r.gen_len as f64)),
+                    ("deadline_us", Json::num(r.deadline_us as f64)),
+                    (
+                        "shard",
+                        r.shard.map_or(Json::Null, |s| Json::num(s as f64)),
+                    ),
+                    ("ok", Json::Bool(r.ok)),
+                    ("queue_us", r.queue_us.map_or(Json::Null, Json::num)),
+                    ("ttft_us", r.ttft_us.map_or(Json::Null, Json::num)),
+                    ("e2e_us", Json::num(r.e2e_us)),
+                    ("tokens", Json::num(r.tokens as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("workload", spec_json(&self.spec)),
+            ("policy", Json::str(&self.policy)),
+            ("clock", Json::str(&self.clock)),
+            (
+                "backend",
+                Json::obj(vec![
+                    ("slots", Json::num(self.backend.slots as f64)),
+                    (
+                        "prefill_chunk",
+                        Json::num(self.backend.prefill_chunk as f64),
+                    ),
+                    ("queue_cap", Json::num(self.backend.queue_cap as f64)),
+                    ("shards", Json::num(self.backend.shards as f64)),
+                    (
+                        "placement",
+                        self.backend
+                            .placement
+                            .as_deref()
+                            .map_or(Json::Null, Json::str),
+                    ),
+                ]),
+            ),
+            (
+                "planner",
+                Json::obj(vec![
+                    ("steps", Json::num(self.planner.steps as f64)),
+                    ("work", Json::num(self.planner.work as f64)),
+                    ("cycles", Json::num(self.planner.cycles as f64)),
+                    (
+                        "contention_cycles",
+                        Json::num(self.planner.contention_cycles as f64),
+                    ),
+                    ("transfers", Json::num(self.planner.transfers as f64)),
+                ]),
+            ),
+            ("duration_s", Json::num(self.duration_s)),
+            ("requests", Json::arr(requests)),
+        ])
+    }
+
+    /// Parse a `moepim.trace.v1` document.
+    pub fn from_json(doc: &Json) -> Result<RecordedTrace, String> {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(TRACE_SCHEMA) => {}
+            other => {
+                return Err(format!(
+                    "expected schema {TRACE_SCHEMA:?}, found {other:?}"
+                ))
+            }
+        }
+        let spec = spec_from_json(
+            doc.get("workload").ok_or("missing workload block")?,
+        )?;
+        let policy = doc
+            .get("policy")
+            .and_then(Json::as_str)
+            .ok_or("missing policy")?
+            .to_string();
+        let clock = doc
+            .get("clock")
+            .and_then(Json::as_str)
+            .ok_or("missing clock")?
+            .to_string();
+        let b = doc.get("backend").ok_or("missing backend block")?;
+        let backend = TraceBackend {
+            slots: req_usize(b, "slots")?,
+            prefill_chunk: req_usize(b, "prefill_chunk")?,
+            queue_cap: req_usize(b, "queue_cap")?,
+            shards: req_usize(b, "shards")?,
+            placement: b
+                .get("placement")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        };
+        let p = doc.get("planner").ok_or("missing planner block")?;
+        let planner = PlannerStats {
+            steps: req_u64(p, "steps")?,
+            work: req_u64(p, "work")?,
+            cycles: req_u64(p, "cycles")?,
+            contention_cycles: req_u64(p, "contention_cycles")?,
+            transfers: req_u64(p, "transfers")?,
+        };
+        let duration_s = doc
+            .get("duration_s")
+            .and_then(Json::as_f64)
+            .ok_or("missing duration_s")?;
+        let requests = doc
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or("missing requests array")?
+            .iter()
+            .map(|r| {
+                Ok(TraceRequest {
+                    id: req_u64(r, "id")?,
+                    arrival_ns: req_u64(r, "arrival_ns")?,
+                    prompt_len: req_usize(r, "prompt_len")?,
+                    gen_len: req_usize(r, "gen_len")?,
+                    deadline_us: req_u64(r, "deadline_us")?,
+                    shard: r.get("shard").and_then(Json::as_usize),
+                    ok: r
+                        .get("ok")
+                        .and_then(Json::as_bool)
+                        .ok_or("missing ok")?,
+                    queue_us: r.get("queue_us").and_then(Json::as_f64),
+                    ttft_us: r.get("ttft_us").and_then(Json::as_f64),
+                    e2e_us: r
+                        .get("e2e_us")
+                        .and_then(Json::as_f64)
+                        .ok_or("missing e2e_us")?,
+                    tokens: req_u64(r, "tokens")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(RecordedTrace {
+            spec,
+            policy,
+            clock,
+            backend,
+            planner,
+            duration_s,
+            requests,
+        })
+    }
+}
+
+fn req_usize(obj: &Json, key: &str) -> Result<usize, String> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("missing or non-integer {key}"))
+}
+
+fn req_u64(obj: &Json, key: &str) -> Result<u64, String> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("missing or non-integer {key}"))
+}
+
+/// Serialize the full spec (not just labels — the trace must *name* the
+/// experiment precisely enough to re-materialize it).
+fn spec_json(spec: &WorkloadSpec) -> Json {
+    let arrival = match &spec.arrival {
+        ArrivalProcess::Poisson { rate_rps } => Json::obj(vec![
+            ("kind", Json::str("poisson")),
+            ("rate_rps", Json::num(*rate_rps)),
+        ]),
+        ArrivalProcess::Bursty { rate_rps, mean_on_ms, mean_off_ms } => {
+            Json::obj(vec![
+                ("kind", Json::str("bursty")),
+                ("rate_rps", Json::num(*rate_rps)),
+                ("mean_on_ms", Json::num(*mean_on_ms)),
+                ("mean_off_ms", Json::num(*mean_off_ms)),
+            ])
+        }
+        ArrivalProcess::Closed { users, think_ms } => Json::obj(vec![
+            ("kind", Json::str("closed")),
+            ("users", Json::num(*users as f64)),
+            ("think_ms", Json::num(*think_ms)),
+        ]),
+        ArrivalProcess::Replay { times_us } => Json::obj(vec![
+            ("kind", Json::str("replay")),
+            (
+                "times_us",
+                Json::arr(times_us.iter().map(|&t| Json::num(t as f64))),
+            ),
+        ]),
+    };
+    let sizes = match &spec.sizes {
+        SizeModel::Fixed { prompt_len, gen_len } => Json::obj(vec![
+            ("kind", Json::str("fixed")),
+            ("prompt_len", Json::num(*prompt_len as f64)),
+            ("gen_len", Json::num(*gen_len as f64)),
+        ]),
+        SizeModel::Uniform { prompt, gen } => Json::obj(vec![
+            ("kind", Json::str("uniform")),
+            ("prompt", range_json(*prompt)),
+            ("gen", range_json(*gen)),
+        ]),
+        SizeModel::TraceSeeded { n_experts, skew, prompt, gen } => {
+            Json::obj(vec![
+                ("kind", Json::str("trace")),
+                ("n_experts", Json::num(*n_experts as f64)),
+                ("skew", Json::num(*skew)),
+                ("prompt", range_json(*prompt)),
+                ("gen", range_json(*gen)),
+            ])
+        }
+    };
+    Json::obj(vec![
+        // string, not number: a u64 seed above 2^53 would lose precision
+        // through the f64-backed Json::Num (same convention as the SLO
+        // reports)
+        ("seed", Json::str(&spec.seed.to_string())),
+        ("requests", Json::num(spec.requests as f64)),
+        ("arrival", arrival),
+        ("sizes", sizes),
+        ("slo_e2e_ms", Json::num(spec.slo_e2e_ms)),
+        (
+            "deadline_slack_us_per_token",
+            Json::num(spec.deadline_slack_us_per_token as f64),
+        ),
+    ])
+}
+
+fn range_json((lo, hi): (usize, usize)) -> Json {
+    Json::arr([Json::num(lo as f64), Json::num(hi as f64)])
+}
+
+fn range_from_json(obj: &Json, key: &str)
+    -> Result<(usize, usize), String> {
+    let arr = obj
+        .get(key)
+        .and_then(Json::as_arr)
+        .filter(|a| a.len() == 2)
+        .ok_or_else(|| format!("{key}: expected a [lo, hi] pair"))?;
+    match (arr[0].as_usize(), arr[1].as_usize()) {
+        (Some(lo), Some(hi)) => Ok((lo, hi)),
+        _ => Err(format!("{key}: non-integer bound")),
+    }
+}
+
+fn spec_from_json(w: &Json) -> Result<WorkloadSpec, String> {
+    let seed = w
+        .get("seed")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or("missing or non-numeric seed string")?;
+    let a = w.get("arrival").ok_or("missing arrival block")?;
+    let arrival = match a.get("kind").and_then(Json::as_str) {
+        Some("poisson") => ArrivalProcess::Poisson {
+            rate_rps: req_f64(a, "rate_rps")?,
+        },
+        Some("bursty") => ArrivalProcess::Bursty {
+            rate_rps: req_f64(a, "rate_rps")?,
+            mean_on_ms: req_f64(a, "mean_on_ms")?,
+            mean_off_ms: req_f64(a, "mean_off_ms")?,
+        },
+        Some("closed") => ArrivalProcess::Closed {
+            users: req_usize(a, "users")?,
+            think_ms: req_f64(a, "think_ms")?,
+        },
+        Some("replay") => ArrivalProcess::Replay {
+            times_us: a
+                .get("times_us")
+                .and_then(Json::as_arr)
+                .ok_or("replay: missing times_us")?
+                .iter()
+                .map(|t| {
+                    t.as_f64()
+                        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                        .map(|v| v as u64)
+                        .ok_or_else(|| "replay: bad offset".to_string())
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+        },
+        other => return Err(format!("unknown arrival kind {other:?}")),
+    };
+    let s = w.get("sizes").ok_or("missing sizes block")?;
+    let sizes = match s.get("kind").and_then(Json::as_str) {
+        Some("fixed") => SizeModel::Fixed {
+            prompt_len: req_usize(s, "prompt_len")?,
+            gen_len: req_usize(s, "gen_len")?,
+        },
+        Some("uniform") => SizeModel::Uniform {
+            prompt: range_from_json(s, "prompt")?,
+            gen: range_from_json(s, "gen")?,
+        },
+        Some("trace") => SizeModel::TraceSeeded {
+            n_experts: req_usize(s, "n_experts")?,
+            skew: req_f64(s, "skew")?,
+            prompt: range_from_json(s, "prompt")?,
+            gen: range_from_json(s, "gen")?,
+        },
+        other => return Err(format!("unknown sizes kind {other:?}")),
+    };
+    Ok(WorkloadSpec {
+        seed,
+        requests: req_usize(w, "requests")?,
+        arrival,
+        sizes,
+        slo_e2e_ms: req_f64(w, "slo_e2e_ms")?,
+        deadline_slack_us_per_token: req_u64(
+            w,
+            "deadline_slack_us_per_token",
+        )?,
+    })
+}
+
+fn req_f64(obj: &Json, key: &str) -> Result<f64, String> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing or non-numeric {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::workload::vsim::run_virtual;
+
+    fn record_default() -> RecordedTrace {
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec { requests: 12, ..WorkloadSpec::default() };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::sjf());
+        TraceRecorder::new(&spec, AdmissionPolicy::sjf())
+            .finish(&out, TraceBackend::from_virtual(&cfg))
+    }
+
+    #[test]
+    fn trace_round_trips_through_json_text() {
+        let trace = record_default();
+        let text = trace.to_json().to_string_pretty();
+        let parsed = json::parse(&text).expect("trace parses");
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str(),
+            Some(TRACE_SCHEMA)
+        );
+        let back = RecordedTrace::from_json(&parsed).expect("loads");
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn replay_requests_match_the_original_materialization() {
+        let trace = record_default();
+        assert_eq!(trace.replay_requests(), trace.spec.materialize());
+    }
+
+    #[test]
+    fn replay_spec_swaps_arrival_only() {
+        let trace = record_default();
+        let rs = trace.replay_spec();
+        assert!(matches!(rs.arrival, ArrivalProcess::Replay { .. }));
+        assert_eq!(rs.seed, trace.spec.seed);
+        assert_eq!(rs.sizes, trace.spec.sizes);
+        assert_eq!(rs.requests, trace.spec.requests);
+    }
+
+    #[test]
+    fn every_spec_variant_round_trips() {
+        for (arrival, sizes) in [
+            (
+                ArrivalProcess::Bursty {
+                    rate_rps: 100.0,
+                    mean_on_ms: 5.0,
+                    mean_off_ms: 45.0,
+                },
+                SizeModel::Fixed { prompt_len: 8, gen_len: 4 },
+            ),
+            (
+                ArrivalProcess::Closed { users: 3, think_ms: 1.5 },
+                SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
+            ),
+            (
+                ArrivalProcess::Replay { times_us: vec![0, 10, 25] },
+                SizeModel::TraceSeeded {
+                    n_experts: 16,
+                    skew: 1.2,
+                    prompt: (4, 24),
+                    gen: (1, 12),
+                },
+            ),
+        ] {
+            let spec = WorkloadSpec {
+                arrival,
+                sizes,
+                requests: 6,
+                ..WorkloadSpec::default()
+            };
+            let doc = spec_json(&spec);
+            let back = spec_from_json(&doc).expect("spec loads");
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn unknown_schema_is_rejected() {
+        let mut doc = record_default().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".into(), Json::str("moepim.trace.v0"));
+        }
+        assert!(RecordedTrace::from_json(&doc).is_err());
+    }
+}

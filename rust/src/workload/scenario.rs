@@ -1,0 +1,264 @@
+//! Named, seeded workload scenario presets.
+//!
+//! Each scenario is a complete [`WorkloadSpec`] built from one `u64` seed,
+//! so `loadtest --scenario <name> --seed S` names a reproducible load
+//! experiment the same way a bare seed names a Poisson one.  The presets
+//! cover the traffic shapes the serving stack is meant to survive:
+//!
+//! | name                | shape                                           |
+//! |---------------------|-------------------------------------------------|
+//! | `diurnal`           | sinusoidally-modulated replay timeline (a       |
+//! |                     | compressed "day": 1.8× peak, 0.2× trough)       |
+//! | `flash-crowd`       | bursty on/off — 4 krps bursts, ~10% duty cycle  |
+//! | `long-prompt-flood` | Poisson stream of near-`max_seq` prompts        |
+//! | `mixed-tenants`     | merged interactive-Poisson + batch-metronome    |
+//! |                     | timeline with a wide size distribution          |
+//!
+//! Timelines for `diurnal` and `mixed-tenants` are materialized into
+//! [`ArrivalProcess::Replay`] at spec-build time (seeded, deterministic),
+//! which also exercises the replay path the trace recorder feeds
+//! ([`crate::workload::record`]).  Prompt lengths in every preset stay
+//! below the default virtual `max_seq` of 96 so all four run on both the
+//! real and virtual backends unmodified.
+
+use crate::util::rng::Pcg32;
+use crate::workload::{ArrivalProcess, SizeModel, WorkloadSpec};
+
+/// Distinct rng streams for the scenario timelines, mirroring the salt
+/// scheme in [`crate::workload::arrival`].
+const DIURNAL_SALT: u64 = 0xD1DA_7A11_0000_0004;
+const MIXED_SALT: u64 = 0x3117_ED7E_0000_0005;
+
+/// `(name, one-line description)` for every preset, in the order the CLI
+/// lists them.
+pub const SCENARIOS: [(&str, &str); 4] = [
+    (
+        "diurnal",
+        "compressed-day sinusoidal load: 1.8x peak to 0.2x trough over a \
+         2 s replay timeline",
+    ),
+    (
+        "flash-crowd",
+        "bursty on/off: 4000 rps bursts at a ~10% duty cycle (long-run \
+         ~400 rps)",
+    ),
+    (
+        "long-prompt-flood",
+        "adversarial Poisson stream of near-max_seq prompts (48..=90 \
+         tokens) with short generations",
+    ),
+    (
+        "mixed-tenants",
+        "interactive Poisson tenant merged with a batch metronome tenant \
+         on one replay timeline, wide size spread",
+    ),
+];
+
+/// The preset names, for CLI validation and sweep loops.
+pub fn scenario_names() -> impl Iterator<Item = &'static str> {
+    SCENARIOS.iter().map(|(n, _)| *n)
+}
+
+/// Build the named preset from `seed`, or `None` for an unknown name.
+///
+/// ```
+/// use moepim::workload::scenario::scenario_spec;
+///
+/// let a = scenario_spec("diurnal", 2026).unwrap();
+/// let b = scenario_spec("diurnal", 2026).unwrap();
+/// assert_eq!(a.materialize(), b.materialize()); // seeded => reproducible
+/// assert!(scenario_spec("weekday", 2026).is_none());
+/// ```
+pub fn scenario_spec(name: &str, seed: u64) -> Option<WorkloadSpec> {
+    match name {
+        "diurnal" => {
+            let requests = 64;
+            Some(WorkloadSpec {
+                seed,
+                requests,
+                arrival: ArrivalProcess::Replay {
+                    times_us: diurnal_times_us(seed, requests),
+                },
+                sizes: SizeModel::TraceSeeded {
+                    n_experts: 16,
+                    skew: 1.2,
+                    prompt: (4, 24),
+                    gen: (1, 12),
+                },
+                slo_e2e_ms: 250.0,
+                deadline_slack_us_per_token: 500,
+            })
+        }
+        "flash-crowd" => Some(WorkloadSpec {
+            seed,
+            requests: 64,
+            arrival: ArrivalProcess::Bursty {
+                rate_rps: 4000.0,
+                mean_on_ms: 5.0,
+                mean_off_ms: 45.0,
+            },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 24),
+                gen: (1, 12),
+            },
+            slo_e2e_ms: 150.0,
+            deadline_slack_us_per_token: 500,
+        }),
+        "long-prompt-flood" => Some(WorkloadSpec {
+            seed,
+            requests: 48,
+            arrival: ArrivalProcess::Poisson { rate_rps: 200.0 },
+            // prompts crowd the default virtual max_seq of 96 without
+            // crossing it (>= max_seq is a terminal error in vsim)
+            sizes: SizeModel::Uniform { prompt: (48, 90), gen: (1, 4) },
+            slo_e2e_ms: 400.0,
+            deadline_slack_us_per_token: 500,
+        }),
+        "mixed-tenants" => Some(WorkloadSpec {
+            seed,
+            requests: 64,
+            arrival: ArrivalProcess::Replay {
+                times_us: mixed_tenant_times_us(seed),
+            },
+            // wider spread than the default so interactive-short and
+            // batch-long requests share the queue
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 48),
+                gen: (1, 16),
+            },
+            slo_e2e_ms: 250.0,
+            deadline_slack_us_per_token: 500,
+        }),
+        _ => None,
+    }
+}
+
+/// Sinusoidally-modulated arrival timeline: one "day" compressed into 2 s,
+/// intensity `1 + 0.8·sin(2πt/day)` around the mean rate that fits `n`
+/// arrivals into the day.  Inter-arrival gaps are exponential at the
+/// local intensity, so the timeline is non-decreasing by construction.
+fn diurnal_times_us(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Pcg32::new(seed ^ DIURNAL_SALT);
+    let day_us = 2_000_000.0;
+    let base_gap_us = day_us / n.max(1) as f64;
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let phase = (t / day_us) * std::f64::consts::TAU;
+            let intensity = 1.0 + 0.8 * phase.sin();
+            t += exp_us(&mut rng, base_gap_us / intensity);
+            t as u64
+        })
+        .collect()
+}
+
+/// Two tenants merged onto one timeline: an interactive Poisson stream
+/// (~100 rps, 40 requests) and a batch metronome submitting every 15 ms
+/// (24 requests).  Sorted here for readability; [`ArrivalProcess::Replay`]
+/// canonicalizes anyway.
+fn mixed_tenant_times_us(seed: u64) -> Vec<u64> {
+    let mut rng = Pcg32::new(seed ^ MIXED_SALT);
+    let mut times: Vec<u64> = Vec::with_capacity(64);
+    let mut t = 0.0f64;
+    for _ in 0..40 {
+        t += exp_us(&mut rng, 10_000.0);
+        times.push(t as u64);
+    }
+    for k in 0..24u64 {
+        times.push(5_000 + k * 15_000);
+    }
+    times.sort_unstable();
+    times
+}
+
+fn exp_us(rng: &mut Pcg32, mean_us: f64) -> f64 {
+    let u = rng.gen_f64();
+    -(1.0 - u).ln() * mean_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_builds_and_is_seed_deterministic() {
+        for name in scenario_names() {
+            let a = scenario_spec(name, 2026).expect(name);
+            let b = scenario_spec(name, 2026).expect(name);
+            assert_eq!(a, b, "{name}: spec not deterministic");
+            assert_eq!(
+                a.materialize(),
+                b.materialize(),
+                "{name}: requests not deterministic"
+            );
+            let c = scenario_spec(name, 7).expect(name);
+            assert_ne!(
+                a.materialize(),
+                c.materialize(),
+                "{name}: seed is not load-bearing"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_rejected() {
+        assert!(scenario_spec("weekday", 2026).is_none());
+        assert!(scenario_spec("", 2026).is_none());
+    }
+
+    #[test]
+    fn preset_prompts_fit_the_default_virtual_max_seq() {
+        for name in scenario_names() {
+            let spec = scenario_spec(name, 2026).expect(name);
+            for r in spec.materialize() {
+                assert!(
+                    r.prompt_len > 0 && r.prompt_len < 96,
+                    "{name}: prompt_len {} outside (0, 96)",
+                    r.prompt_len
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replay_presets_carry_full_length_timelines() {
+        for name in ["diurnal", "mixed-tenants"] {
+            let spec = scenario_spec(name, 2026).unwrap();
+            match &spec.arrival {
+                ArrivalProcess::Replay { times_us } => {
+                    assert_eq!(times_us.len(), spec.requests, "{name}");
+                    assert!(
+                        times_us.windows(2).all(|w| w[0] <= w[1]),
+                        "{name}: timeline not sorted"
+                    );
+                }
+                other => panic!("{name}: expected Replay, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_peaks_early_and_troughs_late() {
+        // the sine peaks in the first half-day and bottoms out in the
+        // second, so more than half the arrivals land in the first half
+        let spec = scenario_spec("diurnal", 2026).unwrap();
+        let times = match &spec.arrival {
+            ArrivalProcess::Replay { times_us } => times_us.clone(),
+            _ => unreachable!(),
+        };
+        let mid = times[times.len() / 2];
+        let early = times.iter().filter(|&&t| t <= mid).count();
+        assert!(early * 2 >= times.len());
+        let span = *times.last().unwrap() - times[0];
+        let first_half = times.iter().filter(|&&t| t < span / 2).count();
+        assert!(
+            first_half > times.len() / 2,
+            "diurnal modulation missing: {first_half}/{} in first half",
+            times.len()
+        );
+    }
+}

@@ -1165,4 +1165,46 @@ mod tests {
         assert_eq!(out.samples.len(), 24);
         assert!(out.samples.iter().all(|s| !s.ok && s.admit_seq.is_none()));
     }
+
+    /// Satellite regression: coincident arrival timestamps (duplicate ns
+    /// offsets, produced by `exp_ns` truncation at extreme rates and by
+    /// recorded replay timelines) must break the tie deterministically —
+    /// ingest in request order, FIFO admit in ingest order — on *both*
+    /// vsim loops, so `admit_seq` follows request id.
+    #[test]
+    fn coincident_arrivals_admit_fifo_by_id() {
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec {
+            requests: 8,
+            arrival: ArrivalProcess::Replay {
+                times_us: vec![0; 8],
+            },
+            ..base_spec()
+        };
+        assert!(spec
+            .materialize()
+            .iter()
+            .all(|r| r.arrival_ns == 0));
+        let batch = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        let live = run_virtual_live(&cfg, &spec, AdmissionPolicy::fifo(), 1);
+        for out in [&batch, &live.shards[0].outcome] {
+            let mut admitted: Vec<(u64, u64)> = out
+                .samples
+                .iter()
+                .filter_map(|s| s.admit_seq.map(|a| (a, s.id)))
+                .collect();
+            assert_eq!(admitted.len(), 8);
+            admitted.sort_unstable();
+            let ids: Vec<u64> =
+                admitted.iter().map(|&(_, id)| id).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                ids, sorted,
+                "admission order broke the id tie-break"
+            );
+        }
+        // and the two loops agree sample for sample
+        assert_eq!(batch.samples, live.shards[0].outcome.samples);
+    }
 }

@@ -1,0 +1,176 @@
+//! End-to-end pins on the trace lifecycle (record → replay → calibrate →
+//! scenarios), all on the virtual clock so no artifact set is needed:
+//! a recorded run must replay byte-identically through its JSON round
+//! trip, a canonical-replay scenario must re-materialize exactly from its
+//! own trace, every scenario preset must agree between the batch and
+//! live virtual backends, sharded recordings must carry shard tags, and
+//! self-calibration must land inside the 15% acceptance gate.
+
+use moepim::util::json;
+use moepim::workload::record::{RecordedTrace, TraceBackend, TraceRecorder};
+use moepim::workload::{
+    calibrate, report, run_virtual, run_virtual_live, run_virtual_requests,
+    scenario_names, scenario_spec, AdmissionPolicy, ArrivalProcess,
+    PlacementPolicy, ShardedDriver, SizeModel, VirtualConfig, WorkloadSpec,
+};
+
+fn open_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        seed: 0x7ACE,
+        requests: 48,
+        arrival: ArrivalProcess::Poisson { rate_rps: 600.0 },
+        sizes: SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 1.2,
+            prompt: (4, 24),
+            gen: (1, 12),
+        },
+        slo_e2e_ms: 50.0,
+        deadline_slack_us_per_token: 500,
+    }
+}
+
+/// Record a virtual run and push the trace through its JSON text form,
+/// exactly like `--record FILE` followed by `--replay FILE`.
+fn record_through_json(
+    cfg: &VirtualConfig,
+    spec: &WorkloadSpec,
+    policy: AdmissionPolicy,
+) -> (String, RecordedTrace) {
+    let out = run_virtual(cfg, spec, policy);
+    let recorded = report::build(spec, policy, &out).to_string_pretty();
+    let trace = TraceRecorder::new(spec, policy)
+        .finish(&out, TraceBackend::from_virtual(cfg));
+    let text = trace.to_json().to_string_pretty();
+    let doc = json::parse(&text).expect("trace text parses");
+    (recorded, RecordedTrace::from_json(&doc).expect("trace loads"))
+}
+
+#[test]
+fn recorded_virtual_runs_replay_byte_identically() {
+    // the tentpole round trip: record -> serialize -> load -> replay the
+    // exact request stream -> the replay's report is the recorded one,
+    // byte for byte, under both admission policies
+    let cfg = VirtualConfig::default();
+    let spec = open_spec();
+    for policy in [AdmissionPolicy::fifo(), AdmissionPolicy::sjf()] {
+        let (recorded, trace) = record_through_json(&cfg, &spec, policy);
+        let replay = run_virtual_requests(
+            &cfg,
+            trace.original_spec(),
+            &trace.replay_requests(),
+            policy,
+        );
+        let replayed = report::build(trace.original_spec(), policy, &replay)
+            .to_string_pretty();
+        assert_eq!(
+            replayed,
+            recorded,
+            "replay diverged under {}",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn canonical_replay_scenarios_rematerialize_from_their_own_trace() {
+    // diurnal and mixed-tenants arrive on Replay timelines, which
+    // materialize should canonicalize (sorted, zero-start) — so the
+    // recorded arrival stream folded back into a replay_spec() must
+    // regenerate the recorded workload exactly, sizes and deadlines
+    // included (size draws are salted independently of arrivals)
+    let cfg = VirtualConfig::default();
+    for name in ["diurnal", "mixed-tenants"] {
+        let spec = scenario_spec(name, 2026).expect(name);
+        let (_, trace) =
+            record_through_json(&cfg, &spec, AdmissionPolicy::fifo());
+        assert_eq!(
+            trace.replay_spec().materialize(),
+            spec.materialize(),
+            "{name}: replay_spec did not round-trip the workload"
+        );
+    }
+}
+
+#[test]
+fn every_scenario_preset_matches_between_batch_and_live_virtual_backends() {
+    // the "both backends" half of the scenario acceptance: the batch
+    // virtual cluster and the incrementally-pumped live backend must
+    // agree sample for sample on every preset (all presets are
+    // open-loop, so both paths are defined)
+    let cfg = VirtualConfig::default();
+    let policy = AdmissionPolicy::fifo();
+    for name in scenario_names() {
+        let spec = scenario_spec(name, 2026).expect(name);
+        let batch = run_virtual(&cfg, &spec, policy);
+        let live = run_virtual_live(&cfg, &spec, policy, 1);
+        assert_eq!(live.shards.len(), 1, "{name}");
+        assert_eq!(
+            batch.samples, live.shards[0].outcome.samples,
+            "{name}: batch and live virtual backends diverged"
+        );
+        // and the preset is report-deterministic end to end
+        let a = report::build(&spec, policy, &batch).to_string_pretty();
+        let b =
+            report::build(&spec, policy, &run_virtual(&cfg, &spec, policy))
+                .to_string_pretty();
+        assert_eq!(a, b, "{name}: report not byte-identical");
+    }
+}
+
+#[test]
+fn sharded_recordings_tag_every_request_and_round_trip() {
+    let cfg = VirtualConfig::default();
+    let spec = open_spec();
+    let policy = AdmissionPolicy::fifo();
+    let driver = ShardedDriver::new(2, PlacementPolicy::RoundRobin);
+    let run = driver.run_virtual(&cfg, &spec, policy);
+    let backend = TraceBackend {
+        shards: 2,
+        placement: Some("round-robin".to_string()),
+        ..TraceBackend::from_virtual(&cfg)
+    };
+    let trace =
+        TraceRecorder::new(&spec, policy).finish_sharded(&run, backend);
+    assert_eq!(trace.requests.len(), spec.requests);
+    assert!(
+        trace.requests.iter().all(|r| r.shard.is_some()),
+        "sharded trace left requests untagged"
+    );
+    assert!(
+        trace.requests.iter().any(|r| r.shard == Some(1)),
+        "round-robin over 2 shards never used shard 1"
+    );
+    let doc = json::parse(&trace.to_json().to_string_pretty()).unwrap();
+    assert_eq!(RecordedTrace::from_json(&doc).unwrap(), trace);
+}
+
+#[test]
+fn calibration_against_a_recorded_scenario_lands_inside_the_gate() {
+    // the acceptance gate: fit the virtual cost constants against a
+    // recorded run and re-predict it to within 15% at p50 and p99
+    let cfg = VirtualConfig::default();
+    let spec = scenario_spec("mixed-tenants", 2026).unwrap();
+    let (_, trace) =
+        record_through_json(&cfg, &spec, AdmissionPolicy::fifo());
+    let cal = calibrate(&trace, &cfg).expect("fit");
+    assert!(cal.n_samples > 16, "only {} usable samples", cal.n_samples);
+    assert!(
+        cal.p50_err_pct <= 15.0 && cal.p99_err_pct <= 15.0,
+        "re-prediction error p50 {:.2}% p99 {:.2}% exceeds the 15% gate",
+        cal.p50_err_pct,
+        cal.p99_err_pct
+    );
+    // the fitted document carries the constants a study would reuse
+    let doc = cal.to_json();
+    for path in [
+        ["fitted", "cycle_ns"],
+        ["fitted", "dispatch_overhead_ns"],
+        ["fitted", "prefill_ns_per_token"],
+    ] {
+        assert!(
+            doc.path(&path).and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0,
+            "missing or degenerate {path:?}"
+        );
+    }
+}
