@@ -58,6 +58,8 @@ use crate::coordinator::server::{
     LoadSignal, Reply, ReplyTo, Request, Response, Server, ServerOptions,
     ServerStats,
 };
+use crate::obs::sink::{TraceShard, TraceSink};
+use crate::obs::span::{now_ns, EventKind, SpanOutcome};
 
 /// Intake bound used when [`ClusterOptions::intake_cap`] is 0: deep
 /// enough that open-loop drivers never block in steady state, finite so
@@ -171,6 +173,7 @@ impl ClusterStats {
 enum FrontMsg {
     Submit(Request, ReplyTo),
     Stats(mpsc::Sender<Result<ClusterStats>>),
+    TakeTrace(mpsc::Sender<Result<Vec<TraceShard>>>),
     Shutdown,
 }
 
@@ -216,9 +219,10 @@ impl Cluster {
         let thread_peak = Arc::clone(&peak);
         let placement = opts.placement;
         let shed_depth = opts.shed_depth;
+        let trace = opts.server.trace;
         let handle = std::thread::spawn(move || {
             place_loop(servers, signals, slots, rx, placement, shed_depth,
-                       thread_depth, thread_peak);
+                       thread_depth, thread_peak, trace);
         });
         Ok(Cluster { tx, depth, peak, shards: n, handle: Some(handle) })
     }
@@ -260,6 +264,20 @@ impl Cluster {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(FrontMsg::Stats(tx))
+            .map_err(|_| anyhow!("placement thread gone"))?;
+        rx.recv()?
+    }
+
+    /// Drain the whole cluster's span-trace rings: the placement thread's
+    /// own shard (front-door events — intake, placement, front-door
+    /// sheds) followed by every backend router's shard, in shard order.
+    /// Requires the cluster to have been spawned with
+    /// [`ServerOptions::trace`] on `opts.server`; without it every shard
+    /// comes back empty.
+    pub fn take_trace(&self) -> Result<Vec<TraceShard>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(FrontMsg::TakeTrace(tx))
             .map_err(|_| anyhow!("placement thread gone"))?;
         rx.recv()?
     }
@@ -306,11 +324,15 @@ fn shed_reply(req: &Request, sink: ReplyTo, candidate: usize,
 fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
               slots: Vec<usize>, rx: mpsc::Receiver<FrontMsg>,
               placement: ClusterPlacement, shed_depth: usize,
-              depth: Arc<AtomicUsize>, peak: Arc<AtomicUsize>) {
+              depth: Arc<AtomicUsize>, peak: Arc<AtomicUsize>,
+              trace: bool) {
     let n = servers.len();
     let mut rr: usize = 0;
     let mut placed = vec![0u64; n];
     let mut shed = vec![0u64; n];
+    // front-door span sink: intake/placement/shed events on the same
+    // process-global monotonic clock the backend routers stamp with
+    let mut sink = TraceSink::on(trace);
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
@@ -319,6 +341,18 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
         };
         match msg {
             FrontMsg::Shutdown => break,
+            FrontMsg::TakeTrace(tx) => {
+                let mut shards =
+                    vec![sink.drain(None, "placement")];
+                let drained = servers
+                    .iter()
+                    .map(|s| s.take_trace())
+                    .collect::<Result<Vec<_>>>();
+                let _ = tx.send(drained.map(|backend| {
+                    shards.extend(backend);
+                    shards
+                }));
+            }
             FrontMsg::Stats(tx) => {
                 let snap = servers
                     .iter()
@@ -333,8 +367,12 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                     });
                 let _ = tx.send(snap);
             }
-            FrontMsg::Submit(req, sink) => {
+            FrontMsg::Submit(req, reply_sink) => {
                 depth.fetch_sub(1, Ordering::Relaxed);
+                if sink.enabled() {
+                    sink.record(now_ns(),
+                                EventKind::Intake { id: req.id });
+                }
                 // candidate first (round-robin advances even on a shed,
                 // least-outstanding re-reads signals per arrival), so a
                 // shed is attributable to the backend it would have hit
@@ -354,10 +392,22 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                     });
                 if saturated {
                     shed[candidate] += 1;
-                    shed_reply(&req, sink, candidate, n, shed_depth);
+                    if sink.enabled() {
+                        sink.record(now_ns(), EventKind::Terminal {
+                            id: req.id,
+                            outcome: SpanOutcome::Shed,
+                        });
+                    }
+                    shed_reply(&req, reply_sink, candidate, n, shed_depth);
                 } else {
                     placed[candidate] += 1;
-                    servers[candidate].forward(req, sink);
+                    if sink.enabled() {
+                        sink.record(now_ns(), EventKind::Placed {
+                            id: req.id,
+                            shard: candidate,
+                        });
+                    }
+                    servers[candidate].forward(req, reply_sink);
                 }
             }
         }

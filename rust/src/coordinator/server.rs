@@ -44,6 +44,8 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::BatchEngine;
 use crate::coordinator::engine::ModelEngine;
+use crate::obs::sink::{TraceShard, TraceSink};
+use crate::obs::span::{now_ns, EventKind, SpanOutcome};
 use crate::runtime::Runtime;
 use crate::sched::PlannerStats;
 use crate::workload::{AdmissionPolicy, QueuedMeta};
@@ -75,6 +77,12 @@ pub struct ServerOptions {
     /// error instead of queueing (`0`: unbounded, the seed behaviour).
     /// Shed requests count in [`ServerStats::shed_requests`]
     pub queue_cap: usize,
+    /// record request-lifecycle span events into a per-router
+    /// [`TraceSink`] ring buffer, drained by [`Server::take_trace`] for
+    /// `--trace-out` export (`false`, the default: the sink is a no-op
+    /// and the router's timing/behaviour is bit-identical to a server
+    /// without the flag)
+    pub trace: bool,
 }
 
 impl Default for ServerOptions {
@@ -84,6 +92,7 @@ impl Default for ServerOptions {
             shard: None,
             prefill_chunk: 0,
             queue_cap: 0,
+            trace: false,
         }
     }
 }
@@ -285,6 +294,51 @@ impl ServerStats {
             self.batched_tokens as f64 / self.batch_dispatches as f64
         }
     }
+
+    /// Human-readable multi-line rendering of the full snapshot — the one
+    /// shared pretty-printer behind `moepim serve`'s shutdown dump and
+    /// `moepim shardtest`'s per-shard stats, so the two surfaces can't
+    /// drift apart.  Every field of the snapshot appears; `indent` is
+    /// prefixed to each line (`""` for top-level output).
+    pub fn pretty(&self, indent: &str) -> String {
+        let mut out = String::new();
+        let mut line = |s: String| {
+            out.push_str(indent);
+            out.push_str(&s);
+            out.push('\n');
+        };
+        match self.shard {
+            Some(s) => line(format!("shard:               {s}")),
+            None => line("shard:               standalone".to_string()),
+        }
+        line(format!("policy:              {}", self.policy));
+        line(format!("slots:               {}", self.slots));
+        line(format!("prefill_chunk:       {}", self.prefill_chunk));
+        line(format!("queue_cap:           {}", self.queue_cap));
+        line(format!("completed:           {}", self.completed));
+        line(format!("errored:             {}", self.errored));
+        line(format!("shed_requests:       {}", self.shed_requests));
+        line(format!("tokens_generated:    {}", self.tokens_generated));
+        line(format!("batch_dispatches:    {}", self.batch_dispatches));
+        line(format!("batched_tokens:      {}", self.batched_tokens));
+        line(format!("mean_batch_occupancy: {:.2}",
+                     self.mean_batch_occupancy()));
+        line(format!("single_dispatches:   {}", self.single_dispatches));
+        line(format!("prefill_chunks:      {}", self.prefill_chunks));
+        line(format!("peak_waiting:        {}", self.peak_waiting));
+        match (self.first_dispatch_unix_us, self.last_dispatch_unix_us) {
+            (Some(a), Some(b)) => line(format!(
+                "busy_interval_us:    {} .. {} ({} us)", a, b,
+                b.saturating_sub(a))),
+            _ => line("busy_interval_us:    never dispatched".to_string()),
+        }
+        line(format!(
+            "planner:             steps={} work={} cycles={} \
+             contention_cycles={} transfers={}",
+            self.planner.steps, self.planner.work, self.planner.cycles,
+            self.planner.contention_cycles, self.planner.transfers));
+        out
+    }
 }
 
 /// Where a request's replies go: a terminal-only channel (the classic
@@ -331,6 +385,7 @@ impl Replier {
 enum Msg {
     Submit(Request, ReplyTo),
     Stats(mpsc::Sender<ServerStats>),
+    TakeTrace(mpsc::Sender<TraceShard>),
     Shutdown,
 }
 
@@ -514,6 +569,19 @@ impl Server {
     pub fn signal(&self) -> Arc<LoadSignal> {
         Arc::clone(&self.signal)
     }
+
+    /// Drain the router thread's span-trace ring buffer (see
+    /// [`ServerOptions::trace`]).  Returns the events recorded since the
+    /// last drain; the sink keeps recording afterwards.  On a server
+    /// spawned without tracing the shard is empty with
+    /// `dropped_events == 0`.
+    pub fn take_trace(&self) -> Result<TraceShard> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::TakeTrace(tx))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        Ok(rx.recv()?)
+    }
 }
 
 impl Drop for Server {
@@ -545,6 +613,9 @@ struct Fill {
     submitted: Instant,
     admitted: Instant,
     admit_seq: u64,
+    /// prompt tokens not yet prefilled — span-trace bookkeeping only
+    /// (the engine's `PrefillState` owns the authoritative cursor)
+    remaining: usize,
 }
 
 impl Fill {
@@ -568,7 +639,8 @@ impl Fill {
 
 fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             opts: ServerOptions, signal: Arc<LoadSignal>) {
-    let ServerOptions { policy, shard, prefill_chunk, queue_cap } = opts;
+    let ServerOptions { policy, shard, prefill_chunk, queue_cap, trace } =
+        opts;
     let slots = eng.slots();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
@@ -582,6 +654,11 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
         ..ServerStats::default()
     };
     let mut admit_seq: u64 = 0;
+    // span-trace sink: a no-op ring unless the server was spawned with
+    // `trace`; every record site below is guarded on `sink.enabled()` so
+    // an untraced router never even reads the clock for telemetry
+    let mut sink = TraceSink::on(trace);
+    let mut cycle_idx: u64 = 0;
 
     loop {
         // ---- 1. drain control messages; block only when fully idle ------
@@ -603,7 +680,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             };
             match msg {
                 Msg::Shutdown => {
-                    shutdown(waiting, live, filling, shard);
+                    shutdown(waiting, live, filling, shard, &mut sink);
                     return;
                 }
                 Msg::Stats(tx) => {
@@ -611,15 +688,33 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     snap.planner = eng.planner_stats();
                     let _ = tx.send(snap);
                 }
-                Msg::Submit(req, sink) => {
-                    let reply =
-                        Replier { sink, signal: Arc::clone(&signal) };
+                Msg::TakeTrace(tx) => {
+                    // the router's shard tag doubles as the trace pid;
+                    // a standalone server drains as shard 0
+                    let _ = tx.send(
+                        sink.drain(Some(shard.unwrap_or(0)), "router"));
+                }
+                Msg::Submit(req, reply_sink) => {
+                    let reply = Replier {
+                        sink: reply_sink,
+                        signal: Arc::clone(&signal),
+                    };
+                    if sink.enabled() {
+                        sink.record(now_ns(),
+                                    EventKind::Queued { id: req.id });
+                    }
                     if req.gen_len == 0 {
                         // zero-length request: an immediate terminal
                         // success with no tokens — it never queues, never
                         // occupies a slot, and never ran prefill, so the
                         // never-happened fields stay `None`
                         stats.completed += 1;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Terminal {
+                                id: req.id,
+                                outcome: SpanOutcome::Ok,
+                            });
+                        }
                         let now = Instant::now();
                         reply.finish(Response {
                             id: req.id,
@@ -640,6 +735,12 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         // this backend is saturated
                         stats.shed_requests += 1;
                         stats.errored += 1;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Terminal {
+                                id: req.id,
+                                outcome: SpanOutcome::Shed,
+                            });
+                        }
                         reject(req.id, reply, Instant::now(), shard,
                                format!("overloaded: admission queue at \
                                         cap ({queue_cap})"));
@@ -657,6 +758,10 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             }
         }
 
+        // cycle span opens here — after the control-message drain, so
+        // time spent blocked idle is never charged to a router cycle
+        let cycle_start = if sink.enabled() { now_ns() } else { 0 };
+
         // ---- 2. completion sweep: bank the tokens the last decode cycle
         //         produced, retire finished slots ------------------------
         for slot in 0..slots {
@@ -669,7 +774,8 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                 || pos >= eng.model().max_seq;
             if done {
                 let l = live[slot].take().unwrap();
-                finish_slot(&mut eng, &mut stats, slot, l, shard);
+                finish_slot(&mut eng, &mut stats, slot, l, shard,
+                            &mut sink);
             }
         }
 
@@ -715,17 +821,31 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                 // advances chunk-by-chunk below, interleaved with decode
                 match eng.begin_prefill(&req.prompt) {
                     Ok(slot) => {
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::SlotGrant {
+                                id: req.id,
+                                slot,
+                            });
+                        }
+                        let remaining = req.prompt.len();
                         filling[slot] = Some(Fill {
                             req,
                             reply,
                             submitted,
                             admitted: granted,
                             admit_seq,
+                            remaining,
                         });
                         admit_seq += 1;
                     }
                     Err(e) => {
                         stats.errored += 1;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Terminal {
+                                id: req.id,
+                                outcome: SpanOutcome::Error,
+                            });
+                        }
                         reject(req.id, reply, submitted, shard,
                                format!("prefill failed: {e}"));
                     }
@@ -734,6 +854,16 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             }
             match eng.admit(&req.prompt) {
                 Ok((slot, next)) => {
+                    if sink.enabled() {
+                        let t = now_ns();
+                        sink.record(t, EventKind::SlotGrant {
+                            id: req.id,
+                            slot,
+                        });
+                        sink.record(t, EventKind::FirstToken {
+                            id: req.id,
+                        });
+                    }
                     // the prefill-sampled token is banked right away; the
                     // decode cycle below consumes it as `l.next`
                     let l = Live {
@@ -755,13 +885,20 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     let done = l.tokens.len() >= l.req.gen_len
                         || pos >= eng.model().max_seq;
                     if done {
-                        finish_slot(&mut eng, &mut stats, slot, l, shard);
+                        finish_slot(&mut eng, &mut stats, slot, l, shard,
+                                    &mut sink);
                     } else {
                         live[slot] = Some(l);
                     }
                 }
                 Err(e) => {
                     stats.errored += 1;
+                    if sink.enabled() {
+                        sink.record(now_ns(), EventKind::Terminal {
+                            id: req.id,
+                            outcome: SpanOutcome::Error,
+                        });
+                    }
                     reject(req.id, reply, submitted, shard,
                            format!("prefill failed: {e}"));
                 }
@@ -785,10 +922,34 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                 match eng.advance_prefill(slot, prefill_chunk) {
                     Ok(None) => {
                         stats.prefill_chunks += 1;
+                        let f = filling[slot].as_mut().unwrap();
+                        let advanced = f.remaining.min(prefill_chunk);
+                        f.remaining -= advanced;
+                        if sink.enabled() {
+                            sink.record(now_ns(),
+                                        EventKind::PrefillChunk {
+                                id: f.req.id,
+                                slot,
+                                advanced,
+                                remaining: f.remaining,
+                            });
+                        }
                     }
                     Ok(Some(first)) => {
                         stats.prefill_chunks += 1;
                         let f = filling[slot].take().unwrap();
+                        if sink.enabled() {
+                            let t = now_ns();
+                            sink.record(t, EventKind::PrefillChunk {
+                                id: f.req.id,
+                                slot,
+                                advanced: f.remaining.min(prefill_chunk),
+                                remaining: 0,
+                            });
+                            sink.record(t, EventKind::FirstToken {
+                                id: f.req.id,
+                            });
+                        }
                         // prefill complete: promote to a live decode
                         // session; it rides this cycle's dispatch, exactly
                         // like a freshly admitted monolithic request
@@ -811,7 +972,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                             || pos >= eng.model().max_seq;
                         if done {
                             finish_slot(&mut eng, &mut stats, slot, l,
-                                        shard);
+                                        shard, &mut sink);
                         } else {
                             live[slot] = Some(l);
                         }
@@ -820,6 +981,12 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         let f = filling[slot].take().unwrap();
                         eng.release(slot);
                         stats.errored += 1;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Terminal {
+                                id: f.req.id,
+                                outcome: SpanOutcome::Error,
+                            });
+                        }
                         f.respond_err(format!("prefill failed: {e}"),
                                       shard);
                     }
@@ -833,76 +1000,118 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             .flatten()
             .map(|l| (l.slot, l.next))
             .collect();
-        if steps.is_empty() {
-            continue;
-        }
-        // stamp the dispatch on the unix clock: the cross-shard overlap
-        // evidence the concurrent-cluster tests read
-        let t = unix_us();
-        if stats.first_dispatch_unix_us.is_none() {
-            stats.first_dispatch_unix_us = Some(t);
-        }
-        stats.last_dispatch_unix_us = Some(t);
-        if steps.len() == 1 {
-            // odd-sized tail: single-token fallback over pooled storage
-            let (slot, token) = steps[0];
-            match eng.decode_single(slot, token) {
-                Ok((next, _plans)) => {
-                    let l = live[slot].as_mut().unwrap();
-                    l.next = next;
-                    l.single_steps += 1;
-                    stats.single_dispatches += 1;
-                }
-                Err(e) => {
-                    fail_slot(&mut eng, &mut live, &mut stats, slot, e,
-                              shard)
-                }
+        // snapshot the cumulative planner stats so the cycle span can
+        // report this cycle's plan cost as a diff (traced runs only)
+        let planner_pre =
+            if sink.enabled() { Some(eng.planner_stats()) } else { None };
+        if !steps.is_empty() {
+            // stamp the dispatch on the unix clock: the cross-shard
+            // overlap evidence the concurrent-cluster tests read
+            let t = unix_us();
+            if stats.first_dispatch_unix_us.is_none() {
+                stats.first_dispatch_unix_us = Some(t);
             }
-        } else {
-            match eng.decode_batch(&steps) {
-                Ok(step) => {
-                    stats.batch_dispatches += 1;
-                    stats.batched_tokens += step.next.len() as u64;
-                    for (slot, next) in step.next {
+            stats.last_dispatch_unix_us = Some(t);
+            if steps.len() == 1 {
+                // odd-sized tail: single-token fallback over pooled
+                // storage
+                let (slot, token) = steps[0];
+                match eng.decode_single(slot, token) {
+                    Ok((next, _plans)) => {
                         let l = live[slot].as_mut().unwrap();
                         l.next = next;
-                        l.batched_steps += 1;
+                        l.single_steps += 1;
+                        stats.single_dispatches += 1;
                     }
+                    Err(e) => fail_slot(&mut eng, &mut live, &mut stats,
+                                        slot, e, shard, &mut sink),
                 }
-                Err(e) => {
-                    // a failed batch dispatch must not sink every rider:
-                    // retry each slot alone so only the culprit errors out
-                    let batch_err = e.to_string();
-                    for (slot, token) in steps {
-                        match eng.decode_single(slot, token) {
-                            Ok((next, _plans)) => {
-                                let l = live[slot].as_mut().unwrap();
-                                l.next = next;
-                                l.single_steps += 1;
-                                stats.single_dispatches += 1;
+            } else {
+                match eng.decode_batch(&steps) {
+                    Ok(step) => {
+                        stats.batch_dispatches += 1;
+                        stats.batched_tokens += step.next.len() as u64;
+                        for (slot, next) in step.next {
+                            let l = live[slot].as_mut().unwrap();
+                            l.next = next;
+                            l.batched_steps += 1;
+                        }
+                    }
+                    Err(e) => {
+                        // a failed batch dispatch must not sink every
+                        // rider: retry each slot alone so only the
+                        // culprit errors out
+                        let batch_err = e.to_string();
+                        for (slot, token) in steps {
+                            match eng.decode_single(slot, token) {
+                                Ok((next, _plans)) => {
+                                    let l = live[slot].as_mut().unwrap();
+                                    l.next = next;
+                                    l.single_steps += 1;
+                                    stats.single_dispatches += 1;
+                                }
+                                Err(e) => fail_slot(
+                                    &mut eng,
+                                    &mut live,
+                                    &mut stats,
+                                    slot,
+                                    anyhow!("{batch_err}; retry: {e}"),
+                                    shard,
+                                    &mut sink,
+                                ),
                             }
-                            Err(e) => fail_slot(
-                                &mut eng,
-                                &mut live,
-                                &mut stats,
-                                slot,
-                                anyhow!("{batch_err}; retry: {e}"),
-                                shard,
-                            ),
                         }
                     }
                 }
             }
+        }
+
+        // close the cycle span and sample queue depths (traced runs only;
+        // `plan_cycles`/`contention` are this cycle's planner-cost diff)
+        if let Some(pre) = planner_pre {
+            let post = eng.planner_stats();
+            let t = now_ns();
+            let live_n = live.iter().flatten().count();
+            let filling_n = filling.iter().flatten().count();
+            sink.record_span(
+                cycle_start,
+                t.saturating_sub(cycle_start),
+                EventKind::Cycle {
+                    index: cycle_idx,
+                    live: live_n,
+                    filling: filling_n,
+                    waiting: waiting.len(),
+                    layer_steps: post.steps.saturating_sub(pre.steps)
+                        as usize,
+                    plan_cycles: post.cycles.saturating_sub(pre.cycles),
+                    contention: post
+                        .contention_cycles
+                        .saturating_sub(pre.contention_cycles),
+                },
+            );
+            cycle_idx += 1;
+            sink.record(t, EventKind::Depth {
+                waiting: waiting.len(),
+                live: live_n,
+                filling: filling_n,
+                intake: 0,
+            });
         }
     }
 }
 
 /// Retire a finished request: free its slot, record stats, reply.
 fn finish_slot(eng: &mut BatchEngine, stats: &mut ServerStats, slot: usize,
-               mut l: Live, shard: Option<usize>) {
+               mut l: Live, shard: Option<usize>, sink: &mut TraceSink) {
     eng.release(slot);
     stats.completed += 1;
     stats.tokens_generated += l.tokens.len() as u64;
+    if sink.enabled() {
+        sink.record(now_ns(), EventKind::Terminal {
+            id: l.req.id,
+            outcome: SpanOutcome::Ok,
+        });
+    }
     let tokens = std::mem::take(&mut l.tokens);
     l.respond(Ok(tokens), shard);
 }
@@ -910,10 +1119,16 @@ fn finish_slot(eng: &mut BatchEngine, stats: &mut ServerStats, slot: usize,
 /// Retire `slot` with a terminal error reply.
 fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
              stats: &mut ServerStats, slot: usize, err: anyhow::Error,
-             shard: Option<usize>) {
+             shard: Option<usize>, sink: &mut TraceSink) {
     if let Some(l) = live[slot].take() {
         eng.release(slot);
         stats.errored += 1;
+        if sink.enabled() {
+            sink.record(now_ns(), EventKind::Terminal {
+                id: l.req.id,
+                outcome: SpanOutcome::Error,
+            });
+        }
         l.respond(Err(format!("decode failed: {err}")), shard);
     }
 }
@@ -921,17 +1136,41 @@ fn fail_slot(eng: &mut BatchEngine, live: &mut [Option<Live>],
 /// Terminal replies for everything in flight at shutdown: waiting,
 /// mid-prefill, and live (possibly mid-stream) requests each get exactly
 /// one terminal error — the exactly-once pin in
-/// `rust/tests/cluster_concurrent.rs`.
+/// `rust/tests/cluster_concurrent.rs`.  Each also gets a terminal span
+/// event, preserving the trace's one-terminal-per-request conservation
+/// law even across shutdown (the sink dies with the router thread, so
+/// these events are only visible to a `take_trace` that already drained —
+/// they keep the *ring* consistent, not the exported file).
 fn shutdown(waiting: VecDeque<Waiting>, live: Vec<Option<Live>>,
-            filling: Vec<Option<Fill>>, shard: Option<usize>) {
+            filling: Vec<Option<Fill>>, shard: Option<usize>,
+            sink: &mut TraceSink) {
+    let t = if sink.enabled() { now_ns() } else { 0 };
     for w in waiting {
+        if sink.enabled() {
+            sink.record(t, EventKind::Terminal {
+                id: w.req.id,
+                outcome: SpanOutcome::Error,
+            });
+        }
         reject(w.req.id, w.reply, w.submitted, shard,
                "server shut down".into());
     }
     for l in live.into_iter().flatten() {
+        if sink.enabled() {
+            sink.record(t, EventKind::Terminal {
+                id: l.req.id,
+                outcome: SpanOutcome::Error,
+            });
+        }
         l.respond(Err("server shut down".into()), shard);
     }
     for f in filling.into_iter().flatten() {
+        if sink.enabled() {
+            sink.record(t, EventKind::Terminal {
+                id: f.req.id,
+                outcome: SpanOutcome::Error,
+            });
+        }
         f.respond_err("server shut down".into(), shard);
     }
 }

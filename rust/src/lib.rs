@@ -36,6 +36,7 @@
 //! | [`runtime`] | PJRT client owning the AOT-compiled artifacts (one client per router thread; independent clients run concurrently) |
 //! | [`coordinator`] | per-session engine, slot-batched `BatchEngine`, threaded `Server` with pluggable admission, and the multi-backend `Cluster` front door (live placement, streaming replies, backpressure) |
 //! | [`workload`] | seeded traffic generation, SLO telemetry, admission policies, virtual-time cluster, and the sharded multi-server fan-out — static placement splits or live-signal cluster runs, concurrent real backends by default |
+//! | [`obs`] | request-lifecycle span tracing (per-thread ring sinks, Chrome/Perfetto `moepim.spans.v1` export) and the unified metrics registry behind `--trace-out` / `--metrics-file` |
 //! | [`util`] | in-tree substitutes for serde/rand/clap/criterion (offline image) |
 //!
 //! The serving-facing API surface ([`workload`] and [`coordinator`]) is
@@ -53,6 +54,8 @@ pub mod eval;
 pub mod grouping;
 pub mod hw;
 pub mod moe;
+#[warn(missing_docs)]
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

@@ -38,6 +38,7 @@ fn main() {
         Some("loadtest") => cmd_loadtest(&args),
         Some("shardtest") => cmd_shardtest(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("perfcmp") => cmd_perfcmp(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'\n{}", usage::ROOT);
             2
@@ -203,9 +204,12 @@ fn cmd_serve(args: &Args) -> i32 {
     let n = args.usize_flag("prompts", 4);
     let gen = args.usize_flag("gen", 8);
     let prefill_chunk = args.usize_flag("prefill-chunk", 0);
+    let trace_out = args.str_flag("trace-out", "");
+    let metrics_file = args.str_flag("metrics-file", "");
     let server = match Server::spawn_opts(artifacts_dir(args),
                                           ServerOptions {
                                               prefill_chunk,
+                                              trace: !trace_out.is_empty(),
                                               ..ServerOptions::default()
                                           }) {
         Ok(s) => s,
@@ -260,21 +264,31 @@ fn cmd_serve(args: &Args) -> i32 {
         total_tokens as f64 / wall
     );
     if let Ok(stats) = server.stats() {
-        // the same telemetry the loadtest report carries, so interactive
-        // runs and SLO reports read off one vocabulary
-        println!(
-            "slots {} | batched dispatches {} (mean occupancy {:.2}) | \
-             single {} | prefill chunks {} | peak waiting {} | \
-             contention {:.1}% of {} cycles",
-            stats.slots,
-            stats.batch_dispatches,
-            stats.mean_batch_occupancy(),
-            stats.single_dispatches,
-            stats.prefill_chunks,
-            stats.peak_waiting,
-            stats.planner.contention_ratio() * 100.0,
-            stats.planner.cycles,
-        );
+        // the full shutdown dump: the same pretty-printer the shardtest
+        // paths use, so interactive runs and fan-out runs read off one
+        // vocabulary (it subsumes the loadtest report's counter set)
+        print!("{}", stats.pretty(""));
+        if !metrics_file.is_empty() {
+            let code =
+                write_metrics_file(&metrics_file, &serve_metrics(&stats));
+            if code != 0 {
+                return code;
+            }
+        }
+    }
+    if !trace_out.is_empty() {
+        match server.take_trace() {
+            Ok(shard) => {
+                let code = write_trace_out(&trace_out, &[shard], "real");
+                if code != 0 {
+                    return code;
+                }
+            }
+            Err(e) => {
+                eprintln!("failed to drain the span trace: {e:#}");
+                return 1;
+            }
+        }
     }
     if failed > 0 {
         return 1;
@@ -378,9 +392,24 @@ fn cmd_loadtest(args: &Args) -> i32 {
             Err(code) => return code,
         }
     } else {
-        // virtual clock: byte-identical output for a given seed
+        // virtual clock: byte-identical output for a given seed (the
+        // span trace under --trace-out is byte-identical too: the sink
+        // never touches the virtual clock or the workload RNG)
         let cfg = loadtest_vcfg(args);
-        let out = run_virtual(&cfg, &spec, policy);
+        let trace_out = args.str_flag("trace-out", "");
+        let out = if trace_out.is_empty() {
+            run_virtual(&cfg, &spec, policy)
+        } else {
+            let mut sink = moepim::obs::TraceSink::on(true);
+            let out = moepim::workload::run_virtual_traced(
+                &cfg, &spec, policy, &mut sink);
+            let shards = [sink.drain(Some(0), "vsim")];
+            let code = write_trace_out(&trace_out, &shards, "virtual");
+            if code != 0 {
+                return code;
+            }
+            out
+        };
         let record_path = args.str_flag("record", "");
         if !record_path.is_empty() {
             let trace = moepim::workload::TraceRecorder::new(&spec, policy)
@@ -389,6 +418,17 @@ fn cmd_loadtest(args: &Args) -> i32 {
                     moepim::workload::TraceBackend::from_virtual(&cfg),
                 );
             if let Err(code) = write_trace(&trace, &record_path) {
+                return code;
+            }
+        }
+        let metrics_file = args.str_flag("metrics-file", "");
+        if !metrics_file.is_empty() {
+            let s = report::summarize(&spec, &out);
+            let code = write_metrics_file(
+                &metrics_file,
+                &moepim::workload::metrics_registry(&s, &out),
+            );
+            if code != 0 {
                 return code;
             }
         }
@@ -640,10 +680,12 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
     -> Result<moepim::util::json::Json, i32> {
     use moepim::coordinator::{Server, ServerOptions};
     use moepim::workload::{report, run_against_server};
+    let trace_out = args.str_flag("trace-out", "");
     let opts = ServerOptions {
         policy,
         prefill_chunk: args.usize_flag("prefill-chunk", 0),
         queue_cap: args.usize_flag("queue-cap", 0),
+        trace: !trace_out.is_empty(),
         ..ServerOptions::default()
     };
     let server = match Server::spawn_opts(artifacts_dir(args), opts) {
@@ -676,6 +718,32 @@ fn run_real_loadtest(args: &Args, spec: &moepim::workload::WorkloadSpec,
                     moepim::workload::TraceRecorder::new(spec, policy)
                         .finish(&out, backend);
                 write_trace(&trace, &record_path)?;
+            }
+            if !trace_out.is_empty() {
+                match server.take_trace() {
+                    Ok(shard) => {
+                        let code =
+                            write_trace_out(&trace_out, &[shard], "real");
+                        if code != 0 {
+                            return Err(code);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("failed to drain the span trace: {e:#}");
+                        return Err(1);
+                    }
+                }
+            }
+            let metrics_file = args.str_flag("metrics-file", "");
+            if !metrics_file.is_empty() {
+                let s = report::summarize(spec, &out);
+                let code = write_metrics_file(
+                    &metrics_file,
+                    &moepim::workload::metrics_registry(&s, &out),
+                );
+                if code != 0 {
+                    return Err(code);
+                }
             }
             Ok(report::build(spec, policy, &out))
         }
@@ -757,39 +825,72 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
     }
     let placement_label = placement.label();
     let driver = ShardedDriver::new(shards, placement);
-    let run = if args.bool_flag("real") {
+    let trace_out = args.str_flag("trace-out", "");
+    let (run, span_shards) = if args.bool_flag("real") {
         let opts = real_server_opts(args, policy);
         let result = if args.bool_flag("serial") {
+            if !trace_out.is_empty() {
+                eprintln!(
+                    "--trace-out: the serial fan-out drops each backend \
+                     before the next spawn, so there is no merged trace \
+                     to dump — ignoring (use the concurrent path)"
+                );
+            }
             // legacy one-shard-at-a-time fan-out, kept only as the A/B
             // baseline the concurrency bench compares against: each
             // shard runs against a fresh server serving its own subset,
             // dropped before the next spawn
-            driver.run_with(&spec, |shard, sspec, reqs| {
-                let server = moepim::coordinator::Server::spawn_opts(
-                    artifacts_dir(args),
-                    moepim::coordinator::ServerOptions {
-                        shard: Some(shard),
-                        ..opts.clone()
-                    },
-                )?;
-                run_requests_against_server(&server, sspec, reqs)
-            })
+            driver
+                .run_with(&spec, |shard, sspec, reqs| {
+                    let server = moepim::coordinator::Server::spawn_opts(
+                        artifacts_dir(args),
+                        moepim::coordinator::ServerOptions {
+                            shard: Some(shard),
+                            trace: false,
+                            ..opts.clone()
+                        },
+                    )?;
+                    run_requests_against_server(&server, sspec, reqs)
+                })
+                .map(|run| (run, Vec::new()))
         } else {
             // N real backends, each with its own engine and PJRT client
             // on its own router thread, driven genuinely in parallel
-            driver.run_real_concurrent(&artifacts_dir(args), &spec, &opts)
+            driver.run_real_concurrent_traced(&artifacts_dir(args), &spec,
+                                              &opts)
         };
         match result {
-            Ok(run) => run,
+            Ok(pair) => pair,
             Err(e) => {
                 eprintln!("shardtest failed: {e:#}");
                 return 1;
             }
         }
-    } else {
+    } else if trace_out.is_empty() {
         // N independent virtual clusters: byte-identical output per seed
-        driver.run_virtual(&vcfg, &spec, policy)
+        (driver.run_virtual(&vcfg, &spec, policy), Vec::new())
+    } else {
+        // same run with per-shard span sinks; still byte-identical
+        driver.run_virtual_traced(&vcfg, &spec, policy)
     };
+    if !trace_out.is_empty() && !span_shards.is_empty() {
+        let clock = if args.bool_flag("real") { "real" } else { "virtual" };
+        let code = write_trace_out(&trace_out, &span_shards, clock);
+        if code != 0 {
+            return code;
+        }
+    }
+    let metrics_file = args.str_flag("metrics-file", "");
+    if !metrics_file.is_empty() {
+        let m = moepim::workload::shard::merge(&spec, &run.shards);
+        let code = write_metrics_file(
+            &metrics_file,
+            &moepim::workload::metrics_registry_merged(&m),
+        );
+        if code != 0 {
+            return code;
+        }
+    }
     let record_path = args.str_flag("record", "");
     if !record_path.is_empty() {
         let backend = moepim::workload::TraceBackend {
@@ -823,8 +924,12 @@ fn run_sharded_live(args: &Args, shards: usize,
                     spec: &moepim::workload::WorkloadSpec,
                     vcfg: &moepim::workload::VirtualConfig) -> i32 {
     use moepim::coordinator::{Cluster, ClusterOptions, ClusterPlacement};
-    use moepim::workload::{report, run_against_cluster, run_virtual_live};
+    use moepim::workload::{
+        report, run_against_cluster, run_virtual_live,
+        run_virtual_live_traced,
+    };
     let record_path = args.str_flag("record", "");
+    let trace_out = args.str_flag("trace-out", "");
     let (run, record_backend) = if args.bool_flag("real") {
         let cluster = match Cluster::spawn(&artifacts_dir(args),
                                            ClusterOptions {
@@ -865,6 +970,23 @@ fn run_sharded_live(args: &Args, shards: usize,
                 }
             }
         };
+        if !trace_out.is_empty() {
+            // placement-thread shard first, then the backends in shard
+            // order — one merged document across the whole front door
+            match cluster.take_trace() {
+                Ok(span_shards) => {
+                    let code =
+                        write_trace_out(&trace_out, &span_shards, "real");
+                    if code != 0 {
+                        return code;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to drain the span trace: {e:#}");
+                    return 1;
+                }
+            }
+        }
         (run, backend)
     } else {
         if matches!(spec.arrival,
@@ -876,7 +998,20 @@ fn run_sharded_live(args: &Args, shards: usize,
             );
             return 2;
         }
-        let run = run_virtual_live(vcfg, spec, policy, shards);
+        let run = if trace_out.is_empty() {
+            run_virtual_live(vcfg, spec, policy, shards)
+        } else {
+            // same lock-step advance with per-backend span sinks; the
+            // trace rides the virtual clock, so it is byte-identical
+            // per seed like the report
+            let (run, span_shards) =
+                run_virtual_live_traced(vcfg, spec, policy, shards, true);
+            let code = write_trace_out(&trace_out, &span_shards, "virtual");
+            if code != 0 {
+                return code;
+            }
+            run
+        };
         let backend = (!record_path.is_empty()).then(|| {
             let mut b = moepim::workload::TraceBackend::from_virtual(vcfg);
             b.shards = shards;
@@ -892,13 +1027,25 @@ fn run_sharded_live(args: &Args, shards: usize,
             return code;
         }
     }
+    let metrics_file = args.str_flag("metrics-file", "");
+    if !metrics_file.is_empty() {
+        let m = moepim::workload::shard::merge(spec, &run.shards);
+        let code = write_metrics_file(
+            &metrics_file,
+            &moepim::workload::metrics_registry_merged(&m),
+        );
+        if code != 0 {
+            return code;
+        }
+    }
     print_report(args, &report::build_sharded_labeled(
         spec, policy, shards, "live-least-outstanding", &run))
 }
 
 /// The real-backend `ServerOptions` every `--real` path shares: policy
 /// plus the `--prefill-chunk` and `--queue-cap` knobs (shard tags are
-/// filled in per backend by the fan-out).
+/// filled in per backend by the fan-out).  Span tracing turns on iff
+/// `--trace-out` was given — an untraced router never pays for the sink.
 fn real_server_opts(args: &Args,
                     policy: moepim::workload::AdmissionPolicy)
     -> moepim::coordinator::ServerOptions {
@@ -907,6 +1054,132 @@ fn real_server_opts(args: &Args,
         shard: None,
         prefill_chunk: args.usize_flag("prefill-chunk", 0),
         queue_cap: args.usize_flag("queue-cap", 0),
+        trace: !args.str_flag("trace-out", "").is_empty(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// observability plumbing: --trace-out / --metrics-file across
+// serve/loadtest/shardtest, and the perfcmp subcommand (DESIGN.md
+// §Observability)
+// ---------------------------------------------------------------------------
+
+/// Write the merged `moepim.spans.v1` Chrome trace document.  The notice
+/// goes to stderr so `--trace-out` composes with report redirection.
+fn write_trace_out(path: &str, shards: &[moepim::obs::TraceShard],
+                   clock: &str) -> i32 {
+    let text = moepim::obs::chrome_trace(shards, clock).to_string_pretty();
+    if let Err(e) = std::fs::write(path, format!("{text}\n")) {
+        eprintln!("failed to write trace {path}: {e}");
+        return 1;
+    }
+    let events: usize = shards.iter().map(|s| s.events.len()).sum();
+    let dropped: u64 = shards.iter().map(|s| s.dropped_events).sum();
+    eprintln!(
+        "trace: {events} events from {} threads ({dropped} dropped) -> \
+         {path}",
+        shards.len()
+    );
+    0
+}
+
+/// Write a Prometheus-style text snapshot of `registry`.
+fn write_metrics_file(path: &str,
+                      registry: &moepim::obs::MetricsRegistry) -> i32 {
+    if let Err(e) = std::fs::write(path, registry.render_text()) {
+        eprintln!("failed to write metrics {path}: {e}");
+        return 1;
+    }
+    eprintln!("metrics: snapshot -> {path}");
+    0
+}
+
+/// The `moepim serve` shutdown metrics snapshot, built straight off
+/// [`moepim::coordinator::ServerStats`].  `serve` has no workload spec,
+/// so there are no SLO/latency series here — those ride the loadtest
+/// paths, which share this vocabulary via the report builders.
+fn serve_metrics(stats: &moepim::coordinator::ServerStats)
+    -> moepim::obs::MetricsRegistry {
+    let mut reg = moepim::obs::MetricsRegistry::new();
+    reg.counter("moepim_requests_completed_total",
+                "requests finished with a token stream", stats.completed);
+    reg.counter("moepim_requests_errored_total",
+                "requests finished with an error", stats.errored);
+    reg.counter("moepim_requests_shed_total",
+                "requests rejected by admission backpressure",
+                stats.shed_requests);
+    reg.counter("moepim_tokens_generated_total",
+                "decode tokens produced", stats.tokens_generated);
+    reg.counter("moepim_batch_dispatches_total",
+                "batched decode dispatches", stats.batch_dispatches);
+    reg.counter("moepim_single_dispatches_total",
+                "single-request dispatches", stats.single_dispatches);
+    reg.counter("moepim_prefill_chunks_total",
+                "chunked prefill steps", stats.prefill_chunks);
+    reg.counter("moepim_planner_steps_total",
+                "planner layer steps", stats.planner.steps);
+    reg.counter("moepim_planner_cycles_total",
+                "planner modeled cycles", stats.planner.cycles);
+    reg.counter("moepim_planner_contention_cycles_total",
+                "planner cycles lost to bank contention",
+                stats.planner.contention_cycles);
+    reg.counter("moepim_planner_transfers_total",
+                "planner modeled activation transfers",
+                stats.planner.transfers);
+    reg.gauge("moepim_slots", "decode slots", stats.slots as f64);
+    reg.gauge("moepim_peak_waiting", "admission queue high-water mark",
+              stats.peak_waiting as f64);
+    reg.gauge("moepim_mean_batch_occupancy",
+              "mean live slots per batched dispatch",
+              stats.mean_batch_occupancy());
+    reg
+}
+
+/// `moepim perfcmp OLD.json NEW.json`: compare two bench artifacts of
+/// the same schema leg by leg and exit 3 if any shared metric regressed
+/// beyond `--threshold` percent — CI's perf-trajectory gate between
+/// successive `BENCH_*.json` uploads.
+fn cmd_perfcmp(args: &Args) -> i32 {
+    use moepim::workload::{perf_compare, perfcmp, DEFAULT_THRESHOLD_PCT};
+    let (Some(old_path), Some(new_path)) =
+        (args.positional.first(), args.positional.get(1))
+    else {
+        eprintln!("perfcmp needs OLD.json and NEW.json\n{}", usage::PERFCMP);
+        return 2;
+    };
+    let threshold = args.f64_flag("threshold", DEFAULT_THRESHOLD_PCT);
+    let load = |path: &str| -> Result<moepim::util::json::Json, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("failed to read {path}: {e}"))?;
+        moepim::util::json::parse(&text).map_err(|e| format!("{path}: {e}"))
+    };
+    let (old, new) = match (load(old_path), load(new_path)) {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    match perf_compare(&old, &new, threshold) {
+        Ok(deltas) => {
+            print!("{}", perfcmp::render(&deltas));
+            let regressions =
+                deltas.iter().filter(|d| d.regression).count();
+            if regressions > 0 {
+                eprintln!(
+                    "perfcmp: {regressions} regression(s) beyond \
+                     {threshold:.1}%"
+                );
+                3
+            } else {
+                println!("perfcmp: no regressions beyond {threshold:.1}%");
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("perfcmp: {e}");
+            1
+        }
     }
 }
 
@@ -1305,6 +1578,69 @@ fn loadtest_smoke(args: &Args) -> i32 {
             return 1;
         }
         println!("smoke: scenario {name} deterministic ({} bytes)", a.len());
+    }
+    // observability leg: a traced virtual run must (1) leave the outcome
+    // byte-identical to the untraced run, (2) dump a byte-identical
+    // moepim.spans.v1 document twice in a row, and (3) pass the
+    // exactly-one-terminal-per-request conservation check through a JSON
+    // round trip
+    {
+        use moepim::obs::{check_conservation, chrome_trace, TraceSink};
+        use moepim::workload::run_virtual_traced;
+        let cfg = VirtualConfig::default();
+        let spec = WorkloadSpec {
+            seed,
+            requests: 32,
+            arrival: ArrivalProcess::Poisson { rate_rps: 400.0 },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 1.2,
+                prompt: (4, 24),
+                gen: (1, 12),
+            },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 500,
+        };
+        let policy = AdmissionPolicy::fifo();
+        let baseline = report::build(&spec, policy,
+                                     &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        let run_traced = || {
+            let mut sink = TraceSink::on(true);
+            let out = run_virtual_traced(&cfg, &spec, policy, &mut sink);
+            let trace =
+                chrome_trace(&[sink.drain(Some(0), "vsim")], "virtual")
+                    .to_string_pretty();
+            (report::build(&spec, policy, &out).to_string_pretty(), trace)
+        };
+        let (report_a, trace_a) = run_traced();
+        let (report_b, trace_b) = run_traced();
+        if report_a != baseline {
+            eprintln!("smoke: tracing perturbed the virtual outcome");
+            return 1;
+        }
+        if trace_a != trace_b || report_a != report_b {
+            eprintln!("smoke: traced virtual run not byte-repeatable");
+            return 1;
+        }
+        let doc = match moepim::util::json::parse(&trace_a) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("smoke: span dump is not valid JSON: {e}");
+                return 1;
+            }
+        };
+        match check_conservation(&doc) {
+            Ok(n) => println!(
+                "smoke: span trace deterministic, conservation OK \
+                 ({n} requests, {} bytes)",
+                trace_a.len()
+            ),
+            Err(e) => {
+                eprintln!("smoke: span conservation violated: {e}");
+                return 1;
+            }
+        }
     }
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {

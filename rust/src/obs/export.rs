@@ -1,0 +1,391 @@
+//! Chrome trace-event JSON export (`moepim.spans.v1`) — Perfetto-loadable.
+//!
+//! [`chrome_trace`] merges drained [`TraceShard`]s into one JSON document
+//! in the Chrome trace-event format (object form, `traceEvents` +
+//! `otherData`), which `ui.perfetto.dev` and `chrome://tracing` both load
+//! directly:
+//!
+//! * **pid** = backend shard index (the cluster front door gets its own
+//!   pid one past the last shard), labelled via `process_name` metadata;
+//! * **tid** = one lane per recording thread within a pid (`router`,
+//!   `placement`, `vsim`), labelled via `thread_name` metadata;
+//! * request-lifecycle events are instants (`ph:"i"`), with a derived
+//!   async span (`ph:"b"`/`"e"`, cat `request`, id = request id) from a
+//!   request's first recorded event to its terminal;
+//! * router cycles are complete spans (`ph:"X"`) with real durations;
+//! * queue depths are counter tracks (`ph:"C"`).
+//!
+//! Timestamps are rebased to the earliest event and emitted in
+//! microseconds (fractional — the source clocks are ns).  All maps are
+//! ordered, so a virtual-clock trace serialises byte-identically per seed.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::sink::TraceShard;
+use super::span::{Event, EventKind};
+
+/// Schema tag carried in `otherData.schema`.
+pub const SPANS_SCHEMA: &str = "moepim.spans.v1";
+
+fn n(v: usize) -> Json {
+    Json::num(v as f64)
+}
+
+fn n64(v: u64) -> Json {
+    Json::num(v as f64)
+}
+
+/// Lane (pid / tid) assignment for one shard's events.
+struct Lane {
+    pid: usize,
+    tid: usize,
+}
+
+fn event_args(kind: &EventKind) -> Json {
+    match *kind {
+        EventKind::Intake { id } => Json::obj(vec![("id", n64(id))]),
+        EventKind::Placed { id, shard } => {
+            Json::obj(vec![("id", n64(id)), ("shard", n(shard))])
+        }
+        EventKind::Queued { id } => Json::obj(vec![("id", n64(id))]),
+        EventKind::SlotGrant { id, slot } => {
+            Json::obj(vec![("id", n64(id)), ("slot", n(slot))])
+        }
+        EventKind::PrefillChunk { id, slot, advanced, remaining } => {
+            Json::obj(vec![
+                ("advanced", n(advanced)),
+                ("id", n64(id)),
+                ("remaining", n(remaining)),
+                ("slot", n(slot)),
+            ])
+        }
+        EventKind::FirstToken { id } => Json::obj(vec![("id", n64(id))]),
+        EventKind::Terminal { id, outcome } => Json::obj(vec![
+            ("id", n64(id)),
+            ("outcome", Json::str(outcome.label())),
+        ]),
+        EventKind::Cycle {
+            index,
+            live,
+            filling,
+            waiting,
+            layer_steps,
+            plan_cycles,
+            contention,
+        } => Json::obj(vec![
+            ("contention", n64(contention)),
+            ("filling", n(filling)),
+            ("index", n64(index)),
+            ("layer_steps", n(layer_steps)),
+            ("live", n(live)),
+            ("plan_cycles", n64(plan_cycles)),
+            ("waiting", n(waiting)),
+        ]),
+        EventKind::Depth { waiting, live, filling, intake } => Json::obj(vec![
+            ("filling", n(filling)),
+            ("intake", n(intake)),
+            ("live", n(live)),
+            ("waiting", n(waiting)),
+        ]),
+    }
+}
+
+fn instant(name: &str, lane: &Lane, ts_us: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("args", args),
+        ("name", Json::str(name)),
+        ("ph", Json::str("i")),
+        ("pid", n(lane.pid)),
+        ("s", Json::str("t")),
+        ("tid", n(lane.tid)),
+        ("ts", Json::num(ts_us)),
+    ])
+}
+
+/// Merge drained shards into one Chrome trace-event JSON document.
+///
+/// `clock` labels the time domain in `otherData.clock` — `"virtual"` for
+/// vsim traces (byte-identical per seed) or `"real"` for wall-clock runs.
+pub fn chrome_trace(shards: &[TraceShard], clock: &str) -> Json {
+    // lane assignment: pid = shard index, front door (shard: None) one
+    // past the largest shard pid; tids sequential per pid
+    let front_pid = shards
+        .iter()
+        .filter_map(|s| s.shard)
+        .max()
+        .map(|m| m + 1)
+        .unwrap_or(0);
+    let mut next_tid: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut events: Vec<Json> = Vec::new();
+
+    let t_min = shards
+        .iter()
+        .flat_map(|s| s.events.iter())
+        .map(|e| e.t_ns)
+        .min()
+        .unwrap_or(0);
+    let us = |t_ns: u64| (t_ns - t_min) as f64 / 1000.0;
+
+    // request index for the derived async spans: id -> (first, terminal)
+    // with the lane the request was last seen on
+    struct ReqTrack {
+        first_t: u64,
+        first_lane: (usize, usize),
+        terminal: Option<(u64, (usize, usize))>,
+    }
+    let mut requests: BTreeMap<u64, ReqTrack> = BTreeMap::new();
+    let mut dropped_total: u64 = 0;
+
+    let mut lanes: Vec<Lane> = Vec::with_capacity(shards.len());
+    for shard in shards {
+        let pid = shard.shard.unwrap_or(front_pid);
+        let tid_slot = next_tid.entry(pid).or_insert(0);
+        let lane = Lane { pid, tid: *tid_slot };
+        *tid_slot += 1;
+        // metadata: label the process and thread lanes
+        let pname = match shard.shard {
+            Some(s) => format!("shard {s}"),
+            None => "front-door".to_string(),
+        };
+        events.push(Json::obj(vec![
+            ("args", Json::obj(vec![("name", Json::str(&pname))])),
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", n(lane.pid)),
+            ("tid", n(lane.tid)),
+        ]));
+        events.push(Json::obj(vec![
+            ("args", Json::obj(vec![("name", Json::str(shard.thread))])),
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", n(lane.pid)),
+            ("tid", n(lane.tid)),
+        ]));
+        dropped_total += shard.dropped_events;
+        lanes.push(lane);
+    }
+
+    for (shard, lane) in shards.iter().zip(&lanes) {
+        for ev in &shard.events {
+            let Event { t_ns, dur_ns, ref kind } = *ev;
+            if let Some(id) = kind.request_id() {
+                let track = requests.entry(id).or_insert(ReqTrack {
+                    first_t: t_ns,
+                    first_lane: (lane.pid, lane.tid),
+                    terminal: None,
+                });
+                if t_ns < track.first_t {
+                    track.first_t = t_ns;
+                    track.first_lane = (lane.pid, lane.tid);
+                }
+                if matches!(kind, EventKind::Terminal { .. }) {
+                    track.terminal = Some((t_ns, (lane.pid, lane.tid)));
+                }
+            }
+            match kind {
+                EventKind::Cycle { .. } => events.push(Json::obj(vec![
+                    ("args", event_args(kind)),
+                    ("dur", Json::num(dur_ns as f64 / 1000.0)),
+                    ("name", Json::str("cycle")),
+                    ("ph", Json::str("X")),
+                    ("pid", n(lane.pid)),
+                    ("tid", n(lane.tid)),
+                    ("ts", Json::num(us(t_ns))),
+                ])),
+                EventKind::Depth { .. } => events.push(Json::obj(vec![
+                    ("args", event_args(kind)),
+                    ("name", Json::str("depth")),
+                    ("ph", Json::str("C")),
+                    ("pid", n(lane.pid)),
+                    ("tid", n(lane.tid)),
+                    ("ts", Json::num(us(t_ns))),
+                ])),
+                _ => events.push(instant(kind.name(), lane, us(t_ns), event_args(kind))),
+            }
+        }
+    }
+
+    // derived request spans: first event -> terminal, where both survived
+    // the ring (drop-oldest can shed a request's early events; the span is
+    // only drawn when its endpoints exist)
+    for (&id, track) in &requests {
+        if let Some((term_t, term_lane)) = track.terminal {
+            for (ph, t, (pid, tid)) in [
+                ("b", track.first_t, track.first_lane),
+                ("e", term_t, term_lane),
+            ] {
+                events.push(Json::obj(vec![
+                    ("cat", Json::str("request")),
+                    ("id", n64(id)),
+                    ("name", Json::str("request")),
+                    ("ph", Json::str(ph)),
+                    ("pid", n(pid)),
+                    ("tid", n(tid)),
+                    ("ts", Json::num(us(t))),
+                ]));
+            }
+        }
+    }
+
+    Json::obj(vec![
+        ("otherData", Json::obj(vec![
+            ("clock", Json::str(clock)),
+            ("dropped_events", n64(dropped_total)),
+            ("requests", n(requests.len())),
+            ("schema", Json::str(SPANS_SCHEMA)),
+        ])),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Request-count conservation check over an exported document: every
+/// request id appearing in any lifecycle event has exactly one `terminal`
+/// event, and the id count matches `otherData.requests`.  Returns the
+/// number of requests on success.
+pub fn check_conservation(doc: &Json) -> Result<usize, String> {
+    let schema = doc
+        .path(&["otherData", "schema"])
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing otherData.schema".to_string())?;
+    if schema != SPANS_SCHEMA {
+        return Err(format!("schema {schema:?}, expected {SPANS_SCHEMA:?}"));
+    }
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing traceEvents".to_string())?;
+    let mut terminals: BTreeMap<u64, u64> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) != Some("i") {
+            continue;
+        }
+        let Some(id) = ev.path(&["args", "id"]).and_then(Json::as_f64) else {
+            continue;
+        };
+        let entry = terminals.entry(id as u64).or_insert(0);
+        if ev.get("name").and_then(Json::as_str) == Some("terminal") {
+            *entry += 1;
+        }
+    }
+    for (id, count) in &terminals {
+        if *count != 1 {
+            return Err(format!(
+                "request {id} has {count} terminal events, expected 1"
+            ));
+        }
+    }
+    let declared = doc
+        .path(&["otherData", "requests"])
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "missing otherData.requests".to_string())?;
+    if declared != terminals.len() {
+        return Err(format!(
+            "otherData.requests = {declared} but {} ids seen",
+            terminals.len()
+        ));
+    }
+    Ok(terminals.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::TraceSink;
+    use crate::obs::span::SpanOutcome;
+    use crate::util::json;
+
+    fn demo_shards() -> Vec<TraceShard> {
+        let mut router = TraceSink::ring(64);
+        router.record(100, EventKind::Queued { id: 1 });
+        router.record(200, EventKind::SlotGrant { id: 1, slot: 0 });
+        router.record_span(
+            200,
+            400,
+            EventKind::Cycle {
+                index: 0,
+                live: 1,
+                filling: 0,
+                waiting: 0,
+                layer_steps: 1,
+                plan_cycles: 12,
+                contention: 3,
+            },
+        );
+        router.record(350, EventKind::FirstToken { id: 1 });
+        router.record(
+            600,
+            EventKind::Terminal { id: 1, outcome: SpanOutcome::Ok },
+        );
+        router.record(
+            650,
+            EventKind::Depth { waiting: 0, live: 0, filling: 0, intake: 0 },
+        );
+        let mut front = TraceSink::ring(64);
+        front.record(50, EventKind::Intake { id: 1 });
+        front.record(90, EventKind::Placed { id: 1, shard: 0 });
+        vec![front.drain(None, "placement"), router.drain(Some(0), "router")]
+    }
+
+    #[test]
+    fn export_round_trips_and_conserves() {
+        let doc = chrome_trace(&demo_shards(), "virtual");
+        let text = doc.to_string_pretty();
+        let parsed = json::parse(&text).expect("valid JSON");
+        assert_eq!(parsed, doc);
+        assert_eq!(check_conservation(&parsed), Ok(1));
+        // ts is rebased: the earliest event lands at 0
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let min_ts = evs
+            .iter()
+            .filter_map(|e| e.get("ts").and_then(Json::as_f64))
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(min_ts, 0.0);
+    }
+
+    #[test]
+    fn missing_terminal_fails_conservation() {
+        let mut sink = TraceSink::ring(16);
+        sink.record(0, EventKind::Queued { id: 5 });
+        let doc = chrome_trace(&[sink.drain(Some(0), "router")], "virtual");
+        assert!(check_conservation(&doc).is_err());
+    }
+
+    #[test]
+    fn front_door_gets_its_own_pid() {
+        let doc = chrome_trace(&demo_shards(), "virtual");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("process_name"))
+            .filter_map(|e| e.path(&["args", "name"]).and_then(Json::as_str))
+            .collect();
+        assert!(names.contains(&"front-door"));
+        assert!(names.contains(&"shard 0"));
+        // front door pid sits one past the largest shard pid
+        let front = evs
+            .iter()
+            .find(|e| {
+                e.path(&["args", "name"]).and_then(Json::as_str)
+                    == Some("front-door")
+            })
+            .unwrap();
+        assert_eq!(front.get("pid").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn derived_request_span_pairs_b_and_e() {
+        let doc = chrome_trace(&demo_shards(), "virtual");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let b = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("b"))
+            .count();
+        let e = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("e"))
+            .count();
+        assert_eq!((b, e), (1, 1));
+    }
+}

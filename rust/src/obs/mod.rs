@@ -1,0 +1,25 @@
+//! Observability: request-lifecycle span tracing, per-thread ring-buffer
+//! sinks, Chrome/Perfetto trace export, and the unified metrics registry.
+//!
+//! This is the telemetry substrate for the serving stack.  The hot router
+//! loops record typed [`Event`]s into a per-thread [`TraceSink`] (a no-op
+//! when tracing is off); drained [`TraceShard`]s merge into one
+//! `moepim.spans.v1` Chrome trace-event document via
+//! [`export::chrome_trace`] (`--trace-out`); and [`MetricsRegistry`]
+//! renders the same run as a Prometheus-style text snapshot
+//! (`--metrics-file`) and as the `metrics` section of the SLO reports.
+//!
+//! Clock domains: `Server`/`Cluster` stamp events with [`span::now_ns`]
+//! (process-global monotonic); the virtual simulator stamps them with its
+//! own event clock, so virtual traces are byte-identical per seed.  See
+//! DESIGN.md §Observability for the event taxonomy and schema tables.
+
+pub mod export;
+pub mod registry;
+pub mod sink;
+pub mod span;
+
+pub use export::{chrome_trace, check_conservation, SPANS_SCHEMA};
+pub use registry::MetricsRegistry;
+pub use sink::{TraceShard, TraceSink, DEFAULT_CAPACITY};
+pub use span::{now_ns, Event, EventKind, SpanOutcome};

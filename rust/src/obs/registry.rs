@@ -1,0 +1,191 @@
+//! Unified metrics registry: named counters / gauges / latency summaries.
+//!
+//! One [`MetricsRegistry`] holds everything a run wants to expose, keyed
+//! by metric name in ordered maps, and renders two deterministic views of
+//! the same data:
+//!
+//! * [`MetricsRegistry::render_text`] — a Prometheus-style text snapshot
+//!   (`# HELP` / `# TYPE` plus samples; histograms as summaries with
+//!   `quantile` labels) for `--metrics-file` and the `moepim serve`
+//!   shutdown dump;
+//! * [`MetricsRegistry::to_json`] — the additive `metrics` section
+//!   embedded in the v1/v2 SLO reports.
+//!
+//! Latency distributions reuse [`LatencyHistogram`] (log-bucketed,
+//! mergeable), so the registry's quantiles are exactly the report's.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::workload::hist::LatencyHistogram;
+
+/// Summary quantiles rendered for every histogram.
+const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")];
+
+/// A named collection of counters, gauges, and latency summaries.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, (String, u64)>,
+    gauges: BTreeMap<String, (String, f64)>,
+    hists: BTreeMap<String, (String, LatencyHistogram)>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `v` to the counter `name` (registered with `help` on first use).
+    pub fn counter(&mut self, name: &str, help: &str, v: u64) {
+        let entry = self
+            .counters
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), 0));
+        entry.1 += v;
+    }
+
+    /// Set the gauge `name` to `v` (registered with `help` on first use).
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.gauges.insert(name.to_string(), (help.to_string(), v));
+    }
+
+    /// Merge `hist` into the summary `name` (registered with `help` on
+    /// first use) — merging is exact on the bucket level.
+    pub fn histogram(&mut self, name: &str, help: &str, hist: &LatencyHistogram) {
+        let entry = self
+            .hists
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), LatencyHistogram::new()));
+        entry.1.merge(hist);
+    }
+
+    /// Prometheus-style text exposition of the whole registry.  Ordered by
+    /// metric name within each family kind, so the snapshot is
+    /// deterministic for deterministic inputs.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, (help, v)) in &self.counters {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, (help, v)) in &self.gauges {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, (help, h)) in &self.hists {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (q, label) in QUANTILES {
+                out.push_str(&format!(
+                    "{name}{{quantile=\"{label}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_sum {}\n",
+                h.mean_us() * h.count() as f64
+            ));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
+    }
+
+    /// The registry as a JSON object — the `metrics` section of the SLO
+    /// reports.  Counters and gauges map name → value; summaries map
+    /// name → `{count, mean_us, p50_us, p95_us, p99_us, max_us}`.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, (_, v))| (k.clone(), Json::num(*v as f64)))
+            .collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, (_, v))| (k.clone(), Json::num(*v)))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, (_, h))| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("max_us", Json::num(h.max_us())),
+                        ("mean_us", Json::num(h.mean_us())),
+                        ("p50_us", Json::num(h.quantile(0.5))),
+                        ("p95_us", Json::num(h.quantile(0.95))),
+                        ("p99_us", Json::num(h.quantile(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("summaries", Json::Obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("moepim_requests_total", "requests submitted", 8);
+        reg.counter("moepim_requests_total", "requests submitted", 2);
+        reg.gauge("moepim_peak_waiting", "admission queue high-water mark", 3.0);
+        let mut h = LatencyHistogram::new();
+        for v in [10.0, 20.0, 30.0] {
+            h.record(v);
+        }
+        reg.histogram("moepim_e2e_us", "end-to-end latency", &h);
+        reg
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let reg = demo();
+        let j = reg.to_json();
+        assert_eq!(
+            j.path(&["counters", "moepim_requests_total"])
+                .and_then(Json::as_f64),
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn text_render_is_deterministic_and_complete() {
+        let a = demo().render_text();
+        let b = demo().render_text();
+        assert_eq!(a, b);
+        assert!(a.contains("# TYPE moepim_requests_total counter"));
+        assert!(a.contains("moepim_requests_total 10"));
+        assert!(a.contains("# TYPE moepim_peak_waiting gauge"));
+        assert!(a.contains("# TYPE moepim_e2e_us summary"));
+        assert!(a.contains("moepim_e2e_us{quantile=\"0.99\"}"));
+        assert!(a.contains("moepim_e2e_us_count 3"));
+        assert!(a.contains("moepim_e2e_us_sum 60"));
+    }
+
+    #[test]
+    fn histogram_merge_is_cumulative() {
+        let mut reg = MetricsRegistry::new();
+        let mut h1 = LatencyHistogram::new();
+        h1.record(5.0);
+        let mut h2 = LatencyHistogram::new();
+        h2.record(7.0);
+        reg.histogram("m", "help", &h1);
+        reg.histogram("m", "help", &h2);
+        assert_eq!(
+            reg.to_json().path(&["summaries", "m", "count"]).and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+}

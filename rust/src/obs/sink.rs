@@ -1,0 +1,168 @@
+//! Bounded per-thread ring-buffer trace sink.
+//!
+//! Each router / placement thread owns one [`TraceSink`] and records into
+//! it without any locking or I/O; sinks are drained into [`TraceShard`]s
+//! at shutdown and merged by the exporter.  When tracing is off the sink
+//! is a no-op whose [`TraceSink::record`] is a single branch — the hot
+//! router loop pays nothing.
+//!
+//! The ring is bounded (default [`DEFAULT_CAPACITY`] events) with
+//! drop-oldest semantics: under overflow the newest events are kept (the
+//! tail of a run is where terminals live) and the number of discarded
+//! events is carried through to the export as `dropped_events`.
+
+use std::collections::VecDeque;
+
+use super::span::{Event, EventKind};
+
+/// Default ring capacity per sink (events).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// The drained contents of one sink: the thread's surviving events plus
+/// where they came from.
+#[derive(Debug, Clone)]
+pub struct TraceShard {
+    /// Backend shard index, or `None` for the cluster front door.
+    pub shard: Option<usize>,
+    /// Thread label (`"router"`, `"placement"`, `"vsim"`, …).
+    pub thread: &'static str,
+    /// Surviving events in record order (oldest first).
+    pub events: Vec<Event>,
+    /// Events discarded by ring overflow (drop-oldest).
+    pub dropped_events: u64,
+}
+
+/// A per-thread event sink: either off (no-op) or a bounded ring.
+#[derive(Debug)]
+pub struct TraceSink {
+    ring: Option<Ring>,
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: VecDeque<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceSink {
+    /// A disabled sink: every record is a no-op.
+    pub fn off() -> TraceSink {
+        TraceSink { ring: None }
+    }
+
+    /// An enabled sink holding at most `cap` events (drop-oldest).
+    /// `cap == 0` falls back to [`DEFAULT_CAPACITY`].
+    pub fn ring(cap: usize) -> TraceSink {
+        let cap = if cap == 0 { DEFAULT_CAPACITY } else { cap };
+        TraceSink {
+            ring: Some(Ring { buf: VecDeque::new(), cap, dropped: 0 }),
+        }
+    }
+
+    /// Enabled sink at the default capacity when `on`, otherwise off.
+    pub fn on(on: bool) -> TraceSink {
+        if on {
+            TraceSink::ring(DEFAULT_CAPACITY)
+        } else {
+            TraceSink::off()
+        }
+    }
+
+    /// `true` iff events are being kept.  Use to gate any extra work spent
+    /// only on computing event payloads.
+    pub fn enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Record an instant event at `t_ns`.
+    #[inline]
+    pub fn record(&mut self, t_ns: u64, kind: EventKind) {
+        self.record_span(t_ns, 0, kind);
+    }
+
+    /// Record a span event covering `[t_ns, t_ns + dur_ns)`.
+    #[inline]
+    pub fn record_span(&mut self, t_ns: u64, dur_ns: u64, kind: EventKind) {
+        if let Some(ring) = &mut self.ring {
+            if ring.buf.len() == ring.cap {
+                ring.buf.pop_front();
+                ring.dropped += 1;
+            }
+            ring.buf.push_back(Event { t_ns, dur_ns, kind });
+        }
+    }
+
+    /// Drain the surviving events into a [`TraceShard`] tagged with its
+    /// origin.  The sink is left empty (and still enabled/disabled as
+    /// before); a disabled sink drains to an empty shard.
+    pub fn drain(
+        &mut self,
+        shard: Option<usize>,
+        thread: &'static str,
+    ) -> TraceShard {
+        match &mut self.ring {
+            Some(ring) => TraceShard {
+                shard,
+                thread,
+                events: std::mem::take(&mut ring.buf).into(),
+                dropped_events: std::mem::take(&mut ring.dropped),
+            },
+            None => {
+                TraceShard { shard, thread, events: Vec::new(), dropped_events: 0 }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanOutcome;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut sink = TraceSink::off();
+        assert!(!sink.enabled());
+        sink.record(1, EventKind::Queued { id: 1 });
+        let shard = sink.drain(Some(0), "router");
+        assert!(shard.events.is_empty());
+        assert_eq!(shard.dropped_events, 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let mut sink = TraceSink::ring(4);
+        for id in 0..10u64 {
+            sink.record(id, EventKind::Queued { id });
+        }
+        sink.record(
+            10,
+            EventKind::Terminal { id: 9, outcome: SpanOutcome::Ok },
+        );
+        let shard = sink.drain(None, "test");
+        // 11 recorded into a 4-slot ring: 7 dropped, newest 4 kept in order
+        assert_eq!(shard.dropped_events, 7);
+        assert_eq!(shard.events.len(), 4);
+        assert_eq!(shard.events[0].kind, EventKind::Queued { id: 7 });
+        assert_eq!(
+            shard.events[3].kind,
+            EventKind::Terminal { id: 9, outcome: SpanOutcome::Ok }
+        );
+    }
+
+    #[test]
+    fn drain_resets_but_keeps_enabled() {
+        let mut sink = TraceSink::ring(8);
+        sink.record(0, EventKind::Queued { id: 0 });
+        assert_eq!(sink.drain(Some(1), "router").events.len(), 1);
+        assert!(sink.enabled());
+        assert!(sink.drain(Some(1), "router").events.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_falls_back_to_default() {
+        let sink = TraceSink::ring(0);
+        assert!(sink.enabled());
+    }
+}

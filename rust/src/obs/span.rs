@@ -1,0 +1,205 @@
+//! Typed request-lifecycle and router-cycle trace events.
+//!
+//! One [`Event`] is a timestamped point (or span, when `dur_ns > 0`) in a
+//! request's life or in a router thread's cycle loop.  The same event
+//! vocabulary is recorded in three places:
+//!
+//! * the real [`crate::coordinator::Server`] router thread and the
+//!   [`crate::coordinator::Cluster`] placement thread, stamped on the
+//!   process-global monotonic clock ([`now_ns`]);
+//! * the virtual-time simulator (`workload::vsim`), stamped on the virtual
+//!   event clock directly — so a virtual trace dump is byte-identical
+//!   across reruns at the same seed.
+//!
+//! The numbers carried by each variant are deliberately plain (`u64` /
+//! `usize`) so recording is a couple of field copies on the hot path; all
+//! string rendering happens at export time (`obs::export`).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// How a request left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Finished with a full token stream.
+    Ok,
+    /// Finished with a terminal error (engine failure, rejected size, …).
+    Error,
+    /// Shed by backpressure before reaching a slot (immediate terminal
+    /// `overloaded` reply).
+    Shed,
+}
+
+impl SpanOutcome {
+    /// Stable label used in the exported trace (`args.outcome`).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanOutcome::Ok => "ok",
+            SpanOutcome::Error => "error",
+            SpanOutcome::Shed => "shed",
+        }
+    }
+}
+
+/// The event vocabulary — request-lifecycle points plus router-cycle spans
+/// and queue-depth counter samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the cluster front door's intake queue.
+    Intake {
+        /// Request id.
+        id: u64,
+    },
+    /// The placement thread picked a backend shard for the request.
+    Placed {
+        /// Request id.
+        id: u64,
+        /// Chosen backend shard.
+        shard: usize,
+    },
+    /// Request entered a server's admission queue.
+    Queued {
+        /// Request id.
+        id: u64,
+    },
+    /// The admission policy granted the request a batch slot.
+    SlotGrant {
+        /// Request id.
+        id: u64,
+        /// Granted slot index.
+        slot: usize,
+    },
+    /// One chunked-prefill advance for a filling slot.
+    PrefillChunk {
+        /// Request id.
+        id: u64,
+        /// Slot being filled.
+        slot: usize,
+        /// Prompt tokens consumed by this chunk.
+        advanced: usize,
+        /// Prompt tokens still to prefill after this chunk.
+        remaining: usize,
+    },
+    /// First generated token left the slot (TTFT point).
+    FirstToken {
+        /// Request id.
+        id: u64,
+    },
+    /// Terminal reply sent — exactly one per submitted request.
+    Terminal {
+        /// Request id.
+        id: u64,
+        /// How the request left the system.
+        outcome: SpanOutcome,
+    },
+    /// One router cycle (recorded as a span: `dur_ns` covers the cycle).
+    Cycle {
+        /// Monotone per-router cycle counter.
+        index: u64,
+        /// Slots holding live decode sessions this cycle.
+        live: usize,
+        /// Slots still prefilling (chunked admission) this cycle.
+        filling: usize,
+        /// Requests still waiting in the admission queue.
+        waiting: usize,
+        /// Planner layer steps dispatched this cycle.
+        layer_steps: usize,
+        /// Planner crossbar cycles priced for this router cycle.
+        plan_cycles: u64,
+        /// Contention (peripheral-sharing stall) cycles within them.
+        contention: u64,
+    },
+    /// Queue-depth counter sample (rendered as a Perfetto counter track).
+    Depth {
+        /// Admission-queue depth.
+        waiting: usize,
+        /// Live decode slots.
+        live: usize,
+        /// Filling (chunked-prefill) slots.
+        filling: usize,
+        /// Front-door intake depth (0 on plain servers).
+        intake: usize,
+    },
+}
+
+impl EventKind {
+    /// Stable event name used in the exported trace.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Intake { .. } => "intake",
+            EventKind::Placed { .. } => "placed",
+            EventKind::Queued { .. } => "queued",
+            EventKind::SlotGrant { .. } => "slot_grant",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Terminal { .. } => "terminal",
+            EventKind::Cycle { .. } => "cycle",
+            EventKind::Depth { .. } => "depth",
+        }
+    }
+
+    /// The request id this event belongs to, if it is a lifecycle event.
+    pub fn request_id(&self) -> Option<u64> {
+        match *self {
+            EventKind::Intake { id }
+            | EventKind::Placed { id, .. }
+            | EventKind::Queued { id }
+            | EventKind::SlotGrant { id, .. }
+            | EventKind::PrefillChunk { id, .. }
+            | EventKind::FirstToken { id }
+            | EventKind::Terminal { id, .. } => Some(id),
+            EventKind::Cycle { .. } | EventKind::Depth { .. } => None,
+        }
+    }
+}
+
+/// One recorded trace event: a timestamp (ns, clock domain owned by the
+/// recorder), an optional duration, and the typed payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Event timestamp in nanoseconds (virtual clock or [`now_ns`]).
+    pub t_ns: u64,
+    /// Span duration in nanoseconds (0 for instant events).
+    pub dur_ns: u64,
+    /// The typed payload.
+    pub kind: EventKind,
+}
+
+/// Process-global epoch for real-clock tracing.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-global trace epoch (first call wins).
+///
+/// Monotonic (`Instant`-backed) and shared across threads, so server
+/// router threads and the cluster placement thread stamp events on one
+/// comparable axis — per-thread epochs would misalign the merged trace.
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_id_covers_lifecycle_events_only() {
+        assert_eq!(EventKind::Queued { id: 7 }.request_id(), Some(7));
+        assert_eq!(
+            EventKind::Terminal { id: 9, outcome: SpanOutcome::Shed }
+                .request_id(),
+            Some(9)
+        );
+        assert_eq!(
+            EventKind::Depth { waiting: 0, live: 0, filling: 0, intake: 0 }
+                .request_id(),
+            None
+        );
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

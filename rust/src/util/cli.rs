@@ -35,6 +35,9 @@ subcommands (moepim <subcommand> --help for flags):
   calibrate [flags]     fit VirtualConfig cost constants against a
                         recorded moepim.trace.v1 run -> JSON
                         moepim.calibration.v1 with a fit-quality report
+  perfcmp OLD NEW       compare two BENCH_*.json perf artifacts leg by
+                        leg; exit 3 on regression beyond --threshold
+                        (CI's perf-trajectory gate)
 
 common flags: --group-size N --grouping U|S --sched T|C|O --kv --go
               --prompt N --gen N --seed N --routing token|expert --skew X
@@ -59,11 +62,31 @@ moepim trace [--tokens N] [--skew X] [--seed N] [--routing token|expert]";
     /// `moepim serve` flags.
     pub const SERVE: &str = "\
 moepim serve [--prompts N] [--gen N] [--prefill-chunk N] [--artifacts DIR]
+             [--trace-out FILE] [--metrics-file FILE]
 
   --prefill-chunk N   chunked prefill: admit prompts into slots at most N
                       tokens per router cycle, interleaved with decode
                       (0 = monolithic prefill, the default); output token
-                      streams are bit-identical either way";
+                      streams are bit-identical either way
+  on shutdown the full ServerStats dump is printed (the same pretty-printer
+  the shardtest paths use)";
+
+    /// Observability flags shared by `serve`, `loadtest`, and `shardtest`.
+    pub const OBS_FLAGS: &str = "\
+observability flags:
+  --trace-out FILE    dump the request-lifecycle span trace as a Chrome
+                      trace-event JSON document (moepim.spans.v1 — load
+                      it in Perfetto / chrome://tracing; pid = shard,
+                      tid = router thread, counter tracks for queue
+                      depths).  Virtual-clock traces are byte-identical
+                      per seed; real traces stamp one process-global
+                      monotonic clock across all router threads.  Spans
+                      are off — and cost nothing on the hot path —
+                      without this flag.
+  --metrics-file FILE write a Prometheus-style text snapshot of the run's
+                      counters, gauges, and latency summaries on
+                      shutdown (the same unified registry embedded as
+                      the `metrics` section of the SLO reports)";
 
     /// `moepim generate` flags.
     pub const GENERATE: &str = "\
@@ -167,6 +190,23 @@ moepim shardtest [--shards N] [--placement P] [--virtual | --real]
   a floor of one user per request-holding shard, so keep --users >= N
   when the concurrency level itself is under study";
 
+    /// `moepim perfcmp` flags.
+    pub const PERFCMP: &str = "\
+moepim perfcmp OLD.json NEW.json [--threshold PCT]
+
+  compare two bench artifacts of the same schema (BENCH_scenarios.json
+  or BENCH_cluster.json) leg by leg: tokens_per_s (higher is better)
+  and p50/p99 end-to-end latency (lower is better).  Legs present in
+  only one artifact are skipped — a new scenario is not a regression.
+  CI runs this between the committed baseline and the freshly benched
+  artifact.
+
+  --threshold PCT   regression threshold in percent (default 10)
+
+  exit codes: 0 = no regression, 3 = at least one shared metric
+  regressed beyond the threshold, 1/2 = unreadable or incomparable
+  input";
+
     /// The usage text for `name`, if it is a known subcommand.
     pub fn for_subcommand(name: &str) -> Option<&'static str> {
         match name {
@@ -178,16 +218,20 @@ moepim shardtest [--shards N] [--placement P] [--virtual | --real]
             "loadtest" => Some(LOADTEST),
             "shardtest" => Some(SHARDTEST),
             "calibrate" => Some(CALIBRATE),
+            "perfcmp" => Some(PERFCMP),
             _ => None,
         }
     }
 
     /// Full help text for `name`: the subcommand usage, with the shared
-    /// workload-flag block appended for the load-generating subcommands
-    /// (so those flags are documented exactly once).
+    /// workload-flag and observability-flag blocks appended where they
+    /// apply (so those flags are documented exactly once).
     pub fn help_for(name: &str) -> Option<String> {
         for_subcommand(name).map(|u| match name {
-            "loadtest" | "shardtest" => format!("{u}\n\n{WORKLOAD_FLAGS}"),
+            "loadtest" | "shardtest" => {
+                format!("{u}\n\n{WORKLOAD_FLAGS}\n\n{OBS_FLAGS}")
+            }
+            "serve" => format!("{u}\n\n{OBS_FLAGS}"),
             _ => u.to_string(),
         })
     }
@@ -316,7 +360,7 @@ mod tests {
     fn usage_covers_every_subcommand() {
         for sub in [
             "eval", "simulate", "trace", "serve", "generate", "loadtest",
-            "shardtest", "calibrate",
+            "shardtest", "calibrate", "perfcmp",
         ] {
             assert!(usage::ROOT.contains(sub), "root usage misses {sub}");
             assert!(
@@ -373,6 +417,24 @@ mod tests {
         assert!(usage::CALIBRATE.contains("moepim.calibration.v1"));
         assert!(usage::CALIBRATE.contains("cycle_ns"));
         assert_eq!(usage::for_subcommand("calibrate"), Some(usage::CALIBRATE));
+    }
+
+    #[test]
+    fn usage_documents_the_observability_surface() {
+        // --trace-out / --metrics-file ride the shared block on every
+        // subcommand that spawns a traced run; perfcmp documents its
+        // regression exit code
+        for sub in ["serve", "loadtest", "shardtest"] {
+            let help = usage::help_for(sub).expect("known subcommand");
+            assert!(help.contains("--trace-out"), "{sub}");
+            assert!(help.contains("--metrics-file"), "{sub}");
+        }
+        assert!(usage::OBS_FLAGS.contains("moepim.spans.v1"));
+        assert!(usage::OBS_FLAGS.contains("byte-identical"));
+        assert!(usage::PERFCMP.contains("--threshold"));
+        assert!(usage::PERFCMP.contains("exit codes"));
+        assert!(usage::ROOT.contains("perfcmp"));
+        assert_eq!(usage::for_subcommand("perfcmp"), Some(usage::PERFCMP));
     }
 
     #[test]

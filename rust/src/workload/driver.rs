@@ -159,9 +159,12 @@ pub fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
 
 /// Run `spec` against a live server and collect every terminal reply.
 ///
-/// The returned telemetry snapshot (`planner`, dispatch counters,
-/// `peak_waiting`) is the server's *lifetime* view — on a freshly spawned
-/// server it describes exactly this experiment.
+/// Counter telemetry (`planner`, dispatch counters, sheds) is reported as
+/// the *delta* across this run — a stats snapshot is taken before the
+/// first submit and subtracted from the end-of-run snapshot — so driving
+/// a reused server yields the same outcome a fresh server would.
+/// `peak_waiting` is the one lifetime view left: it is a high-water mark,
+/// not a counter, and cannot be differenced.
 pub fn run_against_server(server: &Server, spec: &WorkloadSpec)
     -> Result<LoadOutcome> {
     run_requests_against_server(server, spec, &spec.materialize())
@@ -174,24 +177,35 @@ pub fn run_against_server(server: &Server, spec: &WorkloadSpec)
 /// once, partitioned, and each shard's server is driven with its subset
 /// (arrival offsets are kept from the global timeline).  The outcome's
 /// `shard` tag is inherited from the server's
-/// [`crate::coordinator::ServerStats::shard`].
+/// [`crate::coordinator::ServerStats::shard`], and counters are
+/// differenced against a pre-run snapshot (see [`run_against_server`]).
 pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
                                    reqs: &[RequestSpec])
     -> Result<LoadOutcome> {
+    let before = server.stats()?;
     let t0 = Instant::now();
     let samples = drive(|r| server.submit(r), spec, reqs)?;
     let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
     let stats = server.stats()?;
+    let planner = PlannerStats {
+        steps: stats.planner.steps - before.planner.steps,
+        work: stats.planner.work - before.planner.work,
+        cycles: stats.planner.cycles - before.planner.cycles,
+        contention_cycles: stats.planner.contention_cycles
+            - before.planner.contention_cycles,
+        transfers: stats.planner.transfers - before.planner.transfers,
+    };
     Ok(LoadOutcome {
         samples,
-        planner: stats.planner,
+        planner,
         slots: stats.slots,
         peak_waiting: stats.peak_waiting,
-        batch_dispatches: stats.batch_dispatches,
-        batched_tokens: stats.batched_tokens,
-        single_dispatches: stats.single_dispatches,
-        prefill_chunks: stats.prefill_chunks,
-        shed_requests: stats.shed_requests,
+        batch_dispatches: stats.batch_dispatches - before.batch_dispatches,
+        batched_tokens: stats.batched_tokens - before.batched_tokens,
+        single_dispatches: stats.single_dispatches
+            - before.single_dispatches,
+        prefill_chunks: stats.prefill_chunks - before.prefill_chunks,
+        shed_requests: stats.shed_requests - before.shed_requests,
         peak_intake_depth: 0,
         first_dispatch_unix_us: stats.first_dispatch_unix_us,
         last_dispatch_unix_us: stats.last_dispatch_unix_us,

@@ -41,7 +41,10 @@
 //!   with a re-prediction accuracy report;
 //! * [`scenario`] — named, seeded [`WorkloadSpec`] presets (`diurnal`,
 //!   `flash-crowd`, `long-prompt-flood`, `mixed-tenants`) for
-//!   `loadtest --scenario`.
+//!   `loadtest --scenario`;
+//! * [`perfcmp`] — cross-PR perf-trajectory comparison of successive
+//!   `BENCH_*.json` artifacts (`moepim perfcmp OLD NEW`, regression
+//!   threshold exit code for CI).
 //!
 //! Entry points: `moepim loadtest` / `moepim shardtest` /
 //! `moepim calibrate` (CLI), `cargo bench --bench loadgen`,
@@ -54,6 +57,7 @@ pub mod arrival;
 pub mod calibrate;
 pub mod driver;
 pub mod hist;
+pub mod perfcmp;
 pub mod policy;
 pub mod record;
 pub mod report;
@@ -72,12 +76,17 @@ pub use policy::{AdmissionPolicy, QueuedMeta};
 pub use record::{
     RecordedTrace, TraceBackend, TraceRecorder, TraceRequest, TRACE_SCHEMA,
 };
-pub use report::{summarize, SloSummary};
+pub use report::{
+    metrics_registry, metrics_registry_merged, summarize, SloSummary,
+};
 pub use scenario::{scenario_names, scenario_spec, SCENARIOS};
 pub use shard::{
     run_against_cluster, Imbalance, MergedLoad, PlacementPolicy,
     ShardLoad, ShardOutcome, ShardedDriver, ShardedRun,
 };
+pub use perfcmp::{compare as perf_compare, PerfDelta, DEFAULT_THRESHOLD_PCT};
 pub use vsim::{
-    run_virtual, run_virtual_live, run_virtual_requests, VirtualConfig,
+    run_virtual, run_virtual_live, run_virtual_live_traced,
+    run_virtual_requests, run_virtual_requests_traced, run_virtual_traced,
+    VirtualConfig,
 };

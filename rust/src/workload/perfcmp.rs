@@ -1,0 +1,273 @@
+//! Cross-PR perf-trajectory comparison of `BENCH_*.json` artifacts.
+//!
+//! `moepim perfcmp OLD.json NEW.json` loads two successive bench
+//! artifacts — `moepim.bench_cluster.v1` (`shardtest --bench-cluster`) or
+//! `moepim.bench_scenarios.v1` (`loadtest --bench-scenarios`) — matches
+//! their legs by name, and reports per-metric deltas.  A leg regresses
+//! when throughput (`tokens_per_s`, higher-better) drops or tail latency
+//! (`p50_e2e_us` / `p99_e2e_us`, lower-better) rises by more than the
+//! threshold; the CLI exits non-zero on any regression so CI can gate on
+//! a committed baseline.
+//!
+//! The scenario bench runs on the virtual clock, so its numbers are
+//! deterministic per seed and a committed baseline compares exactly; the
+//! cluster bench is wall-clock and should be read as a trajectory, not a
+//! gate.
+
+use crate::util::json::Json;
+
+/// Default regression threshold (percent change of a leg metric).
+pub const DEFAULT_THRESHOLD_PCT: f64 = 10.0;
+
+/// One metric compared between matching legs of two bench artifacts.
+#[derive(Debug, Clone)]
+pub struct PerfDelta {
+    /// Leg name (`scenario` or `mode` field of the leg).
+    pub leg: String,
+    /// Metric name (`tokens_per_s`, `p99_e2e_us`, …).
+    pub metric: String,
+    /// Value in the old artifact.
+    pub old: f64,
+    /// Value in the new artifact.
+    pub new: f64,
+    /// Percent change `(new - old) / old * 100`.
+    pub delta_pct: f64,
+    /// `true` iff the change is a regression beyond the threshold.
+    pub regression: bool,
+}
+
+/// `(metric name, higher_is_better)` pairs compared when present in both
+/// legs.
+const METRICS: [(&str, bool); 3] = [
+    ("tokens_per_s", true),
+    ("p50_e2e_us", false),
+    ("p99_e2e_us", false),
+];
+
+fn leg_name(leg: &Json, index: usize) -> String {
+    for key in ["scenario", "mode"] {
+        if let Some(name) = leg.get(key).and_then(Json::as_str) {
+            return name.to_string();
+        }
+    }
+    format!("leg{index}")
+}
+
+fn legs_of(doc: &Json, which: &str) -> Result<Vec<(String, Json)>, String> {
+    // bench_cluster stores its legs under `legs`, bench_scenarios under
+    // `scenarios`; both are leg arrays to the comparison
+    let legs = doc
+        .get("legs")
+        .or_else(|| doc.get("scenarios"))
+        .and_then(Json::as_arr)
+        .ok_or_else(|| {
+            format!("{which}: no `legs`/`scenarios` array — not a bench artifact")
+        })?;
+    Ok(legs
+        .iter()
+        .enumerate()
+        .map(|(i, leg)| (leg_name(leg, i), leg.clone()))
+        .collect())
+}
+
+/// Compare two bench artifacts leg by leg.  Legs are matched by name;
+/// legs present in only one artifact are skipped (a new scenario is not a
+/// regression).  Returns one [`PerfDelta`] per (shared leg, metric
+/// present in both).
+pub fn compare(
+    old: &Json,
+    new: &Json,
+    threshold_pct: f64,
+) -> Result<Vec<PerfDelta>, String> {
+    let old_schema = old.get("schema").and_then(Json::as_str).unwrap_or("");
+    let new_schema = new.get("schema").and_then(Json::as_str).unwrap_or("");
+    if old_schema != new_schema {
+        return Err(format!(
+            "schema mismatch: old is {old_schema:?}, new is {new_schema:?}"
+        ));
+    }
+    let old_legs = legs_of(old, "old")?;
+    let new_legs = legs_of(new, "new")?;
+    let mut deltas = Vec::new();
+    for (name, old_leg) in &old_legs {
+        let Some((_, new_leg)) = new_legs.iter().find(|(n, _)| n == name)
+        else {
+            continue;
+        };
+        for (metric, higher_better) in METRICS {
+            let (Some(a), Some(b)) = (
+                old_leg.get(metric).and_then(Json::as_f64),
+                new_leg.get(metric).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if !(a.is_finite() && b.is_finite()) || a <= 0.0 {
+                continue;
+            }
+            let delta_pct = (b - a) / a * 100.0;
+            let regression = if higher_better {
+                delta_pct < -threshold_pct
+            } else {
+                delta_pct > threshold_pct
+            };
+            deltas.push(PerfDelta {
+                leg: name.clone(),
+                metric: metric.to_string(),
+                old: a,
+                new: b,
+                delta_pct,
+                regression,
+            });
+        }
+    }
+    if deltas.is_empty() {
+        return Err("no comparable legs/metrics between the artifacts".into());
+    }
+    Ok(deltas)
+}
+
+/// Render the comparison as an aligned text table (one line per delta,
+/// regressions flagged).
+pub fn render(deltas: &[PerfDelta]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<20} {:<14} {:>12} {:>12} {:>9}\n",
+        "leg", "metric", "old", "new", "delta"
+    ));
+    for d in deltas {
+        out.push_str(&format!(
+            "{:<20} {:<14} {:>12.2} {:>12.2} {:>+8.2}% {}\n",
+            d.leg,
+            d.metric,
+            d.old,
+            d.new,
+            d.delta_pct,
+            if d.regression { "REGRESSION" } else { "" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario_doc(tps: f64, p99: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("moepim.bench_scenarios.v1")),
+            (
+                "legs",
+                Json::arr([Json::obj(vec![
+                    ("scenario", Json::str("diurnal")),
+                    ("tokens_per_s", Json::num(tps)),
+                    ("p50_e2e_us", Json::num(p99 / 2.0)),
+                    ("p99_e2e_us", Json::num(p99)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_artifacts_have_no_regression() {
+        let doc = scenario_doc(1000.0, 5000.0);
+        let deltas = compare(&doc, &doc, DEFAULT_THRESHOLD_PCT).unwrap();
+        assert_eq!(deltas.len(), 3);
+        assert!(deltas.iter().all(|d| !d.regression));
+        assert!(deltas.iter().all(|d| d.delta_pct == 0.0));
+    }
+
+    #[test]
+    fn throughput_drop_beyond_threshold_regresses() {
+        let old = scenario_doc(1000.0, 5000.0);
+        let new = scenario_doc(800.0, 5000.0);
+        let deltas = compare(&old, &new, 10.0).unwrap();
+        let tps = deltas.iter().find(|d| d.metric == "tokens_per_s").unwrap();
+        assert!(tps.regression);
+        assert!((tps.delta_pct + 20.0).abs() < 1e-9);
+        // within threshold: not a regression
+        let new_ok = scenario_doc(950.0, 5000.0);
+        let deltas = compare(&old, &new_ok, 10.0).unwrap();
+        assert!(deltas.iter().all(|d| !d.regression));
+    }
+
+    #[test]
+    fn latency_rise_beyond_threshold_regresses() {
+        let old = scenario_doc(1000.0, 5000.0);
+        let new = scenario_doc(1000.0, 6000.0);
+        let deltas = compare(&old, &new, 10.0).unwrap();
+        let p99 = deltas.iter().find(|d| d.metric == "p99_e2e_us").unwrap();
+        assert!(p99.regression);
+        // latency *improvement* is never a regression
+        let faster = scenario_doc(1000.0, 2000.0);
+        let deltas = compare(&old, &faster, 10.0).unwrap();
+        assert!(deltas.iter().all(|d| !d.regression));
+    }
+
+    #[test]
+    fn cluster_legs_match_by_mode() {
+        let doc = Json::obj(vec![
+            ("schema", Json::str("moepim.bench_cluster.v1")),
+            (
+                "legs",
+                Json::arr([
+                    Json::obj(vec![
+                        ("mode", Json::str("concurrent")),
+                        ("tokens_per_s", Json::num(500.0)),
+                    ]),
+                    Json::obj(vec![
+                        ("mode", Json::str("serial")),
+                        ("tokens_per_s", Json::num(250.0)),
+                    ]),
+                ]),
+            ),
+        ]);
+        let deltas = compare(&doc, &doc, 10.0).unwrap();
+        assert_eq!(deltas.len(), 2);
+        assert!(deltas.iter().any(|d| d.leg == "concurrent"));
+        assert!(deltas.iter().any(|d| d.leg == "serial"));
+    }
+
+    #[test]
+    fn scenarios_key_is_accepted() {
+        // the real BENCH_scenarios.json artifact keys its leg array as
+        // `scenarios`, not `legs`
+        let doc = Json::obj(vec![
+            ("schema", Json::str("moepim.bench_scenarios.v1")),
+            (
+                "scenarios",
+                Json::arr([Json::obj(vec![
+                    ("scenario", Json::str("diurnal")),
+                    ("tokens_per_s", Json::num(100.0)),
+                ])]),
+            ),
+        ]);
+        let deltas = compare(&doc, &doc, 10.0).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert!(!deltas[0].regression);
+    }
+
+    #[test]
+    fn schema_mismatch_and_missing_legs_error() {
+        let a = scenario_doc(1.0, 1.0);
+        let b = Json::obj(vec![("schema", Json::str("moepim.bench_cluster.v1"))]);
+        assert!(compare(&a, &b, 10.0).is_err());
+        let c = Json::obj(vec![
+            ("schema", Json::str("moepim.bench_scenarios.v1")),
+        ]);
+        assert!(compare(&c, &c, 10.0).is_err());
+        // disjoint leg names: nothing comparable
+        let d = Json::obj(vec![
+            ("schema", Json::str("moepim.bench_scenarios.v1")),
+            (
+                "legs",
+                Json::arr([Json::obj(vec![
+                    ("scenario", Json::str("other")),
+                    ("tokens_per_s", Json::num(1.0)),
+                ])]),
+            ),
+        ]);
+        assert!(compare(&a, &d, 10.0).is_err());
+        let render_out = render(&compare(&a, &a, 10.0).unwrap());
+        assert!(render_out.contains("tokens_per_s"));
+    }
+}

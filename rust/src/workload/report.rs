@@ -17,7 +17,8 @@
 //!   server{batch_dispatches, single_dispatches, mean_batch_occupancy,
 //!          prefill_chunks, peak_waiting, shed_requests,
 //!          peak_intake_depth},
-//!   planner{steps, work, cycles, transfers, contention_ratio} }
+//!   planner{steps, work, cycles, transfers, contention_ratio},
+//!   metrics{counters, gauges, summaries} }
 //! ```
 //!
 //! * **v2** ([`build_sharded`] / [`build_sharded_labeled`]) — a sharded
@@ -32,12 +33,14 @@
 //! `shed_requests`) are purely additive fields — every pre-existing path
 //! is unchanged (see DESIGN.md §Concurrent cluster).
 
+use crate::obs::MetricsRegistry;
+use crate::sched::PlannerStats;
 use crate::util::json::Json;
 use crate::workload::arrival::WorkloadSpec;
 use crate::workload::driver::LoadOutcome;
 use crate::workload::hist::LatencyHistogram;
 use crate::workload::policy::AdmissionPolicy;
-use crate::workload::shard::{self, ShardedDriver, ShardedRun};
+use crate::workload::shard::{self, MergedLoad, ShardedDriver, ShardedRun};
 
 /// Aggregated view of one experiment's samples.  Histograms cover
 /// successful requests (errored ones count against SLO attainment and in
@@ -113,6 +116,92 @@ pub fn summarize(spec: &WorkloadSpec, out: &LoadOutcome) -> SloSummary {
         tokens_per_s: tokens as f64 / dur,
         requests_per_s: n as f64 / dur,
     }
+}
+
+/// Fold one experiment into the unified [`MetricsRegistry`]: the
+/// counters/gauges/latency summaries rendered by `--metrics-file`
+/// (Prometheus text) and embedded as the additive `metrics` section of
+/// both report schemas.  Everything here derives deterministically from
+/// the outcome, so virtual-clock reports stay byte-identical per seed.
+pub fn metrics_registry(s: &SloSummary, out: &LoadOutcome)
+    -> MetricsRegistry {
+    registry_parts(s, out.slots, out.peak_waiting, out.peak_intake_depth,
+                   out.batch_dispatches, out.single_dispatches,
+                   out.mean_batch_occupancy(), out.prefill_chunks,
+                   out.shed_requests, &out.planner, out.duration_s)
+}
+
+/// [`metrics_registry`] over a sharded fan-out's [`MergedLoad`] — the
+/// cluster-wide registry behind `moepim shardtest --metrics-file` and the
+/// v2 report's `metrics` section.
+pub fn metrics_registry_merged(m: &MergedLoad) -> MetricsRegistry {
+    registry_parts(&m.summary, m.slots, m.peak_waiting,
+                   m.peak_intake_depth, m.batch_dispatches,
+                   m.single_dispatches, m.mean_batch_occupancy(),
+                   m.prefill_chunks, m.shed_requests, &m.planner,
+                   m.duration_s)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn registry_parts(s: &SloSummary, slots: usize, peak_waiting: usize,
+                  peak_intake_depth: usize, batch_dispatches: u64,
+                  single_dispatches: u64, occupancy: f64,
+                  prefill_chunks: u64, shed_requests: u64,
+                  planner: &PlannerStats, duration_s: f64)
+    -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    reg.counter("moepim_requests_completed_total",
+                "Requests that completed successfully", s.completed);
+    reg.counter("moepim_requests_errored_total",
+                "Requests that ended in a terminal error", s.errored);
+    reg.counter("moepim_requests_shed_total",
+                "Requests shed with a terminal overloaded error",
+                shed_requests);
+    reg.counter("moepim_tokens_generated_total",
+                "Generated tokens across completed requests", s.tokens);
+    reg.counter("moepim_batch_dispatches_total",
+                "Batched decode dispatches", batch_dispatches);
+    reg.counter("moepim_single_dispatches_total",
+                "Single-token fallback dispatches", single_dispatches);
+    reg.counter("moepim_prefill_chunks_total",
+                "Prefill chunk advances dispatched", prefill_chunks);
+    reg.counter("moepim_planner_steps_total",
+                "Layer steps priced by the batch planner", planner.steps);
+    reg.counter("moepim_planner_cycles_total",
+                "Planner-priced crossbar cycles", planner.cycles);
+    reg.counter("moepim_planner_contention_cycles_total",
+                "Planner-priced peripheral-contention cycles",
+                planner.contention_cycles);
+    reg.counter("moepim_planner_transfers_total",
+                "Planner-priced peripheral transfers", planner.transfers);
+    reg.gauge("moepim_slots", "Serving slots (batch width)",
+              slots as f64);
+    reg.gauge("moepim_peak_waiting",
+              "High-water mark of the admission queue",
+              peak_waiting as f64);
+    reg.gauge("moepim_peak_intake_depth",
+              "High-water mark of the cluster intake queue",
+              peak_intake_depth as f64);
+    reg.gauge("moepim_mean_batch_occupancy",
+              "Mean live slots per batched dispatch", occupancy);
+    reg.gauge("moepim_slo_attainment",
+              "Fraction of terminal requests inside the SLO target",
+              s.attainment);
+    reg.gauge("moepim_tokens_per_second",
+              "Generated tokens per second of experiment duration",
+              s.tokens_per_s);
+    reg.gauge("moepim_requests_per_second",
+              "Terminal requests per second of experiment duration",
+              s.requests_per_s);
+    reg.gauge("moepim_duration_seconds",
+              "Experiment wall/virtual duration", duration_s);
+    reg.histogram("moepim_queue_latency_us",
+                  "Submit-to-slot-admission latency (us)", &s.queue);
+    reg.histogram("moepim_ttft_latency_us",
+                  "Submit-to-first-token latency (us)", &s.ttft);
+    reg.histogram("moepim_e2e_latency_us",
+                  "Submit-to-terminal-reply latency (us)", &s.e2e);
+    reg
 }
 
 /// Build the full `moepim.slo_report.v1` document.
@@ -192,6 +281,10 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(round6(out.planner.contention_ratio()))),
             ]),
         ),
+        // additive: the unified registry view of the same run (see
+        // DESIGN.md §Observability); derived deterministically from the
+        // outcome, so virtual reports stay byte-identical per seed
+        ("metrics", metrics_registry(&s, out).to_json()),
     ])
 }
 
@@ -333,6 +426,8 @@ pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                  Json::num(round6(m.planner.contention_ratio()))),
             ]),
         ),
+        // additive: the cluster-wide registry view of the merged run
+        ("metrics", metrics_registry_merged(&m).to_json()),
         ("shards", Json::arr(shards_json)),
         (
             "imbalance",

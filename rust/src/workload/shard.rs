@@ -47,6 +47,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Cluster, Server, ServerOptions};
 
+use crate::obs::sink::{TraceShard, TraceSink};
 use crate::sched::PlannerStats;
 use crate::util::rng::splitmix64;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
@@ -57,7 +58,8 @@ use crate::workload::hist::LatencyHistogram;
 use crate::workload::policy::AdmissionPolicy;
 use crate::workload::report::{summarize, SloSummary};
 use crate::workload::vsim::{
-    route_rng, run_virtual_requests, sample_experts, VirtualConfig,
+    route_rng, run_virtual_requests, run_virtual_requests_traced,
+    sample_experts, VirtualConfig,
 };
 
 /// Real-path calibration estimate for least-outstanding placement when
@@ -393,6 +395,33 @@ impl ShardedDriver {
         .expect("virtual shard runs are infallible")
     }
 
+    /// [`ShardedDriver::run_virtual`] with span tracing: every shard's
+    /// virtual cluster records its request-lifecycle events on its own
+    /// event clock, and the per-shard [`TraceShard`]s come back in shard
+    /// order for `--trace-out` export.  The outcome is identical to the
+    /// untraced run — recording never touches the event clock or the
+    /// routing/admission state.
+    pub fn run_virtual_traced(&self, cfg: &VirtualConfig,
+                              spec: &WorkloadSpec, policy: AdmissionPolicy)
+        -> (ShardedRun, Vec<TraceShard>) {
+        let loads = self.split(spec);
+        let mut shards = Vec::with_capacity(loads.len());
+        let mut traces = Vec::with_capacity(loads.len());
+        for load in &loads {
+            let mut sink = TraceSink::on(true);
+            let mut outcome = run_virtual_requests_traced(
+                cfg, &load.spec, &load.reqs, policy, &mut sink);
+            outcome.shard = Some(load.shard);
+            traces.push(sink.drain(Some(load.shard), "vsim"));
+            shards.push(ShardOutcome {
+                shard: load.shard,
+                requests: load.reqs.len(),
+                outcome,
+            });
+        }
+        (ShardedRun { shards }, traces)
+    }
+
     /// Fan `spec` out over N **concurrently-running** real servers: every
     /// shard's backend is spawned first (serially — each spawn blocks on
     /// artifact compilation), then each `(backend, subset)` pair is driven
@@ -406,7 +435,21 @@ impl ShardedDriver {
     pub fn run_real_concurrent(&self, artifacts_dir: &Path,
                                spec: &WorkloadSpec, opts: &ServerOptions)
         -> Result<ShardedRun> {
+        Ok(self.run_real_concurrent_traced(artifacts_dir, spec, opts)?.0)
+    }
+
+    /// [`ShardedDriver::run_real_concurrent`] returning the per-shard
+    /// span traces alongside the outcomes.  When `opts.trace` is set,
+    /// each driver thread drains its server's ring
+    /// ([`Server::take_trace`]) after its last reply and *before*
+    /// dropping the server, so the shard's trace survives router
+    /// shutdown; with tracing off the trace vector is empty.
+    pub fn run_real_concurrent_traced(&self, artifacts_dir: &Path,
+                                      spec: &WorkloadSpec,
+                                      opts: &ServerOptions)
+        -> Result<(ShardedRun, Vec<TraceShard>)> {
         let loads = self.split(spec);
+        let trace = opts.trace;
         let mut servers = Vec::with_capacity(loads.len());
         for load in &loads {
             servers.push(Server::spawn_opts(
@@ -414,16 +457,22 @@ impl ShardedDriver {
                 ServerOptions { shard: Some(load.shard), ..opts.clone() },
             )?);
         }
-        let results: Vec<Result<LoadOutcome>> =
+        let results: Vec<Result<(LoadOutcome, Option<TraceShard>)>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = loads
                     .iter()
                     .zip(servers.drain(..))
                     .map(|(load, server)| {
                         scope.spawn(move || {
-                            run_requests_against_server(
+                            let out = run_requests_against_server(
                                 &server, &load.spec, &load.reqs,
-                            )
+                            )?;
+                            let shard_trace = if trace {
+                                Some(server.take_trace()?)
+                            } else {
+                                None
+                            };
+                            Ok((out, shard_trace))
                             // server drops here: shutdown + join happen
                             // inside the driver thread, concurrently
                             // across shards
@@ -441,18 +490,20 @@ impl ShardedDriver {
                     .collect()
             });
         let mut shards = Vec::with_capacity(loads.len());
+        let mut traces = Vec::with_capacity(loads.len());
         for (load, result) in loads.iter().zip(results) {
-            let mut outcome = result?;
+            let (mut outcome, shard_trace) = result?;
             if outcome.shard.is_none() {
                 outcome.shard = Some(load.shard);
             }
+            traces.extend(shard_trace);
             shards.push(ShardOutcome {
                 shard: load.shard,
                 requests: load.reqs.len(),
                 outcome,
             });
         }
-        Ok(ShardedRun { shards })
+        Ok((ShardedRun { shards }, traces))
     }
 
     /// Fan `spec` out with a caller-supplied per-shard runner (shard id,

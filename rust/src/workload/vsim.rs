@@ -27,6 +27,8 @@
 use std::collections::VecDeque;
 
 use crate::config::SchedulePolicy;
+use crate::obs::sink::{TraceShard, TraceSink};
+use crate::obs::span::{EventKind, SpanOutcome};
 use crate::sched::BatchPlanner;
 use crate::util::rng::Pcg32;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
@@ -207,6 +209,17 @@ pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
     run_virtual_requests(cfg, spec, &spec.materialize(), policy)
 }
 
+/// [`run_virtual`] with lifecycle/cycle events recorded into `sink`,
+/// timestamped on the virtual event clock — so a trace dump is
+/// byte-identical across reruns at the same seed.  Recording never
+/// touches the clock, the routing streams, or the planner, so the
+/// returned [`LoadOutcome`] is identical to the untraced run's.
+pub fn run_virtual_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                          policy: AdmissionPolicy, sink: &mut TraceSink)
+    -> LoadOutcome {
+    run_virtual_requests_traced(cfg, spec, &spec.materialize(), policy, sink)
+}
+
 /// Run an explicit request list under `policy` on the virtual cluster.
 ///
 /// This is [`run_virtual`] with the materialization step factored out: the
@@ -219,6 +232,18 @@ pub fn run_virtual(cfg: &VirtualConfig, spec: &WorkloadSpec,
 /// `reqs` themselves.
 pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                             reqs: &[RequestSpec], policy: AdmissionPolicy)
+    -> LoadOutcome {
+    run_virtual_requests_traced(cfg, spec, reqs, policy,
+                                &mut TraceSink::off())
+}
+
+/// [`run_virtual_requests`] with events recorded into `sink` (see
+/// [`run_virtual_traced`] — same guarantees: the outcome is unaffected by
+/// tracing, and a traced run is deterministic per seed).
+pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                                   reqs: &[RequestSpec],
+                                   policy: AdmissionPolicy,
+                                   sink: &mut TraceSink)
     -> LoadOutcome {
     let slots = cfg.slots.max(1);
     let n_layers = cfg.n_layers.max(1);
@@ -254,6 +279,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut batched_tokens = 0u64;
     let mut single_dispatches = 0u64;
     let mut prefill_chunks = 0u64;
+    let mut cycle_idx = 0u64;
 
     loop {
         // ---- 1. ingest arrivals due by now --------------------------------
@@ -263,9 +289,14 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             }
             upcoming.pop_front();
             let r = &reqs[idx];
+            sink.record(t, EventKind::Queued { id: r.id });
             if r.gen_len == 0 {
                 // zero-length request: immediate terminal reply, no slot
                 // (mirrors the server's submit-path short-circuit)
+                sink.record(
+                    t,
+                    EventKind::Terminal { id: r.id, outcome: SpanOutcome::Ok },
+                );
                 samples.push(Sample {
                     id: r.id,
                     submit_seq: idx as u64,
@@ -319,6 +350,13 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             let r = &reqs[w.idx];
             if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
                 // admission failure: terminal error reply, never admitted
+                sink.record(
+                    now,
+                    EventKind::Terminal {
+                        id: r.id,
+                        outcome: SpanOutcome::Error,
+                    },
+                );
                 samples.push(Sample {
                     id: r.id,
                     submit_seq: w.idx as u64,
@@ -341,7 +379,12 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 // prefill charge serialises on the engine, and the first
                 // token is banked once the charge lands (ttft_us ends)
                 let admitted_ns = now;
+                sink.record(
+                    admitted_ns,
+                    EventKind::SlotGrant { id: r.id, slot },
+                );
                 now += r.prompt_len as u64 * cfg.prefill_ns_per_token;
+                sink.record(now, EventKind::FirstToken { id: r.id });
                 let l = VLive {
                     idx: w.idx,
                     arrived_ns: w.arrived_ns,
@@ -357,6 +400,13 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 {
                     // the prefill-sampled token already completed the
                     // request
+                    sink.record(
+                        now,
+                        EventKind::Terminal {
+                            id: r.id,
+                            outcome: SpanOutcome::Ok,
+                        },
+                    );
                     samples.push(finish_sample(reqs, &l, now));
                     if closed > 0 {
                         issue_next(&mut upcoming, &mut next_issue,
@@ -369,6 +419,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 // chunked: claim the slot without charging the clock; the
                 // prefill advances chunk-by-chunk in the cycle loop below,
                 // interleaved with decode (the head-of-line blocking fix)
+                sink.record(now, EventKind::SlotGrant { id: r.id, slot });
                 filling[slot] = Some(VFill {
                     idx: w.idx,
                     arrived_ns: w.arrived_ns,
@@ -402,6 +453,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
         //     a slot whose prompt completes banks its first token here and
         //     joins this very cycle's decode, exactly like a freshly
         //     admitted monolithic request.
+        let cycle_start = now;
         let mut prefill_sets: Vec<Vec<Vec<usize>>> =
             vec![Vec::new(); n_layers];
         for s in 0..slots {
@@ -410,6 +462,15 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             now += advanced as u64 * cfg.prefill_ns_per_token;
             f.remaining -= advanced;
             prefill_chunks += 1;
+            sink.record(
+                now,
+                EventKind::PrefillChunk {
+                    id: reqs[f.idx].id,
+                    slot: s,
+                    advanced,
+                    remaining: f.remaining,
+                },
+            );
             for layer_rows in prefill_sets.iter_mut() {
                 layer_rows.push(sample_experts(
                     &mut f.rng,
@@ -421,6 +482,7 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             if f.remaining == 0 {
                 let f = filling[s].take().unwrap();
                 let r = &reqs[f.idx];
+                sink.record(now, EventKind::FirstToken { id: r.id });
                 let l = VLive {
                     idx: f.idx,
                     arrived_ns: f.arrived_ns,
@@ -433,6 +495,13 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 if l.tokens >= r.gen_len as u64
                     || r.prompt_len + 1 >= cfg.max_seq
                 {
+                    sink.record(
+                        now,
+                        EventKind::Terminal {
+                            id: r.id,
+                            outcome: SpanOutcome::Ok,
+                        },
+                    );
                     samples.push(finish_sample(reqs, &l, now));
                     if closed > 0 {
                         issue_next(&mut upcoming, &mut next_issue,
@@ -477,6 +546,24 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
         let plans = planner.plan_layers(&layer_sets);
         let cycles: u64 = plans.iter().map(|p| p.cycles as u64).sum();
         now += cfg.dispatch_overhead_ns + cycles * cfg.cycle_ns;
+        if sink.enabled() {
+            let contention: u64 =
+                plans.iter().map(|p| p.contention_cycles as u64).sum();
+            sink.record_span(
+                cycle_start,
+                now - cycle_start,
+                EventKind::Cycle {
+                    index: cycle_idx,
+                    live: active.len(),
+                    filling: filling.iter().flatten().count(),
+                    waiting: waiting.len(),
+                    layer_steps: plans.len(),
+                    plan_cycles: cycles,
+                    contention,
+                },
+            );
+        }
+        cycle_idx += 1;
         match active.len() {
             0 => {}
             1 => single_dispatches += 1,
@@ -497,12 +584,30 @@ pub fn run_virtual_requests(cfg: &VirtualConfig, spec: &WorkloadSpec,
             };
             if done {
                 let l = live[s].take().unwrap();
+                sink.record(
+                    now,
+                    EventKind::Terminal {
+                        id: reqs[l.idx].id,
+                        outcome: SpanOutcome::Ok,
+                    },
+                );
                 samples.push(finish_sample(reqs, &l, now));
                 if closed > 0 {
                     issue_next(&mut upcoming, &mut next_issue, reqs.len(),
                                now + think_ns);
                 }
             }
+        }
+        if sink.enabled() {
+            sink.record(
+                now,
+                EventKind::Depth {
+                    waiting: waiting.len(),
+                    live: live.iter().flatten().count(),
+                    filling: filling.iter().flatten().count(),
+                    intake: 0,
+                },
+            );
         }
     }
 
@@ -581,6 +686,10 @@ struct VBackend {
     batched_tokens: u64,
     single_dispatches: u64,
     prefill_chunks: u64,
+    cycle_idx: u64,
+    /// per-backend trace sink (off unless the caller enables tracing);
+    /// stamped on this backend's own virtual clock
+    sink: TraceSink,
 }
 
 impl VBackend {
@@ -606,6 +715,8 @@ impl VBackend {
             batched_tokens: 0,
             single_dispatches: 0,
             prefill_chunks: 0,
+            cycle_idx: 0,
+            sink: TraceSink::off(),
         }
     }
 
@@ -661,7 +772,15 @@ impl VBackend {
                 }
                 self.inbox.pop_front();
                 let r = &self.reqs[idx];
+                self.sink.record(t, EventKind::Queued { id: r.id });
                 if r.gen_len == 0 {
+                    self.sink.record(
+                        t,
+                        EventKind::Terminal {
+                            id: r.id,
+                            outcome: SpanOutcome::Ok,
+                        },
+                    );
                     self.samples.push(Sample {
                         id: r.id,
                         submit_seq: idx as u64,
@@ -716,6 +835,13 @@ impl VBackend {
                 };
                 let r = &self.reqs[w.idx];
                 if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
+                    self.sink.record(
+                        self.now,
+                        EventKind::Terminal {
+                            id: r.id,
+                            outcome: SpanOutcome::Error,
+                        },
+                    );
                     self.samples.push(Sample {
                         id: r.id,
                         submit_seq: w.idx as u64,
@@ -731,8 +857,14 @@ impl VBackend {
                 }
                 if chunk == 0 {
                     let admitted_ns = self.now;
+                    self.sink.record(
+                        admitted_ns,
+                        EventKind::SlotGrant { id: r.id, slot },
+                    );
                     self.now +=
                         r.prompt_len as u64 * cfg.prefill_ns_per_token;
+                    self.sink
+                        .record(self.now, EventKind::FirstToken { id: r.id });
                     let l = VLive {
                         idx: w.idx,
                         arrived_ns: w.arrived_ns,
@@ -746,12 +878,23 @@ impl VBackend {
                     if l.tokens >= r.gen_len as u64
                         || r.prompt_len + 1 >= cfg.max_seq
                     {
+                        self.sink.record(
+                            self.now,
+                            EventKind::Terminal {
+                                id: r.id,
+                                outcome: SpanOutcome::Ok,
+                            },
+                        );
                         self.samples
                             .push(finish_sample(&self.reqs, &l, self.now));
                     } else {
                         self.live[slot] = Some(l);
                     }
                 } else {
+                    self.sink.record(
+                        self.now,
+                        EventKind::SlotGrant { id: r.id, slot },
+                    );
                     self.filling[slot] = Some(VFill {
                         idx: w.idx,
                         arrived_ns: w.arrived_ns,
@@ -786,6 +929,7 @@ impl VBackend {
             }
 
             // ---- 4a. chunked prefill advances -----------------------
+            let cycle_start = self.now;
             let mut prefill_sets: Vec<Vec<Vec<usize>>> =
                 vec![Vec::new(); n_layers];
             for s in 0..slots {
@@ -794,6 +938,15 @@ impl VBackend {
                 self.now += advanced as u64 * cfg.prefill_ns_per_token;
                 f.remaining -= advanced;
                 self.prefill_chunks += 1;
+                self.sink.record(
+                    self.now,
+                    EventKind::PrefillChunk {
+                        id: self.reqs[f.idx].id,
+                        slot: s,
+                        advanced,
+                        remaining: f.remaining,
+                    },
+                );
                 for layer_rows in prefill_sets.iter_mut() {
                     layer_rows.push(sample_experts(
                         &mut f.rng,
@@ -805,6 +958,8 @@ impl VBackend {
                 if f.remaining == 0 {
                     let f = self.filling[s].take().unwrap();
                     let r = &self.reqs[f.idx];
+                    self.sink
+                        .record(self.now, EventKind::FirstToken { id: r.id });
                     let l = VLive {
                         idx: f.idx,
                         arrived_ns: f.arrived_ns,
@@ -817,6 +972,13 @@ impl VBackend {
                     if l.tokens >= r.gen_len as u64
                         || r.prompt_len + 1 >= cfg.max_seq
                     {
+                        self.sink.record(
+                            self.now,
+                            EventKind::Terminal {
+                                id: r.id,
+                                outcome: SpanOutcome::Ok,
+                            },
+                        );
                         self.samples
                             .push(finish_sample(&self.reqs, &l, self.now));
                     } else {
@@ -852,6 +1014,24 @@ impl VBackend {
             let plans = self.planner.plan_layers(&layer_sets);
             let cycles: u64 = plans.iter().map(|p| p.cycles as u64).sum();
             self.now += cfg.dispatch_overhead_ns + cycles * cfg.cycle_ns;
+            if self.sink.enabled() {
+                let contention: u64 =
+                    plans.iter().map(|p| p.contention_cycles as u64).sum();
+                self.sink.record_span(
+                    cycle_start,
+                    self.now - cycle_start,
+                    EventKind::Cycle {
+                        index: self.cycle_idx,
+                        live: active.len(),
+                        filling: self.filling.iter().flatten().count(),
+                        waiting: self.waiting.len(),
+                        layer_steps: plans.len(),
+                        plan_cycles: cycles,
+                        contention,
+                    },
+                );
+            }
+            self.cycle_idx += 1;
             match active.len() {
                 0 => {}
                 1 => self.single_dispatches += 1,
@@ -873,9 +1053,27 @@ impl VBackend {
                 };
                 if done {
                     let l = self.live[s].take().unwrap();
+                    self.sink.record(
+                        self.now,
+                        EventKind::Terminal {
+                            id: self.reqs[l.idx].id,
+                            outcome: SpanOutcome::Ok,
+                        },
+                    );
                     self.samples
                         .push(finish_sample(&self.reqs, &l, self.now));
                 }
+            }
+            if self.sink.enabled() {
+                self.sink.record(
+                    self.now,
+                    EventKind::Depth {
+                        waiting: self.waiting.len(),
+                        live: self.live.iter().flatten().count(),
+                        filling: self.filling.iter().flatten().count(),
+                        intake: self.inbox.len(),
+                    },
+                );
             }
         }
     }
@@ -928,13 +1126,32 @@ impl VBackend {
 pub fn run_virtual_live(cfg: &VirtualConfig, spec: &WorkloadSpec,
                         policy: AdmissionPolicy, shards: usize)
     -> crate::workload::shard::ShardedRun {
+    run_virtual_live_traced(cfg, spec, policy, shards, false).0
+}
+
+/// [`run_virtual_live`] with tracing: when `trace` is on, every backend
+/// records its own lifecycle/cycle events (pid = shard in the export) and
+/// the placement loop records `intake` / `placed` events on a front-door
+/// sink (shard `None`) — all on the shared virtual arrival clock, so the
+/// merged dump is byte-identical per seed.  With `trace` off this is
+/// exactly [`run_virtual_live`] (the returned shard list is empty).
+pub fn run_virtual_live_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
+                               policy: AdmissionPolicy, shards: usize,
+                               trace: bool)
+    -> (crate::workload::shard::ShardedRun, Vec<TraceShard>) {
     assert!(
         !matches!(spec.arrival, ArrivalProcess::Closed { .. }),
         "live placement requires an open-loop arrival process"
     );
     let n = shards.max(1);
-    let mut backends: Vec<VBackend> =
-        (0..n).map(|_| VBackend::new(cfg, spec.seed, policy)).collect();
+    let mut front = TraceSink::on(trace);
+    let mut backends: Vec<VBackend> = (0..n)
+        .map(|_| {
+            let mut b = VBackend::new(cfg, spec.seed, policy);
+            b.sink = TraceSink::on(trace);
+            b
+        })
+        .collect();
     for r in spec.materialize() {
         let t = r.arrival_ns;
         for b in backends.iter_mut() {
@@ -943,15 +1160,24 @@ pub fn run_virtual_live(cfg: &VirtualConfig, spec: &WorkloadSpec,
         let best = (0..n)
             .min_by_key(|&i| (backends[i].load(), i))
             .unwrap_or(0);
+        front.record(t, EventKind::Intake { id: r.id });
+        front.record(t, EventKind::Placed { id: r.id, shard: best });
         backends[best].arrive(r);
     }
     for b in backends.iter_mut() {
         b.drain();
     }
+    let mut traces = Vec::new();
+    if trace {
+        traces.push(front.drain(None, "placement"));
+    }
     let shards = backends
         .into_iter()
         .enumerate()
-        .map(|(i, b)| {
+        .map(|(i, mut b)| {
+            if trace {
+                traces.push(b.sink.drain(Some(i), "vsim"));
+            }
             let requests = b.reqs.len();
             let mut outcome = b.into_outcome();
             outcome.shard = Some(i);
@@ -962,7 +1188,7 @@ pub fn run_virtual_live(cfg: &VirtualConfig, spec: &WorkloadSpec,
             }
         })
         .collect();
-    crate::workload::shard::ShardedRun { shards }
+    (crate::workload::shard::ShardedRun { shards }, traces)
 }
 
 #[cfg(test)]

@@ -1,0 +1,195 @@
+//! Observability integration: span-trace determinism on the virtual
+//! clock, disabled-sink exactness, ring-overflow accounting, and the
+//! Chrome/Perfetto export round trip (DESIGN.md §Observability).
+//!
+//! Everything here runs on the virtual backend, so the suite needs no
+//! artifact set and every assertion is byte-exact per seed.
+
+use moepim::obs::{
+    check_conservation, chrome_trace, EventKind, SpanOutcome, TraceSink,
+    SPANS_SCHEMA,
+};
+use moepim::util::json::{self, Json};
+use moepim::workload::{
+    report, run_virtual, run_virtual_traced, AdmissionPolicy,
+    ArrivalProcess, PlacementPolicy, ShardedDriver, SizeModel,
+    VirtualConfig, WorkloadSpec,
+};
+
+fn spec(seed: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        seed,
+        requests: 48,
+        arrival: ArrivalProcess::Bursty {
+            rate_rps: 900.0,
+            mean_on_ms: 10.0,
+            mean_off_ms: 20.0,
+        },
+        sizes: SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 1.2,
+            prompt: (4, 24),
+            gen: (1, 12),
+        },
+        slo_e2e_ms: 50.0,
+        deadline_slack_us_per_token: 500,
+    }
+}
+
+/// Run a traced virtual experiment and return the rendered span document.
+fn traced_dump(cfg: &VirtualConfig, spec: &WorkloadSpec,
+               policy: AdmissionPolicy) -> String {
+    let mut sink = TraceSink::on(true);
+    run_virtual_traced(cfg, spec, policy, &mut sink);
+    chrome_trace(&[sink.drain(Some(0), "vsim")], "virtual")
+        .to_string_pretty()
+}
+
+#[test]
+fn virtual_trace_is_byte_identical_per_seed() {
+    let cfg = VirtualConfig::default();
+    let s = spec(0x0B5);
+    let policy = AdmissionPolicy::fifo();
+    let a = traced_dump(&cfg, &s, policy);
+    let b = traced_dump(&cfg, &s, policy);
+    assert_eq!(a, b, "same seed must dump the same bytes");
+    // a different seed shifts arrivals and sizes, so the trace must move
+    let c = traced_dump(&cfg, &spec(0x0B6), policy);
+    assert_ne!(a, c, "trace ignored the workload seed");
+}
+
+#[test]
+fn tracing_never_perturbs_the_outcome() {
+    let cfg = VirtualConfig::default();
+    let spec = spec(0x7E57);
+    let policy = AdmissionPolicy::sjf();
+    let plain = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+        .to_string_pretty();
+    // enabled sink: the outcome (and thus the report) must not move
+    let mut sink = TraceSink::on(true);
+    let out = run_virtual_traced(&cfg, &spec, policy, &mut sink);
+    assert!(!sink.drain(Some(0), "vsim").events.is_empty());
+    assert_eq!(report::build(&spec, policy, &out).to_string_pretty(),
+               plain, "an enabled sink perturbed the virtual outcome");
+    // disabled sink through the same traced entry point: still exact,
+    // and nothing is recorded
+    let mut off = TraceSink::off();
+    let out = run_virtual_traced(&cfg, &spec, policy, &mut off);
+    let shard = off.drain(Some(0), "vsim");
+    assert!(shard.events.is_empty());
+    assert_eq!(shard.dropped_events, 0);
+    assert_eq!(report::build(&spec, policy, &out).to_string_pretty(),
+               plain, "a disabled sink perturbed the virtual outcome");
+}
+
+#[test]
+fn ring_overflow_keeps_newest_and_surfaces_drop_count() {
+    let cfg = VirtualConfig::default();
+    let spec = spec(0x4176);
+    let policy = AdmissionPolicy::fifo();
+    // a deliberately tiny ring: the run records far more events than fit
+    let mut sink = TraceSink::ring(32);
+    run_virtual_traced(&cfg, &spec, policy, &mut sink);
+    let shard = sink.drain(Some(0), "vsim");
+    assert_eq!(shard.events.len(), 32);
+    assert!(shard.dropped_events > 0, "tiny ring never overflowed");
+    // drop-oldest: surviving events are the newest, still time-ordered
+    assert!(shard
+        .events
+        .windows(2)
+        .all(|w| w[0].t_ns <= w[1].t_ns));
+    // the drop count rides into the export header
+    let doc = chrome_trace(&[shard], "virtual");
+    let dropped = doc
+        .path(&["otherData", "dropped_events"])
+        .and_then(Json::as_f64)
+        .expect("dropped_events in otherData");
+    assert!(dropped > 0.0);
+}
+
+#[test]
+fn export_round_trips_and_conserves_terminals() {
+    let cfg = VirtualConfig::default();
+    let spec = spec(0xC0DE);
+    let policy = AdmissionPolicy::fifo();
+    let mut sink = TraceSink::on(true);
+    run_virtual_traced(&cfg, &spec, policy, &mut sink);
+    let text = chrome_trace(&[sink.drain(Some(0), "vsim")], "virtual")
+        .to_string_pretty();
+    let doc = json::parse(&text).expect("span dump parses back");
+    assert_eq!(doc.path(&["otherData", "schema"]).and_then(Json::as_str),
+               Some(SPANS_SCHEMA));
+    assert_eq!(doc.path(&["otherData", "clock"]).and_then(Json::as_str),
+               Some("virtual"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    // every event row is a well-formed Chrome trace event (metadata
+    // rows carry no timestamp; everything else must)
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).expect("no ph");
+        assert!(e.get("pid").and_then(Json::as_f64).is_some(), "no pid");
+        if ph != "M" {
+            assert!(e.get("ts").and_then(Json::as_f64).is_some(), "no ts");
+        }
+    }
+    // exactly one terminal per submitted request, checked through the
+    // JSON round trip (what CI validates on the dumped artifact)
+    let n = check_conservation(&doc).expect("conservation holds");
+    assert_eq!(n, spec.requests, "every request must terminate once");
+}
+
+#[test]
+fn conservation_check_rejects_a_lost_request() {
+    // a request that queues but never terminates must fail the check
+    let mut sink = TraceSink::ring(16);
+    sink.record(10, EventKind::Queued { id: 1 });
+    sink.record(20, EventKind::Queued { id: 2 });
+    sink.record(
+        30,
+        EventKind::Terminal { id: 2, outcome: SpanOutcome::Ok },
+    );
+    let doc = chrome_trace(&[sink.drain(Some(0), "test")], "virtual");
+    let err = check_conservation(&doc)
+        .expect_err("a terminal-less request must be caught");
+    assert!(err.contains('1'), "error should name the lost id: {err}");
+}
+
+#[test]
+fn sharded_virtual_trace_is_deterministic_and_lane_tagged() {
+    let spec = spec(0x5AAD);
+    let cfg = VirtualConfig::default();
+    let policy = AdmissionPolicy::fifo();
+    let run_once = || {
+        let driver = ShardedDriver::new(3, PlacementPolicy::RoundRobin);
+        let (run, traces) = driver.run_virtual_traced(&cfg, &spec, policy);
+        assert_eq!(traces.len(), 3, "one span shard per backend");
+        (
+            report::build_sharded(&spec, policy, &driver, &run)
+                .to_string_pretty(),
+            chrome_trace(&traces, "virtual").to_string_pretty(),
+        )
+    };
+    let (report_a, trace_a) = run_once();
+    let (report_b, trace_b) = run_once();
+    assert_eq!(report_a, report_b);
+    assert_eq!(trace_a, trace_b, "sharded trace must be byte-repeatable");
+    // each backend renders as its own pid lane
+    let doc = json::parse(&trace_a).expect("sharded dump parses");
+    let mut pids: Vec<i64> = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents")
+        .iter()
+        .filter_map(|e| e.get("pid").and_then(Json::as_f64))
+        .map(|p| p as i64)
+        .collect();
+    pids.sort_unstable();
+    pids.dedup();
+    assert_eq!(pids, vec![0, 1, 2], "pid lanes must map shard indices");
+    let n = check_conservation(&doc).expect("sharded conservation holds");
+    assert_eq!(n, spec.requests);
+}

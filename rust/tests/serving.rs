@@ -385,6 +385,53 @@ fn server_lifecycle_batching_and_churn() {
 }
 
 #[test]
+fn driver_outcomes_are_per_run_deltas_on_a_reused_server() {
+    // regression: a second loadtest run against the same server must
+    // report only its own work, not the server's lifetime counters.
+    // Exact form: the server was fresh before run 1, so the lifetime
+    // stats must equal the sum of the two per-run deltas — if a run
+    // reported lifetime views instead, the sum would overshoot.
+    let server = Server::spawn(artifacts_dir()).expect("server spawns");
+    let spec = WorkloadSpec {
+        seed: 0xDE17A,
+        requests: 6,
+        arrival: ArrivalProcess::Closed { users: 2, think_ms: 0.0 },
+        sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
+        slo_e2e_ms: 60_000.0,
+        deadline_slack_us_per_token: 0,
+    };
+    let first = run_against_server(&server, &spec).expect("first run");
+    let second = run_against_server(&server, &spec).expect("second run");
+    for out in [&first, &second] {
+        assert_eq!(out.samples.len(), spec.requests);
+        assert!(out.samples.iter().all(|s| s.ok), "{:?}", out.samples);
+        assert!(out.planner.steps > 0, "a run reported no planner work");
+    }
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.planner.steps,
+               first.planner.steps + second.planner.steps);
+    assert_eq!(stats.planner.work,
+               first.planner.work + second.planner.work);
+    assert_eq!(stats.planner.cycles,
+               first.planner.cycles + second.planner.cycles);
+    assert_eq!(stats.planner.contention_cycles,
+               first.planner.contention_cycles
+                   + second.planner.contention_cycles);
+    assert_eq!(stats.planner.transfers,
+               first.planner.transfers + second.planner.transfers);
+    assert_eq!(stats.batch_dispatches,
+               first.batch_dispatches + second.batch_dispatches);
+    assert_eq!(stats.batched_tokens,
+               first.batched_tokens + second.batched_tokens);
+    assert_eq!(stats.single_dispatches,
+               first.single_dispatches + second.single_dispatches);
+    assert_eq!(stats.prefill_chunks,
+               first.prefill_chunks + second.prefill_chunks);
+    assert_eq!(stats.shed_requests,
+               first.shed_requests + second.shed_requests);
+}
+
+#[test]
 fn spawn_fails_cleanly_on_bad_dir() {
     let err = Server::spawn(PathBuf::from("/nonexistent/artifacts"));
     assert!(err.is_err());
