@@ -39,7 +39,7 @@ pub struct GoUpdate {
     pub gates: Vec<f32>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GoCache {
     n_experts: usize,
     capacity: usize,

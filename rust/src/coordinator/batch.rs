@@ -47,12 +47,81 @@ use crate::runtime::executor::TensorIn;
 use crate::sched::{BatchPlan, BatchPlanner, PlannerStats};
 
 /// One live slot's sequence state (KV/GO state lives in the pools).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SlotSession {
     /// prompt + generated token ids so far
     pub ids: Vec<i32>,
     /// position of the next token to be written (== ids.len())
     pub pos: usize,
+}
+
+/// A suspended decode session: everything a live slot holds, lifted out of
+/// the pools so the slot can serve another request and the session can be
+/// resumed later — possibly into a *different* slot — bit-identically.
+///
+/// Contents: the [`SlotSession`] cursor (token ids + write position), each
+/// layer's full padded KV bank (`[S, H, Dh]` per layer, exactly what
+/// [`KvPool::seed_slot`] re-installs wholesale) with the valid row count,
+/// and each layer's GO bank (score + output caches) by value.  Restore is
+/// bit-exact because (a) `seed_slot` overwrites the slot's whole padded
+/// region, so even the zero padding the batched artifacts read matches,
+/// (b) GO banks are plain-old-data clones, and (c) sampling is a pure
+/// function of `(logits, pos)` — no hidden rng — so a resumed session's
+/// next dispatch sees byte-identical inputs (pinned at every checkpoint
+/// step in `rust/tests/batch_equivalence.rs`, and at the pool level in
+/// `rust/tests/props_qos.rs`).
+///
+/// This is the decode-side symmetric of PR 5's [`PrefillState`]: the
+/// paper's GO-cache makes suspension cheap precisely because resuming
+/// needs no re-run of the expert-choice router over past hidden states
+/// (PAPER.md §IV) — the caches *are* the resumable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotCheckpoint {
+    /// the suspended session's token ids + position cursor
+    pub session: SlotSession,
+    /// per-layer full padded K banks (`[S, H, Dh]` each)
+    kv_k: Vec<Vec<f32>>,
+    /// per-layer full padded V banks
+    kv_v: Vec<Vec<f32>>,
+    /// valid KV rows (shared by all layers)
+    kv_len: usize,
+    /// per-layer GO banks, by value
+    go: Vec<GoCache>,
+}
+
+impl SlotCheckpoint {
+    /// Snapshot `slot`'s pool state plus `session` cursor.  Pool-level
+    /// (no engine needed) so property tests can drive bare pools.
+    pub fn capture(kv: &KvPool, go: &[GoCache], session: &SlotSession,
+                   slot: usize) -> Self {
+        let layers = kv.n_layers();
+        SlotCheckpoint {
+            session: session.clone(),
+            kv_k: (0..layers).map(|l| kv.slot_k(l, slot).to_vec()).collect(),
+            kv_v: (0..layers).map(|l| kv.slot_v(l, slot).to_vec()).collect(),
+            kv_len: kv.len(slot),
+            go: go.to_vec(),
+        }
+    }
+
+    /// Install the snapshot into `slot` of `kv`/`go`, overwriting whatever
+    /// the slot held (callers reset/claim the slot first).  The inverse of
+    /// [`SlotCheckpoint::capture`]: banks come back byte-identical.
+    pub fn restore_into(&self, kv: &mut KvPool, go: &mut [GoCache],
+                        slot: usize) {
+        kv.seed_slot(slot, &self.kv_k, &self.kv_v, self.kv_len);
+        go.clone_from_slice(&self.go);
+    }
+
+    /// Layers captured (sanity hook for restore-shape validation).
+    pub fn n_layers(&self) -> usize {
+        self.kv_k.len()
+    }
+
+    /// Valid KV rows at capture time.
+    pub fn kv_len(&self) -> usize {
+        self.kv_len
+    }
 }
 
 /// An in-progress chunked prefill occupying a serving slot
@@ -218,6 +287,49 @@ impl BatchEngine {
                 Err(e)
             }
         }
+    }
+
+    /// Snapshot the live session in `slot` as a [`SlotCheckpoint`] without
+    /// disturbing it (read-only; the slot keeps decoding until the caller
+    /// [`BatchEngine::release`]s it).  Fails when the slot holds no live
+    /// session — mid-prefill slots have no decode state to checkpoint;
+    /// preempting one simply releases it and restarts the (deterministic)
+    /// prefill later.
+    pub fn checkpoint_slot(&self, slot: usize) -> Result<SlotCheckpoint> {
+        if slot >= self.slots {
+            return Err(anyhow!("slot {slot} out of range"));
+        }
+        let sess = self.sessions[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow!("slot {slot} has no live session"))?;
+        Ok(SlotCheckpoint::capture(&self.kv, &self.go[slot], sess, slot))
+    }
+
+    /// Resume a checkpointed session into a free slot (not necessarily the
+    /// one it was captured from); returns the claimed slot.  Same
+    /// transactional discipline as batched decode: all fallible checks
+    /// (free slot, shape match) run first, then the commit — bank seeds +
+    /// session install — is infallible, so a failed restore leaves every
+    /// slot untouched.
+    pub fn restore_slot(&mut self, ckpt: &SlotCheckpoint) -> Result<usize> {
+        let m = &self.engine.model;
+        if ckpt.n_layers() != m.n_layers {
+            return Err(anyhow!(
+                "checkpoint has {} layers, engine has {}",
+                ckpt.n_layers(),
+                m.n_layers
+            ));
+        }
+        if ckpt.kv_len() > m.max_seq || ckpt.session.pos > m.max_seq {
+            return Err(anyhow!("checkpoint longer than max_seq"));
+        }
+        let slot = self
+            .free_slot()
+            .ok_or_else(|| anyhow!("no free serving slot"))?;
+        // commit: infallible from here
+        ckpt.restore_into(&mut self.kv, &mut self.go[slot], slot);
+        self.sessions[slot] = Some(ckpt.session.clone());
+        Ok(slot)
     }
 
     /// Free `slot` for the next request, returning its final session state.

@@ -11,7 +11,9 @@ pub mod cluster;
 pub mod engine;
 pub mod server;
 
-pub use batch::{BatchEngine, BatchStep, PrefillState, SlotSession};
+pub use batch::{
+    BatchEngine, BatchStep, PrefillState, SlotCheckpoint, SlotSession,
+};
 pub use cluster::{
     Cluster, ClusterOptions, ClusterPlacement, ClusterStats,
     DEFAULT_INTAKE_CAP,

@@ -48,7 +48,9 @@ use crate::obs::sink::{TraceShard, TraceSink};
 use crate::obs::span::{now_ns, EventKind, SpanOutcome};
 use crate::runtime::Runtime;
 use crate::sched::PlannerStats;
-use crate::workload::{AdmissionPolicy, QueuedMeta};
+use crate::workload::{AdmissionPolicy, Priority, QueuedMeta};
+
+use super::batch::SlotCheckpoint;
 
 /// Spawn-time configuration for a [`Server`].
 ///
@@ -83,6 +85,12 @@ pub struct ServerOptions {
     /// and the router's timing/behaviour is bit-identical to a server
     /// without the flag)
     pub trace: bool,
+    /// priority QoS: reserve freed slots for waiting interactive
+    /// requests and preempt (checkpoint → requeue) batch-tier slots when
+    /// an interactive request would otherwise wait behind them (`false`,
+    /// the default: priorities are carried but ignored — the seed
+    /// scheduling behaviour.  See DESIGN.md §Preemption & QoS)
+    pub qos: bool,
 }
 
 impl Default for ServerOptions {
@@ -93,6 +101,7 @@ impl Default for ServerOptions {
             prefill_chunk: 0,
             queue_cap: 0,
             trace: false,
+            qos: false,
         }
     }
 }
@@ -109,17 +118,33 @@ pub struct Request {
     /// end-to-end deadline budget from submit, for deadline-aware
     /// admission (`None`: no deadline — sorts last under EDF)
     pub deadline_us: Option<u64>,
+    /// QoS tier ([`Priority::Interactive`] by default — the legacy
+    /// single-tier behaviour).  Only consulted when the server runs with
+    /// [`ServerOptions::qos`]
+    pub priority: Priority,
 }
 
 impl Request {
     /// A deadline-less request (EDF sorts it last; FIFO/SJF ignore it).
     pub fn new(id: u64, prompt: Vec<i32>, gen_len: usize) -> Request {
-        Request { id, prompt, gen_len, deadline_us: None }
+        Request {
+            id,
+            prompt,
+            gen_len,
+            deadline_us: None,
+            priority: Priority::Interactive,
+        }
     }
 
     /// Attach an end-to-end deadline budget (µs from submit).
     pub fn with_deadline_us(mut self, deadline_us: u64) -> Request {
         self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    /// Set the QoS tier.
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
         self
     }
 }
@@ -256,6 +281,18 @@ pub struct ServerStats {
     /// because the waiting queue was at [`ServerOptions::queue_cap`]
     /// (0 when the cap is unbounded)
     pub shed_requests: u64,
+    /// batch-tier slots evicted (checkpoint → requeue) so a waiting
+    /// interactive request could take the slot (0 unless
+    /// [`ServerOptions::qos`])
+    pub preemptions: u64,
+    /// checkpointed sessions resumed into a slot; every preempted decode
+    /// session is restored or terminally replied exactly once, so
+    /// `restores <= preemptions` with the difference being requests
+    /// still parked (or shut down) when the snapshot was taken
+    pub restores: u64,
+    /// total µs preempted requests spent back in the waiting queue
+    /// between eviction and resume (the preemption-churn latency bill)
+    pub preempted_wait_us: u64,
     /// wall-clock µs since the unix epoch of the first decode/prefill
     /// dispatch this server issued (`None`: never dispatched).  Together
     /// with [`ServerStats::last_dispatch_unix_us`] this gives each
@@ -326,6 +363,9 @@ impl ServerStats {
         line(format!("single_dispatches:   {}", self.single_dispatches));
         line(format!("prefill_chunks:      {}", self.prefill_chunks));
         line(format!("peak_waiting:        {}", self.peak_waiting));
+        line(format!("preemptions:         {}", self.preemptions));
+        line(format!("restores:            {}", self.restores));
+        line(format!("preempted_wait_us:   {}", self.preempted_wait_us));
         match (self.first_dispatch_unix_us, self.last_dispatch_unix_us) {
             (Some(a), Some(b)) => line(format!(
                 "busy_interval_us:    {} .. {} ({} us)", a, b,
@@ -594,12 +634,37 @@ impl Drop for Server {
 }
 
 /// One waiting request, in arrival order, plus the bookkeeping the
-/// admission policy's starvation guard needs.
+/// admission policy's starvation guard needs.  A preempted decode session
+/// waits here too, carrying its resumable state in `resume` — requeued at
+/// its arrival-order position, so the queue invariant (oldest first)
+/// survives preemption churn.
 struct Waiting {
     req: Request,
     reply: Replier,
     submitted: Instant,
     passed_over: u32,
+    resume: Option<Resume>,
+}
+
+/// The suspended half of a preempted live session: the engine-side
+/// [`SlotCheckpoint`] plus the router-side bookkeeping (streamed tokens,
+/// original admission timings) that must survive the slot round-trip so a
+/// resumed request reports the same `queue_us`/`ttft_us`/`admit_seq` it
+/// would have unpreempted, and never re-streams a token.
+struct Resume {
+    ckpt: SlotCheckpoint,
+    /// the pending (already banked + streamed) token the next decode
+    /// step feeds — exactly the `Live::next` at preemption time
+    next: i32,
+    tokens: Vec<i32>,
+    admitted: Instant,
+    admit_seq: u64,
+    first_token: Option<Instant>,
+    batched_steps: u64,
+    single_steps: u64,
+    /// when the session was evicted (accumulates
+    /// [`ServerStats::preempted_wait_us`] on resume)
+    preempted_at: Instant,
 }
 
 /// One slot mid-chunked-prefill: the admission bookkeeping carried while
@@ -639,8 +704,14 @@ impl Fill {
 
 fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             opts: ServerOptions, signal: Arc<LoadSignal>) {
-    let ServerOptions { policy, shard, prefill_chunk, queue_cap, trace } =
-        opts;
+    let ServerOptions {
+        policy,
+        shard,
+        prefill_chunk,
+        queue_cap,
+        trace,
+        qos,
+    } = opts;
     let slots = eng.slots();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut live: Vec<Option<Live>> = (0..slots).map(|_| None).collect();
@@ -751,6 +822,7 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                         reply,
                         submitted: Instant::now(),
                         passed_over: 0,
+                        resume: None,
                     });
                     stats.peak_waiting =
                         stats.peak_waiting.max(waiting.len());
@@ -779,37 +851,166 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             }
         }
 
+        // ---- 2b. QoS preemption: if waiting interactive requests exceed
+        //          the free slots, evict batch-tier slots (checkpoint →
+        //          requeue for live sessions; release-and-restart for
+        //          mid-prefill slots) until the latency tier fits.  The
+        //          victim is the batch slot that can best afford it —
+        //          largest EDF slack first — so preemption is deadline-
+        //          aware on both sides: urgent arrivals ride the EDF
+        //          admission order, and near-deadline batch jobs are the
+        //          last evicted ----------------------------------------
+        if qos {
+            let interactive_waiting = waiting
+                .iter()
+                .filter(|w| w.req.priority == Priority::Interactive)
+                .count();
+            let free = (0..slots)
+                .filter(|&s| live[s].is_none() && filling[s].is_none())
+                .count();
+            let mut need = interactive_waiting.saturating_sub(free);
+            while need > 0 {
+                let Some(slot) = preempt_victim(&live, &filling) else {
+                    break;
+                };
+                if let Some(l) = live[slot].take() {
+                    match eng.checkpoint_slot(slot) {
+                        Ok(ckpt) => {
+                            eng.release(slot);
+                            stats.preemptions += 1;
+                            if sink.enabled() {
+                                sink.record(now_ns(), EventKind::Preempt {
+                                    id: l.req.id,
+                                    slot,
+                                });
+                            }
+                            requeue(&mut waiting, Waiting {
+                                resume: Some(Resume {
+                                    ckpt,
+                                    next: l.next,
+                                    tokens: l.tokens,
+                                    admitted: l.admitted,
+                                    admit_seq: l.admit_seq,
+                                    first_token: l.first_token,
+                                    batched_steps: l.batched_steps,
+                                    single_steps: l.single_steps,
+                                    preempted_at: Instant::now(),
+                                }),
+                                req: l.req,
+                                reply: l.reply,
+                                submitted: l.submitted,
+                                passed_over: 0,
+                            });
+                        }
+                        Err(_) => {
+                            // no decode state to snapshot (cannot happen
+                            // for a live slot) — keep it rather than risk
+                            // the stream
+                            live[slot] = Some(l);
+                            break;
+                        }
+                    }
+                } else if let Some(f) = filling[slot].take() {
+                    // mid-prefill: nothing decoded yet, so there is no
+                    // checkpoint to take — release the slot and restart
+                    // the (deterministic) prefill on readmission
+                    eng.release(slot);
+                    stats.preemptions += 1;
+                    if sink.enabled() {
+                        sink.record(now_ns(), EventKind::Preempt {
+                            id: f.req.id,
+                            slot,
+                        });
+                    }
+                    requeue(&mut waiting, Waiting {
+                        req: f.req,
+                        reply: f.reply,
+                        submitted: f.submitted,
+                        passed_over: 0,
+                        resume: None,
+                    });
+                }
+                stats.peak_waiting = stats.peak_waiting.max(waiting.len());
+                need -= 1;
+            }
+        }
+
         // ---- 3. policy-driven slot admission (after the sweep, so slots
         //         freed this cycle refill and ride this cycle's dispatch).
         //         The queue stays in arrival order; the policy picks an
         //         index into it (FIFO: always 0, preserving the seed
         //         behaviour and `admit_seq` monotonicity in submit order).
+        //         Under QoS, freed slots are reserved for the interactive
+        //         tier: the policy only sees interactive candidates while
+        //         any are waiting.
         while !waiting.is_empty() && eng.free_slot().is_some() {
-            let w = if matches!(policy, AdmissionPolicy::Fifo) {
-                // FIFO stays the O(1) pop the seed had — no metas needed
-                waiting.pop_front().unwrap()
-            } else {
-                let now = Instant::now();
-                let metas: Vec<QueuedMeta> = waiting
-                    .iter()
-                    .map(|w| QueuedMeta {
-                        gen_len: w.req.gen_len,
-                        deadline_us: w.req.deadline_us,
-                        waited_us: us(now, w.submitted) as u64,
-                        passed_over: w.passed_over,
-                    })
-                    .collect();
-                let pick = policy.select(&metas).min(waiting.len() - 1);
-                let w = waiting.remove(pick).expect("policy index in range");
-                // only requests the pick actually jumped over (older than
-                // it, i.e. at indices < pick) were passed over — younger
-                // ones weren't, or a standing queue would age everyone
-                // into the starvation guard and degrade SJF/EDF to FIFO
-                for o in waiting.iter_mut().take(pick) {
-                    o.passed_over += 1;
+            let pick = pick_waiting(&policy, &waiting, qos);
+            let w = waiting.remove(pick).expect("policy index in range");
+            // only requests the pick actually jumped over (older than
+            // it, i.e. at indices < pick) were passed over — younger
+            // ones weren't, or a standing queue would age everyone
+            // into the starvation guard and degrade SJF/EDF to FIFO
+            for o in waiting.iter_mut().take(pick) {
+                o.passed_over += 1;
+            }
+            let granted_at = Instant::now();
+            if let Some(r) = w.resume {
+                // a preempted session coming back: restore its banks +
+                // cursor into a free slot and resume decoding this cycle;
+                // the original admission bookkeeping (queue_us, ttft_us,
+                // admit_seq, streamed tokens) carries over untouched
+                match eng.restore_slot(&r.ckpt) {
+                    Ok(slot) => {
+                        stats.restores += 1;
+                        stats.preempted_wait_us +=
+                            us(granted_at, r.preempted_at) as u64;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Restore {
+                                id: w.req.id,
+                                slot,
+                            });
+                        }
+                        live[slot] = Some(Live {
+                            req: w.req,
+                            reply: w.reply,
+                            slot,
+                            next: r.next,
+                            tokens: r.tokens,
+                            submitted: w.submitted,
+                            admitted: r.admitted,
+                            admit_seq: r.admit_seq,
+                            first_token: r.first_token,
+                            batched_steps: r.batched_steps,
+                            single_steps: r.single_steps,
+                        });
+                    }
+                    Err(e) => {
+                        stats.errored += 1;
+                        if sink.enabled() {
+                            sink.record(now_ns(), EventKind::Terminal {
+                                id: w.req.id,
+                                outcome: SpanOutcome::Error,
+                            });
+                        }
+                        // admitted once already: reply with the original
+                        // admission timings plus the tokens it streamed
+                        w.reply.finish(Response {
+                            id: w.req.id,
+                            result: Err(format!("restore failed: {e}")),
+                            latency_us: us(Instant::now(), w.submitted),
+                            ttft_us: r
+                                .first_token
+                                .map(|t| us(t, w.submitted)),
+                            queue_us: Some(us(r.admitted, w.submitted)),
+                            admit_seq: Some(r.admit_seq),
+                            batched_steps: r.batched_steps,
+                            single_steps: r.single_steps,
+                            shard,
+                        });
+                    }
                 }
-                w
-            };
+                continue;
+            }
             let (req, reply, submitted) = (w.req, w.reply, w.submitted);
             // the slot-grant instant: queue_us ends here, before any
             // prefill work, so TTFT (through the first sampled token)
@@ -1098,6 +1299,85 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
             });
         }
     }
+}
+
+/// Index into `waiting` the next admission takes.  With `qos` and any
+/// interactive request waiting, the policy only sees the interactive
+/// candidates (slot reservation for the latency tier); otherwise the whole
+/// queue — which for FIFO degenerates to index 0, the seed behaviour.
+fn pick_waiting(policy: &AdmissionPolicy, waiting: &VecDeque<Waiting>,
+                qos: bool) -> usize {
+    let candidates: Vec<usize> = if qos
+        && waiting.iter().any(|w| w.req.priority == Priority::Interactive)
+    {
+        waiting
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.req.priority == Priority::Interactive)
+            .map(|(i, _)| i)
+            .collect()
+    } else {
+        (0..waiting.len()).collect()
+    };
+    if matches!(policy, AdmissionPolicy::Fifo) {
+        return candidates[0];
+    }
+    let now = Instant::now();
+    let metas: Vec<QueuedMeta> = candidates
+        .iter()
+        .map(|&i| {
+            let w = &waiting[i];
+            QueuedMeta {
+                gen_len: w.req.gen_len,
+                deadline_us: w.req.deadline_us,
+                waited_us: us(now, w.submitted) as u64,
+                passed_over: w.passed_over,
+            }
+        })
+        .collect();
+    candidates[policy.select(&metas).min(candidates.len() - 1)]
+}
+
+/// The batch-tier slot to evict next: largest EDF slack first (deadline-
+/// less jobs count as infinite slack and go first), ties to the larger
+/// slot index.  `None` when no preemptible (batch-tier) slot exists —
+/// interactive sessions are never evicted.
+fn preempt_victim(live: &[Option<Live>], filling: &[Option<Fill>])
+    -> Option<usize> {
+    let now = Instant::now();
+    let mut best: Option<(i64, usize)> = None;
+    for slot in 0..live.len() {
+        let (prio, deadline, submitted) = if let Some(l) = &live[slot] {
+            (l.req.priority, l.req.deadline_us, l.submitted)
+        } else if let Some(f) = &filling[slot] {
+            (f.req.priority, f.req.deadline_us, f.submitted)
+        } else {
+            continue;
+        };
+        if prio != Priority::Batch {
+            continue;
+        }
+        let slack = match deadline {
+            Some(d) => d as i64 - us(now, submitted) as i64,
+            None => i64::MAX,
+        };
+        if best.map_or(true, |b| (slack, slot) > b) {
+            best = Some((slack, slot));
+        }
+    }
+    best.map(|(_, slot)| slot)
+}
+
+/// Re-insert a preempted request at its arrival-order position: the
+/// waiting queue's oldest-first invariant is what the starvation guard
+/// and pass-over accounting assume, and it keeps a preempted request's
+/// place in line instead of sending it to the back.
+fn requeue(waiting: &mut VecDeque<Waiting>, w: Waiting) {
+    let idx = waiting
+        .iter()
+        .position(|o| o.submitted > w.submitted)
+        .unwrap_or(waiting.len());
+    waiting.insert(idx, w);
 }
 
 /// Retire a finished request: free its slot, record stats, reply.

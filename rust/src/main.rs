@@ -204,11 +204,14 @@ fn cmd_serve(args: &Args) -> i32 {
     let n = args.usize_flag("prompts", 4);
     let gen = args.usize_flag("gen", 8);
     let prefill_chunk = args.usize_flag("prefill-chunk", 0);
+    let qos = args.bool_flag("qos");
+    let mix = args.f64_flag("priority-mix", 1.0);
     let trace_out = args.str_flag("trace-out", "");
     let metrics_file = args.str_flag("metrics-file", "");
     let server = match Server::spawn_opts(artifacts_dir(args),
                                           ServerOptions {
                                               prefill_chunk,
+                                              qos,
                                               trace: !trace_out.is_empty(),
                                               ..ServerOptions::default()
                                           }) {
@@ -222,15 +225,25 @@ fn cmd_serve(args: &Args) -> i32 {
         println!("chunked prefill on: {prefill_chunk} prompt tokens per \
                   slot per cycle");
     }
+    if qos {
+        println!("qos on: priority mix {mix:.2} (interactive share, \
+                  strided over request ids)");
+    }
     println!("server up; submitting {n} requests (gen {gen})");
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            server.submit(moepim::coordinator::Request::new(
-                i as u64,
-                toy_prompt(32, 1000 + i as u64, 512),
-                gen,
-            ))
+            server.submit(
+                moepim::coordinator::Request::new(
+                    i as u64,
+                    toy_prompt(32, 1000 + i as u64, 512),
+                    gen,
+                )
+                .with_priority(moepim::workload::Priority::assign(
+                    i as u64,
+                    mix,
+                )),
+            )
         })
         .collect();
     let mut total_tokens = 0usize;
@@ -359,6 +372,9 @@ fn cmd_loadtest(args: &Args) -> i32 {
     }
     if args.bool_flag("bench-scenarios") {
         return scenario_bench(args);
+    }
+    if args.bool_flag("bench-qos") {
+        return qos_bench(args);
     }
     // --replay FILE: drive a recorded moepim.trace.v1 document instead of
     // generating a workload (single-backend; exact ns-precision arrivals)
@@ -489,6 +505,7 @@ fn run_trace_replay(args: &Args, path: &str) -> i32 {
             prefill_chunk: args
                 .usize_flag("prefill-chunk", trace.backend.prefill_chunk),
             queue_cap: args.usize_flag("queue-cap", trace.backend.queue_cap),
+            qos: args.bool_flag("qos"),
             ..moepim::coordinator::ServerOptions::default()
         };
         let server = match moepim::coordinator::Server::spawn_opts(
@@ -518,6 +535,7 @@ fn run_trace_replay(args: &Args, path: &str) -> i32 {
             n_layers: args.usize_flag("layers", d.n_layers).max(1),
             prefill_chunk: args
                 .usize_flag("prefill-chunk", trace.backend.prefill_chunk),
+            qos: args.bool_flag("qos"),
             ..d
         };
         let out = run_virtual_requests(&cfg, &spec, &reqs, policy);
@@ -587,6 +605,9 @@ fn loadtest_spec(args: &Args)
             )
         })?;
         spec.requests = args.usize_flag("requests", spec.requests);
+        // presets carry their own tier split; --priority-mix overrides it
+        spec.interactive_mix =
+            args.f64_flag("priority-mix", spec.interactive_mix);
         return Ok(spec);
     }
     let rate = args.f64_flag("rate", 64.0);
@@ -661,6 +682,7 @@ fn loadtest_spec(args: &Args)
         sizes,
         slo_e2e_ms: args.f64_flag("slo-ms", 250.0),
         deadline_slack_us_per_token: args.u64_flag("deadline-slack-us", 500),
+        interactive_mix: args.f64_flag("priority-mix", 1.0),
     })
 }
 
@@ -671,6 +693,7 @@ fn loadtest_vcfg(args: &Args) -> moepim::workload::VirtualConfig {
         n_experts: args.usize_flag("experts", d.n_experts).max(1),
         n_layers: args.usize_flag("layers", d.n_layers).max(1),
         prefill_chunk: args.usize_flag("prefill-chunk", d.prefill_chunk),
+        qos: args.bool_flag("qos"),
         ..d
     }
 }
@@ -1054,6 +1077,7 @@ fn real_server_opts(args: &Args,
         shard: None,
         prefill_chunk: args.usize_flag("prefill-chunk", 0),
         queue_cap: args.usize_flag("queue-cap", 0),
+        qos: args.bool_flag("qos"),
         trace: !args.str_flag("trace-out", "").is_empty(),
     }
 }
@@ -1116,6 +1140,15 @@ fn serve_metrics(stats: &moepim::coordinator::ServerStats)
                 "single-request dispatches", stats.single_dispatches);
     reg.counter("moepim_prefill_chunks_total",
                 "chunked prefill steps", stats.prefill_chunks);
+    reg.counter("moepim_preemptions_total",
+                "batch-tier slots preempted for interactive arrivals",
+                stats.preemptions);
+    reg.counter("moepim_restores_total",
+                "checkpointed slots restored and resumed",
+                stats.restores);
+    reg.counter("moepim_preempted_wait_us_total",
+                "total microseconds preempted requests spent requeued",
+                stats.preempted_wait_us);
     reg.counter("moepim_planner_steps_total",
                 "planner layer steps", stats.planner.steps);
     reg.counter("moepim_planner_cycles_total",
@@ -1425,6 +1458,101 @@ fn scenario_bench(args: &Args) -> i32 {
     0
 }
 
+/// `--bench-qos`: the preemption perf artifact (CI's `BENCH_qos.json`).
+/// Runs the mixed-tenants scenario on the virtual backend twice — QoS
+/// off, then QoS on — under the deadline policy and records per-leg
+/// interactive-tier p99 TTFT, batch-tier p99 e2e, throughput, and the
+/// preemption counters.  Record-only like `--bench-scenarios` (CI
+/// uploads the document and `moepim perfcmp` compares successive runs),
+/// but each leg must still be byte-repeatable per seed.
+fn qos_bench(args: &Args) -> i32 {
+    use moepim::util::json::Json;
+    use moepim::workload::{
+        report, run_virtual, scenario_spec, AdmissionPolicy, Priority,
+        VirtualConfig,
+    };
+    let seed = args.u64_flag("seed", 2026);
+    let policy = AdmissionPolicy::deadline();
+    let spec = scenario_spec("mixed-tenants", seed).expect("known preset");
+    let mut legs = Vec::new();
+    for qos in [false, true] {
+        let cfg = VirtualConfig { qos, ..loadtest_vcfg(args) };
+        let out = run_virtual(&cfg, &spec, policy);
+        let a = report::build(&spec, policy, &out).to_string_pretty();
+        let b = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        if a != b {
+            eprintln!("bench-qos: qos={qos} leg not deterministic");
+            return 1;
+        }
+        let pct = |mut xs: Vec<f64>, q: f64| {
+            xs.sort_by(f64::total_cmp);
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs[((xs.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        let tier = |p: Priority| {
+            out.samples
+                .iter()
+                .filter(move |s| {
+                    Priority::assign(s.id, spec.interactive_mix) == p
+                })
+        };
+        let interactive_ttft: Vec<f64> =
+            tier(Priority::Interactive).filter_map(|s| s.ttft_us).collect();
+        let batch_e2e: Vec<f64> =
+            tier(Priority::Batch).map(|s| s.e2e_us).collect();
+        let e2e: Vec<f64> = out.samples.iter().map(|s| s.e2e_us).collect();
+        let tokens = out.tokens_generated();
+        let duration_s = out.duration_s.max(1e-9);
+        legs.push(Json::obj(vec![
+            // `mode` is the leg key perfcmp matches across artifacts
+            ("mode", Json::str(if qos { "qos-on" } else { "qos-off" })),
+            ("qos", Json::Bool(qos)),
+            ("requests", Json::num(spec.requests as f64)),
+            ("ok", Json::num(
+                out.samples.iter().filter(|s| s.ok).count() as f64,
+            )),
+            ("tokens", Json::num(tokens as f64)),
+            ("duration_s", Json::num(duration_s)),
+            ("tokens_per_s", Json::num(tokens as f64 / duration_s)),
+            ("p50_e2e_us", Json::num(pct(e2e.clone(), 0.50))),
+            ("p99_e2e_us", Json::num(pct(e2e, 0.99))),
+            ("interactive_p99_ttft_us",
+             Json::num(pct(interactive_ttft, 0.99))),
+            ("batch_p99_e2e_us", Json::num(pct(batch_e2e, 0.99))),
+            ("preemptions", Json::num(out.preemptions as f64)),
+            ("restores", Json::num(out.restores as f64)),
+            ("preempted_wait_us",
+             Json::num(out.preempted_wait_us as f64)),
+        ]));
+        println!(
+            "bench-qos: qos={qos} OK ({} preemptions, {tokens} tokens)",
+            out.preemptions
+        );
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("moepim.bench_qos.v1")),
+        ("scenario", Json::str("mixed-tenants")),
+        ("policy", Json::str(policy.label())),
+        ("seed", Json::str(&seed.to_string())),
+        ("interactive_mix", Json::num(spec.interactive_mix)),
+        ("legs", Json::Arr(legs)),
+    ]);
+    let text = doc.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "BENCH_qos.json");
+    if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+        eprintln!("failed to write {out_path}: {e}");
+        return 1;
+    }
+    println!("bench-qos: wrote {out_path}");
+    0
+}
+
 /// `--smoke`: the CI gate.  Virtual leg: every (process × policy ×
 /// prefill-chunk) cell of the acceptance matrix must emit a
 /// byte-identical report twice in a row — chunked admission exactly as
@@ -1474,6 +1602,7 @@ fn loadtest_smoke(args: &Args) -> i32 {
                     },
                     slo_e2e_ms: 50.0,
                     deadline_slack_us_per_token: 500,
+                    interactive_mix: 1.0,
                 };
                 let a = report::build(&spec, policy,
                                       &run_virtual(&cfg, &spec, policy))
@@ -1520,6 +1649,7 @@ fn loadtest_smoke(args: &Args) -> i32 {
             },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         };
         let policy = AdmissionPolicy::fifo();
         let out = run_virtual(&cfg, &spec, policy);
@@ -1600,6 +1730,7 @@ fn loadtest_smoke(args: &Args) -> i32 {
             },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         };
         let policy = AdmissionPolicy::fifo();
         let baseline = report::build(&spec, policy,
@@ -1642,6 +1773,59 @@ fn loadtest_smoke(args: &Args) -> i32 {
             }
         }
     }
+    // mixed-tenant QoS preemption leg: four batch requests fill every
+    // slot at t=0; interactive arrivals at t=300 µs (ids 4 and 9 under
+    // mix 0.2) must preempt a batch slot, every preempted slot must be
+    // restored, every request must still get exactly one terminal reply,
+    // and the report must stay byte-repeatable per seed
+    {
+        let cfg = VirtualConfig { qos: true, ..VirtualConfig::default() };
+        let spec = WorkloadSpec {
+            seed,
+            requests: 10,
+            arrival: ArrivalProcess::Replay {
+                times_us: vec![0, 0, 0, 0, 300, 300, 300, 300, 300, 300],
+            },
+            sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 32 },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 500,
+            interactive_mix: 0.2,
+        };
+        let policy = AdmissionPolicy::deadline();
+        let out = run_virtual(&cfg, &spec, policy);
+        let ok = out.samples.iter().filter(|s| s.ok).count();
+        if out.samples.len() != spec.requests || ok != out.samples.len() {
+            eprintln!(
+                "smoke: qos leg lost replies ({} terminal, {ok} ok of {})",
+                out.samples.len(),
+                spec.requests
+            );
+            return 1;
+        }
+        if out.preemptions == 0 || out.restores != out.preemptions {
+            eprintln!(
+                "smoke: qos leg never preempted cleanly (preemptions {}, \
+                 restores {})",
+                out.preemptions, out.restores
+            );
+            return 1;
+        }
+        let a = report::build(&spec, policy, &out).to_string_pretty();
+        let b = report::build(&spec, policy,
+                              &run_virtual(&cfg, &spec, policy))
+            .to_string_pretty();
+        if a != b {
+            eprintln!("smoke: NONDETERMINISTIC qos preemption report");
+            return 1;
+        }
+        println!(
+            "smoke: qos preemption leg OK ({} preemptions, {} restores, \
+             {} bytes)",
+            out.preemptions,
+            out.restores,
+            a.len()
+        );
+    }
     let dir = artifacts_dir(args);
     if !dir.join("manifest.json").exists() {
         println!("smoke: no artifact set at {} — real-server leg skipped",
@@ -1677,6 +1861,7 @@ fn loadtest_smoke(args: &Args) -> i32 {
             sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
             slo_e2e_ms: 60_000.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         };
         match run_against_server(&server, &spec) {
             Ok(out) => {
@@ -1744,6 +1929,7 @@ fn loadtest_smoke(args: &Args) -> i32 {
         sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
         slo_e2e_ms: 60_000.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     };
     match moepim::workload::run_against_cluster(&cluster, &spec) {
         Ok(run) => {

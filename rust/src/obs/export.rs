@@ -62,6 +62,12 @@ fn event_args(kind: &EventKind) -> Json {
             ])
         }
         EventKind::FirstToken { id } => Json::obj(vec![("id", n64(id))]),
+        EventKind::Preempt { id, slot } => {
+            Json::obj(vec![("id", n64(id)), ("slot", n(slot))])
+        }
+        EventKind::Restore { id, slot } => {
+            Json::obj(vec![("id", n64(id)), ("slot", n(slot))])
+        }
         EventKind::Terminal { id, outcome } => Json::obj(vec![
             ("id", n64(id)),
             ("outcome", Json::str(outcome.label())),
@@ -202,6 +208,23 @@ pub fn chrome_trace(shards: &[TraceShard], clock: &str) -> Json {
                     ("tid", n(lane.tid)),
                     ("ts", Json::num(us(t_ns))),
                 ])),
+                // checkpoint/restore churn carries a modeled cost on the
+                // virtual clock: draw it as a complete span so the stall
+                // is visible on the lane (real-clock recordings stamp
+                // dur 0 and fall through to the instant form)
+                EventKind::Preempt { .. } | EventKind::Restore { .. }
+                    if dur_ns > 0 =>
+                {
+                    events.push(Json::obj(vec![
+                        ("args", event_args(kind)),
+                        ("dur", Json::num(dur_ns as f64 / 1000.0)),
+                        ("name", Json::str(kind.name())),
+                        ("ph", Json::str("X")),
+                        ("pid", n(lane.pid)),
+                        ("tid", n(lane.tid)),
+                        ("ts", Json::num(us(t_ns))),
+                    ]))
+                }
                 _ => events.push(instant(kind.name(), lane, us(t_ns), event_args(kind))),
             }
         }

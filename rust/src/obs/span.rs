@@ -85,6 +85,24 @@ pub enum EventKind {
         /// Request id.
         id: u64,
     },
+    /// A lower-priority session was checkpointed out of its slot
+    /// (QoS preemption); the request goes back to the waiting queue with
+    /// its resumable state attached.  Recorded as a span when the
+    /// checkpoint has a modeled cost (`dur_ns` covers it).
+    Preempt {
+        /// Request id of the evicted session.
+        id: u64,
+        /// Slot the session was evicted from.
+        slot: usize,
+    },
+    /// A checkpointed session was restored into a slot and resumed
+    /// decoding.  Recorded as a span when the restore has a modeled cost.
+    Restore {
+        /// Request id of the resumed session.
+        id: u64,
+        /// Slot the session was restored into.
+        slot: usize,
+    },
     /// Terminal reply sent — exactly one per submitted request.
     Terminal {
         /// Request id.
@@ -132,6 +150,8 @@ impl EventKind {
             EventKind::SlotGrant { .. } => "slot_grant",
             EventKind::PrefillChunk { .. } => "prefill_chunk",
             EventKind::FirstToken { .. } => "first_token",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Restore { .. } => "restore",
             EventKind::Terminal { .. } => "terminal",
             EventKind::Cycle { .. } => "cycle",
             EventKind::Depth { .. } => "depth",
@@ -147,6 +167,8 @@ impl EventKind {
             | EventKind::SlotGrant { id, .. }
             | EventKind::PrefillChunk { id, .. }
             | EventKind::FirstToken { id }
+            | EventKind::Preempt { id, .. }
+            | EventKind::Restore { id, .. }
             | EventKind::Terminal { id, .. } => Some(id),
             EventKind::Cycle { .. } | EventKind::Depth { .. } => None,
         }

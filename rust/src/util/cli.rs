@@ -62,12 +62,21 @@ moepim trace [--tokens N] [--skew X] [--seed N] [--routing token|expert]";
     /// `moepim serve` flags.
     pub const SERVE: &str = "\
 moepim serve [--prompts N] [--gen N] [--prefill-chunk N] [--artifacts DIR]
+             [--qos] [--priority-mix X]
              [--trace-out FILE] [--metrics-file FILE]
 
   --prefill-chunk N   chunked prefill: admit prompts into slots at most N
                       tokens per router cycle, interleaved with decode
                       (0 = monolithic prefill, the default); output token
                       streams are bit-identical either way
+  --qos               priority-aware admission + decode-side preemption:
+                      interactive requests are admitted first and may
+                      checkpoint a batch-tier slot (KV + GO banks +
+                      sampling cursor) to claim it; preempted requests
+                      are requeued and restored bit-exactly later
+  --priority-mix X    interactive share in [0,1], strided deterministically
+                      over request ids (1.0 = all interactive, the
+                      default; ignored without --qos)
   on shutdown the full ServerStats dump is printed (the same pretty-printer
   the shardtest paths use)";
 
@@ -101,7 +110,13 @@ workload flags:
   --prompt N --gen N --skew X --slo-ms X --deadline-slack-us N
   --slots B --layers L --experts E
   --prefill-chunk N   chunked prefill budget (prompt tokens per slot per
-                      router cycle; 0 = monolithic admission, the default)";
+                      router cycle; 0 = monolithic admission, the default)
+  --qos               priority-aware admission + decode-side preemption
+                      (checkpoint/restore of batch-tier slots; off by
+                      default — the seed scheduling behaviour)
+  --priority-mix X    interactive share in [0,1], strided over request ids
+                      (1.0 = single-tier, the default; scenario presets
+                      carry their own mix, which this flag overrides)";
 
     /// `moepim loadtest` flags (v1 report; `--shards` upgrades to v2).
     pub const LOADTEST: &str = "\
@@ -129,9 +144,13 @@ moepim loadtest [workload flags] [--shards N] [--placement P]
             reproduces its report byte for byte
   --bench-scenarios run every preset on the virtual backend and write
             the BENCH_scenarios.json perf artifact (record-only)
+  --bench-qos run the mixed-tenants preset with QoS off and on and
+            write the BENCH_qos.json perf artifact (record-only:
+            interactive p99 TTFT, batch p99 e2e, preemption counters)
   --smoke   run the CI determinism matrix + real-server legs (incl.
             the 2-shard concurrent-cluster backpressure leg, the
-            record->replay->compare leg, and the scenario sweep)";
+            record->replay->compare leg, the scenario sweep, and the
+            mixed-tenant qos preemption leg)";
 
     /// `moepim calibrate` flags.
     pub const CALIBRATE: &str = "\
@@ -435,6 +454,24 @@ mod tests {
         assert!(usage::PERFCMP.contains("exit codes"));
         assert!(usage::ROOT.contains("perfcmp"));
         assert_eq!(usage::for_subcommand("perfcmp"), Some(usage::PERFCMP));
+    }
+
+    #[test]
+    fn usage_documents_the_qos_surface() {
+        // serve takes --qos/--priority-mix directly; loadtest/shardtest
+        // get them via the shared workload-flag block
+        assert!(usage::SERVE.contains("--qos"));
+        assert!(usage::SERVE.contains("--priority-mix"));
+        for sub in ["loadtest", "shardtest"] {
+            let help = usage::help_for(sub).expect("known subcommand");
+            assert!(help.contains("--qos"), "{sub}");
+            assert!(help.contains("--priority-mix"), "{sub}");
+        }
+        // the preemption mechanism and its bench/smoke legs are named
+        assert!(usage::SERVE.contains("checkpoint"));
+        assert!(usage::LOADTEST.contains("--bench-qos"));
+        assert!(usage::LOADTEST.contains("BENCH_qos.json"));
+        assert!(usage::LOADTEST.contains("qos preemption leg"));
     }
 
     #[test]

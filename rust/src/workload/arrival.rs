@@ -316,6 +316,12 @@ pub struct WorkloadSpec {
     /// per-token slack added to each request's deadline budget
     /// (`deadline_us = slo_e2e_ms·1000 + gen_len · this`)
     pub deadline_slack_us_per_token: u64,
+    /// fraction of requests in the interactive QoS tier, assigned
+    /// deterministically by id stride
+    /// ([`crate::workload::Priority::assign`]).  `1.0` (the default)
+    /// keeps the legacy single-tier behaviour: every request is
+    /// interactive and QoS-enabled backends behave exactly as before
+    pub interactive_mix: f64,
 }
 
 impl Default for WorkloadSpec {
@@ -332,6 +338,7 @@ impl Default for WorkloadSpec {
             },
             slo_e2e_ms: 250.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         }
     }
 }

@@ -24,6 +24,7 @@ use crate::coordinator::{Request, Response, Server};
 use crate::sched::PlannerStats;
 use crate::util::rng::Pcg32;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
+use crate::workload::policy::Priority;
 
 /// Vocabulary cap for generated prompt tokens (safely below every
 /// artifact set's vocab).
@@ -93,6 +94,18 @@ pub struct LoadOutcome {
     /// records the cluster-wide peak on every shard's outcome, and the
     /// merge takes the max)
     pub peak_intake_depth: usize,
+    /// batch-tier slots evicted (checkpoint → requeue) for a waiting
+    /// interactive request (0 unless the backend ran with QoS on — see
+    /// [`crate::coordinator::ServerOptions::qos`] /
+    /// [`crate::workload::VirtualConfig::qos`])
+    pub preemptions: u64,
+    /// checkpointed sessions resumed into a slot (`<= preemptions`;
+    /// every preempted request is restored or terminally replied exactly
+    /// once)
+    pub restores: u64,
+    /// total µs preempted requests spent requeued between eviction and
+    /// resume
+    pub preempted_wait_us: u64,
     /// unix-epoch µs of the backend's first dispatch (`None`: virtual
     /// clock, or never dispatched); with
     /// [`LoadOutcome::last_dispatch_unix_us`] this is the router
@@ -154,7 +167,9 @@ pub fn request_for(spec: &WorkloadSpec, r: &RequestSpec) -> Request {
     let prompt: Vec<i32> = (0..r.prompt_len)
         .map(|_| rng.gen_range(PROMPT_VOCAB) as i32)
         .collect();
-    Request::new(r.id, prompt, r.gen_len).with_deadline_us(r.deadline_us)
+    Request::new(r.id, prompt, r.gen_len)
+        .with_deadline_us(r.deadline_us)
+        .with_priority(Priority::assign(r.id, spec.interactive_mix))
 }
 
 /// Run `spec` against a live server and collect every terminal reply.
@@ -207,6 +222,10 @@ pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
         prefill_chunks: stats.prefill_chunks - before.prefill_chunks,
         shed_requests: stats.shed_requests - before.shed_requests,
         peak_intake_depth: 0,
+        preemptions: stats.preemptions - before.preemptions,
+        restores: stats.restores - before.restores,
+        preempted_wait_us: stats.preempted_wait_us
+            - before.preempted_wait_us,
         first_dispatch_unix_us: stats.first_dispatch_unix_us,
         last_dispatch_unix_us: stats.last_dispatch_unix_us,
         duration_s,

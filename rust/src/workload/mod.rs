@@ -72,7 +72,7 @@ pub use driver::{
     LoadOutcome, Sample,
 };
 pub use hist::LatencyHistogram;
-pub use policy::{AdmissionPolicy, QueuedMeta};
+pub use policy::{AdmissionPolicy, Priority, QueuedMeta};
 pub use record::{
     RecordedTrace, TraceBackend, TraceRecorder, TraceRequest, TRACE_SCHEMA,
 };

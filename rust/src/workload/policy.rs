@@ -18,6 +18,63 @@
 //! case, but never indefinitely ("SJF must not starve", pinned in
 //! `rust/tests/loadtest_virtual.rs`).
 
+/// QoS tier of one request.  Ordered: [`Priority::Batch`] <
+/// [`Priority::Interactive`], so `max` picks the more urgent tier.
+///
+/// With QoS enabled the router serves waiting interactive requests
+/// before batch ones (slot reservation), and a waiting interactive
+/// request may preempt a batch-tier slot (checkpoint → requeue — see
+/// DESIGN.md §Preemption & QoS).  With QoS disabled the tier is carried
+/// but ignored, preserving the seed scheduling behaviour exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Throughput tier: preemptible, admitted only when no interactive
+    /// request waits (under QoS).
+    Batch,
+    /// Latency tier: admitted first, never preempted.
+    Interactive,
+}
+
+impl Priority {
+    /// The spelling used in CLI flags and report JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` on unknown input.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "batch" | "BATCH" => Some(Priority::Batch),
+            "interactive" | "INTERACTIVE" => Some(Priority::Interactive),
+            _ => None,
+        }
+    }
+
+    /// Deterministic tier assignment for request `id` under an
+    /// `interactive_mix` fraction in `[0, 1]`: the evenly-strided rule
+    /// `floor((id+1)·mix) > floor(id·mix)` marks ~`mix` of all ids
+    /// interactive, spread uniformly through the id space (mix `0.25` →
+    /// ids 3, 7, 11, …).  A pure function of `(id, mix)` — no rng stream
+    /// — so tests and the sharded fan-out can recompute any request's
+    /// tier without replaying the workload.
+    pub fn assign(id: u64, interactive_mix: f64) -> Self {
+        let mix = interactive_mix.clamp(0.0, 1.0);
+        if mix >= 1.0 {
+            return Priority::Interactive;
+        }
+        let before = (id as f64 * mix).floor();
+        let after = ((id + 1) as f64 * mix).floor();
+        if after > before {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        }
+    }
+}
+
 /// What the policy knows about one waiting request.  `queue[0]` is the
 /// oldest (arrival order).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -190,5 +247,30 @@ mod tests {
             assert_eq!(AdmissionPolicy::parse(p.label()), Some(p));
         }
         assert_eq!(AdmissionPolicy::parse("lifo"), None);
+    }
+
+    #[test]
+    fn priority_orders_interactive_above_batch() {
+        assert!(Priority::Interactive > Priority::Batch);
+        for p in [Priority::Batch, Priority::Interactive] {
+            assert_eq!(Priority::parse(p.label()), Some(p));
+        }
+        assert_eq!(Priority::parse("premium"), None);
+    }
+
+    #[test]
+    fn priority_assign_is_an_even_stride() {
+        // mix 1.0 keeps the legacy all-interactive behaviour.
+        assert!((0..64).all(|i| Priority::assign(i, 1.0) == Priority::Interactive));
+        // mix 0.0 demotes everything.
+        assert!((0..64).all(|i| Priority::assign(i, 0.0) == Priority::Batch));
+        // The stride hits ~mix of ids, evenly spread: mix 0.25 -> 3,7,11,...
+        let hits: Vec<u64> = (0..16)
+            .filter(|&i| Priority::assign(i, 0.25) == Priority::Interactive)
+            .collect();
+        assert_eq!(hits, vec![3, 7, 11, 15]);
+        // Out-of-range mixes clamp rather than misbehave.
+        assert_eq!(Priority::assign(5, 2.5), Priority::Interactive);
+        assert_eq!(Priority::assign(5, -1.0), Priority::Batch);
     }
 }

@@ -543,6 +543,7 @@ fn spec_json(spec: &WorkloadSpec) -> Json {
             "deadline_slack_us_per_token",
             Json::num(spec.deadline_slack_us_per_token as f64),
         ),
+        ("interactive_mix", Json::num(spec.interactive_mix)),
     ])
 }
 
@@ -627,6 +628,12 @@ fn spec_from_json(w: &Json) -> Result<WorkloadSpec, String> {
             w,
             "deadline_slack_us_per_token",
         )?,
+        // additive field: traces recorded before QoS tiering carry no
+        // mix and replay single-tier (the legacy behaviour)
+        interactive_mix: w
+            .get("interactive_mix")
+            .and_then(Json::as_f64)
+            .unwrap_or(1.0),
     })
 }
 
@@ -714,6 +721,23 @@ mod tests {
             let back = spec_from_json(&doc).expect("spec loads");
             assert_eq!(back, spec);
         }
+    }
+
+    #[test]
+    fn interactive_mix_round_trips_and_defaults_single_tier() {
+        let spec = WorkloadSpec {
+            interactive_mix: 0.25,
+            ..WorkloadSpec::default()
+        };
+        let back = spec_from_json(&spec_json(&spec)).expect("spec loads");
+        assert_eq!(back.interactive_mix, 0.25);
+        // a pre-QoS trace (no interactive_mix key) replays single-tier
+        let mut doc = spec_json(&spec);
+        if let Json::Obj(m) = &mut doc {
+            m.remove("interactive_mix");
+        }
+        let legacy = spec_from_json(&doc).expect("legacy spec loads");
+        assert_eq!(legacy.interactive_mix, 1.0);
     }
 
     #[test]

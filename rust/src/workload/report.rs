@@ -128,7 +128,8 @@ pub fn metrics_registry(s: &SloSummary, out: &LoadOutcome)
     registry_parts(s, out.slots, out.peak_waiting, out.peak_intake_depth,
                    out.batch_dispatches, out.single_dispatches,
                    out.mean_batch_occupancy(), out.prefill_chunks,
-                   out.shed_requests, &out.planner, out.duration_s)
+                   out.shed_requests, out.preemptions, out.restores,
+                   out.preempted_wait_us, &out.planner, out.duration_s)
 }
 
 /// [`metrics_registry`] over a sharded fan-out's [`MergedLoad`] — the
@@ -138,7 +139,8 @@ pub fn metrics_registry_merged(m: &MergedLoad) -> MetricsRegistry {
     registry_parts(&m.summary, m.slots, m.peak_waiting,
                    m.peak_intake_depth, m.batch_dispatches,
                    m.single_dispatches, m.mean_batch_occupancy(),
-                   m.prefill_chunks, m.shed_requests, &m.planner,
+                   m.prefill_chunks, m.shed_requests, m.preemptions,
+                   m.restores, m.preempted_wait_us, &m.planner,
                    m.duration_s)
 }
 
@@ -147,6 +149,7 @@ fn registry_parts(s: &SloSummary, slots: usize, peak_waiting: usize,
                   peak_intake_depth: usize, batch_dispatches: u64,
                   single_dispatches: u64, occupancy: f64,
                   prefill_chunks: u64, shed_requests: u64,
+                  preemptions: u64, restores: u64, preempted_wait_us: u64,
                   planner: &PlannerStats, duration_s: f64)
     -> MetricsRegistry {
     let mut reg = MetricsRegistry::new();
@@ -165,6 +168,14 @@ fn registry_parts(s: &SloSummary, slots: usize, peak_waiting: usize,
                 "Single-token fallback dispatches", single_dispatches);
     reg.counter("moepim_prefill_chunks_total",
                 "Prefill chunk advances dispatched", prefill_chunks);
+    reg.counter("moepim_preemptions_total",
+                "Batch-tier slots preempted for interactive arrivals",
+                preemptions);
+    reg.counter("moepim_restores_total",
+                "Checkpointed slots restored and resumed", restores);
+    reg.counter("moepim_preempted_wait_us_total",
+                "Total microseconds preempted requests spent requeued",
+                preempted_wait_us);
     reg.counter("moepim_planner_steps_total",
                 "Layer steps priced by the batch planner", planner.steps);
     reg.counter("moepim_planner_cycles_total",
@@ -219,6 +230,7 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("requests", Json::num(spec.requests as f64)),
                 ("process", Json::str(spec.arrival.label())),
                 ("sizes", Json::str(spec.sizes.label())),
+                ("interactive_mix", Json::num(spec.interactive_mix)),
                 ("policy", Json::str(policy.label())),
                 ("clock", Json::str(out.clock)),
                 ("slots", Json::num(out.slots as f64)),
@@ -268,6 +280,10 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("shed_requests", Json::num(out.shed_requests as f64)),
                 ("peak_intake_depth",
                  Json::num(out.peak_intake_depth as f64)),
+                ("preemptions", Json::num(out.preemptions as f64)),
+                ("restores", Json::num(out.restores as f64)),
+                ("preempted_wait_us",
+                 Json::num(out.preempted_wait_us as f64)),
             ]),
         ),
         (
@@ -359,6 +375,7 @@ pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("requests", Json::num(spec.requests as f64)),
                 ("process", Json::str(spec.arrival.label())),
                 ("sizes", Json::str(spec.sizes.label())),
+                ("interactive_mix", Json::num(spec.interactive_mix)),
                 ("policy", Json::str(policy.label())),
                 ("clock", Json::str(m.clock)),
                 ("slots", Json::num(m.slots as f64)),
@@ -413,6 +430,10 @@ pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("shed_requests", Json::num(m.shed_requests as f64)),
                 ("peak_intake_depth",
                  Json::num(m.peak_intake_depth as f64)),
+                ("preemptions", Json::num(m.preemptions as f64)),
+                ("restores", Json::num(m.restores as f64)),
+                ("preempted_wait_us",
+                 Json::num(m.preempted_wait_us as f64)),
             ]),
         ),
         (

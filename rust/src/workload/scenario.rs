@@ -87,6 +87,7 @@ pub fn scenario_spec(name: &str, seed: u64) -> Option<WorkloadSpec> {
                 },
                 slo_e2e_ms: 250.0,
                 deadline_slack_us_per_token: 500,
+                interactive_mix: 1.0,
             })
         }
         "flash-crowd" => Some(WorkloadSpec {
@@ -105,6 +106,7 @@ pub fn scenario_spec(name: &str, seed: u64) -> Option<WorkloadSpec> {
             },
             slo_e2e_ms: 150.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         }),
         "long-prompt-flood" => Some(WorkloadSpec {
             seed,
@@ -115,6 +117,7 @@ pub fn scenario_spec(name: &str, seed: u64) -> Option<WorkloadSpec> {
             sizes: SizeModel::Uniform { prompt: (48, 90), gen: (1, 4) },
             slo_e2e_ms: 400.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         }),
         "mixed-tenants" => Some(WorkloadSpec {
             seed,
@@ -132,6 +135,9 @@ pub fn scenario_spec(name: &str, seed: u64) -> Option<WorkloadSpec> {
             },
             slo_e2e_ms: 250.0,
             deadline_slack_us_per_token: 500,
+            // the interactive tenant's ~40-of-64 share, strided over
+            // request ids so `--qos` runs get a genuine two-tier queue
+            interactive_mix: 0.625,
         }),
         _ => None,
     }

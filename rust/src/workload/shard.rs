@@ -577,6 +577,9 @@ pub fn run_against_cluster(cluster: &Cluster, spec: &WorkloadSpec)
                     prefill_chunks: st.prefill_chunks,
                     shed_requests: st.shed_requests + stats.shed[i],
                     peak_intake_depth: stats.peak_intake_depth,
+                    preemptions: st.preemptions,
+                    restores: st.restores,
+                    preempted_wait_us: st.preempted_wait_us,
                     first_dispatch_unix_us: st.first_dispatch_unix_us,
                     last_dispatch_unix_us: st.last_dispatch_unix_us,
                     duration_s,
@@ -621,6 +624,14 @@ pub struct MergedLoad {
     /// cluster run records the cluster-wide peak on every shard, so the
     /// max recovers it; 0 for single-server and virtual runs)
     pub peak_intake_depth: usize,
+    /// QoS preemptions (batch-tier slots checkpointed and requeued for
+    /// an interactive arrival), summed across shards; 0 with QoS off
+    pub preemptions: u64,
+    /// checkpointed slots restored and resumed, summed across shards
+    pub restores: u64,
+    /// total µs preempted requests spent requeued (preempt → slot
+    /// re-grant), summed across shards
+    pub preempted_wait_us: u64,
     /// planner telemetry with every counter summed across shards
     pub planner: PlannerStats,
     /// `"virtual"` or `"wall"`, from the shard outcomes
@@ -679,6 +690,9 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         prefill_chunks: 0,
         shed_requests: 0,
         peak_intake_depth: 0,
+        preemptions: 0,
+        restores: 0,
+        preempted_wait_us: 0,
         planner: PlannerStats::default(),
         clock: "virtual",
     };
@@ -701,6 +715,9 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         merged.shed_requests += s.outcome.shed_requests;
         merged.peak_intake_depth =
             merged.peak_intake_depth.max(s.outcome.peak_intake_depth);
+        merged.preemptions += s.outcome.preemptions;
+        merged.restores += s.outcome.restores;
+        merged.preempted_wait_us += s.outcome.preempted_wait_us;
         merged.planner.steps += s.outcome.planner.steps;
         merged.planner.work += s.outcome.planner.work;
         merged.planner.cycles += s.outcome.planner.cycles;
@@ -811,6 +828,7 @@ mod tests {
             sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 200,
+            interactive_mix: 1.0,
         }
     }
 

@@ -33,7 +33,7 @@ use crate::sched::BatchPlanner;
 use crate::util::rng::Pcg32;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
 use crate::workload::driver::{LoadOutcome, Sample};
-use crate::workload::policy::{AdmissionPolicy, QueuedMeta};
+use crate::workload::policy::{AdmissionPolicy, Priority, QueuedMeta};
 
 /// Salt for the per-request expert-routing stream — deliberately distinct
 /// from `driver::PROMPT_SALT` so routing and prompt-token draws of the
@@ -86,6 +86,19 @@ pub struct VirtualConfig {
     /// the cycle's planned step so contention telemetry sees prefill
     /// occupancy of the shared peripheral groups.
     pub prefill_chunk: usize,
+    /// QoS tiering: reserve freed slots for waiting interactive-tier
+    /// requests and preempt batch-tier slots (checkpoint → requeue →
+    /// restore) when interactive arrivals would otherwise queue behind
+    /// them — the virtual mirror of
+    /// [`crate::coordinator::ServerOptions::qos`].  Off (the default)
+    /// the event loop is byte-identical to the seed router.
+    pub qos: bool,
+    /// planner cycles charged for one checkpoint *or* one restore of a
+    /// slot's KV/GO banks.  Slot churn is never free: preempting and
+    /// resuming a request each stall the engine for this many
+    /// [`VirtualConfig::cycle_ns`] (regression pinned in
+    /// `rust/tests/loadtest_virtual.rs`).
+    pub checkpoint_cycles: u64,
 }
 
 impl Default for VirtualConfig {
@@ -103,6 +116,8 @@ impl Default for VirtualConfig {
             prefill_ns_per_token: 4_000,
             max_seq: 96,
             prefill_chunk: 0,
+            qos: false,
+            checkpoint_cycles: 250,
         }
     }
 }
@@ -112,6 +127,20 @@ struct VQueued {
     idx: usize,
     arrived_ns: u64,
     passed_over: u32,
+    /// checkpointed decode state when this entry is a preempted request
+    /// waiting to resume (`None` for fresh arrivals, and for preempted
+    /// prefills — those restart their prefill deterministically)
+    resume: Option<VResume>,
+}
+
+/// A preempted slot's stashed decode state — the virtual analogue of
+/// [`crate::coordinator::SlotCheckpoint`]: the whole [`VLive`], router
+/// stream included, so the resumed expert trajectory is bit-identical
+/// to an uninterrupted run; plus the preemption instant, for the
+/// `preempted_wait_us` telemetry.
+struct VResume {
+    live: VLive,
+    preempted_ns: u64,
 }
 
 /// One live serving slot.
@@ -176,6 +205,144 @@ pub(crate) fn route_rng(spec_seed: u64, id: u64) -> Pcg32 {
 /// decode stream above is untouched by chunking).
 fn prefill_rng(spec_seed: u64, id: u64) -> Pcg32 {
     Pcg32::new(spec_seed ^ id.wrapping_mul(PREFILL_ROUTE_SALT))
+}
+
+/// Pick the index of the next waiting entry to admit.  Under QoS, freed
+/// slots are reserved for the interactive tier: batch entries are only
+/// eligible when no interactive request waits (the admission half of the
+/// no-priority-inversion guarantee; the preemption pass is the other
+/// half).  With `qos` off — or a single-tier queue — this reduces
+/// exactly to the seed rule, so the loop stays byte-identical.
+fn v_pick(policy: &AdmissionPolicy, waiting: &VecDeque<VQueued>,
+          reqs: &[RequestSpec], mix: f64, now: u64, qos: bool) -> usize {
+    let all = || (0..waiting.len()).collect::<Vec<usize>>();
+    let candidates: Vec<usize> = if qos {
+        let interactive: Vec<usize> = (0..waiting.len())
+            .filter(|&i| {
+                Priority::assign(reqs[waiting[i].idx].id, mix)
+                    == Priority::Interactive
+            })
+            .collect();
+        if interactive.is_empty() { all() } else { interactive }
+    } else {
+        all()
+    };
+    if matches!(policy, AdmissionPolicy::Fifo) {
+        return candidates[0];
+    }
+    let metas: Vec<QueuedMeta> = candidates
+        .iter()
+        .map(|&i| {
+            let w = &waiting[i];
+            QueuedMeta {
+                gen_len: reqs[w.idx].gen_len,
+                deadline_us: Some(reqs[w.idx].deadline_us),
+                waited_us: (now - w.arrived_ns) / 1000,
+                passed_over: w.passed_over,
+            }
+        })
+        .collect();
+    candidates[policy.select(&metas).min(candidates.len() - 1)]
+}
+
+/// Deadline-aware victim selection, mirroring the real router's rule:
+/// among batch-tier occupied slots (live or filling), evict the one with
+/// the *largest* remaining deadline slack — a near-deadline batch job is
+/// evicted last — breaking ties toward the higher slot index.
+fn v_preempt_victim(live: &[Option<VLive>], filling: &[Option<VFill>],
+                    reqs: &[RequestSpec], mix: f64, now: u64)
+    -> Option<usize> {
+    (0..live.len())
+        .filter_map(|s| {
+            let (idx, arrived_ns) = match (&live[s], &filling[s]) {
+                (Some(l), _) => (l.idx, l.arrived_ns),
+                (_, Some(f)) => (f.idx, f.arrived_ns),
+                _ => return None,
+            };
+            if Priority::assign(reqs[idx].id, mix) != Priority::Batch {
+                return None;
+            }
+            let slack = reqs[idx].deadline_us as i64
+                - ((now - arrived_ns) / 1000) as i64;
+            Some((slack, s))
+        })
+        .max()
+        .map(|(_, s)| s)
+}
+
+/// Re-insert a preempted entry into the waiting queue preserving arrival
+/// order (the invariant every admission policy assumes of the queue).
+fn v_requeue(waiting: &mut VecDeque<VQueued>, w: VQueued) {
+    let pos = waiting
+        .iter()
+        .position(|o| o.arrived_ns > w.arrived_ns)
+        .unwrap_or(waiting.len());
+    waiting.insert(pos, w);
+}
+
+/// The QoS preemption pass, shared verbatim by both event loops: when
+/// more interactive requests wait than slots are free, checkpoint and
+/// requeue batch-tier victims (largest slack first) until the shortfall
+/// is covered or the batch tier is exhausted.  Checkpointing a live
+/// slot's KV/GO banks stalls the engine for
+/// [`VirtualConfig::checkpoint_cycles`]; a mid-prefill victim has no
+/// decode state to save — its slot is simply released and the prefill
+/// restarts on re-admission (the already-charged chunks are the cost).
+#[allow(clippy::too_many_arguments)]
+fn v_preempt_pass(cfg: &VirtualConfig, reqs: &[RequestSpec], mix: f64,
+                  now: &mut u64, waiting: &mut VecDeque<VQueued>,
+                  live: &mut [Option<VLive>],
+                  filling: &mut [Option<VFill>], preemptions: &mut u64,
+                  peak_waiting: &mut usize, sink: &mut TraceSink) {
+    if !cfg.qos || waiting.is_empty() {
+        return;
+    }
+    let free = (0..live.len())
+        .filter(|&s| live[s].is_none() && filling[s].is_none())
+        .count();
+    let interactive_waiting = waiting
+        .iter()
+        .filter(|w| {
+            Priority::assign(reqs[w.idx].id, mix) == Priority::Interactive
+        })
+        .count();
+    let mut need = interactive_waiting.saturating_sub(free);
+    while need > 0 {
+        let Some(s) = v_preempt_victim(live, filling, reqs, mix, *now)
+        else {
+            break;
+        };
+        if let Some(l) = live[s].take() {
+            let start = *now;
+            *now += cfg.checkpoint_cycles * cfg.cycle_ns;
+            *preemptions += 1;
+            sink.record_span(
+                start,
+                *now - start,
+                EventKind::Preempt { id: reqs[l.idx].id, slot: s },
+            );
+            v_requeue(waiting, VQueued {
+                idx: l.idx,
+                arrived_ns: l.arrived_ns,
+                passed_over: 0,
+                resume: Some(VResume { live: l, preempted_ns: *now }),
+            });
+        } else if let Some(f) = filling[s].take() {
+            *preemptions += 1;
+            sink.record(
+                *now,
+                EventKind::Preempt { id: reqs[f.idx].id, slot: s },
+            );
+            v_requeue(waiting, VQueued {
+                idx: f.idx,
+                arrived_ns: f.arrived_ns,
+                passed_over: 0,
+                resume: None,
+            });
+        }
+        *peak_waiting = (*peak_waiting).max(waiting.len());
+        need -= 1;
+    }
 }
 
 /// Sample `k` distinct experts from a zipf-skewed popularity profile.
@@ -265,6 +432,8 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
         if closed > 0 { reqs.len().min(closed) } else { reqs.len() };
 
     let chunk = cfg.prefill_chunk;
+    let qos = cfg.qos;
+    let mix = spec.interactive_mix;
     let mut planner =
         BatchPlanner::new(cfg.n_experts.max(1), cfg.group_size.max(1),
                           cfg.schedule);
@@ -280,6 +449,9 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut single_dispatches = 0u64;
     let mut prefill_chunks = 0u64;
     let mut cycle_idx = 0u64;
+    let mut preemptions = 0u64;
+    let mut restores = 0u64;
+    let mut preempted_wait_us = 0u64;
 
     loop {
         // ---- 1. ingest arrivals due by now --------------------------------
@@ -314,39 +486,52 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
                 }
                 continue;
             }
-            waiting.push_back(VQueued { idx, arrived_ns: t, passed_over: 0 });
+            waiting.push_back(VQueued {
+                idx,
+                arrived_ns: t,
+                passed_over: 0,
+                resume: None,
+            });
             peak_waiting = peak_waiting.max(waiting.len());
         }
 
-        // ---- 2. policy-driven slot admission ------------------------------
+        // ---- 2a. QoS preemption pass --------------------------------------
+        v_preempt_pass(cfg, reqs, mix, &mut now, &mut waiting, &mut live,
+                       &mut filling, &mut preemptions, &mut peak_waiting,
+                       sink);
+
+        // ---- 2b. policy-driven slot admission (QoS: interactive first) ----
         while !waiting.is_empty() {
             let Some(slot) = (0..slots)
                 .find(|&s| live[s].is_none() && filling[s].is_none())
             else {
                 break;
             };
-            let w = if matches!(policy, AdmissionPolicy::Fifo) {
-                waiting.pop_front().expect("waiting non-empty")
-            } else {
-                let metas: Vec<QueuedMeta> = waiting
-                    .iter()
-                    .map(|w| QueuedMeta {
-                        gen_len: reqs[w.idx].gen_len,
-                        deadline_us: Some(reqs[w.idx].deadline_us),
-                        waited_us: (now - w.arrived_ns) / 1000,
-                        passed_over: w.passed_over,
-                    })
-                    .collect();
-                let pick = policy.select(&metas);
-                let w =
-                    waiting.remove(pick).expect("selected index in range");
-                // mirror of the server rule: only entries the pick jumped
-                // over (indices < pick) count as passed over
-                for o in waiting.iter_mut().take(pick) {
-                    o.passed_over += 1;
-                }
-                w
-            };
+            let pick = v_pick(&policy, &waiting, reqs, mix, now, qos);
+            let w = waiting.remove(pick).expect("selected index in range");
+            // mirror of the server rule: only entries the pick jumped
+            // over (indices < pick) count as passed over
+            for o in waiting.iter_mut().take(pick) {
+                o.passed_over += 1;
+            }
+            if let Some(res) = w.resume {
+                // resuming a preempted slot: restoring the checkpointed
+                // banks is priced like the checkpoint was, and the
+                // stashed session continues exactly where it left off —
+                // admission timings, banked tokens and the router stream
+                // all survive the round trip
+                let start = now;
+                now += cfg.checkpoint_cycles * cfg.cycle_ns;
+                restores += 1;
+                preempted_wait_us += (start - res.preempted_ns) / 1000;
+                sink.record_span(
+                    start,
+                    now - start,
+                    EventKind::Restore { id: reqs[res.live.idx].id, slot },
+                );
+                live[slot] = Some(res.live);
+                continue;
+            }
             let r = &reqs[w.idx];
             if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
                 // admission failure: terminal error reply, never admitted
@@ -622,6 +807,9 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
         prefill_chunks,
         shed_requests: 0,
         peak_intake_depth: 0,
+        preemptions,
+        restores,
+        preempted_wait_us,
         first_dispatch_unix_us: None,
         last_dispatch_unix_us: None,
         duration_s: now as f64 / 1e9,
@@ -668,6 +856,9 @@ fn finish_sample(reqs: &[RequestSpec], l: &VLive, now: u64) -> Sample {
 struct VBackend {
     cfg: VirtualConfig,
     seed: u64,
+    /// interactive-tier fraction (see [`Priority::assign`]) — carried
+    /// from the spec so the pump can recompute any request's tier
+    mix: f64,
     policy: AdmissionPolicy,
     /// requests assigned to this backend, arrival order; local index is
     /// the sample's `submit_seq`, matching a static shard's subset run
@@ -687,18 +878,22 @@ struct VBackend {
     single_dispatches: u64,
     prefill_chunks: u64,
     cycle_idx: u64,
+    preemptions: u64,
+    restores: u64,
+    preempted_wait_us: u64,
     /// per-backend trace sink (off unless the caller enables tracing);
     /// stamped on this backend's own virtual clock
     sink: TraceSink,
 }
 
 impl VBackend {
-    fn new(cfg: &VirtualConfig, seed: u64, policy: AdmissionPolicy)
-        -> VBackend {
+    fn new(cfg: &VirtualConfig, seed: u64, mix: f64,
+           policy: AdmissionPolicy) -> VBackend {
         let slots = cfg.slots.max(1);
         VBackend {
             cfg: cfg.clone(),
             seed,
+            mix,
             policy,
             reqs: Vec::new(),
             inbox: VecDeque::new(),
@@ -716,6 +911,9 @@ impl VBackend {
             single_dispatches: 0,
             prefill_chunks: 0,
             cycle_idx: 0,
+            preemptions: 0,
+            restores: 0,
+            preempted_wait_us: 0,
             sink: TraceSink::off(),
         }
     }
@@ -798,41 +996,51 @@ impl VBackend {
                     idx,
                     arrived_ns: t,
                     passed_over: 0,
+                    resume: None,
                 });
                 self.peak_waiting =
                     self.peak_waiting.max(self.waiting.len());
             }
 
-            // ---- 2. policy-driven slot admission --------------------
+            // ---- 2a. QoS preemption pass ----------------------------
+            v_preempt_pass(&cfg, &self.reqs, self.mix, &mut self.now,
+                           &mut self.waiting, &mut self.live,
+                           &mut self.filling, &mut self.preemptions,
+                           &mut self.peak_waiting, &mut self.sink);
+
+            // ---- 2b. policy-driven slot admission -------------------
             while !self.waiting.is_empty() {
                 let Some(slot) = (0..slots).find(|&s| {
                     self.live[s].is_none() && self.filling[s].is_none()
                 }) else {
                     break;
                 };
-                let w = if matches!(self.policy, AdmissionPolicy::Fifo) {
-                    self.waiting.pop_front().expect("waiting non-empty")
-                } else {
-                    let metas: Vec<QueuedMeta> = self
-                        .waiting
-                        .iter()
-                        .map(|w| QueuedMeta {
-                            gen_len: self.reqs[w.idx].gen_len,
-                            deadline_us: Some(self.reqs[w.idx].deadline_us),
-                            waited_us: (self.now - w.arrived_ns) / 1000,
-                            passed_over: w.passed_over,
-                        })
-                        .collect();
-                    let pick = self.policy.select(&metas);
-                    let w = self
-                        .waiting
-                        .remove(pick)
-                        .expect("selected index in range");
-                    for o in self.waiting.iter_mut().take(pick) {
-                        o.passed_over += 1;
-                    }
-                    w
-                };
+                let pick = v_pick(&self.policy, &self.waiting, &self.reqs,
+                                  self.mix, self.now, cfg.qos);
+                let w = self
+                    .waiting
+                    .remove(pick)
+                    .expect("selected index in range");
+                for o in self.waiting.iter_mut().take(pick) {
+                    o.passed_over += 1;
+                }
+                if let Some(res) = w.resume {
+                    let start = self.now;
+                    self.now += cfg.checkpoint_cycles * cfg.cycle_ns;
+                    self.restores += 1;
+                    self.preempted_wait_us +=
+                        (start - res.preempted_ns) / 1000;
+                    self.sink.record_span(
+                        start,
+                        self.now - start,
+                        EventKind::Restore {
+                            id: self.reqs[res.live.idx].id,
+                            slot,
+                        },
+                    );
+                    self.live[slot] = Some(res.live);
+                    continue;
+                }
                 let r = &self.reqs[w.idx];
                 if r.prompt_len == 0 || r.prompt_len >= cfg.max_seq {
                     self.sink.record(
@@ -1093,6 +1301,9 @@ impl VBackend {
             prefill_chunks: self.prefill_chunks,
             shed_requests: 0,
             peak_intake_depth: 0,
+            preemptions: self.preemptions,
+            restores: self.restores,
+            preempted_wait_us: self.preempted_wait_us,
             first_dispatch_unix_us: None,
             last_dispatch_unix_us: None,
             duration_s: self.now as f64 / 1e9,
@@ -1147,7 +1358,8 @@ pub fn run_virtual_live_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut front = TraceSink::on(trace);
     let mut backends: Vec<VBackend> = (0..n)
         .map(|_| {
-            let mut b = VBackend::new(cfg, spec.seed, policy);
+            let mut b =
+                VBackend::new(cfg, spec.seed, spec.interactive_mix, policy);
             b.sink = TraceSink::on(trace);
             b
         })
@@ -1204,6 +1416,7 @@ mod tests {
             sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 200,
+            interactive_mix: 1.0,
         }
     }
 
@@ -1390,6 +1603,62 @@ mod tests {
         let out = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
         assert_eq!(out.samples.len(), 24);
         assert!(out.samples.iter().all(|s| !s.ok && s.admit_seq.is_none()));
+    }
+
+    /// QoS with a single-tier workload (the default `interactive_mix` of
+    /// 1.0 marks every request interactive) never finds a batch victim
+    /// and never filters admission, so the event sequence — and the whole
+    /// outcome — matches the seed loop bit for bit.
+    #[test]
+    fn qos_with_single_tier_matches_the_seed_loop() {
+        let off = run_virtual(
+            &VirtualConfig::default(),
+            &base_spec(),
+            AdmissionPolicy::deadline(),
+        );
+        let on = run_virtual(
+            &VirtualConfig { qos: true, ..VirtualConfig::default() },
+            &base_spec(),
+            AdmissionPolicy::deadline(),
+        );
+        assert_eq!(off, on);
+        assert_eq!(on.preemptions, 0);
+        assert_eq!(on.restores, 0);
+    }
+
+    /// A tight interactive arrival behind a slot-saturating batch tier
+    /// preempts (checkpoint → requeue → restore) — and because the churn
+    /// is priced on the clock, the preempting run can never finish
+    /// faster than the undisturbed one on the same trace (the satellite
+    /// regression for free slot churn).
+    #[test]
+    fn qos_preempts_batch_tier_for_interactive_arrivals() {
+        let spec = WorkloadSpec {
+            requests: 10,
+            arrival: ArrivalProcess::Replay {
+                times_us: vec![0, 0, 0, 0, 300, 300, 300, 300, 300, 300],
+            },
+            sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 32 },
+            // mix 0.2 → ids 4 and 9 are interactive; 0–3 fill the slots
+            interactive_mix: 0.2,
+            ..base_spec()
+        };
+        let cfg = VirtualConfig { qos: true, ..VirtualConfig::default() };
+        let out = run_virtual(&cfg, &spec, AdmissionPolicy::deadline());
+        assert_eq!(out.samples.len(), 10);
+        assert!(out.samples.iter().all(|s| s.ok));
+        assert!(out.preemptions >= 1, "no preemption fired");
+        assert_eq!(out.restores, out.preemptions);
+        assert!(out.preempted_wait_us > 0);
+        let again = run_virtual(&cfg, &spec, AdmissionPolicy::deadline());
+        assert_eq!(out, again);
+        let base = run_virtual(
+            &VirtualConfig::default(),
+            &spec,
+            AdmissionPolicy::deadline(),
+        );
+        assert_eq!(base.preemptions, 0);
+        assert!(out.duration_s >= base.duration_s);
     }
 
     /// Satellite regression: coincident arrival timestamps (duplicate ns

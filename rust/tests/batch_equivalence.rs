@@ -187,3 +187,93 @@ fn batched_decode_matches_per_session_cached() {
         "monolithic admission after an aborted chunked prefill diverged"
     );
 }
+
+/// Preemption-equivalence legs (DESIGN.md §Preemption & QoS): a session
+/// checkpointed at decode step k and restored later — into a *different*
+/// slot, over a pool an interloping request has dirtied in between — must
+/// produce a token stream bit-identical to the never-preempted run, for
+/// k ∈ {0, 1, mid, last}.  The CI artifact matrix runs this at L=1 and
+/// L=3, pinning the cross-layer bank snapshot at both depths.
+#[test]
+fn preemption_checkpoint_restore_is_stream_invariant() {
+    let rt = Runtime::load_default().expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    );
+    let engine = ModelEngine::new(rt).with_sparse_moe(true);
+    let m = engine.model.clone();
+    assert!(m.batch_slots >= 2, "restore-into-another-slot needs >= 2");
+
+    let gen = 9usize;
+    let p = prompt(10, 4242, m.vocab);
+    let interloper = prompt(6, 777, m.vocab);
+    // never-preempted reference: the per-session cached stream the
+    // batched paths are already pinned to above
+    let reference =
+        engine.generate(&p, gen, DecodeMode::Cached).unwrap().tokens;
+
+    let mut batch = BatchEngine::new(engine);
+    // k = gen-2 is the last checkpointable step that still leaves a
+    // decode to run after the restore (k = gen-1 would make the tail
+    // comparison vacuous)
+    for k in [0usize, 1, gen / 2, gen - 2] {
+        let (slot, first) = batch.admit(&p).unwrap();
+        let mut stream = vec![first];
+        for _ in 0..k {
+            let (next, _plans) =
+                batch.decode_single(slot, *stream.last().unwrap()).unwrap();
+            stream.push(next);
+        }
+        let ckpt = batch.checkpoint_slot(slot).unwrap();
+        assert_eq!(ckpt.n_layers(), m.n_layers, "k={k}");
+        batch.release(slot);
+
+        // an interloper claims the freed slot and dirties the pooled
+        // KV/GO state the checkpoint must be independent of
+        let (islot, ifirst) = batch.admit(&interloper).unwrap();
+        let mut itail = ifirst;
+        for _ in 0..2 {
+            let (next, _plans) =
+                batch.decode_single(islot, itail).unwrap();
+            itail = next;
+        }
+
+        let rslot = batch.restore_slot(&ckpt).unwrap();
+        assert_ne!(rslot, islot, "k={k}: restore landed on a live slot");
+        while stream.len() < gen {
+            let (next, _plans) =
+                batch.decode_single(rslot, *stream.last().unwrap())
+                    .unwrap();
+            stream.push(next);
+        }
+        assert_eq!(
+            &stream, &reference,
+            "k={k}: preempted/restored stream diverged from the \
+             never-preempted run"
+        );
+        batch.release(rslot);
+        batch.release(islot);
+    }
+
+    // transactional discipline: a restore that finds no free slot fails
+    // without touching any live session, and succeeds once one frees up
+    let (slot_a, _first) = batch.admit(&p).unwrap();
+    let ckpt = batch.checkpoint_slot(slot_a).unwrap();
+    let mut filled = Vec::new();
+    while let Ok((s, _)) = batch.admit(&interloper) {
+        filled.push(s);
+    }
+    assert!(batch.free_slot().is_none());
+    assert!(batch.restore_slot(&ckpt).is_err(),
+            "restore into a full pool must fail");
+    let before = batch.session(slot_a).cloned();
+    assert!(before.is_some(), "failed restore disturbed a live session");
+    batch.release(filled[0]);
+    let rs = batch.restore_slot(&ckpt).unwrap();
+    assert_eq!(batch.session(rs), Some(&ckpt.session),
+               "restored session cursor mismatch");
+
+    // checkpointing an empty or mid-prefill slot is an error, not a wedge
+    batch.release(rs);
+    assert!(batch.checkpoint_slot(rs).is_err(),
+            "checkpoint of an empty slot must fail");
+}

@@ -37,6 +37,7 @@ fn spec(requests: usize) -> WorkloadSpec {
         sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
         slo_e2e_ms: 60_000.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     }
 }
 

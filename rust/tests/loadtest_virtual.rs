@@ -24,6 +24,7 @@ fn open_spec(arrival: ArrivalProcess) -> WorkloadSpec {
         },
         slo_e2e_ms: 50.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     }
 }
 
@@ -114,6 +115,7 @@ fn sjf_reorders_but_never_starves_fifo_never_reorders() {
         sizes: SizeModel::Uniform { prompt: (4, 8), gen: (1, 16) },
         slo_e2e_ms: 100.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     };
 
     let fifo = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
@@ -159,6 +161,7 @@ fn edf_completes_everything_and_reports_under_pressure() {
         sizes: SizeModel::Uniform { prompt: (4, 8), gen: (1, 16) },
         slo_e2e_ms: 100.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     };
     let edf = run_virtual(&cfg, &spec, AdmissionPolicy::deadline());
     assert_eq!(edf.samples.len(), 30);
@@ -200,6 +203,7 @@ fn chunked_prefill_improves_bursty_queue_p99() {
         sizes: SizeModel::Uniform { prompt: (48, 80), gen: (1, 2) },
         slo_e2e_ms: 250.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     };
     // a prefill-heavy chip (30 µs/token) in both runs — the comparison
     // turns exactly one knob, the chunk budget
@@ -285,6 +289,109 @@ fn chunked_prefill_improves_bursty_queue_p99() {
         bm.mean_us()
     );
     assert!(b_chunked.duration_s <= b_mono.duration_s * 1.5);
+}
+
+/// The QoS tentpole's virtual pin (DESIGN.md §Preemption & QoS): on a
+/// seeded two-tier workload where batch-tier requests saturate every
+/// slot, interactive p99 TTFT must meet a tight SLO *with* preemption
+/// and demonstrably violate it *without* — same spec, same seed, the
+/// only knob turned is `qos`.
+///
+/// Shape: 4 batch requests land at t=0 and fill all 4 default slots
+/// with 64-token generations (each slot busy for tens of decode cycles,
+/// ≥ 25 µs dispatch overhead per cycle ⇒ well over 1.5 ms of residency);
+/// 16 more requests arrive every 400 µs, of which ids 4/9/14/19 are
+/// interactive (mix 0.2).  Without preemption an interactive arrival
+/// waits out a whole batch generation before its first token; with it,
+/// the wait is one checkpoint (100 µs modeled) plus its own prefill.
+/// 800 µs sits between those regimes with a comfortable margin on both
+/// sides.
+#[test]
+fn qos_preemption_pins_interactive_ttft_under_batch_saturation() {
+    const TTFT_SLO_US: f64 = 800.0;
+    let spec = WorkloadSpec {
+        seed: 0x9105,
+        requests: 20,
+        arrival: ArrivalProcess::Replay {
+            times_us: (0..20u64)
+                .map(|i| if i < 4 { 0 } else { (i - 3) * 400 })
+                .collect(),
+        },
+        sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 64 },
+        slo_e2e_ms: 250.0,
+        deadline_slack_us_per_token: 500,
+        interactive_mix: 0.2,
+    };
+    let policy = AdmissionPolicy::deadline();
+    let qos_cfg = VirtualConfig { qos: true, ..VirtualConfig::default() };
+    let out = run_virtual(&qos_cfg, &spec, policy);
+    let control =
+        run_virtual(&VirtualConfig::default(), &spec, policy);
+
+    // both tiers fully served either way: QoS reshapes waiting, it never
+    // drops work
+    for (label, o) in [("qos", &out), ("control", &control)] {
+        assert_eq!(o.samples.len(), 20, "{label}: lost replies");
+        assert!(o.samples.iter().all(|s| s.ok), "{label}: a request failed");
+    }
+    assert!(out.preemptions >= 1, "saturated slots never preempted");
+    assert_eq!(out.restores, out.preemptions);
+    assert_eq!(control.preemptions, 0);
+
+    let interactive_ttft = |o: &moepim::workload::LoadOutcome| -> Vec<f64> {
+        let mut ts: Vec<f64> = o
+            .samples
+            .iter()
+            .filter(|s| {
+                moepim::workload::Priority::assign(s.id, 0.2)
+                    == moepim::workload::Priority::Interactive
+            })
+            .map(|s| s.ttft_us.expect("interactive request decoded"))
+            .collect();
+        ts.sort_by(f64::total_cmp);
+        ts
+    };
+    let qos_ttft = interactive_ttft(&out);
+    let control_ttft = interactive_ttft(&control);
+    assert_eq!(qos_ttft.len(), 4, "mix 0.2 over 20 ids → 4 interactive");
+    // p99 over 4 samples is the max — use it directly
+    let qos_p99 = *qos_ttft.last().unwrap();
+    let control_p99 = *control_ttft.last().unwrap();
+    assert!(
+        qos_p99 <= TTFT_SLO_US,
+        "interactive p99 TTFT misses SLO with preemption on: \
+         {qos_p99:.0} µs > {TTFT_SLO_US} µs"
+    );
+    assert!(
+        control_p99 > TTFT_SLO_US,
+        "control must violate the SLO or the pin proves nothing: \
+         {control_p99:.0} µs <= {TTFT_SLO_US} µs"
+    );
+    assert!(qos_p99 < control_p99);
+
+    // checkpoint/restore is modeled work on the virtual clock: the
+    // preempted run can never finish *earlier* than the untouched one
+    assert!(
+        out.duration_s >= control.duration_s,
+        "preemption charged no cycles: {} < {}",
+        out.duration_s,
+        control.duration_s
+    );
+
+    // the v1 report over the two-tier run is byte-identical per seed
+    let a = report::build(&spec, policy, &out).to_string_pretty();
+    let b = report::build(&spec, policy, &run_virtual(&qos_cfg, &spec, policy))
+        .to_string_pretty();
+    assert_eq!(a, b, "two-tier report not byte-identical");
+    let parsed = moepim::util::json::parse(&a).expect("valid JSON");
+    assert_eq!(
+        parsed.path(&["server", "preemptions"]).unwrap().as_f64(),
+        Some(out.preemptions as f64)
+    );
+    assert_eq!(
+        parsed.path(&["workload", "interactive_mix"]).unwrap().as_f64(),
+        Some(0.2)
+    );
 }
 
 #[test]

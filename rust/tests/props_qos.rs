@@ -1,0 +1,268 @@
+//! Property suite for decode-side preemption and QoS tiers
+//! (DESIGN.md §Preemption & QoS).
+//!
+//! Three laws, checked over randomized shapes and traffic:
+//!
+//! 1. **Checkpoint round-trip**: capturing a slot's KV/GO bank state plus
+//!    session cursor and restoring it — into the same slot, another slot,
+//!    or a freshly-built pool — leaves every bank byte-identical
+//!    (bit-level f32 comparison, padding included), for arbitrary layer
+//!    counts, slot counts, and fill depths.
+//! 2. **Slot conservation**: under QoS preemption every submitted request
+//!    still gets exactly one terminal reply, and every preemption of a
+//!    live decode session is matched by exactly one restore.
+//! 3. **No priority inversion**: scanning the span-event stream in
+//!    processing order, a batch-tier request is never granted (or
+//!    restored into) a slot while an interactive request is waiting.
+
+use moepim::cache::{GoCache, KvPool};
+use moepim::coordinator::{SlotCheckpoint, SlotSession};
+use moepim::obs::{EventKind, TraceSink};
+use moepim::util::prop::{self, Gen};
+use moepim::workload::{
+    run_virtual_traced, AdmissionPolicy, ArrivalProcess, Priority,
+    SizeModel, VirtualConfig, WorkloadSpec,
+};
+
+const MAX_SEQ: usize = 16;
+const N_HEADS: usize = 2;
+const D_HEAD: usize = 3;
+const N_EXPERTS: usize = 4;
+const GO_CAP: usize = 3;
+const OUT_DIM: usize = 5;
+
+/// One slot's worth of random per-layer padded K/V banks.
+fn random_banks(g: &mut Gen, layers: usize) -> Vec<Vec<f32>> {
+    (0..layers)
+        .map(|_| {
+            g.vec_f64(MAX_SEQ * N_HEADS * D_HEAD)
+                .into_iter()
+                .map(|x| x as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Random per-layer GO banks with populated score entries and outputs.
+fn random_go(g: &mut Gen, layers: usize) -> Vec<GoCache> {
+    (0..layers)
+        .map(|_| {
+            let mut bank = GoCache::new(N_EXPERTS, GO_CAP, OUT_DIM);
+            for token in 0..g.size(1, 6) {
+                let scores: Vec<f32> = g
+                    .vec_f64(N_EXPERTS)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                bank.update_scores(token, &scores);
+            }
+            for _ in 0..g.size(0, 4) {
+                let out: Vec<f32> = g
+                    .vec_f64(OUT_DIM)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                bank.store_output(g.usize(N_EXPERTS), g.usize(GO_CAP),
+                                  &out);
+            }
+            bank
+        })
+        .collect()
+}
+
+/// Bit-level slice equality: NaNs and signed zeros must survive the round
+/// trip too, so `==` on f32 is not strong enough in principle.
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn checkpoint_restore_round_trips_banks_byte_identically() {
+    prop::check(64, |g| {
+        let layers = g.size(1, 4);
+        let slots = g.size(1, 4);
+        let slot = g.usize(slots);
+        let valid = g.size(1, MAX_SEQ);
+
+        let mut kv = KvPool::new(layers, slots, MAX_SEQ, N_HEADS, D_HEAD);
+        let ks = random_banks(g, layers);
+        let vs = random_banks(g, layers);
+        kv.seed_slot(slot, &ks, &vs, valid);
+        let mut go = random_go(g, layers);
+        let go_before = go.clone();
+        let session = SlotSession {
+            ids: (0..valid as i32).collect(),
+            pos: valid,
+        };
+
+        let ckpt = SlotCheckpoint::capture(&kv, &go, &session, slot);
+        assert_eq!(ckpt.n_layers(), layers);
+        assert_eq!(ckpt.kv_len(), valid);
+
+        // dirty the pool and the banks the way a preempting request would
+        kv.reset_slot(slot);
+        let other_valid = g.size(1, MAX_SEQ);
+        kv.seed_slot(
+            slot,
+            &random_banks(g, layers),
+            &random_banks(g, layers),
+            other_valid,
+        );
+        for bank in go.iter_mut() {
+            bank.reset();
+        }
+
+        // restore into the original slot: byte-identical banks
+        ckpt.restore_into(&mut kv, &mut go, slot);
+        assert_eq!(kv.len(slot), valid, "valid row count lost");
+        for l in 0..layers {
+            assert!(bits_eq(kv.slot_k(l, slot), &ks[l]),
+                    "K bank layer {l} diverged");
+            assert!(bits_eq(kv.slot_v(l, slot), &vs[l]),
+                    "V bank layer {l} diverged");
+        }
+        assert_eq!(go, go_before, "GO banks diverged");
+        assert_eq!(ckpt.session, session, "session cursor diverged");
+
+        // restore may target a *different* slot of a fresh pool (the
+        // engine resumes into whatever slot is free)
+        let slot2 = g.usize(slots);
+        let mut kv2 = KvPool::new(layers, slots, MAX_SEQ, N_HEADS, D_HEAD);
+        let mut go2: Vec<GoCache> = (0..layers)
+            .map(|_| GoCache::new(N_EXPERTS, GO_CAP, OUT_DIM))
+            .collect();
+        ckpt.restore_into(&mut kv2, &mut go2, slot2);
+        assert_eq!(kv2.len(slot2), valid);
+        for l in 0..layers {
+            assert!(bits_eq(kv2.slot_k(l, slot2), &ks[l]),
+                    "cross-slot K bank layer {l} diverged");
+            assert!(bits_eq(kv2.slot_v(l, slot2), &vs[l]),
+                    "cross-slot V bank layer {l} diverged");
+        }
+        assert_eq!(go2, go_before, "cross-slot GO banks diverged");
+    });
+}
+
+/// A randomized two-tier flood on the virtual clock.  The first `slots`
+/// arrivals land at t=0 (filling every slot); the rest arrive on a random
+/// ascending timeline, so interactive stragglers must preempt.
+fn random_two_tier_spec(g: &mut Gen, slots: usize) -> WorkloadSpec {
+    let requests = slots + g.size(2, 8);
+    let mut t = 0u64;
+    let mut times = vec![0u64; slots];
+    for _ in slots..requests {
+        t += g.size(50, 400) as u64;
+        times.push(t);
+    }
+    WorkloadSpec {
+        seed: 0x9005 ^ g.case_seed,
+        requests,
+        arrival: ArrivalProcess::Replay { times_us: times },
+        sizes: SizeModel::Fixed {
+            prompt_len: 4 + g.usize(8),
+            gen_len: 8 + g.usize(28),
+        },
+        slo_e2e_ms: 50.0,
+        deadline_slack_us_per_token: 500,
+        interactive_mix: 0.1 + g.f64() * 0.4,
+    }
+}
+
+#[test]
+fn every_preempted_request_is_restored_or_replied_exactly_once() {
+    prop::check(32, |g| {
+        let cfg = VirtualConfig { qos: true, ..VirtualConfig::default() };
+        let spec = random_two_tier_spec(g, cfg.slots);
+        let mut sink = TraceSink::on(true);
+        let out = run_virtual_traced(
+            &cfg, &spec, AdmissionPolicy::deadline(), &mut sink);
+        let shard = sink.drain(Some(0), "vsim");
+
+        assert_eq!(out.samples.len(), spec.requests,
+                   "a request never reached a terminal reply");
+        assert!(out.samples.iter().all(|s| s.ok));
+
+        let mut terminals = vec![0u64; spec.requests];
+        let mut preempts = vec![0u64; spec.requests];
+        let mut restores = vec![0u64; spec.requests];
+        for ev in &shard.events {
+            match ev.kind {
+                EventKind::Terminal { id, .. } => {
+                    terminals[id as usize] += 1;
+                }
+                EventKind::Preempt { id, .. } => {
+                    preempts[id as usize] += 1;
+                }
+                EventKind::Restore { id, .. } => {
+                    restores[id as usize] += 1;
+                }
+                _ => {}
+            }
+        }
+        for id in 0..spec.requests {
+            assert_eq!(terminals[id], 1,
+                       "request {id}: {} terminal replies", terminals[id]);
+            // monolithic prefill (chunk 0) means every preemption evicts
+            // a live decode session, and every eviction is later resumed
+            assert_eq!(preempts[id], restores[id],
+                       "request {id}: {} preempts vs {} restores",
+                       preempts[id], restores[id]);
+        }
+        assert_eq!(preempts.iter().sum::<u64>(), out.preemptions);
+        assert_eq!(restores.iter().sum::<u64>(), out.restores);
+    });
+}
+
+#[test]
+fn no_batch_grant_while_an_interactive_request_waits() {
+    prop::check(32, |g| {
+        let cfg = VirtualConfig { qos: true, ..VirtualConfig::default() };
+        let spec = random_two_tier_spec(g, cfg.slots);
+        let mix = spec.interactive_mix;
+        let mut sink = TraceSink::on(true);
+        run_virtual_traced(
+            &cfg, &spec, AdmissionPolicy::deadline(), &mut sink);
+        let shard = sink.drain(Some(0), "vsim");
+
+        // replay the event stream in processing order, tracking which
+        // requests are waiting in the admission queue per tier
+        let mut waiting_interactive = 0usize;
+        let tier = |id: u64| Priority::assign(id, mix);
+        let mut is_waiting = vec![false; spec.requests];
+        let mut track = |id: u64, now_waiting: bool,
+                         waiting_interactive: &mut usize| {
+            let was = is_waiting[id as usize];
+            if was != now_waiting && tier(id) == Priority::Interactive {
+                if now_waiting {
+                    *waiting_interactive += 1;
+                } else {
+                    *waiting_interactive -= 1;
+                }
+            }
+            is_waiting[id as usize] = now_waiting;
+        };
+        for ev in &shard.events {
+            match ev.kind {
+                EventKind::Queued { id }
+                | EventKind::Preempt { id, .. } => {
+                    track(id, true, &mut waiting_interactive);
+                }
+                EventKind::SlotGrant { id, .. }
+                | EventKind::Restore { id, .. } => {
+                    assert!(
+                        tier(id) == Priority::Interactive
+                            || waiting_interactive == 0,
+                        "batch request {id} granted a slot while {} \
+                         interactive request(s) waited",
+                        waiting_interactive
+                    );
+                    track(id, false, &mut waiting_interactive);
+                }
+                _ => {}
+            }
+        }
+    });
+}

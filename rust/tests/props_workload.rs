@@ -129,6 +129,7 @@ fn shard_merged_quantiles_match_concat_within_bucket_error() {
             sizes: SizeModel::Uniform { prompt: (4, 16), gen: (1, 10) },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         };
         let run = ShardedDriver::new(shards, placement).run_virtual(
             &VirtualConfig::default(),

@@ -278,6 +278,7 @@ fn server_lifecycle_batching_and_churn() {
         sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 4 },
         slo_e2e_ms: 60_000.0,
         deadline_slack_us_per_token: 0,
+        interactive_mix: 1.0,
     };
     let out = run_against_server(&server, &spec).expect("loadtest driver");
     assert_eq!(out.samples.len(), 8);
@@ -309,6 +310,7 @@ fn server_lifecycle_batching_and_churn() {
         sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 10) },
         slo_e2e_ms: 60_000.0,
         deadline_slack_us_per_token: 0,
+        interactive_mix: 1.0,
     };
     let out = run_against_server(&sjf_server, &spec)
         .expect("closed-loop loadtest");
@@ -399,6 +401,7 @@ fn driver_outcomes_are_per_run_deltas_on_a_reused_server() {
         sizes: SizeModel::Uniform { prompt: (6, 12), gen: (1, 6) },
         slo_e2e_ms: 60_000.0,
         deadline_slack_us_per_token: 0,
+        interactive_mix: 1.0,
     };
     let first = run_against_server(&server, &spec).expect("first run");
     let second = run_against_server(&server, &spec).expect("second run");

@@ -25,6 +25,7 @@ fn spec() -> WorkloadSpec {
         },
         slo_e2e_ms: 50.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     }
 }
 
@@ -354,6 +355,7 @@ fn live_placement_diverges_from_estimate_split_under_skewed_burst() {
             },
             slo_e2e_ms: 50.0,
             deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
         };
         let reqs = spec.materialize();
         let estimate = PlacementPolicy::least_outstanding(&cfg)

@@ -27,6 +27,7 @@ fn open_spec() -> WorkloadSpec {
         },
         slo_e2e_ms: 50.0,
         deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
     }
 }
 
