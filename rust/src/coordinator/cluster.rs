@@ -14,6 +14,11 @@
 //!   [`crate::workload::PlacementPolicy::LeastOutstanding`] — the
 //!   static estimate assumes service starts at arrival and never sees
 //!   queueing feedback; the live signal *is* the queueing feedback.
+//!   The per-submission candidate rule is the
+//!   [`crate::placement::LivePlacer`] shared with the virtual mirror;
+//!   [`ClusterPlacement::Dynamic`] adds the front-door half of the
+//!   dynamic control loop (hold-while-saturated, periodic re-placement
+//!   of held entries counted as [`ClusterStats::migrations`]).
 //! * **Backpressure.**  The intake queue is bounded
 //!   ([`ClusterOptions::intake_cap`]); a submitter that finds it full
 //!   blocks until the placement thread drains — arrival pressure
@@ -47,12 +52,15 @@
 //! or live, so no reply channel is ever left dangling (the exactly-once
 //! pin in `rust/tests/cluster_concurrent.rs`).
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
+
+use crate::placement::LivePlacer;
 
 use crate::coordinator::server::{
     LoadSignal, Reply, ReplyTo, Request, Response, Server, ServerOptions,
@@ -84,6 +92,20 @@ pub enum ClusterPlacement {
     /// shard id) — the live control loop that replaces
     /// `PlacementPolicy::LeastOutstanding`'s split-time estimates
     LiveLeastOutstanding,
+    /// live-least-outstanding placement plus the front-door half of the
+    /// dynamic control loop (see `crate::placement`): while *every*
+    /// backend is saturated (in-flight > slots), arrivals are held at
+    /// the front door instead of committing to a shard's queue; every
+    /// `rebalance_every` arrivals the held entries are re-placed against
+    /// the live signals (each provisional-target change is a counted
+    /// migration, traced as a `migrate` event), and entries forward the
+    /// moment any backend frees capacity.  With no saturation it behaves
+    /// exactly like [`ClusterPlacement::LiveLeastOutstanding`]
+    Dynamic {
+        /// arrivals between re-placement passes over the held entries
+        /// (floored to 1)
+        rebalance_every: usize,
+    },
 }
 
 impl ClusterPlacement {
@@ -94,16 +116,22 @@ impl ClusterPlacement {
             ClusterPlacement::LiveLeastOutstanding => {
                 "live-least-outstanding"
             }
+            ClusterPlacement::Dynamic { .. } => "dynamic",
         }
     }
 
     /// Parse a CLI spelling (`"rr"`/`"round-robin"`,
-    /// `"live"`/`"live-least-outstanding"`/`"live-lo"`).
+    /// `"live"`/`"live-least-outstanding"`/`"live-lo"`,
+    /// `"dynamic"` — the default rebalance cadence; pair with
+    /// `--rebalance-every` to override it).
     pub fn parse(s: &str) -> Option<ClusterPlacement> {
         match s {
             "rr" | "round-robin" => Some(ClusterPlacement::RoundRobin),
             "live" | "live-least-outstanding" | "live-lo" => {
                 Some(ClusterPlacement::LiveLeastOutstanding)
+            }
+            "dynamic" => {
+                Some(ClusterPlacement::Dynamic { rebalance_every: 16 })
             }
             _ => None,
         }
@@ -155,6 +183,10 @@ pub struct ClusterStats {
     pub shed: Vec<u64>,
     /// high-water mark of the intake queue depth
     pub peak_intake_depth: usize,
+    /// front-door-held arrivals whose target shard changed in a
+    /// re-placement pass (0 unless the cluster runs
+    /// [`ClusterPlacement::Dynamic`])
+    pub migrations: u64,
     /// placement-policy label the front door runs
     /// ([`ClusterPlacement::label`]) — recorded into `moepim.trace.v1`
     /// documents (see [`crate::workload::record`])
@@ -320,6 +352,44 @@ fn shed_reply(req: &Request, sink: ReplyTo, candidate: usize,
     }
 }
 
+/// Forward every held arrival whose best shard has room, in hold order;
+/// a forward to a shard other than the entry's provisional target is a
+/// counted (and traced) migration.  Stops at the first entry that still
+/// finds every backend saturated — the queue keeps FIFO fairness.
+fn drain_pending(pending: &mut VecDeque<(Request, ReplyTo, usize)>,
+                 servers: &[Server], signals: &[Arc<LoadSignal>],
+                 slots: &[usize], placed: &mut [u64],
+                 migrations: &mut u64, sink: &mut TraceSink) {
+    let n = servers.len();
+    while let Some((req, reply_sink, from)) = pending.pop_front() {
+        let best = (0..n)
+            .min_by_key(|&i| (signals[i].inflight(), i))
+            .unwrap_or(0);
+        if signals[best].inflight() > slots[best] {
+            pending.push_front((req, reply_sink, from));
+            break;
+        }
+        if best != from {
+            *migrations += 1;
+            if sink.enabled() {
+                sink.record(now_ns(), EventKind::Migrate {
+                    id: req.id,
+                    from,
+                    to: best,
+                });
+            }
+        }
+        placed[best] += 1;
+        if sink.enabled() {
+            sink.record(now_ns(), EventKind::Placed {
+                id: req.id,
+                shard: best,
+            });
+        }
+        servers[best].forward(req, reply_sink);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
               slots: Vec<usize>, rx: mpsc::Receiver<FrontMsg>,
@@ -327,17 +397,44 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
               depth: Arc<AtomicUsize>, peak: Arc<AtomicUsize>,
               trace: bool) {
     let n = servers.len();
-    let mut rr: usize = 0;
+    let mut placer = LivePlacer::new(placement);
     let mut placed = vec![0u64; n];
     let mut shed = vec![0u64; n];
+    // dynamic mode's front-door hold: (request, reply sink, provisional
+    // target) entries parked while every backend is saturated
+    let rebalance_every = match placement {
+        ClusterPlacement::Dynamic { rebalance_every } => {
+            rebalance_every.max(1) as u64
+        }
+        _ => 0,
+    };
+    let mut pending: VecDeque<(Request, ReplyTo, usize)> = VecDeque::new();
+    let mut arrivals: u64 = 0;
+    let mut migrations: u64 = 0;
     // front-door span sink: intake/placement/shed events on the same
     // process-global monotonic clock the backend routers stamp with
     let mut sink = TraceSink::on(trace);
     loop {
-        let msg = match rx.recv() {
-            Ok(m) => m,
-            // every Cluster handle gone: fall through to shutdown
-            Err(_) => break,
+        // with held arrivals, poll instead of blocking: backends free
+        // capacity asynchronously, and a driver waiting on a held
+        // request's reply sends no further messages to wake us
+        let msg = if pending.is_empty() {
+            match rx.recv() {
+                Ok(m) => m,
+                // every Cluster handle gone: fall through to shutdown
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                Ok(m) => m,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    drain_pending(&mut pending, &servers, &signals,
+                                  &slots, &mut placed, &mut migrations,
+                                  &mut sink);
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
         };
         match msg {
             FrontMsg::Shutdown => break,
@@ -363,6 +460,7 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                         placed: placed.clone(),
                         shed: shed.clone(),
                         peak_intake_depth: peak.load(Ordering::Relaxed),
+                        migrations,
                         placement: placement.label().to_string(),
                     });
                 let _ = tx.send(snap);
@@ -376,19 +474,12 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                 // candidate first (round-robin advances even on a shed,
                 // least-outstanding re-reads signals per arrival), so a
                 // shed is attributable to the backend it would have hit
-                let candidate = match placement {
-                    ClusterPlacement::RoundRobin => {
-                        let c = rr % n;
-                        rr += 1;
-                        c
-                    }
-                    ClusterPlacement::LiveLeastOutstanding => (0..n)
-                        .min_by_key(|&i| (signals[i].inflight(), i))
-                        .unwrap_or(0),
-                };
+                let inflight: Vec<usize> =
+                    signals.iter().map(|s| s.inflight()).collect();
+                let candidate = placer.pick(&inflight);
                 let saturated = shed_depth > 0
                     && (0..n).all(|i| {
-                        signals[i].inflight() >= slots[i] + shed_depth
+                        inflight[i] >= slots[i] + shed_depth
                     });
                 if saturated {
                     shed[candidate] += 1;
@@ -399,7 +490,39 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                         });
                     }
                     shed_reply(&req, reply_sink, candidate, n, shed_depth);
+                } else if rebalance_every > 0
+                    && (0..n).all(|i| inflight[i] > slots[i])
+                {
+                    // dynamic mode, every backend saturated: hold at the
+                    // front door instead of committing to a hot queue;
+                    // drained (and possibly migrated) as capacity frees
+                    arrivals += 1;
+                    pending.push_back((req, reply_sink, candidate));
+                    if arrivals % rebalance_every == 0 {
+                        for entry in pending.iter_mut() {
+                            let best = (0..n)
+                                .min_by_key(|&i| {
+                                    (signals[i].inflight(), i)
+                                })
+                                .unwrap_or(0);
+                            if best != entry.2 {
+                                migrations += 1;
+                                if sink.enabled() {
+                                    sink.record(
+                                        now_ns(),
+                                        EventKind::Migrate {
+                                            id: entry.0.id,
+                                            from: entry.2,
+                                            to: best,
+                                        },
+                                    );
+                                }
+                                entry.2 = best;
+                            }
+                        }
+                    }
                 } else {
+                    arrivals += 1;
                     placed[candidate] += 1;
                     if sink.enabled() {
                         sink.record(now_ns(), EventKind::Placed {
@@ -409,8 +532,23 @@ fn place_loop(servers: Vec<Server>, signals: Vec<Arc<LoadSignal>>,
                     }
                     servers[candidate].forward(req, reply_sink);
                 }
+                drain_pending(&mut pending, &servers, &signals, &slots,
+                              &mut placed, &mut migrations, &mut sink);
             }
         }
+    }
+    // shutdown with held arrivals: commit each to its provisional shard
+    // so the backend routers terminally answer them (the exactly-once
+    // reply pin covers front-door-held requests too)
+    while let Some((req, reply_sink, from)) = pending.pop_front() {
+        placed[from] += 1;
+        if sink.enabled() {
+            sink.record(now_ns(), EventKind::Placed {
+                id: req.id,
+                shard: from,
+            });
+        }
+        servers[from].forward(req, reply_sink);
     }
     // dropping the servers shuts each backend down in turn; their
     // routers terminally answer everything still in flight

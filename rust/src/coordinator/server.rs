@@ -293,6 +293,12 @@ pub struct ServerStats {
     /// total µs preempted requests spent back in the waiting queue
     /// between eviction and resume (the preemption-churn latency bill)
     pub preempted_wait_us: u64,
+    /// high-water mark of simultaneously parked checkpoints (preempted
+    /// sessions waiting to resume).  One snapshot fits in a slot's own
+    /// banks; each simultaneous extra needs a spill copy, which the
+    /// report prices in mm² via
+    /// [`crate::placement::checkpoint_spill_mm2`]
+    pub peak_checkpoints: usize,
     /// wall-clock µs since the unix epoch of the first decode/prefill
     /// dispatch this server issued (`None`: never dispatched).  Together
     /// with [`ServerStats::last_dispatch_unix_us`] this gives each
@@ -366,6 +372,7 @@ impl ServerStats {
         line(format!("preemptions:         {}", self.preemptions));
         line(format!("restores:            {}", self.restores));
         line(format!("preempted_wait_us:   {}", self.preempted_wait_us));
+        line(format!("peak_checkpoints:    {}", self.peak_checkpoints));
         match (self.first_dispatch_unix_us, self.last_dispatch_unix_us) {
             (Some(a), Some(b)) => line(format!(
                 "busy_interval_us:    {} .. {} ({} us)", a, b,
@@ -931,6 +938,9 @@ fn run_loop(mut eng: BatchEngine, rx: mpsc::Receiver<Msg>,
                     });
                 }
                 stats.peak_waiting = stats.peak_waiting.max(waiting.len());
+                stats.peak_checkpoints = stats.peak_checkpoints.max(
+                    waiting.iter().filter(|w| w.resume.is_some()).count(),
+                );
                 need -= 1;
             }
         }

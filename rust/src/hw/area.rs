@@ -44,6 +44,29 @@ impl AreaModel {
         -> f64 {
         self.moe_area_mm2(layout, 1) / self.moe_area_mm2(layout, group_size)
     }
+
+    /// Silicon cost of replicating *one* expert group onto another
+    /// shard, mm²: the layer's shared-peripheral area divided over its
+    /// `n_experts / group_size` groups.  This is what the placement
+    /// replication ledger charges per hot-group replica.
+    pub fn group_replica_area_mm2(
+        &self, layout: &LayerLayout, group_size: usize,
+    ) -> f64 {
+        let groups = (layout.n_experts / group_size.max(1)).max(1);
+        self.moe_area_mm2(layout, group_size) / groups as f64
+    }
+
+    /// Area charged to the preemption checkpoint store when it holds
+    /// `peak` simultaneous slot snapshots, mm².  One snapshot fits in a
+    /// slot's own banks (free); each one beyond that needs a spill copy
+    /// sized like one expert's crossbar complement (no peripherals —
+    /// spill banks are storage, not compute).
+    pub fn checkpoint_spill_mm2(&self, layout: &LayerLayout, peak: usize)
+        -> f64 {
+        peak.saturating_sub(1) as f64
+            * layout.xbars_per_expert() as f64
+            * self.hw.xbar_area_mm2()
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +125,26 @@ mod tests {
     fn indivisible_group_panics() {
         let (a, l) = paper_layout();
         a.moe_area_mm2(&l, 5);
+    }
+
+    #[test]
+    fn replica_cost_is_one_group_share() {
+        let (a, l) = paper_layout();
+        // 16 experts / g=2 → 8 groups, so 8 replicas cost one layer
+        let per = a.group_replica_area_mm2(&l, 2);
+        assert!((per * 8.0 - a.moe_area_mm2(&l, 2)).abs() < 1e-9);
+        assert!(per > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_spill_first_snapshot_is_free() {
+        let (a, l) = paper_layout();
+        assert_eq!(a.checkpoint_spill_mm2(&l, 0), 0.0);
+        assert_eq!(a.checkpoint_spill_mm2(&l, 1), 0.0);
+        // each extra snapshot costs one expert's crossbars, no periph:
+        // 96 xbars/expert * 0.254 mm²
+        let one = a.checkpoint_spill_mm2(&l, 2);
+        assert!((one - 96.0 * 0.254).abs() < 1e-9);
+        assert!((a.checkpoint_spill_mm2(&l, 4) - 3.0 * one).abs() < 1e-9);
     }
 }

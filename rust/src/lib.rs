@@ -36,6 +36,7 @@
 //! | [`runtime`] | PJRT client owning the AOT-compiled artifacts (one client per router thread; independent clients run concurrently) |
 //! | [`coordinator`] | per-session engine, slot-batched `BatchEngine`, threaded `Server` with pluggable admission, and the multi-backend `Cluster` front door (live placement, streaming replies, backpressure) |
 //! | [`workload`] | seeded traffic generation, SLO telemetry, admission policies, virtual-time cluster, and the sharded multi-server fan-out — static placement splits or live-signal cluster runs, concurrent real backends by default |
+//! | [`placement`] | the unified `Placer` interface (static policies + live cluster rules) and the dynamic control loop: routing-feedback-driven migration of queued requests, heterogeneous capacity-weighted fleets, and area-ledgered hot-expert replication |
 //! | [`obs`] | request-lifecycle span tracing (per-thread ring sinks, Chrome/Perfetto `moepim.spans.v1` export) and the unified metrics registry behind `--trace-out` / `--metrics-file` |
 //! | [`util`] | in-tree substitutes for serde/rand/clap/criterion (offline image) |
 //!
@@ -56,6 +57,8 @@ pub mod hw;
 pub mod moe;
 #[warn(missing_docs)]
 pub mod obs;
+#[warn(missing_docs)]
+pub mod placement;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

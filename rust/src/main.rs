@@ -576,7 +576,25 @@ fn cmd_calibrate(args: &Args) -> i32 {
                 cal.p50_err_pct,
                 cal.p99_err_pct,
             );
-            print_report(args, &cal.to_json())
+            let code = print_report(args, &cal.to_json());
+            if code != 0 {
+                return code;
+            }
+            // --max-err-pct X: CI's accuracy gate — the fitted model
+            // must re-predict the recorded trace within the bound
+            let max_err = args.f64_flag("max-err-pct", 0.0);
+            if max_err > 0.0
+                && (cal.p50_err_pct > max_err
+                    || cal.p99_err_pct > max_err)
+            {
+                eprintln!(
+                    "calibrate: re-prediction error beyond \
+                     {max_err:.1}% (p50 {:.2}%, p99 {:.2}%)",
+                    cal.p50_err_pct, cal.p99_err_pct
+                );
+                return 3;
+            }
+            0
         }
         Err(e) => {
             eprintln!("calibration failed: {e}");
@@ -785,6 +803,9 @@ fn cmd_shardtest(args: &Args) -> i32 {
     if args.bool_flag("bench-cluster") {
         return cluster_bench(args);
     }
+    if args.bool_flag("bench-placement") {
+        return placement_bench(args);
+    }
     run_sharded(args, args.usize_flag("shards", 2).max(1))
 }
 
@@ -824,27 +845,26 @@ fn run_sharded(args: &Args, shards: usize) -> i32 {
                 "live" | "live-least-outstanding" | "live-lo") {
         return run_sharded_live(args, shards, policy, &spec, &vcfg);
     }
-    let Some(mut placement) = PlacementPolicy::parse(&placement_flag) else {
+    if placement_flag == "dynamic" {
+        return run_sharded_dynamic(args, shards, policy, &spec, &vcfg);
+    }
+    // parse against the run's actual virtual config: the parse-time
+    // defaults silently mis-estimated any non-default chip shape
+    let Some(mut placement) =
+        PlacementPolicy::parse(&placement_flag, &vcfg)
+    else {
         eprintln!(
             "unknown --placement '{placement_flag}' (expected round-robin|\
-             least-outstanding|size-hash|route-aware|live)"
+             least-outstanding|size-hash|route-aware|live|dynamic)"
         );
         return 2;
     };
-    if matches!(placement, PlacementPolicy::RouteAware { .. }) {
-        // align the placement's route model with the backend's chip shape
-        placement = PlacementPolicy::route_aware(&vcfg);
-    }
-    if matches!(placement, PlacementPolicy::LeastOutstanding { .. }) {
-        // align the placement's service-time estimates with the backend
-        // actually serving the run: derived from the virtual config, or
-        // the real-path calibration constants under --real (the parse-time
-        // default silently mis-estimated any non-default config)
-        placement = if args.bool_flag("real") {
-            PlacementPolicy::least_outstanding_real()
-        } else {
-            PlacementPolicy::least_outstanding(&vcfg)
-        };
+    if args.bool_flag("real")
+        && matches!(placement, PlacementPolicy::LeastOutstanding { .. })
+    {
+        // real shards are priced by the calibration constants, not the
+        // virtual config the parse derived its estimates from
+        placement = PlacementPolicy::least_outstanding_real();
     }
     let placement_label = placement.label();
     let driver = ShardedDriver::new(shards, placement);
@@ -1063,6 +1083,177 @@ fn run_sharded_live(args: &Args, shards: usize,
     }
     print_report(args, &report::build_sharded_labeled(
         spec, policy, shards, "live-least-outstanding", &run))
+}
+
+/// `--placement dynamic`: the full placement control loop.  Virtual runs
+/// drive N (possibly heterogeneous, see `--shard-slots`) virtual
+/// backends through `run_virtual_dynamic` — capacity-weighted routing,
+/// periodic queued-request migration every `--rebalance-every` arrivals,
+/// and hot-expert-group replication priced against the
+/// `--replicate-budget-mm2` area ledger.  Real runs go through the
+/// `Cluster` front door with `ClusterPlacement::Dynamic`, which holds
+/// arrivals while every backend is saturated and re-places them (the
+/// migration analogue) at rebalance ticks.
+fn run_sharded_dynamic(args: &Args, shards: usize,
+                       policy: moepim::workload::AdmissionPolicy,
+                       spec: &moepim::workload::WorkloadSpec,
+                       vcfg: &moepim::workload::VirtualConfig) -> i32 {
+    use moepim::coordinator::{Cluster, ClusterOptions, ClusterPlacement};
+    use moepim::placement::{DynamicConfig, PlacementReport};
+    use moepim::workload::{
+        report, run_against_cluster, run_virtual_dynamic,
+        run_virtual_dynamic_traced,
+    };
+    let rebalance_every = args.usize_flag("rebalance-every", 16);
+    let budget = args.f64_flag("replicate-budget-mm2", 0.0);
+    let record_path = args.str_flag("record", "");
+    let trace_out = args.str_flag("trace-out", "");
+    let (run, pr, record_backend) = if args.bool_flag("real") {
+        if !args.str_flag("shard-slots", "").is_empty() {
+            eprintln!(
+                "--shard-slots shapes virtual fleets; real shards take \
+                 their shape from the artifact set — ignoring"
+            );
+        }
+        let cluster = match Cluster::spawn(&artifacts_dir(args),
+                                           ClusterOptions {
+            shards,
+            server: real_server_opts(args, policy),
+            placement: ClusterPlacement::Dynamic { rebalance_every },
+            intake_cap: args.usize_flag("intake-cap", 0),
+            shed_depth: args.usize_flag("shed-depth", 0),
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("failed to start cluster: {e:#}");
+                return 1;
+            }
+        };
+        let run = match run_against_cluster(&cluster, spec) {
+            Ok(run) => run,
+            Err(e) => {
+                eprintln!("shardtest failed: {e:#}");
+                return 1;
+            }
+        };
+        let stats = match cluster.stats() {
+            Ok(stats) => stats,
+            Err(e) => {
+                eprintln!("failed to read cluster stats: {e:#}");
+                return 1;
+            }
+        };
+        // the real front door migrates held arrivals but models no
+        // replication (expert layouts are fixed at engine build time),
+        // so only the migration counter is live; the imbalance pair
+        // stays 0/0 rather than faking a structural measurement
+        let pr = PlacementReport {
+            migrations: stats.migrations,
+            ..PlacementReport::default()
+        };
+        let backend = (!record_path.is_empty()).then(|| {
+            moepim::workload::TraceBackend::from_cluster_stats(&stats)
+        });
+        if !trace_out.is_empty() {
+            match cluster.take_trace() {
+                Ok(span_shards) => {
+                    let code =
+                        write_trace_out(&trace_out, &span_shards, "real");
+                    if code != 0 {
+                        return code;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to drain the span trace: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        (run, pr, backend)
+    } else {
+        if matches!(spec.arrival,
+                    moepim::workload::ArrivalProcess::Closed { .. }) {
+            eprintln!(
+                "--placement dynamic requires an open-loop arrival \
+                 process (poisson|bursty|replay): the control loop \
+                 decides per arrival, and closed-loop arrivals are \
+                 completion-driven"
+            );
+            return 2;
+        }
+        // heterogeneous fleets: --shard-slots 2,4,2 overrides the slot
+        // count per shard (everything else inherits the shared config)
+        let mut cfgs = vec![vcfg.clone(); shards];
+        let slots_csv = args.str_flag("shard-slots", "");
+        if !slots_csv.is_empty() {
+            let parsed: Result<Vec<usize>, _> = slots_csv
+                .split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect();
+            match parsed {
+                Ok(v) if v.len() == shards && v.iter().all(|&s| s > 0) => {
+                    for (c, s) in cfgs.iter_mut().zip(&v) {
+                        c.slots = *s;
+                    }
+                }
+                _ => {
+                    eprintln!(
+                        "--shard-slots wants {shards} comma-separated \
+                         positive slot counts (one per shard)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        let dcfg = DynamicConfig::from_virtual(vcfg, rebalance_every,
+                                               budget);
+        let (run, pr) = if trace_out.is_empty() {
+            run_virtual_dynamic(&cfgs, spec, policy, &dcfg)
+        } else {
+            // the trace rides the virtual clock: byte-identical per seed
+            let (run, pr, span_shards) =
+                run_virtual_dynamic_traced(&cfgs, spec, policy, &dcfg,
+                                           true);
+            let code = write_trace_out(&trace_out, &span_shards, "virtual");
+            if code != 0 {
+                return code;
+            }
+            (run, pr)
+        };
+        let backend = (!record_path.is_empty()).then(|| {
+            let mut b = moepim::workload::TraceBackend::from_virtual(vcfg);
+            b.shards = shards;
+            b.placement = Some("dynamic".to_string());
+            b
+        });
+        (run, pr, backend)
+    };
+    if let Some(backend) = record_backend {
+        let trace = moepim::workload::TraceRecorder::new(spec, policy)
+            .finish_sharded(&run, backend);
+        if let Err(code) = write_trace(&trace, &record_path) {
+            return code;
+        }
+    }
+    let metrics_file = args.str_flag("metrics-file", "");
+    if !metrics_file.is_empty() {
+        let m = moepim::workload::shard::merge(spec, &run.shards);
+        let code = write_metrics_file(
+            &metrics_file,
+            &moepim::workload::metrics_registry_merged(&m),
+        );
+        if code != 0 {
+            return code;
+        }
+    }
+    println!(
+        "placement: {} migrations, {} replicas, +{:.3} mm2 \
+         (imbalance {:.3} -> {:.3})",
+        pr.migrations, pr.replicas, pr.area_mm2_delta,
+        pr.imbalance_before, pr.imbalance_after
+    );
+    print_report(args, &report::build_sharded_placed(
+        spec, policy, shards, "dynamic", &run, &pr))
 }
 
 /// The real-backend `ServerOptions` every `--real` path shares: policy
@@ -1550,6 +1741,157 @@ fn qos_bench(args: &Args) -> i32 {
         return 1;
     }
     println!("bench-qos: wrote {out_path}");
+    0
+}
+
+/// `--bench-placement`: the placement-control-loop perf artifact (CI's
+/// `BENCH_placement.json`).  Three legs over the same skewed flash-crowd
+/// workload on the virtual backend: `static-route-aware` (split-time
+/// routing-aware placement), `dynamic` (the live control loop with a
+/// zero replication budget — migration only), and `dynamic-replicate`
+/// (the same loop with an area budget that buys hot-group replicas).
+/// Record-only like the other benches — CI uploads the document and
+/// `moepim perfcmp` compares successive runs keyed on `mode` — but each
+/// leg must still be byte-repeatable per seed.
+fn placement_bench(args: &Args) -> i32 {
+    use moepim::placement::{DynamicConfig, PlacementReport};
+    use moepim::util::json::Json;
+    use moepim::workload::{
+        report, run_virtual_dynamic, scenario_spec, AdmissionPolicy,
+        PlacementPolicy, ShardedDriver, ShardedRun, VirtualConfig,
+        WorkloadSpec,
+    };
+    let seed = args.u64_flag("seed", 2026);
+    let shards = args.usize_flag("shards", 3).max(2);
+    let budget = args.f64_flag("replicate-budget-mm2", 100.0);
+    let policy = AdmissionPolicy::fifo();
+    // flash-crowd preset with the routing skew turned up so expert
+    // groups actually develop hot spots worth migrating away from
+    let spec = WorkloadSpec {
+        requests: 96,
+        sizes: moepim::workload::SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 2.0,
+            prompt: (4, 48),
+            gen: (1, 24),
+        },
+        ..scenario_spec("flash-crowd", seed).expect("known preset")
+    };
+    let cfg = VirtualConfig { route_skew: 2.0, ..loadtest_vcfg(args) };
+
+    // merged leg metrics: concurrent semantics (slowest shard bounds
+    // the wall clock), samples merged across shards
+    fn leg_json(mode: &str, run: &ShardedRun, pr: &PlacementReport)
+        -> Json {
+        let duration_s = run
+            .shards
+            .iter()
+            .map(|s| s.outcome.duration_s)
+            .fold(0.0_f64, f64::max)
+            .max(1e-9);
+        let tokens: u64 = run
+            .shards
+            .iter()
+            .map(|s| s.outcome.tokens_generated())
+            .sum();
+        let samples: Vec<&moepim::workload::Sample> = run
+            .shards
+            .iter()
+            .flat_map(|s| s.outcome.samples.iter())
+            .collect();
+        let pct = |mut xs: Vec<f64>, q: f64| {
+            xs.sort_by(f64::total_cmp);
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs[((xs.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        let e2e: Vec<f64> = samples.iter().map(|s| s.e2e_us).collect();
+        let ttft: Vec<f64> =
+            samples.iter().filter_map(|s| s.ttft_us).collect();
+        Json::obj(vec![
+            // `mode` is the leg key perfcmp matches across artifacts
+            ("mode", Json::str(mode)),
+            ("ok", Json::num(
+                samples.iter().filter(|s| s.ok).count() as f64,
+            )),
+            ("tokens", Json::num(tokens as f64)),
+            ("duration_s", Json::num(duration_s)),
+            ("tokens_per_s", Json::num(tokens as f64 / duration_s)),
+            ("p50_e2e_us", Json::num(pct(e2e.clone(), 0.50))),
+            ("p99_e2e_us", Json::num(pct(e2e, 0.99))),
+            ("p99_ttft_us", Json::num(pct(ttft, 0.99))),
+            ("migrations", Json::num(pr.migrations as f64)),
+            ("replicas", Json::num(pr.replicas as f64)),
+            ("area_mm2_delta", Json::num(pr.area_mm2_delta)),
+            ("imbalance_before", Json::num(pr.imbalance_before)),
+            ("imbalance_after", Json::num(pr.imbalance_after)),
+        ])
+    }
+
+    let mut legs = Vec::new();
+    // leg 1: the static baseline the control loop must beat
+    {
+        let driver =
+            ShardedDriver::new(shards, PlacementPolicy::route_aware(&cfg));
+        let run = driver.run_virtual(&cfg, &spec, policy);
+        let a = report::build_sharded(&spec, policy, &driver, &run)
+            .to_string_pretty();
+        let b = report::build_sharded(
+            &spec, policy, &driver,
+            &driver.run_virtual(&cfg, &spec, policy),
+        )
+        .to_string_pretty();
+        if a != b {
+            eprintln!("bench-placement: static leg not deterministic");
+            return 1;
+        }
+        legs.push(leg_json("static-route-aware", &run,
+                           &PlacementReport::default()));
+        println!("bench-placement: static-route-aware OK");
+    }
+    // legs 2+3: the control loop, migration-only then with replication
+    for (mode, mm2) in [("dynamic", 0.0), ("dynamic-replicate", budget)] {
+        let cfgs = vec![cfg.clone(); shards];
+        let dcfg = DynamicConfig::from_virtual(
+            &cfg, args.usize_flag("rebalance-every", 8), mm2);
+        let (run, pr) = run_virtual_dynamic(&cfgs, &spec, policy, &dcfg);
+        let a = report::build_sharded_placed(
+            &spec, policy, shards, "dynamic", &run, &pr)
+            .to_string_pretty();
+        let (run2, pr2) = run_virtual_dynamic(&cfgs, &spec, policy, &dcfg);
+        let b = report::build_sharded_placed(
+            &spec, policy, shards, "dynamic", &run2, &pr2)
+            .to_string_pretty();
+        if a != b {
+            eprintln!("bench-placement: {mode} leg not deterministic");
+            return 1;
+        }
+        legs.push(leg_json(mode, &run, &pr));
+        println!(
+            "bench-placement: {mode} OK ({} migrations, {} replicas, \
+             +{:.3} mm2)",
+            pr.migrations, pr.replicas, pr.area_mm2_delta
+        );
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("moepim.bench_placement.v1")),
+        ("scenario", Json::str("skewed-flash-crowd")),
+        ("policy", Json::str(policy.label())),
+        ("seed", Json::str(&seed.to_string())),
+        ("shards", Json::num(shards as f64)),
+        ("replicate_budget_mm2", Json::num(budget)),
+        ("legs", Json::Arr(legs)),
+    ]);
+    let text = doc.to_string_pretty();
+    println!("{text}");
+    let out_path = args.str_flag("out", "BENCH_placement.json");
+    if let Err(e) = std::fs::write(&out_path, format!("{text}\n")) {
+        eprintln!("failed to write {out_path}: {e}");
+        return 1;
+    }
+    println!("bench-placement: wrote {out_path}");
     0
 }
 

@@ -10,4 +10,4 @@ pub mod trace;
 pub use choices::ChoiceMatrix;
 pub use gate::{expert_choice_route, softmax_rows, token_choice_route, Routing};
 pub use layout::LayerLayout;
-pub use trace::TraceGenerator;
+pub use trace::{group_loads, TraceGenerator};

@@ -85,6 +85,19 @@ impl TraceGenerator {
     }
 }
 
+/// Collapse per-expert calibration loads into per-group loads under the
+/// contiguous grouping the layout uses (`group g` = experts
+/// `[g*group_size, (g+1)*group_size)`).  This is how the placement
+/// control loop primes its expert-group routing histogram from a
+/// calibration sample.
+pub fn group_loads(expert_loads: &[f64], group_size: usize) -> Vec<f64> {
+    let g = group_size.max(1);
+    expert_loads
+        .chunks(g)
+        .map(|c| c.iter().sum())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +144,16 @@ mod tests {
         assert_eq!(loads.len(), 4);
         let total: f64 = loads.iter().sum();
         assert!((total - 128.0).abs() < 1e-9); // 64 tokens * k=2
+    }
+
+    #[test]
+    fn group_loads_sum_contiguous_chunks() {
+        let per_expert = [3.0, 1.0, 2.0, 2.0, 5.0, 0.0];
+        assert_eq!(group_loads(&per_expert, 2), vec![4.0, 4.0, 5.0]);
+        assert_eq!(group_loads(&per_expert, 3), vec![6.0, 7.0]);
+        // degenerate group sizes: 0 clamps to 1 (identity)
+        assert_eq!(group_loads(&per_expert, 0).len(), 6);
+        let total: f64 = group_loads(&per_expert, 4).iter().sum();
+        assert!((total - 13.0).abs() < 1e-12);
     }
 }

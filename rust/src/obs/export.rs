@@ -68,6 +68,16 @@ fn event_args(kind: &EventKind) -> Json {
         EventKind::Restore { id, slot } => {
             Json::obj(vec![("id", n64(id)), ("slot", n(slot))])
         }
+        EventKind::Migrate { id, from, to } => Json::obj(vec![
+            ("from", n(from)),
+            ("id", n64(id)),
+            ("to", n(to)),
+        ]),
+        // no "id" key: replication is a fleet action, and the
+        // conservation checker must not expect a terminal for it
+        EventKind::Replicate { group, shard } => {
+            Json::obj(vec![("group", n(group)), ("shard", n(shard))])
+        }
         EventKind::Terminal { id, outcome } => Json::obj(vec![
             ("id", n64(id)),
             ("outcome", Json::str(outcome.label())),
@@ -365,6 +375,34 @@ mod tests {
             .filter_map(|e| e.get("ts").and_then(Json::as_f64))
             .fold(f64::INFINITY, f64::min);
         assert_eq!(min_ts, 0.0);
+    }
+
+    #[test]
+    fn migration_conserves_and_replication_carries_no_id() {
+        let mut front = TraceSink::ring(16);
+        front.record(0, EventKind::Intake { id: 3 });
+        front.record(1, EventKind::Placed { id: 3, shard: 0 });
+        front.record(5, EventKind::Migrate { id: 3, from: 0, to: 1 });
+        front.record(6, EventKind::Replicate { group: 2, shard: 1 });
+        let mut router = TraceSink::ring(16);
+        router.record(
+            9,
+            EventKind::Terminal { id: 3, outcome: SpanOutcome::Ok },
+        );
+        let doc = chrome_trace(
+            &[front.drain(None, "placement"), router.drain(Some(1), "vsim")],
+            "virtual",
+        );
+        // the migrated request has exactly one terminal (on the target
+        // shard's lane) and the replicate instant introduces no phantom id
+        assert_eq!(check_conservation(&doc), Ok(1));
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let rep = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("replicate"))
+            .unwrap();
+        assert!(rep.path(&["args", "id"]).is_none());
+        assert_eq!(rep.path(&["args", "group"]).and_then(Json::as_usize), Some(2));
     }
 
     #[test]

@@ -103,6 +103,26 @@ pub enum EventKind {
         /// Slot the session was restored into.
         slot: usize,
     },
+    /// A queued (not yet admitted) request was migrated between shards by
+    /// a dynamic-placement rebalance pass.  The request's arrival instant
+    /// travels with it, so downstream queue-wait accounting is unchanged.
+    Migrate {
+        /// Request id of the moved entry.
+        id: u64,
+        /// Shard it was stolen from.
+        from: usize,
+        /// Shard it re-queued on.
+        to: usize,
+    },
+    /// A hot expert group was replicated onto an additional shard by the
+    /// dynamic-placement control loop (charged against the area ledger).
+    /// Carries no request id: replication is a fleet-level action.
+    Replicate {
+        /// Expert-group id (group-size granularity of `moe::grouping`).
+        group: usize,
+        /// Shard that now also hosts the group.
+        shard: usize,
+    },
     /// Terminal reply sent — exactly one per submitted request.
     Terminal {
         /// Request id.
@@ -152,6 +172,8 @@ impl EventKind {
             EventKind::FirstToken { .. } => "first_token",
             EventKind::Preempt { .. } => "preempt",
             EventKind::Restore { .. } => "restore",
+            EventKind::Migrate { .. } => "migrate",
+            EventKind::Replicate { .. } => "replicate",
             EventKind::Terminal { .. } => "terminal",
             EventKind::Cycle { .. } => "cycle",
             EventKind::Depth { .. } => "depth",
@@ -169,8 +191,11 @@ impl EventKind {
             | EventKind::FirstToken { id }
             | EventKind::Preempt { id, .. }
             | EventKind::Restore { id, .. }
+            | EventKind::Migrate { id, .. }
             | EventKind::Terminal { id, .. } => Some(id),
-            EventKind::Cycle { .. } | EventKind::Depth { .. } => None,
+            EventKind::Replicate { .. }
+            | EventKind::Cycle { .. }
+            | EventKind::Depth { .. } => None,
         }
     }
 }

@@ -1,0 +1,356 @@
+//! The closed-loop placer: route-aware homes, periodic rebalance passes
+//! that migrate *queued* requests off capacity-weighted hot shards, and
+//! budgeted replication of hot expert groups (DESIGN.md §Placement).
+//!
+//! The placer itself is execution-path-agnostic: it reads and updates a
+//! [`RoutingFeedback`] view and emits *plans* (migration moves, replica
+//! additions).  The vsim dynamic runner and the real cluster's
+//! placement thread own the mechanics — stealing queued entries,
+//! re-enqueueing them on the target, emitting `Migrate`/`Replicate`
+//! span events — and report what happened through the shared
+//! [`PlacementReport`].
+
+use crate::placement::{
+    Arrival, Placer, PlacementReport, ReplicaLedger, RoutingFeedback,
+};
+use crate::workload::vsim::{route_rng, sample_experts, VirtualConfig};
+
+/// Knobs of the dynamic control loop.  The routing knobs must match the
+/// serving config's (`n_experts`/`experts_per_token`/`skew`/
+/// `group_size`) so the placer's route peek agrees with what the
+/// backends will actually route.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynamicConfig {
+    /// run a rebalance pass every this many arrivals (0 disables
+    /// migration; replication still runs at would-be ticks)
+    pub rebalance_every: usize,
+    /// mm² the replica ledger may spend (0 disables replication)
+    pub replicate_budget_mm2: f64,
+    /// experts in the routed layer
+    pub n_experts: usize,
+    /// top-k experts per token
+    pub experts_per_token: usize,
+    /// Zipf-ish routing skew (matches the workload's `route_skew`)
+    pub skew: f64,
+    /// experts per peripheral-sharing group
+    pub group_size: usize,
+}
+
+impl DynamicConfig {
+    /// Derive the routing knobs from the serving [`VirtualConfig`].
+    pub fn from_virtual(
+        cfg: &VirtualConfig, rebalance_every: usize,
+        replicate_budget_mm2: f64,
+    ) -> Self {
+        DynamicConfig {
+            rebalance_every,
+            replicate_budget_mm2,
+            n_experts: cfg.n_experts,
+            experts_per_token: cfg.experts_per_token,
+            skew: cfg.route_skew,
+            group_size: cfg.group_size,
+        }
+    }
+
+    /// Number of expert groups the routing histogram tracks.
+    pub fn n_groups(&self) -> usize {
+        let g = self.group_size.max(1);
+        (self.n_experts.max(1) + g - 1) / g
+    }
+}
+
+/// The dynamic [`Placer`]: routes each arrival to the capacity-weighted
+/// least-loaded host of its expert group (home + any replicas), counts
+/// arrivals toward rebalance ticks, and plans migrations/replications
+/// when asked.
+#[derive(Debug, Clone)]
+pub struct DynamicPlacer {
+    cfg: DynamicConfig,
+    seed: u64,
+    ledger: ReplicaLedger,
+    arrivals: usize,
+    /// control-loop telemetry, harvested into the report's `placement`
+    /// block at the end of the run
+    pub report: PlacementReport,
+}
+
+impl DynamicPlacer {
+    /// A dynamic placer for one run; `seed` keys the same routing
+    /// stream the backends draw from.
+    pub fn new(cfg: DynamicConfig, seed: u64) -> Self {
+        DynamicPlacer {
+            ledger: ReplicaLedger::paper(
+                cfg.replicate_budget_mm2,
+                cfg.group_size,
+            ),
+            cfg,
+            seed,
+            arrivals: 0,
+            report: PlacementReport::default(),
+        }
+    }
+
+    /// The expert group request `id` routes to — the same
+    /// dominant-expert peek static route-aware placement uses, so a
+    /// dynamic run with no migrations and no replicas is byte-identical
+    /// to the static mapping.
+    pub fn group_of(&self, id: u64) -> usize {
+        let mut rng = route_rng(self.seed, id);
+        let sel = sample_experts(
+            &mut rng,
+            self.cfg.n_experts.max(1),
+            self.cfg.experts_per_token.max(1),
+            self.cfg.skew,
+        );
+        let dominant = sel.first().copied().unwrap_or(0);
+        dominant / self.cfg.group_size.max(1)
+    }
+
+    /// `true` when the arrival counter just crossed a rebalance tick.
+    pub fn due(&self) -> bool {
+        self.cfg.rebalance_every > 0
+            && self.arrivals > 0
+            && self.arrivals % self.cfg.rebalance_every == 0
+    }
+
+    /// Plan queued-request migrations for one rebalance tick:
+    /// repeatedly move one queued request from the capacity-weighted
+    /// hottest shard that still has stealable entries to the
+    /// capacity-weighted coldest, while the move *strictly* lowers the
+    /// source above the destination (`(load_cold + 1)/slots_cold <
+    /// load_hot/slots_hot`, compared exactly).  Each accepted move
+    /// lowers a maximal shard and raises a minimal one, so the
+    /// normalized spread never increases — the report's
+    /// `imbalance_after <= imbalance_before` invariant is structural.
+    ///
+    /// `stealable[s]` bounds how many entries may leave shard `s` (its
+    /// queued, not-yet-admitted, non-resuming count).  Returns
+    /// `(from, to)` moves in plan order.
+    pub fn plan_migrations(
+        &self, fb: &RoutingFeedback, stealable: &[usize],
+    ) -> Vec<(usize, usize)> {
+        let n = fb.shards().min(stealable.len());
+        if n < 2 {
+            return Vec::new();
+        }
+        let slots = |s: usize| fb.spec(s).slots.max(1) as u128;
+        let mut loads: Vec<u128> =
+            (0..n).map(|s| fb.load(s) as u128).collect();
+        let mut avail: Vec<usize> = stealable[..n].to_vec();
+        let mut moves = Vec::new();
+        loop {
+            let mut hot: Option<usize> = None;
+            for s in 0..n {
+                if avail[s] == 0 {
+                    continue;
+                }
+                hot = Some(match hot {
+                    None => s,
+                    Some(h) if loads[s] * slots(h) > loads[h] * slots(s) => s,
+                    Some(h) => h,
+                });
+            }
+            let Some(hot) = hot else { break };
+            let mut cold = 0;
+            for s in 1..n {
+                if loads[s] * slots(cold) < loads[cold] * slots(s) {
+                    cold = s;
+                }
+            }
+            if cold == hot
+                || (loads[cold] + 1) * slots(hot) >= loads[hot] * slots(cold)
+            {
+                break;
+            }
+            moves.push((hot, cold));
+            loads[hot] -= 1;
+            loads[cold] += 1;
+            avail[hot] -= 1;
+        }
+        moves
+    }
+
+    /// Replicate hot expert groups while the area budget allows: each
+    /// pass takes the hottest not-fully-replicated group and adds a
+    /// replica on the capacity-weighted least-loaded non-host.  Returns
+    /// the `(group, shard)` additions; the ledger's spend lands in
+    /// `report.area_mm2_delta`.
+    pub fn maybe_replicate(
+        &mut self, fb: &mut RoutingFeedback,
+    ) -> Vec<(usize, usize)> {
+        let mut added = Vec::new();
+        while let Some(g) = fb.hottest_unreplicated() {
+            if !self.ledger.try_charge() {
+                break;
+            }
+            let hosts = fb.hosts(g).to_vec();
+            let candidates: Vec<usize> = (0..fb.shards())
+                .filter(|s| !hosts.contains(s))
+                .collect();
+            let target = fb.least_loaded_among(&candidates);
+            if !fb.add_replica(g, target) {
+                break;
+            }
+            self.report.replicas += 1;
+            added.push((g, target));
+        }
+        self.report.area_mm2_delta = self.ledger.spent_mm2();
+        added
+    }
+
+    /// Record one rebalance tick's pre/post-migration normalized
+    /// spread; the report keeps the worst tick's pair (so `before` is
+    /// the run's worst observed imbalance and `after` is what the same
+    /// tick's migrations left behind).
+    pub fn note_imbalance(&mut self, before: f64, after: f64) {
+        if before >= self.report.imbalance_before {
+            self.report.imbalance_before = before;
+            self.report.imbalance_after = after;
+        }
+    }
+}
+
+impl Placer for DynamicPlacer {
+    fn label(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn place(&mut self, arrival: &Arrival, fb: &mut RoutingFeedback)
+        -> usize {
+        self.arrivals += 1;
+        let g = self.group_of(arrival.id);
+        fb.observe(g);
+        let hosts = fb.hosts(g).to_vec();
+        fb.least_loaded_among(&hosts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{ShardSpec, StaticPlacer};
+    use crate::workload::arrival::{
+        ArrivalProcess, SizeModel, WorkloadSpec,
+    };
+    use crate::workload::shard::PlacementPolicy;
+
+    fn dcfg() -> DynamicConfig {
+        DynamicConfig::from_virtual(&VirtualConfig::default(), 8, 0.0)
+    }
+
+    fn fb(slot_counts: &[usize], groups: usize) -> RoutingFeedback {
+        let specs: Vec<ShardSpec> =
+            slot_counts.iter().map(|&s| ShardSpec::real(s)).collect();
+        RoutingFeedback::new(specs, groups)
+    }
+
+    #[test]
+    fn unperturbed_dynamic_matches_static_route_aware() {
+        let spec = WorkloadSpec {
+            seed: 19,
+            requests: 32,
+            arrival: ArrivalProcess::Poisson { rate_rps: 2_000.0 },
+            sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 200,
+            interactive_mix: 1.0,
+        };
+        let cfg = VirtualConfig::default();
+        let d = DynamicConfig::from_virtual(&cfg, 0, 0.0);
+        let n = 3usize;
+        let mut dynp = DynamicPlacer::new(d, spec.seed);
+        let mut f = fb(&[4, 4, 4], d.n_groups());
+        let mut stat = StaticPlacer::new(
+            PlacementPolicy::route_aware(&cfg),
+            spec.seed,
+            n,
+        );
+        for r in spec.materialize() {
+            let a = Arrival::of(&r);
+            assert_eq!(dynp.place(&a, &mut f), stat.place_next(&a));
+        }
+    }
+
+    #[test]
+    fn rebalance_ticks_follow_the_arrival_counter() {
+        let mut p = DynamicPlacer::new(dcfg(), 7);
+        let mut f = fb(&[4, 4], dcfg().n_groups());
+        assert!(!p.due());
+        for i in 0..16u64 {
+            let a = Arrival {
+                id: i,
+                prompt_len: 4,
+                gen_len: 2,
+                arrival_ns: i * 1_000,
+            };
+            p.place(&a, &mut f);
+            assert_eq!(p.due(), (i + 1) % 8 == 0, "arrival {i}");
+        }
+    }
+
+    #[test]
+    fn migration_plan_drains_hot_toward_cold() {
+        let p = DynamicPlacer::new(dcfg(), 7);
+        let mut f = fb(&[4, 4], dcfg().n_groups());
+        f.set_load(0, 6);
+        f.set_load(1, 0);
+        let moves = p.plan_migrations(&f, &[6, 0]);
+        // 6/0 balances to 3/3: strictly-improving moves only
+        assert_eq!(moves, vec![(0, 1), (0, 1), (0, 1)]);
+        // stealable bound caps the plan
+        let capped = p.plan_migrations(&f, &[1, 0]);
+        assert_eq!(capped, vec![(0, 1)]);
+        // balanced loads plan nothing
+        f.set_load(0, 3);
+        f.set_load(1, 3);
+        assert!(p.plan_migrations(&f, &[3, 3]).is_empty());
+    }
+
+    #[test]
+    fn migration_plan_weights_by_capacity() {
+        let p = DynamicPlacer::new(dcfg(), 7);
+        // shard 0: 2 slots / load 4 (norm 2.0); shard 1: 8 slots /
+        // load 6 (norm 0.75): raw counts would call shard 1 hot.
+        let mut f = fb(&[2, 8], dcfg().n_groups());
+        f.set_load(0, 4);
+        f.set_load(1, 6);
+        let moves = p.plan_migrations(&f, &[4, 6]);
+        assert!(!moves.is_empty());
+        assert!(moves.iter().all(|&m| m == (0, 1)), "{moves:?}");
+    }
+
+    #[test]
+    fn replication_respects_the_ledger_budget() {
+        let mut cfg = dcfg();
+        cfg.replicate_budget_mm2 = 200.0;
+        let mut p = DynamicPlacer::new(cfg, 7);
+        let mut f = fb(&[4, 4, 4], cfg.n_groups());
+        f.observe(5);
+        f.observe(5);
+        f.observe(2);
+        let added = p.maybe_replicate(&mut f);
+        assert!(!added.is_empty());
+        assert_eq!(added[0].0, 5, "hottest group replicates first");
+        assert_eq!(p.report.replicas, added.len() as u64);
+        assert!(p.report.area_mm2_delta <= 200.0 + 1e-9);
+        assert!(p.report.area_mm2_delta > 0.0);
+        // zero budget: no replicas, no spend
+        let mut z = DynamicPlacer::new(dcfg(), 7);
+        let mut fz = fb(&[4, 4], dcfg().n_groups());
+        fz.observe(1);
+        assert!(z.maybe_replicate(&mut fz).is_empty());
+        assert_eq!(z.report.area_mm2_delta, 0.0);
+    }
+
+    #[test]
+    fn worst_tick_wins_the_imbalance_pair() {
+        let mut p = DynamicPlacer::new(dcfg(), 7);
+        p.note_imbalance(0.5, 0.25);
+        p.note_imbalance(0.2, 0.0);
+        assert_eq!(p.report.imbalance_before, 0.5);
+        assert_eq!(p.report.imbalance_after, 0.25);
+        p.note_imbalance(1.5, 0.75);
+        assert_eq!(p.report.imbalance_before, 1.5);
+        assert_eq!(p.report.imbalance_after, 0.75);
+    }
+}

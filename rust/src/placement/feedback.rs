@@ -1,0 +1,311 @@
+//! The feedback half of the placement control loop: per-shard capacity
+//! and live load signals, the expert-group routing histogram, and the
+//! group→hosts replica map a dynamic placer routes against.
+//!
+//! A [`RoutingFeedback`] is a *view*, not a policy: the execution paths
+//! (the vsim dynamic runner and the real cluster's placement thread)
+//! refresh its loads from their backends, the placer reads and updates
+//! it.  Capacities come as [`ShardSpec`]s, one per shard, so mixed
+//! fleets — shards with different slot counts or cost constants — are
+//! first-class: every load comparison is capacity-weighted
+//! (`load / slots`, compared exactly via integer cross-multiplication).
+
+use crate::workload::shard::{
+    REAL_EST_DECODE_NS_PER_TOKEN, REAL_EST_PREFILL_NS_PER_TOKEN,
+};
+use crate::workload::vsim::VirtualConfig;
+
+/// Capacity description of one shard's backend — the heterogeneous
+/// replacement for the all-shards-identical assumption the static
+/// fan-out baked in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// serving slots (continuous-batching width) on this shard
+    pub slots: usize,
+    /// estimated prefill cost per prompt token (ns)
+    pub prefill_ns_per_token: u64,
+    /// estimated cost per generated token (ns)
+    pub decode_ns_per_token: u64,
+}
+
+impl ShardSpec {
+    /// Derive the spec from the [`VirtualConfig`] serving this shard —
+    /// the same estimate math as
+    /// [`crate::workload::PlacementPolicy::least_outstanding`], so the
+    /// capacity weights agree with the split-time estimates.
+    pub fn from_virtual(cfg: &VirtualConfig) -> Self {
+        let per_token_cycles = 2 * cfg.n_layers.max(1) as u64
+            * cfg.experts_per_token.max(1) as u64;
+        ShardSpec {
+            slots: cfg.slots.max(1),
+            prefill_ns_per_token: cfg.prefill_ns_per_token,
+            decode_ns_per_token: cfg.dispatch_overhead_ns
+                + per_token_cycles * cfg.cycle_ns,
+        }
+    }
+
+    /// The `--real` threaded-server calibration estimates with an
+    /// explicit slot count.
+    pub fn real(slots: usize) -> Self {
+        ShardSpec {
+            slots: slots.max(1),
+            prefill_ns_per_token: REAL_EST_PREFILL_NS_PER_TOKEN,
+            decode_ns_per_token: REAL_EST_DECODE_NS_PER_TOKEN,
+        }
+    }
+}
+
+/// The live feedback view a [`crate::placement::Placer`] decides from:
+/// per-shard loads over per-shard capacities, the expert-group routing
+/// histogram, and which shards host each group (home + replicas).
+///
+/// The histogram is the online mirror of what `moe::trace` calibration
+/// samples predict offline — [`RoutingFeedback::prime`] seeds it from a
+/// calibration run so replication decisions are informed before the
+/// first rebalance tick, then [`RoutingFeedback::observe`] keeps it
+/// current per arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingFeedback {
+    specs: Vec<ShardSpec>,
+    loads: Vec<usize>,
+    hist: Vec<u64>,
+    hosts: Vec<Vec<usize>>,
+}
+
+impl RoutingFeedback {
+    /// A feedback view over `specs.len()` shards and `n_groups` expert
+    /// groups.  Group `g`'s home shard is `g % shards` (matching the
+    /// static route-aware mapping, so a dynamic run with no migrations
+    /// and no replicas routes exactly like the static policy).
+    pub fn new(specs: Vec<ShardSpec>, n_groups: usize) -> Self {
+        let specs = if specs.is_empty() {
+            vec![ShardSpec::from_virtual(&VirtualConfig::default())]
+        } else {
+            specs
+        };
+        let n = specs.len();
+        let groups = n_groups.max(1);
+        RoutingFeedback {
+            loads: vec![0; n],
+            hist: vec![0; groups],
+            hosts: (0..groups).map(|g| vec![g % n]).collect(),
+            specs,
+        }
+    }
+
+    /// A homogeneous fleet: `n` shards of the same [`ShardSpec`].
+    pub fn uniform(n: usize, spec: ShardSpec, n_groups: usize) -> Self {
+        Self::new(vec![spec; n.max(1)], n_groups)
+    }
+
+    /// Number of shards in the view.
+    pub fn shards(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Number of expert groups in the view.
+    pub fn groups(&self) -> usize {
+        self.hist.len()
+    }
+
+    /// One shard's capacity spec.
+    pub fn spec(&self, shard: usize) -> &ShardSpec {
+        &self.specs[shard.min(self.specs.len() - 1)]
+    }
+
+    /// Refresh one shard's live load (requests in flight, however the
+    /// execution path counts them).
+    pub fn set_load(&mut self, shard: usize, load: usize) {
+        if shard < self.loads.len() {
+            self.loads[shard] = load;
+        }
+    }
+
+    /// One shard's last-set live load.
+    pub fn load(&self, shard: usize) -> usize {
+        self.loads.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Record one arrival routed to expert group `group`.
+    pub fn observe(&mut self, group: usize) {
+        if group < self.hist.len() {
+            self.hist[group] += 1;
+        }
+    }
+
+    /// Seed the histogram with expected per-group loads (e.g. from a
+    /// `moe::trace` calibration sample, collapsed by
+    /// [`crate::moe::trace::group_loads`]); fractional loads round to
+    /// the nearest count.
+    pub fn prime(&mut self, expected: &[f64]) {
+        for (g, &w) in expected.iter().enumerate().take(self.hist.len()) {
+            self.hist[g] += w.max(0.0).round() as u64;
+        }
+    }
+
+    /// The routing histogram count of one group.
+    pub fn hist(&self, group: usize) -> u64 {
+        self.hist.get(group).copied().unwrap_or(0)
+    }
+
+    /// The shards hosting `group`, home first, replicas in the order
+    /// they were added.
+    pub fn hosts(&self, group: usize) -> &[usize] {
+        &self.hosts[group.min(self.hosts.len() - 1)]
+    }
+
+    /// Add a replica of `group` on `shard`; `false` (no change) when the
+    /// shard already hosts the group.
+    pub fn add_replica(&mut self, group: usize, shard: usize) -> bool {
+        let g = group.min(self.hosts.len() - 1);
+        if self.hosts[g].contains(&shard) {
+            return false;
+        }
+        self.hosts[g].push(shard);
+        true
+    }
+
+    /// Total replicas across all groups (hosts beyond each group's home).
+    pub fn replicas(&self) -> u64 {
+        self.hosts.iter().map(|h| (h.len() - 1) as u64).sum()
+    }
+
+    /// `true` when shard `a`'s capacity-weighted load strictly exceeds
+    /// shard `b`'s: `load_a / slots_a > load_b / slots_b`, compared
+    /// exactly as `load_a · slots_b > load_b · slots_a` (no float ties).
+    pub fn heavier(&self, a: usize, b: usize) -> bool {
+        let la = self.loads[a] as u128 * self.specs[b].slots.max(1) as u128;
+        let lb = self.loads[b] as u128 * self.specs[a].slots.max(1) as u128;
+        la > lb
+    }
+
+    /// The capacity-weighted least-loaded shard among `candidates`
+    /// (ties to the lowest shard id).  Falls back to shard 0 on an
+    /// empty candidate list.
+    pub fn least_loaded_among(&self, candidates: &[usize]) -> usize {
+        let mut best: Option<usize> = None;
+        for &c in candidates {
+            if c >= self.specs.len() {
+                continue;
+            }
+            best = Some(match best {
+                None => c,
+                Some(b) if self.heavier(b, c) => c,
+                Some(b) => b,
+            });
+        }
+        best.unwrap_or(0)
+    }
+
+    /// The capacity-weighted least-loaded shard overall.
+    pub fn least_loaded(&self) -> usize {
+        let all: Vec<usize> = (0..self.shards()).collect();
+        self.least_loaded_among(&all)
+    }
+
+    /// One shard's normalized load: `load / slots`.
+    pub fn norm_load(&self, shard: usize) -> f64 {
+        self.loads[shard] as f64 / self.specs[shard].slots.max(1) as f64
+    }
+
+    /// The normalized load spread: `max − min` of `load / slots` across
+    /// shards — the imbalance measure the rebalance pass drives down and
+    /// the report's `imbalance_before`/`imbalance_after` carry.
+    pub fn spread(&self) -> f64 {
+        let mut max = f64::MIN;
+        let mut min = f64::MAX;
+        for s in 0..self.shards() {
+            let v = self.norm_load(s);
+            max = max.max(v);
+            min = min.min(v);
+        }
+        if self.shards() == 0 { 0.0 } else { max - min }
+    }
+
+    /// The hottest group (by histogram count) that is observed and not
+    /// yet hosted on every shard — the next replication candidate.
+    /// Ties break to the lowest group id; `None` when every observed
+    /// group is fully replicated or the histogram is empty.
+    pub fn hottest_unreplicated(&self) -> Option<usize> {
+        let n = self.shards();
+        (0..self.hist.len())
+            .filter(|&g| self.hist[g] > 0 && self.hosts[g].len() < n)
+            .max_by(|&a, &b| {
+                self.hist[a].cmp(&self.hist[b]).then(b.cmp(&a))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(slot_counts: &[usize], groups: usize) -> RoutingFeedback {
+        let specs: Vec<ShardSpec> = slot_counts
+            .iter()
+            .map(|&s| ShardSpec { slots: s, ..ShardSpec::real(s) })
+            .collect();
+        RoutingFeedback::new(specs, groups)
+    }
+
+    #[test]
+    fn homes_match_the_static_route_aware_mapping() {
+        let f = fb(&[4, 4, 4], 8);
+        for g in 0..8 {
+            assert_eq!(f.hosts(g), &[g % 3]);
+        }
+    }
+
+    #[test]
+    fn weighted_comparison_respects_capacity() {
+        // shard 0: 4 slots / load 4 (norm 1.0); shard 1: 8 slots /
+        // load 6 (norm 0.75) — the raw-count argmin would pick shard 0.
+        let mut f = fb(&[4, 8], 4);
+        f.set_load(0, 4);
+        f.set_load(1, 6);
+        assert!(f.heavier(0, 1));
+        assert_eq!(f.least_loaded(), 1);
+        assert!((f.spread() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_go_to_the_lowest_shard() {
+        let mut f = fb(&[4, 4, 4], 4);
+        f.set_load(0, 2);
+        f.set_load(1, 2);
+        f.set_load(2, 3);
+        assert_eq!(f.least_loaded(), 0);
+        assert_eq!(f.least_loaded_among(&[2, 1]), 1);
+    }
+
+    #[test]
+    fn replicas_extend_hosts_without_duplicates() {
+        let mut f = fb(&[4, 4], 4);
+        assert!(f.add_replica(2, 1));
+        assert!(!f.add_replica(2, 1));
+        assert_eq!(f.hosts(2), &[0, 1]);
+        assert_eq!(f.replicas(), 1);
+    }
+
+    #[test]
+    fn hottest_unreplicated_follows_the_histogram() {
+        let mut f = fb(&[4, 4], 4);
+        assert_eq!(f.hottest_unreplicated(), None);
+        f.observe(3);
+        f.observe(3);
+        f.observe(1);
+        assert_eq!(f.hottest_unreplicated(), Some(3));
+        f.add_replica(3, 1);
+        // group 3 now lives everywhere; group 1 is next
+        assert_eq!(f.hottest_unreplicated(), Some(1));
+    }
+
+    #[test]
+    fn prime_seeds_rounded_counts() {
+        let mut f = fb(&[4], 3);
+        f.prime(&[1.4, 2.6, 0.0]);
+        assert_eq!(f.hist(0), 1);
+        assert_eq!(f.hist(1), 3);
+        assert_eq!(f.hist(2), 0);
+    }
+}

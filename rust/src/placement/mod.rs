@@ -1,0 +1,114 @@
+//! Placement as a first-class subsystem: one [`Placer`] interface over
+//! every way the stack maps requests onto shards, plus the live control
+//! loop that keeps that mapping aligned with an *evolving* routing
+//! distribution (DESIGN.md §Placement).
+//!
+//! Before this module, placement lived in three disconnected places —
+//! the split-time [`crate::workload::PlacementPolicy`] enum, the
+//! cluster-thread [`crate::coordinator::ClusterPlacement`] enum, and
+//! their vsim mirrors — all frozen at split/submit time.  The paper's
+//! area-efficiency story hinges on how expert groups map onto crossbars
+//! that share peripherals; one level up, the same tension appears as
+//! hot-shard contention when the routing histogram drifts.  This module
+//! closes that loop:
+//!
+//! * [`policy`] — the static policies as trivial [`Placer`] impls
+//!   ([`StaticPlacer`] for split-time assignment, [`LivePlacer`] for the
+//!   cluster's live-signal thread); the legacy enums delegate here.
+//! * [`feedback`] — [`RoutingFeedback`]: per-shard load/capacity signals
+//!   ([`ShardSpec`], heterogeneous fleets included) plus the expert-group
+//!   routing histogram (primed from `moe::trace` calibration samples,
+//!   updated online per arrival) and the group→hosts replica map.
+//! * [`dynamic`] — [`DynamicPlacer`]: route-aware homes, periodic
+//!   rebalance passes that migrate *queued* requests off hot shards, and
+//!   replication of hot expert groups within an area budget.
+//! * [`ledger`] — [`ReplicaLedger`]: every replica priced in mm² through
+//!   [`crate::hw::AreaModel`], so the replication-vs-area frontier ties
+//!   back to the paper's core metric.
+//!
+//! The control loop runs in both execution paths: the virtual mirror
+//! ([`crate::workload::run_virtual_dynamic`]) and the real cluster's
+//! placement thread ([`crate::coordinator::ClusterPlacement::Dynamic`]).
+//! Its telemetry lands in every v2 report as the `placement` block
+//! (see [`PlacementReport`]).
+
+pub mod dynamic;
+pub mod feedback;
+pub mod ledger;
+pub mod policy;
+
+pub use dynamic::{DynamicConfig, DynamicPlacer};
+pub use feedback::{RoutingFeedback, ShardSpec};
+pub use ledger::{checkpoint_spill_mm2, ReplicaLedger};
+pub use policy::{LivePlacer, StaticPlacer};
+
+use crate::workload::arrival::RequestSpec;
+
+/// One arriving request, as placement sees it: the id keys the seeded
+/// routing stream a route-aware placer peeks, the sizes feed cost
+/// estimates, and the arrival instant orders the online decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    /// workload-global request id (routing/prompt streams key off
+    /// `(spec.seed, id)`, so placement never perturbs request behaviour)
+    pub id: u64,
+    /// prompt tokens to prefill
+    pub prompt_len: usize,
+    /// tokens to generate
+    pub gen_len: usize,
+    /// arrival offset from experiment start (ns)
+    pub arrival_ns: u64,
+}
+
+impl Arrival {
+    /// The placement view of a materialized request.
+    pub fn of(r: &RequestSpec) -> Self {
+        Arrival {
+            id: r.id,
+            prompt_len: r.prompt_len,
+            gen_len: r.gen_len,
+            arrival_ns: r.arrival_ns,
+        }
+    }
+}
+
+/// The one placement interface: given an arrival and the current
+/// feedback view, choose the shard in `[0, fb.shards())` that serves it.
+///
+/// Static policies ignore the feedback (their state is internal and
+/// deterministic in the arrival sequence); the dynamic placer reads the
+/// live loads and the replica map, and records the arrival's expert
+/// group into the routing histogram.  Every impl must be deterministic
+/// in `(seed, arrival sequence, feedback sequence)` — byte-identical
+/// reports per seed are the contract the whole workload layer keeps.
+pub trait Placer {
+    /// Stable CLI/report spelling of this placer.
+    fn label(&self) -> &'static str;
+
+    /// Choose a shard for one arrival.  Called once per request, in
+    /// global arrival order.
+    fn place(&mut self, arrival: &Arrival, fb: &mut RoutingFeedback)
+        -> usize;
+}
+
+/// Control-loop telemetry for one run — the `placement` block of the v2
+/// report (`moepim.slo_report.v2`).  Static placements report all-zero
+/// counters; the block is always present so report consumers never probe
+/// for it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PlacementReport {
+    /// queued (not yet admitted) requests migrated off hot shards by
+    /// rebalance passes
+    pub migrations: u64,
+    /// hot expert-group replicas instantiated across shards
+    pub replicas: u64,
+    /// mm² charged to the area ledger for those replicas (never exceeds
+    /// the `--replicate-budget-mm2` budget)
+    pub area_mm2_delta: f64,
+    /// the worst normalized load spread (max − min of load/slots) seen
+    /// at any rebalance tick, measured *before* that tick's migrations
+    pub imbalance_before: f64,
+    /// the spread immediately after the same tick's migrations — the
+    /// per-tick pairing guarantees `imbalance_after <= imbalance_before`
+    pub imbalance_after: f64,
+}

@@ -1,0 +1,223 @@
+//! The static placement policies as trivial [`Placer`] impls — the
+//! delegation targets of the two legacy enums.
+//!
+//! [`StaticPlacer`] carries the per-arrival state machine behind
+//! [`crate::workload::PlacementPolicy::assign`] (split-time assignment
+//! over a materialized request stream); [`LivePlacer`] carries the
+//! candidate rule behind the cluster placement thread's
+//! [`crate::coordinator::ClusterPlacement`] modes (submit-time choice
+//! over live inflight counters).  Both are *exact* ports: the enums'
+//! adapters fold over these placers, so refactoring placement into this
+//! module changed no assignment byte (pinned by the existing
+//! `rust/tests/shard_virtual.rs` determinism suites).
+
+use crate::coordinator::ClusterPlacement;
+use crate::placement::{Arrival, Placer, RoutingFeedback};
+use crate::util::rng::splitmix64;
+use crate::workload::shard::PlacementPolicy;
+use crate::workload::vsim::{route_rng, sample_experts};
+
+/// Per-arrival state machine for one split-time
+/// [`PlacementPolicy`]: round-robin keeps a counter, least-outstanding
+/// keeps the per-shard estimated-in-flight sets, size-hash and
+/// route-aware are stateless.  Feeding arrivals in order reproduces
+/// [`PlacementPolicy::assign`] exactly.
+#[derive(Debug, Clone)]
+pub struct StaticPlacer {
+    policy: PlacementPolicy,
+    seed: u64,
+    shards: usize,
+    next: usize,
+    /// per-shard (est completion time, est service) in flight —
+    /// least-outstanding only
+    inflight: Vec<Vec<(u64, u64)>>,
+}
+
+impl StaticPlacer {
+    /// A placer for `policy` over `shards` backends; `seed` keys the
+    /// route-aware peek (the workload spec's seed).
+    pub fn new(policy: PlacementPolicy, seed: u64, shards: usize) -> Self {
+        let n = shards.max(1);
+        StaticPlacer {
+            policy,
+            seed,
+            shards: n,
+            next: 0,
+            inflight: vec![Vec::new(); n],
+        }
+    }
+
+    /// Place the next arrival (arrivals must come in arrival order,
+    /// which [`crate::workload::WorkloadSpec::materialize`] guarantees).
+    pub fn place_next(&mut self, a: &Arrival) -> usize {
+        let n = self.shards;
+        match self.policy {
+            PlacementPolicy::RoundRobin => {
+                let s = self.next % n;
+                self.next += 1;
+                s
+            }
+            PlacementPolicy::LeastOutstanding {
+                prefill_ns_per_token,
+                decode_ns_per_token,
+            } => {
+                let t = a.arrival_ns;
+                for f in self.inflight.iter_mut() {
+                    f.retain(|&(done, _)| done > t);
+                }
+                let best = (0..n)
+                    .min_by_key(|&s| {
+                        let work: u64 = self.inflight[s]
+                            .iter()
+                            .map(|&(_, w)| w)
+                            .sum();
+                        (self.inflight[s].len(), work, s)
+                    })
+                    .unwrap_or(0);
+                let service = a.prompt_len as u64 * prefill_ns_per_token
+                    + a.gen_len as u64 * decode_ns_per_token;
+                self.inflight[best].push((t + service, service));
+                best
+            }
+            PlacementPolicy::SizeHash => {
+                // stateless SplitMix64 hash of the size pair (the same
+                // mix Pcg32 seeds with)
+                let mut key = ((a.prompt_len as u64) << 32)
+                    | (a.gen_len as u64 & 0xFFFF_FFFF);
+                (splitmix64(&mut key) % n as u64) as usize
+            }
+            PlacementPolicy::RouteAware {
+                n_experts,
+                experts_per_token,
+                skew,
+                group_size,
+            } => {
+                let mut rng = route_rng(self.seed, a.id);
+                let sel = sample_experts(
+                    &mut rng,
+                    n_experts.max(1),
+                    experts_per_token.max(1),
+                    skew,
+                );
+                let dominant = sel.first().copied().unwrap_or(0);
+                (dominant / group_size.max(1)) % n
+            }
+        }
+    }
+}
+
+impl Placer for StaticPlacer {
+    fn label(&self) -> &'static str {
+        self.policy.label()
+    }
+
+    fn place(&mut self, arrival: &Arrival, _fb: &mut RoutingFeedback)
+        -> usize {
+        self.place_next(arrival)
+    }
+}
+
+/// The cluster placement thread's candidate rule as a [`Placer`]: one
+/// pick per submission over the live per-shard inflight counters.  The
+/// real [`crate::coordinator::Cluster`]'s placement loop delegates its
+/// candidate choice here (an exact port of its former inline rules).
+#[derive(Debug, Clone)]
+pub struct LivePlacer {
+    mode: ClusterPlacement,
+    rr: usize,
+}
+
+impl LivePlacer {
+    /// A live placer in `mode` (round-robin keeps its own counter).
+    pub fn new(mode: ClusterPlacement) -> Self {
+        LivePlacer { mode, rr: 0 }
+    }
+
+    /// Candidate shard for the next submission given the live inflight
+    /// counts (one entry per shard).  Dynamic mode picks like
+    /// live-least-outstanding — migration/replication happen in the
+    /// rebalance pass, not in the per-submission candidate rule.
+    pub fn pick(&mut self, inflight: &[usize]) -> usize {
+        let n = inflight.len().max(1);
+        match self.mode {
+            ClusterPlacement::RoundRobin => {
+                let c = self.rr % n;
+                self.rr += 1;
+                c
+            }
+            ClusterPlacement::LiveLeastOutstanding
+            | ClusterPlacement::Dynamic { .. } => (0..inflight.len())
+                .min_by_key(|&i| (inflight[i], i))
+                .unwrap_or(0),
+        }
+    }
+}
+
+impl Placer for LivePlacer {
+    fn label(&self) -> &'static str {
+        self.mode.label()
+    }
+
+    fn place(&mut self, _arrival: &Arrival, fb: &mut RoutingFeedback)
+        -> usize {
+        let loads: Vec<usize> =
+            (0..fb.shards()).map(|s| fb.load(s)).collect();
+        self.pick(&loads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::{
+        ArrivalProcess, SizeModel, WorkloadSpec,
+    };
+    use crate::workload::vsim::VirtualConfig;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            seed: 51,
+            requests: 40,
+            arrival: ArrivalProcess::Poisson { rate_rps: 1_500.0 },
+            sizes: SizeModel::Uniform { prompt: (4, 12), gen: (1, 8) },
+            slo_e2e_ms: 50.0,
+            deadline_slack_us_per_token: 200,
+            interactive_mix: 1.0,
+        }
+    }
+
+    #[test]
+    fn static_placer_reproduces_enum_assign() {
+        let spec = spec();
+        let reqs = spec.materialize();
+        for policy in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::least_outstanding(&VirtualConfig::default()),
+            PlacementPolicy::SizeHash,
+            PlacementPolicy::route_aware(&VirtualConfig::default()),
+        ] {
+            for n in [1usize, 2, 4] {
+                let via_enum = policy.assign(&spec, &reqs, n);
+                let mut p = StaticPlacer::new(policy, spec.seed, n);
+                let via_placer: Vec<usize> = reqs
+                    .iter()
+                    .map(|r| p.place_next(&Arrival::of(r)))
+                    .collect();
+                assert_eq!(via_enum, via_placer, "{}", policy.label());
+            }
+        }
+    }
+
+    #[test]
+    fn live_placer_matches_the_cluster_rules() {
+        let mut rr = LivePlacer::new(ClusterPlacement::RoundRobin);
+        assert_eq!(rr.pick(&[5, 0, 0]), 0);
+        assert_eq!(rr.pick(&[5, 0, 0]), 1);
+        assert_eq!(rr.pick(&[5, 0, 0]), 2);
+        assert_eq!(rr.pick(&[5, 0, 0]), 0);
+        let mut lo =
+            LivePlacer::new(ClusterPlacement::LiveLeastOutstanding);
+        assert_eq!(lo.pick(&[2, 1, 1]), 1, "ties to the lowest shard");
+        assert_eq!(lo.pick(&[0, 1, 1]), 0);
+    }
+}

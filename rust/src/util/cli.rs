@@ -167,6 +167,9 @@ moepim calibrate --trace FILE [--out FILE]
   --trace FILE   the recorded moepim.trace.v1 document (required)
   --out FILE     write the moepim.calibration.v1 document to FILE
                  (default: print to stdout)
+  --max-err-pct X  exit 3 when the re-predicted p50 or p99 end-to-end
+                 error exceeds X percent (0 = report only, the default;
+                 CI gates real-backend calibration at 15)
   --slots/--layers/--experts/--prefill-chunk  base-config overrides
                  (chip shape is not fitted, only cost constants are)";
 
@@ -174,19 +177,31 @@ moepim calibrate --trace FILE [--out FILE]
     pub const SHARDTEST: &str = "\
 moepim shardtest [--shards N] [--placement P] [--virtual | --real]
                  [--serial] [--shed-depth N] [--intake-cap N]
-                 [--queue-cap N] [--bench-cluster]
+                 [--queue-cap N] [--bench-cluster] [--bench-placement]
                  [workload flags] [--artifacts DIR] [--out FILE]
 
   --shards N      number of backends to fan out across (default 2)
   --placement P   round-robin | least-outstanding | size-hash |
-                  route-aware | live
+                  route-aware | live | dynamic
                   (route-aware shards by the expert group of each request's
                    seeded routing stream — exact for virtual backends, a
                    seeded proxy under --real; live places each arrival
                    online by live in-flight counts instead of split-time
                    estimates — a concurrent Cluster front door under
                    --real, lock-step virtual backends otherwise, and it
-                   requires an open-loop arrival process)
+                   requires an open-loop arrival process; dynamic is the
+                   full placement control loop — capacity-weighted routing
+                   plus periodic queued-request migration and area-ledgered
+                   hot-expert-group replication, open-loop only)
+  --rebalance-every N   (dynamic) run a rebalance pass every N arrivals
+                  (default 16; 0 disables migration)
+  --replicate-budget-mm2 X  (dynamic, virtual) area budget the replica
+                  ledger may spend on hot-group replicas (default 0 =
+                  replication off; each replica is priced at the paper
+                  chip's per-group macro area)
+  --shard-slots A,B,..  (dynamic, virtual) per-shard slot counts for a
+                  heterogeneous fleet (one entry per shard; other config
+                  fields are shared)
   --virtual       N virtual clusters (default; byte-identical per seed)
   --real          N real servers running concurrently, each with its own
                   engine and PJRT client on its own router thread; the
@@ -203,6 +218,9 @@ moepim shardtest [--shards N] [--placement P] [--virtual | --real]
                   (0 = unbounded, the default)
   --bench-cluster run the single/serial/concurrent perf comparison and
                   write BENCH_cluster.json (--out overrides the path)
+  --bench-placement  run the static-route-aware / dynamic /
+                  dynamic-replicate comparison over a skewed flash crowd
+                  and write BENCH_placement.json (--out overrides)
   --out FILE      also write the merged v2 report to FILE
 
   note: closed-loop specs split their user population across shards with
@@ -405,6 +423,13 @@ mod tests {
         assert!(usage::SHARDTEST.contains("--queue-cap"));
         assert!(usage::SHARDTEST.contains("--bench-cluster"));
         assert!(usage::SHARDTEST.contains("concurrently"));
+        // the placement control loop: dynamic mode, its knobs, and the
+        // heterogeneous-fleet override plus the perf bench
+        assert!(usage::SHARDTEST.contains("dynamic"));
+        assert!(usage::SHARDTEST.contains("--rebalance-every"));
+        assert!(usage::SHARDTEST.contains("--replicate-budget-mm2"));
+        assert!(usage::SHARDTEST.contains("--shard-slots"));
+        assert!(usage::SHARDTEST.contains("--bench-placement"));
         assert!(usage::LOADTEST.contains("--queue-cap"));
         // no doc may claim real shards run serially by necessity
         assert!(!usage::ROOT.contains("single-owner"));

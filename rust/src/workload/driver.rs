@@ -106,6 +106,11 @@ pub struct LoadOutcome {
     /// total µs preempted requests spent requeued between eviction and
     /// resume
     pub preempted_wait_us: u64,
+    /// high-water mark of simultaneously held preemption checkpoints (a
+    /// lifetime view like `peak_waiting`, not differenced); the report
+    /// prices the beyond-one-slot excess against the area ledger via
+    /// [`crate::placement::checkpoint_spill_mm2`]
+    pub peak_checkpoints: usize,
     /// unix-epoch µs of the backend's first dispatch (`None`: virtual
     /// clock, or never dispatched); with
     /// [`LoadOutcome::last_dispatch_unix_us`] this is the router
@@ -226,6 +231,7 @@ pub fn run_requests_against_server(server: &Server, spec: &WorkloadSpec,
         restores: stats.restores - before.restores,
         preempted_wait_us: stats.preempted_wait_us
             - before.preempted_wait_us,
+        peak_checkpoints: stats.peak_checkpoints,
         first_dispatch_unix_us: stats.first_dispatch_unix_us,
         last_dispatch_unix_us: stats.last_dispatch_unix_us,
         duration_s,

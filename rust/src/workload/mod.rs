@@ -19,12 +19,17 @@
 //!   priced by the real [`crate::sched::BatchPlanner`] contention model —
 //!   the backend whose reports are byte-identical per seed; includes
 //!   [`run_virtual_live`], live-signal least-outstanding placement over
-//!   N incrementally-advanced virtual backends;
+//!   N incrementally-advanced virtual backends, and
+//!   [`run_virtual_dynamic`], the full [`crate::placement`] control loop
+//!   (queued-request migration, heterogeneous fleets, area-ledgered
+//!   hot-expert replication);
 //! * [`shard`] — the multi-server fan-out: a [`ShardedDriver`] splits one
 //!   [`WorkloadSpec`] across N backends under a pluggable
 //!   [`PlacementPolicy`] (round-robin / least-outstanding / size-hash /
-//!   routing-aware) and merges the per-shard outcomes shard-exactly;
-//!   real shards run concurrently ([`ShardedDriver::run_real_concurrent`],
+//!   routing-aware; each a thin wrapper over the
+//!   [`crate::placement::StaticPlacer`]) and merges the per-shard
+//!   outcomes shard-exactly; real shards run concurrently
+//!   ([`ShardedDriver::run_real_concurrent`],
 //!   [`shard::run_against_cluster`]);
 //! * [`hist`] / [`report`] — mergeable log-bucketed latency histograms
 //!   folded into the `moepim.slo_report.v1` JSON document (p50/p95/p99
@@ -86,7 +91,7 @@ pub use shard::{
 };
 pub use perfcmp::{compare as perf_compare, PerfDelta, DEFAULT_THRESHOLD_PCT};
 pub use vsim::{
-    run_virtual, run_virtual_live, run_virtual_live_traced,
-    run_virtual_requests, run_virtual_requests_traced, run_virtual_traced,
-    VirtualConfig,
+    run_virtual, run_virtual_dynamic, run_virtual_dynamic_traced,
+    run_virtual_live, run_virtual_live_traced, run_virtual_requests,
+    run_virtual_requests_traced, run_virtual_traced, VirtualConfig,
 };

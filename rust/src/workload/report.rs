@@ -16,17 +16,22 @@
 //!   counts{completed, errored, tokens},
 //!   server{batch_dispatches, single_dispatches, mean_batch_occupancy,
 //!          prefill_chunks, peak_waiting, shed_requests,
-//!          peak_intake_depth},
+//!          peak_intake_depth, preemptions, restores, preempted_wait_us,
+//!          peak_checkpoints, checkpoint_spill_mm2},
 //!   planner{steps, work, cycles, transfers, contention_ratio},
 //!   metrics{counters, gauges, summaries} }
 //! ```
 //!
-//! * **v2** ([`build_sharded`] / [`build_sharded_labeled`]) — a sharded
-//!   fan-out, merged shard-exact: the same sections over the merged data
-//!   (`workload` gains `shards` + `placement`; `slots` is the cluster
-//!   total; `duration_s` the cluster makespan), plus a per-shard
-//!   `shards[]` breakdown and an `imbalance` section (max/min shard load,
-//!   per-shard p99 spread vs the merged p99).
+//! * **v2** ([`build_sharded`] / [`build_sharded_labeled`] /
+//!   [`build_sharded_placed`]) — a sharded fan-out, merged shard-exact:
+//!   the same sections over the merged data (`workload` gains `shards` +
+//!   `placement`; `slots` is the cluster total; `duration_s` the cluster
+//!   makespan), plus a per-shard `shards[]` breakdown, an `imbalance`
+//!   section (max/min shard load, per-shard p99 spread vs the merged
+//!   p99), and a `placement` section — the dynamic control loop's
+//!   [`PlacementReport`] (migrations, replicas, mm² spent, worst-tick
+//!   imbalance pair; all-zero for static placements) plus the
+//!   area-ledger price of the checkpoint-spill high-water.
 //!
 //! Both schemas keep their ids across the concurrent-cluster revision:
 //! `shed_requests` / `peak_intake_depth` (and the per-shard
@@ -34,6 +39,7 @@
 //! is unchanged (see DESIGN.md §Concurrent cluster).
 
 use crate::obs::MetricsRegistry;
+use crate::placement::{checkpoint_spill_mm2, PlacementReport};
 use crate::sched::PlannerStats;
 use crate::util::json::Json;
 use crate::workload::arrival::WorkloadSpec;
@@ -129,7 +135,8 @@ pub fn metrics_registry(s: &SloSummary, out: &LoadOutcome)
                    out.batch_dispatches, out.single_dispatches,
                    out.mean_batch_occupancy(), out.prefill_chunks,
                    out.shed_requests, out.preemptions, out.restores,
-                   out.preempted_wait_us, &out.planner, out.duration_s)
+                   out.preempted_wait_us, out.peak_checkpoints,
+                   &out.planner, out.duration_s)
 }
 
 /// [`metrics_registry`] over a sharded fan-out's [`MergedLoad`] — the
@@ -140,8 +147,8 @@ pub fn metrics_registry_merged(m: &MergedLoad) -> MetricsRegistry {
                    m.peak_intake_depth, m.batch_dispatches,
                    m.single_dispatches, m.mean_batch_occupancy(),
                    m.prefill_chunks, m.shed_requests, m.preemptions,
-                   m.restores, m.preempted_wait_us, &m.planner,
-                   m.duration_s)
+                   m.restores, m.preempted_wait_us, m.peak_checkpoints,
+                   &m.planner, m.duration_s)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -150,7 +157,8 @@ fn registry_parts(s: &SloSummary, slots: usize, peak_waiting: usize,
                   single_dispatches: u64, occupancy: f64,
                   prefill_chunks: u64, shed_requests: u64,
                   preemptions: u64, restores: u64, preempted_wait_us: u64,
-                  planner: &PlannerStats, duration_s: f64)
+                  peak_checkpoints: usize, planner: &PlannerStats,
+                  duration_s: f64)
     -> MetricsRegistry {
     let mut reg = MetricsRegistry::new();
     reg.counter("moepim_requests_completed_total",
@@ -193,6 +201,12 @@ fn registry_parts(s: &SloSummary, slots: usize, peak_waiting: usize,
     reg.gauge("moepim_peak_intake_depth",
               "High-water mark of the cluster intake queue",
               peak_intake_depth as f64);
+    reg.gauge("moepim_peak_checkpoints",
+              "High-water mark of simultaneously parked checkpoints",
+              peak_checkpoints as f64);
+    reg.gauge("moepim_checkpoint_spill_mm2",
+              "Area charged for beyond-one-slot checkpoint spill copies",
+              checkpoint_spill_mm2(peak_checkpoints));
     reg.gauge("moepim_mean_batch_occupancy",
               "Mean live slots per batched dispatch", occupancy);
     reg.gauge("moepim_slo_attainment",
@@ -284,6 +298,12 @@ pub fn build(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("restores", Json::num(out.restores as f64)),
                 ("preempted_wait_us",
                  Json::num(out.preempted_wait_us as f64)),
+                ("peak_checkpoints",
+                 Json::num(out.peak_checkpoints as f64)),
+                ("checkpoint_spill_mm2",
+                 Json::num(round6(checkpoint_spill_mm2(
+                     out.peak_checkpoints,
+                 )))),
             ]),
         ),
         (
@@ -328,6 +348,20 @@ pub fn build_sharded(spec: &WorkloadSpec, policy: AdmissionPolicy,
 pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                              shards: usize, placement: &str,
                              run: &ShardedRun) -> Json {
+    build_sharded_placed(spec, policy, shards, placement, run,
+                         &PlacementReport::default())
+}
+
+/// [`build_sharded_labeled`] with the dynamic control loop's
+/// [`PlacementReport`] folded in as the report's `placement` block.
+/// Static placements pass the all-zero default (the block is always
+/// present, so report consumers never probe for it); the dynamic paths
+/// ([`crate::workload::run_virtual_dynamic`] and the real cluster's
+/// `--placement dynamic`) pass the run's actual counters.
+pub fn build_sharded_placed(spec: &WorkloadSpec, policy: AdmissionPolicy,
+                            shards: usize, placement: &str,
+                            run: &ShardedRun, pr: &PlacementReport)
+    -> Json {
     // fold every shard's samples exactly once; the merge, the per-shard
     // breakdown and the imbalance section all reuse these summaries
     let parts: Vec<SloSummary> = run
@@ -434,6 +468,12 @@ pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("restores", Json::num(m.restores as f64)),
                 ("preempted_wait_us",
                  Json::num(m.preempted_wait_us as f64)),
+                ("peak_checkpoints",
+                 Json::num(m.peak_checkpoints as f64)),
+                ("checkpoint_spill_mm2",
+                 Json::num(round6(checkpoint_spill_mm2(
+                     m.peak_checkpoints,
+                 )))),
             ]),
         ),
         (
@@ -463,6 +503,27 @@ pub fn build_sharded_labeled(spec: &WorkloadSpec, policy: AdmissionPolicy,
                 ("p99_gap_us", Json::num(round3(imb.p99_gap_us))),
                 ("merged_p99_e2e_us",
                  Json::num(round3(imb.merged_p99_e2e_us))),
+            ]),
+        ),
+        // additive: the dynamic-placement control loop's telemetry
+        // (all-zero counters for static placements — see
+        // crate::placement::PlacementReport); checkpoint_spill_mm2
+        // prices the cluster-wide checkpoint high-water against the
+        // same area ledger the replicas are charged to
+        (
+            "placement",
+            Json::obj(vec![
+                ("area_mm2_delta", Json::num(round6(pr.area_mm2_delta))),
+                ("checkpoint_spill_mm2",
+                 Json::num(round6(checkpoint_spill_mm2(
+                     m.peak_checkpoints,
+                 )))),
+                ("imbalance_after",
+                 Json::num(round6(pr.imbalance_after))),
+                ("imbalance_before",
+                 Json::num(round6(pr.imbalance_before))),
+                ("migrations", Json::num(pr.migrations as f64)),
+                ("replicas", Json::num(pr.replicas as f64)),
             ]),
         ),
     ])
@@ -532,6 +593,55 @@ mod tests {
         assert_eq!(
             parsed.path(&["counts", "completed"]).unwrap().as_usize(),
             Some(16)
+        );
+    }
+
+    #[test]
+    fn v2_report_always_carries_the_placement_block() {
+        use crate::workload::shard::PlacementPolicy;
+        let spec = WorkloadSpec { requests: 12, ..WorkloadSpec::default() };
+        let cfg = VirtualConfig::default();
+        let driver = ShardedDriver {
+            shards: 2,
+            placement: PlacementPolicy::RoundRobin,
+        };
+        let run = driver.run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        let report = build_sharded(&spec, AdmissionPolicy::fifo(),
+                                   &driver, &run);
+        let parsed = json::parse(&report.to_string_pretty()).unwrap();
+        // static placements still carry the block, all-zero
+        for key in [
+            "area_mm2_delta", "checkpoint_spill_mm2", "imbalance_after",
+            "imbalance_before", "migrations", "replicas",
+        ] {
+            assert_eq!(
+                parsed.path(&["placement", key]).and_then(Json::as_f64),
+                Some(0.0),
+                "placement.{key}"
+            );
+        }
+        assert!(parsed
+            .path(&["server", "peak_checkpoints"])
+            .is_some());
+        // a dynamic run's counters flow through build_sharded_placed
+        let pr = PlacementReport {
+            migrations: 3,
+            replicas: 1,
+            area_mm2_delta: 85.25,
+            imbalance_before: 1.5,
+            imbalance_after: 0.5,
+        };
+        let placed = build_sharded_placed(
+            &spec, AdmissionPolicy::fifo(), 2, "dynamic", &run, &pr);
+        let parsed = json::parse(&placed.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.path(&["placement", "migrations"])
+                .and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            parsed.path(&["workload", "placement"]).and_then(Json::as_str),
+            Some("dynamic")
         );
     }
 

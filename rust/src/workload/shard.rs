@@ -5,7 +5,12 @@
 //! peripherals); this module is the same idea one level up — N serving
 //! stacks sharing one request stream.  A [`ShardedDriver`] materializes
 //! the spec **once**, assigns every request to a shard with a pluggable
-//! [`PlacementPolicy`], runs each shard's subset on its own backend
+//! [`PlacementPolicy`] (a thin adapter over the unified
+//! [`crate::placement`] subsystem — the assignment state machines live
+//! in [`crate::placement::StaticPlacer`], and the *dynamic* control loop
+//! with migration/replication lives in
+//! [`crate::workload::vsim::run_virtual_dynamic`]), runs each shard's
+//! subset on its own backend
 //! (a [`crate::coordinator::Server`] or a virtual cluster from
 //! [`crate::workload::vsim`]), and merges the per-shard
 //! [`LoadOutcome`]s:
@@ -48,8 +53,8 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{Cluster, Server, ServerOptions};
 
 use crate::obs::sink::{TraceShard, TraceSink};
+use crate::placement::{Arrival, StaticPlacer};
 use crate::sched::PlannerStats;
-use crate::util::rng::splitmix64;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
 use crate::workload::driver::{
     drive, run_requests_against_server, LoadOutcome, Sample,
@@ -58,8 +63,7 @@ use crate::workload::hist::LatencyHistogram;
 use crate::workload::policy::AdmissionPolicy;
 use crate::workload::report::{summarize, SloSummary};
 use crate::workload::vsim::{
-    route_rng, run_virtual_requests, run_virtual_requests_traced,
-    sample_experts, VirtualConfig,
+    run_virtual_requests, run_virtual_requests_traced, VirtualConfig,
 };
 
 /// Real-path calibration estimate for least-outstanding placement when
@@ -185,21 +189,22 @@ impl PlacementPolicy {
     }
 
     /// Parse a CLI spelling; `None` on unknown input.  `route-aware` and
-    /// `least-outstanding` parse with the default virtual-cluster model —
-    /// callers with a concrete [`VirtualConfig`] (or `--real` backends)
-    /// should rebuild via [`PlacementPolicy::route_aware`] /
-    /// [`PlacementPolicy::least_outstanding`] /
-    /// [`PlacementPolicy::least_outstanding_real`] so placement and
-    /// backend agree.
-    pub fn parse(s: &str) -> Option<Self> {
+    /// `least-outstanding` derive their model constants from `cfg` — the
+    /// [`VirtualConfig`] actually serving the run — so placement and
+    /// backend agree for *any* config, not just the default.  (The bug
+    /// this replaced: parse always built from `VirtualConfig::default()`
+    /// and the CLI path never rebuilt, so a non-default `cycle_ns`
+    /// silently mis-ranked shards.)  `--real` callers should still swap
+    /// in [`PlacementPolicy::least_outstanding_real`] afterwards.
+    pub fn parse(s: &str, cfg: &VirtualConfig) -> Option<Self> {
         match s {
             "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
-            "least-outstanding" | "lo" => Some(
-                PlacementPolicy::least_outstanding(&VirtualConfig::default()),
-            ),
+            "least-outstanding" | "lo" => {
+                Some(PlacementPolicy::least_outstanding(cfg))
+            }
             "size-hash" | "hash" => Some(PlacementPolicy::SizeHash),
             "route-aware" | "route" => {
-                Some(PlacementPolicy::route_aware(&VirtualConfig::default()))
+                Some(PlacementPolicy::route_aware(cfg))
             }
             _ => None,
         }
@@ -208,73 +213,17 @@ impl PlacementPolicy {
     /// Assign every request to a shard in `[0, shards)`.  Deterministic in
     /// `(spec.seed, reqs, shards)`; requests must be in arrival order
     /// (which [`WorkloadSpec::materialize`] guarantees).
+    ///
+    /// This is a thin adapter over the unified placement subsystem: it
+    /// folds the request stream through a
+    /// [`crate::placement::StaticPlacer`], the per-arrival state machine
+    /// these policies' assignment rules now live in.
     pub fn assign(&self, spec: &WorkloadSpec, reqs: &[RequestSpec],
                   shards: usize) -> Vec<usize> {
-        let n = shards.max(1);
-        match self {
-            PlacementPolicy::RoundRobin => {
-                (0..reqs.len()).map(|i| i % n).collect()
-            }
-            PlacementPolicy::LeastOutstanding {
-                prefill_ns_per_token,
-                decode_ns_per_token,
-            } => {
-                // per-shard (est completion time, est service) in flight
-                let mut inflight: Vec<Vec<(u64, u64)>> =
-                    vec![Vec::new(); n];
-                reqs.iter()
-                    .map(|r| {
-                        let t = r.arrival_ns;
-                        for f in inflight.iter_mut() {
-                            f.retain(|&(done, _)| done > t);
-                        }
-                        let best = (0..n)
-                            .min_by_key(|&s| {
-                                let work: u64 = inflight[s]
-                                    .iter()
-                                    .map(|&(_, w)| w)
-                                    .sum();
-                                (inflight[s].len(), work, s)
-                            })
-                            .unwrap_or(0);
-                        let service = r.prompt_len as u64
-                            * prefill_ns_per_token
-                            + r.gen_len as u64 * decode_ns_per_token;
-                        inflight[best].push((t + service, service));
-                        best
-                    })
-                    .collect()
-            }
-            PlacementPolicy::SizeHash => reqs
-                .iter()
-                .map(|r| {
-                    // stateless SplitMix64 hash of the size pair (the same
-                    // mix Pcg32 seeds with)
-                    let mut key = ((r.prompt_len as u64) << 32)
-                        | (r.gen_len as u64 & 0xFFFF_FFFF);
-                    (splitmix64(&mut key) % n as u64) as usize
-                })
-                .collect(),
-            PlacementPolicy::RouteAware {
-                n_experts,
-                experts_per_token,
-                skew,
-                group_size,
-            } => reqs
-                .iter()
-                .map(|r| {
-                    let mut rng = route_rng(spec.seed, r.id);
-                    let sel = sample_experts(
-                        &mut rng,
-                        (*n_experts).max(1),
-                        (*experts_per_token).max(1),
-                        *skew,
-                    );
-                    let dominant = sel.first().copied().unwrap_or(0);
-                    (dominant / (*group_size).max(1)) % n
-                })
-                .collect(),
-        }
+        let mut placer = StaticPlacer::new(*self, spec.seed, shards);
+        reqs.iter()
+            .map(|r| placer.place_next(&Arrival::of(r)))
+            .collect()
     }
 }
 
@@ -580,6 +529,7 @@ pub fn run_against_cluster(cluster: &Cluster, spec: &WorkloadSpec)
                     preemptions: st.preemptions,
                     restores: st.restores,
                     preempted_wait_us: st.preempted_wait_us,
+                    peak_checkpoints: st.peak_checkpoints,
                     first_dispatch_unix_us: st.first_dispatch_unix_us,
                     last_dispatch_unix_us: st.last_dispatch_unix_us,
                     duration_s,
@@ -632,6 +582,10 @@ pub struct MergedLoad {
     /// total µs preempted requests spent requeued (preempt → slot
     /// re-grant), summed across shards
     pub preempted_wait_us: u64,
+    /// max per-shard high-water mark of simultaneously-held preemption
+    /// checkpoints — what the report's checkpoint-spill area charge is
+    /// priced from (the worst single shard sets the store size)
+    pub peak_checkpoints: usize,
     /// planner telemetry with every counter summed across shards
     pub planner: PlannerStats,
     /// `"virtual"` or `"wall"`, from the shard outcomes
@@ -693,6 +647,7 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         preemptions: 0,
         restores: 0,
         preempted_wait_us: 0,
+        peak_checkpoints: 0,
         planner: PlannerStats::default(),
         clock: "virtual",
     };
@@ -718,6 +673,8 @@ pub(crate) fn merge_summaries(shards: &[ShardOutcome],
         merged.preemptions += s.outcome.preemptions;
         merged.restores += s.outcome.restores;
         merged.preempted_wait_us += s.outcome.preempted_wait_us;
+        merged.peak_checkpoints =
+            merged.peak_checkpoints.max(s.outcome.peak_checkpoints);
         merged.planner.steps += s.outcome.planner.steps;
         merged.planner.work += s.outcome.planner.work;
         merged.planner.cycles += s.outcome.planner.cycles;
@@ -901,6 +858,50 @@ mod tests {
             a[2], b[2],
             "the config-derived estimate must be able to change placement"
         );
+    }
+
+    #[test]
+    fn parse_derives_estimates_from_the_run_config() {
+        // the satellite bugfix: `parse` used to build least-outstanding
+        // from `VirtualConfig::default()` no matter what config the run
+        // actually used, and the CLI never rebuilt.  Now the run config
+        // threads through parse, and a non-default `cycle_ns` genuinely
+        // changes placement: a cheaper decode cycle retires the
+        // gen-heavy request on shard 0 before the probe arrival, so the
+        // probe lands back on shard 0 — under the default constants
+        // shard 0 still looks busy and the probe dodges to shard 1.
+        let mk = |id, prompt_len, gen_len, arrival_ns| RequestSpec {
+            id,
+            prompt_len,
+            gen_len,
+            deadline_us: 1_000_000,
+            arrival_ns,
+        };
+        let reqs = vec![
+            mk(0, 1, 100, 0),
+            mk(1, 400, 1, 0),
+            mk(2, 8, 4, 2_600_000),
+        ];
+        let spec = spec();
+        let fast = VirtualConfig { cycle_ns: 100, ..VirtualConfig::default() };
+        let a = PlacementPolicy::parse("least-outstanding", &fast)
+            .unwrap()
+            .assign(&spec, &reqs, 2);
+        let b = PlacementPolicy::parse(
+            "least-outstanding",
+            &VirtualConfig::default(),
+        )
+        .unwrap()
+        .assign(&spec, &reqs, 2);
+        assert_eq!(a[..2], b[..2], "first two arrivals balance identically");
+        assert_ne!(a[2], b[2], "parse must honor the run's cycle_ns");
+        // route-aware parse follows the config's routing knobs too
+        let wide = VirtualConfig { group_size: 4, ..VirtualConfig::default() };
+        assert_eq!(
+            PlacementPolicy::parse("route-aware", &wide),
+            Some(PlacementPolicy::route_aware(&wide)),
+        );
+        assert!(PlacementPolicy::parse("nope", &fast).is_none());
     }
 
     #[test]

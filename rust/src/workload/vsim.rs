@@ -23,12 +23,24 @@
 //! The event clock is integer nanoseconds; every timing in the resulting
 //! [`Sample`]s derives from it, which is what makes the serialized
 //! `SloReport` reproducible byte-for-byte.
+//!
+//! The multi-backend entry points scale the same mirror out: per-shard
+//! backends advanced incrementally on a shared arrival clock, placed
+//! either by the cluster's live-signal rules ([`run_virtual_live`]) or by
+//! the full dynamic control loop — queued-request migration and
+//! area-ledgered expert-group replication — in [`run_virtual_dynamic`]
+//! (see `crate::placement`).
 
 use std::collections::VecDeque;
 
 use crate::config::SchedulePolicy;
+use crate::moe::{group_loads, TraceGenerator};
 use crate::obs::sink::{TraceShard, TraceSink};
 use crate::obs::span::{EventKind, SpanOutcome};
+use crate::placement::{
+    Arrival, DynamicConfig, DynamicPlacer, Placer, PlacementReport,
+    RoutingFeedback, ShardSpec,
+};
 use crate::sched::BatchPlanner;
 use crate::util::rng::Pcg32;
 use crate::workload::arrival::{ArrivalProcess, RequestSpec, WorkloadSpec};
@@ -293,7 +305,8 @@ fn v_preempt_pass(cfg: &VirtualConfig, reqs: &[RequestSpec], mix: f64,
                   now: &mut u64, waiting: &mut VecDeque<VQueued>,
                   live: &mut [Option<VLive>],
                   filling: &mut [Option<VFill>], preemptions: &mut u64,
-                  peak_waiting: &mut usize, sink: &mut TraceSink) {
+                  peak_waiting: &mut usize, peak_checkpoints: &mut usize,
+                  sink: &mut TraceSink) {
     if !cfg.qos || waiting.is_empty() {
         return;
     }
@@ -341,6 +354,11 @@ fn v_preempt_pass(cfg: &VirtualConfig, reqs: &[RequestSpec], mix: f64,
             });
         }
         *peak_waiting = (*peak_waiting).max(waiting.len());
+        // checkpoint-store high-water: snapshots held right now are the
+        // requeued entries still carrying decode state (restores shed
+        // them), priced into the report's checkpoint-spill area charge
+        *peak_checkpoints = (*peak_checkpoints)
+            .max(waiting.iter().filter(|w| w.resume.is_some()).count());
         need -= 1;
     }
 }
@@ -452,6 +470,7 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
     let mut preemptions = 0u64;
     let mut restores = 0u64;
     let mut preempted_wait_us = 0u64;
+    let mut peak_checkpoints = 0usize;
 
     loop {
         // ---- 1. ingest arrivals due by now --------------------------------
@@ -498,7 +517,7 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
         // ---- 2a. QoS preemption pass --------------------------------------
         v_preempt_pass(cfg, reqs, mix, &mut now, &mut waiting, &mut live,
                        &mut filling, &mut preemptions, &mut peak_waiting,
-                       sink);
+                       &mut peak_checkpoints, sink);
 
         // ---- 2b. policy-driven slot admission (QoS: interactive first) ----
         while !waiting.is_empty() {
@@ -810,6 +829,7 @@ pub fn run_virtual_requests_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
         preemptions,
         restores,
         preempted_wait_us,
+        peak_checkpoints,
         first_dispatch_unix_us: None,
         last_dispatch_unix_us: None,
         duration_s: now as f64 / 1e9,
@@ -881,6 +901,7 @@ struct VBackend {
     preemptions: u64,
     restores: u64,
     preempted_wait_us: u64,
+    peak_checkpoints: usize,
     /// per-backend trace sink (off unless the caller enables tracing);
     /// stamped on this backend's own virtual clock
     sink: TraceSink,
@@ -914,6 +935,7 @@ impl VBackend {
             preemptions: 0,
             restores: 0,
             preempted_wait_us: 0,
+            peak_checkpoints: 0,
             sink: TraceSink::off(),
         }
     }
@@ -935,6 +957,47 @@ impl VBackend {
         let idx = self.reqs.len();
         self.inbox.push_back((r.arrival_ns, idx));
         self.reqs.push(r);
+    }
+
+    /// Queued entries a rebalance pass may steal: waiting, not yet
+    /// admitted, and not holding a checkpoint (a preempted request's
+    /// decode state lives in this backend's banks — migrating it would
+    /// mean moving silicon state, which the real cluster can't do
+    /// either).  Inbox entries aren't stealable: the placement loop only
+    /// rebalances at arrival instants, when every due arrival has been
+    /// ingested.
+    fn queued_stealable(&self) -> usize {
+        self.waiting.iter().filter(|w| w.resume.is_none()).count()
+    }
+
+    /// Remove the *youngest* stealable queued entry (search from the
+    /// queue's back — the entry that waited least loses least by
+    /// restarting its queue time elsewhere) and hand back its spec plus
+    /// original arrival instant.  `None` when nothing is stealable.
+    fn steal_queued(&mut self) -> Option<(RequestSpec, u64)> {
+        let pos = self
+            .waiting
+            .iter()
+            .rposition(|w| w.resume.is_none())?;
+        let w = self.waiting.remove(pos).expect("rposition in range");
+        Some((self.reqs[w.idx].clone(), w.arrived_ns))
+    }
+
+    /// Accept a request migrated from another backend, preserving its
+    /// original arrival instant: it joins the waiting queue in arrival
+    /// order (the invariant every admission policy assumes), exactly as
+    /// if it had arrived here — same id-keyed routing/prompt streams, so
+    /// migration changes *where* it queues, never *what* it computes.
+    fn accept_migrated(&mut self, r: RequestSpec, arrived_ns: u64) {
+        let idx = self.reqs.len();
+        self.reqs.push(r);
+        v_requeue(&mut self.waiting, VQueued {
+            idx,
+            arrived_ns,
+            passed_over: 0,
+            resume: None,
+        });
+        self.peak_waiting = self.peak_waiting.max(self.waiting.len());
     }
 
     /// Advance the event clock to `horizon` (parking there even when
@@ -1006,7 +1069,8 @@ impl VBackend {
             v_preempt_pass(&cfg, &self.reqs, self.mix, &mut self.now,
                            &mut self.waiting, &mut self.live,
                            &mut self.filling, &mut self.preemptions,
-                           &mut self.peak_waiting, &mut self.sink);
+                           &mut self.peak_waiting,
+                           &mut self.peak_checkpoints, &mut self.sink);
 
             // ---- 2b. policy-driven slot admission -------------------
             while !self.waiting.is_empty() {
@@ -1304,6 +1368,7 @@ impl VBackend {
             preemptions: self.preemptions,
             restores: self.restores,
             preempted_wait_us: self.preempted_wait_us,
+            peak_checkpoints: self.peak_checkpoints,
             first_dispatch_unix_us: None,
             last_dispatch_unix_us: None,
             duration_s: self.now as f64 / 1e9,
@@ -1401,6 +1466,166 @@ pub fn run_virtual_live_traced(cfg: &VirtualConfig, spec: &WorkloadSpec,
         })
         .collect();
     (crate::workload::shard::ShardedRun { shards }, traces)
+}
+
+/// The dynamic-placement control loop on the virtual clock
+/// (DESIGN.md §Placement): N incrementally-advanced [`VBackend`]s — one
+/// per entry of `cfgs`, so *heterogeneous* fleets (mixed slot counts and
+/// cost constants) are first-class — driven by a
+/// [`crate::placement::DynamicPlacer`] over a live
+/// [`crate::placement::RoutingFeedback`] view.
+///
+/// Each arrival: every backend's clock advances to the arrival instant,
+/// the feedback view refreshes from the backends' simulated loads, and
+/// the placer routes the request to the capacity-weighted least-loaded
+/// host of its expert group (home + replicas; with no replicas this is
+/// exactly the static route-aware mapping).  Every
+/// [`crate::placement::DynamicConfig::rebalance_every`] arrivals the
+/// control loop fires: queued (not yet admitted, non-resuming) requests
+/// migrate off capacity-weighted hot shards onto cold ones
+/// ([`VBackend::steal_queued`] → [`VBackend::accept_migrated`], original
+/// arrival instants preserved), then hot expert groups replicate within
+/// the `--replicate-budget-mm2` area ledger.  The returned
+/// [`crate::placement::PlacementReport`] carries the run's control-loop
+/// telemetry (migrations, replicas, mm² spent, the worst tick's
+/// pre/post-migration imbalance pair) for the report's `placement` block.
+///
+/// Deterministic: same `(cfgs, spec, policy, dcfg)` → identical run and
+/// report, so v2 reports stay byte-identical per seed.  Open-loop
+/// arrival processes only (panics on [`ArrivalProcess::Closed`], like
+/// [`run_virtual_live`]).
+pub fn run_virtual_dynamic(cfgs: &[VirtualConfig], spec: &WorkloadSpec,
+                           policy: AdmissionPolicy, dcfg: &DynamicConfig)
+    -> (crate::workload::shard::ShardedRun, PlacementReport) {
+    let (run, report, _) =
+        run_virtual_dynamic_traced(cfgs, spec, policy, dcfg, false);
+    (run, report)
+}
+
+/// [`run_virtual_dynamic`] with tracing: backends record their lifecycle
+/// events per shard, and the front-door sink records `intake` / `placed`
+/// plus the control loop's `migrate` / `replicate` events — all on the
+/// shared virtual arrival clock (same guarantees as
+/// [`run_virtual_live_traced`]: tracing never perturbs the outcome).
+pub fn run_virtual_dynamic_traced(cfgs: &[VirtualConfig],
+                                  spec: &WorkloadSpec,
+                                  policy: AdmissionPolicy,
+                                  dcfg: &DynamicConfig, trace: bool)
+    -> (crate::workload::shard::ShardedRun, PlacementReport,
+        Vec<TraceShard>) {
+    assert!(
+        !matches!(spec.arrival, ArrivalProcess::Closed { .. }),
+        "dynamic placement requires an open-loop arrival process"
+    );
+    let default_cfg;
+    let cfgs: &[VirtualConfig] = if cfgs.is_empty() {
+        default_cfg = [VirtualConfig::default()];
+        &default_cfg
+    } else {
+        cfgs
+    };
+    let n = cfgs.len();
+    let mut front = TraceSink::on(trace);
+    let mut backends: Vec<VBackend> = cfgs
+        .iter()
+        .map(|c| {
+            let mut b =
+                VBackend::new(c, spec.seed, spec.interactive_mix, policy);
+            b.sink = TraceSink::on(trace);
+            b
+        })
+        .collect();
+    let specs: Vec<ShardSpec> =
+        cfgs.iter().map(ShardSpec::from_virtual).collect();
+    let mut fb = RoutingFeedback::new(specs, dcfg.n_groups());
+    // Prime the routing histogram from a small moe::trace calibration
+    // sample (the offline prediction §III-B grounds grouping in), so the
+    // first replication decisions are informed before any arrival-driven
+    // counts accumulate.  Seeded from the spec, so priming is
+    // deterministic per seed.
+    let mut cal = TraceGenerator::new(dcfg.n_experts.max(1), spec.seed);
+    let expected = group_loads(
+        &cal.calibration_loads(
+            2,
+            64,
+            dcfg.experts_per_token.max(1),
+            dcfg.skew,
+        ),
+        dcfg.group_size.max(1),
+    );
+    fb.prime(&expected);
+    let mut placer = DynamicPlacer::new(*dcfg, spec.seed);
+    for r in spec.materialize() {
+        let t = r.arrival_ns;
+        for b in backends.iter_mut() {
+            b.advance_to(t);
+        }
+        for (i, b) in backends.iter().enumerate() {
+            fb.set_load(i, b.load());
+        }
+        front.record(t, EventKind::Intake { id: r.id });
+        let best = placer.place(&Arrival::of(&r), &mut fb).min(n - 1);
+        front.record(t, EventKind::Placed { id: r.id, shard: best });
+        backends[best].arrive(r);
+        fb.set_load(best, backends[best].load());
+        if placer.due() {
+            // ---- rebalance tick: migrate queued work, then replicate.
+            // Loads are already a same-instant snapshot of every backend
+            // (refreshed above); the plan executes atomically at `t`
+            // before any backend's clock moves again, so the post-move
+            // spread can never exceed the pre-move spread.
+            let before = fb.spread();
+            let stealable: Vec<usize> =
+                backends.iter().map(|b| b.queued_stealable()).collect();
+            for (from, to) in placer.plan_migrations(&fb, &stealable) {
+                let Some((req, arrived_ns)) = backends[from].steal_queued()
+                else {
+                    continue;
+                };
+                let id = req.id;
+                backends[to].accept_migrated(req, arrived_ns);
+                placer.report.migrations += 1;
+                front.record(t, EventKind::Migrate { id, from, to });
+                fb.set_load(from, backends[from].load());
+                fb.set_load(to, backends[to].load());
+            }
+            placer.note_imbalance(before, fb.spread());
+            for (group, shard) in placer.maybe_replicate(&mut fb) {
+                front.record(t, EventKind::Replicate { group, shard });
+            }
+        }
+    }
+    for b in backends.iter_mut() {
+        b.drain();
+    }
+    let mut traces = Vec::new();
+    if trace {
+        traces.push(front.drain(None, "placement"));
+    }
+    let shards = backends
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut b)| {
+            if trace {
+                traces.push(b.sink.drain(Some(i), "vsim"));
+            }
+            // served count, not assignment count: a migrated request's
+            // terminal sample lands on the backend that served it
+            let requests = b.samples.len();
+            let mut outcome = b.into_outcome();
+            outcome.shard = Some(i);
+            crate::workload::shard::ShardOutcome {
+                shard: i,
+                requests,
+                outcome,
+            }
+        })
+        .collect();
+    (
+        crate::workload::shard::ShardedRun { shards },
+        placer.report,
+        traces,
+    )
 }
 
 #[cfg(test)]
@@ -1701,5 +1926,140 @@ mod tests {
         }
         // and the two loops agree sample for sample
         assert_eq!(batch.samples, live.shards[0].outcome.samples);
+    }
+
+    /// Skewed flash-crowd shape used by the dynamic-placement tests:
+    /// bursty arrivals + trace-seeded sizes concentrate queued work on the
+    /// hot expert group's home shard, so rebalance ticks have something
+    /// to migrate.
+    fn skewed_burst_spec(seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            seed,
+            requests: 48,
+            arrival: ArrivalProcess::Bursty {
+                rate_rps: 4_000.0,
+                mean_on_ms: 5.0,
+                mean_off_ms: 20.0,
+            },
+            sizes: SizeModel::TraceSeeded {
+                n_experts: 16,
+                skew: 2.0,
+                prompt: (4, 48),
+                gen: (1, 24),
+            },
+            slo_e2e_ms: 150.0,
+            deadline_slack_us_per_token: 500,
+            interactive_mix: 1.0,
+        }
+    }
+
+    fn hetero_fleet() -> Vec<VirtualConfig> {
+        vec![
+            VirtualConfig { slots: 2, ..VirtualConfig::default() },
+            VirtualConfig {
+                slots: 4,
+                cycle_ns: 200,
+                ..VirtualConfig::default()
+            },
+            VirtualConfig { slots: 2, ..VirtualConfig::default() },
+        ]
+    }
+
+    #[test]
+    fn dynamic_runs_are_identical_per_seed() {
+        let cfgs = hetero_fleet();
+        let dcfg = DynamicConfig::from_virtual(&cfgs[0], 4, 100.0);
+        let spec = skewed_burst_spec(11);
+        let a = run_virtual_dynamic_traced(
+            &cfgs, &spec, AdmissionPolicy::fifo(), &dcfg, true);
+        let b = run_virtual_dynamic_traced(
+            &cfgs, &spec, AdmissionPolicy::fifo(), &dcfg, true);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2.len(), b.2.len());
+        for (sa, sb) in a.2.iter().zip(&b.2) {
+            assert_eq!(sa.events, sb.events);
+        }
+    }
+
+    /// With one shard there is nothing to balance: the dynamic loop must
+    /// collapse to the single-backend event loop sample for sample, the
+    /// same 1-shard pin [`run_virtual_live`] keeps.
+    #[test]
+    fn one_shard_dynamic_matches_the_single_backend_loop() {
+        let cfg = VirtualConfig::default();
+        let dcfg = DynamicConfig::from_virtual(&cfg, 4, 100.0);
+        let spec = skewed_burst_spec(7);
+        let (run, report) = run_virtual_dynamic(
+            &[cfg.clone()], &spec, AdmissionPolicy::fifo(), &dcfg);
+        let solo = run_virtual(&cfg, &spec, AdmissionPolicy::fifo());
+        assert_eq!(run.shards.len(), 1);
+        assert_eq!(run.shards[0].outcome.samples, solo.samples);
+        assert_eq!(report.migrations, 0);
+    }
+
+    /// Conservation across rebalances: every materialized request reaches
+    /// exactly one terminal, in the samples *and* in the exported trace
+    /// (migrated ids terminate on the shard that served them), and the
+    /// per-tick imbalance pair keeps its ordering.
+    #[test]
+    fn dynamic_conserves_requests_across_migrations() {
+        let cfgs = hetero_fleet();
+        let dcfg = DynamicConfig::from_virtual(&cfgs[0], 4, 0.0);
+        let mut migrated_somewhere = false;
+        for seed in [7, 9, 11, 13] {
+            let spec = skewed_burst_spec(seed);
+            let (run, report, traces) = run_virtual_dynamic_traced(
+                &cfgs, &spec, AdmissionPolicy::fifo(), &dcfg, true);
+            migrated_somewhere |= report.migrations > 0;
+            assert!(
+                report.imbalance_after <= report.imbalance_before,
+                "seed {seed}: {report:?}"
+            );
+            let mut ids: Vec<u64> = run
+                .shards
+                .iter()
+                .flat_map(|s| s.outcome.samples.iter().map(|smp| smp.id))
+                .collect();
+            assert_eq!(ids.len(), spec.requests, "seed {seed}");
+            ids.sort_unstable();
+            assert_eq!(
+                ids,
+                (0..spec.requests as u64).collect::<Vec<u64>>(),
+                "seed {seed}"
+            );
+            for s in &run.shards {
+                assert_eq!(s.requests, s.outcome.samples.len());
+            }
+            let doc = crate::obs::export::chrome_trace(&traces, "virtual");
+            assert_eq!(
+                crate::obs::export::check_conservation(&doc),
+                Ok(spec.requests),
+                "seed {seed}"
+            );
+        }
+        assert!(migrated_somewhere, "no migration fired on any probe seed");
+    }
+
+    /// Replication stays inside the mm² ledger and is deterministic: the
+    /// budgeted run replicates at least one hot group, never overspends,
+    /// and the zero-budget run replicates nothing.
+    #[test]
+    fn dynamic_replication_respects_the_area_budget() {
+        let cfgs = hetero_fleet();
+        let spec = skewed_burst_spec(11);
+        // one paper-chip g=2 group replica costs ~85.3 mm²; 100 buys
+        // exactly one, so the budgeted leg must stop after it
+        let budget = 100.0;
+        let with = DynamicConfig::from_virtual(&cfgs[0], 4, budget);
+        let (_, rep) = run_virtual_dynamic(
+            &cfgs, &spec, AdmissionPolicy::fifo(), &with);
+        assert!(rep.replicas > 0, "budget unused: {rep:?}");
+        assert!(rep.area_mm2_delta <= budget + 1e-9, "{rep:?}");
+        let without = DynamicConfig::from_virtual(&cfgs[0], 4, 0.0);
+        let (_, none) = run_virtual_dynamic(
+            &cfgs, &spec, AdmissionPolicy::fifo(), &without);
+        assert_eq!(none.replicas, 0);
+        assert_eq!(none.area_mm2_delta, 0.0);
     }
 }

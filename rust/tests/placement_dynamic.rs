@@ -1,0 +1,283 @@
+//! Integration pins for the placement control loop (DESIGN.md
+//! §Placement): on a seeded skewed bursty trace the dynamic loop must
+//! demonstrably beat the static route-aware split it generalizes —
+//! lower merged p99 TTFT and a flatter per-shard load split — and
+//! replication within a fixed area budget must improve on
+//! migration-only while `area_mm2_delta` stays within the budget by
+//! construction.  Everything here is virtual-clock: every run (and its
+//! v2 report, placement block included) is byte-identical per seed.
+
+use moepim::placement::{
+    checkpoint_spill_mm2, DynamicConfig, PlacementReport,
+};
+use moepim::workload::{
+    report, run_virtual, run_virtual_dynamic, AdmissionPolicy,
+    ArrivalProcess, PlacementPolicy, ShardedDriver, ShardedRun,
+    SizeModel, VirtualConfig, WorkloadSpec,
+};
+
+/// The contested workload: tight bursts with a Zipf-skewed routing
+/// stream, so one expert group's home shard becomes a hot spot the
+/// static split can do nothing about.
+fn skewed_spec(seed: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        seed,
+        requests: 48,
+        arrival: ArrivalProcess::Bursty {
+            rate_rps: 4_000.0,
+            mean_on_ms: 5.0,
+            mean_off_ms: 20.0,
+        },
+        sizes: SizeModel::TraceSeeded {
+            n_experts: 16,
+            skew: 2.0,
+            prompt: (4, 48),
+            gen: (1, 24),
+        },
+        slo_e2e_ms: 150.0,
+        deadline_slack_us_per_token: 500,
+        interactive_mix: 1.0,
+    }
+}
+
+fn skewed_cfg() -> VirtualConfig {
+    VirtualConfig { route_skew: 2.0, ..VirtualConfig::default() }
+}
+
+/// Seeds the comparative pins scan: per-seed structural invariants must
+/// hold on every one, and the strict performance wins must show up on
+/// at least one (the loop is a statistical optimization, not a per-seed
+/// guarantee).
+const SEEDS: [u64; 5] = [7, 11, 13, 29, 2026];
+
+fn p99(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs[((xs.len() - 1) as f64 * 0.99).round() as usize]
+    }
+}
+
+fn merged_ttft_p99(run: &ShardedRun) -> f64 {
+    p99(run
+        .shards
+        .iter()
+        .flat_map(|s| s.outcome.samples.iter())
+        .filter_map(|s| s.ttft_us)
+        .collect())
+}
+
+fn merged_e2e_p99(run: &ShardedRun) -> f64 {
+    p99(run
+        .shards
+        .iter()
+        .flat_map(|s| s.outcome.samples.iter())
+        .map(|s| s.e2e_us)
+        .collect())
+}
+
+/// Per-shard served-request spread: max minus min — the flatness of the
+/// split in request counts.
+fn request_spread(run: &ShardedRun) -> usize {
+    let counts: Vec<usize> =
+        run.shards.iter().map(|s| s.requests).collect();
+    counts.iter().max().unwrap() - counts.iter().min().unwrap()
+}
+
+fn static_route_aware(seed: u64) -> ShardedRun {
+    let cfg = skewed_cfg();
+    let driver =
+        ShardedDriver::new(3, PlacementPolicy::route_aware(&cfg));
+    driver.run_virtual(&cfg, &skewed_spec(seed), AdmissionPolicy::fifo())
+}
+
+fn dynamic(seed: u64, budget_mm2: f64) -> (ShardedRun, PlacementReport) {
+    let cfg = skewed_cfg();
+    let cfgs = vec![cfg.clone(); 3];
+    let dcfg = DynamicConfig::from_virtual(&cfg, 4, budget_mm2);
+    run_virtual_dynamic(&cfgs, &skewed_spec(seed),
+                        AdmissionPolicy::fifo(), &dcfg)
+}
+
+/// The headline acceptance pin: against the same seeds, the dynamic
+/// loop (migration only, no replication budget) must never worsen the
+/// imbalance it measured, and on at least one seed it must strictly
+/// beat static route-aware on merged p99 TTFT *and* split flatness.
+#[test]
+fn dynamic_beats_static_route_aware_on_a_skewed_burst() {
+    let mut strict_win = false;
+    for seed in SEEDS {
+        let stat = static_route_aware(seed);
+        let (dynr, pr) = dynamic(seed, 0.0);
+        // structural, every seed: a rebalance pass never increases the
+        // spread it measured, and all 48 requests still terminate
+        assert!(
+            pr.imbalance_after <= pr.imbalance_before + 1e-9,
+            "seed {seed}: rebalance worsened imbalance \
+             ({} -> {})",
+            pr.imbalance_before, pr.imbalance_after
+        );
+        let served: usize =
+            dynr.shards.iter().map(|s| s.outcome.samples.len()).sum();
+        assert_eq!(served, 48, "seed {seed}: lost requests");
+        assert_eq!(pr.replicas, 0, "seed {seed}: zero budget replicated");
+        strict_win |= merged_ttft_p99(&dynr) < merged_ttft_p99(&stat)
+            && request_spread(&dynr) < request_spread(&stat);
+    }
+    assert!(
+        strict_win,
+        "dynamic placement never strictly beat static route-aware \
+         (p99 TTFT and request spread) on any scanned seed"
+    );
+}
+
+/// Replication on top of migration: the budget buys hot-group replicas
+/// (priced on the paper chip), `area_mm2_delta` stays within budget on
+/// every seed, and on at least one seed the replicated run strictly
+/// improves a merged tail latency over migration-only.
+#[test]
+fn replication_improves_on_migration_within_budget() {
+    // ~85.3 mm² per group replica at g=2 on the paper chip: 100 mm²
+    // buys exactly one
+    const BUDGET: f64 = 100.0;
+    let mut replicated_somewhere = false;
+    let mut strict_win = false;
+    for seed in SEEDS {
+        let (base, _) = dynamic(seed, 0.0);
+        let (repl, pr) = dynamic(seed, BUDGET);
+        assert!(
+            pr.area_mm2_delta <= BUDGET + 1e-9,
+            "seed {seed}: ledger overspent ({} mm2)", pr.area_mm2_delta
+        );
+        assert!(pr.replicas <= 1, "seed {seed}: budget buys one replica");
+        let served: usize =
+            repl.shards.iter().map(|s| s.outcome.samples.len()).sum();
+        assert_eq!(served, 48, "seed {seed}: lost requests");
+        replicated_somewhere |= pr.replicas > 0;
+        strict_win |= pr.replicas > 0
+            && (merged_ttft_p99(&repl) < merged_ttft_p99(&base)
+                || merged_e2e_p99(&repl) < merged_e2e_p99(&base));
+    }
+    assert!(replicated_somewhere, "the budget never bought a replica");
+    assert!(
+        strict_win,
+        "replication never strictly improved a merged tail latency \
+         over migration-only on any scanned seed"
+    );
+}
+
+/// Replica routing is part of the deterministic state: same seed, same
+/// budget → the same replicas, the same migrations, the same samples.
+#[test]
+fn replication_is_deterministic_per_seed() {
+    for seed in SEEDS {
+        let (run_a, pr_a) = dynamic(seed, 100.0);
+        let (run_b, pr_b) = dynamic(seed, 100.0);
+        assert_eq!(pr_a, pr_b, "seed {seed}: placement report diverged");
+        assert_eq!(run_a, run_b, "seed {seed}: run diverged");
+    }
+}
+
+/// The v2 report — placement block included — is byte-identical across
+/// reruns per seed, and always carries the control loop's counters.
+#[test]
+fn dynamic_v2_report_is_byte_identical_per_seed() {
+    let policy = AdmissionPolicy::fifo();
+    for seed in [11, 2026] {
+        let spec = skewed_spec(seed);
+        let (run_a, pr_a) = dynamic(seed, 100.0);
+        let (run_b, pr_b) = dynamic(seed, 100.0);
+        let a = report::build_sharded_placed(&spec, policy, 3, "dynamic",
+                                             &run_a, &pr_a)
+            .to_string_pretty();
+        let b = report::build_sharded_placed(&spec, policy, 3, "dynamic",
+                                             &run_b, &pr_b)
+            .to_string_pretty();
+        assert_eq!(a, b, "seed {seed}: report not byte-identical");
+        for key in ["\"placement\"", "\"migrations\"", "\"replicas\"",
+                    "\"area_mm2_delta\"", "\"imbalance_before\"",
+                    "\"imbalance_after\"", "\"checkpoint_spill_mm2\""] {
+            assert!(a.contains(key), "report misses {key}");
+        }
+    }
+}
+
+/// The checkpoint store's area side-channel: a QoS run that provably
+/// preempts must surface a non-zero checkpoint high-water mark, the
+/// control run without QoS must not, and the report prices the
+/// beyond-one-slot excess linearly on the paper chip.
+#[test]
+fn checkpoint_spill_prices_the_preemption_store() {
+    // the batch-saturation shape from the QoS pin suite: 4 batch
+    // requests fill every slot at t=0, interactive arrivals then force
+    // preemptions under the deadline policy
+    let spec = WorkloadSpec {
+        seed: 0x9105,
+        requests: 20,
+        arrival: ArrivalProcess::Replay {
+            times_us: (0..20u64)
+                .map(|i| if i < 4 { 0 } else { (i - 3) * 400 })
+                .collect(),
+        },
+        sizes: SizeModel::Fixed { prompt_len: 8, gen_len: 64 },
+        slo_e2e_ms: 250.0,
+        deadline_slack_us_per_token: 500,
+        interactive_mix: 0.2,
+    };
+    let policy = AdmissionPolicy::deadline();
+    let qos = run_virtual(
+        &VirtualConfig { qos: true, ..VirtualConfig::default() },
+        &spec, policy,
+    );
+    let control = run_virtual(&VirtualConfig::default(), &spec, policy);
+    assert!(qos.preemptions >= 1, "saturated slots never preempted");
+    assert!(
+        qos.peak_checkpoints >= 1,
+        "preemptions fired but no checkpoint was ever held"
+    );
+    assert_eq!(control.peak_checkpoints, 0, "no-QoS run held checkpoints");
+    // linear paper-chip pricing, first snapshot free
+    assert_eq!(checkpoint_spill_mm2(0), 0.0);
+    assert_eq!(checkpoint_spill_mm2(1), 0.0);
+    let per = checkpoint_spill_mm2(2);
+    assert!(per > 0.0);
+    let spill = checkpoint_spill_mm2(qos.peak_checkpoints);
+    assert!(
+        (spill
+            - qos.peak_checkpoints.saturating_sub(1) as f64 * per)
+            .abs()
+            < 1e-9
+    );
+    // and the v1 report carries both the counter and its pricing
+    let doc = report::build(&spec, policy, &qos).to_string_pretty();
+    assert!(doc.contains("\"peak_checkpoints\""));
+    assert!(doc.contains("\"checkpoint_spill_mm2\""));
+}
+
+/// Heterogeneous fleets: with capacity-weighted comparison the big
+/// backend must absorb the largest share of a skewed burst — summed
+/// over the seed scan so one unlucky burst shape can't flip the pin.
+#[test]
+fn capacity_weighting_loads_the_big_shard_most() {
+    let mut served = [0usize; 3];
+    for seed in SEEDS {
+        let base = skewed_cfg();
+        let cfgs = vec![
+            VirtualConfig { slots: 2, ..base.clone() },
+            VirtualConfig { slots: 6, ..base.clone() },
+            VirtualConfig { slots: 2, ..base.clone() },
+        ];
+        let dcfg = DynamicConfig::from_virtual(&base, 4, 0.0);
+        let (run, _) = run_virtual_dynamic(
+            &cfgs, &skewed_spec(seed), AdmissionPolicy::fifo(), &dcfg);
+        for (i, s) in run.shards.iter().enumerate() {
+            served[i] += s.outcome.samples.len();
+        }
+    }
+    assert_eq!(served.iter().sum::<usize>(), 48 * SEEDS.len());
+    assert!(
+        served[1] > served[0] && served[1] > served[2],
+        "the 6-slot shard did not absorb the largest share: {served:?}"
+    );
+}
